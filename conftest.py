@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `python/` importable so
+`pytest python/tests/` works from the repository root as well as from
+within `python/` (the Makefile uses the latter)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "python"))

@@ -1,0 +1,79 @@
+//! AutoML shape-search demo (paper Figure 4).
+//!
+//! Sweeps the combined-bin shape (b quantiles × n binning features) on a
+//! Case-2-style clone and prints the validation ROC AUC grid next to GBDT
+//! references — the data behind Figure 4 and the paper's observation that
+//! b = 2–3 and n ≈ 7 work best.
+//!
+//! Run: `cargo run --release --example automl_tuning`
+
+use lrwbins::automl::{shape_search, ShapeSpace};
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::gbdt::{self, GbdtParams};
+use lrwbins::metrics::roc_auc;
+use lrwbins::tabular::split;
+use lrwbins::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let rows = if quick { 10_000 } else { 40_000 };
+    let spec = datagen::preset("case2").unwrap().with_rows(rows);
+    let data = datagen::generate(&spec, 11);
+    let mut rng = Rng::new(4);
+    let s = split::train_test_split(&data, 0.3, &mut rng);
+
+    println!("ranking {} features...", data.n_features());
+    let ranking = rank_features(&s.train, RankMethod::GbdtGain, 1);
+
+    let space = ShapeSpace {
+        bs: vec![2, 3, 4, 5],
+        ns: vec![2, 3, 4, 5, 6, 7, 8],
+        n_infer_features: 20,
+        max_total_bins: 1 << 14,
+        screen_rows: rows,
+    };
+    println!("shape search over b × n (validation ROC AUC):\n");
+    let search = shape_search(&s.train, &s.test, &ranking, &space);
+
+    // Grid printout.
+    print!("        ");
+    for &n in &space.ns {
+        print!("  n={n:<2} ");
+    }
+    println!();
+    for &b in &space.bs {
+        print!("  b={b}  ");
+        for &n in &space.ns {
+            match search
+                .cells
+                .iter()
+                .find(|c| c.b == b && c.n_bin_features == n)
+            {
+                Some(c) => print!(" {:.3} ", c.val_auc),
+                None => print!("   --  "),
+            }
+        }
+        println!();
+    }
+    println!(
+        "\nbest: b={} n={} (paper: 2-3 quantile bins, ~7 binning features)",
+        search.best.b, search.best.n_bin_features
+    );
+
+    // GBDT reference curves: XGB trained on top-n features, plus all.
+    println!("\nGBDT reference (AUC vs feature count):");
+    for n in [5usize, 10, 20, 40] {
+        let feats = ranking.top(n);
+        let sub_train = s.train.take_features(&feats);
+        let sub_test = s.test.take_features(&feats);
+        let m = gbdt::train(&sub_train, &GbdtParams::quick());
+        println!("  GBDT(top {n:>3}) AUC = {:.3}", roc_auc(&m.predict_proba(&sub_test), &sub_test.labels));
+    }
+    let m = gbdt::train(&s.train, &GbdtParams::quick());
+    println!(
+        "  GBDT(all {:>3}) AUC = {:.3}",
+        data.n_features(),
+        roc_auc(&m.predict_proba(&s.test), &s.test.labels)
+    );
+}

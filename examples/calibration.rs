@@ -1,0 +1,48 @@
+//! Dataset-clone calibration check: trains quick LR / LRwBins / GBDT on every
+//! preset and prints measured AUC next to the paper's Table-1 target, so
+//! drift in the synthetic teachers is visible at a glance.
+//!
+//! Run: `cargo run --release --example calibration [preset]`
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::metrics::roc_auc;
+use lrwbins::tabular::split;
+use lrwbins::util::rng::Rng;
+
+fn main() {
+    let targets = [
+        ("case1", 0.830, 0.845, 0.866), ("case2", 0.712, 0.734, 0.739),
+        ("case3", 0.580, 0.615, 0.654), ("case4", 0.565, 0.577, 0.602),
+        ("aci", 0.902, 0.903, 0.922), ("blastchar", 0.839, 0.839, 0.839),
+        ("shrutime", 0.763, 0.845, 0.861), ("patient", 0.860, 0.872, 0.899),
+        ("banknote", 0.879, 0.938, 0.989), ("jasmine", 0.843, 0.855, 0.867),
+        ("higgs", 0.681, 0.766, 0.792),
+    ];
+    let only: Option<String> = std::env::args().nth(1);
+    for (name, t_lr, t_lrw, t_gb) in targets {
+        if let Some(o) = &only { if o != name { continue; } }
+        let mut spec = datagen::preset(name).unwrap();
+        if spec.rows > 12_000 { spec = spec.with_rows(12_000); }
+        let data = datagen::generate(&spec, 1);
+        let mut rng = Rng::new(9);
+        let s = split::stratified_split(&data, 0.3, &mut rng);
+        let ranking = rank_features(&s.train, RankMethod::GbdtGain, 1);
+        let topn = ranking.top(20.min(data.n_features()));
+        let norm = lrwbins::tabular::stats::Normalizer::fit(&s.train);
+        let lr = lrwbins::lr::fit_dataset(&norm.apply(&s.train), &topn, &Default::default());
+        let lr_auc = roc_auc(&lrwbins::lr::predict_dataset(&lr, &norm.apply(&s.test), &topn), &s.test.labels);
+        let mut rng3 = Rng::new(11);
+        let inner = split::train_test_split(&s.train, 0.25, &mut rng3);
+        let space = lrwbins::automl::ShapeSpace {
+            bs: vec![2, 3], ns: vec![2, 3, 4, 5, 6, 7],
+            n_infer_features: 20.min(data.n_features()),
+            max_total_bins: 1 << 13, screen_rows: inner.train.n_rows(),
+        };
+        let shape = lrwbins::automl::shape_search(&inner.train, &inner.test, &ranking, &space);
+        let lrw = lrwbins::lrwbins::LrwBinsModel::train(&s.train, &ranking.order, &shape.best);
+        let lrw_auc = roc_auc(&lrw.predict_proba(&s.test), &s.test.labels);
+        let gb = lrwbins::gbdt::train(&s.train, &lrwbins::gbdt::GbdtParams::default());
+        let gb_auc = roc_auc(&gb.predict_proba(&s.test), &s.test.labels);
+        println!("{name:10} LR {lr_auc:.3} (t {t_lr:.3})  LRwB {lrw_auc:.3} (t {t_lrw:.3})  GB {gb_auc:.3} (t {t_gb:.3})");
+    }
+}

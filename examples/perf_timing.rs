@@ -1,0 +1,26 @@
+fn main() {
+    let spec = lrwbins::datagen::preset("aci").unwrap().with_rows(12_000);
+    let data = lrwbins::datagen::generate(&spec, 3);
+    let c0 = lrwbins::telemetry::process_cpu_ns();
+    let m = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::default());
+    println!("gbdt train 12k x 15f, 60 trees: {:.2}s CPU ({} trees)", (lrwbins::telemetry::process_cpu_ns()-c0) as f64/1e9, m.trees.len());
+    // LRwBins training time on the same data (paper §4: "about half the
+    // time" of XGBoost).
+    let ranking = lrwbins::features::rank_features(&data, lrwbins::features::RankMethod::GbdtGain, 1);
+    let c0 = lrwbins::telemetry::process_cpu_ns();
+    let lrw = lrwbins::lrwbins::LrwBinsModel::train(
+        &data,
+        &ranking.order,
+        &lrwbins::lrwbins::LrwBinsParams { b: 3, n_bin_features: 5, n_infer_features: 10, ..Default::default() },
+    );
+    println!(
+        "lrwbins train 12k x 15f: {:.2}s CPU ({} bins)",
+        (lrwbins::telemetry::process_cpu_ns() - c0) as f64 / 1e9,
+        lrw.weights.len()
+    );
+    let spec2 = lrwbins::datagen::preset("case2").unwrap().with_rows(20_000);
+    let d2 = lrwbins::datagen::generate(&spec2, 3);
+    let c0 = lrwbins::telemetry::process_cpu_ns();
+    let m2 = lrwbins::gbdt::train(&d2, &lrwbins::gbdt::GbdtParams::default());
+    println!("gbdt train 20k x 176f, 60 trees: {:.2}s CPU ({} trees)", (lrwbins::telemetry::process_cpu_ns()-c0) as f64/1e9, m2.trees.len());
+}

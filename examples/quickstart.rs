@@ -1,0 +1,119 @@
+//! Quickstart: the smallest end-to-end tour of the library.
+//!
+//! 1. Reproduces the paper's Figure-1 intuition on a 2-feature toy world:
+//!    a global LR fails on a bent decision surface, per-quadrant LRs fix it.
+//! 2. Trains the full multistage pipeline (Algorithm 1 + 2 + AutoML) on a
+//!    synthetic ACI clone and prints the Table-1/Table-2 style summary.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lrwbins::automl::{run_pipeline, PipelineConfig};
+use lrwbins::datagen;
+use lrwbins::lr::{fit_dataset, predict_dataset, LrParams};
+use lrwbins::metrics::{accuracy, roc_auc};
+use lrwbins::tabular::{split, Dataset, Schema};
+use lrwbins::util::rng::Rng;
+use lrwbins::util::sigmoid;
+
+fn main() {
+    figure1_demo();
+    pipeline_demo();
+}
+
+/// Paper Figure 1: data separable by a *bent* curve. A single linear model
+/// underfits; one linear model per quadrant approximates the curve well.
+fn figure1_demo() {
+    println!("=== Figure 1 demo: local linear approximations ===");
+    let mut rng = Rng::new(1);
+    let mut d = Dataset::new(Schema::numeric(2));
+    for _ in 0..8000 {
+        let x1 = rng.normal() as f32;
+        let x2 = rng.normal() as f32;
+        // Bent separating surface: x2 > sin(2·x1) + 0.5·x1²  (nonlinear).
+        let boundary = (2.0 * x1).sin() + 0.5 * x1 * x1;
+        let margin = x2 - boundary;
+        let y = rng.bool(sigmoid(4.0 * margin as f64)) as u8 as f32;
+        d.push_row(&[x1, x2], y);
+    }
+    let mut rng2 = Rng::new(2);
+    let s = split::train_test_split(&d, 0.3, &mut rng2);
+
+    // Global LR.
+    let lr = fit_dataset(&s.train, &[0, 1], &LrParams::default());
+    let global_auc = roc_auc(&predict_dataset(&lr, &s.test, &[0, 1]), &s.test.labels);
+
+    // Per-quadrant LR (quadrants split at the medians — b=2, n=2 binning).
+    let quadrant = |row: &[f32]| ((row[0] > 0.0) as usize) * 2 + ((row[1] > 0.0) as usize);
+    let mut preds = vec![0f32; s.test.n_rows()];
+    for q in 0..4 {
+        let tr_idx: Vec<usize> = (0..s.train.n_rows())
+            .filter(|&r| quadrant(&s.train.row(r)) == q)
+            .collect();
+        let model = fit_dataset(&s.train.take_rows(&tr_idx), &[0, 1], &LrParams::default());
+        for r in 0..s.test.n_rows() {
+            let row = s.test.row(r);
+            if quadrant(&row) == q {
+                preds[r] = model.predict_one(&row);
+            }
+        }
+    }
+    let quad_auc = roc_auc(&preds, &s.test.labels);
+    println!("  global LR AUC        = {global_auc:.3}");
+    println!("  per-quadrant LR AUC  = {quad_auc:.3}   <-- local linear models win\n");
+    assert!(quad_auc > global_auc, "quadrant LRs should beat the global LR");
+}
+
+/// Full multistage pipeline on an ACI-sized synthetic clone.
+fn pipeline_demo() {
+    println!("=== Multistage pipeline on the ACI clone ===");
+    let spec = datagen::preset("aci").unwrap().with_rows(20_000);
+    let data = datagen::generate(&spec, 7);
+    let mut rng = Rng::new(3);
+    let s = split::three_way_split(&data, (0.6, 0.2, 0.2), &mut rng);
+
+    let t0 = std::time::Instant::now();
+    let p = run_pipeline(&s.train, &s.val, &PipelineConfig::quick());
+    println!(
+        "  AutoML chose b={} n={} ({} grid cells evaluated) in {:.1}s",
+        p.shape.best.b,
+        p.shape.best.n_bin_features,
+        p.shape.cells.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Held-out test evaluation, hybrid = stage1 where routed else GBDT.
+    let mut hybrid = Vec::with_capacity(s.test.n_rows());
+    let mut stage1_hits = 0usize;
+    let mut row = Vec::new();
+    for r in 0..s.test.n_rows() {
+        s.test.row_into(r, &mut row);
+        match p.first.stage1(&row) {
+            lrwbins::lrwbins::Stage1::Hit(pr) => {
+                stage1_hits += 1;
+                hybrid.push(pr);
+            }
+            lrwbins::lrwbins::Stage1::Miss { .. } => hybrid.push(p.second.predict_one(&row)),
+        }
+    }
+    let gbdt_preds = p.second.predict_proba(&s.test);
+    let lrw_preds = p.first.predict_proba(&s.test);
+    println!(
+        "  test AUC:  LRwBins={:.3}  GBDT={:.3}  hybrid={:.3}",
+        roc_auc(&lrw_preds, &s.test.labels),
+        roc_auc(&gbdt_preds, &s.test.labels),
+        roc_auc(&hybrid, &s.test.labels),
+    );
+    println!(
+        "  test ACC:  LRwBins={:.3}  GBDT={:.3}  hybrid={:.3}",
+        accuracy(&lrw_preds, &s.test.labels),
+        accuracy(&gbdt_preds, &s.test.labels),
+        accuracy(&hybrid, &s.test.labels),
+    );
+    println!(
+        "  coverage: {:.1}% of test rows served in-process (val target: {:.1}%)",
+        100.0 * stage1_hits as f64 / s.test.n_rows() as f64,
+        100.0 * p.allocation.coverage
+    );
+    let (qb, wb) = p.first.config_size_bytes();
+    println!("  embedded config size: {qb} B quantiles + {wb} B LR weights (paper §4: ~0.3 KB + ~2.3 KB)");
+}

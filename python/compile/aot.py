@@ -1,0 +1,99 @@
+"""AOT compiler: lower the Layer-2 graphs to HLO *text* artifacts.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published `xla` 0.1.6 crate links) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits, per batch variant B ∈ {1, 16, 128, 1024}:
+  artifacts/first_stage_b{B}.hlo.txt
+  artifacts/second_stage_b{B}.hlo.txt
+  artifacts/multistage_b{B}.hlo.txt
+plus artifacts/manifest.json recording the padded shapes for the Rust
+runtime. Python runs ONCE at build time (`make artifacts`); the Rust binary
+is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+    return len(text)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifacts directory (default: ../artifacts)")
+    ap.add_argument("--batches", default=",".join(str(b) for b in model.BATCH_VARIANTS),
+                    help="comma-separated batch variants")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "..", "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",")]
+    shapes = model.DEFAULT_SHAPES
+
+    manifest = {
+        "shapes": {
+            "f_max": shapes.f_max,
+            "nb_max": shapes.nb_max,
+            "q_max": shapes.q_max,
+            "nf_max": shapes.nf_max,
+            "bins_max": shapes.bins_max,
+            "t_max": shapes.t_max,
+            "depth": shapes.depth,
+        },
+        "batches": batches,
+        "artifacts": {},
+    }
+
+    for b in batches:
+        print(f"lowering batch variant B={b} ...")
+        name = f"first_stage_b{b}.hlo.txt"
+        lower_and_write(model.first_stage_fn,
+                        model.example_args_first(shapes, b),
+                        os.path.join(out_dir, name))
+        manifest["artifacts"].setdefault("first_stage", {})[str(b)] = name
+
+        name = f"second_stage_b{b}.hlo.txt"
+        lower_and_write(model.second_stage_fn,
+                        model.example_args_second(shapes, b),
+                        os.path.join(out_dir, name))
+        manifest["artifacts"].setdefault("second_stage", {})[str(b)] = name
+
+        name = f"multistage_b{b}.hlo.txt"
+        lower_and_write(model.multistage_fn,
+                        model.example_args_multistage(shapes, b),
+                        os.path.join(out_dir, name))
+        manifest["artifacts"].setdefault("multistage", {})[str(b)] = name
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Pallas kernel for stage-2 GBDT forest inference (Layer 1).
+
+Dense perfect-depth forests make tree traversal *oblivious*: every row takes
+exactly `depth` gather steps (`k <- 2k+1 + (x > thresh)`), so the branchy
+CPU tree walk becomes D data-independent vectorized gather rounds — the
+TPU-friendly reformulation of the paper's CPU XGBoost service (DESIGN.md
+§Hardware-Adaptation). Padding trees use `thresh=+inf` (always-left) with
+zero leaves, so one artifact shape serves any forest ≤ [T, depth].
+
+Blocking: the batch dimension is tiled (BlockSpec); the forest tensors
+(feat/thresh [T, 2^D-1], leaf [T, 2^D] — ~100 KB at T=64, D=6) stay VMEM-
+resident across the grid. The traversal is gather-bound; see EXPERIMENTS.md
+§Perf for the per-row byte/flop estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _forest_body(depth, x_ref, feat_ref, thresh_ref, leaf_ref, base_ref,
+                 probs_ref):
+    x = x_ref[...]            # [bt, F]
+    feat = feat_ref[...]      # [T, NI]
+    thresh = thresh_ref[...]  # [T, NI]
+    leaf = leaf_ref[...]      # [T, NL]
+    base = base_ref[...]      # [1]
+
+    bt = x.shape[0]
+    t = feat.shape[0]
+    ni = feat.shape[1]
+    k = jnp.zeros((bt, t), dtype=jnp.int32)
+    for _ in range(depth):  # static unroll: D gather rounds
+        f = jnp.take_along_axis(feat[None, :, :], k[:, :, None], axis=2)[:, :, 0]
+        th = jnp.take_along_axis(thresh[None, :, :], k[:, :, None], axis=2)[:, :, 0]
+        xv = jnp.take_along_axis(x, f, axis=1)          # [bt, T]
+        k = 2 * k + 1 + (xv > th).astype(jnp.int32)
+    leaf_idx = k - ni
+    vals = jnp.take_along_axis(leaf[None, :, :], leaf_idx[:, :, None], axis=2)[:, :, 0]
+    margin = base[0] + jnp.sum(vals, axis=1)
+    probs_ref[...] = ref.stable_sigmoid(margin)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def forest_kernel(x, feat, thresh, leaf, base_score, *, block_b=128):
+    """Pallas stage-2 evaluator. Matches `ref.forest_ref`; `base_score` is a
+    [1]-shaped f32 array (PJRT artifacts take it as an input literal)."""
+    b = x.shape[0]
+    block_b = min(block_b, b)
+    assert b % block_b == 0, f"batch {b} must be divisible by tile {block_b}"
+    ni = feat.shape[1]
+    depth = (ni + 1).bit_length() - 1
+    assert (1 << depth) - 1 == ni, f"NI={ni} must be 2^D - 1"
+    assert leaf.shape[1] == ni + 1, "NL must be 2^D"
+    grid = (b // block_b,)
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        functools.partial(_forest_body, depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, x.shape[1]), lambda i: (i, 0)),
+            full(*feat.shape),
+            full(*thresh.shape),
+            full(*leaf.shape),
+            full(*base_score.shape),
+        ],
+        out_specs=[pl.BlockSpec((block_b,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((b,), jnp.float32)],
+        interpret=True,
+    )(x, feat, thresh, leaf, base_score)[0]

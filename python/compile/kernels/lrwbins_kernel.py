@@ -1,0 +1,82 @@
+"""Pallas kernel for stage-1 LRwBins batch evaluation (Layer 1).
+
+The request-path hot spot: quantile binning → mixed-radix combined-bin id →
+LR-weight-row gather → fused dot + bias + sigmoid → route-mask test.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the batch dimension is tiled
+via BlockSpec so each tile's feature slab streams HBM→VMEM once, while the
+config tables (quantiles ~256 B, weight table ≤ ~400 KB, route mask ≤ 16 KB)
+stay resident in VMEM across the whole grid — they are the model, not the
+data. The compute is gather + small-GEMV + VPU sigmoid; no MXU needed, the
+kernel is memory-bound on the feature stream (roofline notes in
+EXPERIMENTS.md §Perf).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated against `ref.py` and real-TPU
+efficiency is estimated analytically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _lrwbins_body(x_ref, bin_feat_ref, quant_ref, strides_ref, infer_feat_ref,
+                  weights_ref, route_ref, probs_ref, accept_ref):
+    """One batch tile: all tables fully resident."""
+    x = x_ref[...]                       # [bt, F]
+    bin_feat = bin_feat_ref[...]         # [NB]
+    quant = quant_ref[...]               # [NB, Q]
+    strides = strides_ref[...]           # [NB]
+    infer_feat = infer_feat_ref[...]     # [NF]
+    weights = weights_ref[...]           # [BINS, NF+1]
+    route = route_ref[...]               # [BINS]
+
+    xb = jnp.take(x, bin_feat, axis=1)   # [bt, NB]
+    # Per-feature bin = #edges strictly below x (+inf padding contributes 0).
+    bins = jnp.sum(xb[:, :, None] > quant[None, :, :], axis=2)   # [bt, NB]
+    combined = jnp.sum(bins.astype(jnp.int32) * strides[None, :], axis=1)
+
+    w = jnp.take(weights, combined, axis=0)          # [bt, NF+1]
+    xi = jnp.take(x, infer_feat, axis=1)             # [bt, NF]
+    z = jnp.sum(w[:, :-1] * xi, axis=1) + w[:, -1]   # fused GEMV + bias
+    probs_ref[...] = ref.stable_sigmoid(z)
+    accept_ref[...] = jnp.take(route, combined, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def lrwbins_kernel(x, bin_feat, quantiles, strides, infer_feat, weights, route,
+                   *, block_b=128):
+    """Pallas stage-1 evaluator. Same signature/semantics as
+    `ref.lrwbins_ref` (see there for shapes)."""
+    b, _ = x.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0, f"batch {b} must be divisible by tile {block_b}"
+    grid = (b // block_b,)
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        _lrwbins_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, x.shape[1]), lambda i: (i, 0)),
+            full(*bin_feat.shape),
+            full(*quantiles.shape),
+            full(*strides.shape),
+            full(*infer_feat.shape),
+            full(*weights.shape),
+            full(*route.shape),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, bin_feat, quantiles, strides, infer_feat, weights, route)

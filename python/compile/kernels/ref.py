@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the semantic ground truth: deliberately simple jnp code whose
+numerics the Pallas kernels (and the Rust embedded evaluator, via golden
+files) must match. pytest + hypothesis sweep shapes against them.
+
+Conventions shared with the Rust side (`lrwbins::tables`):
+  * feature bin  = #{edges e : x > e} over a +inf-padded edge row;
+  * combined bin = sum_i bin_i * stride_i (padding strides are 0);
+  * LR weights   = dense [BINS, NF+1], bias in the last column;
+  * forest       = dense perfect-depth layout, `k <- 2k+1 + (x > thresh)`.
+"""
+
+import jax.numpy as jnp
+
+
+def stable_sigmoid(z):
+    """Numerically-stable sigmoid matching the Rust implementation."""
+    ez = jnp.exp(-jnp.abs(z))
+    return jnp.where(z >= 0, 1.0 / (1.0 + ez), ez / (1.0 + ez))
+
+
+def lrwbins_ref(x, bin_feat, quantiles, strides, infer_feat, weights, route):
+    """First-stage LRwBins batch evaluation.
+
+    Args:
+      x:          [B, F]  normalized features (zero padding).
+      bin_feat:   [NB]    i32 indices of binning features.
+      quantiles:  [NB, Q] f32 edges, +inf padding.
+      strides:    [NB]    i32 mixed-radix strides (0 padding).
+      infer_feat: [NF]    i32 indices of inference features.
+      weights:    [BINS, NF+1] f32 LR weights, bias last.
+      route:      [BINS]  f32 1.0 where stage 1 serves the bin.
+
+    Returns:
+      probs:  [B] f32 stage-1 probabilities.
+      accept: [B] f32 route flag for each row's combined bin.
+    """
+    xb = x[:, bin_feat]  # [B, NB]
+    bins = jnp.sum(xb[:, :, None] > quantiles[None, :, :], axis=2)  # [B, NB]
+    combined = jnp.sum(bins.astype(jnp.int32) * strides[None, :], axis=1)  # [B]
+    w = weights[combined]  # [B, NF+1]
+    xi = x[:, infer_feat]  # [B, NF]
+    z = jnp.sum(w[:, :-1] * xi, axis=1) + w[:, -1]
+    return stable_sigmoid(z), route[combined]
+
+
+def forest_ref(x, feat, thresh, leaf, base_score):
+    """Second-stage GBDT forest evaluation (oblivious traversal).
+
+    Args:
+      x:      [B, F]   features (raw space — trees split raw values).
+      feat:   [T, NI]  i32 split features (dense perfect layout).
+      thresh: [T, NI]  f32 split thresholds (+inf = always-left padding).
+      leaf:   [T, NL]  f32 leaf values, NL = NI + 1 = 2^depth.
+      base_score: []   f32 margin offset.
+
+    Returns:
+      probs: [B] f32 sigmoid(base + sum of per-tree leaves).
+    """
+    b = x.shape[0]
+    ni = feat.shape[1]
+    depth = (ni + 1).bit_length() - 1  # ni = 2^depth - 1
+    k = jnp.zeros((b, feat.shape[0]), dtype=jnp.int32)
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat[None, :, :], k[:, :, None], axis=2)[:, :, 0]
+        th = jnp.take_along_axis(thresh[None, :, :], k[:, :, None], axis=2)[:, :, 0]
+        xv = jnp.take_along_axis(x, f, axis=1)  # [B, T]: x[i, f[i, t]]
+        k = 2 * k + 1 + (xv > th).astype(jnp.int32)
+    leaf_idx = k - ni  # [B, T]
+    vals = jnp.take_along_axis(leaf[None, :, :], leaf_idx[:, :, None], axis=2)[:, :, 0]
+    margin = base_score + jnp.sum(vals, axis=1)
+    return stable_sigmoid(margin)
+
+
+def multistage_ref(x, bin_feat, quantiles, strides, infer_feat, weights, route,
+                   feat, thresh, leaf, base_score):
+    """Full multistage prediction: stage-1 where routed, else the forest."""
+    p1, accept = lrwbins_ref(x, bin_feat, quantiles, strides, infer_feat,
+                             weights, route)
+    p2 = forest_ref(x, feat, thresh, leaf, base_score)
+    return jnp.where(accept > 0.5, p1, p2), accept

@@ -1,0 +1,108 @@
+"""Layer 2 — the multistage compute graph in JAX.
+
+Thin compositions over the Layer-1 Pallas kernels, with fixed padded shapes
+(`Shapes`) shared with the Rust runtime via `artifacts/manifest.json`.
+Model parameters (tables, forest tensors) are *runtime inputs*, not
+constants: one compiled artifact serves every trained model that fits the
+padded shapes.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.forest_kernel import forest_kernel
+from .kernels.lrwbins_kernel import lrwbins_kernel
+
+
+@dataclass(frozen=True)
+class Shapes:
+    """Padded artifact shapes. Must match `runtime::shapes` on the Rust side."""
+    f_max: int = 320      # feature-vector width (covers Case 4's 268)
+    nb_max: int = 8       # binning features
+    q_max: int = 8        # quantile edges per feature
+    nf_max: int = 24      # inference features
+    bins_max: int = 4096  # combined-bin table rows
+    t_max: int = 64       # trees
+    depth: int = 6        # dense tree depth
+
+    @property
+    def ni(self):
+        return (1 << self.depth) - 1
+
+    @property
+    def nl(self):
+        return 1 << self.depth
+
+
+DEFAULT_SHAPES = Shapes()
+
+# Batch-size variants compiled AOT; the runtime picks the smallest ≥ live
+# batch and pads.
+BATCH_VARIANTS = (1, 16, 128, 1024)
+
+
+def first_stage_fn(x, bin_feat, quantiles, strides, infer_feat, weights, route):
+    """Stage-1 LRwBins: returns (probs [B], accept [B])."""
+    probs, accept = lrwbins_kernel(
+        x, bin_feat, quantiles, strides, infer_feat, weights, route,
+        block_b=_tile(x.shape[0]),
+    )
+    return probs, accept
+
+
+def second_stage_fn(x, feat, thresh, leaf, base_score):
+    """Stage-2 forest: returns probs [B]."""
+    return forest_kernel(x, feat, thresh, leaf, base_score,
+                         block_b=_tile(x.shape[0]))
+
+
+def multistage_fn(x, bin_feat, quantiles, strides, infer_feat, weights, route,
+                  feat, thresh, leaf, base_score):
+    """Fused multistage graph (cross-check artifact): stage-1 where routed,
+    stage-2 forest elsewhere. Returns (probs, accept)."""
+    p1, accept = first_stage_fn(x, bin_feat, quantiles, strides, infer_feat,
+                                weights, route)
+    p2 = second_stage_fn(x, feat, thresh, leaf, base_score)
+    return jnp.where(accept > 0.5, p1, p2), accept
+
+
+def _tile(b):
+    """Batch tile: full batch for small, 128 otherwise (perf-tuned; see
+    EXPERIMENTS.md §Perf L1)."""
+    return b if b <= 128 else 128
+
+
+def example_args_first(shapes: Shapes, batch: int):
+    """ShapeDtypeStructs for AOT-lowering the first-stage artifact."""
+    import jax
+    s = shapes
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((batch, s.f_max), f32),
+        jax.ShapeDtypeStruct((s.nb_max,), i32),
+        jax.ShapeDtypeStruct((s.nb_max, s.q_max), f32),
+        jax.ShapeDtypeStruct((s.nb_max,), i32),
+        jax.ShapeDtypeStruct((s.nf_max,), i32),
+        jax.ShapeDtypeStruct((s.bins_max, s.nf_max + 1), f32),
+        jax.ShapeDtypeStruct((s.bins_max,), f32),
+    )
+
+
+def example_args_second(shapes: Shapes, batch: int):
+    import jax
+    s = shapes
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((batch, s.f_max), f32),
+        jax.ShapeDtypeStruct((s.t_max, s.ni), i32),
+        jax.ShapeDtypeStruct((s.t_max, s.ni), f32),
+        jax.ShapeDtypeStruct((s.t_max, s.nl), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+
+
+def example_args_multistage(shapes: Shapes, batch: int):
+    return example_args_first(shapes, batch) + example_args_second(shapes, batch)[1:]

@@ -1,0 +1,160 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; every case asserts allclose
+between `*_kernel` (interpret=True) and `ref.*`.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.forest_kernel import forest_kernel
+from compile.kernels.lrwbins_kernel import lrwbins_kernel
+
+RNG = np.random.default_rng(0)
+
+
+def make_lrwbins_inputs(rng, b, f, nb, q, nf, bins):
+    """Random-but-consistent stage-1 inputs (padded layout)."""
+    x = rng.normal(size=(b, f)).astype(np.float32)
+    bin_feat = rng.integers(0, f, size=nb).astype(np.int32)
+    # Sorted edges with +inf padding in random tail positions.
+    quantiles = np.full((nb, q), np.inf, dtype=np.float32)
+    strides = np.zeros(nb, dtype=np.int32)
+    stride = 1
+    for i in range(nb):
+        n_edges = int(rng.integers(1, q + 1))
+        edges = np.sort(rng.normal(size=n_edges)).astype(np.float32)
+        quantiles[i, :n_edges] = edges
+        strides[i] = stride
+        stride *= n_edges + 1
+    assert stride <= bins, "bin space must fit the table"
+    infer_feat = rng.integers(0, f, size=nf).astype(np.int32)
+    weights = (rng.normal(size=(bins, nf + 1)) * 0.5).astype(np.float32)
+    route = (rng.random(bins) < 0.5).astype(np.float32)
+    return x, bin_feat, quantiles, strides, infer_feat, weights, route
+
+
+def make_forest_inputs(rng, b, f, t, depth):
+    ni = (1 << depth) - 1
+    nl = 1 << depth
+    x = rng.normal(size=(b, f)).astype(np.float32)
+    feat = rng.integers(0, f, size=(t, ni)).astype(np.int32)
+    thresh = rng.normal(size=(t, ni)).astype(np.float32)
+    # Random always-left padding rows (like padded artifact forests).
+    pad = rng.random((t, ni)) < 0.2
+    thresh[pad] = np.inf
+    leaf = (rng.normal(size=(t, nl)) * 0.1).astype(np.float32)
+    base = np.array([rng.normal() * 0.2], dtype=np.float32)
+    return x, feat, thresh, leaf, base
+
+
+class TestLrwBinsKernel:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.sampled_from([1, 4, 16, 64]),
+        f=st.integers(4, 40),
+        nb=st.integers(1, 6),
+        nf=st.integers(1, 12),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_ref_across_shapes(self, b, f, nb, nf, seed):
+        rng = np.random.default_rng(seed)
+        inputs = make_lrwbins_inputs(rng, b, f, nb, q=4, nf=nf, bins=5**6)
+        p_ref, a_ref = ref.lrwbins_ref(*inputs)
+        p_ker, a_ker = lrwbins_kernel(*inputs)
+        np.testing.assert_allclose(p_ker, p_ref, rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(np.asarray(a_ker), np.asarray(a_ref))
+
+    def test_probabilities_in_range(self):
+        inputs = make_lrwbins_inputs(RNG, 32, 16, 4, 4, 8, 5**6)
+        p, a = lrwbins_kernel(*inputs)
+        assert np.all((np.asarray(p) >= 0) & (np.asarray(p) <= 1))
+        assert set(np.unique(np.asarray(a))) <= {0.0, 1.0}
+
+    def test_blocking_invariance(self):
+        """Different batch tiles must give identical results."""
+        inputs = make_lrwbins_inputs(np.random.default_rng(7), 64, 16, 4, 4, 8, 5**6)
+        p1, a1 = lrwbins_kernel(*inputs, block_b=64)
+        p2, a2 = lrwbins_kernel(*inputs, block_b=16)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+    def test_known_tiny_case(self):
+        """Hand-computed: one feature, one edge at 0, two bins."""
+        x = np.array([[-1.0, 9.9], [1.0, 9.9]], dtype=np.float32)
+        bin_feat = np.array([0], dtype=np.int32)
+        quantiles = np.array([[0.0]], dtype=np.float32)
+        strides = np.array([1], dtype=np.int32)
+        infer_feat = np.array([0], dtype=np.int32)
+        # bin 0: p = sigmoid(1*x + 0); bin 1: p = sigmoid(0*x + 2)
+        weights = np.array([[1.0, 0.0], [0.0, 2.0]], dtype=np.float32)
+        route = np.array([1.0, 0.0], dtype=np.float32)
+        p, a = lrwbins_kernel(x, bin_feat, quantiles, strides, infer_feat,
+                              weights, route, block_b=2)
+        p = np.asarray(p)
+        assert abs(p[0] - 1 / (1 + np.exp(1.0))) < 1e-6
+        assert abs(p[1] - 1 / (1 + np.exp(-2.0))) < 1e-6
+        assert np.asarray(a).tolist() == [1.0, 0.0]
+
+
+class TestForestKernel:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.sampled_from([1, 8, 32]),
+        f=st.integers(4, 24),
+        t=st.integers(1, 16),
+        depth=st.integers(1, 6),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_ref_across_shapes(self, b, f, t, depth, seed):
+        rng = np.random.default_rng(seed)
+        inputs = make_forest_inputs(rng, b, f, t, depth)
+        p_ref = ref.forest_ref(*inputs)
+        p_ker = forest_kernel(*inputs)
+        np.testing.assert_allclose(p_ker, p_ref, rtol=1e-6, atol=1e-7)
+
+    def test_single_stump(self):
+        """One depth-1 tree: x0 <= 0 → leaf -2, else +2."""
+        x = np.array([[-1.0], [1.0], [0.0]], dtype=np.float32)
+        feat = np.array([[0]], dtype=np.int32)
+        thresh = np.array([[0.0]], dtype=np.float32)
+        leaf = np.array([[-2.0, 2.0]], dtype=np.float32)
+        base = np.array([0.0], dtype=np.float32)
+        p = np.asarray(forest_kernel(x, feat, thresh, leaf, base, block_b=1))
+        s = lambda z: 1 / (1 + np.exp(-z))
+        np.testing.assert_allclose(p, [s(-2.0), s(2.0), s(-2.0)], rtol=1e-6)
+
+    def test_padding_trees_are_noops(self):
+        rng = np.random.default_rng(3)
+        x, feat, thresh, leaf, base = make_forest_inputs(rng, 16, 8, 4, 3)
+        p1 = np.asarray(forest_kernel(x, feat, thresh, leaf, base))
+        # Append 4 all-pad trees (always-left, zero leaves).
+        ni, nl = feat.shape[1], leaf.shape[1]
+        feat2 = np.vstack([feat, np.zeros((4, ni), np.int32)])
+        thresh2 = np.vstack([thresh, np.full((4, ni), np.inf, np.float32)])
+        leaf2 = np.vstack([leaf, np.zeros((4, nl), np.float32)])
+        p2 = np.asarray(forest_kernel(x, feat2, thresh2, leaf2, base))
+        np.testing.assert_array_equal(p1, p2)
+
+    def test_blocking_invariance(self):
+        rng = np.random.default_rng(5)
+        inputs = make_forest_inputs(rng, 64, 12, 8, 4)
+        p1 = np.asarray(forest_kernel(*inputs, block_b=64))
+        p2 = np.asarray(forest_kernel(*inputs, block_b=8))
+        np.testing.assert_array_equal(p1, p2)
+
+
+class TestMultistage:
+    def test_routing_selects_stage(self):
+        rng = np.random.default_rng(11)
+        s1 = make_lrwbins_inputs(rng, 32, 16, 3, 4, 6, 5**6)
+        x = s1[0]
+        _, feat, thresh, leaf, base = make_forest_inputs(rng, 32, 16, 6, 4)
+        p, accept = ref.multistage_ref(*s1, feat, thresh, leaf, base)
+        p1, _ = ref.lrwbins_ref(*s1)
+        p2 = ref.forest_ref(x, feat, thresh, leaf, base)
+        p, accept, p1, p2 = map(np.asarray, (p, accept, p1, p2))
+        np.testing.assert_array_equal(p[accept > 0.5], p1[accept > 0.5])
+        np.testing.assert_array_equal(p[accept <= 0.5], p2[accept <= 0.5])

@@ -1,0 +1,97 @@
+"""Layer-2 tests: model composition, padded-shape contracts, AOT lowering.
+
+The Rust side independently verifies numerics through PJRT
+(rust/tests/integration_runtime.rs); here we verify the Python half:
+multistage composition semantics, the Shapes contract, and that every graph
+lowers to parseable HLO text quickly.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from compile import model
+from compile.aot import to_hlo_text
+from compile.kernels import ref
+
+from tests.test_kernels import make_forest_inputs, make_lrwbins_inputs
+
+
+class TestShapesContract:
+    def test_shape_arithmetic(self):
+        s = model.Shapes(depth=6)
+        assert s.ni == 63
+        assert s.nl == 64
+
+    def test_example_args_match_shapes(self):
+        s = model.DEFAULT_SHAPES
+        args = model.example_args_first(s, 16)
+        assert args[0].shape == (16, s.f_max)
+        assert args[5].shape == (s.bins_max, s.nf_max + 1)
+        args = model.example_args_second(s, 16)
+        assert args[1].shape == (s.t_max, s.ni)
+        assert args[3].shape == (s.t_max, s.nl)
+        multi = model.example_args_multistage(s, 16)
+        assert len(multi) == 7 + 4
+
+    def test_batch_variants_divisible_by_tile(self):
+        for b in model.BATCH_VARIANTS:
+            tile = model._tile(b)
+            assert b % tile == 0
+
+
+class TestMultistageComposition:
+    def test_routing_semantics_match_ref(self):
+        rng = np.random.default_rng(5)
+        s1 = make_lrwbins_inputs(rng, 32, 16, 3, 4, 6, 5**6)
+        x = s1[0]
+        _, feat, thresh, leaf, base = make_forest_inputs(rng, 32, 16, 4, 3)
+        p_model, a_model = model.multistage_fn(*s1, feat, thresh, leaf, base)
+        p_ref, a_ref = ref.multistage_ref(*s1, feat, thresh, leaf, base)
+        np.testing.assert_allclose(p_model, p_ref, rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(np.asarray(a_model), np.asarray(a_ref))
+
+    def test_first_stage_fn_wraps_kernel(self):
+        rng = np.random.default_rng(6)
+        s1 = make_lrwbins_inputs(rng, 16, 12, 2, 4, 4, 5**6)
+        p, a = model.first_stage_fn(*s1)
+        p_ref, a_ref = ref.lrwbins_ref(*s1)
+        np.testing.assert_allclose(p, p_ref, rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+
+
+class TestAotLowering:
+    @pytest.mark.parametrize("batch", [1, 16])
+    def test_first_stage_lowers_to_hlo_text(self, batch):
+        lowered = jax.jit(model.first_stage_fn).lower(
+            *model.example_args_first(model.DEFAULT_SHAPES, batch))
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_second_stage_lowers_to_hlo_text(self):
+        lowered = jax.jit(model.second_stage_fn).lower(
+            *model.example_args_second(model.DEFAULT_SHAPES, 16))
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+
+    def test_artifacts_manifest_consistent_when_present(self):
+        import json
+        import os
+        path = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(path) as f:
+            manifest = json.load(f)
+        s = model.DEFAULT_SHAPES
+        assert manifest["shapes"]["f_max"] == s.f_max
+        assert manifest["shapes"]["bins_max"] == s.bins_max
+        for group in manifest["artifacts"].values():
+            for fname in group.values():
+                apath = os.path.join(os.path.dirname(path), fname)
+                assert os.path.exists(apath), f"missing artifact {fname}"
+                with open(apath) as f:
+                    head = f.read(64)
+                assert head.startswith("HloModule")

@@ -1,0 +1,100 @@
+//! Figure 3 — per-combined-bin performance bars on the Case 2 clone:
+//! height = bin ROC AUC, width = rows in the bin, color = correlation of
+//! bin-local feature importance with global importance.
+//!
+//! Run: `cargo bench --bench fig3_bin_performance [-- --quick]`
+
+use lrwbins::allocation::{allocate, importance_correlation, Metric, ValScores};
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::gbdt::{self, GbdtParams};
+use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams};
+use lrwbins::tabular::split;
+use lrwbins::util::bench::{bench_arg, quick_requested};
+use lrwbins::util::rng::Rng;
+
+fn main() {
+    let quick = quick_requested();
+    let rows: usize = bench_arg("rows")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 20_000 } else { 40_000 });
+    let spec = datagen::preset("case2").unwrap().with_rows(rows);
+    let data = datagen::generate(&spec, 9);
+    let mut rng = Rng::new(0xF3);
+    let s = split::train_test_split(&data, 0.3, &mut rng);
+
+    let ranking = rank_features(&s.train, RankMethod::GbdtGain, 1);
+    let params = LrwBinsParams {
+        b: 3,
+        n_bin_features: 4,
+        n_infer_features: 20.min(data.n_features()),
+        ..Default::default()
+    };
+    let first = LrwBinsModel::train(&s.train, &ranking.order, &params);
+    let gparams = if quick { GbdtParams::quick() } else { GbdtParams::default() };
+    let second = gbdt::train(&s.train, &gparams);
+    let global_gain = &second.feature_gain;
+
+    // Per-bin evaluation on the validation split.
+    let norm = first.normalizer.apply(&s.test);
+    let bin_ids = first.binner.bin_dataset(&norm);
+    let alloc = allocate(
+        &ValScores {
+            bin_ids: &bin_ids,
+            stage1: &first.predict_proba(&s.test),
+            stage2: &second.predict_proba(&s.test),
+            labels: &s.test.labels,
+        },
+        Metric::RocAuc,
+        0.0,
+    );
+
+    // Bars sorted by stage-1 AUC descending (paper sorts by performance);
+    // local importance via a small per-bin GBDT on bins with enough rows.
+    let min_rows = if quick { 20 } else { 50 };
+    let mut bars: Vec<_> = alloc.bins.iter().filter(|b| b.rows >= min_rows).collect();
+    bars.sort_by(|a, b| b.stage1_metric.partial_cmp(&a.stage1_metric).unwrap());
+
+    println!("# Figure 3 — per-bin bars, Case 2 clone ({rows} rows, {} bins ≥{min_rows} rows)\n", bars.len());
+    println!("| bin | rows | LRwBins AUC | GBDT AUC | local-vs-global imp. corr | bar |");
+    println!("|---|---|---|---|---|---|");
+    let max_show = if quick { 20 } else { 40 };
+    for br in bars.iter().take(max_show) {
+        // Local importance: tiny GBDT on this bin's test rows.
+        let rows_in_bin: Vec<usize> = bin_ids
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b == br.bin)
+            .map(|(r, _)| r)
+            .collect();
+        let sub = s.test.take_rows(&rows_in_bin);
+        let corr = if sub.positive_rate() > 0.02 && sub.positive_rate() < 0.98 && sub.n_rows() >= 100 {
+            let local = gbdt::train(
+                &sub,
+                &GbdtParams {
+                    n_trees: 10,
+                    max_depth: 3,
+                    ..Default::default()
+                },
+            );
+            importance_correlation(global_gain, &local.feature_gain)
+        } else {
+            f64::NAN
+        };
+        let bar_len = ((br.stage1_metric - 0.5).max(0.0) * 40.0) as usize;
+        println!(
+            "| {} | {} | {:.3} | {:.3} | {} | {} |",
+            br.bin,
+            br.rows,
+            br.stage1_metric,
+            br.stage2_metric,
+            if corr.is_nan() { "-".to_string() } else { format!("{corr:.2}") },
+            "█".repeat(bar_len.min(40)),
+        );
+    }
+    println!(
+        "\nPaper's observations to check: a flat high-AUC region then a dropoff; \
+         bin-local importance correlates WEAKLY with global importance \
+         (binning on the most-important features removes their local variance)."
+    );
+}

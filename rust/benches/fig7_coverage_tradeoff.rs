@@ -1,0 +1,83 @@
+//! Figure 7 — ML metric vs fraction of data handled by LRwBins, for the
+//! Case 1, Case 2 and ACI clones.
+//!
+//! The central curve of the paper: a long flat region (stage 1 can take a
+//! large share of traffic nearly for free) followed by a decline. Printed
+//! as (coverage, ROC AUC, accuracy) series per dataset.
+//!
+//! Run: `cargo bench --bench fig7_coverage_tradeoff [-- --quick]`
+
+use lrwbins::allocation::{allocate, Metric, ValScores};
+use lrwbins::automl::{shape_search, ShapeSpace};
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::gbdt::{self, GbdtParams};
+use lrwbins::lrwbins::LrwBinsModel;
+use lrwbins::tabular::split;
+use lrwbins::util::bench::{bench_arg, quick_requested};
+use lrwbins::util::rng::Rng;
+
+fn main() {
+    let quick = quick_requested();
+    let row_cap: usize = bench_arg("rows")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 8_000 } else { 15_000 });
+    println!("# Figure 7 — metric vs stage-1 coverage (≤{row_cap} rows)\n");
+
+    for name in ["case1", "case2", "aci"] {
+        let mut spec = datagen::preset(name).unwrap();
+        if spec.rows > row_cap {
+            spec = spec.with_rows(row_cap);
+        }
+        let data = datagen::generate(&spec, 3);
+        let mut rng = Rng::new(0xF7);
+        let s = split::three_way_split(&data, (0.6, 0.2, 0.2), &mut rng);
+        let ranking = rank_features(&s.train, RankMethod::GbdtGain, 1);
+        let space = ShapeSpace {
+            bs: vec![2, 3],
+            ns: vec![2, 3, 4, 5, 6, 7],
+            n_infer_features: 20.min(data.n_features()),
+            max_total_bins: 1 << 13,
+            screen_rows: s.train.n_rows(),
+        };
+        let shape = shape_search(&s.train, &s.val, &ranking, &space);
+        let first = LrwBinsModel::train(&s.train, &ranking.order, &shape.best);
+        let gparams = if quick { GbdtParams::quick() } else { GbdtParams::default() };
+        let second = gbdt::train(&s.train, &gparams);
+
+        // Sweep on the held-out TEST split (pure evaluation curve).
+        let norm = first.normalizer.apply(&s.test);
+        let bin_ids = first.binner.bin_dataset(&norm);
+        let stage1 = first.predict_proba(&s.test);
+        let stage2 = second.predict_proba(&s.test);
+        let alloc = allocate(
+            &ValScores {
+                bin_ids: &bin_ids,
+                stage1: &stage1,
+                stage2: &stage2,
+                labels: &s.test.labels,
+            },
+            Metric::Accuracy,
+            0.0, // tolerance irrelevant; we want the full sweep
+        );
+
+        println!("## {name} (GBDT baseline: auc={:.3} acc={:.3})", alloc.stage2_auc, alloc.stage2_accuracy);
+        println!("| coverage | ROC AUC | accuracy |");
+        println!("|---|---|---|");
+        // Downsample the sweep to ~20 points.
+        let step = (alloc.sweep.len() / 20).max(1);
+        for (i, pt) in alloc.sweep.iter().enumerate() {
+            if i % step == 0 || i + 1 == alloc.sweep.len() {
+                println!("| {:.1}% | {:.4} | {:.4} |", pt.coverage * 100.0, pt.auc, pt.accuracy);
+            }
+        }
+        // Shape check: AUC at 40% coverage should be within ~0.02 of baseline.
+        if let Some(pt) = alloc.sweep.iter().find(|p| p.coverage >= 0.4) {
+            println!(
+                "  → at {:.0}% coverage: ΔAUC = {:.4} (paper: 'very slight decline in the first 40%')\n",
+                pt.coverage * 100.0,
+                alloc.stage2_auc - pt.auc
+            );
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Hot-path microbenchmarks — the §Perf working set.
+//!
+//! Measures every layer of the request path in isolation:
+//!   L3 embedded: combined-bin lookup, full stage-1 evaluate;
+//!   L3 native:   GBDT predict_one;
+//!   RPC:         loopback round trip (netsim OFF) at several batch sizes;
+//!   L1/L2 PJRT:  second-stage artifact execution per batch variant.
+//!
+//! Run: `cargo bench --bench hotpath_microbench [-- --quick]`
+
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::gbdt::{self, GbdtParams};
+use lrwbins::harness;
+use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams, ServingTables};
+use lrwbins::rpc::netsim::{NetSim, NetSimConfig};
+use lrwbins::rpc::server::{BatcherConfig, NativeBackend, RpcServer};
+use lrwbins::rpc::RpcClient;
+use lrwbins::runtime::{EngineWorker, ForestParams, Graph};
+use lrwbins::telemetry::ServeMetrics;
+use lrwbins::util::bench::{quick_requested, Bench};
+use std::sync::Arc;
+
+fn main() {
+    let quick = quick_requested();
+    let mut bench = Bench::new().quick(quick);
+
+    // --- models ---------------------------------------------------------
+    let spec = datagen::preset("aci").unwrap().with_rows(12_000);
+    let data = datagen::generate(&spec, 3);
+    let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+    let first = LrwBinsModel::train(
+        &data,
+        &ranking.order,
+        &LrwBinsParams {
+            b: 3,
+            n_bin_features: 5,
+            n_infer_features: 10,
+            ..Default::default()
+        },
+    );
+    let tables = ServingTables::from_model(&first);
+    let second = gbdt::train(&data, &GbdtParams::default());
+    let rows: Vec<Vec<f32>> = (0..256).map(|r| data.row(r)).collect();
+
+    // --- L3 embedded hot path --------------------------------------------
+    let mut i = 0usize;
+    bench.run("embedded bin_of (ns/row)", || {
+        let row = &rows[i & 255];
+        std::hint::black_box(tables.bin_of(row));
+        i += 1;
+    });
+    let mut i = 0usize;
+    bench.run("embedded stage1 evaluate (ns/row)", || {
+        let row = &rows[i & 255];
+        std::hint::black_box(tables.evaluate(row));
+        i += 1;
+    });
+    let mut i = 0usize;
+    bench.run("native GBDT predict_one", || {
+        let row = &rows[i & 255];
+        std::hint::black_box(second.predict_one(row));
+        i += 1;
+    });
+
+    // --- RPC round trip (netsim OFF → pure stack cost) --------------------
+    let metrics = Arc::new(ServeMetrics::new());
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(NativeBackend { model: second.clone() }),
+        Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+        BatcherConfig::default(),
+        metrics,
+    )
+    .unwrap();
+    let client = RpcClient::connect(server.addr).unwrap();
+    let nf = data.n_features();
+    for &batch in &[1usize, 16, 128] {
+        let flat: Vec<f32> = rows.iter().take(batch).flatten().copied().collect();
+        bench.run_items(&format!("RPC loopback roundtrip (batch={batch})"), batch as u64, || {
+            std::hint::black_box(client.predict(&flat, nf).unwrap());
+        });
+    }
+
+    // --- PJRT second-stage artifact ---------------------------------------
+    let dir = harness::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let shapes_depth = 6; // manifest default
+        let ft = second.to_forest_tensors_at(shapes_depth);
+        let worker = EngineWorker::spawn(
+            &dir,
+            vec![Graph::SecondStage],
+            Some(ForestParams::from_tensors(&ft, &manifest_shapes(&dir)).unwrap()),
+            None,
+        )
+        .expect("engine");
+        let f_max = worker.f_max;
+        for &batch in &[1usize, 16, 128, 1024] {
+            let mut flat = vec![0f32; batch * f_max];
+            for (i, row) in rows.iter().cycle().take(batch).enumerate() {
+                flat[i * f_max..i * f_max + row.len()].copy_from_slice(row);
+            }
+            bench.run_items(
+                &format!("PJRT second_stage execute (batch={batch})"),
+                batch as u64,
+                || {
+                    std::hint::black_box(worker.second_stage(flat.clone(), batch).unwrap());
+                },
+            );
+        }
+    } else {
+        eprintln!("(skipping PJRT benches — run `make artifacts`)");
+    }
+
+    println!("{}", bench.report("Hot-path microbenchmarks"));
+}
+
+fn manifest_shapes(dir: &std::path::Path) -> lrwbins::runtime::Shapes {
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let j = lrwbins::util::json::Json::parse(&text).unwrap();
+    let s = j.get("shapes").unwrap();
+    let g = |k: &str| s.get(k).and_then(lrwbins::util::json::Json::as_usize).unwrap();
+    lrwbins::runtime::Shapes {
+        f_max: g("f_max"),
+        nb_max: g("nb_max"),
+        q_max: g("q_max"),
+        nf_max: g("nf_max"),
+        bins_max: g("bins_max"),
+        t_max: g("t_max"),
+        depth: g("depth"),
+    }
+}

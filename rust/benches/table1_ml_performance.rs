@@ -1,0 +1,108 @@
+//! Table 1 — LR vs LRwBins vs GBDT (ROC AUC + accuracy) across all 11
+//! dataset clones, mean ± std over repeated seeds.
+//!
+//! Run: `cargo bench --bench table1_ml_performance [-- --quick] [-- --seeds N]`
+//! Paper-reference values are printed alongside for comparison; match the
+//! *ordering and gap sizes*, not the absolute numbers (synthetic clones).
+
+use lrwbins::automl::{shape_search, ShapeSpace};
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::gbdt::{self, GbdtParams};
+use lrwbins::lr;
+use lrwbins::lrwbins::LrwBinsModel;
+use lrwbins::metrics::{accuracy, fmt_pm, mean_std, roc_auc};
+use lrwbins::tabular::split;
+use lrwbins::util::bench::{bench_arg, quick_requested};
+use lrwbins::util::rng::Rng;
+
+/// Paper Table 1 reference (ROC AUC): (LR, LRwBins, XGB).
+const PAPER_AUC: &[(&str, f64, f64, f64)] = &[
+    ("case1", 0.830, 0.845, 0.866),
+    ("case2", 0.712, 0.734, 0.739),
+    ("case3", 0.580, 0.615, 0.654),
+    ("case4", 0.565, 0.577, 0.602),
+    ("aci", 0.902, 0.903, 0.922),
+    ("blastchar", 0.839, 0.839, 0.839),
+    ("shrutime", 0.763, 0.845, 0.861),
+    ("patient", 0.860, 0.872, 0.899),
+    ("banknote", 0.879, 0.938, 0.989),
+    ("jasmine", 0.843, 0.855, 0.867),
+    ("higgs", 0.681, 0.766, 0.792),
+];
+
+fn main() {
+    let quick = quick_requested();
+    let seeds: usize = bench_arg("seeds")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 2 } else { 3 });
+    let row_cap: usize = bench_arg("rows")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 8_000 } else { 15_000 });
+
+    println!("# Table 1 — LR vs LRwBins vs GBDT ({seeds} seeds, ≤{row_cap} rows/dataset)\n");
+    println!("| dataset | LR auc | LRwBins auc | GBDT auc | (paper: LR/LRwB/XGB) | LR acc | LRwBins acc | GBDT acc |");
+    println!("|---|---|---|---|---|---|---|---|");
+
+    for &(name, p_lr, p_lrw, p_xgb) in PAPER_AUC {
+        let mut spec = datagen::preset(name).unwrap();
+        if spec.rows > row_cap {
+            spec = spec.with_rows(row_cap);
+        }
+        let mut auc = (vec![], vec![], vec![]);
+        let mut acc = (vec![], vec![], vec![]);
+        for seed in 0..seeds as u64 {
+            let data = datagen::generate(&spec, seed + 1);
+            let mut rng = Rng::new(seed ^ 0xAA);
+            let s = split::stratified_split(&data, 0.25, &mut rng);
+            let ranking = rank_features(&s.train, RankMethod::GbdtGain, seed);
+
+            // LR on the top-20 features (paper: LR uses top-n important).
+            let n_inf = 20.min(data.n_features());
+            let topn = ranking.top(n_inf);
+            let norm = lrwbins::tabular::stats::Normalizer::fit(&s.train);
+            let lrm = lr::fit_dataset(&norm.apply(&s.train), &topn, &Default::default());
+            let lr_p = lr::predict_dataset(&lrm, &norm.apply(&s.test), &topn);
+
+            // LRwBins: shape-searched (b, n) on an inner validation split.
+            let mut rng2 = Rng::new(seed ^ 0xBB);
+            let inner = split::train_test_split(&s.train, 0.25, &mut rng2);
+            let space = ShapeSpace {
+                bs: vec![2, 3],
+                ns: vec![2, 3, 4, 5, 6, 7],
+                n_infer_features: n_inf,
+                max_total_bins: 1 << 13,
+                screen_rows: inner.train.n_rows(),
+            };
+            let shape = shape_search(&inner.train, &inner.test, &ranking, &space);
+            let lrw = LrwBinsModel::train(&s.train, &ranking.order, &shape.best);
+            let lrw_p = lrw.predict_proba(&s.test);
+
+            // GBDT on ALL features (paper: XGB always uses all).
+            let gparams = if quick { GbdtParams::quick() } else { GbdtParams::default() };
+            let gb = gbdt::train(&s.train, &gparams);
+            let gb_p = gb.predict_proba(&s.test);
+
+            auc.0.push(roc_auc(&lr_p, &s.test.labels));
+            auc.1.push(roc_auc(&lrw_p, &s.test.labels));
+            auc.2.push(roc_auc(&gb_p, &s.test.labels));
+            acc.0.push(accuracy(&lr_p, &s.test.labels));
+            acc.1.push(accuracy(&lrw_p, &s.test.labels));
+            acc.2.push(accuracy(&gb_p, &s.test.labels));
+        }
+        let pm = |xs: &[f64]| {
+            let (m, s) = mean_std(xs);
+            fmt_pm(m, s)
+        };
+        println!(
+            "| {name} | {} | {} | {} | ({p_lr:.3}/{p_lrw:.3}/{p_xgb:.3}) | {} | {} | {} |",
+            pm(&auc.0),
+            pm(&auc.1),
+            pm(&auc.2),
+            pm(&acc.0),
+            pm(&acc.1),
+            pm(&acc.2),
+        );
+    }
+    println!("\nExpected shape: LR ≤ LRwBins ≤ GBDT on every row (paper's central ordering).");
+}

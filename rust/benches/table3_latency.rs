@@ -1,0 +1,115 @@
+//! Table 3 — serving latency: first-stage, RPC, multistage, and projected
+//! multistage, over inference batches of 10×/100×/1000×/10000×.
+//!
+//! Uses the LIVE stack (PJRT backend over TCP with simulated datacenter
+//! latency, embedded stage-1 coordinator) at the paper's ~50% coverage
+//! regime. The paper's claims are ratios: first stage ≈ 5× faster than RPC,
+//! multistage ≈ 1.3× faster than pure RPC, projected ≈ 1.4×.
+//!
+//! Run: `make artifacts && cargo bench --bench table3_latency [-- --quick]`
+
+use lrwbins::coordinator::{FetchSim, Mode};
+use lrwbins::harness::{self, StackConfig};
+use lrwbins::util::bench::{bench_arg, fmt_ns, quick_requested};
+use std::time::Instant;
+
+fn main() {
+    let quick = quick_requested();
+    let mut cfg = StackConfig::quick("aci", if quick { 12_000 } else { 20_000 });
+    // Default netsim (~250µs one-way lognormal) — the "datacenter hop".
+    let mut stack = match harness::build(&cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("PJRT stack unavailable ({e:#}); using native backend");
+            cfg.backend = "native".into();
+            harness::build(&cfg).expect("native stack")
+        }
+    };
+    // Pin the paper's operating point: stage 1 serves ~50% of inferences.
+    let mut val_rows = Vec::new();
+    let val = {
+        // Reuse a slice of test data as the routing set (frozen after).
+        let n = stack.test.n_rows() / 2;
+        for r in 0..n {
+            val_rows.push(r);
+        }
+        stack.test.take_rows(&val_rows)
+    };
+    let alloc = lrwbins::allocation::route_at_coverage(
+        &mut stack.pipeline.first,
+        &stack.pipeline.second,
+        &val,
+        0.5,
+    );
+    stack.coordinator.tables = lrwbins::lrwbins::ServingTables::from_model(&stack.pipeline.first);
+    // Feature-fetch cost model: calibrated so the full stage-1 attempt costs
+    // ≈0.2× of the RPC path, the paper's Table-3 regime (fetching dominates
+    // first-stage latency in the production system).
+    let fetch_us: f64 = bench_arg("fetch-us").and_then(|s| s.parse().ok()).unwrap_or(45.0);
+    stack.coordinator.fetch = Some(FetchSim { per_feature_us: fetch_us });
+    let coverage = alloc.coverage;
+    println!(
+        "# Table 3 — latency (backend={}, pinned coverage {:.1}%, fetch {:.0}µs/feature)\n",
+        if stack.pjrt { "pjrt" } else { "native" },
+        coverage * 100.0,
+        fetch_us
+    );
+
+    let batches: &[usize] = if quick {
+        &[10, 100, 1000]
+    } else {
+        &[10, 100, 1000, 10_000]
+    };
+    println!("| inferences | 1st-stage | 2nd-stage (RPC) | multistage | projected multistage | RPC/multistage speedup |");
+    println!("|---|---|---|---|---|---|");
+
+    let mut row = Vec::new();
+    let mut measured_cov = 0.0;
+    for &n in batches {
+        let n_avail = stack.test.n_rows();
+        // Per-mode mean per-inference latency.
+        let mut means = [0.0f64; 3];
+        for (mi, mode) in [Mode::AlwaysStage1, Mode::AlwaysRpc, Mode::Multistage]
+            .iter()
+            .enumerate()
+        {
+            stack.coordinator.mode = *mode;
+            // Warm up the path.
+            for r in 0..20.min(n_avail) {
+                stack.test.row_into(r, &mut row);
+                let _ = stack.coordinator.predict(&row);
+            }
+            let t0 = Instant::now();
+            let mut hits = 0usize;
+            for i in 0..n {
+                stack.test.row_into(i % n_avail, &mut row);
+                if let Ok((_, lrwbins::coordinator::Served::Stage1)) =
+                    stack.coordinator.predict(&row)
+                {
+                    hits += 1;
+                }
+            }
+            means[mi] = t0.elapsed().as_nanos() as f64 / n as f64;
+            if matches!(mode, Mode::Multistage) {
+                measured_cov = hits as f64 / n as f64;
+            }
+        }
+        let [t1, trpc, tmulti] = means;
+        // Paper's projection: cov·t1 + (1-cov)·(t1 + trpc).
+        let proj = measured_cov * t1 + (1.0 - measured_cov) * (t1 + trpc);
+        println!(
+            "| {n}x | {} | {} | {} | {} | {:.2}x |",
+            fmt_ns(t1),
+            fmt_ns(trpc),
+            fmt_ns(tmulti),
+            fmt_ns(proj),
+            trpc / tmulti
+        );
+    }
+    println!(
+        "\nmeasured multistage coverage on workload: {:.1}%",
+        measured_cov * 100.0
+    );
+    println!("paper's shape: stage1 ≈ 5× faster than RPC; multistage ≈ 1.3×, projected ≈ 1.4× faster than RPC.");
+    println!("\nresource accounting (multistage run):\n{}", stack.metrics.report());
+}

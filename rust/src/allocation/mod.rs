@@ -1,0 +1,419 @@
+//! Bin allocation between stages — Algorithm 2 (`FilterCombinedBins`).
+//!
+//! On a validation set, evaluate both models per combined bin, sort bins by
+//! how much the second stage beats the first, then scan cumulative prefixes:
+//! each prefix is a candidate "stage-1 serves these bins" split. The chosen
+//! split maximizes coverage subject to a metric-loss tolerance vs. pure
+//! second-stage inference. The full scan *is* Figure 7's coverage curve; the
+//! per-bin table is Figure 3's bar data.
+
+use crate::metrics::{accuracy, roc_auc};
+use crate::tabular::Dataset;
+use std::collections::{HashMap, HashSet};
+
+/// Metric used to rank bins and score hybrids (paper: "using the accuracy
+/// to determine the combined bin separation gives the best results").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    RocAuc,
+}
+
+impl Metric {
+    pub fn eval(&self, scores: &[f32], labels: &[f32]) -> f64 {
+        match self {
+            Metric::Accuracy => accuracy(scores, labels),
+            Metric::RocAuc => roc_auc(scores, labels),
+        }
+    }
+}
+
+/// Per-bin evaluation row (Figure 3 bar).
+#[derive(Clone, Debug)]
+pub struct BinReport {
+    pub bin: u32,
+    pub rows: usize,
+    pub stage1_metric: f64,
+    pub stage2_metric: f64,
+    /// stage2 − stage1 (sort key; small/negative ⇒ stage 1 competitive).
+    pub gap: f64,
+}
+
+/// One point of the coverage sweep (Figure 7 sample).
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Fraction of validation rows served by stage 1.
+    pub coverage: f64,
+    /// Hybrid metrics over the WHOLE validation set.
+    pub auc: f64,
+    pub accuracy: f64,
+    /// Number of bins in the stage-1 prefix.
+    pub bins: usize,
+}
+
+/// Output of Algorithm 2.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// Bins assigned to stage 1 (`W_filtered` keys).
+    pub stage1_bins: HashSet<u32>,
+    /// Achieved validation coverage.
+    pub coverage: f64,
+    /// Hybrid metrics at the chosen split.
+    pub auc: f64,
+    pub accuracy: f64,
+    /// Pure second-stage metrics (the baseline the tolerance is against).
+    pub stage2_auc: f64,
+    pub stage2_accuracy: f64,
+    /// Per-bin report (Figure 3).
+    pub bins: Vec<BinReport>,
+    /// Full sweep (Figure 7).
+    pub sweep: Vec<SweepPoint>,
+}
+
+/// Inputs: per-validation-row bin id and both models' scores.
+pub struct ValScores<'a> {
+    pub bin_ids: &'a [u32],
+    pub stage1: &'a [f32],
+    pub stage2: &'a [f32],
+    pub labels: &'a [f32],
+}
+
+/// Run Algorithm 2 + the coverage sweep.
+///
+/// `tolerance` is the admissible drop of `metric` vs. pure stage-2 (paper
+/// Table 2 uses per-dataset "small tolerance"); bins are admitted in gap
+/// order while the hybrid stays within tolerance.
+pub fn allocate(v: &ValScores, metric: Metric, tolerance: f64) -> Allocation {
+    let n = v.labels.len();
+    assert!(n > 0 && v.bin_ids.len() == n && v.stage1.len() == n && v.stage2.len() == n);
+
+    // Group rows by bin.
+    let mut groups: HashMap<u32, Vec<usize>> = HashMap::new();
+    for (r, &b) in v.bin_ids.iter().enumerate() {
+        groups.entry(b).or_default().push(r);
+    }
+
+    // Per-bin metrics.
+    let mut bins: Vec<BinReport> = groups
+        .iter()
+        .map(|(&bin, rows)| {
+            let s1: Vec<f32> = rows.iter().map(|&r| v.stage1[r]).collect();
+            let s2: Vec<f32> = rows.iter().map(|&r| v.stage2[r]).collect();
+            let y: Vec<f32> = rows.iter().map(|&r| v.labels[r]).collect();
+            let m1 = metric.eval(&s1, &y);
+            let m2 = metric.eval(&s2, &y);
+            BinReport {
+                bin,
+                rows: rows.len(),
+                stage1_metric: m1,
+                stage2_metric: m2,
+                gap: m2 - m1,
+            }
+        })
+        .collect();
+    // Sort by gap ascending (stage-1-competitive bins first); tie-break on
+    // bin id for determinism.
+    bins.sort_by(|a, b| {
+        a.gap
+            .partial_cmp(&b.gap)
+            .unwrap()
+            .then(a.bin.cmp(&b.bin))
+    });
+
+    // Cumulative sweep: hybrid scores start as pure stage-2 and flip bins
+    // to stage-1 one prefix step at a time.
+    let mut hybrid: Vec<f32> = v.stage2.to_vec();
+    let stage2_auc = roc_auc(&hybrid, v.labels);
+    let stage2_accuracy = accuracy(&hybrid, v.labels);
+
+    let mut sweep = Vec::with_capacity(bins.len() + 1);
+    sweep.push(SweepPoint {
+        coverage: 0.0,
+        auc: stage2_auc,
+        accuracy: stage2_accuracy,
+        bins: 0,
+    });
+
+    let mut covered = 0usize;
+    for (k, br) in bins.iter().enumerate() {
+        for &r in &groups[&br.bin] {
+            hybrid[r] = v.stage1[r];
+        }
+        covered += br.rows;
+        sweep.push(SweepPoint {
+            coverage: covered as f64 / n as f64,
+            auc: roc_auc(&hybrid, v.labels),
+            accuracy: accuracy(&hybrid, v.labels),
+            bins: k + 1,
+        });
+    }
+
+    // Choose the largest prefix within tolerance of the pure stage-2 metric.
+    let base = match metric {
+        Metric::Accuracy => stage2_accuracy,
+        Metric::RocAuc => stage2_auc,
+    };
+    let mut chosen = 0usize; // index into sweep (0 = no stage-1)
+    for (i, pt) in sweep.iter().enumerate() {
+        let m = match metric {
+            Metric::Accuracy => pt.accuracy,
+            Metric::RocAuc => pt.auc,
+        };
+        if base - m <= tolerance {
+            chosen = i;
+        }
+        // Note: no break — the curve can dip then recover (paper observes
+        // marginal *improvements* at small coverage on some datasets).
+    }
+
+    let stage1_bins: HashSet<u32> = bins[..chosen].iter().map(|b| b.bin).collect();
+    let pt = &sweep[chosen];
+    Allocation {
+        stage1_bins,
+        coverage: pt.coverage,
+        auc: pt.auc,
+        accuracy: pt.accuracy,
+        stage2_auc,
+        stage2_accuracy,
+        bins,
+        sweep,
+    }
+}
+
+/// Convenience: run Algorithm 2 end-to-end for a trained LRwBins model and
+/// a second-stage model on a validation dataset, and apply the route.
+pub fn allocate_and_route(
+    model: &mut crate::lrwbins::LrwBinsModel,
+    second: &crate::gbdt::GbdtModel,
+    val: &Dataset,
+    metric: Metric,
+    tolerance: f64,
+) -> Allocation {
+    let norm = model.normalizer.apply(val);
+    let bin_ids = model.binner.bin_dataset(&norm);
+    let stage1 = model.predict_proba(val);
+    let stage2 = second.predict_proba(val);
+    let alloc = allocate(
+        &ValScores {
+            bin_ids: &bin_ids,
+            stage1: &stage1,
+            stage2: &stage2,
+            labels: &val.labels,
+        },
+        metric,
+        tolerance,
+    );
+    model.set_route(alloc.stage1_bins.clone());
+    alloc
+}
+
+/// Route at (nearest) target coverage, ignoring tolerance — used by the
+/// latency benches to pin the paper's "50% of inferences" operating point.
+pub fn route_at_coverage(
+    model: &mut crate::lrwbins::LrwBinsModel,
+    second: &crate::gbdt::GbdtModel,
+    val: &Dataset,
+    target: f64,
+) -> Allocation {
+    let norm = model.normalizer.apply(val);
+    let bin_ids = model.binner.bin_dataset(&norm);
+    let stage1 = model.predict_proba(val);
+    let stage2 = second.predict_proba(val);
+    let mut alloc = allocate(
+        &ValScores {
+            bin_ids: &bin_ids,
+            stage1: &stage1,
+            stage2: &stage2,
+            labels: &val.labels,
+        },
+        Metric::Accuracy,
+        f64::INFINITY,
+    );
+    // Pick the sweep prefix nearest the target coverage.
+    let k = alloc
+        .sweep
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            (a.coverage - target)
+                .abs()
+                .partial_cmp(&(b.coverage - target).abs())
+                .unwrap()
+        })
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    alloc.stage1_bins = alloc.bins[..k].iter().map(|b| b.bin).collect();
+    let pt = alloc.sweep[k].clone();
+    alloc.coverage = pt.coverage;
+    alloc.auc = pt.auc;
+    alloc.accuracy = pt.accuracy;
+    model.set_route(alloc.stage1_bins.clone());
+    alloc
+}
+
+/// Correlation between global and bin-local feature importance (Figure 3's
+/// bar colors). Pearson correlation of gain vectors.
+pub fn importance_correlation(global: &[f64], local: &[f64]) -> f64 {
+    assert_eq!(global.len(), local.len());
+    let n = global.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mg = global.iter().sum::<f64>() / n;
+    let ml = local.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vg = 0.0;
+    let mut vl = 0.0;
+    for (g, l) in global.iter().zip(local) {
+        cov += (g - mg) * (l - ml);
+        vg += (g - mg) * (g - mg);
+        vl += (l - ml) * (l - ml);
+    }
+    if vg <= 0.0 || vl <= 0.0 {
+        return 0.0;
+    }
+    cov / (vg.sqrt() * vl.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Synthetic validation world with 4 bins: in bins 0/1 both models are
+    /// equally good; in bins 2/3 stage 2 is much better.
+    fn make_scores(
+        n_per_bin: usize,
+        seed: u64,
+    ) -> (Vec<u32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut bins = Vec::new();
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        let mut y = Vec::new();
+        for bin in 0..4u32 {
+            for _ in 0..n_per_bin {
+                let label = rng.bool(0.5) as u8 as f32;
+                // stage 2: always strong.
+                let p2 = if label > 0.5 {
+                    0.6 + 0.39 * rng.f32()
+                } else {
+                    0.01 + 0.39 * rng.f32()
+                };
+                // stage 1: strong in bins 0/1, random in bins 2/3.
+                let p1 = if bin < 2 {
+                    p2.min(0.99) + 0.005 * rng.f32()
+                } else {
+                    rng.f32()
+                };
+                bins.push(bin);
+                s1.push(p1);
+                s2.push(p2);
+                y.push(label);
+            }
+        }
+        (bins, s1, s2, y)
+    }
+
+    #[test]
+    fn picks_competitive_bins_first() {
+        let (bins, s1, s2, y) = make_scores(400, 1);
+        let alloc = allocate(
+            &ValScores { bin_ids: &bins, stage1: &s1, stage2: &s2, labels: &y },
+            Metric::Accuracy,
+            0.005,
+        );
+        // Bins 0 and 1 should be chosen; 2 and 3 not.
+        assert!(alloc.stage1_bins.contains(&0), "{:?}", alloc.stage1_bins);
+        assert!(alloc.stage1_bins.contains(&1));
+        assert!(!alloc.stage1_bins.contains(&2));
+        assert!(!alloc.stage1_bins.contains(&3));
+        assert!((alloc.coverage - 0.5).abs() < 1e-9);
+        // Metric within tolerance.
+        assert!(alloc.stage2_accuracy - alloc.accuracy <= 0.005 + 1e-12);
+    }
+
+    #[test]
+    fn zero_tolerance_still_allows_harmless_bins() {
+        let (bins, s1, s2, y) = make_scores(400, 2);
+        let alloc = allocate(
+            &ValScores { bin_ids: &bins, stage1: &s1, stage2: &s2, labels: &y },
+            Metric::Accuracy,
+            0.0,
+        );
+        // stage1 == stage2 in bins 0/1 ⇒ accuracy unchanged there.
+        assert!(alloc.coverage >= 0.49, "coverage={}", alloc.coverage);
+    }
+
+    #[test]
+    fn huge_tolerance_covers_everything() {
+        let (bins, s1, s2, y) = make_scores(200, 3);
+        let alloc = allocate(
+            &ValScores { bin_ids: &bins, stage1: &s1, stage2: &s2, labels: &y },
+            Metric::RocAuc,
+            1.0,
+        );
+        assert!((alloc.coverage - 1.0).abs() < 1e-9);
+        assert_eq!(alloc.stage1_bins.len(), 4);
+    }
+
+    #[test]
+    fn sweep_monotone_coverage_and_conservation() {
+        let (bins, s1, s2, y) = make_scores(150, 4);
+        let alloc = allocate(
+            &ValScores { bin_ids: &bins, stage1: &s1, stage2: &s2, labels: &y },
+            Metric::Accuracy,
+            0.01,
+        );
+        assert_eq!(alloc.sweep.len(), 5); // 0 + 4 bins
+        for w in alloc.sweep.windows(2) {
+            assert!(w[1].coverage > w[0].coverage);
+        }
+        assert!((alloc.sweep.last().unwrap().coverage - 1.0).abs() < 1e-9);
+        // Bin rows sum to n.
+        let total: usize = alloc.bins.iter().map(|b| b.rows).sum();
+        assert_eq!(total, y.len());
+    }
+
+    #[test]
+    fn gap_sorting_is_ascending() {
+        let (bins, s1, s2, y) = make_scores(100, 5);
+        let alloc = allocate(
+            &ValScores { bin_ids: &bins, stage1: &s1, stage2: &s2, labels: &y },
+            Metric::Accuracy,
+            0.01,
+        );
+        for w in alloc.bins.windows(2) {
+            assert!(w[0].gap <= w[1].gap);
+        }
+    }
+
+    #[test]
+    fn importance_correlation_bounds() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((importance_correlation(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [4.0, 3.0, 2.0, 1.0];
+        assert!((importance_correlation(&a, &c) + 1.0).abs() < 1e-12);
+        assert_eq!(importance_correlation(&[1.0], &[1.0]), 0.0);
+        assert_eq!(importance_correlation(&a, &[1.0, 1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn property_coverage_increases_with_tolerance() {
+        use crate::prop_assert;
+        crate::util::proptest::check(25, |g| {
+            let (bins, s1, s2, y) = make_scores(g.usize(50..150), g.usize(0..1000) as u64);
+            let v = ValScores { bin_ids: &bins, stage1: &s1, stage2: &s2, labels: &y };
+            let lo = allocate(&v, Metric::Accuracy, 0.001);
+            let hi = allocate(&v, Metric::Accuracy, 0.05);
+            prop_assert!(
+                hi.coverage >= lo.coverage - 1e-12,
+                "hi={} lo={}",
+                hi.coverage,
+                lo.coverage
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,433 @@
+//! AutoML — "crucial to the success of multistage inference" (paper §4).
+//!
+//! Three tasks, exactly as the paper enumerates:
+//! 1. **Shape search**: choose `(b, n)` — quantiles per feature and number
+//!    of binning features — by validation ROC AUC (Figure 4's grid).
+//! 2. **Per-bin model tuning**: per-combined-bin L2 strength, falling back
+//!    to the bin prior when LR does not validate better.
+//! 3. **Stage balancing**: pick the Algorithm-2 tolerance/coverage point.
+//!
+//! Search is a seeded grid with successive-halving on rows for the expensive
+//! configs (full data only for finalists).
+
+use crate::allocation::{self, Allocation, Metric};
+use crate::features::Ranking;
+use crate::gbdt::GbdtModel;
+use crate::lr::LrParams;
+use crate::lrwbins::{LrwBinsModel, LrwBinsParams};
+use crate::metrics::roc_auc;
+use crate::tabular::Dataset;
+
+/// One evaluated cell of the (b, n) grid — Figure 4 data point.
+#[derive(Clone, Debug)]
+pub struct ShapeCell {
+    pub b: usize,
+    pub n_bin_features: usize,
+    pub val_auc: f64,
+    pub total_bins: u32,
+}
+
+/// Result of the shape search.
+#[derive(Clone, Debug)]
+pub struct ShapeSearch {
+    pub cells: Vec<ShapeCell>,
+    pub best: LrwBinsParams,
+}
+
+/// Search space bounds.
+#[derive(Clone, Debug)]
+pub struct ShapeSpace {
+    pub bs: Vec<usize>,
+    pub ns: Vec<usize>,
+    pub n_infer_features: usize,
+    /// Skip configs whose combined-bin space exceeds this.
+    pub max_total_bins: u32,
+    /// Rows used for the cheap screening pass (full data for finalists).
+    pub screen_rows: usize,
+}
+
+impl Default for ShapeSpace {
+    fn default() -> Self {
+        ShapeSpace {
+            bs: vec![2, 3, 4, 5],
+            ns: vec![3, 4, 5, 6, 7, 8],
+            n_infer_features: 20,
+            max_total_bins: 1 << 14,
+            screen_rows: 30_000,
+        }
+    }
+}
+
+/// AutoML task (i): grid over (b, n) with successive halving.
+pub fn shape_search(
+    train: &Dataset,
+    val: &Dataset,
+    ranking: &Ranking,
+    space: &ShapeSpace,
+) -> ShapeSearch {
+    let screen_train = train.head(space.screen_rows);
+    let mut cells = Vec::new();
+
+    for &b in &space.bs {
+        for &n in &space.ns {
+            let n = n.min(ranking.order.len());
+            // Pre-check bin-space size cheaply: upper bound b^n adjusted for
+            // boolean/categorical types.
+            let mut upper: u64 = 1;
+            for &f in &ranking.order[..n] {
+                let per = match train.schema.types[f] {
+                    crate::tabular::ColType::Boolean => 2,
+                    crate::tabular::ColType::Categorical { cardinality } => cardinality as u64,
+                    crate::tabular::ColType::Numeric => b as u64,
+                };
+                upper = upper.saturating_mul(per);
+            }
+            if upper > space.max_total_bins as u64 {
+                continue;
+            }
+            let params = LrwBinsParams {
+                b,
+                n_bin_features: n,
+                n_infer_features: space.n_infer_features.min(ranking.order.len()),
+                ..Default::default()
+            };
+            let model = LrwBinsModel::train(&screen_train, &ranking.order, &params);
+            let auc = roc_auc(&model.predict_proba(val), &val.labels);
+            cells.push(ShapeCell {
+                b,
+                n_bin_features: n,
+                val_auc: auc,
+                total_bins: model.binner.total_bins,
+            });
+        }
+    }
+    assert!(!cells.is_empty(), "shape search space exhausted (all too big)");
+
+    // Finalists: top 3 on screening data, re-evaluated on full train.
+    let mut order: Vec<usize> = (0..cells.len()).collect();
+    order.sort_by(|&a, &z| cells[z].val_auc.partial_cmp(&cells[a].val_auc).unwrap());
+    let finalists = &order[..order.len().min(3)];
+
+    let mut best_idx = finalists[0];
+    if screen_train.n_rows() < train.n_rows() {
+        let mut best_auc = f64::NEG_INFINITY;
+        for &i in finalists {
+            let params = LrwBinsParams {
+                b: cells[i].b,
+                n_bin_features: cells[i].n_bin_features,
+                n_infer_features: space.n_infer_features.min(ranking.order.len()),
+                ..Default::default()
+            };
+            let model = LrwBinsModel::train(train, &ranking.order, &params);
+            let auc = roc_auc(&model.predict_proba(val), &val.labels);
+            if auc > best_auc {
+                best_auc = auc;
+                best_idx = i;
+            }
+        }
+    }
+
+    let best = LrwBinsParams {
+        b: cells[best_idx].b,
+        n_bin_features: cells[best_idx].n_bin_features,
+        n_infer_features: space.n_infer_features.min(ranking.order.len()),
+        ..Default::default()
+    };
+    ShapeSearch { cells, best }
+}
+
+/// AutoML task (ii): per-bin L2 tuning. Retrains each bin's LR at several
+/// regularization strengths and keeps the best by validation log-loss on
+/// that bin; falls back to the prior when nothing beats it.
+pub fn tune_per_bin(
+    model: &mut LrwBinsModel,
+    train: &Dataset,
+    val: &Dataset,
+    l2_grid: &[f64],
+) {
+    let norm_train = model.normalizer.apply(train);
+    let norm_val = model.normalizer.apply(val);
+    let train_ids = model.binner.bin_dataset(&norm_train);
+    let val_ids = model.binner.bin_dataset(&norm_val);
+
+    // Group validation rows per bin.
+    let mut val_groups: std::collections::HashMap<u32, Vec<usize>> = Default::default();
+    for (r, &b) in val_ids.iter().enumerate() {
+        val_groups.entry(b).or_default().push(r);
+    }
+    let mut train_groups: std::collections::HashMap<u32, Vec<usize>> = Default::default();
+    for (r, &b) in train_ids.iter().enumerate() {
+        train_groups.entry(b).or_default().push(r);
+    }
+
+    let infer = model.infer_features.clone();
+    let bins: Vec<u32> = model.weights.keys().copied().collect();
+    for bin in bins {
+        let Some(vrows) = val_groups.get(&bin) else { continue };
+        if vrows.len() < 10 {
+            continue;
+        }
+        let Some(trows) = train_groups.get(&bin) else { continue };
+        if trows.len() < 20 {
+            continue;
+        }
+        let sub_train = norm_train.take_rows(trows);
+        let sub_val = norm_val.take_rows(vrows);
+        let mut best = model.weights[&bin].clone();
+        let mut best_ll = {
+            let preds = crate::lr::predict_dataset(&best, &sub_val, &infer);
+            crate::metrics::log_loss(&preds, &sub_val.labels)
+        };
+        for &l2 in l2_grid {
+            let cand = crate::lr::fit_dataset(
+                &sub_train,
+                &infer,
+                &LrParams { l2, ..Default::default() },
+            );
+            let preds = crate::lr::predict_dataset(&cand, &sub_val, &infer);
+            let ll = crate::metrics::log_loss(&preds, &sub_val.labels);
+            if ll < best_ll {
+                best_ll = ll;
+                best = cand;
+            }
+        }
+        // Prior fallback.
+        let prior = crate::lr::LrModel::prior(sub_train.positive_rate(), infer.len());
+        let prior_ll = {
+            let preds = crate::lr::predict_dataset(&prior, &sub_val, &infer);
+            crate::metrics::log_loss(&preds, &sub_val.labels)
+        };
+        if prior_ll < best_ll {
+            best = prior;
+        }
+        model.weights.insert(bin, best);
+    }
+}
+
+/// AutoML task (iii): stage balancing — run Algorithm 2 at the requested
+/// tolerance (optionally trying to reach a coverage target by relaxing the
+/// tolerance up to `max_tolerance`).
+pub fn balance_stages(
+    model: &mut LrwBinsModel,
+    second: &GbdtModel,
+    val: &Dataset,
+    metric: Metric,
+    tolerance: f64,
+    coverage_target: Option<f64>,
+    max_tolerance: f64,
+) -> Allocation {
+    let mut tol = tolerance;
+    let mut alloc = allocation::allocate_and_route(model, second, val, metric, tol);
+    if let Some(target) = coverage_target {
+        while alloc.coverage < target && tol < max_tolerance {
+            tol = (tol * 2.0).min(max_tolerance);
+            alloc = allocation::allocate_and_route(model, second, val, metric, tol);
+            if tol >= max_tolerance {
+                break;
+            }
+        }
+    }
+    alloc
+}
+
+/// Full AutoML-configured multistage pipeline: rank → shape search → train →
+/// per-bin tune → second-stage train → balance. This is the one-call API
+/// the launcher and the examples use.
+pub struct Pipeline {
+    pub ranking: Ranking,
+    pub shape: ShapeSearch,
+    pub first: LrwBinsModel,
+    pub second: GbdtModel,
+    pub allocation: Allocation,
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub shape_space: ShapeSpace,
+    pub gbdt: crate::gbdt::GbdtParams,
+    pub metric: Metric,
+    pub tolerance: f64,
+    pub coverage_target: Option<f64>,
+    pub max_tolerance: f64,
+    pub per_bin_l2_grid: Vec<f64>,
+    pub rank_method: crate::features::RankMethod,
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            shape_space: ShapeSpace::default(),
+            gbdt: crate::gbdt::GbdtParams::default(),
+            metric: Metric::Accuracy,
+            tolerance: 0.002,
+            coverage_target: Some(0.5),
+            max_tolerance: 0.02,
+            per_bin_l2_grid: vec![0.1, 1.0, 10.0],
+            rank_method: crate::features::RankMethod::GbdtGain,
+            seed: 7,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Small/fast settings for tests and quick benches.
+    pub fn quick() -> Self {
+        PipelineConfig {
+            shape_space: ShapeSpace {
+                bs: vec![2, 3],
+                ns: vec![2, 3, 4],
+                n_infer_features: 8,
+                screen_rows: 5_000,
+                ..Default::default()
+            },
+            gbdt: crate::gbdt::GbdtParams::quick(),
+            per_bin_l2_grid: vec![1.0],
+            ..Default::default()
+        }
+    }
+}
+
+/// Run the full pipeline on a train/val pair.
+pub fn run_pipeline(train: &Dataset, val: &Dataset, cfg: &PipelineConfig) -> Pipeline {
+    let ranking = crate::features::rank_features(train, cfg.rank_method, cfg.seed);
+    let shape = shape_search(train, val, &ranking, &cfg.shape_space);
+    let mut first = LrwBinsModel::train(train, &ranking.order, &shape.best);
+    if !cfg.per_bin_l2_grid.is_empty() {
+        tune_per_bin(&mut first, train, val, &cfg.per_bin_l2_grid);
+    }
+    let second = crate::gbdt::train(train, &cfg.gbdt);
+    let allocation = balance_stages(
+        &mut first,
+        &second,
+        val,
+        cfg.metric,
+        cfg.tolerance,
+        cfg.coverage_target,
+        cfg.max_tolerance,
+    );
+    Pipeline {
+        ranking,
+        shape,
+        first,
+        second,
+        allocation,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tabular::{split, Schema};
+    use crate::util::rng::Rng;
+
+    fn world(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut d = Dataset::new(Schema::numeric(6));
+        for _ in 0..n {
+            let x: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+            let q = (x[0] > 0.0) as usize;
+            let z = if q == 1 {
+                2.0 * x[1] as f64 - x[2] as f64
+            } else {
+                -1.5 * x[1] as f64 + 2.0 * x[3] as f64
+            };
+            d.push_row(&x, rng.bool(crate::util::sigmoid(z)) as u8 as f32);
+        }
+        d
+    }
+
+    #[test]
+    fn pipeline_end_to_end() {
+        let d = world(8000, 1);
+        let mut rng = Rng::new(2);
+        let s = split::three_way_split(&d, (0.6, 0.2, 0.2), &mut rng);
+        let p = run_pipeline(&s.train, &s.val, &PipelineConfig::quick());
+
+        // Shape search produced a grid and a best config.
+        assert!(!p.shape.cells.is_empty());
+        assert!(p.shape.best.b >= 2);
+
+        // Allocation routes something and stays within tolerance bounds.
+        assert!(p.allocation.coverage > 0.0, "coverage={}", p.allocation.coverage);
+        // Hybrid on test beats chance.
+        let test_auc = {
+            let mut preds = Vec::new();
+            let mut row = Vec::new();
+            for r in 0..s.test.n_rows() {
+                s.test.row_into(r, &mut row);
+                let pr = match p.first.stage1(&row) {
+                    crate::lrwbins::Stage1::Hit(pr) => pr,
+                    crate::lrwbins::Stage1::Miss { .. } => p.second.predict_one(&row),
+                };
+                preds.push(pr);
+            }
+            crate::metrics::roc_auc(&preds, &s.test.labels)
+        };
+        assert!(test_auc > 0.65, "test_auc={test_auc}");
+    }
+
+    #[test]
+    fn shape_search_respects_bin_cap() {
+        let d = world(3000, 3);
+        let ranking = crate::features::rank_features(&d, crate::features::RankMethod::GbdtGain, 1);
+        let space = ShapeSpace {
+            bs: vec![5],
+            ns: vec![2, 8],
+            max_total_bins: 30, // 5^2=25 ok, 5^8 skipped
+            screen_rows: 2000,
+            n_infer_features: 6,
+        };
+        let s = shape_search(&d, &d, &ranking, &space);
+        assert!(s.cells.iter().all(|c| c.total_bins <= 30));
+        assert_eq!(s.best.b, 5);
+        assert_eq!(s.best.n_bin_features, 2);
+    }
+
+    #[test]
+    fn balance_relaxes_toward_target() {
+        let d = world(6000, 4);
+        let mut rng = Rng::new(5);
+        let s = split::three_way_split(&d, (0.6, 0.2, 0.2), &mut rng);
+        let ranking = crate::features::rank_features(&s.train, crate::features::RankMethod::GbdtGain, 1);
+        let params = LrwBinsParams {
+            b: 2,
+            n_bin_features: 3,
+            n_infer_features: 6,
+            ..Default::default()
+        };
+        let mut first = LrwBinsModel::train(&s.train, &ranking.order, &params);
+        let second = crate::gbdt::train(&s.train, &crate::gbdt::GbdtParams::quick());
+        let tight = balance_stages(&mut first, &second, &s.val, Metric::Accuracy, 1e-6, None, 1e-6);
+        let relaxed = balance_stages(
+            &mut first,
+            &second,
+            &s.val,
+            Metric::Accuracy,
+            1e-6,
+            Some(0.8),
+            0.05,
+        );
+        assert!(relaxed.coverage >= tight.coverage);
+    }
+
+    #[test]
+    fn per_bin_tuning_never_hurts_val_logloss() {
+        let d = world(5000, 6);
+        let mut rng = Rng::new(7);
+        let s = split::train_test_split(&d, 0.3, &mut rng);
+        let ranking = crate::features::rank_features(&s.train, crate::features::RankMethod::GbdtGain, 1);
+        let params = LrwBinsParams {
+            b: 2,
+            n_bin_features: 3,
+            n_infer_features: 6,
+            ..Default::default()
+        };
+        let mut m = LrwBinsModel::train(&s.train, &ranking.order, &params);
+        let before = crate::metrics::log_loss(&m.predict_proba(&s.test), &s.test.labels);
+        tune_per_bin(&mut m, &s.train, &s.test, &[0.1, 1.0, 10.0]);
+        let after = crate::metrics::log_loss(&m.predict_proba(&s.test), &s.test.labels);
+        assert!(after <= before + 1e-9, "before={before} after={after}");
+    }
+}

@@ -1,0 +1,175 @@
+//! Deployment configuration: JSON files + CLI overrides.
+//!
+//! A deployable framework needs a real config system; this one covers the
+//! three lifecycle stages — data generation, training, serving — with
+//! validated JSON round-trips (`util::json`, no serde offline).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Directory with AOT artifacts (`manifest.json` + *.hlo.txt).
+    pub artifacts_dir: PathBuf,
+    /// Stage-1 serving tables (JSON from `lrwbins::tables`).
+    pub tables_path: PathBuf,
+    /// Second-stage GBDT model (JSON from `gbdt`).
+    pub gbdt_path: PathBuf,
+    /// Bind address for the backend service.
+    pub bind: String,
+    /// Backend kind: "pjrt" (AOT artifact) or "native" (Rust GBDT).
+    pub backend: String,
+    /// Dynamic batcher.
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    pub workers: usize,
+    /// Simulated datacenter RTT (one way), microseconds; 0 disables.
+    pub netsim_base_us: f64,
+    pub netsim_sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            tables_path: PathBuf::from("data/model.tables.json"),
+            gbdt_path: PathBuf::from("data/model.gbdt.json"),
+            bind: "127.0.0.1:7171".into(),
+            backend: "pjrt".into(),
+            max_batch: 128,
+            max_wait_us: 200,
+            workers: 2,
+            netsim_base_us: 250.0,
+            netsim_sigma: 0.25,
+            seed: 7,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("artifacts_dir", Json::Str(self.artifacts_dir.display().to_string()));
+        j.set("tables_path", Json::Str(self.tables_path.display().to_string()));
+        j.set("gbdt_path", Json::Str(self.gbdt_path.display().to_string()));
+        j.set("bind", Json::Str(self.bind.clone()));
+        j.set("backend", Json::Str(self.backend.clone()));
+        j.set("max_batch", Json::Num(self.max_batch as f64));
+        j.set("max_wait_us", Json::Num(self.max_wait_us as f64));
+        j.set("workers", Json::Num(self.workers as f64));
+        j.set("netsim_base_us", Json::Num(self.netsim_base_us));
+        j.set("netsim_sigma", Json::Num(self.netsim_sigma));
+        j.set("seed", Json::Num(self.seed as f64));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeConfig, String> {
+        let d = ServeConfig::default();
+        let s = |k: &str, dft: &str| -> String {
+            j.get(k).and_then(Json::as_str).unwrap_or(dft).to_string()
+        };
+        let n = |k: &str, dft: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dft);
+        let cfg = ServeConfig {
+            artifacts_dir: PathBuf::from(s("artifacts_dir", &d.artifacts_dir.display().to_string())),
+            tables_path: PathBuf::from(s("tables_path", &d.tables_path.display().to_string())),
+            gbdt_path: PathBuf::from(s("gbdt_path", &d.gbdt_path.display().to_string())),
+            bind: s("bind", &d.bind),
+            backend: s("backend", &d.backend),
+            max_batch: n("max_batch", d.max_batch as f64) as usize,
+            max_wait_us: n("max_wait_us", d.max_wait_us as f64) as u64,
+            workers: n("workers", d.workers as f64) as usize,
+            netsim_base_us: n("netsim_base_us", d.netsim_base_us),
+            netsim_sigma: n("netsim_sigma", d.netsim_sigma),
+            seed: n("seed", d.seed as f64) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.backend != "pjrt" && self.backend != "native" {
+            return Err(format!("backend must be pjrt|native, got '{}'", self.backend));
+        }
+        if self.max_batch == 0 {
+            return Err("max_batch must be > 0".into());
+        }
+        if self.workers == 0 {
+            return Err("workers must be > 0".into());
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ServeConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
+    }
+}
+
+/// Training configuration (the launcher's `train` subcommand).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Dataset preset name or CSV path.
+    pub dataset: String,
+    /// Row cap (0 = preset default).
+    pub rows: usize,
+    pub seed: u64,
+    /// AutoML pipeline settings.
+    pub quick: bool,
+    pub tolerance: f64,
+    pub coverage_target: f64,
+    /// Output directory for model files.
+    pub out_dir: PathBuf,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            dataset: "aci".into(),
+            rows: 0,
+            seed: 1,
+            quick: false,
+            tolerance: 0.002,
+            coverage_target: 0.5,
+            out_dir: PathBuf::from("data"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_roundtrip() {
+        let c = ServeConfig {
+            bind: "0.0.0.0:9999".into(),
+            backend: "native".into(),
+            max_batch: 7,
+            ..Default::default()
+        };
+        let c2 = ServeConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(c2.bind, "0.0.0.0:9999");
+        assert_eq!(c2.backend, "native");
+        assert_eq!(c2.max_batch, 7);
+    }
+
+    #[test]
+    fn defaults_fill_missing_keys() {
+        let c = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(c.bind, ServeConfig::default().bind);
+    }
+
+    #[test]
+    fn rejects_bad_backend() {
+        let j = Json::parse(r#"{"backend": "gpu"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_batch() {
+        let j = Json::parse(r#"{"max_batch": 0}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,350 @@
+//! The multistage coordinator — the paper's system contribution, embedded
+//! in "product code".
+//!
+//! Per request: evaluate the embedded first-stage LRwBins tables (pure Rust,
+//! config-table driven, no ML library — the paper's PHP-embedded model);
+//! on a route miss, pad the row and call the second-stage RPC service.
+//! Batched product requests send ONE coalesced RPC for all missed rows.
+//! Every request is timed (wall + CPU) and accounted per stage so Table 3 /
+//! §5.2 quantities (mean latency, CPU, coverage, feature-fetch and network
+//! bytes) fall out of `ServeMetrics`.
+
+use crate::lrwbins::ServingTables;
+use crate::rpc::RpcClient;
+use crate::telemetry::{CpuTimer, ServeMetrics};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Routing override, used by the Table 3 bench to measure each mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Paper's multistage: embedded stage 1, RPC fallback.
+    Multistage,
+    /// Always call the RPC service (the conventional architecture).
+    AlwaysRpc,
+    /// Always answer with stage 1 (even unrouted bins — shadow mode).
+    AlwaysStage1,
+}
+
+/// Which stage produced a prediction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Served {
+    Stage1,
+    Rpc,
+}
+
+/// Feature-fetch cost model (paper §5.2: feature fetching is a CPU
+/// bottleneck; LRwBins fetches only the top-n subset, giving the 1.2×
+/// speedup / 70% resource claim). Busy-waits `per_feature_us` per fetched
+/// feature so both wall latency AND CPU accounting see the cost, like a
+/// real feature-store deserialization would.
+#[derive(Clone, Copy, Debug)]
+pub struct FetchSim {
+    pub per_feature_us: f64,
+}
+
+impl FetchSim {
+    pub fn fetch(&self, n_features: usize) {
+        if self.per_feature_us <= 0.0 || n_features == 0 {
+            return;
+        }
+        let deadline = Instant::now()
+            + std::time::Duration::from_nanos((self.per_feature_us * 1000.0) as u64 * n_features as u64);
+        while Instant::now() < deadline {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// The product-code front-end.
+pub struct Coordinator {
+    pub tables: ServingTables,
+    rpc: Option<RpcClient>,
+    /// Padded row width expected by the RPC backend (PJRT f_max, or the raw
+    /// feature count for the native backend).
+    rpc_row_len: usize,
+    pub metrics: Arc<ServeMetrics>,
+    pub mode: Mode,
+    /// Optional feature-fetch cost model (None = features already in hand).
+    pub fetch: Option<FetchSim>,
+}
+
+impl Coordinator {
+    pub fn new(
+        tables: ServingTables,
+        rpc: Option<RpcClient>,
+        rpc_row_len: usize,
+        metrics: Arc<ServeMetrics>,
+    ) -> Coordinator {
+        let rpc_row_len = if rpc_row_len == 0 {
+            tables.n_features
+        } else {
+            rpc_row_len
+        };
+        assert!(rpc_row_len >= tables.n_features);
+        Coordinator {
+            tables,
+            rpc,
+            rpc_row_len,
+            metrics,
+            mode: Mode::Multistage,
+            fetch: None,
+        }
+    }
+
+    fn pad_for_rpc(&self, row: &[f32], buf: &mut Vec<f32>) {
+        buf.extend_from_slice(row);
+        buf.resize(buf.len() + (self.rpc_row_len - row.len()), 0.0);
+    }
+
+    fn rpc_predict(&self, rows: &[f32], n: usize) -> std::io::Result<Vec<f32>> {
+        let client = self.rpc.as_ref().ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::NotConnected, "no RPC backend configured")
+        })?;
+        let probs = client.predict(rows, self.rpc_row_len)?;
+        debug_assert_eq!(probs.len(), n);
+        Ok(probs)
+    }
+
+    /// Serve one inference. Returns `(probability, stage)`.
+    pub fn predict(&self, row: &[f32]) -> std::io::Result<(f32, Served)> {
+        debug_assert_eq!(row.len(), self.tables.n_features);
+        let t0 = Instant::now();
+        let cpu = CpuTimer::start();
+
+        // Feature fetch for the stage-1 attempt: only the top-n subset
+        // (paper: the first-stage fetches the most important features).
+        // AlwaysRpc skips the attempt entirely and fetches everything.
+        if let Some(f) = &self.fetch {
+            match self.mode {
+                Mode::AlwaysRpc => f.fetch(self.tables.n_features),
+                _ => f.fetch(self.tables.n_infer()),
+            }
+        }
+
+        // Embedded stage-1 evaluation (also the router decision).
+        let (p1, routed) = self.tables.evaluate(row);
+        let stage1_wall = t0.elapsed().as_nanos() as u64;
+        let use_stage1 = match self.mode {
+            Mode::Multistage => routed,
+            Mode::AlwaysRpc => false,
+            Mode::AlwaysStage1 => true,
+        };
+        if use_stage1 {
+            self.metrics
+                .hit_stage1(stage1_wall, cpu.elapsed_ns(), self.tables.n_infer() as u64);
+            self.metrics.e2e.record(t0.elapsed().as_nanos() as u64);
+            return Ok((p1, Served::Stage1));
+        }
+
+        // Fallback: fetch the remaining features, pad + RPC.
+        if let Some(f) = &self.fetch {
+            if self.mode != Mode::AlwaysRpc {
+                f.fetch(self.tables.n_features.saturating_sub(self.tables.n_infer()));
+            }
+        }
+        let mut padded = Vec::with_capacity(self.rpc_row_len);
+        self.pad_for_rpc(row, &mut padded);
+        let probs = self.rpc_predict(&padded, 1)?;
+        let wall = t0.elapsed().as_nanos() as u64;
+        self.metrics.hit_rpc(
+            wall,
+            cpu.elapsed_ns(),
+            self.tables.n_features as u64,
+            RpcClient::wire_bytes(1, self.rpc_row_len),
+        );
+        self.metrics.e2e.record(wall);
+        Ok((probs[0], Served::Rpc))
+    }
+
+    /// Serve a batched product request: stage-1 for routed rows, one
+    /// coalesced RPC for the rest. Returns per-row `(prob, stage)`.
+    pub fn predict_batch(&self, rows: &[Vec<f32>]) -> std::io::Result<Vec<(f32, Served)>> {
+        let t0 = Instant::now();
+        let cpu = CpuTimer::start();
+        let mut out: Vec<(f32, Served)> = Vec::with_capacity(rows.len());
+        let mut miss_idx = Vec::new();
+        let mut miss_rows: Vec<f32> = Vec::new();
+        for (i, row) in rows.iter().enumerate() {
+            let (p1, routed) = self.tables.evaluate(row);
+            let use_stage1 = match self.mode {
+                Mode::Multistage => routed,
+                Mode::AlwaysRpc => false,
+                Mode::AlwaysStage1 => true,
+            };
+            if use_stage1 {
+                out.push((p1, Served::Stage1));
+            } else {
+                miss_idx.push(i);
+                self.pad_for_rpc(row, &mut miss_rows);
+                out.push((0.0, Served::Rpc)); // placeholder
+            }
+        }
+        let stage1_cpu = cpu.elapsed_ns();
+        let n_hits = rows.len() - miss_idx.len();
+        if n_hits > 0 {
+            let per = t0.elapsed().as_nanos() as u64 / rows.len().max(1) as u64;
+            for _ in 0..n_hits {
+                self.metrics.hit_stage1(
+                    per,
+                    stage1_cpu / rows.len().max(1) as u64,
+                    self.tables.n_infer() as u64,
+                );
+            }
+        }
+        if !miss_idx.is_empty() {
+            let t_rpc = Instant::now();
+            let cpu_rpc = CpuTimer::start();
+            let probs = self.rpc_predict(&miss_rows, miss_idx.len())?;
+            let rpc_wall = t_rpc.elapsed().as_nanos() as u64;
+            let rpc_cpu = cpu_rpc.elapsed_ns();
+            for (k, &i) in miss_idx.iter().enumerate() {
+                out[i].0 = probs[k];
+                self.metrics.hit_rpc(
+                    rpc_wall / miss_idx.len() as u64,
+                    rpc_cpu / miss_idx.len() as u64,
+                    self.tables.n_features as u64,
+                    RpcClient::wire_bytes(1, self.rpc_row_len),
+                );
+            }
+        }
+        let wall = t0.elapsed().as_nanos() as u64;
+        for _ in 0..rows.len() {
+            self.metrics.e2e.record(wall / rows.len().max(1) as u64);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+    use crate::features::{rank_features, RankMethod};
+    use crate::lrwbins::{LrwBinsModel, LrwBinsParams};
+    use crate::rpc::netsim::{NetSim, NetSimConfig};
+    use crate::rpc::server::{BatcherConfig, NativeBackend, RpcServer};
+
+    fn setup() -> (crate::tabular::Dataset, Coordinator, RpcServer) {
+        let spec = datagen::preset("aci").unwrap().with_rows(4000);
+        let data = datagen::generate(&spec, 5);
+        let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+        let mut first = LrwBinsModel::train(
+            &data,
+            &ranking.order,
+            &LrwBinsParams {
+                b: 2,
+                n_bin_features: 3,
+                n_infer_features: 6,
+                ..Default::default()
+            },
+        );
+        // Route half the bins.
+        let route: std::collections::HashSet<u32> =
+            first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+        first.set_route(route);
+        let second = crate::gbdt::train(&data, &crate::gbdt::GbdtParams::quick());
+
+        let metrics = Arc::new(ServeMetrics::new());
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(NativeBackend { model: second }),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig::default(),
+            metrics.clone(),
+        )
+        .unwrap();
+        let client = RpcClient::connect(server.addr).unwrap();
+        let tables = ServingTables::from_model(&first);
+        let coord = Coordinator::new(tables, Some(client), 0, metrics);
+        (data, coord, server)
+    }
+
+    #[test]
+    fn multistage_conservation_every_row_answered() {
+        let (data, coord, _server) = setup();
+        let mut s1 = 0;
+        let mut rpc = 0;
+        let mut row = Vec::new();
+        for r in 0..500 {
+            data.row_into(r, &mut row);
+            let (p, served) = coord.predict(&row).unwrap();
+            assert!((0.0..=1.0).contains(&p), "p={p}");
+            match served {
+                Served::Stage1 => s1 += 1,
+                Served::Rpc => rpc += 1,
+            }
+        }
+        assert_eq!(s1 + rpc, 500);
+        assert!(s1 > 0, "some rows must be stage-1");
+        assert!(rpc > 0, "some rows must fall back");
+        assert!((coord.metrics.coverage() - s1 as f64 / 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_matches_single_row_path() {
+        let (data, coord, _server) = setup();
+        let rows: Vec<Vec<f32>> = (0..64).map(|r| data.row(r)).collect();
+        let batch = coord.predict_batch(&rows).unwrap();
+        for (i, row) in rows.iter().enumerate() {
+            let (p, served) = coord.predict(row).unwrap();
+            assert_eq!(batch[i].1, served, "row {i}");
+            assert!((batch[i].0 - p).abs() < 1e-6, "row {i}");
+        }
+    }
+
+    #[test]
+    fn always_rpc_mode_never_uses_stage1() {
+        let (data, mut coord, _server) = setup();
+        coord.mode = Mode::AlwaysRpc;
+        let mut row = Vec::new();
+        for r in 0..50 {
+            data.row_into(r, &mut row);
+            let (_, served) = coord.predict(&row).unwrap();
+            assert_eq!(served, Served::Rpc);
+        }
+    }
+
+    #[test]
+    fn always_stage1_mode_never_calls_rpc() {
+        let (data, mut coord, _server) = setup();
+        coord.mode = Mode::AlwaysStage1;
+        let mut row = Vec::new();
+        for r in 0..50 {
+            data.row_into(r, &mut row);
+            let (_, served) = coord.predict(&row).unwrap();
+            assert_eq!(served, Served::Stage1);
+        }
+        assert_eq!(
+            coord
+                .metrics
+                .rpc_calls
+                .load(std::sync::atomic::Ordering::Relaxed),
+            0
+        );
+    }
+
+    #[test]
+    fn no_rpc_configured_errors_on_miss() {
+        let (data, coord, server) = setup();
+        let tables = coord.tables.clone();
+        let metrics = Arc::new(ServeMetrics::new());
+        drop(coord);
+        drop(server);
+        let lone = Coordinator::new(tables, None, 0, metrics);
+        let mut row = Vec::new();
+        let mut saw_error = false;
+        for r in 0..200 {
+            data.row_into(r, &mut row);
+            match lone.predict(&row) {
+                Ok((_, Served::Stage1)) => {}
+                Ok((_, Served::Rpc)) => panic!("cannot serve rpc without client"),
+                Err(_) => {
+                    saw_error = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_error, "expected an error on the first miss");
+    }
+}

@@ -1,0 +1,219 @@
+//! MRMR feature selection (Ding & Peng 2005) — the paper's model-free
+//! `RankFeatures` option.
+//!
+//! Relevance = mutual information I(f; y); redundancy = mean I(f; s) over
+//! already-selected features s. Greedy selection maximizes
+//! `relevance − redundancy`. MI is estimated on quantile-binned features
+//! (16 bins), which is standard for continuous tabular data.
+
+use crate::tabular::{ColType, Dataset};
+
+const MI_BINS: usize = 16;
+
+/// Discretize a column into ≤ `MI_BINS` integer codes.
+fn discretize(col: &[f32], ctype: &ColType) -> (Vec<u8>, usize) {
+    match ctype {
+        ColType::Boolean => (col.iter().map(|&v| (v > 0.5) as u8).collect(), 2),
+        ColType::Categorical { cardinality } => {
+            let k = (*cardinality).min(MI_BINS);
+            (
+                col.iter().map(|&v| (v as usize).min(k - 1) as u8).collect(),
+                k,
+            )
+        }
+        ColType::Numeric => {
+            let edges = crate::tabular::stats::bin_boundaries(col, MI_BINS);
+            let mut uniq = edges.clone();
+            uniq.dedup();
+            let codes: Vec<u8> = col
+                .iter()
+                .map(|&v| uniq.partition_point(|&e| e < v) as u8)
+                .collect();
+            (codes, uniq.len() + 1)
+        }
+    }
+}
+
+/// Mutual information (nats) between two discrete code vectors.
+fn mutual_information(a: &[u8], ka: usize, b: &[u8], kb: usize) -> f64 {
+    let n = a.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut joint = vec![0u32; ka * kb];
+    let mut pa = vec![0u32; ka];
+    let mut pb = vec![0u32; kb];
+    for (&x, &y) in a.iter().zip(b) {
+        joint[x as usize * kb + y as usize] += 1;
+        pa[x as usize] += 1;
+        pb[y as usize] += 1;
+    }
+    let nf = n as f64;
+    let mut mi = 0.0;
+    for x in 0..ka {
+        if pa[x] == 0 {
+            continue;
+        }
+        for y in 0..kb {
+            let j = joint[x * kb + y];
+            if j == 0 || pb[y] == 0 {
+                continue;
+            }
+            let pxy = j as f64 / nf;
+            mi += pxy * (pxy / ((pa[x] as f64 / nf) * (pb[y] as f64 / nf))).ln();
+        }
+    }
+    mi.max(0.0)
+}
+
+/// Full MRMR ranking of all features.
+pub fn mrmr_ranking(data: &Dataset) -> super::Ranking {
+    let nf = data.n_features();
+    let n = data.n_rows();
+    // Subsample rows for MI estimation speed.
+    let (codes, cards): (Vec<Vec<u8>>, Vec<usize>) = {
+        let max_rows = 20_000;
+        let cols: Vec<Vec<f32>> = if n > max_rows {
+            let stride = n / max_rows;
+            data.cols
+                .iter()
+                .map(|c| c.iter().step_by(stride).copied().collect())
+                .collect()
+        } else {
+            data.cols.clone()
+        };
+        let mut codes = Vec::with_capacity(nf);
+        let mut cards = Vec::with_capacity(nf);
+        for (f, c) in cols.iter().enumerate() {
+            let (cc, k) = discretize(c, &data.schema.types[f]);
+            codes.push(cc);
+            cards.push(k);
+        }
+        (codes, cards)
+    };
+    let labels: Vec<u8> = {
+        let max_rows = 20_000;
+        let l: Vec<u8> = if n > max_rows {
+            let stride = n / max_rows;
+            data.labels.iter().step_by(stride).map(|&y| (y > 0.5) as u8).collect()
+        } else {
+            data.labels.iter().map(|&y| (y > 0.5) as u8).collect()
+        };
+        l
+    };
+
+    // Relevance.
+    let relevance: Vec<f64> = (0..nf)
+        .map(|f| mutual_information(&codes[f], cards[f], &labels, 2))
+        .collect();
+
+    // Greedy MRMR. Pairwise MI is only computed lazily against selected
+    // features (O(nf · selected) MI evaluations).
+    let mut selected: Vec<usize> = Vec::with_capacity(nf);
+    let mut scores: Vec<f64> = Vec::with_capacity(nf);
+    let mut remaining: Vec<usize> = (0..nf).collect();
+    // redundancy_sum[f] = Σ_{s ∈ selected} I(f; s)
+    let mut redundancy_sum = vec![0.0f64; nf];
+
+    while !remaining.is_empty() {
+        let mut best_i = 0;
+        let mut best_score = f64::NEG_INFINITY;
+        for (i, &f) in remaining.iter().enumerate() {
+            let red = if selected.is_empty() {
+                0.0
+            } else {
+                redundancy_sum[f] / selected.len() as f64
+            };
+            let s = relevance[f] - red;
+            if s > best_score {
+                best_score = s;
+                best_i = i;
+            }
+        }
+        let f = remaining.swap_remove(best_i);
+        selected.push(f);
+        scores.push(best_score);
+        // Update redundancy sums with the newly-selected feature.
+        if !remaining.is_empty() {
+            for &r in &remaining {
+                redundancy_sum[r] += mutual_information(&codes[r], cards[r], &codes[f], cards[f]);
+            }
+        }
+    }
+
+    super::Ranking {
+        order: selected,
+        scores,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tabular::{Dataset, Schema};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mi_of_identical_is_entropy() {
+        let a = vec![0u8, 0, 1, 1, 1, 1];
+        // I(X;X) = H(X) = -(1/3 ln 1/3 + 2/3 ln 2/3)
+        let h = -((1.0f64 / 3.0) * (1.0f64 / 3.0).ln() + (2.0 / 3.0) * (2.0f64 / 3.0).ln());
+        assert!((mutual_information(&a, 2, &a, 2) - h).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mi_of_independent_near_zero() {
+        let mut rng = Rng::new(1);
+        let a: Vec<u8> = (0..20_000).map(|_| rng.index(4) as u8).collect();
+        let b: Vec<u8> = (0..20_000).map(|_| rng.index(4) as u8).collect();
+        assert!(mutual_information(&a, 4, &b, 4) < 0.005);
+    }
+
+    #[test]
+    fn mi_nonnegative_property() {
+        use crate::prop_assert;
+        crate::util::proptest::check(50, |g| {
+            let n = g.usize(1..500);
+            let a: Vec<u8> = (0..n).map(|_| g.usize(0..5) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|_| g.usize(0..3) as u8).collect();
+            let mi = mutual_information(&a, 5, &b, 3);
+            prop_assert!(mi >= 0.0, "mi={mi}");
+            prop_assert!(mi.is_finite());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mrmr_prefers_informative_and_penalizes_redundant() {
+        // f0 informative; f1 = copy of f0 (redundant); f2 weak independent.
+        let mut rng = Rng::new(2);
+        let mut d = Dataset::new(Schema::numeric(3));
+        for _ in 0..5000 {
+            let a = rng.normal() as f32;
+            let c = rng.normal() as f32;
+            let logit = 2.5 * a as f64 + 0.6 * c as f64;
+            let y = rng.bool(crate::util::sigmoid(logit)) as u8 as f32;
+            d.push_row(&[a, a + 0.01 * rng.normal() as f32, c], y);
+        }
+        let r = mrmr_ranking(&d);
+        // First pick: f0 or f1 (equally relevant). Second pick must NOT be
+        // the redundant twin — MRMR should pick f2.
+        assert!(r.order[0] == 0 || r.order[0] == 1);
+        assert_eq!(r.order[1], 2, "order={:?}", r.order);
+    }
+
+    #[test]
+    fn ranking_covers_all_features() {
+        let mut rng = Rng::new(3);
+        let mut d = Dataset::new(Schema::numeric(5));
+        for _ in 0..500 {
+            let row: Vec<f32> = (0..5).map(|_| rng.normal() as f32).collect();
+            let y = (row[0] > 0.0) as u8 as f32;
+            d.push_row(&row, y);
+        }
+        let r = mrmr_ranking(&d);
+        let mut o = r.order.clone();
+        o.sort_unstable();
+        assert_eq!(o, vec![0, 1, 2, 3, 4]);
+    }
+}

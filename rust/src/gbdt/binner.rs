@@ -1,0 +1,179 @@
+//! Histogram pre-binning for GBDT training.
+//!
+//! Maps each feature to small integer bins via quantile cut points computed
+//! once before boosting (the XGBoost "hist" / LightGBM approach). Bin edges
+//! satisfy: `bin(x) = #{edges e : e < x}`, so the split condition
+//! `bin(x) <= b` is exactly `x <= edges[b]` on raw values — which is what the
+//! serving-side tree evaluator and the Pallas forest kernel test.
+
+use crate::tabular::Dataset;
+
+/// Per-feature bin edges.
+#[derive(Clone, Debug)]
+pub struct FeatureBinner {
+    /// `edges[f]` sorted ascending; feature f has `edges[f].len() + 1` bins.
+    pub edges: Vec<Vec<f32>>,
+}
+
+impl FeatureBinner {
+    /// Compute edges from quantile cut points (up to `max_bins` bins per
+    /// feature). Low-cardinality features get one bin per distinct value.
+    pub fn fit(data: &Dataset, max_bins: usize) -> FeatureBinner {
+        assert!(max_bins >= 2 && max_bins <= 256, "bins must fit u8");
+        let edges = data
+            .cols
+            .iter()
+            .map(|col| Self::edges_for(col, max_bins))
+            .collect();
+        FeatureBinner { edges }
+    }
+
+    fn edges_for(col: &[f32], max_bins: usize) -> Vec<f32> {
+        // Sample for speed on huge columns.
+        const MAX_SAMPLE: usize = 100_000;
+        let mut v: Vec<f32> = if col.len() > MAX_SAMPLE {
+            let stride = col.len() / MAX_SAMPLE;
+            col.iter().step_by(stride).copied().collect()
+        } else {
+            col.to_vec()
+        };
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.dedup();
+        if v.len() <= 1 {
+            return Vec::new(); // constant feature → single bin
+        }
+        if v.len() <= max_bins {
+            // One bin per distinct value; edges between consecutive values.
+            return v.windows(2).map(|w| midpoint(w[0], w[1])).collect();
+        }
+        // Quantile cut points over the deduped values weighted by original
+        // distribution: use the *original sorted* data for quantiles.
+        let mut sorted: Vec<f32> = col.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut edges: Vec<f32> = (1..max_bins)
+            .map(|k| {
+                crate::tabular::stats::quantile_sorted(&sorted, k as f64 / max_bins as f64)
+            })
+            .collect();
+        edges.dedup();
+        edges
+    }
+
+    /// Bin a single value for feature `f`.
+    #[inline]
+    pub fn bin_value(&self, f: usize, x: f32) -> u8 {
+        let edges = &self.edges[f];
+        // partition_point: first index where edge >= x ⇒ count of edges < x.
+        edges.partition_point(|&e| e < x) as u8
+    }
+
+    /// Number of bins for feature `f`.
+    pub fn n_bins(&self, f: usize) -> usize {
+        self.edges[f].len() + 1
+    }
+
+    /// Raw-value threshold equivalent to `bin <= b` (upper edge of bin b).
+    #[inline]
+    pub fn edge_value(&self, f: usize, b: usize) -> f32 {
+        self.edges[f][b]
+    }
+
+    /// Bin the whole dataset, column-major u8.
+    pub fn bin_dataset(&self, data: &Dataset) -> Vec<Vec<u8>> {
+        data.cols
+            .iter()
+            .enumerate()
+            .map(|(f, col)| col.iter().map(|&x| self.bin_value(f, x)).collect())
+            .collect()
+    }
+}
+
+fn midpoint(a: f32, b: f32) -> f32 {
+    let m = 0.5 * (a + b);
+    // Guard against rounding making the midpoint equal to b (then x=b would
+    // land in the left bin via `e < x` == false... keep strictly between).
+    if m <= a {
+        b
+    } else {
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tabular::{Dataset, Schema};
+
+    fn ds(cols: Vec<Vec<f32>>) -> Dataset {
+        let n = cols[0].len();
+        let nf = cols.len();
+        Dataset {
+            schema: Schema::numeric(nf),
+            cols,
+            labels: vec![0.0; n],
+        }
+    }
+
+    #[test]
+    fn bin_condition_matches_raw_threshold() {
+        // The fundamental invariant: bin(x) <= b  ⟺  x <= edges[b].
+        let col: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.37).sin() * 10.0).collect();
+        let d = ds(vec![col.clone()]);
+        let binner = FeatureBinner::fit(&d, 16);
+        for &x in col.iter().take(300) {
+            let bin = binner.bin_value(0, x) as usize;
+            for b in 0..binner.edges[0].len() {
+                assert_eq!(
+                    bin <= b,
+                    x <= binner.edge_value(0, b),
+                    "x={x} bin={bin} b={b} edge={}",
+                    binner.edge_value(0, b)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn low_cardinality_gets_exact_bins() {
+        let col = vec![0.0f32, 1.0, 2.0, 1.0, 0.0, 2.0, 2.0];
+        let d = ds(vec![col]);
+        let binner = FeatureBinner::fit(&d, 64);
+        assert_eq!(binner.n_bins(0), 3);
+        assert_eq!(binner.bin_value(0, 0.0), 0);
+        assert_eq!(binner.bin_value(0, 1.0), 1);
+        assert_eq!(binner.bin_value(0, 2.0), 2);
+    }
+
+    #[test]
+    fn constant_feature_single_bin() {
+        let d = ds(vec![vec![5.0f32; 100]]);
+        let binner = FeatureBinner::fit(&d, 16);
+        assert_eq!(binner.n_bins(0), 1);
+        assert_eq!(binner.bin_value(0, 5.0), 0);
+    }
+
+    #[test]
+    fn bins_roughly_balanced() {
+        let col: Vec<f32> = (0..10_000).map(|i| i as f32).collect();
+        let d = ds(vec![col]);
+        let binner = FeatureBinner::fit(&d, 8);
+        let bins = binner.bin_dataset(&d);
+        let mut counts = vec![0usize; binner.n_bins(0)];
+        for &b in &bins[0] {
+            counts[b as usize] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 800 && c < 1700, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn bin_count_bounded() {
+        let col: Vec<f32> = (0..5000).map(|i| ((i * 31) % 997) as f32).collect();
+        let d = ds(vec![col]);
+        let binner = FeatureBinner::fit(&d, 32);
+        assert!(binner.n_bins(0) <= 32);
+        let bins = binner.bin_dataset(&d);
+        assert!(bins[0].iter().all(|&b| (b as usize) < binner.n_bins(0)));
+    }
+}

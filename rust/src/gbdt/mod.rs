@@ -1,0 +1,376 @@
+//! Gradient-boosted decision trees — the second-stage model substrate.
+//!
+//! The paper uses XGBoost as the strong fallback model served behind RPC;
+//! no ML crates exist offline, so this is a from-scratch histogram GBDT with
+//! second-order logistic loss (`train`), fast native inference (`predict_*`),
+//! gain-based feature importance, JSON (de)serialization for the service
+//! config, and a dense tensor export consumed by the Pallas forest kernel.
+
+pub mod binner;
+pub mod train;
+pub mod tree;
+
+pub use binner::FeatureBinner;
+pub use train::train;
+pub use tree::{DenseTree, Tree, LEAF};
+
+use crate::tabular::Dataset;
+use crate::util::json::Json;
+use crate::util::sigmoid;
+
+/// Training hyper-parameters (XGBoost-style names).
+#[derive(Clone, Debug)]
+pub struct GbdtParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub learning_rate: f64,
+    /// L2 on leaf values.
+    pub lambda: f64,
+    /// Minimum split gain.
+    pub gamma: f64,
+    /// Minimum hessian sum per child.
+    pub min_child_weight: f64,
+    /// Row subsample fraction per tree.
+    pub subsample: f64,
+    /// Column subsample fraction per tree.
+    pub colsample: f64,
+    /// Histogram bins per feature (≤ 256).
+    pub max_bins: usize,
+    pub seed: u64,
+    /// Worker threads for histogram building.
+    pub threads: usize,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams {
+            n_trees: 60,
+            max_depth: 6,
+            learning_rate: 0.15,
+            lambda: 1.0,
+            gamma: 0.0,
+            min_child_weight: 1.0,
+            subsample: 1.0,
+            colsample: 1.0,
+            max_bins: 64,
+            seed: 7,
+            threads: crate::util::threadpool::default_threads(),
+        }
+    }
+}
+
+impl GbdtParams {
+    /// Smaller/faster preset for tests and quick benches.
+    pub fn quick() -> GbdtParams {
+        GbdtParams {
+            n_trees: 25,
+            max_depth: 4,
+            learning_rate: 0.2,
+            ..Default::default()
+        }
+    }
+}
+
+/// A trained GBDT: margin = base_score + Σ tree_i(x); p = sigmoid(margin).
+#[derive(Clone, Debug)]
+pub struct GbdtModel {
+    pub trees: Vec<Tree>,
+    pub base_score: f64,
+    pub n_features: usize,
+    /// Accumulated split gain per feature (importance ranking).
+    pub feature_gain: Vec<f64>,
+    /// Depth bound used at training time (dense export depth).
+    pub max_depth: usize,
+}
+
+impl GbdtModel {
+    /// Margin for one row.
+    #[inline]
+    pub fn predict_margin_one(&self, row: &[f32]) -> f64 {
+        let mut m = self.base_score;
+        for t in &self.trees {
+            m += t.predict_one(row) as f64;
+        }
+        m
+    }
+
+    /// Probability for one row.
+    #[inline]
+    pub fn predict_one(&self, row: &[f32]) -> f32 {
+        sigmoid(self.predict_margin_one(row)) as f32
+    }
+
+    /// Probabilities for a whole dataset.
+    pub fn predict_proba(&self, data: &Dataset) -> Vec<f32> {
+        let n = data.n_rows();
+        let mut out = Vec::with_capacity(n);
+        let mut row = Vec::with_capacity(self.n_features);
+        for r in 0..n {
+            data.row_into(r, &mut row);
+            out.push(self.predict_one(&row));
+        }
+        out
+    }
+
+    /// Features ranked by decreasing gain importance.
+    pub fn importance_ranking(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.n_features).collect();
+        idx.sort_by(|&a, &b| {
+            self.feature_gain[b]
+                .partial_cmp(&self.feature_gain[a])
+                .unwrap()
+        });
+        idx
+    }
+
+    /// Export the whole forest as dense tensors for the PJRT/Pallas forest
+    /// kernel: shapes `[n_trees, 2^D-1]` (feat/thresh) and `[n_trees, 2^D]`
+    /// (leaf), flattened row-major. Features index into the *full* feature
+    /// vector.
+    pub fn to_forest_tensors(&self) -> ForestTensors {
+        self.to_forest_tensors_at(self.max_depth)
+    }
+
+    /// Dense export at an explicit depth ≥ the trained depth (artifact
+    /// shapes are fixed; shallower forests pad with always-left splits).
+    pub fn to_forest_tensors_at(&self, depth: usize) -> ForestTensors {
+        assert!(depth >= self.max_depth, "export depth too shallow");
+        let ni = (1usize << depth) - 1;
+        let nl = 1usize << depth;
+        let nt = self.trees.len();
+        let mut feat = Vec::with_capacity(nt * ni);
+        let mut thresh = Vec::with_capacity(nt * ni);
+        let mut leaf = Vec::with_capacity(nt * nl);
+        for t in &self.trees {
+            let d = t.to_dense(depth);
+            feat.extend(d.feat.iter().map(|&f| f as i32));
+            thresh.extend_from_slice(&d.thresh);
+            leaf.extend_from_slice(&d.leaf);
+        }
+        ForestTensors {
+            n_trees: nt,
+            depth,
+            n_features: self.n_features,
+            base_score: self.base_score as f32,
+            feat,
+            thresh,
+            leaf,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // JSON (de)serialization — the service loads models from disk.
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("base_score", Json::Num(self.base_score));
+        j.set("n_features", Json::Num(self.n_features as f64));
+        j.set("max_depth", Json::Num(self.max_depth as f64));
+        j.set("feature_gain", Json::from_f64_slice(&self.feature_gain));
+        let trees: Vec<Json> = self
+            .trees
+            .iter()
+            .map(|t| {
+                let mut tj = Json::obj();
+                tj.set(
+                    "feat",
+                    Json::Arr(t.nodes.iter().map(|n| Json::Num(n.feat as f64)).collect()),
+                );
+                tj.set(
+                    "thresh",
+                    Json::from_f32_slice(&t.nodes.iter().map(|n| n.thresh).collect::<Vec<_>>()),
+                );
+                tj.set(
+                    "left",
+                    Json::Arr(t.nodes.iter().map(|n| Json::Num(n.left as f64)).collect()),
+                );
+                tj.set(
+                    "right",
+                    Json::Arr(t.nodes.iter().map(|n| Json::Num(n.right as f64)).collect()),
+                );
+                tj.set(
+                    "value",
+                    Json::from_f32_slice(&t.nodes.iter().map(|n| n.value).collect::<Vec<_>>()),
+                );
+                tj.set(
+                    "gain",
+                    Json::from_f32_slice(&t.nodes.iter().map(|n| n.gain).collect::<Vec<_>>()),
+                );
+                tj
+            })
+            .collect();
+        j.set("trees", Json::Arr(trees));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<GbdtModel, String> {
+        let err = |m: &str| m.to_string();
+        let base_score = j.get("base_score").and_then(Json::as_f64).ok_or_else(|| err("base_score"))?;
+        let n_features = j.get("n_features").and_then(Json::as_usize).ok_or_else(|| err("n_features"))?;
+        let max_depth = j.get("max_depth").and_then(Json::as_usize).ok_or_else(|| err("max_depth"))?;
+        let feature_gain = j.get("feature_gain").and_then(|v| v.as_f64_vec()).ok_or_else(|| err("feature_gain"))?;
+        let mut trees = Vec::new();
+        for tj in j.get("trees").and_then(Json::as_arr).ok_or_else(|| err("trees"))? {
+            let get_vec = |k: &str| tj.get(k).and_then(|v| v.as_f64_vec()).ok_or_else(|| err(k));
+            let feat = get_vec("feat")?;
+            let thresh = get_vec("thresh")?;
+            let left = get_vec("left")?;
+            let right = get_vec("right")?;
+            let value = get_vec("value")?;
+            let gain = get_vec("gain")?;
+            let nn = feat.len();
+            if [thresh.len(), left.len(), right.len(), value.len(), gain.len()]
+                .iter()
+                .any(|&l| l != nn)
+            {
+                return Err(err("tree array length mismatch"));
+            }
+            let nodes = (0..nn)
+                .map(|i| tree::Node {
+                    feat: feat[i] as u32,
+                    thresh: thresh[i] as f32,
+                    left: left[i] as u32,
+                    right: right[i] as u32,
+                    value: value[i] as f32,
+                    gain: gain[i] as f32,
+                })
+                .collect();
+            trees.push(Tree { nodes });
+        }
+        Ok(GbdtModel {
+            trees,
+            base_score,
+            n_features,
+            feature_gain,
+            max_depth,
+        })
+    }
+}
+
+/// Dense forest tensors (see [`GbdtModel::to_forest_tensors`]).
+#[derive(Clone, Debug)]
+pub struct ForestTensors {
+    pub n_trees: usize,
+    pub depth: usize,
+    pub n_features: usize,
+    pub base_score: f32,
+    /// `[n_trees × (2^D - 1)]` split features.
+    pub feat: Vec<i32>,
+    /// `[n_trees × (2^D - 1)]` split thresholds (`+inf` = always-left pad).
+    pub thresh: Vec<f32>,
+    /// `[n_trees × 2^D]` leaf values.
+    pub leaf: Vec<f32>,
+}
+
+impl ForestTensors {
+    /// Reference oblivious traversal over the tensors — must match both the
+    /// compact trees and the Pallas kernel bit-for-bit.
+    pub fn predict_one(&self, row: &[f32]) -> f32 {
+        let ni = (1usize << self.depth) - 1;
+        let nl = 1usize << self.depth;
+        let mut margin = self.base_score;
+        for t in 0..self.n_trees {
+            let mut k = 0usize;
+            for _ in 0..self.depth {
+                let f = self.feat[t * ni + k] as usize;
+                let th = self.thresh[t * ni + k];
+                k = 2 * k + 1 + ((row[f] > th) as usize);
+            }
+            margin += self.leaf[t * nl + (k - ni)];
+        }
+        crate::util::sigmoid_f32(margin)
+    }
+
+    /// Pad to fixed shapes (serving artifacts use fixed `[T_MAX, …]`).
+    pub fn padded(&self, n_trees: usize, n_features: usize) -> ForestTensors {
+        assert!(n_trees >= self.n_trees && n_features >= self.n_features);
+        let ni = (1usize << self.depth) - 1;
+        let nl = 1usize << self.depth;
+        let mut out = self.clone();
+        out.n_trees = n_trees;
+        out.n_features = n_features;
+        // Padding trees: always-left to leaf 0 with value 0.
+        out.feat.resize(n_trees * ni, 0);
+        out.thresh.resize(n_trees * ni, f32::INFINITY);
+        out.leaf.resize(n_trees * nl, 0.0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tabular::{Dataset, Schema};
+    use crate::util::rng::Rng;
+
+    fn trained() -> (GbdtModel, Dataset) {
+        let mut rng = Rng::new(11);
+        let mut d = Dataset::new(Schema::numeric(3));
+        for _ in 0..1500 {
+            let a = rng.normal() as f32;
+            let b = rng.normal() as f32;
+            let c = rng.normal() as f32;
+            let y = (a + b * b > 0.8) as u8 as f32;
+            d.push_row(&[a, b, c], y);
+        }
+        let m = train(&d, &GbdtParams { n_trees: 12, max_depth: 4, ..Default::default() });
+        (m, d)
+    }
+
+    #[test]
+    fn forest_tensors_match_native() {
+        let (m, d) = trained();
+        let ft = m.to_forest_tensors();
+        let mut row = Vec::new();
+        for r in 0..200 {
+            d.row_into(r, &mut row);
+            let native = m.predict_one(&row);
+            let dense = ft.predict_one(&row);
+            assert!(
+                (native - dense).abs() < 2e-6,
+                "row {r}: native={native} dense={dense}"
+            );
+        }
+    }
+
+    #[test]
+    fn padded_tensors_same_output() {
+        let (m, d) = trained();
+        let ft = m.to_forest_tensors();
+        let padded = ft.padded(ft.n_trees + 5, ft.n_features + 3);
+        let mut row = Vec::new();
+        for r in 0..50 {
+            d.row_into(r, &mut row);
+            let mut wide = row.clone();
+            wide.resize(ft.n_features + 3, 0.0);
+            assert_eq!(ft.predict_one(&row), padded.predict_one(&wide));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_exact_predictions() {
+        let (m, d) = trained();
+        let j = m.to_json();
+        let m2 = GbdtModel::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(m.predict_proba(&d), m2.predict_proba(&d));
+    }
+
+    #[test]
+    fn importance_ranking_sorted() {
+        let (m, _) = trained();
+        let rank = m.importance_ranking();
+        for w in rank.windows(2) {
+            assert!(m.feature_gain[w[0]] >= m.feature_gain[w[1]]);
+        }
+        // Noise feature (index 2) should rank last.
+        assert_eq!(*rank.last().unwrap(), 2);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(GbdtModel::from_json(&Json::parse("{}").unwrap()).is_err());
+        let j = Json::parse(r#"{"base_score":0,"n_features":1,"max_depth":2,"feature_gain":[0],"trees":[{"feat":[0],"thresh":[],"left":[],"right":[],"value":[],"gain":[]}]}"#).unwrap();
+        assert!(GbdtModel::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,526 @@
+//! Histogram-based gradient-boosting trainer (XGBoost-style).
+//!
+//! Second-order logistic loss: per-row gradient `g = p - y`, hessian
+//! `h = p(1-p)`. Trees grow level-wise to `max_depth`; splits maximize
+//!
+//! ```text
+//! gain = ½ [ G_L²/(H_L+λ) + G_R²/(H_R+λ) − G²/(H+λ) ] − γ
+//! ```
+//!
+//! over quantile-binned features (see `binner.rs`). Row subsampling and
+//! column subsampling per tree match the usual stochastic-boosting setup.
+//! Histogram building is parallel across features; each (node, feature)
+//! task returns only its best split candidate, so memory stays at
+//! O(active_nodes × bins) per worker.
+
+use super::binner::FeatureBinner;
+use super::tree::{Node, Tree, LEAF};
+use super::{GbdtModel, GbdtParams};
+use crate::tabular::Dataset;
+use crate::util::rng::Rng;
+use crate::util::sigmoid;
+use crate::util::threadpool::parallel_map;
+
+/// Interleaved histogram cell: one cache line per update.
+#[derive(Clone, Copy, Default)]
+struct Cell {
+    g: f64,
+    h: f64,
+    c: u32,
+}
+
+impl Cell {
+    #[inline]
+    fn sub(self, other: Cell) -> Cell {
+        Cell {
+            g: self.g - other.g,
+            h: self.h - other.h,
+            c: self.c.saturating_sub(other.c),
+        }
+    }
+}
+
+/// Split candidate for one (node, feature).
+#[derive(Clone, Copy, Debug)]
+struct Candidate {
+    gain: f64,
+    feat: u32,
+    bin: u16,
+    g_left: f64,
+    h_left: f64,
+    n_left: u32,
+}
+
+/// Per-active-node aggregate stats.
+#[derive(Clone, Copy, Debug, Default)]
+struct NodeStats {
+    g: f64,
+    h: f64,
+    n: u32,
+    /// Index of this node in the tree being built.
+    tree_idx: u32,
+}
+
+pub fn train(data: &Dataset, params: &GbdtParams) -> GbdtModel {
+    let n = data.n_rows();
+    assert!(n > 0, "cannot train on empty data");
+    let nf = data.n_features();
+    let mut rng = Rng::new(params.seed);
+
+    let binner = FeatureBinner::fit(data, params.max_bins);
+    let bins = binner.bin_dataset(data);
+
+    let pos_rate = data.positive_rate().clamp(1e-6, 1.0 - 1e-6);
+    let base_score = (pos_rate / (1.0 - pos_rate)).ln();
+
+    let mut margins = vec![base_score; n];
+    let mut trees = Vec::with_capacity(params.n_trees);
+    let mut feature_gain = vec![0.0f64; nf];
+    let threads = params.threads.max(1);
+
+    let mut g = vec![0.0f64; n];
+    let mut h = vec![0.0f64; n];
+
+    for _ in 0..params.n_trees {
+        // Gradients under current margins.
+        for r in 0..n {
+            let p = sigmoid(margins[r]);
+            g[r] = p - data.labels[r] as f64;
+            h[r] = (p * (1.0 - p)).max(1e-16);
+        }
+        // Row subsample mask.
+        let row_in: Vec<bool> = if params.subsample < 1.0 {
+            (0..n).map(|_| rng.bool(params.subsample)).collect()
+        } else {
+            vec![true; n]
+        };
+        // Column subsample.
+        let feats: Vec<usize> = if params.colsample < 1.0 {
+            let k = ((nf as f64 * params.colsample).ceil() as usize).clamp(1, nf);
+            let mut f = rng.sample_indices(nf, k);
+            f.sort_unstable();
+            f
+        } else {
+            (0..nf).collect()
+        };
+
+        let tree = build_tree(
+            data, &binner, &bins, &g, &h, &row_in, &feats, params, threads, &mut feature_gain,
+        );
+
+        // Margin update for ALL rows (including out-of-sample), in parallel
+        // over row chunks with a reused row buffer per chunk.
+        {
+            let margins_slice = &mut margins[..];
+            let tree_ref = &tree;
+            // Disjoint mutable chunks via chunks_mut, executed on scoped
+            // threads; each worker reuses one row buffer.
+            let chunk = n.div_ceil(threads.max(1)).max(1);
+            std::thread::scope(|s| {
+                for (ci, m_chunk) in margins_slice.chunks_mut(chunk).enumerate() {
+                    let start = ci * chunk;
+                    s.spawn(move || {
+                        let mut row = Vec::with_capacity(data.n_features());
+                        for (i, m) in m_chunk.iter_mut().enumerate() {
+                            data.row_into(start + i, &mut row);
+                            *m += tree_ref.predict_one(&row) as f64;
+                        }
+                    });
+                }
+            });
+        }
+        trees.push(tree);
+    }
+
+    GbdtModel {
+        trees,
+        base_score,
+        n_features: nf,
+        feature_gain,
+        max_depth: params.max_depth,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_tree(
+    data: &Dataset,
+    binner: &FeatureBinner,
+    bins: &[Vec<u8>],
+    g: &[f64],
+    h: &[f64],
+    row_in: &[bool],
+    feats: &[usize],
+    params: &GbdtParams,
+    threads: usize,
+    feature_gain: &mut [f64],
+) -> Tree {
+    let n = data.n_rows();
+    let lambda = params.lambda;
+    let lr = params.learning_rate;
+
+    let mut tree = Tree::default();
+    // Root.
+    tree.nodes.push(Node {
+        feat: LEAF,
+        thresh: 0.0,
+        left: 0,
+        right: 0,
+        value: 0.0,
+        gain: 0.0,
+    });
+
+    // assign[r] = active-frontier index, or -1 if the row is settled/excluded.
+    let mut assign: Vec<i32> = row_in.iter().map(|&in_| if in_ { 0 } else { -1 }).collect();
+
+    let mut root = NodeStats { tree_idx: 0, ..Default::default() };
+    for r in 0..n {
+        if assign[r] == 0 {
+            root.g += g[r];
+            root.h += h[r];
+            root.n += 1;
+        }
+    }
+    let mut frontier = vec![root];
+    // Histogram-subtraction bookkeeping: per active node, its parent's index
+    // in the previous frontier and its sibling's index in the current one
+    // (root has neither). The smaller child of each split accumulates its
+    // histogram from rows; the larger derives it as parent − sibling —
+    // halving the dominant histogram pass (LightGBM's classic trick).
+    let mut parent_of: Vec<i32> = vec![-1];
+    let mut sibling_of: Vec<i32> = vec![-1];
+    let mut prev_hist: Vec<Vec<Cell>> = vec![Vec::new(); feats.len()];
+
+    for _depth in 0..params.max_depth {
+        if frontier.is_empty() {
+            break;
+        }
+        let n_active = frontier.len();
+        // Which active nodes accumulate from rows (vs derive from parent)?
+        let compute: Vec<bool> = (0..n_active)
+            .map(|a| {
+                let sib = sibling_of[a];
+                if sib < 0 || parent_of[a] < 0 {
+                    return true;
+                }
+                let sib = sib as usize;
+                let (na, ns) = (frontier[a].n, frontier[sib].n);
+                na < ns || (na == ns && a < sib)
+            })
+            .collect();
+
+        // --- best split per (feature) across all active nodes, in parallel.
+        // Each task builds the histograms for ONE feature over all active
+        // nodes, then scans for the best split per node.
+        let per_feature: Vec<(Vec<Option<Candidate>>, Vec<Cell>)> = parallel_map(feats.len(), threads, |fi| {
+            let f = feats[fi];
+            let nb = binner.n_bins(f);
+            if nb < 2 {
+                return (vec![None; n_active], Vec::new());
+            }
+            let mut hist = vec![Cell::default(); n_active * nb];
+            let col = &bins[f];
+            for r in 0..n {
+                let a = assign[r];
+                if a < 0 || !compute[a as usize] {
+                    continue;
+                }
+                let cell = &mut hist[a as usize * nb + col[r] as usize];
+                cell.g += g[r];
+                cell.h += h[r];
+                cell.c += 1;
+            }
+            // Derive the larger siblings: parent − computed sibling.
+            for a in 0..n_active {
+                if compute[a] {
+                    continue;
+                }
+                let parent = parent_of[a] as usize;
+                let sib = sibling_of[a] as usize;
+                for b in 0..nb {
+                    hist[a * nb + b] =
+                        prev_hist[fi][parent * nb + b].sub(hist[sib * nb + b]);
+                }
+            }
+            // Scan each node left→right.
+            let cands = (0..n_active)
+                .map(|a| {
+                    let st = &frontier[a];
+                    let parent_score = st.g * st.g / (st.h + lambda);
+                    let mut gl = 0.0;
+                    let mut hl = 0.0;
+                    let mut nl = 0u32;
+                    let mut best: Option<Candidate> = None;
+                    for b in 0..nb - 1 {
+                        let cell = &hist[a * nb + b];
+                        gl += cell.g;
+                        hl += cell.h;
+                        nl += cell.c;
+                        let gr = st.g - gl;
+                        let hr = st.h - hl;
+                        let nr = st.n - nl;
+                        if hl < params.min_child_weight
+                            || hr < params.min_child_weight
+                            || nl == 0
+                            || nr == 0
+                        {
+                            continue;
+                        }
+                        let gain = 0.5
+                            * (gl * gl / (hl + lambda) + gr * gr / (hr + lambda) - parent_score)
+                            - params.gamma;
+                        if gain > best.map_or(0.0, |c| c.gain) {
+                            best = Some(Candidate {
+                                gain,
+                                feat: f as u32,
+                                bin: b as u16,
+                                g_left: gl,
+                                h_left: hl,
+                                n_left: nl,
+                            });
+                        }
+                    }
+                    best
+                })
+                .collect();
+            (cands, hist)
+        });
+
+        // Reduce across features: best candidate per active node; then move
+        // (not copy) this level's histograms into the subtraction store.
+        let mut best: Vec<Option<Candidate>> = vec![None; n_active];
+        for (fc, _) in &per_feature {
+            for (a, cand) in fc.iter().enumerate() {
+                if let Some(c) = cand {
+                    if best[a].map_or(true, |b| c.gain > b.gain) {
+                        best[a] = Some(*c);
+                    }
+                }
+            }
+        }
+        for (fi, (_, hist)) in per_feature.into_iter().enumerate() {
+            prev_hist[fi] = hist;
+        }
+
+        // Apply splits; build the next frontier.
+        // active index → (new left active idx, new right active idx) or leaf.
+        let mut next_frontier: Vec<NodeStats> = Vec::new();
+        let mut next_parent: Vec<i32> = Vec::new();
+        let mut next_sibling: Vec<i32> = Vec::new();
+        let mut remap: Vec<[i32; 2]> = Vec::with_capacity(n_active); // per active: children active ids or [-1,-1]
+        let mut split_info: Vec<Option<(u32, u8)>> = Vec::with_capacity(n_active); // (feat, bin)
+
+        for a in 0..n_active {
+            let st = frontier[a];
+            match best[a] {
+                Some(c) => {
+                    let ti = st.tree_idx as usize;
+                    let left_idx = tree.nodes.len() as u32;
+                    let right_idx = left_idx + 1;
+                    tree.nodes[ti] = Node {
+                        feat: c.feat,
+                        thresh: binner.edge_value(c.feat as usize, c.bin as usize),
+                        left: left_idx,
+                        right: right_idx,
+                        value: 0.0,
+                        gain: c.gain as f32,
+                    };
+                    feature_gain[c.feat as usize] += c.gain;
+                    // children placeholders (leaves until split further)
+                    let gl = c.g_left;
+                    let hl = c.h_left;
+                    let gr = st.g - gl;
+                    let hr = st.h - hl;
+                    tree.nodes.push(Node {
+                        feat: LEAF,
+                        thresh: 0.0,
+                        left: 0,
+                        right: 0,
+                        value: (-lr * gl / (hl + lambda)) as f32,
+                        gain: 0.0,
+                    });
+                    tree.nodes.push(Node {
+                        feat: LEAF,
+                        thresh: 0.0,
+                        left: 0,
+                        right: 0,
+                        value: (-lr * gr / (hr + lambda)) as f32,
+                        gain: 0.0,
+                    });
+                    let la = next_frontier.len() as i32;
+                    next_parent.push(a as i32);
+                    next_parent.push(a as i32);
+                    next_sibling.push(la + 1);
+                    next_sibling.push(la);
+                    next_frontier.push(NodeStats { g: gl, h: hl, n: c.n_left, tree_idx: left_idx });
+                    next_frontier.push(NodeStats {
+                        g: gr,
+                        h: hr,
+                        n: st.n - c.n_left,
+                        tree_idx: right_idx,
+                    });
+                    remap.push([la, la + 1]);
+                    split_info.push(Some((c.feat, c.bin as u8)));
+                }
+                None => {
+                    // Becomes a leaf.
+                    let ti = st.tree_idx as usize;
+                    tree.nodes[ti].feat = LEAF;
+                    tree.nodes[ti].value = (-lr * st.g / (st.h + lambda)) as f32;
+                    remap.push([-1, -1]);
+                    split_info.push(None);
+                }
+            }
+        }
+
+        // Update row assignment.
+        for r in 0..n {
+            let a = assign[r];
+            if a < 0 {
+                continue;
+            }
+            let a = a as usize;
+            match split_info[a] {
+                Some((f, b)) => {
+                    let go_left = bins[f as usize][r] <= b;
+                    assign[r] = remap[a][if go_left { 0 } else { 1 }];
+                }
+                None => assign[r] = -1,
+            }
+        }
+        frontier = next_frontier;
+        parent_of = next_parent;
+        sibling_of = next_sibling;
+    }
+
+    // Any still-active nodes at max depth become leaves.
+    for st in &frontier {
+        let ti = st.tree_idx as usize;
+        tree.nodes[ti].feat = LEAF;
+        tree.nodes[ti].value = (-lr * st.g / (st.h + lambda)) as f32;
+    }
+
+    tree
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::roc_auc;
+    use crate::tabular::{Dataset, Schema};
+
+    fn xor_dataset(n: usize, seed: u64) -> Dataset {
+        // XOR: linearly inseparable, trees must get it.
+        let mut rng = Rng::new(seed);
+        let mut d = Dataset::new(Schema::numeric(2));
+        for _ in 0..n {
+            let a = rng.normal() as f32;
+            let b = rng.normal() as f32;
+            let y = ((a > 0.0) != (b > 0.0)) as u8 as f32;
+            d.push_row(&[a, b], y);
+        }
+        d
+    }
+
+    #[test]
+    fn learns_xor() {
+        let d = xor_dataset(4000, 1);
+        let m = train(&d, &GbdtParams { n_trees: 20, max_depth: 3, ..Default::default() });
+        let preds = m.predict_proba(&d);
+        let auc = roc_auc(&preds, &d.labels);
+        assert!(auc > 0.95, "auc={auc}");
+    }
+
+    #[test]
+    fn single_tree_on_step_function() {
+        // y = x > 0; one depth-1 tree should nail it.
+        let mut d = Dataset::new(Schema::numeric(1));
+        let mut rng = Rng::new(2);
+        for _ in 0..2000 {
+            let x = rng.normal() as f32;
+            d.push_row(&[x], (x > 0.0) as u8 as f32);
+        }
+        let m = train(
+            &d,
+            &GbdtParams { n_trees: 1, max_depth: 1, learning_rate: 1.0, ..Default::default() },
+        );
+        assert_eq!(m.trees.len(), 1);
+        let preds = m.predict_proba(&d);
+        let auc = roc_auc(&preds, &d.labels);
+        assert!(auc > 0.99, "auc={auc}");
+        // The split threshold should be near 0.
+        let root = &m.trees[0].nodes[0];
+        assert!(root.thresh.abs() < 0.3, "thresh={}", root.thresh);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let d = xor_dataset(1000, 3);
+        let m = train(&d, &GbdtParams { n_trees: 5, max_depth: 2, ..Default::default() });
+        for t in &m.trees {
+            assert!(t.depth() <= 2);
+        }
+    }
+
+    #[test]
+    fn single_class_stays_at_prior() {
+        let mut d = Dataset::new(Schema::numeric(1));
+        for i in 0..100 {
+            d.push_row(&[i as f32], 1.0);
+        }
+        let m = train(&d, &GbdtParams { n_trees: 3, ..Default::default() });
+        let preds = m.predict_proba(&d);
+        assert!(preds.iter().all(|&p| p > 0.99));
+    }
+
+    #[test]
+    fn subsampling_still_learns() {
+        let d = xor_dataset(4000, 4);
+        let m = train(
+            &d,
+            &GbdtParams {
+                n_trees: 30,
+                max_depth: 3,
+                subsample: 0.7,
+                colsample: 0.8,
+                ..Default::default()
+            },
+        );
+        let auc = roc_auc(&m.predict_proba(&d), &d.labels);
+        assert!(auc > 0.9, "auc={auc}");
+    }
+
+    #[test]
+    fn feature_importance_identifies_signal() {
+        // Feature 1 is pure noise; feature 0 carries the label.
+        let mut rng = Rng::new(5);
+        let mut d = Dataset::new(Schema::numeric(2));
+        for _ in 0..2000 {
+            let x = rng.normal() as f32;
+            let noise = rng.normal() as f32;
+            d.push_row(&[x, noise], (x > 0.3) as u8 as f32);
+        }
+        let m = train(&d, &GbdtParams { n_trees: 10, max_depth: 3, ..Default::default() });
+        assert!(m.feature_gain[0] > 10.0 * m.feature_gain[1].max(1e-9));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = xor_dataset(500, 6);
+        let p = GbdtParams { n_trees: 5, subsample: 0.8, seed: 9, ..Default::default() };
+        let m1 = train(&d, &p);
+        let m2 = train(&d, &p);
+        let p1 = m1.predict_proba(&d);
+        let p2 = m2.predict_proba(&d);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn more_trees_reduce_train_logloss() {
+        let d = xor_dataset(2000, 7);
+        let few = train(&d, &GbdtParams { n_trees: 3, max_depth: 3, ..Default::default() });
+        let many = train(&d, &GbdtParams { n_trees: 30, max_depth: 3, ..Default::default() });
+        let ll_few = crate::metrics::log_loss(&few.predict_proba(&d), &d.labels);
+        let ll_many = crate::metrics::log_loss(&many.predict_proba(&d), &d.labels);
+        assert!(ll_many < ll_few, "{ll_many} vs {ll_few}");
+    }
+}

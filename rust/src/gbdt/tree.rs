@@ -1,0 +1,271 @@
+//! Decision-tree representation: compact nodes for fast native inference
+//! plus a dense perfect-depth export for the Pallas forest kernel.
+
+/// One tree node. Leaves have `feat == LEAF`.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Split feature, or `LEAF`.
+    pub feat: u32,
+    /// Raw-value threshold: go left iff `x[feat] <= thresh`.
+    pub thresh: f32,
+    /// Children indices (valid when not leaf).
+    pub left: u32,
+    pub right: u32,
+    /// Leaf value (margin contribution, already scaled by learning rate).
+    pub value: f32,
+    /// Split gain (for feature importance).
+    pub gain: f32,
+}
+
+pub const LEAF: u32 = u32::MAX;
+
+/// A regression tree over raw feature values.
+#[derive(Clone, Debug, Default)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+impl Tree {
+    pub fn leaf(value: f32) -> Tree {
+        Tree {
+            nodes: vec![Node {
+                feat: LEAF,
+                thresh: 0.0,
+                left: 0,
+                right: 0,
+                value,
+                gain: 0.0,
+            }],
+        }
+    }
+
+    /// Margin contribution for one row.
+    #[inline]
+    pub fn predict_one(&self, row: &[f32]) -> f32 {
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.feat == LEAF {
+                return n.value;
+            }
+            i = if row[n.feat as usize] <= n.thresh {
+                n.left as usize
+            } else {
+                n.right as usize
+            };
+        }
+    }
+
+    /// Maximum depth (root = 0).
+    pub fn depth(&self) -> usize {
+        fn go(t: &Tree, i: usize) -> usize {
+            let n = &t.nodes[i];
+            if n.feat == LEAF {
+                0
+            } else {
+                1 + go(t, n.left as usize).max(go(t, n.right as usize))
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            go(self, 0)
+        }
+    }
+
+    /// Export to a dense perfect-depth layout for the tensorized (Pallas)
+    /// forest kernel:
+    ///
+    /// * `feat[k]`, `thresh[k]` for interior slots `k ∈ [0, 2^depth - 1)`;
+    /// * `leaf[j]` for depth-`depth` slots `j ∈ [0, 2^depth)`.
+    ///
+    /// Early leaves are padded with always-left splits (`feat=0,
+    /// thresh=+inf`) and their value replicated across the reachable
+    /// depth-D slots, so an unconditional D-step traversal
+    /// (`k ← 2k+1 + (x > t)`) lands on the right value.
+    pub fn to_dense(&self, depth: usize) -> DenseTree {
+        let n_interior = (1usize << depth) - 1;
+        let n_leaves = 1usize << depth;
+        let mut feat = vec![0u32; n_interior];
+        let mut thresh = vec![f32::INFINITY; n_interior];
+        let mut leaf = vec![0f32; n_leaves];
+
+        // Walk (node, slot) pairs; slot indexes the implicit perfect tree.
+        fn fill(
+            t: &Tree,
+            node: usize,
+            slot: usize,
+            d: usize,
+            depth: usize,
+            feat: &mut [u32],
+            thresh: &mut [f32],
+            leaf: &mut [f32],
+        ) {
+            let n = &t.nodes[node];
+            if d == depth {
+                // At leaf level: node must be a leaf (tree depth ≤ depth).
+                debug_assert_eq!(n.feat, LEAF, "tree deeper than export depth");
+                leaf[slot - ((1 << depth) - 1)] = n.value;
+                return;
+            }
+            if n.feat == LEAF {
+                // Pad: always-left split, replicate value down-left; fill
+                // the whole subtree's leaf range for safety.
+                feat[slot] = 0;
+                thresh[slot] = f32::INFINITY;
+                let first = leaf_range_start(slot, d, depth);
+                let count = 1usize << (depth - d);
+                for j in 0..count {
+                    leaf[first + j] = n.value;
+                }
+                // Descend only left to keep padding cheap? The range fill
+                // above already covers all descendants.
+                return;
+            }
+            feat[slot] = n.feat;
+            thresh[slot] = n.thresh;
+            fill(t, n.left as usize, 2 * slot + 1, d + 1, depth, feat, thresh, leaf);
+            fill(t, n.right as usize, 2 * slot + 2, d + 1, depth, feat, thresh, leaf);
+        }
+
+        /// First depth-D leaf index reachable from `slot` at depth `d`.
+        fn leaf_range_start(slot: usize, d: usize, depth: usize) -> usize {
+            // Leftmost descendant after (depth-d) left steps:
+            let mut s = slot;
+            for _ in 0..(depth - d) {
+                s = 2 * s + 1;
+            }
+            s - ((1 << depth) - 1)
+        }
+
+        if !self.nodes.is_empty() {
+            fill(self, 0, 0, 0, depth, &mut feat, &mut thresh, &mut leaf);
+        }
+        DenseTree { depth, feat, thresh, leaf }
+    }
+}
+
+/// Dense perfect-depth tree (see [`Tree::to_dense`]).
+#[derive(Clone, Debug)]
+pub struct DenseTree {
+    pub depth: usize,
+    pub feat: Vec<u32>,
+    pub thresh: Vec<f32>,
+    pub leaf: Vec<f32>,
+}
+
+impl DenseTree {
+    /// Oblivious D-step traversal — the exact algorithm the Pallas forest
+    /// kernel runs; used in tests to prove compact ≡ dense.
+    pub fn predict_one(&self, row: &[f32]) -> f32 {
+        let mut k = 0usize;
+        for _ in 0..self.depth {
+            let go_right = row[self.feat[k] as usize] > self.thresh[k];
+            k = 2 * k + 1 + (go_right as usize);
+        }
+        self.leaf[k - ((1 << self.depth) - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// x0 <= 0 ? (x1 <= 1 ? 10 : 20) : 30
+    fn sample_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node { feat: 0, thresh: 0.0, left: 1, right: 2, value: 0.0, gain: 1.0 },
+                Node { feat: 1, thresh: 1.0, left: 3, right: 4, value: 0.0, gain: 0.5 },
+                Node { feat: LEAF, thresh: 0.0, left: 0, right: 0, value: 30.0, gain: 0.0 },
+                Node { feat: LEAF, thresh: 0.0, left: 0, right: 0, value: 10.0, gain: 0.0 },
+                Node { feat: LEAF, thresh: 0.0, left: 0, right: 0, value: 20.0, gain: 0.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn predict_follows_splits() {
+        let t = sample_tree();
+        assert_eq!(t.predict_one(&[-1.0, 0.0]), 10.0);
+        assert_eq!(t.predict_one(&[-1.0, 2.0]), 20.0);
+        assert_eq!(t.predict_one(&[1.0, 0.0]), 30.0);
+        // Boundary: x0 == thresh goes left.
+        assert_eq!(t.predict_one(&[0.0, 5.0]), 20.0);
+    }
+
+    #[test]
+    fn depth_computed() {
+        assert_eq!(sample_tree().depth(), 2);
+        assert_eq!(Tree::leaf(1.0).depth(), 0);
+    }
+
+    #[test]
+    fn dense_matches_compact_exhaustive() {
+        let t = sample_tree();
+        let d = t.to_dense(3); // export deeper than the tree
+        for x0 in [-2.0f32, 0.0, 0.5, 3.0] {
+            for x1 in [-1.0f32, 1.0, 1.5] {
+                let row = [x0, x1];
+                assert_eq!(t.predict_one(&row), d.predict_one(&row), "row={row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_single_leaf() {
+        let t = Tree::leaf(7.5);
+        let d = t.to_dense(4);
+        assert_eq!(d.predict_one(&[1.0, 2.0, 3.0]), 7.5);
+    }
+
+    #[test]
+    fn dense_random_trees_match() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        for _ in 0..30 {
+            // Build a random tree of depth ≤ 4 over 5 features.
+            let depth = 4;
+            let t = random_tree(&mut rng, 0, depth);
+            let d = t.to_dense(depth);
+            for _ in 0..50 {
+                let row: Vec<f32> = (0..5).map(|_| rng.normal() as f32).collect();
+                assert_eq!(t.predict_one(&row), d.predict_one(&row));
+            }
+        }
+    }
+
+    fn random_tree(rng: &mut crate::util::rng::Rng, d: usize, max_d: usize) -> Tree {
+        use crate::util::rng::Rng;
+        fn build(rng: &mut Rng, d: usize, max_d: usize, nodes: &mut Vec<Node>) -> u32 {
+            let idx = nodes.len() as u32;
+            if d == max_d || rng.bool(0.3) {
+                nodes.push(Node {
+                    feat: LEAF,
+                    thresh: 0.0,
+                    left: 0,
+                    right: 0,
+                    value: rng.normal() as f32,
+                    gain: 0.0,
+                });
+                return idx;
+            }
+            nodes.push(Node {
+                feat: rng.index(5) as u32,
+                thresh: rng.normal() as f32,
+                left: 0,
+                right: 0,
+                value: 0.0,
+                gain: 0.0,
+            });
+            let l = build(rng, d + 1, max_d, nodes);
+            let r = build(rng, d + 1, max_d, nodes);
+            nodes[idx as usize].left = l;
+            nodes[idx as usize].right = r;
+            idx
+        }
+        let mut nodes = Vec::new();
+        build(rng, d, max_d, &mut nodes);
+        Tree { nodes }
+    }
+}

@@ -1,0 +1,202 @@
+//! End-to-end serving harness: train → tables → backend service →
+//! coordinator, in one call. Shared by the launcher (`main.rs`), the
+//! examples and the Table 3 / serving benches so every consumer measures
+//! the exact same stack.
+
+use crate::automl::{self, PipelineConfig};
+use crate::config::ServeConfig;
+use crate::coordinator::Coordinator;
+use crate::datagen;
+use crate::lrwbins::ServingTables;
+use crate::rpc::netsim::{NetSim, NetSimConfig};
+use crate::rpc::server::{Backend, BatcherConfig, NativeBackend, PjrtBackend, RpcServer};
+use crate::rpc::RpcClient;
+use crate::runtime::{EngineWorker, ForestParams, Graph};
+use crate::tabular::{split, Dataset};
+use crate::telemetry::ServeMetrics;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct StackConfig {
+    /// Dataset preset name (`datagen::PRESET_NAMES`).
+    pub dataset: String,
+    /// Row cap (0 = preset size).
+    pub rows: usize,
+    pub seed: u64,
+    /// AutoML pipeline (quick() for tests/CI).
+    pub pipeline: PipelineConfig,
+    /// "pjrt" or "native".
+    pub backend: String,
+    pub netsim: NetSimConfig,
+    pub batcher: BatcherConfig,
+    /// Artifacts dir (for pjrt backend).
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Default for StackConfig {
+    fn default() -> Self {
+        StackConfig {
+            dataset: "aci".into(),
+            rows: 0,
+            seed: 1,
+            pipeline: PipelineConfig::default(),
+            backend: "pjrt".into(),
+            netsim: NetSimConfig::default(),
+            batcher: BatcherConfig::default(),
+            artifacts_dir: default_artifacts_dir(),
+        }
+    }
+}
+
+impl StackConfig {
+    pub fn quick(dataset: &str, rows: usize) -> StackConfig {
+        StackConfig {
+            dataset: dataset.into(),
+            rows,
+            pipeline: PipelineConfig::quick(),
+            ..Default::default()
+        }
+    }
+
+    pub fn from_serve_config(sc: &ServeConfig) -> StackConfig {
+        StackConfig {
+            backend: sc.backend.clone(),
+            netsim: NetSimConfig {
+                base_us: sc.netsim_base_us,
+                sigma: sc.netsim_sigma,
+                max_us: sc.netsim_base_us * 20.0,
+            },
+            batcher: BatcherConfig {
+                max_batch: sc.max_batch,
+                max_wait: Duration::from_micros(sc.max_wait_us),
+                workers: sc.workers,
+            },
+            artifacts_dir: sc.artifacts_dir.clone(),
+            ..Default::default()
+        }
+    }
+}
+
+/// Locate `artifacts/` relative to the crate root (works from benches,
+/// examples and tests).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A fully-wired serving stack.
+pub struct Stack {
+    pub coordinator: Coordinator,
+    /// Keep-alive for the backend service.
+    pub server: RpcServer,
+    pub metrics: Arc<ServeMetrics>,
+    /// Held-out test data (never seen at training time).
+    pub test: Dataset,
+    /// Training artifacts for inspection.
+    pub pipeline: automl::Pipeline,
+    /// True if the PJRT backend is live (vs native fallback).
+    pub pjrt: bool,
+}
+
+/// Build the full stack: data → AutoML pipeline → serving tables → backend
+/// service (PJRT or native) → coordinator.
+pub fn build(cfg: &StackConfig) -> Result<Stack> {
+    let Some(mut spec) = datagen::preset(&cfg.dataset) else {
+        bail!(
+            "unknown dataset '{}'; presets: {}",
+            cfg.dataset,
+            datagen::PRESET_NAMES.join(", ")
+        );
+    };
+    if cfg.rows > 0 {
+        spec = spec.with_rows(cfg.rows);
+    }
+    let data = datagen::generate(&spec, cfg.seed);
+    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xABCD);
+    let s = split::three_way_split(&data, (0.6, 0.2, 0.2), &mut rng);
+
+    let pipeline = automl::run_pipeline(&s.train, &s.val, &cfg.pipeline);
+    let tables = ServingTables::from_model(&pipeline.first);
+
+    let metrics = Arc::new(ServeMetrics::new());
+    let netsim = Arc::new(NetSim::new(cfg.netsim.clone(), cfg.seed ^ 0x7777));
+
+    let (backend, rpc_row_len, pjrt): (Arc<dyn Backend>, usize, bool) = match cfg.backend.as_str() {
+        "pjrt" => {
+            let shapes = manifest_shapes(&cfg.artifacts_dir)?;
+            let ft = pipeline.second.to_forest_tensors_at(shapes.depth);
+            let worker = EngineWorker::spawn(
+                &cfg.artifacts_dir,
+                vec![Graph::SecondStage],
+                Some(
+                    ForestParams::from_tensors(&ft, &shapes)
+                        .context("padding forest to artifact shapes")?,
+                ),
+                None,
+            )
+            .context("spawning PJRT engine worker — run `make artifacts`")?;
+            let f_max = worker.f_max;
+            (
+                Arc::new(PjrtBackend {
+                    worker: Arc::new(worker),
+                }),
+                f_max,
+                true,
+            )
+        }
+        "native" => (
+            Arc::new(NativeBackend {
+                model: pipeline.second.clone(),
+            }),
+            data.n_features(),
+            false,
+        ),
+        other => bail!("backend must be pjrt|native, got '{other}'"),
+    };
+
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        backend,
+        netsim,
+        cfg.batcher.clone(),
+        metrics.clone(),
+    )?;
+    let client = RpcClient::connect(server.addr)?;
+    let coordinator = Coordinator::new(tables, Some(client), rpc_row_len, metrics.clone());
+
+    Ok(Stack {
+        coordinator,
+        server,
+        metrics,
+        test: s.test,
+        pipeline,
+        pjrt,
+    })
+}
+
+fn manifest_shapes(dir: &std::path::Path) -> Result<crate::runtime::Shapes> {
+    // Engine::load parses these; we need them before the worker spawns to
+    // pad the forest, so parse the manifest cheaply here.
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .context("reading artifacts/manifest.json — run `make artifacts`")?;
+    let j = crate::util::json::Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let s = j
+        .get("shapes")
+        .ok_or_else(|| anyhow::anyhow!("manifest missing shapes"))?;
+    let get = |k: &str| {
+        s.get(k)
+            .and_then(crate::util::json::Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing shapes.{k}"))
+    };
+    Ok(crate::runtime::Shapes {
+        f_max: get("f_max")?,
+        nb_max: get("nb_max")?,
+        q_max: get("q_max")?,
+        nf_max: get("nf_max")?,
+        bins_max: get("bins_max")?,
+        t_max: get("t_max")?,
+        depth: get("depth")?,
+    })
+}

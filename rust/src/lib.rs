@@ -1,0 +1,39 @@
+//! # LRwBins — multistage inference on tabular data
+//!
+//! Production-quality reproduction of *"Efficient Multistage Inference on
+//! Tabular Data"* (Johnson & Markov, 2023) as a three-layer Rust + JAX +
+//! Pallas serving stack:
+//!
+//! * **Layer 3 (this crate)** — the multistage coordinator: an embedded,
+//!   dependency-free first-stage LRwBins evaluator in the request path, a
+//!   dynamic-batched RPC fallback to the second-stage GBDT service, plus all
+//!   training substrates (GBDT, logistic regression, binning, allocation,
+//!   AutoML) built from scratch.
+//! * **Layer 2** — JAX compute graphs (`python/compile/model.py`) lowered
+//!   AOT to HLO text artifacts executed through PJRT (`runtime`).
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
+//!   stage-1 LRwBins batch evaluator and the stage-2 forest traversal.
+//!
+//! See DESIGN.md for the full system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod allocation;
+pub mod automl;
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod datagen;
+pub mod features;
+pub mod gbdt;
+pub mod linalg;
+pub mod lr;
+pub mod lrwbins;
+pub mod metrics;
+pub mod picasso;
+pub mod rpc;
+pub mod runtime;
+pub mod telemetry;
+pub mod tabular;
+pub mod util;
+
+pub use util::{sigmoid, sigmoid_f32};

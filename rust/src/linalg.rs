@@ -1,0 +1,186 @@
+//! Small dense linear algebra: symmetric solves for the IRLS trainer.
+//!
+//! The per-bin LR problems are tiny (≤ a few dozen weights), so a simple
+//! Cholesky with jitter-on-failure is exactly right — no BLAS offline.
+
+/// Dense row-major square matrix.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Mat {
+        Mat {
+            n,
+            a: vec![0.0; n * n],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.a[i * self.n + j]
+    }
+
+    /// Add `v` to the diagonal.
+    pub fn add_diag(&mut self, v: f64) {
+        for i in 0..self.n {
+            self.a[i * self.n + i] += v;
+        }
+    }
+}
+
+/// Cholesky factorization A = L·Lᵀ (in place, lower triangle).
+/// Returns Err if the matrix is not positive definite.
+pub fn cholesky(m: &mut Mat) -> Result<(), &'static str> {
+    let n = m.n;
+    for j in 0..n {
+        let mut d = m.at(j, j);
+        for k in 0..j {
+            d -= m.at(j, k) * m.at(j, k);
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err("not positive definite");
+        }
+        let d = d.sqrt();
+        *m.at_mut(j, j) = d;
+        for i in (j + 1)..n {
+            let mut s = m.at(i, j);
+            for k in 0..j {
+                s -= m.at(i, k) * m.at(j, k);
+            }
+            *m.at_mut(i, j) = s / d;
+        }
+    }
+    Ok(())
+}
+
+/// Solve L·Lᵀ x = b given the Cholesky factor (lower triangle of `m`).
+pub fn cholesky_solve(m: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = m.n;
+    let mut y = b.to_vec();
+    // Forward: L y = b
+    for i in 0..n {
+        let mut s = y[i];
+        for k in 0..i {
+            s -= m.at(i, k) * y[k];
+        }
+        y[i] = s / m.at(i, i);
+    }
+    // Backward: Lᵀ x = y
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= m.at(k, i) * y[k];
+        }
+        y[i] = s / m.at(i, i);
+    }
+    y
+}
+
+/// Solve the SPD system A x = b, adding diagonal jitter on failure.
+pub fn solve_spd(mut a: Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let mut jitter = 0.0;
+    for _ in 0..6 {
+        let mut m = a.clone();
+        if jitter > 0.0 {
+            m.add_diag(jitter);
+        }
+        if cholesky(&mut m).is_ok() {
+            let x = cholesky_solve(&m, b);
+            if x.iter().all(|v| v.is_finite()) {
+                return Some(x);
+            }
+        }
+        jitter = if jitter == 0.0 { 1e-8 } else { jitter * 100.0 };
+        // Re-clone from the pristine copy next round.
+        a = a.clone();
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_identity() {
+        let mut m = Mat::zeros(3);
+        m.add_diag(1.0);
+        cholesky(&mut m).unwrap();
+        for i in 0..3 {
+            assert!((m.at(i, i) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn solve_known_system() {
+        // A = [[4,2],[2,3]], b = [10, 8] → x = [1.75, 1.5]
+        let mut a = Mat::zeros(2);
+        *a.at_mut(0, 0) = 4.0;
+        *a.at_mut(0, 1) = 2.0;
+        *a.at_mut(1, 0) = 2.0;
+        *a.at_mut(1, 1) = 3.0;
+        let x = solve_spd(a, &[10.0, 8.0]).unwrap();
+        assert!((x[0] - 1.75).abs() < 1e-10);
+        assert!((x[1] - 1.5).abs() < 1e-10);
+    }
+
+    #[test]
+    fn singular_gets_jitter() {
+        // Rank-1 matrix; jitter should still produce a finite solution.
+        let mut a = Mat::zeros(2);
+        *a.at_mut(0, 0) = 1.0;
+        *a.at_mut(0, 1) = 1.0;
+        *a.at_mut(1, 0) = 1.0;
+        *a.at_mut(1, 1) = 1.0;
+        let x = solve_spd(a, &[2.0, 2.0]);
+        assert!(x.is_some());
+        assert!(x.unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn non_pd_detected() {
+        let mut m = Mat::zeros(2);
+        *m.at_mut(0, 0) = -1.0;
+        assert!(cholesky(&mut m).is_err());
+    }
+
+    #[test]
+    fn random_spd_roundtrip() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let n = 1 + rng.index(8);
+            // A = B Bᵀ + I is SPD.
+            let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let mut a = Mat::zeros(n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = if i == j { 1.0 } else { 0.0 };
+                    for k in 0..n {
+                        s += b[i * n + k] * b[j * n + k];
+                    }
+                    *a.at_mut(i, j) = s;
+                }
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut rhs = vec![0.0; n];
+            for i in 0..n {
+                for j in 0..n {
+                    rhs[i] += a.at(i, j) * x_true[j];
+                }
+            }
+            let x = solve_spd(a, &rhs).unwrap();
+            for (xs, xt) in x.iter().zip(&x_true) {
+                assert!((xs - xt).abs() < 1e-6, "{xs} vs {xt}");
+            }
+        }
+    }
+}

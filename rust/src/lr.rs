@@ -1,0 +1,288 @@
+//! Logistic regression trained by IRLS (Newton–Raphson), the first-stage
+//! building block.
+//!
+//! The paper's key constraint is that *inference* must be trivially
+//! embeddable (`h(x) = 1/(1+e^{-θᵀx})`) while *training* may use full ML
+//! machinery (§2, tradeoff 1). IRLS with L2 regularization converges to the
+//! unique optimum of the convex objective in a handful of iterations; per-bin
+//! problems are tiny so Newton is both the fastest and the most accurate
+//! option.
+
+use crate::linalg::{solve_spd, Mat};
+use crate::util::sigmoid;
+
+/// Trained LR model: `p = sigmoid(w·x + b)`. Weights are f32 so the
+/// embedded table matches the PJRT artifact exactly (paper §4 stores the LR
+/// weight map as 32-bit floats).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LrModel {
+    pub weights: Vec<f32>,
+    pub bias: f32,
+}
+
+impl LrModel {
+    /// Prior-only model (used for bins whose data is single-class or too
+    /// small to fit).
+    pub fn prior(pos_rate: f64, n_features: usize) -> LrModel {
+        let p = pos_rate.clamp(1e-4, 1.0 - 1e-4);
+        LrModel {
+            weights: vec![0.0; n_features],
+            bias: (p / (1.0 - p)).ln() as f32,
+        }
+    }
+
+    /// Predicted probability for one row.
+    #[inline]
+    pub fn predict_one(&self, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.weights.len());
+        let mut z = self.bias as f64;
+        for (w, v) in self.weights.iter().zip(x) {
+            z += *w as f64 * *v as f64;
+        }
+        sigmoid(z) as f32
+    }
+
+    /// Predict probabilities for row-major data.
+    pub fn predict(&self, xs: &[f32], n_features: usize) -> Vec<f32> {
+        xs.chunks_exact(n_features)
+            .map(|row| self.predict_one(row))
+            .collect()
+    }
+}
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct LrParams {
+    /// L2 regularization strength (not applied to the bias).
+    pub l2: f64,
+    pub max_iter: usize,
+    /// Stop when max |Δw| < tol.
+    pub tol: f64,
+}
+
+impl Default for LrParams {
+    fn default() -> Self {
+        LrParams {
+            l2: 1.0,
+            max_iter: 25,
+            tol: 1e-8,
+        }
+    }
+}
+
+/// Fit LR on row-major features `xs` (n_rows × n_features) and labels.
+/// Always returns a usable model: degenerate inputs fall back to the prior.
+pub fn fit(xs: &[f32], n_features: usize, labels: &[f32], params: &LrParams) -> LrModel {
+    let n = labels.len();
+    debug_assert_eq!(xs.len(), n * n_features);
+    let pos_rate = labels.iter().map(|&y| y as f64).sum::<f64>() / n.max(1) as f64;
+    if n == 0 || pos_rate == 0.0 || pos_rate == 1.0 {
+        return LrModel::prior(pos_rate, n_features);
+    }
+    let d = n_features + 1; // weights + bias
+    let mut theta = vec![0.0f64; d];
+    theta[n_features] = (pos_rate / (1.0 - pos_rate)).ln(); // warm-start bias
+
+    let mut p = vec![0.0f64; n];
+    for _ in 0..params.max_iter {
+        // Predictions.
+        for (r, pr) in p.iter_mut().enumerate() {
+            let row = &xs[r * n_features..(r + 1) * n_features];
+            let mut z = theta[n_features];
+            for (j, &v) in row.iter().enumerate() {
+                z += theta[j] * v as f64;
+            }
+            *pr = sigmoid(z);
+        }
+        // Gradient g = Xᵀ(p - y) + λw ; Hessian H = XᵀWX + λI.
+        let mut g = vec![0.0f64; d];
+        let mut h = Mat::zeros(d);
+        for r in 0..n {
+            let row = &xs[r * n_features..(r + 1) * n_features];
+            let e = p[r] - labels[r] as f64;
+            let w = (p[r] * (1.0 - p[r])).max(1e-10);
+            for j in 0..n_features {
+                let xj = row[j] as f64;
+                g[j] += e * xj;
+                for k in j..n_features {
+                    *h.at_mut(j, k) += w * xj * row[k] as f64;
+                }
+                *h.at_mut(j, n_features) += w * xj;
+            }
+            g[n_features] += e;
+            *h.at_mut(n_features, n_features) += w;
+        }
+        // L2 on weights only.
+        for j in 0..n_features {
+            g[j] += params.l2 * theta[j];
+            *h.at_mut(j, j) += params.l2;
+        }
+        // Mirror to lower triangle.
+        for j in 0..d {
+            for k in (j + 1)..d {
+                let v = h.at(j, k);
+                *h.at_mut(k, j) = v;
+            }
+        }
+        let Some(step) = solve_spd(h, &g) else {
+            break; // keep current theta
+        };
+        let mut max_delta = 0.0f64;
+        for (t, s) in theta.iter_mut().zip(&step) {
+            *t -= s;
+            max_delta = max_delta.max(s.abs());
+        }
+        // Clamp runaway weights (quasi-separable bins).
+        for t in theta.iter_mut() {
+            *t = t.clamp(-30.0, 30.0);
+        }
+        if max_delta < params.tol {
+            break;
+        }
+    }
+    LrModel {
+        weights: theta[..n_features].iter().map(|&w| w as f32).collect(),
+        bias: theta[n_features] as f32,
+    }
+}
+
+/// Fit on a Dataset restricted to `feature_idx` columns.
+pub fn fit_dataset(
+    data: &crate::tabular::Dataset,
+    feature_idx: &[usize],
+    params: &LrParams,
+) -> LrModel {
+    let n = data.n_rows();
+    let nf = feature_idx.len();
+    let mut xs = vec![0f32; n * nf];
+    for (j, &f) in feature_idx.iter().enumerate() {
+        let col = &data.cols[f];
+        for r in 0..n {
+            xs[r * nf + j] = col[r];
+        }
+    }
+    fit(&xs, nf, &data.labels, params)
+}
+
+/// Predict for a Dataset restricted to `feature_idx`.
+pub fn predict_dataset(
+    model: &LrModel,
+    data: &crate::tabular::Dataset,
+    feature_idx: &[usize],
+) -> Vec<f32> {
+    let n = data.n_rows();
+    let mut out = Vec::with_capacity(n);
+    let mut row = vec![0f32; feature_idx.len()];
+    for r in 0..n {
+        for (j, &f) in feature_idx.iter().enumerate() {
+            row[j] = data.cols[f][r];
+        }
+        out.push(model.predict_one(&row));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::roc_auc;
+    use crate::util::rng::Rng;
+
+    /// Generate linearly-separable-ish data: y ~ Bernoulli(sigmoid(w·x)).
+    fn synth(n: usize, w: &[f64], bias: f64, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let d = w.len();
+        let mut xs = Vec::with_capacity(n * d);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut z = bias;
+            for &wj in w {
+                let x = rng.normal();
+                xs.push(x as f32);
+                z += wj * x;
+            }
+            ys.push(rng.bool(sigmoid(z)) as u8 as f32);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn recovers_generating_weights() {
+        let w_true = [2.0, -1.5, 0.5];
+        let (xs, ys) = synth(20_000, &w_true, 0.3, 1);
+        let m = fit(&xs, 3, &ys, &LrParams { l2: 0.01, ..Default::default() });
+        for (j, &wt) in w_true.iter().enumerate() {
+            assert!(
+                (m.weights[j] as f64 - wt).abs() < 0.15,
+                "w[{j}]={} true={wt}",
+                m.weights[j]
+            );
+        }
+        assert!((m.bias as f64 - 0.3).abs() < 0.15, "bias={}", m.bias);
+    }
+
+    #[test]
+    fn auc_beats_chance_strongly() {
+        let (xs, ys) = synth(5_000, &[1.0, 1.0], 0.0, 2);
+        let m = fit(&xs, 2, &ys, &LrParams::default());
+        let preds = m.predict(&xs, 2);
+        assert!(roc_auc(&preds, &ys) > 0.75);
+    }
+
+    #[test]
+    fn single_class_gives_prior() {
+        let xs = vec![1.0f32, 2.0, 3.0, 4.0];
+        let ys = vec![1.0f32, 1.0];
+        let m = fit(&xs, 2, &ys, &LrParams::default());
+        assert!(m.weights.iter().all(|&w| w == 0.0));
+        assert!(m.predict_one(&[0.0, 0.0]) > 0.99);
+    }
+
+    #[test]
+    fn empty_input_safe() {
+        let m = fit(&[], 3, &[], &LrParams::default());
+        assert_eq!(m.weights.len(), 3);
+        assert!(m.bias.is_finite());
+    }
+
+    #[test]
+    fn separable_data_clamped_not_nan() {
+        // Perfectly separable: weights would diverge without clamping/L2.
+        let xs = vec![-1.0f32, -2.0, -3.0, 1.0, 2.0, 3.0];
+        let ys = vec![0.0f32, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let m = fit(&xs, 1, &ys, &LrParams { l2: 1e-6, ..Default::default() });
+        assert!(m.weights[0].is_finite());
+        assert!(m.predict_one(&[3.0]) > 0.9);
+        assert!(m.predict_one(&[-3.0]) < 0.1);
+    }
+
+    #[test]
+    fn l2_shrinks_weights() {
+        let (xs, ys) = synth(2_000, &[2.0], 0.0, 3);
+        let loose = fit(&xs, 1, &ys, &LrParams { l2: 0.01, ..Default::default() });
+        let tight = fit(&xs, 1, &ys, &LrParams { l2: 100.0, ..Default::default() });
+        assert!(tight.weights[0].abs() < loose.weights[0].abs());
+    }
+
+    #[test]
+    fn dataset_roundtrip_matches_flat() {
+        use crate::tabular::{Dataset, Schema};
+        let (xs, ys) = synth(500, &[1.0, -1.0], 0.1, 4);
+        let mut d = Dataset::new(Schema::numeric(2));
+        for (row, &y) in xs.chunks_exact(2).zip(&ys) {
+            d.push_row(row, y);
+        }
+        let m1 = fit(&xs, 2, &ys, &LrParams::default());
+        let m2 = fit_dataset(&d, &[0, 1], &LrParams::default());
+        assert_eq!(m1, m2);
+        let p1 = m1.predict(&xs, 2);
+        let p2 = predict_dataset(&m2, &d, &[0, 1]);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn prior_model_matches_rate() {
+        let m = LrModel::prior(0.25, 2);
+        assert!((m.predict_one(&[5.0, -3.0]) - 0.25).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,158 @@
+//! Ablation: XGBoost-tree binning (paper §5.3, "unsuccessful techniques").
+//!
+//! "Additional experiments included using the first n trees trained by
+//! XGBoost to similarly bin the data and then train LR models on these
+//! bins, but this did not help." We implement the variant so the
+//! `ablation_binning` bench can reproduce that negative result: rows are
+//! keyed by the tuple of leaf indices reached in the first `n_trees` trees,
+//! and an LR is trained per key.
+
+use crate::gbdt::{GbdtModel, LEAF};
+use crate::lr::{self, LrModel, LrParams};
+use crate::tabular::stats::Normalizer;
+use crate::tabular::Dataset;
+use std::collections::HashMap;
+
+/// LR-over-tree-leaf-bins model.
+#[derive(Clone, Debug)]
+pub struct TreeBinModel {
+    /// The binning trees (borrowed from a trained GBDT, first `n` trees).
+    trees: Vec<crate::gbdt::Tree>,
+    normalizer: Normalizer,
+    infer_features: Vec<usize>,
+    models: HashMap<u64, LrModel>,
+    global_lr: LrModel,
+}
+
+/// FNV-1a over the leaf-index tuple.
+fn leaf_key(leaves: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &l in leaves {
+        h ^= l as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl TreeBinModel {
+    /// Leaf index (node id) reached in each binning tree.
+    fn leaves_of(&self, row: &[f32]) -> Vec<u32> {
+        self.trees
+            .iter()
+            .map(|t| {
+                let mut i = 0usize;
+                loop {
+                    let n = &t.nodes[i];
+                    if n.feat == LEAF {
+                        return i as u32;
+                    }
+                    i = if row[n.feat as usize] <= n.thresh {
+                        n.left as usize
+                    } else {
+                        n.right as usize
+                    };
+                }
+            })
+            .collect()
+    }
+
+    /// Train: bin by the first `n_trees` trees of `gbdt`, LR per bin.
+    pub fn train(
+        data: &Dataset,
+        gbdt: &GbdtModel,
+        n_trees: usize,
+        infer_features: &[usize],
+        lr_params: &LrParams,
+        min_bin_rows: usize,
+    ) -> TreeBinModel {
+        let trees: Vec<crate::gbdt::Tree> =
+            gbdt.trees.iter().take(n_trees).cloned().collect();
+        let normalizer = Normalizer::fit(data);
+        let norm = normalizer.apply(data);
+
+        let mut proto = TreeBinModel {
+            trees,
+            normalizer,
+            infer_features: infer_features.to_vec(),
+            models: HashMap::new(),
+            global_lr: lr::fit_dataset(&norm, infer_features, lr_params),
+        };
+
+        // Group rows by leaf tuple (over RAW values — trees split raw space).
+        let mut groups: HashMap<u64, Vec<usize>> = HashMap::new();
+        let mut row = Vec::new();
+        for r in 0..data.n_rows() {
+            data.row_into(r, &mut row);
+            let key = leaf_key(&proto.leaves_of(&row));
+            groups.entry(key).or_default().push(r);
+        }
+        for (key, rows) in groups {
+            if rows.len() >= min_bin_rows {
+                let sub = norm.take_rows(&rows);
+                proto
+                    .models
+                    .insert(key, lr::fit_dataset(&sub, infer_features, lr_params));
+            }
+        }
+        proto
+    }
+
+    pub fn predict_one(&self, row: &[f32]) -> f32 {
+        let key = leaf_key(&self.leaves_of(row));
+        let model = self.models.get(&key).unwrap_or(&self.global_lr);
+        let x: Vec<f32> = self
+            .infer_features
+            .iter()
+            .map(|&f| self.normalizer.apply_value(f, row[f]))
+            .collect();
+        model.predict_one(&x)
+    }
+
+    pub fn predict_proba(&self, data: &Dataset) -> Vec<f32> {
+        let mut out = Vec::with_capacity(data.n_rows());
+        let mut row = Vec::new();
+        for r in 0..data.n_rows() {
+            data.row_into(r, &mut row);
+            out.push(self.predict_one(&row));
+        }
+        out
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.models.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdt::GbdtParams;
+    use crate::metrics::roc_auc;
+    use crate::tabular::Schema;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tree_binning_learns_but_runs() {
+        let mut rng = Rng::new(1);
+        let mut d = Dataset::new(Schema::numeric(3));
+        for _ in 0..3000 {
+            let x: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+            let y = rng.bool(crate::util::sigmoid(
+                2.0 * x[0] as f64 + x[1] as f64 * x[1] as f64 - 0.5,
+            )) as u8 as f32;
+            d.push_row(&x, y);
+        }
+        let g = crate::gbdt::train(&d, &GbdtParams { n_trees: 8, max_depth: 3, ..Default::default() });
+        let m = TreeBinModel::train(&d, &g, 2, &[0, 1, 2], &LrParams::default(), 30);
+        assert!(m.n_bins() > 1);
+        let auc = roc_auc(&m.predict_proba(&d), &d.labels);
+        assert!(auc > 0.6, "auc={auc}");
+    }
+
+    #[test]
+    fn leaf_key_distinguishes_tuples() {
+        assert_ne!(leaf_key(&[1, 2]), leaf_key(&[2, 1]));
+        assert_ne!(leaf_key(&[0]), leaf_key(&[0, 0]));
+        assert_eq!(leaf_key(&[3, 4, 5]), leaf_key(&[3, 4, 5]));
+    }
+}

@@ -1,0 +1,268 @@
+//! Combined-bin construction (Algorithm 1, lines 2–9).
+//!
+//! Each of the `n` most important features is split into `b` quantile bins
+//! (Booleans into 2, categoricals into one bin per value — paper §3). A
+//! row's per-feature bin tuple maps to a single **combined bin** id through
+//! mixed-radix strides:
+//!
+//! ```text
+//! combined = Σ_i bin_i · stride_i,   stride_0 = 1, stride_i = stride_{i-1} · nbins_{i-1}
+//! ```
+//!
+//! The per-feature rule is `bin = #{edges e : e < x}` — identical to the
+//! GBDT binner and to the Pallas kernel's `sum(x > edges)` over a +inf-padded
+//! edge table, so all three implementations agree bit-for-bit.
+
+use crate::tabular::{ColType, Dataset};
+
+/// Fitted combined-bin mapper.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CombinedBinner {
+    /// Binning features (global column indices), in importance order.
+    pub features: Vec<usize>,
+    /// Per binning feature: ascending edges over *normalized* values.
+    pub edges: Vec<Vec<f32>>,
+    /// Mixed-radix strides.
+    pub strides: Vec<u32>,
+    /// Product of per-feature bin counts.
+    pub total_bins: u32,
+}
+
+impl CombinedBinner {
+    /// Fit on (already normalized) training data. `b` = quantile bins for
+    /// numeric features.
+    pub fn fit(data: &Dataset, features: &[usize], b: usize) -> CombinedBinner {
+        assert!(b >= 2, "need at least 2 bins per feature");
+        let mut edges = Vec::with_capacity(features.len());
+        for &f in features {
+            let e = match data.schema.types[f] {
+                ColType::Boolean => vec![0.5f32],
+                ColType::Categorical { cardinality } => {
+                    (1..cardinality).map(|k| k as f32 - 0.5).collect()
+                }
+                ColType::Numeric => {
+                    let mut e = crate::tabular::stats::bin_boundaries(&data.cols[f], b);
+                    e.dedup();
+                    e
+                }
+            };
+            edges.push(e);
+        }
+        let mut strides = Vec::with_capacity(features.len());
+        let mut total: u64 = 1;
+        for e in &edges {
+            strides.push(total as u32);
+            total *= (e.len() + 1) as u64;
+            assert!(total <= u32::MAX as u64, "combined bin space overflow");
+        }
+        CombinedBinner {
+            features: features.to_vec(),
+            edges,
+            strides,
+            total_bins: total as u32,
+        }
+    }
+
+    /// Per-feature bin of a normalized value.
+    #[inline]
+    pub fn feature_bin(&self, i: usize, x: f32) -> u32 {
+        self.edges[i].partition_point(|&e| e < x) as u32
+    }
+
+    /// Combined bin of a full (normalized) feature row.
+    #[inline]
+    pub fn bin_of_row(&self, row: &[f32]) -> u32 {
+        let mut id = 0u32;
+        for (i, &f) in self.features.iter().enumerate() {
+            id += self.feature_bin(i, row[f]) * self.strides[i];
+        }
+        id
+    }
+
+    /// Combined bin ids for every row of a (normalized) dataset.
+    pub fn bin_dataset(&self, data: &Dataset) -> Vec<u32> {
+        let n = data.n_rows();
+        let mut ids = vec![0u32; n];
+        for (i, &f) in self.features.iter().enumerate() {
+            let col = &data.cols[f];
+            let stride = self.strides[i];
+            let edges = &self.edges[i];
+            for (r, id) in ids.iter_mut().enumerate() {
+                *id += (edges.partition_point(|&e| e < col[r]) as u32) * stride;
+            }
+        }
+        ids
+    }
+
+    /// Decode a combined id back into the per-feature bin tuple (tests +
+    /// Fig. 2 illustration).
+    pub fn decode(&self, mut id: u32) -> Vec<u32> {
+        let mut tuple = vec![0u32; self.features.len()];
+        for i in (0..self.features.len()).rev() {
+            tuple[i] = id / self.strides[i];
+            id %= self.strides[i];
+        }
+        tuple
+    }
+
+    /// Edge table padded to `[n_features, q_max]` with `+inf` — the layout
+    /// the Pallas kernel and the embedded evaluator consume.
+    pub fn padded_edge_table(&self, q_max: usize) -> Vec<f32> {
+        let mut t = vec![f32::INFINITY; self.features.len() * q_max];
+        for (i, e) in self.edges.iter().enumerate() {
+            assert!(e.len() <= q_max, "edge table q_max too small");
+            t[i * q_max..i * q_max + e.len()].copy_from_slice(e);
+        }
+        t
+    }
+
+    /// Max per-feature edge count (for choosing q_max).
+    pub fn max_edges(&self) -> usize {
+        self.edges.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tabular::{Dataset, Schema};
+    use crate::util::rng::Rng;
+
+    fn mixed_dataset(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut d = Dataset::new(Schema {
+            names: vec!["x".into(), "b".into(), "c".into()],
+            types: vec![
+                ColType::Numeric,
+                ColType::Boolean,
+                ColType::Categorical { cardinality: 4 },
+            ],
+        });
+        for _ in 0..n {
+            d.push_row(
+                &[
+                    rng.normal() as f32,
+                    rng.bool(0.4) as u8 as f32,
+                    rng.index(4) as f32,
+                ],
+                rng.bool(0.5) as u8 as f32,
+            );
+        }
+        d
+    }
+
+    #[test]
+    fn figure2_example_mapping() {
+        // Paper Fig. 2: n = 4 numeric features, b = 3 quantiles → 81 bins;
+        // tuple (q2, q0, q1, q2) → 2 + 0·3 + 1·9 + 2·27 = 65.
+        let mut d = Dataset::new(Schema::numeric(4));
+        let mut rng = Rng::new(1);
+        for _ in 0..3000 {
+            let row: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            d.push_row(&row, 0.0);
+        }
+        let binner = CombinedBinner::fit(&d, &[0, 1, 2, 3], 3);
+        assert_eq!(binner.total_bins, 81);
+        assert_eq!(binner.strides, vec![1, 3, 9, 27]);
+        // Construct a row hitting tuple (2,0,1,2): above both edges of f0,
+        // below first edge of f1, between edges of f2, above both of f3.
+        let row = [
+            binner.edges[0][1] + 1.0,
+            binner.edges[1][0] - 1.0,
+            (binner.edges[2][0] + binner.edges[2][1]) / 2.0,
+            binner.edges[3][1] + 1.0,
+        ];
+        assert_eq!(binner.decode(binner.bin_of_row(&row)), vec![2, 0, 1, 2]);
+        assert_eq!(binner.bin_of_row(&row), 2 + 0 * 3 + 9 + 2 * 27);
+    }
+
+    #[test]
+    fn boolean_and_categorical_bin_counts() {
+        let d = mixed_dataset(1000, 2);
+        let binner = CombinedBinner::fit(&d, &[0, 1, 2], 3);
+        // numeric: 3 bins, boolean: 2, categorical: 4 → 24 total
+        assert_eq!(binner.total_bins, 24);
+        assert_eq!(binner.strides, vec![1, 3, 6]);
+        // Boolean bins are exactly the value.
+        assert_eq!(binner.feature_bin(1, 0.0), 0);
+        assert_eq!(binner.feature_bin(1, 1.0), 1);
+        // Categorical codes map to their own bin.
+        for c in 0..4 {
+            assert_eq!(binner.feature_bin(2, c as f32), c);
+        }
+    }
+
+    #[test]
+    fn decode_roundtrip_property() {
+        use crate::prop_assert;
+        let d = mixed_dataset(2000, 3);
+        let binner = CombinedBinner::fit(&d, &[0, 1, 2], 3);
+        crate::util::proptest::check(200, |g| {
+            let id = g.usize(0..binner.total_bins as usize) as u32;
+            let tuple = binner.decode(id);
+            let recon: u32 = tuple
+                .iter()
+                .zip(&binner.strides)
+                .map(|(&t, &s)| t * s)
+                .sum();
+            prop_assert!(recon == id, "id={id} tuple={tuple:?} recon={recon}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bin_dataset_matches_row_api() {
+        let d = mixed_dataset(500, 4);
+        let binner = CombinedBinner::fit(&d, &[2, 0], 3);
+        let ids = binner.bin_dataset(&d);
+        for r in 0..d.n_rows() {
+            assert_eq!(ids[r], binner.bin_of_row(&d.row(r)));
+        }
+    }
+
+    #[test]
+    fn bins_roughly_equal_mass_for_numeric() {
+        let d = mixed_dataset(9000, 5);
+        let binner = CombinedBinner::fit(&d, &[0], 3);
+        let ids = binner.bin_dataset(&d);
+        let mut counts = vec![0usize; 3];
+        for &id in &ids {
+            counts[id as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 3000.0).abs() < 300.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn padded_edge_table_layout() {
+        let d = mixed_dataset(500, 6);
+        let binner = CombinedBinner::fit(&d, &[0, 1, 2], 3);
+        let q_max = 4;
+        let t = binner.padded_edge_table(q_max);
+        assert_eq!(t.len(), 3 * q_max);
+        // Boolean row: one real edge then +inf padding.
+        assert_eq!(t[q_max], 0.5);
+        assert!(t[q_max + 1].is_infinite());
+        // Kernel semantics: sum(x > edges) over padded row == feature_bin.
+        for (i, _) in binner.features.iter().enumerate() {
+            for x in [-2.0f32, -0.1, 0.3, 0.6, 1.4, 2.5] {
+                let krow = &t[i * q_max..(i + 1) * q_max];
+                let kbin = krow.iter().filter(|&&e| x > e).count() as u32;
+                assert_eq!(kbin, binner.feature_bin(i, x), "i={i} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_quantiles_collapse() {
+        // Heavily-tied feature: fewer bins than requested, no panic.
+        let mut d = Dataset::new(Schema::numeric(1));
+        for i in 0..100 {
+            d.push_row(&[if i < 90 { 0.0 } else { 1.0 }], 0.0);
+        }
+        let binner = CombinedBinner::fit(&d, &[0], 4);
+        assert!(binner.total_bins <= 4);
+        assert!(binner.edges[0].windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,196 @@
+//! Cascaded LRwBins (paper §3, last paragraph): after Algorithm 2 assigns
+//! bins, train a *second* LRwBins model on the rows that were NOT designated
+//! for first-stage inference. Its combined bins (built from the residual
+//! data's own top features) are evaluated as an intermediate stage before
+//! falling back to RPC — the paper reports an extra 1–3% of rows handled
+//! in-process with no performance loss.
+
+use super::{LrwBinsModel, LrwBinsParams, Stage1};
+use crate::features::{rank_features, RankMethod};
+use crate::tabular::Dataset;
+
+/// Two embedded stages + RPC fallback.
+#[derive(Clone, Debug)]
+pub struct CascadeModel {
+    pub first: LrwBinsModel,
+    pub second: Option<LrwBinsModel>,
+}
+
+/// Cascade outcome for one row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CascadeDecision {
+    /// Served by the first embedded stage.
+    First(f32),
+    /// Served by the second embedded stage.
+    Second(f32),
+    /// Fall back to RPC.
+    Rpc,
+}
+
+impl CascadeModel {
+    /// Train the residual-stage model on the training rows the first stage
+    /// does not serve, then run Algorithm 2 on the residual *validation*
+    /// rows against the full second-stage model so the new stage only keeps
+    /// bins where it matches the GBDT (paper: +1–3% coverage, no loss).
+    /// Returns `second = None` when the residual is too small to be useful.
+    pub fn train(
+        first: LrwBinsModel,
+        train: &Dataset,
+        val: &Dataset,
+        gbdt: &crate::gbdt::GbdtModel,
+        params: &LrwBinsParams,
+        tolerance: f64,
+        seed: u64,
+    ) -> CascadeModel {
+        let residual_of = |data: &Dataset| {
+            let mut rows = Vec::new();
+            let mut row = Vec::new();
+            for r in 0..data.n_rows() {
+                data.row_into(r, &mut row);
+                if matches!(first.stage1(&row), Stage1::Miss { .. }) {
+                    rows.push(r);
+                }
+            }
+            rows
+        };
+        let train_rows = residual_of(train);
+        let val_rows = residual_of(val);
+        let min_rows = (params.min_bin_rows * 8).max(500);
+        if train_rows.len() < min_rows || val_rows.len() < 50 {
+            return CascadeModel { first, second: None };
+        }
+        let residual = train.take_rows(&train_rows);
+        if residual.positive_rate() == 0.0 || residual.positive_rate() == 1.0 {
+            return CascadeModel { first, second: None };
+        }
+        // "the new important features on this subset of the data create
+        // combined bins" — re-rank on the residual.
+        let ranking = rank_features(&residual, RankMethod::GbdtGain, seed);
+        let mut second = LrwBinsModel::train(&residual, &ranking.order, params);
+        // Filter the residual stage's bins (Algorithm 2 against the GBDT).
+        let residual_val = val.take_rows(&val_rows);
+        crate::allocation::allocate_and_route(
+            &mut second,
+            gbdt,
+            &residual_val,
+            crate::allocation::Metric::Accuracy,
+            tolerance,
+        );
+        CascadeModel {
+            first,
+            second: Some(second),
+        }
+    }
+
+    /// Evaluate the cascade for one raw row.
+    pub fn decide(&self, row: &[f32]) -> CascadeDecision {
+        match self.first.stage1(row) {
+            Stage1::Hit(p) => CascadeDecision::First(p),
+            Stage1::Miss { .. } => match &self.second {
+                Some(s) => match s.stage1(row) {
+                    Stage1::Hit(p) => CascadeDecision::Second(p),
+                    Stage1::Miss { .. } => CascadeDecision::Rpc,
+                },
+                None => CascadeDecision::Rpc,
+            },
+        }
+    }
+
+    /// Fractions of `data` served by (first, second, rpc).
+    pub fn coverage(&self, data: &Dataset) -> (f64, f64, f64) {
+        let n = data.n_rows().max(1);
+        let (mut a, mut b, mut c) = (0usize, 0usize, 0usize);
+        let mut row = Vec::new();
+        for r in 0..data.n_rows() {
+            data.row_into(r, &mut row);
+            match self.decide(&row) {
+                CascadeDecision::First(_) => a += 1,
+                CascadeDecision::Second(_) => b += 1,
+                CascadeDecision::Rpc => c += 1,
+            }
+        }
+        (a as f64 / n as f64, b as f64 / n as f64, c as f64 / n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tabular::Schema;
+    use crate::util::rng::Rng;
+
+    fn world(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut d = Dataset::new(Schema::numeric(6));
+        for _ in 0..n {
+            let x: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+            let z = x[0] as f64 * 2.0 + (x[1] as f64 * x[2] as f64) + 0.5 * x[3] as f64;
+            d.push_row(&x, rng.bool(crate::util::sigmoid(z)) as u8 as f32);
+        }
+        d
+    }
+
+    fn first_with_partial_route(d: &Dataset) -> LrwBinsModel {
+        let p = LrwBinsParams {
+            b: 2,
+            n_bin_features: 3,
+            n_infer_features: 6,
+            min_bin_rows: 20,
+            ..Default::default()
+        };
+        let mut m = LrwBinsModel::train(d, &[0, 1, 2, 3, 4, 5], &p);
+        // Route only half the bins so a meaningful residual exists.
+        let half: std::collections::HashSet<u32> =
+            m.weights.keys().copied().filter(|&b| b % 2 == 0).collect();
+        m.set_route(half);
+        m
+    }
+
+    #[test]
+    fn cascade_increases_embedded_coverage() {
+        let d = world(6000, 1);
+        let first = first_with_partial_route(&d);
+        let base_cov = first.coverage(&d);
+        let gb = crate::gbdt::train(&d, &crate::gbdt::GbdtParams::quick());
+        let cascade = CascadeModel::train(
+            first,
+            &d,
+            &d,
+            &gb,
+            &LrwBinsParams {
+                b: 2,
+                n_bin_features: 2,
+                n_infer_features: 6,
+                min_bin_rows: 20,
+                ..Default::default()
+            },
+            0.01,
+            7,
+        );
+        assert!(cascade.second.is_some());
+        let (c1, c2, rpc) = cascade.coverage(&d);
+        assert!((c1 - base_cov).abs() < 1e-9);
+        assert!(c2 > 0.0, "second stage should serve something");
+        assert!((c1 + c2 + rpc - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiny_residual_skips_second_stage() {
+        let d = world(800, 2);
+        let p = LrwBinsParams {
+            b: 2,
+            n_bin_features: 2,
+            n_infer_features: 6,
+            min_bin_rows: 10,
+            ..Default::default()
+        };
+        let m = LrwBinsModel::train(&d, &[0, 1, 2, 3, 4, 5], &p);
+        let gb = crate::gbdt::train(&d, &crate::gbdt::GbdtParams::quick());
+        // Full route → empty residual.
+        let cascade = CascadeModel::train(m, &d, &d, &gb, &p, 0.01, 3);
+        assert!(cascade.second.is_none());
+        // Decisions still valid.
+        let row = d.row(0);
+        assert!(!matches!(cascade.decide(&row), CascadeDecision::Second(_)));
+    }
+}

@@ -1,0 +1,420 @@
+//! Flat serving config tables — what actually ships to the request path.
+//!
+//! The paper §4: "first-stage inference is implemented directly in the
+//! product code and reads configuration from a table", storing only
+//! (i) quantiles of the n most important features and (ii) LR weights for
+//! the combined bins used in first-stage inference. `ServingTables` is that
+//! config: dense arrays indexed by combined bin, with a route mask. The
+//! embedded Rust evaluator (`coordinator::embedded`) and the Pallas kernel
+//! both consume this exact layout, and a test proves they agree with the
+//! training-side model to machine precision.
+
+use super::LrwBinsModel;
+use crate::util::json::Json;
+
+/// Dense, allocation-free-on-read serving tables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingTables {
+    /// Total number of raw features the row vector carries.
+    pub n_features: usize,
+    // --- binning ---
+    /// Binning feature indices into the raw row.
+    pub bin_features: Vec<u32>,
+    /// Padded quantile-edge table `[n_bin_features × q_max]`, +inf padding.
+    /// Edges are over *normalized* values.
+    pub quantiles: Vec<f32>,
+    pub q_max: usize,
+    /// Mixed-radix strides.
+    pub strides: Vec<u32>,
+    pub total_bins: u32,
+    // --- normalization (z-score; identity for non-numeric). Kept in f64
+    // and applied as ((v - mean) / std) as f32 — bit-identical to the
+    // training-side `Normalizer::apply_value`, so serve-time bin ids can
+    // never diverge from the ids Algorithm 2 allocated. ---
+    pub means: Vec<f64>,
+    pub inv_stds: Vec<f64>,
+    // --- per-bin LR ---
+    /// Inference feature indices into the raw row.
+    pub infer_features: Vec<u32>,
+    /// Dense weight table `[total_bins × (n_infer + 1)]`; last column bias.
+    pub weights: Vec<f32>,
+    /// Global fallback weights `[n_infer + 1]`.
+    pub global_weights: Vec<f32>,
+    /// Route mask `[total_bins]`: 1 ⇒ stage 1 serves this bin.
+    pub route: Vec<u8>,
+}
+
+impl ServingTables {
+    /// Build dense tables from a trained model. Bins without a trained LR
+    /// model get the global fallback weights and `route = 0`.
+    pub fn from_model(model: &LrwBinsModel) -> ServingTables {
+        let total = model.binner.total_bins as usize;
+        let n_infer = model.infer_features.len();
+        let q_max = model.binner.max_edges().max(1);
+
+        let mut weights = vec![0f32; total * (n_infer + 1)];
+        let mut route = vec![0u8; total];
+        let pack = |m: &crate::lr::LrModel, out: &mut [f32]| {
+            out[..n_infer].copy_from_slice(&m.weights);
+            out[n_infer] = m.bias;
+        };
+        let mut global_weights = vec![0f32; n_infer + 1];
+        pack(&model.global_lr, &mut global_weights);
+
+        for bin in 0..total {
+            let slot = &mut weights[bin * (n_infer + 1)..(bin + 1) * (n_infer + 1)];
+            match model.weights.get(&(bin as u32)) {
+                Some(m) => {
+                    pack(m, slot);
+                    let routed = model
+                        .route
+                        .as_ref()
+                        .map_or(true, |set| set.contains(&(bin as u32)));
+                    route[bin] = routed as u8;
+                }
+                None => slot.copy_from_slice(&global_weights),
+            }
+        }
+
+        ServingTables {
+            n_features: model.normalizer.means.len(),
+            bin_features: model.binner.features.iter().map(|&f| f as u32).collect(),
+            quantiles: model.binner.padded_edge_table(q_max),
+            q_max,
+            strides: model.binner.strides.clone(),
+            total_bins: model.binner.total_bins,
+            means: model.normalizer.means.clone(),
+            inv_stds: model.normalizer.inv_stds.clone(),
+            infer_features: model.infer_features.iter().map(|&f| f as u32).collect(),
+            weights,
+            global_weights,
+            route,
+        }
+    }
+
+    pub fn n_infer(&self) -> usize {
+        self.infer_features.len()
+    }
+
+    /// Combined-bin id of a raw row. Mirrors the training-side binning but
+    /// with f32 arithmetic only — this *is* the request-path hot loop.
+    #[inline]
+    pub fn bin_of(&self, row: &[f32]) -> u32 {
+        let mut id = 0u32;
+        for (i, &f) in self.bin_features.iter().enumerate() {
+            let f = f as usize;
+            let x = ((row[f] as f64 - self.means[f]) * self.inv_stds[f]) as f32;
+            let edges = &self.quantiles[i * self.q_max..(i + 1) * self.q_max];
+            let mut b = 0u32;
+            for &e in edges {
+                b += (x > e) as u32;
+            }
+            id += b * self.strides[i];
+        }
+        id
+    }
+
+    /// Full stage-1 evaluation: `(probability, routed)`. Matches
+    /// `LrwBinsModel::stage1` semantics; `routed == false` means the caller
+    /// must fall back to the second stage (the probability is still the
+    /// best stage-1 guess, useful for shadow evaluation).
+    #[inline]
+    pub fn evaluate(&self, row: &[f32]) -> (f32, bool) {
+        let bin = self.bin_of(row) as usize;
+        let n_infer = self.n_infer();
+        let w = &self.weights[bin * (n_infer + 1)..(bin + 1) * (n_infer + 1)];
+        let mut z = w[n_infer]; // bias
+        for (j, &f) in self.infer_features.iter().enumerate() {
+            let f = f as usize;
+            let x = ((row[f] as f64 - self.means[f]) * self.inv_stds[f]) as f32;
+            z += w[j] * x;
+        }
+        (crate::util::sigmoid_f32(z), self.route[bin] != 0)
+    }
+
+    // ------------------------------------------------------------------
+    // JSON config file (service deployment format).
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("n_features", Json::Num(self.n_features as f64));
+        j.set("q_max", Json::Num(self.q_max as f64));
+        j.set("total_bins", Json::Num(self.total_bins as f64));
+        j.set(
+            "bin_features",
+            Json::Arr(self.bin_features.iter().map(|&f| Json::Num(f as f64)).collect()),
+        );
+        j.set("quantiles", Json::from_f32_slice(&self.quantiles));
+        j.set(
+            "strides",
+            Json::Arr(self.strides.iter().map(|&s| Json::Num(s as f64)).collect()),
+        );
+        j.set("means", Json::from_f64_slice(&self.means));
+        j.set("inv_stds", Json::from_f64_slice(&self.inv_stds));
+        j.set(
+            "infer_features",
+            Json::Arr(self.infer_features.iter().map(|&f| Json::Num(f as f64)).collect()),
+        );
+        j.set("weights", Json::from_f32_slice(&self.weights));
+        j.set("global_weights", Json::from_f32_slice(&self.global_weights));
+        j.set(
+            "route",
+            Json::Arr(self.route.iter().map(|&r| Json::Num(r as f64)).collect()),
+        );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServingTables, String> {
+        let err = |k: &str| format!("serving tables: missing/invalid '{k}'");
+        let numf = |k: &str| j.get(k).and_then(Json::as_usize).ok_or_else(|| err(k));
+        let vecf = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_f64_vec())
+                .ok_or_else(|| err(k))
+        };
+        let t = ServingTables {
+            n_features: numf("n_features")?,
+            bin_features: vecf("bin_features")?.iter().map(|&v| v as u32).collect(),
+            quantiles: vecf("quantiles")?.iter().map(|&v| v as f32).collect(),
+            q_max: numf("q_max")?,
+            strides: vecf("strides")?.iter().map(|&v| v as u32).collect(),
+            total_bins: numf("total_bins")? as u32,
+            means: vecf("means")?,
+            inv_stds: vecf("inv_stds")?,
+            infer_features: vecf("infer_features")?.iter().map(|&v| v as u32).collect(),
+            weights: vecf("weights")?.iter().map(|&v| v as f32).collect(),
+            global_weights: vecf("global_weights")?.iter().map(|&v| v as f32).collect(),
+            route: vecf("route")?.iter().map(|&v| v as u8).collect(),
+        };
+        // Structural validation.
+        if t.quantiles.len() != t.bin_features.len() * t.q_max
+            || t.route.len() != t.total_bins as usize
+            || t.weights.len() != t.total_bins as usize * (t.infer_features.len() + 1)
+            || t.means.len() != t.n_features
+            || t.inv_stds.len() != t.n_features
+        {
+            return Err("serving tables: inconsistent array sizes".into());
+        }
+        Ok(t)
+    }
+
+    /// Kernel-side padding: returns copies padded to fixed shapes
+    /// `(nb_max, q_max_pad, nf_max, bins_max)` as consumed by the PJRT
+    /// stage-1 artifact. Quantile padding is +inf (contributes 0 to the bin
+    /// sum); stride padding 0 (contributes 0 to the id); weight padding 0.
+    pub fn kernel_inputs(
+        &self,
+        nb_max: usize,
+        q_max_pad: usize,
+        nf_max: usize,
+        bins_max: usize,
+    ) -> KernelInputs {
+        let nb = self.bin_features.len();
+        let nf = self.n_infer();
+        assert!(nb <= nb_max && self.q_max <= q_max_pad && nf <= nf_max);
+        assert!(self.total_bins as usize <= bins_max);
+
+        let mut quantiles = vec![f32::INFINITY; nb_max * q_max_pad];
+        for i in 0..nb {
+            quantiles[i * q_max_pad..i * q_max_pad + self.q_max]
+                .copy_from_slice(&self.quantiles[i * self.q_max..(i + 1) * self.q_max]);
+        }
+        let mut strides = vec![0i32; nb_max];
+        for (i, &s) in self.strides.iter().enumerate() {
+            strides[i] = s as i32;
+        }
+        let mut bin_features = vec![0i32; nb_max];
+        for (i, &f) in self.bin_features.iter().enumerate() {
+            bin_features[i] = f as i32;
+        }
+        let mut infer_features = vec![0i32; nf_max];
+        for (i, &f) in self.infer_features.iter().enumerate() {
+            infer_features[i] = f as i32;
+        }
+        // Weights: [bins_max, nf_max + 1]; bias moves to the last padded col.
+        let mut weights = vec![0f32; bins_max * (nf_max + 1)];
+        for b in 0..self.total_bins as usize {
+            let src = &self.weights[b * (nf + 1)..(b + 1) * (nf + 1)];
+            let dst = &mut weights[b * (nf_max + 1)..(b + 1) * (nf_max + 1)];
+            dst[..nf].copy_from_slice(&src[..nf]);
+            dst[nf_max] = src[nf];
+        }
+        let mut route = vec![0f32; bins_max];
+        for (b, &r) in self.route.iter().enumerate() {
+            route[b] = r as f32;
+        }
+        KernelInputs {
+            nb_max,
+            q_max: q_max_pad,
+            nf_max,
+            bins_max,
+            bin_features,
+            quantiles,
+            strides,
+            infer_features,
+            weights,
+            route,
+        }
+    }
+
+    /// Normalize + gather a raw row into the padded kernel feature vector
+    /// of length `f_max` (normalized full row, zero padding).
+    pub fn kernel_row(&self, row: &[f32], f_max: usize) -> Vec<f32> {
+        assert!(self.n_features <= f_max);
+        let mut out = vec![0f32; f_max];
+        for f in 0..self.n_features {
+            out[f] = ((row[f] as f64 - self.means[f]) * self.inv_stds[f]) as f32;
+        }
+        out
+    }
+}
+
+/// Fixed-shape arrays for the PJRT stage-1 artifact.
+#[derive(Clone, Debug)]
+pub struct KernelInputs {
+    pub nb_max: usize,
+    pub q_max: usize,
+    pub nf_max: usize,
+    pub bins_max: usize,
+    pub bin_features: Vec<i32>,
+    pub quantiles: Vec<f32>,
+    pub strides: Vec<i32>,
+    pub infer_features: Vec<i32>,
+    pub weights: Vec<f32>,
+    pub route: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lrwbins::{LrwBinsModel, LrwBinsParams, Stage1};
+    use crate::tabular::{Dataset, Schema};
+    use crate::util::rng::Rng;
+
+    fn world(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut d = Dataset::new(Schema::numeric(5));
+        for _ in 0..n {
+            let x: Vec<f32> = (0..5).map(|_| (rng.normal() * 2.0 + 1.0) as f32).collect();
+            let y = rng.bool(crate::util::sigmoid(
+                (x[0] * x[1]).signum() as f64 + x[2] as f64,
+            )) as u8 as f32;
+            d.push_row(&x, y);
+        }
+        d
+    }
+
+    fn model(d: &Dataset) -> LrwBinsModel {
+        LrwBinsModel::train(
+            d,
+            &[0, 1, 2, 3, 4],
+            &LrwBinsParams {
+                b: 3,
+                n_bin_features: 3,
+                n_infer_features: 5,
+                min_bin_rows: 20,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn tables_match_model_exactly() {
+        let d = world(5000, 1);
+        let mut m = model(&d);
+        // Route a subset of bins to exercise both paths.
+        let routed: std::collections::HashSet<u32> =
+            m.weights.keys().copied().filter(|&b| b % 2 == 0).collect();
+        m.set_route(routed);
+        let t = ServingTables::from_model(&m);
+
+        let mut row = Vec::new();
+        for r in 0..d.n_rows() {
+            d.row_into(r, &mut row);
+            let (p, routed) = t.evaluate(&row);
+            assert_eq!(t.bin_of(&row), m.bin_of_raw_row(&row), "row {r}");
+            match m.stage1(&row) {
+                Stage1::Hit(mp) => {
+                    assert!(routed, "row {r} should be routed");
+                    assert!((p - mp).abs() < 2e-6, "row {r}: {p} vs {mp}");
+                }
+                Stage1::Miss { .. } => assert!(!routed, "row {r} should miss"),
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_identical() {
+        let d = world(2000, 2);
+        let m = model(&d);
+        let t = ServingTables::from_model(&m);
+        let t2 = ServingTables::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn from_json_rejects_inconsistent() {
+        let d = world(500, 3);
+        let t = ServingTables::from_model(&model(&d));
+        let mut j = t.to_json();
+        j.set("total_bins", Json::Num(9999.0));
+        assert!(ServingTables::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn kernel_inputs_preserve_bin_and_score() {
+        // Reference-check the padded kernel layout by evaluating the kernel
+        // algorithm in plain Rust over the padded arrays.
+        let d = world(3000, 4);
+        let m = model(&d);
+        let t = ServingTables::from_model(&m);
+        let (nb, qm, nf, bins) = (8, 8, 8, 1024);
+        let k = t.kernel_inputs(nb, qm, nf, bins);
+        let f_max = 16;
+        let mut row = Vec::new();
+        for r in (0..d.n_rows()).step_by(29) {
+            d.row_into(r, &mut row);
+            let x = t.kernel_row(&row, f_max);
+            // Kernel algorithm: bin id via padded tables.
+            let mut id = 0i64;
+            for i in 0..nb {
+                let f = k.bin_features[i] as usize;
+                let edges = &k.quantiles[i * qm..(i + 1) * qm];
+                let b = edges.iter().filter(|&&e| x[f] > e).count() as i64;
+                id += b * k.strides[i] as i64;
+            }
+            assert_eq!(id as u32, t.bin_of(&row), "row {r}");
+            // Dot product with gathered weights.
+            let w = &k.weights[id as usize * (nf + 1)..(id as usize + 1) * (nf + 1)];
+            let mut z = w[nf];
+            for j in 0..nf {
+                z += w[j] * x[k.infer_features[j] as usize];
+            }
+            // Padded infer features index 0 with weight 0 → no effect.
+            let (p, _) = t.evaluate(&row);
+            assert!(
+                (crate::util::sigmoid_f32(z) - p).abs() < 2e-6,
+                "row {r}: kernel {} vs table {p}",
+                crate::util::sigmoid_f32(z)
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_bin_gets_global_weights_not_routed() {
+        let d = world(300, 5);
+        let m = model(&d);
+        let t = ServingTables::from_model(&m);
+        // Find an unpopulated bin if any; synthetic extreme row likely maps
+        // to a rare corner.
+        let extreme = vec![1e3f32; 5];
+        let (p, routed) = t.evaluate(&extreme);
+        assert!((0.0..=1.0).contains(&p));
+        // If this bin was never trained, it must not be routed.
+        let bin = t.bin_of(&extreme);
+        if !m.weights.contains_key(&bin) {
+            assert!(!routed);
+        }
+    }
+}

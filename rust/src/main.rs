@@ -1,0 +1,399 @@
+//! `lrwbins` — launcher for the multistage-inference framework.
+//!
+//! Subcommands:
+//!   datagen   generate a synthetic dataset clone to CSV
+//!   train     run the AutoML pipeline, write serving tables + GBDT model
+//!   serve     start the full serving stack and run a live workload
+//!   eval      Table-1-style evaluation of LR / LRwBins / GBDT on a preset
+//!   predict   score a CSV with saved model files (tables + GBDT)
+//!   fig5      Picasso feature map (SVG + terminal rendering)
+//!   info      print artifact manifest + compiled batch variants
+
+use lrwbins::automl::PipelineConfig;
+use lrwbins::coordinator::Mode;
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::harness::{self, StackConfig};
+use lrwbins::lrwbins::ServingTables;
+use lrwbins::metrics::{accuracy, roc_auc};
+use lrwbins::tabular::split;
+use lrwbins::util::cli::Cli;
+use lrwbins::util::rng::Rng;
+
+fn main() {
+    let sub = std::env::args().nth(1).unwrap_or_default();
+    let code = match sub.as_str() {
+        "datagen" => cmd_datagen(),
+        "train" => cmd_train(),
+        "serve" => cmd_serve(),
+        "eval" => cmd_eval(),
+        "predict" => cmd_predict(),
+        "fig5" => cmd_fig5(),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: lrwbins <datagen|train|serve|eval|fig5|info> [options]\n\
+                 Run `lrwbins <subcommand> --help` for options."
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_datagen() -> i32 {
+    let args = Cli::new("lrwbins datagen", "generate a synthetic dataset clone to CSV")
+        .opt("name", "preset name (case1..case4, aci, blastchar, shrutime, patient, banknote, jasmine, higgs)", Some("aci"))
+        .opt("rows", "row count override (0 = preset size)", Some("0"))
+        .opt("seed", "sampling seed", Some("1"))
+        .opt("out", "output CSV path", Some("data/dataset.csv"))
+        .parse_subcommand();
+    let name = args.get_or("name", "aci");
+    let Some(mut spec) = datagen::preset(&name) else {
+        eprintln!("unknown preset '{name}'; options: {}", datagen::PRESET_NAMES.join(", "));
+        return 2;
+    };
+    let rows = args.get_usize("rows", 0);
+    if rows > 0 {
+        spec = spec.with_rows(rows);
+    }
+    let data = datagen::generate(&spec, args.get_u64("seed", 1));
+    let out = std::path::PathBuf::from(args.get_or("out", "data/dataset.csv"));
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    match lrwbins::tabular::csv::write_csv(&data, &out) {
+        Ok(()) => {
+            println!(
+                "wrote {} rows × {} features (pos rate {:.3}) to {}",
+                data.n_rows(),
+                data.n_features(),
+                data.positive_rate(),
+                out.display()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_train() -> i32 {
+    let args = Cli::new("lrwbins train", "run the AutoML multistage pipeline and save model files")
+        .opt("name", "dataset preset", Some("aci"))
+        .opt("data", "train from a CSV file instead of a preset (label column required)", None)
+        .opt("rows", "row cap (0 = preset size)", Some("0"))
+        .opt("seed", "seed", Some("1"))
+        .opt("tolerance", "metric-loss tolerance for Algorithm 2", Some("0.002"))
+        .opt("coverage", "coverage target (0 disables)", Some("0.5"))
+        .opt("out-dir", "output directory", Some("data"))
+        .flag("quick", "small/fast AutoML settings")
+        .parse_subcommand();
+    let seed = args.get_u64("seed", 1);
+    let (name, data) = if let Some(path) = args.get("data") {
+        let data = match lrwbins::tabular::csv::read_csv(std::path::Path::new(path)) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("reading {path}: {e}");
+                return 1;
+            }
+        };
+        let stem = std::path::Path::new(path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_else(|| "model".into());
+        (stem, data)
+    } else {
+        let name = args.get_or("name", "aci");
+        let Some(mut spec) = datagen::preset(&name) else {
+            eprintln!("unknown preset '{name}'");
+            return 2;
+        };
+        let rows = args.get_usize("rows", 0);
+        if rows > 0 {
+            spec = spec.with_rows(rows);
+        }
+        (name.clone(), datagen::generate(&spec, seed))
+    };
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    let s = split::three_way_split(&data, (0.6, 0.2, 0.2), &mut rng);
+
+    let mut cfg = if args.flag("quick") {
+        PipelineConfig::quick()
+    } else {
+        PipelineConfig::default()
+    };
+    cfg.tolerance = args.get_f64("tolerance", 0.002);
+    let cov = args.get_f64("coverage", 0.5);
+    cfg.coverage_target = if cov > 0.0 { Some(cov) } else { None };
+
+    println!("training multistage pipeline on {name} ({} rows)...", s.train.n_rows());
+    let t0 = std::time::Instant::now();
+    let p = lrwbins::automl::run_pipeline(&s.train, &s.val, &cfg);
+    println!(
+        "  shape search: b={} n={} ({} cells); coverage={:.1}%  ΔAUC={:.4}  ΔACC={:.4}  [{:.1}s]",
+        p.shape.best.b,
+        p.shape.best.n_bin_features,
+        p.shape.cells.len(),
+        p.allocation.coverage * 100.0,
+        p.allocation.stage2_auc - p.allocation.auc,
+        p.allocation.stage2_accuracy - p.allocation.accuracy,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Test-set report.
+    let lrw = p.first.predict_proba(&s.test);
+    let gbd = p.second.predict_proba(&s.test);
+    println!(
+        "  test: LRwBins auc={:.3} acc={:.3} | GBDT auc={:.3} acc={:.3}",
+        roc_auc(&lrw, &s.test.labels),
+        accuracy(&lrw, &s.test.labels),
+        roc_auc(&gbd, &s.test.labels),
+        accuracy(&gbd, &s.test.labels)
+    );
+
+    let out_dir = std::path::PathBuf::from(args.get_or("out-dir", "data"));
+    std::fs::create_dir_all(&out_dir).ok();
+    let tables = ServingTables::from_model(&p.first);
+    let (qb, wb) = p.first.config_size_bytes();
+    std::fs::write(out_dir.join(format!("{name}.tables.json")), tables.to_json().pretty()).unwrap();
+    std::fs::write(out_dir.join(format!("{name}.gbdt.json")), p.second.to_json().to_string()).unwrap();
+    println!(
+        "  wrote {0}/{name}.tables.json ({qb} B quantiles + {wb} B weights sparse) and {0}/{name}.gbdt.json",
+        out_dir.display()
+    );
+    0
+}
+
+fn cmd_serve() -> i32 {
+    let args = Cli::new("lrwbins serve", "start the multistage serving stack and run a workload")
+        .opt("name", "dataset preset", Some("aci"))
+        .opt("rows", "row cap", Some("20000"))
+        .opt("backend", "pjrt|native", Some("pjrt"))
+        .opt("requests", "number of requests to serve", Some("5000"))
+        .opt("netsim-us", "simulated one-way network latency (µs)", Some("250"))
+        .opt("mode", "multistage|rpc|stage1", Some("multistage"))
+        .flag("full", "full (slow) AutoML training instead of quick")
+        .parse_subcommand();
+    let mut cfg = StackConfig::quick(&args.get_or("name", "aci"), args.get_usize("rows", 20_000));
+    if args.flag("full") {
+        cfg.pipeline = PipelineConfig::default();
+    }
+    cfg.backend = args.get_or("backend", "pjrt");
+    cfg.netsim.base_us = args.get_f64("netsim-us", 250.0);
+    println!("building stack (dataset={}, backend={})...", cfg.dataset, cfg.backend);
+    let mut stack = match harness::build(&cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("stack build failed: {e:#}");
+            return 1;
+        }
+    };
+    stack.coordinator.mode = match args.get_or("mode", "multistage").as_str() {
+        "rpc" => Mode::AlwaysRpc,
+        "stage1" => Mode::AlwaysStage1,
+        _ => Mode::Multistage,
+    };
+    let n = args.get_usize("requests", 5000).min(stack.test.n_rows());
+    println!(
+        "serving {n} requests (val coverage {:.1}%)...",
+        stack.pipeline.allocation.coverage * 100.0
+    );
+    let mut row = Vec::new();
+    let t0 = std::time::Instant::now();
+    for r in 0..n {
+        stack.test.row_into(r, &mut row);
+        if let Err(e) = stack.coordinator.predict(&row) {
+            eprintln!("request {r} failed: {e}");
+            return 1;
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "done in {:.2}s ({:.0} req/s)\n{}",
+        wall.as_secs_f64(),
+        n as f64 / wall.as_secs_f64(),
+        stack.metrics.report()
+    );
+    0
+}
+
+fn cmd_eval() -> i32 {
+    let args = Cli::new("lrwbins eval", "Table-1-style evaluation on one preset")
+        .opt("name", "dataset preset", Some("aci"))
+        .opt("rows", "row cap", Some("20000"))
+        .opt("seeds", "number of random repetitions", Some("3"))
+        .flag("quick", "small/fast settings")
+        .parse_subcommand();
+    let name = args.get_or("name", "aci");
+    let Some(mut spec) = datagen::preset(&name) else {
+        eprintln!("unknown preset '{name}'");
+        return 2;
+    };
+    let rows = args.get_usize("rows", 20_000);
+    if rows > 0 && rows < spec.rows {
+        spec = spec.with_rows(rows);
+    }
+    let seeds = args.get_usize("seeds", 3);
+    let mut aucs = (vec![], vec![], vec![]);
+    for seed in 0..seeds as u64 {
+        let data = datagen::generate(&spec, seed + 1);
+        let mut rng = Rng::new(seed ^ 0x5555);
+        let s = split::train_test_split(&data, 0.25, &mut rng);
+        let ranking = rank_features(&s.train, RankMethod::GbdtGain, seed);
+        let cfg = if args.flag("quick") {
+            PipelineConfig::quick()
+        } else {
+            PipelineConfig::default()
+        };
+        // LR baseline.
+        let norm = lrwbins::tabular::stats::Normalizer::fit(&s.train);
+        let topn: Vec<usize> = ranking.top(cfg.shape_space.n_infer_features);
+        let lr = lrwbins::lr::fit_dataset(&norm.apply(&s.train), &topn, &Default::default());
+        let lr_p = lrwbins::lr::predict_dataset(&lr, &norm.apply(&s.test), &topn);
+        // LRwBins (shape-searched on a val split of train).
+        let mut rng2 = Rng::new(seed ^ 0x9999);
+        let inner = split::train_test_split(&s.train, 0.25, &mut rng2);
+        let shape = lrwbins::automl::shape_search(&inner.train, &inner.test, &ranking, &cfg.shape_space);
+        let lrw = lrwbins::lrwbins::LrwBinsModel::train(&s.train, &ranking.order, &shape.best);
+        let lrw_p = lrw.predict_proba(&s.test);
+        // GBDT.
+        let gb = lrwbins::gbdt::train(&s.train, &cfg.gbdt);
+        let gb_p = gb.predict_proba(&s.test);
+        aucs.0.push(roc_auc(&lr_p, &s.test.labels));
+        aucs.1.push(roc_auc(&lrw_p, &s.test.labels));
+        aucs.2.push(roc_auc(&gb_p, &s.test.labels));
+    }
+    let f = lrwbins::metrics::mean_std;
+    let (m0, s0) = f(&aucs.0);
+    let (m1, s1) = f(&aucs.1);
+    let (m2, s2) = f(&aucs.2);
+    println!("{name} ({} seeds, {} rows): ROC AUC", seeds, spec.rows);
+    println!("  LR      {}", lrwbins::metrics::fmt_pm(m0, s0));
+    println!("  LRwBins {}", lrwbins::metrics::fmt_pm(m1, s1));
+    println!("  GBDT    {}", lrwbins::metrics::fmt_pm(m2, s2));
+    0
+}
+
+fn cmd_predict() -> i32 {
+    let args = Cli::new(
+        "lrwbins predict",
+        "score a CSV with saved model files (multistage: embedded tables + GBDT fallback)",
+    )
+    .opt("data", "input CSV (label column optional for scoring metrics)", Some("data/dataset.csv"))
+    .opt("tables", "serving tables JSON (from `lrwbins train`)", Some("data/aci.tables.json"))
+    .opt("gbdt", "GBDT model JSON (from `lrwbins train`)", Some("data/aci.gbdt.json"))
+    .opt("out", "output CSV of probabilities + stage", Some("data/predictions.csv"))
+    .parse_subcommand();
+
+    let read = |p: &str| std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"));
+    let tables = read(&args.get_or("tables", ""))
+        .and_then(|t| lrwbins::util::json::Json::parse(&t).map_err(|e| e.to_string()))
+        .and_then(|j| ServingTables::from_json(&j));
+    let gbdt = read(&args.get_or("gbdt", ""))
+        .and_then(|t| lrwbins::util::json::Json::parse(&t).map_err(|e| e.to_string()))
+        .and_then(|j| lrwbins::gbdt::GbdtModel::from_json(&j));
+    let (tables, gbdt) = match (tables, gbdt) {
+        (Ok(t), Ok(g)) => (t, g),
+        (t, g) => {
+            if let Err(e) = t {
+                eprintln!("tables: {e}");
+            }
+            if let Err(e) = g {
+                eprintln!("gbdt: {e}");
+            }
+            return 1;
+        }
+    };
+    let data = match lrwbins::tabular::csv::read_csv(std::path::Path::new(&args.get_or("data", ""))) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("data: {e}");
+            return 1;
+        }
+    };
+    if data.n_features() != tables.n_features {
+        eprintln!(
+            "feature mismatch: CSV has {}, model expects {}",
+            data.n_features(),
+            tables.n_features
+        );
+        return 1;
+    }
+
+    let mut out = String::from("prob,stage\n");
+    let mut probs = Vec::with_capacity(data.n_rows());
+    let mut hits = 0usize;
+    let mut row = Vec::new();
+    for r in 0..data.n_rows() {
+        data.row_into(r, &mut row);
+        let (p1, routed) = tables.evaluate(&row);
+        let (p, stage) = if routed {
+            hits += 1;
+            (p1, "stage1")
+        } else {
+            (gbdt.predict_one(&row), "gbdt")
+        };
+        probs.push(p);
+        out.push_str(&format!("{p},{stage}\n"));
+    }
+    let out_path = args.get_or("out", "data/predictions.csv");
+    if let Some(parent) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    std::fs::write(&out_path, out).unwrap();
+    println!(
+        "scored {} rows → {out_path}  (stage-1 coverage {:.1}%)",
+        data.n_rows(),
+        100.0 * hits as f64 / data.n_rows().max(1) as f64
+    );
+    // If labels are present and binary-ish, report metrics.
+    if data.labels.iter().any(|&y| y > 0.5) && data.labels.iter().any(|&y| y < 0.5) {
+        println!(
+            "AUC {:.3}  accuracy {:.3}",
+            roc_auc(&probs, &data.labels),
+            accuracy(&probs, &data.labels)
+        );
+    }
+    0
+}
+
+fn cmd_fig5() -> i32 {
+    let args = Cli::new("lrwbins fig5", "Picasso feature visualization (paper Fig. 5)")
+        .opt("name", "dataset preset", Some("case2"))
+        .opt("rows", "row cap for importance estimation", Some("20000"))
+        .opt("out", "SVG output path", Some("data/fig5.svg"))
+        .parse_subcommand();
+    let name = args.get_or("name", "case2");
+    let Some(spec) = datagen::preset(&name) else {
+        eprintln!("unknown preset '{name}'");
+        return 2;
+    };
+    let data = datagen::generate(&spec.with_rows(args.get_usize("rows", 20_000)), 1);
+    let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+    let placed = lrwbins::picasso::layout(&data.schema, &ranking);
+    let out = std::path::PathBuf::from(args.get_or("out", "data/fig5.svg"));
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    std::fs::write(&out, lrwbins::picasso::to_svg(&placed, 800)).unwrap();
+    println!("{}", lrwbins::picasso::to_text(&placed, 41));
+    println!("wrote {} ({} features; digits = importance rank)", out.display(), placed.len());
+    0
+}
+
+fn cmd_info() -> i32 {
+    let dir = harness::default_artifacts_dir();
+    match std::fs::read_to_string(dir.join("manifest.json")) {
+        Ok(text) => {
+            println!("artifacts at {}:\n{text}", dir.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("no artifacts ({e}); run `make artifacts`");
+            1
+        }
+    }
+}

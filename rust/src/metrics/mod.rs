@@ -1,0 +1,233 @@
+//! Binary-classification metrics: ROC AUC (tie-corrected), accuracy,
+//! log-loss, confusion counts, and mean±std aggregation across seeds
+//! (Table 1 reports 20-seed means with std errors).
+
+/// Exact ROC AUC via the Mann–Whitney U statistic with average ranks for
+/// ties. O(n log n). Returns 0.5 when one class is absent (undefined AUC).
+pub fn roc_auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    let n_pos = labels.iter().filter(|&&y| y > 0.5).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // Average ranks over tie groups; accumulate rank sum of positives.
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        // ranks are 1-based: group covers ranks i+1 ..= j+1
+        let avg_rank = (i + 1 + j + 1) as f64 / 2.0;
+        for &k in &idx[i..=j] {
+            if labels[k] > 0.5 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos as f64 * (n_pos as f64 + 1.0)) / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Accuracy at a 0.5 probability threshold.
+pub fn accuracy(scores: &[f32], labels: &[f32]) -> f64 {
+    accuracy_at(scores, labels, 0.5)
+}
+
+/// Accuracy at an arbitrary threshold.
+pub fn accuracy_at(scores: &[f32], labels: &[f32], thresh: f32) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    if scores.is_empty() {
+        return 0.0;
+    }
+    let correct = scores
+        .iter()
+        .zip(labels)
+        .filter(|(&s, &y)| (s >= thresh) == (y > 0.5))
+        .count();
+    correct as f64 / scores.len() as f64
+}
+
+/// Binary cross-entropy (log-loss), clipped for numerical safety.
+pub fn log_loss(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    if scores.is_empty() {
+        return 0.0;
+    }
+    let eps = 1e-7f64;
+    let total: f64 = scores
+        .iter()
+        .zip(labels)
+        .map(|(&s, &y)| {
+            let p = (s as f64).clamp(eps, 1.0 - eps);
+            if y > 0.5 {
+                -p.ln()
+            } else {
+                -(1.0 - p).ln()
+            }
+        })
+        .sum();
+    total / scores.len() as f64
+}
+
+/// Confusion counts at 0.5.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: usize,
+    pub fp: usize,
+    pub tn: usize,
+    pub fn_: usize,
+}
+
+pub fn confusion(scores: &[f32], labels: &[f32]) -> Confusion {
+    let mut c = Confusion::default();
+    for (&s, &y) in scores.iter().zip(labels) {
+        match (s >= 0.5, y > 0.5) {
+            (true, true) => c.tp += 1,
+            (true, false) => c.fp += 1,
+            (false, false) => c.tn += 1,
+            (false, true) => c.fn_ += 1,
+        }
+    }
+    c
+}
+
+/// Mean and sample standard deviation across repeated experiments.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// Format `mean ± std` with 3 decimals, matching the paper's tables.
+pub fn fmt_pm(mean: f64, std: f64) -> String {
+    format!(".{:03} ± .{:03}", (mean * 1000.0).round() as i64, (std * 1000.0).round() as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let labels = [0.0f32, 0.0, 1.0, 1.0];
+        assert_eq!(roc_auc(&[0.1, 0.2, 0.8, 0.9], &labels), 1.0);
+        assert_eq!(roc_auc(&[0.9, 0.8, 0.2, 0.1], &labels), 0.0);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        // All scores equal → AUC 0.5 exactly (tie correction).
+        let labels = [0.0f32, 1.0, 0.0, 1.0, 1.0];
+        let scores = [0.5f32; 5];
+        assert!((roc_auc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_hand_computed() {
+        // scores: pos {0.8, 0.4}, neg {0.6, 0.2}
+        // pairs: (0.8>0.6)=1, (0.8>0.2)=1, (0.4<0.6)=0, (0.4>0.2)=1 → 3/4
+        let s = [0.8f32, 0.4, 0.6, 0.2];
+        let y = [1.0f32, 1.0, 0.0, 0.0];
+        assert!((roc_auc(&s, &y) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_tie_between_classes() {
+        // pos {0.5}, neg {0.5} → AUC 0.5
+        let s = [0.5f32, 0.5];
+        let y = [1.0f32, 0.0];
+        assert!((roc_auc(&s, &y) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_single_class_is_half() {
+        assert_eq!(roc_auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn auc_invariant_under_monotone_transform() {
+        check(100, |g| {
+            let n = g.usize(2..200);
+            let scores: Vec<f32> = (0..n).map(|_| g.f64(0.0..1.0) as f32).collect();
+            let labels = g.labels(n, 0.4);
+            let a1 = roc_auc(&scores, &labels);
+            // monotone transform: x -> 8x is exact in f32 (exponent shift),
+            // so it preserves the exact order AND tie structure.
+            let t: Vec<f32> = scores.iter().map(|&s| 8.0 * s).collect();
+            let a2 = roc_auc(&t, &labels);
+            prop_assert!((a1 - a2).abs() < 1e-9, "a1={a1} a2={a2}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn auc_antisymmetric_under_label_flip() {
+        check(50, |g| {
+            let n = g.usize(2..100);
+            let scores: Vec<f32> = (0..n).map(|_| g.f64(0.0..1.0) as f32).collect();
+            let labels = g.labels(n, 0.5);
+            let flipped: Vec<f32> = labels.iter().map(|&y| 1.0 - y).collect();
+            let a = roc_auc(&scores, &labels);
+            let b = roc_auc(&scores, &flipped);
+            let n_pos = labels.iter().filter(|&&y| y > 0.5).count();
+            if n_pos == 0 || n_pos == n {
+                return Ok(());
+            }
+            prop_assert!((a + b - 1.0).abs() < 1e-9, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accuracy_basics() {
+        let s = [0.9f32, 0.1, 0.6, 0.4];
+        let y = [1.0f32, 0.0, 0.0, 1.0];
+        assert_eq!(accuracy(&s, &y), 0.5);
+    }
+
+    #[test]
+    fn log_loss_perfect_vs_bad() {
+        let y = [1.0f32, 0.0];
+        assert!(log_loss(&[1.0, 0.0], &y) < 1e-5);
+        assert!(log_loss(&[0.0, 1.0], &y) > 10.0);
+        // 0.5 predictions → ln 2
+        assert!((log_loss(&[0.5, 0.5], &y) - std::f64::consts::LN_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let s = [0.9f32, 0.1, 0.6, 0.4];
+        let y = [1.0f32, 0.0, 0.0, 1.0];
+        let c = confusion(&s, &y);
+        assert_eq!(c, Confusion { tp: 1, fp: 1, tn: 1, fn_: 1 });
+    }
+
+    #[test]
+    fn mean_std_sample() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert!((s - 1.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[5.0]), (5.0, 0.0));
+    }
+
+    #[test]
+    fn fmt_pm_matches_paper_style() {
+        assert_eq!(fmt_pm(0.9025, 0.0041), ".903 ± .004");
+    }
+}

@@ -1,0 +1,162 @@
+//! Picasso-style model-free feature visualization (paper Fig. 5, ref [35]).
+//!
+//! Places features on a 2-D canvas: radial distance from the center encodes
+//! importance rank (most important in the middle), angle spreads features on
+//! a golden-angle spiral so neighbours in rank stay visually separated,
+//! square color encodes feature type, opacity encodes importance score.
+//! Output is a standalone SVG plus a compact text rendering for terminals.
+
+use crate::features::Ranking;
+use crate::tabular::{ColType, Schema};
+
+/// One placed feature.
+#[derive(Clone, Debug)]
+pub struct Placed {
+    pub feature: usize,
+    pub name: String,
+    pub rank: usize,
+    pub x: f64,
+    pub y: f64,
+    pub opacity: f64,
+    pub color: &'static str,
+}
+
+/// Layout all features on a unit-ish canvas.
+pub fn layout(schema: &Schema, ranking: &Ranking) -> Vec<Placed> {
+    let n = ranking.order.len();
+    let max_score = ranking.scores.first().copied().unwrap_or(1.0).max(1e-12);
+    const GOLDEN_ANGLE: f64 = 2.399963229728653; // radians
+    ranking
+        .order
+        .iter()
+        .enumerate()
+        .map(|(rank, &f)| {
+            // Spiral: r grows with sqrt(rank) for even density.
+            let r = (rank as f64 / n.max(1) as f64).sqrt() * 0.48;
+            let theta = rank as f64 * GOLDEN_ANGLE;
+            let score = ranking.scores[rank].max(0.0);
+            Placed {
+                feature: f,
+                name: schema.names[f].clone(),
+                rank,
+                x: 0.5 + r * theta.cos(),
+                y: 0.5 + r * theta.sin(),
+                opacity: (0.25 + 0.75 * (score / max_score)).min(1.0),
+                color: match schema.types[f] {
+                    ColType::Numeric => "#4c78a8",
+                    ColType::Boolean => "#f58518",
+                    ColType::Categorical { .. } => "#54a24b",
+                },
+            }
+        })
+        .collect()
+}
+
+/// Render to SVG (square canvas, side `px`).
+pub fn to_svg(placed: &[Placed], px: usize) -> String {
+    let s = px as f64;
+    let cell = (s / 30.0).max(6.0);
+    let mut out = format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{px}\" height=\"{px}\" viewBox=\"0 0 {px} {px}\">\n\
+         <rect width=\"{px}\" height=\"{px}\" fill=\"white\"/>\n"
+    );
+    for p in placed {
+        let x = p.x * s - cell / 2.0;
+        let y = p.y * s - cell / 2.0;
+        out.push_str(&format!(
+            "<rect x=\"{x:.1}\" y=\"{y:.1}\" width=\"{cell:.1}\" height=\"{cell:.1}\" \
+             fill=\"{}\" fill-opacity=\"{:.2}\"><title>{} (rank {})</title></rect>\n",
+            p.color, p.opacity, escape(&p.name), p.rank
+        ));
+        if p.rank < 30 {
+            out.push_str(&format!(
+                "<text x=\"{:.1}\" y=\"{:.1}\" font-size=\"{:.0}\" text-anchor=\"middle\" fill=\"black\">{}</text>\n",
+                p.x * s,
+                p.y * s + cell * 0.25,
+                cell * 0.7,
+                p.rank
+            ));
+        }
+    }
+    out.push_str("</svg>\n");
+    out
+}
+
+/// Compact terminal rendering (grid of rank digits).
+pub fn to_text(placed: &[Placed], side: usize) -> String {
+    let mut grid = vec![vec![' '; side]; side];
+    for p in placed.iter().rev() {
+        // most important drawn last (wins collisions)
+        let x = ((p.x * side as f64) as usize).min(side - 1);
+        let y = ((p.y * side as f64) as usize).min(side - 1);
+        grid[y][x] = if p.rank < 10 {
+            char::from_digit(p.rank as u32, 10).unwrap()
+        } else {
+            match p.color {
+                "#4c78a8" => 'n',
+                "#f58518" => 'b',
+                _ => 'c',
+            }
+        };
+    }
+    let mut s = String::new();
+    for row in grid {
+        s.extend(row);
+        s.push('\n');
+    }
+    s
+}
+
+fn escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ranking(n: usize) -> Ranking {
+        Ranking {
+            order: (0..n).collect(),
+            scores: (0..n).map(|i| 1.0 / (1.0 + i as f64)).collect(),
+        }
+    }
+
+    #[test]
+    fn layout_center_outward() {
+        let schema = Schema::numeric(20);
+        let placed = layout(&schema, &ranking(20));
+        // Rank 0 is at the center; later ranks farther out.
+        let d = |p: &Placed| ((p.x - 0.5).powi(2) + (p.y - 0.5).powi(2)).sqrt();
+        assert!(d(&placed[0]) < 0.05);
+        assert!(d(&placed[19]) > d(&placed[1]));
+        // All inside the canvas.
+        for p in &placed {
+            assert!((0.0..=1.0).contains(&p.x) && (0.0..=1.0).contains(&p.y));
+        }
+    }
+
+    #[test]
+    fn opacity_decays_with_rank() {
+        let schema = Schema::numeric(10);
+        let placed = layout(&schema, &ranking(10));
+        assert!(placed[0].opacity > placed[9].opacity);
+    }
+
+    #[test]
+    fn svg_well_formed_ish() {
+        let schema = Schema::numeric(5);
+        let svg = to_svg(&layout(&schema, &ranking(5)), 400);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert_eq!(svg.matches("<rect").count(), 6); // bg + 5 features
+    }
+
+    #[test]
+    fn text_render_shows_top_ranks() {
+        let schema = Schema::numeric(8);
+        let txt = to_text(&layout(&schema, &ranking(8)), 21);
+        assert!(txt.contains('0'));
+        assert_eq!(txt.lines().count(), 21);
+    }
+}

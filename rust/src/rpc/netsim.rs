@@ -1,0 +1,125 @@
+//! Network-latency simulator.
+//!
+//! We run over loopback (~50µs RTT); the paper measures a datacenter hop
+//! between the application front-end and the ML back-end. `NetSim` injects a
+//! calibrated lognormal delay on the server side so the stage-1 : RPC cost
+//! ratio matches the paper's regime (first stage ≈ 5× faster than RPC,
+//! Table 3). The delay distribution is configurable per experiment and the
+//! benches report the measured ratio next to the paper's.
+
+use crate::util::rng::Rng;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Latency model: `delay = base · exp(sigma · N(0,1))`, clamped to
+/// `[0, max]`. `base_us = 0` disables injection entirely.
+#[derive(Clone, Debug)]
+pub struct NetSimConfig {
+    pub base_us: f64,
+    pub sigma: f64,
+    pub max_us: f64,
+}
+
+impl Default for NetSimConfig {
+    fn default() -> Self {
+        // Chosen so RPC ≈ 5× embedded stage-1 under the default serving
+        // config (calibration recorded in EXPERIMENTS.md §Table 3).
+        NetSimConfig {
+            base_us: 250.0,
+            sigma: 0.25,
+            max_us: 5_000.0,
+        }
+    }
+}
+
+impl NetSimConfig {
+    pub fn off() -> NetSimConfig {
+        NetSimConfig {
+            base_us: 0.0,
+            sigma: 0.0,
+            max_us: 0.0,
+        }
+    }
+}
+
+/// Thread-safe delay sampler.
+pub struct NetSim {
+    cfg: NetSimConfig,
+    rng: Mutex<Rng>,
+}
+
+impl NetSim {
+    pub fn new(cfg: NetSimConfig, seed: u64) -> NetSim {
+        NetSim {
+            cfg,
+            rng: Mutex::new(Rng::new(seed)),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.base_us > 0.0
+    }
+
+    /// Sample one delay.
+    pub fn sample(&self) -> Duration {
+        if !self.enabled() {
+            return Duration::ZERO;
+        }
+        let z = self.rng.lock().unwrap().normal();
+        let us = (self.cfg.base_us * (self.cfg.sigma * z).exp()).clamp(0.0, self.cfg.max_us);
+        Duration::from_nanos((us * 1000.0) as u64)
+    }
+
+    /// Sleep for one sampled delay (called on the service side per request).
+    pub fn inject(&self) {
+        if self.enabled() {
+            std::thread::sleep(self.sample());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_zero() {
+        let ns = NetSim::new(NetSimConfig::off(), 1);
+        assert!(!ns.enabled());
+        assert_eq!(ns.sample(), Duration::ZERO);
+    }
+
+    #[test]
+    fn mean_near_base() {
+        let ns = NetSim::new(
+            NetSimConfig {
+                base_us: 200.0,
+                sigma: 0.2,
+                max_us: 10_000.0,
+            },
+            2,
+        );
+        let n = 20_000;
+        let mean_us: f64 = (0..n)
+            .map(|_| ns.sample().as_nanos() as f64 / 1000.0)
+            .sum::<f64>()
+            / n as f64;
+        // lognormal mean = base·exp(sigma²/2) ≈ 204
+        assert!((mean_us - 204.0).abs() < 10.0, "mean={mean_us}");
+    }
+
+    #[test]
+    fn clamped_at_max() {
+        let ns = NetSim::new(
+            NetSimConfig {
+                base_us: 100.0,
+                sigma: 3.0,
+                max_us: 300.0,
+            },
+            3,
+        );
+        for _ in 0..5000 {
+            assert!(ns.sample() <= Duration::from_micros(300));
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! Wire protocol: length-prefixed little-endian binary frames.
+//!
+//! ```text
+//! request  := u32 payload_len | u64 req_id | u32 n_rows | u32 row_len | f32[n_rows*row_len]
+//! response := u32 payload_len | u64 req_id | u32 n_rows | f32[n_rows]
+//! ```
+//!
+//! `row_len` is the padded feature width; probabilities come back one per
+//! row. A zero-row request is a ping (used for health checks / RTT probes).
+
+use std::io::{Read, Write};
+
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Inference request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub req_id: u64,
+    pub row_len: u32,
+    pub rows: Vec<f32>,
+}
+
+impl Request {
+    pub fn n_rows(&self) -> u32 {
+        if self.row_len == 0 {
+            0
+        } else {
+            (self.rows.len() / self.row_len as usize) as u32
+        }
+    }
+
+    pub fn wire_size(&self) -> usize {
+        4 + 8 + 4 + 4 + self.rows.len() * 4
+    }
+}
+
+/// Inference response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub req_id: u64,
+    pub probs: Vec<f32>,
+}
+
+impl Response {
+    pub fn wire_size(&self) -> usize {
+        4 + 8 + 4 + self.probs.len() * 4
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode a request frame.
+pub fn encode_request(r: &Request, buf: &mut Vec<u8>) {
+    buf.clear();
+    let payload = 8 + 4 + 4 + r.rows.len() * 4;
+    put_u32(buf, payload as u32);
+    put_u64(buf, r.req_id);
+    put_u32(buf, r.n_rows());
+    put_u32(buf, r.row_len);
+    for v in &r.rows {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a response frame.
+pub fn encode_response(r: &Response, buf: &mut Vec<u8>) {
+    buf.clear();
+    let payload = 8 + 4 + r.probs.len() * 4;
+    put_u32(buf, payload as u32);
+    put_u64(buf, r.req_id);
+    put_u32(buf, r.probs.len() as u32);
+    for v in &r.probs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(false) // clean EOF between frames
+                } else {
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "mid-frame EOF",
+                    ))
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+fn get_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+fn get_u64(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+/// Read one request frame. `Ok(None)` = clean EOF.
+pub fn read_request(stream: &mut impl Read) -> std::io::Result<Option<Request>> {
+    let mut hdr = [0u8; 4];
+    if !read_exact_or_eof(stream, &mut hdr)? {
+        return Ok(None);
+    }
+    let len = get_u32(&hdr, 0) as usize;
+    if len < 16 || len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    if !read_exact_or_eof(stream, &mut payload)? {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "truncated request",
+        ));
+    }
+    let req_id = get_u64(&payload, 0);
+    let n_rows = get_u32(&payload, 8) as usize;
+    let row_len = get_u32(&payload, 12);
+    let expected = 16 + n_rows * row_len as usize * 4;
+    if expected != len {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} != expected {expected}"),
+        ));
+    }
+    let mut rows = Vec::with_capacity(n_rows * row_len as usize);
+    for c in payload[16..].chunks_exact(4) {
+        rows.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    Ok(Some(Request {
+        req_id,
+        row_len,
+        rows,
+    }))
+}
+
+/// Read one response frame. `Ok(None)` = clean EOF.
+pub fn read_response(stream: &mut impl Read) -> std::io::Result<Option<Response>> {
+    let mut hdr = [0u8; 4];
+    if !read_exact_or_eof(stream, &mut hdr)? {
+        return Ok(None);
+    }
+    let len = get_u32(&hdr, 0) as usize;
+    if len < 12 || len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    if !read_exact_or_eof(stream, &mut payload)? {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "truncated response",
+        ));
+    }
+    let req_id = get_u64(&payload, 0);
+    let n = get_u32(&payload, 8) as usize;
+    if 12 + n * 4 != len {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "response length mismatch",
+        ));
+    }
+    let mut probs = Vec::with_capacity(n);
+    for c in payload[12..].chunks_exact(4) {
+        probs.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    Ok(Some(Response { req_id, probs }))
+}
+
+/// Write a pre-encoded frame.
+pub fn write_frame(stream: &mut impl Write, buf: &[u8]) -> std::io::Result<()> {
+    stream.write_all(buf)?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = Request {
+            req_id: 42,
+            row_len: 3,
+            rows: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        let mut buf = Vec::new();
+        encode_request(&r, &mut buf);
+        let mut cur = Cursor::new(buf);
+        let r2 = read_request(&mut cur).unwrap().unwrap();
+        assert_eq!(r, r2);
+        assert_eq!(r2.n_rows(), 2);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response {
+            req_id: 7,
+            probs: vec![0.25, 0.75],
+        };
+        let mut buf = Vec::new();
+        encode_response(&r, &mut buf);
+        let r2 = read_response(&mut Cursor::new(buf)).unwrap().unwrap();
+        assert_eq!(r, r2);
+    }
+
+    #[test]
+    fn ping_request() {
+        let r = Request {
+            req_id: 1,
+            row_len: 0,
+            rows: vec![],
+        };
+        let mut buf = Vec::new();
+        encode_request(&r, &mut buf);
+        let r2 = read_request(&mut Cursor::new(buf)).unwrap().unwrap();
+        assert_eq!(r2.n_rows(), 0);
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let empty: Vec<u8> = vec![];
+        assert!(read_request(&mut Cursor::new(empty)).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_errors() {
+        let r = Request {
+            req_id: 9,
+            row_len: 2,
+            rows: vec![1.0, 2.0],
+        };
+        let mut buf = Vec::new();
+        encode_request(&r, &mut buf);
+        buf.truncate(buf.len() - 3);
+        assert!(read_request(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn corrupt_length_errors() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 32]);
+        assert!(read_request(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn length_consistency_enforced() {
+        // n_rows*row_len disagreeing with payload length must error.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&5u64.to_le_bytes());
+        payload.extend_from_slice(&3u32.to_le_bytes()); // claims 3 rows
+        payload.extend_from_slice(&2u32.to_le_bytes()); // of width 2
+        payload.extend_from_slice(&1.0f32.to_le_bytes()); // but only 1 value
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        assert!(read_request(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn multiple_frames_sequential() {
+        let mut buf = Vec::new();
+        let mut tmp = Vec::new();
+        for id in 0..3 {
+            encode_request(
+                &Request {
+                    req_id: id,
+                    row_len: 1,
+                    rows: vec![id as f32],
+                },
+                &mut tmp,
+            );
+            buf.extend_from_slice(&tmp);
+        }
+        let mut cur = Cursor::new(buf);
+        for id in 0..3 {
+            let r = read_request(&mut cur).unwrap().unwrap();
+            assert_eq!(r.req_id, id);
+        }
+        assert!(read_request(&mut cur).unwrap().is_none());
+    }
+}

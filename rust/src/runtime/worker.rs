@@ -1,0 +1,119 @@
+//! Engine worker: confines the (!Send) PJRT client to one dedicated thread.
+//!
+//! The `xla` crate's `PjRtClient` holds an `Rc` internally, so the engine
+//! cannot be shared across the batcher workers directly. `EngineWorker`
+//! owns the engine on its own thread and exposes a `Send + Sync` handle;
+//! jobs (row batches) arrive over a channel with per-job reply channels.
+//! Execution is serialized, which is what we want anyway — the CPU PJRT
+//! executable is itself internally parallel.
+
+use super::{Engine, ForestParams, Graph};
+use crate::lrwbins::tables::KernelInputs;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+enum Job {
+    Second {
+        rows: Vec<f32>,
+        n: usize,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    First {
+        rows: Vec<f32>,
+        n: usize,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    Shutdown,
+}
+
+/// Send+Sync handle to a dedicated engine thread.
+pub struct EngineWorker {
+    tx: Mutex<mpsc::Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub f_max: usize,
+}
+
+impl EngineWorker {
+    /// Spawn the worker: loads artifacts and compiles on the worker thread.
+    /// `forest` enables second-stage jobs; `kernel` enables first-stage.
+    pub fn spawn(
+        artifacts_dir: &Path,
+        graphs: Vec<Graph>,
+        forest: Option<ForestParams>,
+        kernel: Option<KernelInputs>,
+    ) -> Result<EngineWorker> {
+        let dir = artifacts_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir, &graphs) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(e.shapes.f_max));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for job in rx {
+                    match job {
+                        Job::Second { rows, n, reply } => {
+                            let forest = forest.as_ref().expect("no forest configured");
+                            let _ = reply.send(engine.second_stage(&rows, n, forest));
+                        }
+                        Job::First { rows, n, reply } => {
+                            let kernel = kernel.as_ref().expect("no kernel inputs configured");
+                            let _ = reply.send(engine.first_stage(&rows, n, kernel));
+                        }
+                        Job::Shutdown => return,
+                    }
+                }
+            })?;
+        let f_max = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during load"))??;
+        Ok(EngineWorker {
+            tx: Mutex::new(tx),
+            handle: Some(handle),
+            f_max,
+        })
+    }
+
+    /// Second-stage prediction over padded rows (`rows.len() == n * f_max`).
+    pub fn second_stage(&self, rows: Vec<f32>, n: usize) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Second { rows, n, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))?
+    }
+
+    /// First-stage (cross-check) prediction over padded rows.
+    pub fn first_stage(&self, rows: Vec<f32>, n: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::First { rows, n, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))?
+    }
+}
+
+impl Drop for EngineWorker {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Job::Shutdown);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! CSV read/write for datasets.
+//!
+//! Format: header row with feature names, then one row per datum, label in
+//! the last column named `label`. A sidecar `<name>.schema.json` carries the
+//! column types so categorical cardinalities survive the round trip.
+
+use super::{ColType, Dataset, Schema};
+use crate::util::json::Json;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Write dataset + schema sidecar.
+pub fn write_csv(data: &Dataset, path: &Path) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let header: Vec<&str> = data
+        .schema
+        .names
+        .iter()
+        .map(|s| s.as_str())
+        .chain(std::iter::once("label"))
+        .collect();
+    writeln!(w, "{}", header.join(","))?;
+    let nf = data.n_features();
+    let mut line = String::new();
+    for r in 0..data.n_rows() {
+        line.clear();
+        for f in 0..nf {
+            let v = data.cols[f][r];
+            if v == v.trunc() && v.abs() < 1e7 {
+                line.push_str(&format!("{}", v as i64));
+            } else {
+                line.push_str(&format!("{v}"));
+            }
+            line.push(',');
+        }
+        line.push_str(&format!("{}", data.labels[r] as i64));
+        writeln!(w, "{line}")?;
+    }
+    w.flush()?;
+    // Schema sidecar.
+    let mut types = Vec::new();
+    for t in &data.schema.types {
+        types.push(match t {
+            ColType::Numeric => Json::Str("numeric".into()),
+            ColType::Boolean => Json::Str("boolean".into()),
+            ColType::Categorical { cardinality } => {
+                Json::Str(format!("categorical:{cardinality}"))
+            }
+        });
+    }
+    let mut obj = Json::obj();
+    obj.set("types", Json::Arr(types));
+    std::fs::write(schema_path(path), obj.pretty())?;
+    Ok(())
+}
+
+fn schema_path(csv: &Path) -> std::path::PathBuf {
+    let mut p = csv.as_os_str().to_owned();
+    p.push(".schema.json");
+    std::path::PathBuf::from(p)
+}
+
+/// Read dataset; uses the schema sidecar if present, otherwise infers
+/// (integer 0/1 columns → Boolean, small-integer → Categorical, else
+/// Numeric).
+pub fn read_csv(path: &Path) -> std::io::Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "empty csv"))??;
+    let mut names: Vec<String> = header.split(',').map(|s| s.trim().to_string()).collect();
+    let label_col = names
+        .iter()
+        .position(|n| n == "label")
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "no label column"))?;
+    names.remove(label_col);
+    let nf = names.len();
+
+    let mut cols: Vec<Vec<f32>> = vec![Vec::new(); nf];
+    let mut labels = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut fi = 0;
+        let mut label = None;
+        for (ci, cell) in line.split(',').enumerate() {
+            let v: f32 = cell.trim().parse().map_err(|_| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad number '{cell}' line {}", lineno + 2),
+                )
+            })?;
+            if ci == label_col {
+                label = Some(v);
+            } else {
+                if fi >= nf {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("line {} has too many columns", lineno + 2),
+                    ));
+                }
+                cols[fi].push(v);
+                fi += 1;
+            }
+        }
+        if fi != nf {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("line {} has {} features, expected {nf}", lineno + 2, fi),
+            ));
+        }
+        labels.push(label.unwrap());
+    }
+
+    // Types: sidecar, else inference.
+    let types = match std::fs::read_to_string(schema_path(path)) {
+        Ok(text) => parse_schema_types(&text, nf)?,
+        Err(_) => infer_types(&cols),
+    };
+
+    let data = Dataset {
+        schema: Schema { names, types },
+        cols,
+        labels,
+    };
+    data.validate()
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    Ok(data)
+}
+
+fn parse_schema_types(text: &str, nf: usize) -> std::io::Result<Vec<ColType>> {
+    let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+    let j = Json::parse(text).map_err(|e| err(&e.to_string()))?;
+    let arr = j
+        .get("types")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err("schema missing types"))?;
+    if arr.len() != nf {
+        return Err(err("schema/csv column count mismatch"));
+    }
+    arr.iter()
+        .map(|t| {
+            let s = t.as_str().ok_or_else(|| err("bad type entry"))?;
+            Ok(match s {
+                "numeric" => ColType::Numeric,
+                "boolean" => ColType::Boolean,
+                s if s.starts_with("categorical:") => ColType::Categorical {
+                    cardinality: s["categorical:".len()..]
+                        .parse()
+                        .map_err(|_| err("bad cardinality"))?,
+                },
+                _ => return Err(err(&format!("unknown type '{s}'"))),
+            })
+        })
+        .collect()
+}
+
+fn infer_types(cols: &[Vec<f32>]) -> Vec<ColType> {
+    cols.iter()
+        .map(|c| {
+            let all_int = c.iter().all(|&v| v == v.trunc() && v >= 0.0);
+            if !all_int {
+                return ColType::Numeric;
+            }
+            let max = c.iter().cloned().fold(0.0f32, f32::max);
+            if max <= 1.0 {
+                ColType::Boolean
+            } else if max < 32.0 {
+                ColType::Categorical {
+                    cardinality: max as usize + 1,
+                }
+            } else {
+                ColType::Numeric
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lrwbins_csv_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> Dataset {
+        let mut d = Dataset::new(Schema {
+            names: vec!["x".into(), "flag".into(), "kind".into()],
+            types: vec![
+                ColType::Numeric,
+                ColType::Boolean,
+                ColType::Categorical { cardinality: 4 },
+            ],
+        });
+        d.push_row(&[1.25, 1.0, 3.0], 1.0);
+        d.push_row(&[-0.5, 0.0, 0.0], 0.0);
+        d.push_row(&[1e7 as f32, 1.0, 2.0], 1.0);
+        d
+    }
+
+    #[test]
+    fn roundtrip_with_sidecar() {
+        let p = tmpfile("roundtrip.csv");
+        let d = sample();
+        write_csv(&d, &p).unwrap();
+        let d2 = read_csv(&p).unwrap();
+        assert_eq!(d2.schema.names, d.schema.names);
+        assert_eq!(d2.schema.types, d.schema.types);
+        assert_eq!(d2.labels, d.labels);
+        for f in 0..3 {
+            assert_eq!(d2.cols[f], d.cols[f]);
+        }
+    }
+
+    #[test]
+    fn inference_without_sidecar() {
+        let p = tmpfile("nosidecar.csv");
+        std::fs::write(&p, "a,b,label\n0.5,1,1\n1.5,0,0\n2.5,1,1\n").unwrap();
+        let d = read_csv(&p).unwrap();
+        assert_eq!(d.schema.types[0], ColType::Numeric);
+        assert_eq!(d.schema.types[1], ColType::Boolean);
+        assert_eq!(d.n_rows(), 3);
+    }
+
+    #[test]
+    fn missing_label_column_errors() {
+        let p = tmpfile("nolabel.csv");
+        std::fs::write(&p, "a,b\n1,2\n").unwrap();
+        assert!(read_csv(&p).is_err());
+    }
+
+    #[test]
+    fn ragged_row_errors() {
+        let p = tmpfile("ragged.csv");
+        std::fs::write(&p, "a,label\n1,0\n1,2,3\n").unwrap();
+        assert!(read_csv(&p).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let p = tmpfile("badnum.csv");
+        std::fs::write(&p, "a,label\nfoo,0\n").unwrap();
+        assert!(read_csv(&p).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! Tabular dataset substrate: schema, column-major storage, splits, CSV IO,
+//! quantiles and normalization.
+//!
+//! The paper operates on medium tabular data (100K–10M rows, dozens to low
+//! thousands of features) with mixed feature types — numeric, Boolean and
+//! categorical — which get special handling during binning (Algorithm 1).
+//! Storage is column-major `f32` (categoricals are stored as small integer
+//! codes), which is the layout the histogram GBDT trainer and quantile
+//! computations want; the serving path materializes row vectors on demand.
+
+pub mod csv;
+pub mod split;
+pub mod stats;
+
+pub use split::{Split, ThreeWaySplit};
+
+/// Feature type. Categorical features carry their cardinality so binning can
+/// one-hot/bin them correctly (paper §3: Booleans get 2 bins, categoricals
+/// get per-value bins).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ColType {
+    Numeric,
+    Boolean,
+    Categorical { cardinality: usize },
+}
+
+impl ColType {
+    pub fn is_numeric(&self) -> bool {
+        matches!(self, ColType::Numeric)
+    }
+}
+
+/// Dataset schema: feature names + types. The label is binary {0,1} and kept
+/// separately from features.
+#[derive(Clone, Debug)]
+pub struct Schema {
+    pub names: Vec<String>,
+    pub types: Vec<ColType>,
+}
+
+impl Schema {
+    pub fn numeric(n: usize) -> Schema {
+        Schema {
+            names: (0..n).map(|i| format!("f{i}")).collect(),
+            types: vec![ColType::Numeric; n],
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.names.len()
+    }
+}
+
+/// Column-major tabular dataset with binary labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub schema: Schema,
+    /// `cols[f][r]` = value of feature `f` in row `r`.
+    pub cols: Vec<Vec<f32>>,
+    /// Binary labels in {0.0, 1.0}.
+    pub labels: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(schema: Schema) -> Dataset {
+        let n = schema.n_features();
+        Dataset {
+            schema,
+            cols: vec![Vec::new(); n],
+            labels: Vec::new(),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Append one row (feature values in schema order).
+    pub fn push_row(&mut self, features: &[f32], label: f32) {
+        debug_assert_eq!(features.len(), self.n_features());
+        debug_assert!(label == 0.0 || label == 1.0, "labels must be binary");
+        for (c, &v) in self.cols.iter_mut().zip(features) {
+            c.push(v);
+        }
+        self.labels.push(label);
+    }
+
+    /// Materialize row `r` into `buf` (cleared first).
+    pub fn row_into(&self, r: usize, buf: &mut Vec<f32>) {
+        buf.clear();
+        buf.extend(self.cols.iter().map(|c| c[r]));
+    }
+
+    pub fn row(&self, r: usize) -> Vec<f32> {
+        let mut buf = Vec::with_capacity(self.n_features());
+        self.row_into(r, &mut buf);
+        buf
+    }
+
+    /// Positive-label rate.
+    pub fn positive_rate(&self) -> f64 {
+        if self.labels.is_empty() {
+            return 0.0;
+        }
+        self.labels.iter().map(|&y| y as f64).sum::<f64>() / self.labels.len() as f64
+    }
+
+    /// Select a subset of rows (by index) into a new dataset.
+    pub fn take_rows(&self, idx: &[usize]) -> Dataset {
+        let mut cols = Vec::with_capacity(self.n_features());
+        for c in &self.cols {
+            cols.push(idx.iter().map(|&i| c[i]).collect());
+        }
+        Dataset {
+            schema: self.schema.clone(),
+            cols,
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+        }
+    }
+
+    /// Select a subset of feature columns (by index) into a new dataset.
+    pub fn take_features(&self, feats: &[usize]) -> Dataset {
+        Dataset {
+            schema: Schema {
+                names: feats.iter().map(|&f| self.schema.names[f].clone()).collect(),
+                types: feats.iter().map(|&f| self.schema.types[f].clone()).collect(),
+            },
+            cols: feats.iter().map(|&f| self.cols[f].clone()).collect(),
+            labels: self.labels.clone(),
+        }
+    }
+
+    /// First `n` rows (cheap prefix view used by the scaling study, Fig. 6).
+    pub fn head(&self, n: usize) -> Dataset {
+        let n = n.min(self.n_rows());
+        Dataset {
+            schema: self.schema.clone(),
+            cols: self.cols.iter().map(|c| c[..n].to_vec()).collect(),
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+
+    /// Sanity-check invariants (used by tests and after CSV load).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cols.len() != self.schema.n_features() {
+            return Err("column count != schema".into());
+        }
+        for (f, c) in self.cols.iter().enumerate() {
+            if c.len() != self.labels.len() {
+                return Err(format!("column {f} length {} != rows {}", c.len(), self.labels.len()));
+            }
+            match self.schema.types[f] {
+                ColType::Boolean => {
+                    if c.iter().any(|&v| v != 0.0 && v != 1.0) {
+                        return Err(format!("boolean column {f} has non-binary values"));
+                    }
+                }
+                ColType::Categorical { cardinality } => {
+                    if c.iter().any(|&v| v < 0.0 || v >= cardinality as f32 || v.fract() != 0.0) {
+                        return Err(format!("categorical column {f} out of range"));
+                    }
+                }
+                ColType::Numeric => {
+                    if c.iter().any(|&v| !v.is_finite()) {
+                        return Err(format!("numeric column {f} has non-finite values"));
+                    }
+                }
+            }
+        }
+        if self.labels.iter().any(|&y| y != 0.0 && y != 1.0) {
+            return Err("labels must be in {0,1}".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let mut d = Dataset::new(Schema {
+            names: vec!["a".into(), "b".into(), "cat".into()],
+            types: vec![
+                ColType::Numeric,
+                ColType::Boolean,
+                ColType::Categorical { cardinality: 3 },
+            ],
+        });
+        d.push_row(&[0.5, 1.0, 2.0], 1.0);
+        d.push_row(&[-1.5, 0.0, 0.0], 0.0);
+        d.push_row(&[2.5, 1.0, 1.0], 1.0);
+        d
+    }
+
+    #[test]
+    fn push_and_row_roundtrip() {
+        let d = tiny();
+        assert_eq!(d.n_rows(), 3);
+        assert_eq!(d.row(1), vec![-1.5, 0.0, 0.0]);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn take_rows_subsets() {
+        let d = tiny();
+        let s = d.take_rows(&[2, 0]);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.row(0), vec![2.5, 1.0, 1.0]);
+        assert_eq!(s.labels, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn take_features_subsets() {
+        let d = tiny();
+        let s = d.take_features(&[2, 0]);
+        assert_eq!(s.schema.names, vec!["cat", "a"]);
+        assert_eq!(s.row(0), vec![2.0, 0.5]);
+        assert_eq!(s.labels.len(), 3);
+    }
+
+    #[test]
+    fn positive_rate() {
+        let d = tiny();
+        assert!((d.positive_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_bad_boolean() {
+        let mut d = tiny();
+        d.cols[1][0] = 0.5;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_categorical() {
+        let mut d = tiny();
+        d.cols[2][0] = 7.0;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn head_prefix() {
+        let d = tiny();
+        let h = d.head(2);
+        assert_eq!(h.n_rows(), 2);
+        assert_eq!(h.row(1), d.row(1));
+    }
+}

@@ -1,0 +1,139 @@
+//! Train/validation/test splitting.
+//!
+//! Algorithm 1 needs a train set (bin quantiles + per-bin LR + GBDT) and a
+//! validation set (Algorithm 2's bin allocation); evaluation uses a held-out
+//! test set. Splits are seeded-shuffled index partitions.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Two-way split.
+pub struct Split {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Three-way split (train / validation / test).
+pub struct ThreeWaySplit {
+    pub train: Dataset,
+    pub val: Dataset,
+    pub test: Dataset,
+}
+
+/// Shuffle rows and split by fraction.
+pub fn train_test_split(data: &Dataset, test_frac: f64, rng: &mut Rng) -> Split {
+    let n = data.n_rows();
+    let mut idx = rng.permutation(n);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let test_idx: Vec<usize> = idx.drain(..n_test.min(n)).collect();
+    Split {
+        train: data.take_rows(&idx),
+        test: data.take_rows(&test_idx),
+    }
+}
+
+/// Shuffle rows and split three ways. `fracs = (train, val, test)` must sum
+/// to ~1.
+pub fn three_way_split(data: &Dataset, fracs: (f64, f64, f64), rng: &mut Rng) -> ThreeWaySplit {
+    let (ft, fv, fs) = fracs;
+    debug_assert!((ft + fv + fs - 1.0).abs() < 1e-6);
+    let n = data.n_rows();
+    let idx = rng.permutation(n);
+    let n_train = ((n as f64) * ft).round() as usize;
+    let n_val = ((n as f64) * fv).round() as usize;
+    let (train_idx, rest) = idx.split_at(n_train.min(n));
+    let (val_idx, test_idx) = rest.split_at(n_val.min(rest.len()));
+    ThreeWaySplit {
+        train: data.take_rows(train_idx),
+        val: data.take_rows(val_idx),
+        test: data.take_rows(test_idx),
+    }
+}
+
+/// Stratified two-way split: preserves the positive rate in both parts
+/// (important for the small public datasets like Banknote, 1k rows).
+pub fn stratified_split(data: &Dataset, test_frac: f64, rng: &mut Rng) -> Split {
+    let mut pos: Vec<usize> = Vec::new();
+    let mut neg: Vec<usize> = Vec::new();
+    for (i, &y) in data.labels.iter().enumerate() {
+        if y > 0.5 {
+            pos.push(i);
+        } else {
+            neg.push(i);
+        }
+    }
+    rng.shuffle(&mut pos);
+    rng.shuffle(&mut neg);
+    let np = ((pos.len() as f64) * test_frac).round() as usize;
+    let nn = ((neg.len() as f64) * test_frac).round() as usize;
+    let mut test_idx: Vec<usize> = pos[..np].to_vec();
+    test_idx.extend_from_slice(&neg[..nn]);
+    let mut train_idx: Vec<usize> = pos[np..].to_vec();
+    train_idx.extend_from_slice(&neg[nn..]);
+    rng.shuffle(&mut test_idx);
+    rng.shuffle(&mut train_idx);
+    Split {
+        train: data.take_rows(&train_idx),
+        test: data.take_rows(&test_idx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tabular::Schema;
+
+    fn make(n: usize) -> Dataset {
+        let mut d = Dataset::new(Schema::numeric(2));
+        for i in 0..n {
+            d.push_row(&[i as f32, (n - i) as f32], (i % 4 == 0) as u8 as f32);
+        }
+        d
+    }
+
+    #[test]
+    fn split_sizes_and_disjoint() {
+        let d = make(1000);
+        let mut rng = Rng::new(1);
+        let s = train_test_split(&d, 0.2, &mut rng);
+        assert_eq!(s.test.n_rows(), 200);
+        assert_eq!(s.train.n_rows(), 800);
+        // Row identities: feature 0 is a unique id.
+        let mut ids: Vec<i64> = s
+            .train
+            .cols[0]
+            .iter()
+            .chain(s.test.cols[0].iter())
+            .map(|&v| v as i64)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 1000);
+    }
+
+    #[test]
+    fn three_way_sums() {
+        let d = make(500);
+        let mut rng = Rng::new(2);
+        let s = three_way_split(&d, (0.6, 0.2, 0.2), &mut rng);
+        assert_eq!(s.train.n_rows() + s.val.n_rows() + s.test.n_rows(), 500);
+        assert_eq!(s.train.n_rows(), 300);
+    }
+
+    #[test]
+    fn stratified_preserves_rate() {
+        let d = make(1000); // 25% positive
+        let mut rng = Rng::new(3);
+        let s = stratified_split(&d, 0.3, &mut rng);
+        assert!((s.test.positive_rate() - 0.25).abs() < 0.01);
+        assert!((s.train.positive_rate() - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = make(100);
+        let s1 = train_test_split(&d, 0.5, &mut Rng::new(9));
+        let s2 = train_test_split(&d, 0.5, &mut Rng::new(9));
+        assert_eq!(s1.train.cols[0], s2.train.cols[0]);
+    }
+}

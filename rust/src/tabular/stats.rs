@@ -1,0 +1,210 @@
+//! Column statistics: quantiles, moments, z-score normalization.
+//!
+//! Quantile computation is the heart of Algorithm 1's binning ("split each of
+//! the n most important features into b bins dictated by the quantiles of the
+//! feature over the normalized training set"). We use exact order-statistic
+//! quantiles with linear interpolation (type-7, the numpy default) so the
+//! Rust trainer, the Python reference and the Pallas kernel all agree on bin
+//! boundaries.
+
+/// Exact quantile (type-7 / linear interpolation) of unsorted data.
+/// `q` in [0,1]. Returns NaN on empty input.
+pub fn quantile(xs: &[f32], q: f64) -> f32 {
+    if xs.is_empty() {
+        return f32::NAN;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Quantile of already-sorted data.
+pub fn quantile_sorted(sorted: &[f32], q: f64) -> f32 {
+    let n = sorted.len();
+    if n == 0 {
+        return f32::NAN;
+    }
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = (pos - lo as f64) as f32;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// The `b-1` interior quantile boundaries that split data into `b`
+/// equal-probability bins: q = 1/b, 2/b, …, (b-1)/b.
+pub fn bin_boundaries(xs: &[f32], b: usize) -> Vec<f32> {
+    debug_assert!(b >= 2);
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (1..b)
+        .map(|k| quantile_sorted(&v, k as f64 / b as f64))
+        .collect()
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(xs: &[f32]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Z-score normalization parameters for a feature set, fit on training data
+/// and applied to validation/serving inputs (paper: quantiles are over the
+/// *normalized* training set).
+#[derive(Clone, Debug)]
+pub struct Normalizer {
+    pub means: Vec<f64>,
+    pub stds: Vec<f64>,
+    /// Cached reciprocals; normalization is `(v - mean) * inv_std` in f64
+    /// (multiply beats divide on the serving hot path; ServingTables uses
+    /// the identical formula so bin ids can never diverge).
+    pub inv_stds: Vec<f64>,
+}
+
+impl Normalizer {
+    /// Fit per-column normalization. Non-numeric columns get identity
+    /// (mean 0, std 1) so codes pass through unchanged.
+    pub fn fit(data: &super::Dataset) -> Normalizer {
+        let mut means = Vec::with_capacity(data.n_features());
+        let mut stds = Vec::with_capacity(data.n_features());
+        for (f, col) in data.cols.iter().enumerate() {
+            if data.schema.types[f].is_numeric() {
+                let (m, s) = mean_std(col);
+                means.push(m);
+                stds.push(if s > 1e-12 { s } else { 1.0 });
+            } else {
+                means.push(0.0);
+                stds.push(1.0);
+            }
+        }
+        let inv_stds = stds.iter().map(|&s| 1.0 / s).collect();
+        Normalizer { means, stds, inv_stds }
+    }
+
+    #[inline]
+    pub fn apply_value(&self, f: usize, v: f32) -> f32 {
+        ((v as f64 - self.means[f]) * self.inv_stds[f]) as f32
+    }
+
+    /// Normalize a full dataset (producing a copy).
+    pub fn apply(&self, data: &super::Dataset) -> super::Dataset {
+        let mut out = data.clone();
+        for (f, col) in out.cols.iter_mut().enumerate() {
+            let (m, s) = (self.means[f], self.stds[f]);
+            if m != 0.0 || s != 1.0 {
+                // f64 arithmetic to match apply_value/apply_row exactly.
+                let inv = 1.0 / s;
+                for v in col.iter_mut() {
+                    *v = ((*v as f64 - m) * inv) as f32;
+                }
+            }
+        }
+        out
+    }
+
+    /// Normalize a row in place.
+    pub fn apply_row(&self, row: &mut [f32]) {
+        for (f, v) in row.iter_mut().enumerate() {
+            *v = ((*v as f64 - self.means[f]) * self.inv_stds[f]) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tabular::{Dataset, Schema};
+
+    #[test]
+    fn quantile_matches_numpy_type7() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        // numpy.quantile([1,2,3,4], .25) = 1.75
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-6);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-6);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+    }
+
+    #[test]
+    fn quantile_single_and_empty() {
+        assert_eq!(quantile(&[7.0], 0.3), 7.0);
+        assert!(quantile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn bin_boundaries_split_evenly() {
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let bounds = bin_boundaries(&xs, 4);
+        assert_eq!(bounds.len(), 3);
+        // Quartiles of 0..999 ≈ 249.75, 499.5, 749.25
+        assert!((bounds[0] - 249.75).abs() < 0.01);
+        assert!((bounds[1] - 499.5).abs() < 0.01);
+        assert!((bounds[2] - 749.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn bin_boundaries_monotone_even_with_ties() {
+        let xs = vec![1.0f32; 100];
+        let bounds = bin_boundaries(&xs, 3);
+        assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn normalizer_zero_mean_unit_std() {
+        let mut d = Dataset::new(Schema::numeric(1));
+        for i in 0..100 {
+            d.push_row(&[i as f32 * 2.0 + 5.0], (i % 2) as f32);
+        }
+        let norm = Normalizer::fit(&d);
+        let nd = norm.apply(&d);
+        let (m, s) = mean_std(&nd.cols[0]);
+        assert!(m.abs() < 1e-5);
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn normalizer_identity_for_boolean() {
+        use crate::tabular::ColType;
+        let mut d = Dataset::new(Schema {
+            names: vec!["b".into()],
+            types: vec![ColType::Boolean],
+        });
+        d.push_row(&[1.0], 1.0);
+        d.push_row(&[0.0], 0.0);
+        let norm = Normalizer::fit(&d);
+        let nd = norm.apply(&d);
+        assert_eq!(nd.cols[0], vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn normalizer_constant_column_safe() {
+        let mut d = Dataset::new(Schema::numeric(1));
+        for _ in 0..10 {
+            d.push_row(&[3.0], 0.0);
+        }
+        let norm = Normalizer::fit(&d);
+        let nd = norm.apply(&d);
+        assert!(nd.cols[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn apply_row_matches_apply() {
+        let mut d = Dataset::new(Schema::numeric(2));
+        for i in 0..50 {
+            d.push_row(&[i as f32, (i * i) as f32], (i % 2) as f32);
+        }
+        let norm = Normalizer::fit(&d);
+        let nd = norm.apply(&d);
+        let mut row = d.row(7);
+        norm.apply_row(&mut row);
+        assert_eq!(row, nd.row(7));
+    }
+}

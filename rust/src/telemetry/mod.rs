@@ -1,0 +1,189 @@
+//! Serving telemetry: per-stage latency histograms, request counters and
+//! CPU-time accounting.
+//!
+//! The paper's §5.2 claims are about mean latency (1.3×) and CPU resources
+//! (30% reduction); this module measures both: wall latency through
+//! `util::histogram`, CPU through `clock_gettime(CLOCK_THREAD_CPUTIME_ID)`
+//! (per-thread) and `getrusage` (whole process).
+
+use crate::util::histogram::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread CPU time in nanoseconds.
+pub fn thread_cpu_ns() -> u64 {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    // SAFETY: ts is a valid out-pointer; clockid is a constant.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+/// Process CPU time (user + system) in nanoseconds via getrusage.
+pub fn process_cpu_ns() -> u64 {
+    let mut ru: libc::rusage = unsafe { std::mem::zeroed() };
+    // SAFETY: ru is a valid out-pointer.
+    unsafe {
+        libc::getrusage(libc::RUSAGE_SELF, &mut ru);
+    }
+    let tv = |t: libc::timeval| t.tv_sec as u64 * 1_000_000_000 + t.tv_usec as u64 * 1_000;
+    tv(ru.ru_utime) + tv(ru.ru_stime)
+}
+
+/// Scoped CPU-time measurement on the current thread.
+pub struct CpuTimer {
+    start: u64,
+}
+
+impl CpuTimer {
+    pub fn start() -> CpuTimer {
+        CpuTimer {
+            start: thread_cpu_ns(),
+        }
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        thread_cpu_ns().saturating_sub(self.start)
+    }
+}
+
+/// All serving-side metrics, shared across threads.
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// End-to-end request latency (wall).
+    pub e2e: Histogram,
+    /// Stage-1 embedded evaluation latency.
+    pub stage1: Histogram,
+    /// RPC (second-stage) round-trip latency.
+    pub rpc: Histogram,
+    /// Backend batch-execution latency.
+    pub backend_exec: Histogram,
+    /// Requests served by stage 1 / by RPC.
+    pub stage1_hits: AtomicU64,
+    pub rpc_calls: AtomicU64,
+    /// CPU nanoseconds attributed to each stage (request-path threads).
+    pub stage1_cpu_ns: AtomicU64,
+    pub rpc_cpu_ns: AtomicU64,
+    /// Features fetched (the paper's feature-fetch cost: stage 1 fetches a
+    /// subset, the full model fetches everything — §5.2's 1.2×/70% claim).
+    pub features_fetched: AtomicU64,
+    /// Bytes moved over the RPC boundary (network-communication claim).
+    pub rpc_bytes: AtomicU64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn hit_stage1(&self, wall_ns: u64, cpu_ns: u64, feats: u64) {
+        self.stage1.record(wall_ns);
+        self.stage1_hits.fetch_add(1, Ordering::Relaxed);
+        self.stage1_cpu_ns.fetch_add(cpu_ns, Ordering::Relaxed);
+        self.features_fetched.fetch_add(feats, Ordering::Relaxed);
+    }
+
+    pub fn hit_rpc(&self, wall_ns: u64, cpu_ns: u64, feats: u64, bytes: u64) {
+        self.rpc.record(wall_ns);
+        self.rpc_calls.fetch_add(1, Ordering::Relaxed);
+        self.rpc_cpu_ns.fetch_add(cpu_ns, Ordering::Relaxed);
+        self.features_fetched.fetch_add(feats, Ordering::Relaxed);
+        self.rpc_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Reset every histogram and counter (between experiment phases).
+    pub fn reset_all(&self) {
+        self.e2e.reset();
+        self.stage1.reset();
+        self.rpc.reset();
+        self.backend_exec.reset();
+        for c in [
+            &self.stage1_hits,
+            &self.rpc_calls,
+            &self.stage1_cpu_ns,
+            &self.rpc_cpu_ns,
+            &self.features_fetched,
+            &self.rpc_bytes,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Fraction of requests served by stage 1.
+    pub fn coverage(&self) -> f64 {
+        let s1 = self.stage1_hits.load(Ordering::Relaxed) as f64;
+        let rpc = self.rpc_calls.load(Ordering::Relaxed) as f64;
+        if s1 + rpc == 0.0 {
+            0.0
+        } else {
+            s1 / (s1 + rpc)
+        }
+    }
+
+    /// Multi-line report for logs / EXPERIMENTS.md.
+    pub fn report(&self) -> String {
+        format!(
+            "e2e:     {}\nstage1:  {}\nrpc:     {}\nbackend: {}\ncoverage: {:.1}%  stage1_cpu: {:.3}ms  rpc_cpu: {:.3}ms  feats: {}  rpc_bytes: {}",
+            self.e2e.summary_ms(),
+            self.stage1.summary_ms(),
+            self.rpc.summary_ms(),
+            self.backend_exec.summary_ms(),
+            self.coverage() * 100.0,
+            self.stage1_cpu_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            self.rpc_cpu_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            self.features_fetched.load(Ordering::Relaxed),
+            self.rpc_bytes.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cpu_advances_under_work() {
+        let t = CpuTimer::start();
+        let mut acc = 0u64;
+        for i in 0..5_000_000u64 {
+            // black_box inside the loop defeats closed-form folding.
+            acc = acc.wrapping_add(std::hint::black_box(i) * i);
+        }
+        std::hint::black_box(acc);
+        assert!(t.elapsed_ns() > 100_000, "cpu={}ns", t.elapsed_ns());
+    }
+
+    #[test]
+    fn thread_cpu_ignores_sleep() {
+        let t = CpuTimer::start();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        // Sleeping burns (almost) no CPU.
+        assert!(t.elapsed_ns() < 10_000_000, "cpu={}ns", t.elapsed_ns());
+    }
+
+    #[test]
+    fn process_cpu_monotone() {
+        let a = process_cpu_ns();
+        let mut acc = 0u64;
+        for i in 0..1_000_000u64 {
+            acc = acc.wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        let b = process_cpu_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn metrics_coverage() {
+        let m = ServeMetrics::new();
+        m.hit_stage1(1000, 500, 8);
+        m.hit_stage1(1000, 500, 8);
+        m.hit_rpc(5000, 1000, 32, 128);
+        assert!((m.coverage() - 2.0 / 3.0).abs() < 1e-12);
+        let rep = m.report();
+        assert!(rep.contains("coverage: 66.7%"));
+    }
+}

@@ -1,0 +1,253 @@
+//! Micro/macro benchmark harness (criterion substitute).
+//!
+//! `cargo bench` targets in this repo use `harness = false` and drive this
+//! module: automatic warmup, calibrated iteration counts, wall-clock and
+//! CPU-time measurement, mean/median/stddev, and Markdown table output so
+//! bench results paste directly into EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|items| items as f64 / (self.mean_ns / 1e9))
+    }
+
+    pub fn row(&self) -> String {
+        let thr = self
+            .throughput_per_sec()
+            .map(|t| format!("{:.0}/s", t))
+            .unwrap_or_else(|| "-".into());
+        format!(
+            "| {} | {} | {} | {} | ±{} | {} |",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.stddev_ns),
+            thr
+        )
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner configuration.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_iters: 5,
+            max_iters: 10_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick mode for CI: shorter warmup/measurement.
+    pub fn quick(mut self, quick: bool) -> Self {
+        if quick {
+            self.warmup = Duration::from_millis(20);
+            self.measure = Duration::from_millis(150);
+        }
+        self
+    }
+
+    /// Benchmark a closure. The closure should do one "operation"; use
+    /// `std::hint::black_box` inside to defeat the optimizer.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.run_with_items(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (e.g. rows per call).
+    pub fn run_items<F: FnMut()>(&mut self, name: &str, items: u64, mut f: F) -> &BenchResult {
+        self.run_with_items(name, Some(items), &mut f)
+    }
+
+    fn run_with_items(
+        &mut self,
+        name: &str,
+        items: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // Warmup + estimate per-iteration cost.
+        let wstart = Instant::now();
+        let mut witers = 0u64;
+        while wstart.elapsed() < self.warmup || witers < 3 {
+            f();
+            witers += 1;
+            if witers >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_nanos() as f64 / witers as f64;
+
+        // Choose a batch size so each sample takes ~1/50 of the budget.
+        let sample_target_ns = (self.measure.as_nanos() as f64 / 50.0).max(1000.0);
+        let batch = ((sample_target_ns / per_iter.max(1.0)) as u64).clamp(1, 1 << 20);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mstart = Instant::now();
+        let mut total_iters = 0u64;
+        while mstart.elapsed() < self.measure || samples.len() < self.min_iters as usize {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(dt);
+            total_iters += batch;
+            if total_iters >= self.max_iters {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let median = samples[samples.len() / 2];
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n.max(1.0);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            median_ns: median,
+            stddev_ns: var.sqrt(),
+            min_ns: samples[0],
+            max_ns: *samples.last().unwrap(),
+            items_per_iter: items,
+        };
+        eprintln!("  bench {:40} mean={:>10} median={:>10}", name, fmt_ns(mean), fmt_ns(median));
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-measured result (for end-to-end phases that
+    /// can't be re-run in a closure).
+    pub fn record(&mut self, name: &str, mean_ns: f64, items: Option<u64>) {
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns,
+            median_ns: mean_ns,
+            stddev_ns: 0.0,
+            min_ns: mean_ns,
+            max_ns: mean_ns,
+            items_per_iter: items,
+        });
+    }
+
+    /// Markdown report of everything run so far.
+    pub fn report(&self, title: &str) -> String {
+        let mut s = format!(
+            "\n## {title}\n\n| case | iters | mean | median | stddev | throughput |\n|---|---|---|---|---|---|\n"
+        );
+        for r in &self.results {
+            s.push_str(&r.row());
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Is `--quick` present in the process args? All bench binaries honor it.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok()
+}
+
+/// Parse `--name value` style args from bench invocation (cargo bench passes
+/// extra args after `--`).
+pub fn bench_arg(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == &format!("--{name}"))
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sane_range() {
+        let mut b = Bench::new();
+        b.warmup = Duration::from_millis(5);
+        b.measure = Duration::from_millis(30);
+        let r = b.run("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.mean_ns < 1e7, "mean={}", r.mean_ns); // well under 10ms
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::new();
+        b.warmup = Duration::from_millis(2);
+        b.measure = Duration::from_millis(10);
+        let r = b.run_items("items", 1000, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.throughput_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn report_contains_rows() {
+        let mut b = Bench::new();
+        b.record("external", 123.0, Some(10));
+        let rep = b.report("Title");
+        assert!(rep.contains("external"));
+        assert!(rep.contains("Title"));
+    }
+}

@@ -1,0 +1,244 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text. Each binary declares its options up front so
+//! `--help` is accurate.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("--{name} expects an integer, got '{v}'");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("--{name} expects an integer, got '{v}'");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("--{name} expects a number, got '{v}'");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Command-line spec: name, about, declared options.
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// Declare an option that takes a value (with optional default).
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let dft = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{val}\n      {}{dft}\n", o.name, o.help));
+        }
+        s.push_str("  --help\n      Print this message\n");
+        s
+    }
+
+    /// Parse an iterator of arguments (not including argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                print!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} expects a value"))?,
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's real arguments.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse arguments after a subcommand (skips argv[0] and the subcommand).
+    pub fn parse_subcommand(&self) -> Args {
+        match self.parse_from(std::env::args().skip(2)) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test", "a test")
+            .opt("rows", "row count", Some("100"))
+            .opt("name", "dataset", None)
+            .flag("quick", "quick mode")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        cli().parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_usize("rows", 0), 100);
+        assert_eq!(a.get("name"), None);
+        assert!(!a.flag("quick"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parse(&["--rows", "5", "--name=aci"]).unwrap();
+        assert_eq!(a.get_usize("rows", 0), 5);
+        assert_eq!(a.get("name"), Some("aci"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse(&["--quick", "pos1", "pos2"]).unwrap();
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&["--name"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(parse(&["--quick=1"]).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Latency histogram with logarithmic buckets (HdrHistogram-lite).
+//!
+//! Used by the serving stack for per-stage latency accounting. Records
+//! nanosecond durations into log2-spaced buckets with linear sub-buckets,
+//! giving ~3% relative error on percentiles — plenty for Table 3 style
+//! reporting — with O(1) record and tiny memory.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const SUB_BITS: u32 = 5; // 32 linear sub-buckets per octave
+const SUB: usize = 1 << SUB_BITS;
+const OCTAVES: usize = 40; // covers 1ns .. ~18 minutes
+const NBUCKETS: usize = OCTAVES * SUB;
+
+/// Lock-free concurrent latency histogram (nanosecond values).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    #[inline]
+    fn bucket_index(value_ns: u64) -> usize {
+        let v = value_ns.max(1);
+        let octave = 63 - v.leading_zeros(); // floor(log2 v)
+        if octave < SUB_BITS {
+            return v as usize; // exact for small values
+        }
+        let sub = ((v >> (octave - SUB_BITS)) as usize) & (SUB - 1);
+        let idx = ((octave - SUB_BITS + 1) as usize) * SUB + sub;
+        idx.min(NBUCKETS - 1)
+    }
+
+    /// Lower bound of a bucket (inverse of `bucket_index`).
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let octave = (idx / SUB) as u32 + SUB_BITS - 1;
+        let sub = (idx % SUB) as u64;
+        (1u64 << octave) + (sub << (octave - SUB_BITS))
+    }
+
+    /// Record one duration in nanoseconds.
+    pub fn record(&self, value_ns: u64) {
+        self.buckets[Self::bucket_index(value_ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value_ns, Ordering::Relaxed);
+        self.max.fetch_max(value_ns, Ordering::Relaxed);
+        self.min.fetch_min(value_ns, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Approximate quantile (q in [0,1]).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max_ns()
+    }
+
+    /// Reset all counters.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+    }
+
+    /// One-line summary: mean/p50/p90/p99/max in ms.
+    pub fn summary_ms(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p90={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.count(),
+            self.mean_ns() / 1e6,
+            self.quantile_ns(0.50) as f64 / 1e6,
+            self.quantile_ns(0.90) as f64 / 1e6,
+            self.quantile_ns(0.99) as f64 / 1e6,
+            self.max_ns() as f64 / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_roundtrip_error_bounded() {
+        for v in [1u64, 7, 31, 32, 100, 1_000, 123_456, 10_000_000, 5_000_000_000] {
+            let idx = Histogram::bucket_index(v);
+            let lo = Histogram::bucket_value(idx);
+            assert!(lo <= v, "lo={lo} v={v}");
+            // Relative error bounded by sub-bucket width (~2/SUB)
+            let rel = (v - lo) as f64 / v as f64;
+            assert!(rel <= 2.0 / SUB as f64 + 1e-9, "v={v} lo={lo} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i * 1000);
+        }
+        let p50 = h.quantile_ns(0.5);
+        let p90 = h.quantile_ns(0.9);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        // p50 should be near 5,000,000 ns
+        assert!((p50 as f64 - 5e6).abs() / 5e6 < 0.1, "p50={p50}");
+    }
+
+    #[test]
+    fn mean_exact() {
+        let h = Histogram::new();
+        h.record(100);
+        h.record(300);
+        assert_eq!(h.mean_ns(), 200.0);
+        assert_eq!(h.min_ns(), 100);
+        assert_eq!(h.max_ns(), 300);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_records() {
+        let h = std::sync::Arc::new(Histogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(i + 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 80_000);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = Histogram::new();
+        h.record(5);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max_ns(), 0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Shared substrates: PRNG, JSON, CLI, thread pool, histograms, bench and
+//! property-test harnesses.
+//!
+//! These exist because the build is fully offline: `rand`, `serde`, `clap`,
+//! `rayon`, `criterion` and `proptest` are unavailable, so the library ships
+//! behaviourally-equivalent minimal implementations (see DESIGN.md §6).
+
+pub mod bench;
+pub mod cli;
+pub mod histogram;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+
+/// Argmax of a float slice (first max wins). Empty slice → None.
+pub fn argmax(xs: &[f64]) -> Option<usize> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+/// Numerically-stable sigmoid.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        let z = (-x).exp();
+        1.0 / (1.0 + z)
+    } else {
+        let z = x.exp();
+        z / (1.0 + z)
+    }
+}
+
+/// f32 sigmoid used on the serving hot path (matches the PJRT kernel).
+#[inline]
+pub fn sigmoid_f32(x: f32) -> f32 {
+    if x >= 0.0 {
+        let z = (-x).exp();
+        1.0 / (1.0 + z)
+    } else {
+        let z = x.exp();
+        z / (1.0 + z)
+    }
+}
+
+/// log(1 + e^x) without overflow.
+#[inline]
+pub fn log1p_exp(x: f64) -> f64 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_symmetry_and_bounds() {
+        for &x in &[-700.0, -10.0, -1.0, 0.0, 1.0, 10.0, 700.0] {
+            let s = sigmoid(x);
+            assert!((0.0..=1.0).contains(&s));
+            assert!((s + sigmoid(-x) - 1.0).abs() < 1e-12);
+        }
+        assert_eq!(sigmoid(0.0), 0.5);
+    }
+
+    #[test]
+    fn log1p_exp_matches_naive_in_safe_range() {
+        for &x in &[-20.0, -1.0, 0.0, 1.0, 20.0] {
+            let naive = (1.0 + (x as f64).exp()).ln();
+            assert!((log1p_exp(x) - naive).abs() < 1e-10);
+        }
+        // And does not overflow where naive would.
+        assert!(log1p_exp(800.0).is_finite());
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), Some(1));
+        assert_eq!(argmax(&[]), None);
+        assert_eq!(argmax(&[5.0, 5.0]), Some(0));
+    }
+}

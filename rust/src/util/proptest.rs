@@ -1,0 +1,164 @@
+//! Miniature property-based testing harness (proptest substitute).
+//!
+//! Runs a property against many seeded random inputs; on failure it retries
+//! with simpler inputs (halved sizes) to report a smaller counterexample, and
+//! always prints the failing seed so the case can be replayed exactly.
+//!
+//! Usage:
+//! ```ignore
+//! check(200, |g| {
+//!     let xs = g.vec_f64(0..100, -1e3..1e3);
+//!     let metric = my_metric(&xs);
+//!     prop_assert!(metric >= 0.0, "metric={metric}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Property outcome: Err carries a human-readable failure description.
+pub type PropResult = Result<(), String>;
+
+/// Random input generator handed to properties. Wraps an `Rng` with
+/// size-aware helpers; `scale` shrinks toward 0 on failure replays.
+pub struct Gen {
+    pub rng: Rng,
+    pub scale: f64,
+}
+
+impl Gen {
+    /// Scaled size draw from an inclusive-exclusive range.
+    pub fn size(&mut self, range: std::ops::Range<usize>) -> usize {
+        let lo = range.start;
+        let hi = range.end.max(lo + 1);
+        let span = ((hi - lo) as f64 * self.scale).max(1.0) as usize;
+        lo + self.rng.index(span.min(hi - lo).max(1))
+    }
+
+    pub fn f64(&mut self, range: std::ops::Range<f64>) -> f64 {
+        self.rng.range_f64(range.start, range.end)
+    }
+
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        range.start + self.rng.index(range.end - range.start)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    pub fn vec_f64(&mut self, len: std::ops::Range<usize>, range: std::ops::Range<f64>) -> Vec<f64> {
+        let n = self.size(len);
+        (0..n).map(|_| self.f64(range.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: std::ops::Range<usize>, range: std::ops::Range<f64>) -> Vec<f32> {
+        self.vec_f64(len, range).into_iter().map(|x| x as f32).collect()
+    }
+
+    /// Labels in {0,1} with given positive rate.
+    pub fn labels(&mut self, n: usize, pos_rate: f64) -> Vec<f32> {
+        (0..n).map(|_| if self.rng.bool(pos_rate) { 1.0 } else { 0.0 }).collect()
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with seed + counterexample
+/// information on the first failure.
+pub fn check<F>(cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    // Base seed can be overridden for replay.
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00u64);
+    for case in 0..cases as u64 {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            scale: 1.0,
+        };
+        if let Err(msg) = prop(&mut g) {
+            // Try smaller scales with the same seed to report a simpler case.
+            let mut simplest = (1.0f64, msg);
+            for &scale in &[0.5, 0.25, 0.1, 0.05] {
+                let mut g = Gen {
+                    rng: Rng::new(seed),
+                    scale,
+                };
+                if let Err(m) = prop(&mut g) {
+                    simplest = (scale, m);
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}, scale {}):\n  {}\n  replay: PROP_SEED={base} (case {case})",
+                simplest.0, simplest.1
+            );
+        }
+    }
+}
+
+/// Assert inside a property, producing an Err instead of panicking.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}: {}", stringify!($cond), format!($($fmt)+)));
+        }
+    };
+}
+
+/// Approximate float equality helper for properties and tests.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    (a - b).abs() <= tol * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        check(50, |g| {
+            let xs = g.vec_f64(1..50, -10.0..10.0);
+            let sum: f64 = xs.iter().sum();
+            prop_assert!(sum.abs() <= 10.0 * xs.len() as f64 + 1e-9);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(50, |g| {
+            let x = g.f64(0.0..1.0);
+            prop_assert!(x < 0.5, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn approx_eq_behaviour() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(!approx_eq(1.0, 1.1, 1e-9));
+        assert!(approx_eq(1e9, 1e9 + 10.0, 1e-7));
+    }
+
+    #[test]
+    fn gen_respects_ranges() {
+        check(100, |g| {
+            let n = g.usize(3..10);
+            prop_assert!((3..10).contains(&n));
+            let x = g.f64(-2.0..2.0);
+            prop_assert!((-2.0..2.0).contains(&x));
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,243 @@
+//! Work-stealing-free fixed thread pool and data-parallel helpers.
+//!
+//! The offline build has no `rayon`/`tokio`; this module provides the
+//! parallelism substrate: a fixed pool with a shared injector queue for the
+//! serving stack, and `parallel_for_chunks` / `parallel_map` built on
+//! `std::thread::scope` for the trainers (GBDT histogram building, per-bin LR
+//! training, AutoML sweeps).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    available: Condvar,
+    shutdown: Mutex<bool>,
+    active: AtomicUsize,
+}
+
+/// Fixed-size thread pool with a shared FIFO queue.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: Mutex::new(false),
+            active: AtomicUsize::new(0),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = shared.clone();
+                thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            workers,
+            size,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Number of jobs queued or running.
+    pub fn in_flight(&self) -> usize {
+        let queued = self.shared.queue.lock().unwrap().len();
+        queued + self.shared.active.load(Ordering::Relaxed)
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(f));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Submit a job returning a receiver for its result.
+    pub fn submit<T, F>(&self, f: F) -> mpsc::Receiver<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        self.execute(move || {
+            let _ = tx.send(f());
+        });
+        rx
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if *shared.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => {
+                shared.active.fetch_add(1, Ordering::Relaxed);
+                j();
+                shared.active.fetch_sub(1, Ordering::Relaxed);
+            }
+            None => return,
+        }
+    }
+}
+
+/// Default worker count: physical-ish parallelism, capped for CI sanity.
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(chunk_index, range)` over `n` items split into ~`threads` chunks,
+/// in parallel, on scoped threads. Blocks until done.
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        for (ci, start) in (0..n).step_by(chunk).enumerate() {
+            let end = (start + chunk).min(n);
+            let f = &f;
+            s.spawn(move || f(ci, start..end));
+        }
+    });
+}
+
+/// Parallel map over indices `0..n`, preserving order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = out.as_mut_slice();
+    // Split the output into per-chunk mutable slices.
+    let threads = threads.clamp(1, n.max(1));
+    let chunk = n.div_ceil(threads.max(1)).max(1);
+    thread::scope(|s| {
+        let mut rest = slots;
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let f = &f;
+            let base = start;
+            s.spawn(move || {
+                for (i, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(f(base + i));
+                }
+            });
+            start += take;
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let rxs: Vec<_> = (0..100)
+            .map(|i| {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(i, Ordering::Relaxed);
+                    i
+                })
+            })
+            .collect();
+        let sum: u64 = rxs.into_iter().map(|rx| rx.recv().unwrap()).sum();
+        assert_eq!(sum, 4950);
+        assert_eq!(counter.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = c.clone();
+            pool.execute(move || {
+                thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // must not hang; jobs already queued may be dropped or run
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(1000, 8, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_for_chunks_covers_everything() {
+        let n = 1013; // prime-ish, uneven chunks
+        let seen = (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        parallel_for_chunks(n, 7, |_, range| {
+            for i in range {
+                seen[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(seen.iter().all(|a| a.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_zero_items() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,130 @@
+//! Launcher smoke tests: drive the real `lrwbins` binary through the
+//! deployment flow (datagen → CSV → train → saved models → predict) and the
+//! informational subcommands.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_lrwbins"))
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("lrwbins_cli").join(name);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn datagen_train_predict_roundtrip() {
+    let dir = tmpdir("roundtrip");
+    let csv = dir.join("ds.csv");
+
+    let out = bin()
+        .args(["datagen", "--name", "shrutime", "--rows", "4000"])
+        .arg("--out")
+        .arg(&csv)
+        .output()
+        .expect("run datagen");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(csv.exists());
+
+    let out = bin()
+        .args(["train", "--quick", "--data"])
+        .arg(&csv)
+        .arg("--out-dir")
+        .arg(&dir)
+        .output()
+        .expect("run train");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("shape search"), "stdout: {stdout}");
+    let tables = dir.join("ds.tables.json");
+    let gbdt = dir.join("ds.gbdt.json");
+    assert!(tables.exists() && gbdt.exists());
+
+    let preds = dir.join("preds.csv");
+    let out = bin()
+        .arg("predict")
+        .arg("--data")
+        .arg(&csv)
+        .arg("--tables")
+        .arg(&tables)
+        .arg("--gbdt")
+        .arg(&gbdt)
+        .arg("--out")
+        .arg(&preds)
+        .output()
+        .expect("run predict");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("coverage"), "stdout: {stdout}");
+    assert!(stdout.contains("AUC"), "labels present → metrics printed: {stdout}");
+    let text = std::fs::read_to_string(&preds).unwrap();
+    assert!(text.starts_with("prob,stage"));
+    assert_eq!(text.lines().count(), 4001); // header + rows
+}
+
+#[test]
+fn unknown_subcommand_exits_nonzero() {
+    let out = bin().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("usage"));
+}
+
+#[test]
+fn unknown_preset_exits_nonzero() {
+    let out = bin().args(["datagen", "--name", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn fig5_writes_svg() {
+    let dir = tmpdir("fig5");
+    let svg = dir.join("f.svg");
+    let out = bin()
+        .args(["fig5", "--name", "banknote", "--rows", "1000"])
+        .arg("--out")
+        .arg(&svg)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&svg).unwrap();
+    assert!(text.starts_with("<svg"));
+}
+
+#[test]
+fn predict_rejects_mismatched_features() {
+    let dir = tmpdir("mismatch");
+    let csv_a = dir.join("a.csv");
+    let csv_b = dir.join("b.csv");
+    for (name, path) in [("banknote", &csv_a), ("aci", &csv_b)] {
+        let out = bin()
+            .args(["datagen", "--name", name, "--rows", "1000"])
+            .arg("--out")
+            .arg(path)
+            .output()
+            .unwrap();
+        assert!(out.status.success());
+    }
+    let out = bin()
+        .args(["train", "--quick", "--data"])
+        .arg(&csv_a)
+        .arg("--out-dir")
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    // Score the wrong dataset: feature-count mismatch must fail cleanly.
+    let out = bin()
+        .arg("predict")
+        .arg("--data")
+        .arg(&csv_b)
+        .arg("--tables")
+        .arg(dir.join("a.tables.json"))
+        .arg("--gbdt")
+        .arg(dir.join("a.gbdt.json"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("feature mismatch"));
+}

@@ -1,0 +1,135 @@
+//! Integration: the full AutoML training pipeline across module boundaries
+//! (datagen → features → lrwbins → gbdt → allocation → tables → files).
+
+use lrwbins::allocation::Metric;
+use lrwbins::automl::{run_pipeline, PipelineConfig};
+use lrwbins::datagen;
+use lrwbins::gbdt::GbdtModel;
+use lrwbins::lrwbins::{ServingTables, Stage1};
+use lrwbins::metrics::roc_auc;
+use lrwbins::tabular::split;
+use lrwbins::util::json::Json;
+use lrwbins::util::rng::Rng;
+
+fn world(name: &str, rows: usize, seed: u64) -> lrwbins::tabular::Dataset {
+    datagen::generate(&datagen::preset(name).unwrap().with_rows(rows), seed)
+}
+
+#[test]
+fn pipeline_orders_models_correctly() {
+    // The paper's central ordering: LR ≤ LRwBins ≤ GBDT, hybrid ≈ GBDT.
+    let data = world("higgs", 15_000, 1);
+    let mut rng = Rng::new(2);
+    let s = split::three_way_split(&data, (0.6, 0.2, 0.2), &mut rng);
+    let mut cfg = PipelineConfig::quick();
+    cfg.metric = Metric::Accuracy;
+    cfg.tolerance = 0.002;
+    cfg.coverage_target = None;
+    let p = run_pipeline(&s.train, &s.val, &cfg);
+
+    let lrw_auc = roc_auc(&p.first.predict_proba(&s.test), &s.test.labels);
+    let gbdt_auc = roc_auc(&p.second.predict_proba(&s.test), &s.test.labels);
+
+    // LR baseline on same top features.
+    let norm = p.first.normalizer.apply(&s.train);
+    let topn = p.ranking.top(p.shape.best.n_infer_features);
+    let lr = lrwbins::lr::fit_dataset(&norm, &topn, &Default::default());
+    let lr_auc = roc_auc(
+        &lrwbins::lr::predict_dataset(&lr, &p.first.normalizer.apply(&s.test), &topn),
+        &s.test.labels,
+    );
+
+    assert!(lrw_auc > lr_auc + 0.01, "LRwBins {lrw_auc:.3} must beat LR {lr_auc:.3} on higgs-like data");
+    assert!(gbdt_auc > lrw_auc - 0.005, "GBDT {gbdt_auc:.3} should be ≥ LRwBins {lrw_auc:.3}");
+
+    // Hybrid with the frozen route: quality within tolerance of GBDT.
+    let mut hybrid = Vec::new();
+    let mut hits = 0;
+    let mut row = Vec::new();
+    for r in 0..s.test.n_rows() {
+        s.test.row_into(r, &mut row);
+        match p.first.stage1(&row) {
+            Stage1::Hit(pr) => {
+                hits += 1;
+                hybrid.push(pr);
+            }
+            Stage1::Miss { .. } => hybrid.push(p.second.predict_one(&row)),
+        }
+    }
+    let hybrid_auc = roc_auc(&hybrid, &s.test.labels);
+    assert!(
+        hybrid_auc > gbdt_auc - 0.02,
+        "hybrid {hybrid_auc:.3} within 0.02 of GBDT {gbdt_auc:.3}"
+    );
+    assert!(hits > 0, "some coverage must materialize on test data");
+}
+
+#[test]
+fn model_files_roundtrip_through_disk() {
+    let data = world("aci", 6_000, 3);
+    let mut rng = Rng::new(4);
+    let s = split::three_way_split(&data, (0.6, 0.2, 0.2), &mut rng);
+    let p = run_pipeline(&s.train, &s.val, &PipelineConfig::quick());
+
+    let dir = std::env::temp_dir().join("lrwbins_model_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Tables.
+    let tables = ServingTables::from_model(&p.first);
+    let tpath = dir.join("tables.json");
+    std::fs::write(&tpath, tables.to_json().pretty()).unwrap();
+    let tables2 =
+        ServingTables::from_json(&Json::parse(&std::fs::read_to_string(&tpath).unwrap()).unwrap())
+            .unwrap();
+    assert_eq!(tables, tables2);
+
+    // GBDT.
+    let gpath = dir.join("gbdt.json");
+    std::fs::write(&gpath, p.second.to_json().to_string()).unwrap();
+    let g2 = GbdtModel::from_json(&Json::parse(&std::fs::read_to_string(&gpath).unwrap()).unwrap())
+        .unwrap();
+    assert_eq!(p.second.predict_proba(&s.test), g2.predict_proba(&s.test));
+
+    // Loaded tables serve identically.
+    let mut row = Vec::new();
+    for r in (0..s.test.n_rows()).step_by(37) {
+        s.test.row_into(r, &mut row);
+        assert_eq!(tables.evaluate(&row), tables2.evaluate(&row));
+    }
+}
+
+#[test]
+fn csv_dataset_roundtrip_preserves_training() {
+    // datagen → CSV → read back → identical training outcome.
+    let data = world("blastchar", 3_000, 5);
+    let dir = std::env::temp_dir().join("lrwbins_csv_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("blastchar.csv");
+    lrwbins::tabular::csv::write_csv(&data, &path).unwrap();
+    let data2 = lrwbins::tabular::csv::read_csv(&path).unwrap();
+    assert_eq!(data.schema.types, data2.schema.types);
+    assert_eq!(data.labels, data2.labels);
+
+    let ranking = lrwbins::features::rank_features(&data, lrwbins::features::RankMethod::GbdtGain, 1);
+    let ranking2 = lrwbins::features::rank_features(&data2, lrwbins::features::RankMethod::GbdtGain, 1);
+    assert_eq!(ranking.order, ranking2.order);
+}
+
+#[test]
+fn coverage_tolerance_tradeoff_is_monotone_end_to_end() {
+    let data = world("case3", 10_000, 6);
+    let mut rng = Rng::new(7);
+    let s = split::three_way_split(&data, (0.6, 0.2, 0.2), &mut rng);
+    let mut coverages = Vec::new();
+    for tol in [0.0005, 0.005, 0.05] {
+        let mut cfg = PipelineConfig::quick();
+        cfg.tolerance = tol;
+        cfg.coverage_target = None;
+        let p = run_pipeline(&s.train, &s.val, &cfg);
+        coverages.push(p.allocation.coverage);
+    }
+    assert!(
+        coverages.windows(2).all(|w| w[1] >= w[0] - 1e-9),
+        "coverage should grow with tolerance: {coverages:?}"
+    );
+}

@@ -1,0 +1,135 @@
+//! Integration: PJRT artifacts vs native Rust implementations.
+//!
+//! Proves the paper §4 claim for our stack: "we checked that our
+//! implementations of the first-stage model agree to within machine
+//! precision" — here between (a) the embedded Rust evaluator, (b) the
+//! training-side model, and (c) the AOT-compiled Pallas kernels run through
+//! PJRT. Requires `make artifacts`; tests skip (with a loud message) if the
+//! artifacts directory is missing.
+
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::gbdt::{self, GbdtParams};
+use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams, ServingTables};
+use lrwbins::runtime::{kernel_inputs_for, Engine, ForestParams, Graph};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+fn world() -> (lrwbins::tabular::Dataset, LrwBinsModel, gbdt::GbdtModel) {
+    let spec = datagen::preset("aci").unwrap().with_rows(6000);
+    let data = datagen::generate(&spec, 42);
+    let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+    let params = LrwBinsParams {
+        b: 3,
+        n_bin_features: 4,
+        n_infer_features: 8,
+        ..Default::default()
+    };
+    let mut first = LrwBinsModel::train(&data, &ranking.order, &params);
+    // Route even-indexed bins so both accept outcomes occur.
+    let route: std::collections::HashSet<u32> =
+        first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+    first.set_route(route);
+    let second = gbdt::train(
+        &data,
+        &GbdtParams {
+            n_trees: 20,
+            max_depth: 6,
+            ..Default::default()
+        },
+    );
+    (data, first, second)
+}
+
+#[test]
+fn first_stage_pjrt_matches_embedded_to_machine_precision() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, &[Graph::FirstStage]).expect("engine");
+    let (data, first, _) = world();
+    let tables = ServingTables::from_model(&first);
+    let kin = kernel_inputs_for(&tables, &engine.shapes);
+
+    let n = 200;
+    let mut rows = Vec::with_capacity(n * engine.shapes.f_max);
+    let mut raw = Vec::new();
+    let mut expect_p = Vec::with_capacity(n);
+    let mut expect_a = Vec::with_capacity(n);
+    for r in 0..n {
+        data.row_into(r, &mut raw);
+        rows.extend_from_slice(&tables.kernel_row(&raw, engine.shapes.f_max));
+        let (p, routed) = tables.evaluate(&raw);
+        expect_p.push(p);
+        expect_a.push(routed as u8 as f32);
+    }
+    let (probs, accept) = engine.first_stage(&rows, n, &kin).expect("execute");
+    assert_eq!(accept, expect_a, "route flags must match exactly");
+    for i in 0..n {
+        assert!(
+            (probs[i] - expect_p[i]).abs() <= 2e-6,
+            "row {i}: pjrt={} embedded={}",
+            probs[i],
+            expect_p[i]
+        );
+    }
+}
+
+#[test]
+fn second_stage_pjrt_matches_native_forest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, &[Graph::SecondStage]).expect("engine");
+    let (data, _, second) = world();
+    let ft = second.to_forest_tensors();
+    let params = ForestParams::from_tensors(&ft, &engine.shapes).expect("pad forest");
+
+    let n = 300; // exercises chunking across batch variants
+    let mut rows = Vec::with_capacity(n * engine.shapes.f_max);
+    let mut raw = Vec::new();
+    let mut expect = Vec::with_capacity(n);
+    for r in 0..n {
+        data.row_into(r, &mut raw);
+        rows.extend_from_slice(&engine.pad_row(&raw));
+        expect.push(second.predict_one(&raw));
+    }
+    let probs = engine.second_stage(&rows, n, &params).expect("execute");
+    assert_eq!(probs.len(), n);
+    for i in 0..n {
+        assert!(
+            (probs[i] - expect[i]).abs() <= 3e-6,
+            "row {i}: pjrt={} native={}",
+            probs[i],
+            expect[i]
+        );
+    }
+}
+
+#[test]
+fn batch_variant_selection_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, &[Graph::SecondStage]).expect("engine");
+    let (data, _, second) = world();
+    let ft = second.to_forest_tensors();
+    let params = ForestParams::from_tensors(&ft, &engine.shapes).expect("pad");
+
+    // Same rows through different batch sizes must agree bit-for-bit.
+    let mut raw = Vec::new();
+    data.row_into(7, &mut raw);
+    let row = engine.pad_row(&raw);
+    let single = engine.second_stage(&row, 1, &params).unwrap();
+    let mut many_rows = Vec::new();
+    for _ in 0..40 {
+        many_rows.extend_from_slice(&row);
+    }
+    let many = engine.second_stage(&many_rows, 40, &params).unwrap();
+    for p in &many {
+        assert_eq!(*p, single[0]);
+    }
+}

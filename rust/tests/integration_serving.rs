@@ -1,0 +1,170 @@
+//! Integration: the live serving stack over real TCP (native backend, so
+//! no artifacts required), including failure injection and property-style
+//! conservation checks.
+
+use lrwbins::coordinator::{Mode, Served};
+use lrwbins::harness::{self, StackConfig};
+use lrwbins::metrics::roc_auc;
+use lrwbins::rpc::netsim::NetSimConfig;
+use std::sync::atomic::Ordering;
+
+fn native_stack(rows: usize, netsim: NetSimConfig) -> harness::Stack {
+    let mut cfg = StackConfig::quick("aci", rows);
+    cfg.backend = "native".into();
+    cfg.netsim = netsim;
+    // Tolerance-first allocation (no coverage push) on ROC AUC so served
+    // quality stays within the paper's ≤0.01 loss regime.
+    cfg.pipeline.coverage_target = None;
+    cfg.pipeline.tolerance = 0.002;
+    cfg.pipeline.metric = lrwbins::allocation::Metric::RocAuc;
+    harness::build(&cfg).expect("native stack")
+}
+
+#[test]
+fn every_request_answered_exactly_once() {
+    let stack = native_stack(8_000, NetSimConfig::off());
+    let n = 800;
+    let mut preds = Vec::with_capacity(n);
+    let mut row = Vec::new();
+    for r in 0..n {
+        stack.test.row_into(r, &mut row);
+        let (p, _) = stack.coordinator.predict(&row).unwrap();
+        preds.push(p);
+    }
+    assert_eq!(preds.len(), n);
+    assert!(preds.iter().all(|p| (0.0..=1.0).contains(p)));
+    let s1 = stack.metrics.stage1_hits.load(Ordering::Relaxed);
+    let rp = stack.metrics.rpc_calls.load(Ordering::Relaxed);
+    assert_eq!(s1 + rp, n as u64, "conservation: every request hits exactly one stage");
+}
+
+#[test]
+fn served_quality_close_to_pure_gbdt() {
+    let stack = native_stack(10_000, NetSimConfig::off());
+    let n = stack.test.n_rows();
+    let mut served = Vec::with_capacity(n);
+    let mut row = Vec::new();
+    for r in 0..n {
+        stack.test.row_into(r, &mut row);
+        served.push(stack.coordinator.predict(&row).unwrap().0);
+    }
+    let pure = stack.pipeline.second.predict_proba(&stack.test);
+    let served_auc = roc_auc(&served, &stack.test.labels);
+    let pure_auc = roc_auc(&pure, &stack.test.labels);
+    // Quick-sized models + small val splits leave a val→test generalization
+    // gap on the route; the tight ≤0.01 claim is validated at full settings
+    // by `cargo bench --bench table2_hybrid_coverage`. Here we bound gross
+    // degradation and sanity-check the hybrid beats stage-1 alone.
+    assert!(
+        served_auc > pure_auc - 0.035,
+        "served {served_auc:.3} vs pure {pure_auc:.3}"
+    );
+    let stage1_auc = roc_auc(
+        &stack.pipeline.first.predict_proba(&stack.test),
+        &stack.test.labels,
+    );
+    assert!(
+        served_auc >= stage1_auc - 0.005,
+        "hybrid {served_auc:.3} must not lose to stage-1 alone {stage1_auc:.3}"
+    );
+}
+
+#[test]
+fn rpc_predictions_match_local_model_exactly() {
+    // The RPC boundary must be numerically transparent.
+    let mut stack = native_stack(6_000, NetSimConfig::off());
+    stack.coordinator.mode = Mode::AlwaysRpc;
+    let mut row = Vec::new();
+    for r in (0..stack.test.n_rows()).step_by(53) {
+        stack.test.row_into(r, &mut row);
+        let (p, served) = stack.coordinator.predict(&row).unwrap();
+        assert_eq!(served, Served::Rpc);
+        let local = stack.pipeline.second.predict_one(&row);
+        assert_eq!(p, local, "row {r}: rpc {p} != local {local}");
+    }
+}
+
+#[test]
+fn concurrent_load_is_safe_and_batched() {
+    let stack = std::sync::Arc::new(native_stack(8_000, NetSimConfig::off()));
+    let n_threads = 6;
+    let per_thread = 200;
+    std::thread::scope(|s| {
+        for t in 0..n_threads {
+            let stack = stack.clone();
+            s.spawn(move || {
+                let mut row = Vec::new();
+                for i in 0..per_thread {
+                    let r = (t * per_thread + i) % stack.test.n_rows();
+                    stack.test.row_into(r, &mut row);
+                    stack.coordinator.predict(&row).unwrap();
+                }
+            });
+        }
+    });
+    let total = stack.metrics.stage1_hits.load(Ordering::Relaxed)
+        + stack.metrics.rpc_calls.load(Ordering::Relaxed);
+    assert_eq!(total, (n_threads * per_thread) as u64);
+}
+
+#[test]
+fn netsim_shifts_rpc_latency_but_not_stage1() {
+    let fast = native_stack(6_000, NetSimConfig::off());
+    let slow = native_stack(
+        6_000,
+        NetSimConfig {
+            base_us: 1_500.0,
+            sigma: 0.1,
+            max_us: 10_000.0,
+        },
+    );
+    let mut row = Vec::new();
+    for stack in [&fast, &slow] {
+        for r in 0..300 {
+            stack.test.row_into(r, &mut row);
+            stack.coordinator.predict(&row).unwrap();
+        }
+    }
+    let fast_rpc = fast.metrics.rpc.mean_ns();
+    let slow_rpc = slow.metrics.rpc.mean_ns();
+    if fast.metrics.rpc.count() > 5 && slow.metrics.rpc.count() > 5 {
+        assert!(
+            slow_rpc > fast_rpc + 2_000_000.0,
+            "netsim must add ≥2ms: fast={fast_rpc} slow={slow_rpc}"
+        );
+    }
+    // Stage-1 latency must be unaffected by the network (sub-10µs either way).
+    assert!(fast.metrics.stage1.mean_ns() < 10_000.0);
+    assert!(slow.metrics.stage1.mean_ns() < 10_000.0);
+}
+
+#[test]
+fn server_death_surfaces_as_error_not_hang() {
+    let mut stack = native_stack(4_000, NetSimConfig::off());
+    stack.coordinator.mode = Mode::AlwaysRpc;
+    // Kill the backend.
+    let dead = std::mem::replace(
+        &mut stack.server,
+        // Bind a throwaway server we immediately drop to steal the slot.
+        lrwbins::rpc::server::RpcServer::start(
+            "127.0.0.1:0",
+            std::sync::Arc::new(lrwbins::rpc::server::NativeBackend {
+                model: stack.pipeline.second.clone(),
+            }),
+            std::sync::Arc::new(lrwbins::rpc::netsim::NetSim::new(NetSimConfig::off(), 1)),
+            Default::default(),
+            std::sync::Arc::new(lrwbins::telemetry::ServeMetrics::new()),
+        )
+        .unwrap(),
+    );
+    drop(dead);
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let mut row = Vec::new();
+    stack.test.row_into(0, &mut row);
+    // The pooled connection died with the server; the call must error
+    // (after its internal single retry) rather than hang or panic.
+    let t0 = std::time::Instant::now();
+    let result = stack.coordinator.predict(&row);
+    assert!(result.is_err(), "dead backend must surface as Err");
+    assert!(t0.elapsed() < std::time::Duration::from_secs(10));
+}

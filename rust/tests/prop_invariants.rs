@@ -1,0 +1,212 @@
+//! Property-based tests on system invariants (mini-proptest harness):
+//! routing/table invariants, batcher conservation, protocol fuzz, GBDT
+//! histogram-vs-exact splits.
+
+use lrwbins::gbdt::{self, GbdtParams};
+use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams, ServingTables};
+use lrwbins::prop_assert;
+use lrwbins::tabular::{Dataset, Schema};
+use lrwbins::util::proptest::{check, Gen};
+
+fn random_world(g: &mut Gen, max_rows: usize, max_feats: usize) -> Dataset {
+    let nf = g.usize(2..max_feats);
+    let n = g.usize(60..max_rows);
+    let mut d = Dataset::new(Schema::numeric(nf));
+    let w: Vec<f64> = (0..nf).map(|_| g.f64(-2.0..2.0)).collect();
+    for _ in 0..n {
+        let row: Vec<f32> = (0..nf).map(|_| g.f64(-3.0..3.0) as f32).collect();
+        let z: f64 = row.iter().zip(&w).map(|(&x, &wi)| x as f64 * wi).sum();
+        let y = (g.f64(0.0..1.0) < lrwbins::util::sigmoid(z)) as u8 as f32;
+        d.push_row(&row, y);
+    }
+    // Guarantee both classes.
+    if d.positive_rate() == 0.0 {
+        d.labels[0] = 1.0;
+    }
+    if d.positive_rate() == 1.0 {
+        d.labels[0] = 0.0;
+    }
+    d
+}
+
+#[test]
+fn tables_evaluate_agrees_with_model_on_random_worlds() {
+    check(25, |g| {
+        let d = random_world(g, 400, 8);
+        let params = LrwBinsParams {
+            b: g.usize(2..4),
+            n_bin_features: g.usize(1..3),
+            n_infer_features: d.n_features(),
+            min_bin_rows: 10,
+            ..Default::default()
+        };
+        let order: Vec<usize> = (0..d.n_features()).collect();
+        let model = LrwBinsModel::train(&d, &order, &params);
+        let tables = ServingTables::from_model(&model);
+        for r in (0..d.n_rows()).step_by(7) {
+            let row = d.row(r);
+            let bin_m = model.bin_of_raw_row(&row);
+            let bin_t = tables.bin_of(&row);
+            prop_assert!(bin_m == bin_t, "bin mismatch {bin_m} vs {bin_t}");
+            prop_assert!(bin_t < tables.total_bins, "bin out of range");
+            let (p, _) = tables.evaluate(&row);
+            prop_assert!((0.0..=1.0).contains(&p), "p={p}");
+            // Determinism.
+            prop_assert!(tables.evaluate(&row) == tables.evaluate(&row));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn route_subsets_never_increase_coverage() {
+    check(15, |g| {
+        let d = random_world(g, 300, 6);
+        let order: Vec<usize> = (0..d.n_features()).collect();
+        let params = LrwBinsParams {
+            b: 2,
+            n_bin_features: 2,
+            n_infer_features: d.n_features(),
+            min_bin_rows: 10,
+            ..Default::default()
+        };
+        let mut model = LrwBinsModel::train(&d, &order, &params);
+        let full_cov = model.coverage(&d);
+        let all: Vec<u32> = model.weights.keys().copied().collect();
+        let keep: std::collections::HashSet<u32> = all
+            .iter()
+            .copied()
+            .filter(|_| g.bool(0.5))
+            .collect();
+        model.set_route(keep.clone());
+        let sub_cov = model.coverage(&d);
+        prop_assert!(sub_cov <= full_cov + 1e-12, "{sub_cov} > {full_cov}");
+        // Empty route → zero coverage.
+        model.set_route(Default::default());
+        prop_assert!(model.coverage(&d) == 0.0);
+        Ok(())
+    });
+}
+
+#[test]
+fn histogram_split_matches_exact_split_on_small_data() {
+    // With max_bins ≥ distinct values the histogram split must equal the
+    // exhaustive split: verify via identical train predictions.
+    check(10, |g| {
+        let n = g.usize(40..120);
+        let mut d = Dataset::new(Schema::numeric(2));
+        for _ in 0..n {
+            // Few distinct values so both paths see identical candidates.
+            let a = g.usize(0..8) as f32;
+            let b = g.usize(0..5) as f32;
+            let y = ((a + b) >= 6.0) as u8 as f32;
+            d.push_row(&[a, b], y);
+        }
+        if d.positive_rate() == 0.0 || d.positive_rate() == 1.0 {
+            return Ok(());
+        }
+        let exact = gbdt::train(
+            &d,
+            &GbdtParams { n_trees: 3, max_depth: 3, max_bins: 256, ..Default::default() },
+        );
+        let hist = gbdt::train(
+            &d,
+            &GbdtParams { n_trees: 3, max_depth: 3, max_bins: 16, ..Default::default() },
+        );
+        // 8·5 = 40 distinct cells < 256 bins: exact == "histogram" at 256.
+        // At 16 bins per feature all 8 and 5 values still get distinct bins.
+        let p_exact = exact.predict_proba(&d);
+        let p_hist = hist.predict_proba(&d);
+        for (a, b) in p_exact.iter().zip(&p_hist) {
+            prop_assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn protocol_fuzz_never_panics() {
+    use lrwbins::rpc::proto;
+    check(300, |g| {
+        let len = g.usize(0..64);
+        let bytes: Vec<u8> = (0..len).map(|_| g.usize(0..256) as u8).collect();
+        // Must return Ok(None) / Ok(Some) / Err — never panic.
+        let _ = proto::read_request(&mut std::io::Cursor::new(bytes.clone()));
+        let _ = proto::read_response(&mut std::io::Cursor::new(bytes));
+        Ok(())
+    });
+}
+
+#[test]
+fn batcher_conservation_under_random_load() {
+    use lrwbins::rpc::netsim::{NetSim, NetSimConfig};
+    use lrwbins::rpc::server::{Backend, BatcherConfig, RpcServer};
+    use lrwbins::rpc::RpcClient;
+    use lrwbins::telemetry::ServeMetrics;
+    use std::sync::Arc;
+
+    /// Identity-ish backend: prob[i] = first value of row i.
+    struct FirstBackend;
+    impl Backend for FirstBackend {
+        fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+            (0..n).map(|r| rows[r * row_len]).collect()
+        }
+        fn row_len(&self) -> usize {
+            0
+        }
+    }
+
+    check(3, |g| {
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(FirstBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig {
+                max_batch: g.usize(1..32),
+                max_wait: std::time::Duration::from_micros(g.usize(0..500) as u64),
+                workers: g.usize(1..4),
+            },
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        let addr = server.addr;
+        let n_threads = g.usize(1..5);
+        let per = g.usize(5..40);
+        let row_len = g.usize(1..6);
+        let results: Vec<Result<(), String>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_threads)
+                .map(|t| {
+                    s.spawn(move || -> Result<(), String> {
+                        let client = RpcClient::connect(addr).map_err(|e| e.to_string())?;
+                        for i in 0..per {
+                            let tag = (t * 1000 + i) as f32;
+                            let n_rows = 1 + (i % 3);
+                            let mut rows = vec![0f32; n_rows * row_len];
+                            for r in 0..n_rows {
+                                rows[r * row_len] = tag + r as f32 * 0.125;
+                            }
+                            let probs =
+                                client.predict(&rows, row_len).map_err(|e| e.to_string())?;
+                            if probs.len() != n_rows {
+                                return Err(format!("got {} probs, want {n_rows}", probs.len()));
+                            }
+                            for (r, &p) in probs.iter().enumerate() {
+                                // Responses must match THIS request's rows (no
+                                // cross-request mixing in the batcher).
+                                if p != tag + r as f32 * 0.125 {
+                                    return Err(format!("mixed response: {p} vs {tag}"));
+                                }
+                            }
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    });
+}
