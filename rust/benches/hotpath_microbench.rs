@@ -1,25 +1,33 @@
 //! Hot-path microbenchmarks — the §Perf working set.
 //!
 //! Measures every layer of the request path in isolation:
-//!   L3 embedded: combined-bin lookup, full stage-1 evaluate;
-//!   L3 native:   GBDT predict_one;
+//!   L3 embedded: combined-bin lookup, full stage-1 evaluate — scalar AND
+//!                columnar block variants at batch = {1, 8, 64, 256};
+//!   L3 native:   GBDT predict_one vs FlatForest predict_block at the same
+//!                batch sizes;
 //!   RPC:         loopback round trip (netsim OFF) at several batch sizes;
 //!   L1/L2 PJRT:  second-stage artifact execution per batch variant.
+//!
+//! Emits `BENCH_hotpath.json` (rows/sec per layer) at the repo root so the
+//! perf trajectory is tracked across PRs.
 //!
 //! Run: `cargo bench --bench hotpath_microbench [-- --quick]`
 
 use lrwbins::datagen;
 use lrwbins::features::{rank_features, RankMethod};
-use lrwbins::gbdt::{self, GbdtParams};
+use lrwbins::gbdt::{self, ForestScratch, GbdtParams};
 use lrwbins::harness;
-use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams, ServingTables};
+use lrwbins::lrwbins::{BlockScratch, LrwBinsModel, LrwBinsParams, ServingTables};
 use lrwbins::rpc::netsim::{NetSim, NetSimConfig};
 use lrwbins::rpc::server::{BatcherConfig, NativeBackend, RpcServer};
 use lrwbins::rpc::RpcClient;
 use lrwbins::runtime::{EngineWorker, ForestParams, Graph};
+use lrwbins::tabular::RowBlock;
 use lrwbins::telemetry::ServeMetrics;
 use lrwbins::util::bench::{quick_requested, Bench};
 use std::sync::Arc;
+
+const BLOCK_BATCHES: &[usize] = &[1, 8, 64, 256];
 
 fn main() {
     let quick = quick_requested();
@@ -43,31 +51,63 @@ fn main() {
     let second = gbdt::train(&data, &GbdtParams::default());
     let rows: Vec<Vec<f32>> = (0..256).map(|r| data.row(r)).collect();
 
-    // --- L3 embedded hot path --------------------------------------------
+    // --- L3 embedded hot path (scalar baselines) --------------------------
     let mut i = 0usize;
-    bench.run("embedded bin_of (ns/row)", || {
+    bench.run_items("embedded bin_of scalar", 1, || {
         let row = &rows[i & 255];
         std::hint::black_box(tables.bin_of(row));
         i += 1;
     });
     let mut i = 0usize;
-    bench.run("embedded stage1 evaluate (ns/row)", || {
+    bench.run_items("embedded stage1 evaluate scalar", 1, || {
         let row = &rows[i & 255];
         std::hint::black_box(tables.evaluate(row));
         i += 1;
     });
     let mut i = 0usize;
-    bench.run("native GBDT predict_one", || {
+    bench.run_items("native GBDT predict_one scalar", 1, || {
         let row = &rows[i & 255];
         std::hint::black_box(second.predict_one(row));
         i += 1;
     });
 
+    // --- L3 block paths (columnar RowBlock, reusable scratch) -------------
+    let flat = second.flatten();
+    let mut tab_scratch = BlockScratch::default();
+    let mut forest_scratch = ForestScratch::default();
+    let mut bins: Vec<u32> = Vec::new();
+    let mut probs: Vec<f32> = Vec::new();
+    let mut routed: Vec<bool> = Vec::new();
+    let mut preds: Vec<f32> = Vec::new();
+    for &batch in BLOCK_BATCHES {
+        let block = RowBlock::from_rows(&rows[..batch]);
+        bench.run_items(&format!("embedded bin_of_block (batch={batch})"), batch as u64, || {
+            tables.bin_of_block(&block, &mut tab_scratch, &mut bins);
+            std::hint::black_box(bins.last());
+        });
+        bench.run_items(
+            &format!("embedded evaluate_block (batch={batch})"),
+            batch as u64,
+            || {
+                tables.evaluate_block(&block, &mut tab_scratch, &mut probs, &mut routed);
+                std::hint::black_box(probs.last());
+            },
+        );
+        bench.run_items(
+            &format!("flat forest predict_block (batch={batch})"),
+            batch as u64,
+            || {
+                flat.predict_block(&block, &mut forest_scratch, &mut preds);
+                std::hint::black_box(preds.last());
+            },
+        );
+    }
+
     // --- RPC round trip (netsim OFF → pure stack cost) --------------------
     let metrics = Arc::new(ServeMetrics::new());
     let server = RpcServer::start(
         "127.0.0.1:0",
-        Arc::new(NativeBackend { model: second.clone() }),
+        Arc::new(NativeBackend::new(second.clone())),
         Arc::new(NetSim::new(NetSimConfig::off(), 1)),
         BatcherConfig::default(),
         metrics,
@@ -76,9 +116,9 @@ fn main() {
     let client = RpcClient::connect(server.addr).unwrap();
     let nf = data.n_features();
     for &batch in &[1usize, 16, 128] {
-        let flat: Vec<f32> = rows.iter().take(batch).flatten().copied().collect();
+        let wire: Vec<f32> = rows.iter().take(batch).flatten().copied().collect();
         bench.run_items(&format!("RPC loopback roundtrip (batch={batch})"), batch as u64, || {
-            std::hint::black_box(client.predict(&flat, nf).unwrap());
+            std::hint::black_box(client.predict(&wire, nf).unwrap());
         });
     }
 
@@ -96,15 +136,15 @@ fn main() {
         .expect("engine");
         let f_max = worker.f_max;
         for &batch in &[1usize, 16, 128, 1024] {
-            let mut flat = vec![0f32; batch * f_max];
+            let mut padded = vec![0f32; batch * f_max];
             for (i, row) in rows.iter().cycle().take(batch).enumerate() {
-                flat[i * f_max..i * f_max + row.len()].copy_from_slice(row);
+                padded[i * f_max..i * f_max + row.len()].copy_from_slice(row);
             }
             bench.run_items(
                 &format!("PJRT second_stage execute (batch={batch})"),
                 batch as u64,
                 || {
-                    std::hint::black_box(worker.second_stage(flat.clone(), batch).unwrap());
+                    std::hint::black_box(worker.second_stage(padded.clone(), batch).unwrap());
                 },
             );
         }
@@ -113,6 +153,20 @@ fn main() {
     }
 
     println!("{}", bench.report("Hot-path microbenchmarks"));
+
+    // Machine-readable perf trajectory (rows/sec per layer), tracked in
+    // git. `--quick` numbers are too noisy to compare across commits, so
+    // only full runs overwrite the committed file.
+    if quick {
+        eprintln!("(--quick run: not overwriting BENCH_hotpath.json)");
+    } else {
+        let json_path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
+        match bench.write_json("hotpath_microbench", &json_path) {
+            Ok(()) => eprintln!("wrote {}", json_path.display()),
+            Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+        }
+    }
 }
 
 fn manifest_shapes(dir: &std::path::Path) -> lrwbins::runtime::Shapes {

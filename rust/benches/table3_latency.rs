@@ -10,6 +10,7 @@
 
 use lrwbins::coordinator::{FetchSim, Mode};
 use lrwbins::harness::{self, StackConfig};
+use lrwbins::tabular::RowBlock;
 use lrwbins::util::bench::{bench_arg, fmt_ns, quick_requested};
 use std::time::Instant;
 
@@ -112,4 +113,43 @@ fn main() {
     );
     println!("paper's shape: stage1 ≈ 5× faster than RPC; multistage ≈ 1.3×, projected ≈ 1.4× faster than RPC.");
     println!("\nresource accounting (multistage run):\n{}", stack.metrics.report());
+
+    // --- Block-path variants (columnar RowBlock through the coordinator) --
+    // Runs AFTER the resource-accounting report above so its (fetch-free)
+    // traffic does not pollute the Table 3 metrics. Per-inference latency of
+    // `predict_block` at product batch sizes; the feature-fetch simulator
+    // does not apply on the batch API (features arrive with the request),
+    // so compare across block sizes, not against the fetch-loaded rows.
+    println!("\n| block batch | stage-1 only | always-RPC | multistage |");
+    println!("|---|---|---|---|");
+    let n_avail = stack.test.n_rows();
+    let total = if quick { 2_000 } else { 10_000 };
+    let mut block = RowBlock::new();
+    for &bs in &[1usize, 8, 64, 256] {
+        let bs = bs.min(n_avail);
+        let reps = (total / bs).max(1);
+        let mut per_mode = [0.0f64; 3];
+        for (mi, mode) in [Mode::AlwaysStage1, Mode::AlwaysRpc, Mode::Multistage]
+            .iter()
+            .enumerate()
+        {
+            stack.coordinator.mode = *mode;
+            // Warm up the path.
+            block.fill_from_dataset(&stack.test, 0, bs);
+            let _ = stack.coordinator.predict_block(&block);
+            let t0 = Instant::now();
+            for rep in 0..reps {
+                let start = (rep * bs) % (n_avail - bs + 1);
+                block.fill_from_dataset(&stack.test, start, bs);
+                let _ = stack.coordinator.predict_block(&block);
+            }
+            per_mode[mi] = t0.elapsed().as_nanos() as f64 / (reps * bs) as f64;
+        }
+        println!(
+            "| {bs} | {} | {} | {} |",
+            fmt_ns(per_mode[0]),
+            fmt_ns(per_mode[1]),
+            fmt_ns(per_mode[2])
+        );
+    }
 }

@@ -9,11 +9,12 @@
 //! §5.2 quantities (mean latency, CPU, coverage, feature-fetch and network
 //! bytes) fall out of `ServeMetrics`.
 
-use crate::lrwbins::ServingTables;
+use crate::lrwbins::{BlockScratch, ServingTables};
 use crate::rpc::RpcClient;
+use crate::tabular::RowBlock;
 use crate::telemetry::{CpuTimer, ServeMetrics};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 /// Routing override, used by the Table 3 bench to measure each mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,16 +45,42 @@ pub struct FetchSim {
 }
 
 impl FetchSim {
-    pub fn fetch(&self, n_features: usize) {
+    /// Total simulated fetch cost for `n_features`. Computed in f64 *before*
+    /// truncating to integer nanoseconds — casting the per-feature cost
+    /// first would silently drop fractional-ns costs (e.g. 0.5ns/feature
+    /// over 1000 features is 500ns, not 0).
+    pub fn duration(&self, n_features: usize) -> Duration {
         if self.per_feature_us <= 0.0 || n_features == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((self.per_feature_us * 1000.0 * n_features as f64) as u64)
+    }
+
+    pub fn fetch(&self, n_features: usize) {
+        let cost = self.duration(n_features);
+        if cost.is_zero() {
             return;
         }
-        let deadline = Instant::now()
-            + std::time::Duration::from_nanos((self.per_feature_us * 1000.0) as u64 * n_features as u64);
+        let deadline = Instant::now() + cost;
         while Instant::now() < deadline {
             std::hint::spin_loop();
         }
     }
+}
+
+/// Reusable per-coordinator scratch for the batched path: the transposed
+/// request block, stage-1 outputs, and the coalesced RPC gather buffer all
+/// persist across requests, so a steady-state batch costs zero allocations
+/// beyond the caller-visible result vector.
+#[derive(Default)]
+struct CoordScratch {
+    block: RowBlock,
+    tab: BlockScratch,
+    probs: Vec<f32>,
+    routed: Vec<bool>,
+    miss_idx: Vec<usize>,
+    miss_rows: Vec<f32>,
+    row: Vec<f32>,
 }
 
 /// The product-code front-end.
@@ -67,6 +94,7 @@ pub struct Coordinator {
     pub mode: Mode,
     /// Optional feature-fetch cost model (None = features already in hand).
     pub fetch: Option<FetchSim>,
+    scratch: Mutex<CoordScratch>,
 }
 
 impl Coordinator {
@@ -89,10 +117,12 @@ impl Coordinator {
             metrics,
             mode: Mode::Multistage,
             fetch: None,
+            scratch: Mutex::new(CoordScratch::default()),
         }
     }
 
     fn pad_for_rpc(&self, row: &[f32], buf: &mut Vec<f32>) {
+        buf.reserve(self.rpc_row_len);
         buf.extend_from_slice(row);
         buf.resize(buf.len() + (self.rpc_row_len - row.len()), 0.0);
     }
@@ -159,58 +189,147 @@ impl Coordinator {
 
     /// Serve a batched product request: stage-1 for routed rows, one
     /// coalesced RPC for the rest. Returns per-row `(prob, stage)`.
+    ///
+    /// Transposes `rows` into the reusable columnar scratch block and runs
+    /// the block path ([`Coordinator::predict_block`]); results are
+    /// bit-identical to the scalar per-row path.
     pub fn predict_batch(&self, rows: &[Vec<f32>]) -> std::io::Result<Vec<(f32, Served)>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut guard = self.lock_scratch();
+        let mut block = std::mem::take(&mut guard.block);
+        block.fill_from_rows(rows);
+        let res = self.serve_block(&block, Some(rows), guard);
+        self.lock_scratch().block = block;
+        res
+    }
+
+    /// Serve a columnar request block: one batched stage-1 evaluation over
+    /// the whole block, then one coalesced RPC carrying every route-missed
+    /// row (gathered into a single padded buffer that is reused across
+    /// requests). Per-row results are bit-identical to
+    /// [`Coordinator::predict`]; metrics are accounted per stage exactly as
+    /// on the scalar path (amortized per row).
+    pub fn predict_block(&self, block: &RowBlock) -> std::io::Result<Vec<(f32, Served)>> {
+        let guard = self.lock_scratch();
+        self.serve_block(block, None, guard)
+    }
+
+    /// Scratch contents are cleared before every use, so a poisoned lock
+    /// (a panicking request) must not take serving down — recover it.
+    fn lock_scratch(&self) -> MutexGuard<'_, CoordScratch> {
+        self.scratch.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Stage-1 + gather under the scratch lock, then RELEASE it before the
+    /// blocking fallback RPC so concurrent batched requests only serialize
+    /// on the (cheap) embedded pass, never on the network. `src_rows`, when
+    /// available (the row-major `predict_batch` input), avoids re-gathering
+    /// missed rows out of the columnar block with strided reads.
+    fn serve_block(
+        &self,
+        block: &RowBlock,
+        src_rows: Option<&[Vec<f32>]>,
+        mut guard: MutexGuard<'_, CoordScratch>,
+    ) -> std::io::Result<Vec<(f32, Served)>> {
+        debug_assert!(block.is_empty() || block.n_features() == self.tables.n_features);
+        let n = block.n_rows();
         let t0 = Instant::now();
         let cpu = CpuTimer::start();
-        let mut out: Vec<(f32, Served)> = Vec::with_capacity(rows.len());
-        let mut miss_idx = Vec::new();
-        let mut miss_rows: Vec<f32> = Vec::new();
-        for (i, row) in rows.iter().enumerate() {
-            let (p1, routed) = self.tables.evaluate(row);
-            let use_stage1 = match self.mode {
-                Mode::Multistage => routed,
-                Mode::AlwaysRpc => false,
-                Mode::AlwaysStage1 => true,
-            };
-            if use_stage1 {
-                out.push((p1, Served::Stage1));
-            } else {
-                miss_idx.push(i);
-                self.pad_for_rpc(row, &mut miss_rows);
-                out.push((0.0, Served::Rpc)); // placeholder
+
+        // One batched stage-1 pass over the whole block (also routing).
+        let (mut out, miss_idx, miss_rows) = {
+            let s = &mut *guard;
+            self.tables
+                .evaluate_block(block, &mut s.tab, &mut s.probs, &mut s.routed);
+            let mut out: Vec<(f32, Served)> = Vec::with_capacity(n);
+            s.miss_idx.clear();
+            s.miss_rows.clear();
+            for (i, (&p1, &routed)) in s.probs.iter().zip(&s.routed).enumerate() {
+                let use_stage1 = match self.mode {
+                    Mode::Multistage => routed,
+                    Mode::AlwaysRpc => false,
+                    Mode::AlwaysStage1 => true,
+                };
+                if use_stage1 {
+                    out.push((p1, Served::Stage1));
+                } else {
+                    s.miss_idx.push(i);
+                    out.push((0.0, Served::Rpc)); // placeholder
+                }
             }
-        }
+            // Gather all missed rows into ONE padded, coalesced RPC buffer.
+            if !s.miss_idx.is_empty() {
+                s.miss_rows.reserve(s.miss_idx.len() * self.rpc_row_len);
+                match src_rows {
+                    Some(rows) => {
+                        for &i in &s.miss_idx {
+                            self.pad_for_rpc(&rows[i], &mut s.miss_rows);
+                        }
+                    }
+                    None => {
+                        for &i in &s.miss_idx {
+                            block.row_into(i, &mut s.row);
+                            self.pad_for_rpc(&s.row, &mut s.miss_rows);
+                        }
+                    }
+                }
+            }
+            (
+                out,
+                std::mem::take(&mut s.miss_idx),
+                std::mem::take(&mut s.miss_rows),
+            )
+        };
+        drop(guard);
+
         let stage1_cpu = cpu.elapsed_ns();
-        let n_hits = rows.len() - miss_idx.len();
+        let n_hits = n - miss_idx.len();
         if n_hits > 0 {
-            let per = t0.elapsed().as_nanos() as u64 / rows.len().max(1) as u64;
+            let per = t0.elapsed().as_nanos() as u64 / n.max(1) as u64;
             for _ in 0..n_hits {
                 self.metrics.hit_stage1(
                     per,
-                    stage1_cpu / rows.len().max(1) as u64,
+                    stage1_cpu / n.max(1) as u64,
                     self.tables.n_infer() as u64,
                 );
             }
         }
-        if !miss_idx.is_empty() {
+        let rpc_result = if miss_idx.is_empty() {
+            Ok(())
+        } else {
             let t_rpc = Instant::now();
             let cpu_rpc = CpuTimer::start();
-            let probs = self.rpc_predict(&miss_rows, miss_idx.len())?;
-            let rpc_wall = t_rpc.elapsed().as_nanos() as u64;
-            let rpc_cpu = cpu_rpc.elapsed_ns();
-            for (k, &i) in miss_idx.iter().enumerate() {
-                out[i].0 = probs[k];
-                self.metrics.hit_rpc(
-                    rpc_wall / miss_idx.len() as u64,
-                    rpc_cpu / miss_idx.len() as u64,
-                    self.tables.n_features as u64,
-                    RpcClient::wire_bytes(1, self.rpc_row_len),
-                );
+            match self.rpc_predict(&miss_rows, miss_idx.len()) {
+                Ok(probs) => {
+                    let rpc_wall = t_rpc.elapsed().as_nanos() as u64;
+                    let rpc_cpu = cpu_rpc.elapsed_ns();
+                    for (k, &i) in miss_idx.iter().enumerate() {
+                        out[i].0 = probs[k];
+                        self.metrics.hit_rpc(
+                            rpc_wall / miss_idx.len() as u64,
+                            rpc_cpu / miss_idx.len() as u64,
+                            self.tables.n_features as u64,
+                            RpcClient::wire_bytes(1, self.rpc_row_len),
+                        );
+                    }
+                    Ok(())
+                }
+                Err(e) => Err(e),
             }
+        };
+        // Hand the gather buffers back for the next request (best effort —
+        // under contention another request may already have fresh ones).
+        {
+            let mut g = self.lock_scratch();
+            g.miss_idx = miss_idx;
+            g.miss_rows = miss_rows;
         }
+        rpc_result?;
         let wall = t0.elapsed().as_nanos() as u64;
-        for _ in 0..rows.len() {
-            self.metrics.e2e.record(wall / rows.len().max(1) as u64);
+        for _ in 0..n {
+            self.metrics.e2e.record(wall / n.max(1) as u64);
         }
         Ok(out)
     }
@@ -248,7 +367,7 @@ mod tests {
         let metrics = Arc::new(ServeMetrics::new());
         let server = RpcServer::start(
             "127.0.0.1:0",
-            Arc::new(NativeBackend { model: second }),
+            Arc::new(NativeBackend::new(second)),
             Arc::new(NetSim::new(NetSimConfig::off(), 1)),
             BatcherConfig::default(),
             metrics.clone(),
@@ -291,6 +410,43 @@ mod tests {
             assert_eq!(batch[i].1, served, "row {i}");
             assert!((batch[i].0 - p).abs() < 1e-6, "row {i}");
         }
+    }
+
+    #[test]
+    fn block_matches_batch_and_reuses_scratch() {
+        let (data, coord, _server) = setup();
+        let rows: Vec<Vec<f32>> = (0..96).map(|r| data.row(r)).collect();
+        let batch = coord.predict_batch(&rows).unwrap();
+        let mut block = crate::tabular::RowBlock::new();
+        // Run the block path twice over varying sizes to exercise scratch
+        // reuse (shrinking and growing between requests).
+        for take in [96usize, 17, 96] {
+            block.fill_from_rows(&rows[..take]);
+            let via_block = coord.predict_block(&block).unwrap();
+            assert_eq!(via_block.len(), take);
+            for i in 0..take {
+                assert_eq!(via_block[i].1, batch[i].1, "take {take} row {i}");
+                // Stage-1 probabilities are bit-identical; RPC responses go
+                // through f32 wire serialization and are exact as well.
+                assert_eq!(
+                    via_block[i].0.to_bits(),
+                    batch[i].0.to_bits(),
+                    "take {take} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fetch_sim_keeps_fractional_nanoseconds() {
+        // 0.0005µs = 0.5ns per feature: the per-feature cost truncates to 0,
+        // but the total over 1000 features is a real 500ns.
+        let f = FetchSim { per_feature_us: 0.0005 };
+        assert_eq!(f.duration(1000), Duration::from_nanos(500));
+        assert_eq!(f.duration(0), Duration::ZERO);
+        // Whole-ns per-feature costs are unchanged by the f64 total.
+        let g = FetchSim { per_feature_us: 2.0 };
+        assert_eq!(g.duration(3), Duration::from_nanos(6000));
     }
 
     #[test]

@@ -1,0 +1,321 @@
+//! `FlatForest` — the whole GBDT flattened into one contiguous node arena
+//! for the serving hot path.
+//!
+//! # Layout
+//!
+//! The training-side [`Tree`](super::Tree) stores heap-allocated per-tree
+//! node vectors with explicit left/right child indices; following them is a
+//! pointer chase with no locality across trees. `FlatForest` re-lays the
+//! forest out for inference:
+//!
+//! * **one arena**: every node of every tree lives in a single
+//!   `Vec<FlatNode>`; a tree is a root index into it, so the forest is one
+//!   allocation and traversal touches one linear address range;
+//! * **adjacent children**: nodes are re-numbered in BFS order per tree so
+//!   a split's children always sit at `lo` and `lo + 1` — the node is 16
+//!   bytes (4 per cache line) and the branch direction becomes the single
+//!   bit `!(x <= thresh)` added to `lo`, with no `right` pointer to load;
+//! * **tree-major, row-minor blocks**: `predict_block` walks all rows of a
+//!   block through one tree before moving to the next, so each tree's top
+//!   levels stay in L1 across the whole block, and it steps a small set of
+//!   row *lanes* in lockstep so the independent node loads of different
+//!   rows overlap in the memory pipeline (the classic decision-forest
+//!   row-blocking/interleaving optimization).
+//!
+//! # Exactness
+//!
+//! Outputs are bit-identical to [`GbdtModel::predict_one`]: the same
+//! `x <= thresh → left` comparison (NaN therefore goes right, as in
+//! training), leaf margins accumulated into an `f64` in tree order starting
+//! from `base_score`, and the same `sigmoid(f64) as f32` at the end.
+
+use super::tree::LEAF;
+use super::GbdtModel;
+use crate::tabular::RowBlock;
+use crate::util::sigmoid;
+
+/// One arena node. 16 bytes; 4 per cache line.
+#[derive(Clone, Copy, Debug)]
+pub struct FlatNode {
+    /// Split feature, or [`LEAF`].
+    pub feat: u32,
+    /// Go left iff `x[feat] <= thresh` (NaN goes right).
+    pub thresh: f32,
+    /// Arena index of the left child; the right child is `lo + 1`.
+    /// Unused for leaves.
+    pub lo: u32,
+    /// Leaf margin contribution (zero for interior nodes).
+    pub value: f32,
+}
+
+/// Number of row lanes stepped in lockstep by the block kernel. Eight
+/// in-flight walks are enough to cover an L2 hit's latency without
+/// spilling the lane state out of registers.
+const LANES: usize = 8;
+
+/// A whole forest in one contiguous arena (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct FlatForest {
+    pub nodes: Vec<FlatNode>,
+    /// Arena index of each tree's root, in boosting order.
+    pub roots: Vec<u32>,
+    pub base_score: f64,
+    pub n_features: usize,
+}
+
+/// Reusable scratch for [`FlatForest::predict_block`] /
+/// [`FlatForest::predict_flat_rows`] — holds the per-row f64 margin
+/// accumulators so steady-state prediction allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct ForestScratch {
+    margins: Vec<f64>,
+}
+
+impl FlatForest {
+    /// Flatten a trained model. The model stays the source of truth for
+    /// training-side concerns (importance, JSON, dense export); this is the
+    /// serving image.
+    pub fn from_model(m: &GbdtModel) -> FlatForest {
+        let total: usize = m.trees.iter().map(|t| t.nodes.len().max(1)).sum();
+        let mut nodes = Vec::with_capacity(total);
+        let mut roots = Vec::with_capacity(m.trees.len());
+        for t in &m.trees {
+            roots.push(nodes.len() as u32);
+            t.flatten_into(&mut nodes);
+        }
+        FlatForest {
+            nodes,
+            roots,
+            base_score: m.base_score,
+            n_features: m.n_features,
+        }
+    }
+
+    /// Margin for one row — bit-identical to
+    /// [`GbdtModel::predict_margin_one`].
+    #[inline]
+    pub fn predict_margin_one(&self, row: &[f32]) -> f64 {
+        let nodes = &self.nodes;
+        let mut m = self.base_score;
+        for &root in &self.roots {
+            let mut i = root as usize;
+            loop {
+                let nd = nodes[i];
+                if nd.feat == LEAF {
+                    m += nd.value as f64;
+                    break;
+                }
+                let x = row[nd.feat as usize];
+                i = (nd.lo + u32::from(!(x <= nd.thresh))) as usize;
+            }
+        }
+        m
+    }
+
+    /// Probability for one row — bit-identical to
+    /// [`GbdtModel::predict_one`].
+    #[inline]
+    pub fn predict_one(&self, row: &[f32]) -> f32 {
+        sigmoid(self.predict_margin_one(row)) as f32
+    }
+
+    /// Probabilities for a columnar block; `out` is cleared and refilled
+    /// with one probability per row. Bit-identical to per-row
+    /// [`GbdtModel::predict_one`].
+    pub fn predict_block(&self, block: &RowBlock, scratch: &mut ForestScratch, out: &mut Vec<f32>) {
+        let n = block.n_rows();
+        out.clear();
+        out.resize(n, 0.0);
+        self.predict_with(n, |r, f| block.get(r, f as usize), scratch, out);
+    }
+
+    /// Probabilities for row-major flat rows (the RPC wire layout), written
+    /// into `out` (`rows.len() >= out.len() * row_len`; `row_len` must cover
+    /// `n_features`). Taking a sub-slice of `out` shards the batch.
+    pub fn predict_flat_rows(
+        &self,
+        rows: &[f32],
+        row_len: usize,
+        scratch: &mut ForestScratch,
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        debug_assert!(rows.len() >= n * row_len);
+        debug_assert!(row_len >= self.n_features);
+        self.predict_with(n, |r, f| rows[r * row_len + f as usize], scratch, out);
+    }
+
+    /// Shared block kernel over an arbitrary `(row, feat) -> x` accessor.
+    fn predict_with<G: Fn(usize, u32) -> f32>(
+        &self,
+        n: usize,
+        get: G,
+        scratch: &mut ForestScratch,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), n);
+        let margins = &mut scratch.margins;
+        margins.clear();
+        margins.resize(n, self.base_score);
+        let nodes = &self.nodes;
+        for &root in &self.roots {
+            let mut r = 0usize;
+            // Interleaved lanes: LANES independent walks advance one node
+            // per pass, so their (unrelated) arena loads overlap.
+            while r + LANES <= n {
+                let mut idx = [root as usize; LANES];
+                let mut val = [0f32; LANES];
+                let mut pending: u32 = (1 << LANES) - 1;
+                while pending != 0 {
+                    for (k, ik) in idx.iter_mut().enumerate() {
+                        if pending & (1 << k) == 0 {
+                            continue;
+                        }
+                        let nd = nodes[*ik];
+                        if nd.feat == LEAF {
+                            val[k] = nd.value;
+                            pending &= !(1 << k);
+                        } else {
+                            let x = get(r + k, nd.feat);
+                            *ik = (nd.lo + u32::from(!(x <= nd.thresh))) as usize;
+                        }
+                    }
+                }
+                for (k, &v) in val.iter().enumerate() {
+                    margins[r + k] += v as f64;
+                }
+                r += LANES;
+            }
+            // Remainder rows: plain iterative walk.
+            while r < n {
+                let mut i = root as usize;
+                loop {
+                    let nd = nodes[i];
+                    if nd.feat == LEAF {
+                        margins[r] += nd.value as f64;
+                        break;
+                    }
+                    let x = get(r, nd.feat);
+                    i = (nd.lo + u32::from(!(x <= nd.thresh))) as usize;
+                }
+                r += 1;
+            }
+        }
+        for (o, &m) in out.iter_mut().zip(margins.iter()) {
+            *o = sigmoid(m) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdt::{train, GbdtParams};
+    use crate::tabular::{Dataset, Schema};
+    use crate::util::rng::Rng;
+
+    fn trained() -> (GbdtModel, Dataset) {
+        let mut rng = Rng::new(23);
+        let mut d = Dataset::new(Schema::numeric(4));
+        for _ in 0..2000 {
+            let x: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            let y = (x[0] * x[1] + x[2] > 0.3) as u8 as f32;
+            d.push_row(&x, y);
+        }
+        let m = train(&d, &GbdtParams { n_trees: 17, max_depth: 5, ..Default::default() });
+        (m, d)
+    }
+
+    #[test]
+    fn flat_matches_native_bitwise() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let mut row = Vec::new();
+        for r in 0..300 {
+            d.row_into(r, &mut row);
+            assert_eq!(
+                flat.predict_one(&row).to_bits(),
+                m.predict_one(&row).to_bits(),
+                "row {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_matches_scalar_bitwise_all_chunks() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let mut rows: Vec<Vec<f32>> = (0..100).map(|r| d.row(r)).collect();
+        rows[5][1] = f32::NAN; // NaN must route right, identically.
+        rows[31] = vec![f32::NAN; 4];
+        let mut scratch = ForestScratch::default();
+        let mut out = Vec::new();
+        for chunk in [1usize, 3, LANES, LANES + 1, 64, 100] {
+            for rows in rows.chunks(chunk) {
+                let block = RowBlock::from_rows(rows);
+                flat.predict_block(&block, &mut scratch, &mut out);
+                for (i, row) in rows.iter().enumerate() {
+                    assert_eq!(
+                        out[i].to_bits(),
+                        m.predict_one(row).to_bits(),
+                        "chunk {chunk} row {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_rows_match_block_with_padding() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let n = 50;
+        let row_len = d.n_features() + 3; // padded wire rows
+        let mut flat_rows = vec![0f32; n * row_len];
+        let mut row = Vec::new();
+        for r in 0..n {
+            d.row_into(r, &mut row);
+            flat_rows[r * row_len..r * row_len + row.len()].copy_from_slice(&row);
+        }
+        let mut scratch = ForestScratch::default();
+        let mut out = vec![0f32; n];
+        flat.predict_flat_rows(&flat_rows, row_len, &mut scratch, &mut out);
+        for r in 0..n {
+            d.row_into(r, &mut row);
+            assert_eq!(out[r].to_bits(), m.predict_one(&row).to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn arena_children_adjacent() {
+        let (m, _) = trained();
+        let flat = FlatForest::from_model(&m);
+        assert_eq!(flat.roots.len(), m.trees.len());
+        assert_eq!(
+            flat.nodes.len(),
+            m.trees.iter().map(|t| t.nodes.len()).sum::<usize>()
+        );
+        for nd in &flat.nodes {
+            if nd.feat != LEAF {
+                // Both children (lo, lo + 1) must be in-arena.
+                assert!(nd.lo as usize + 1 < flat.nodes.len());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_leaf_trees() {
+        use crate::gbdt::Tree;
+        let m = GbdtModel {
+            trees: vec![Tree::leaf(0.25), Tree::default(), Tree::leaf(-0.5)],
+            base_score: 0.1,
+            n_features: 2,
+            feature_gain: vec![0.0; 2],
+            max_depth: 1,
+        };
+        let flat = FlatForest::from_model(&m);
+        // Empty trees flatten to a zero-valued leaf; margin = 0.1 + 0.25 - 0.5.
+        let p = flat.predict_one(&[1.0, 2.0]);
+        assert!((p - crate::util::sigmoid(-0.15) as f32).abs() < 1e-7);
+    }
+}

@@ -3,14 +3,18 @@
 //! The paper uses XGBoost as the strong fallback model served behind RPC;
 //! no ML crates exist offline, so this is a from-scratch histogram GBDT with
 //! second-order logistic loss (`train`), fast native inference (`predict_*`),
-//! gain-based feature importance, JSON (de)serialization for the service
-//! config, and a dense tensor export consumed by the Pallas forest kernel.
+//! a contiguous batched serving image ([`flat::FlatForest`] — the RPC
+//! backend's hot path), gain-based feature importance, JSON
+//! (de)serialization for the service config, and a dense tensor export
+//! consumed by the Pallas forest kernel.
 
 pub mod binner;
+pub mod flat;
 pub mod train;
 pub mod tree;
 
 pub use binner::FeatureBinner;
+pub use flat::{FlatForest, FlatNode, ForestScratch};
 pub use train::train;
 pub use tree::{DenseTree, Tree, LEAF};
 
@@ -98,6 +102,11 @@ impl GbdtModel {
     #[inline]
     pub fn predict_one(&self, row: &[f32]) -> f32 {
         sigmoid(self.predict_margin_one(row)) as f32
+    }
+
+    /// Flatten into the contiguous serving image (see [`flat::FlatForest`]).
+    pub fn flatten(&self) -> FlatForest {
+        FlatForest::from_model(self)
     }
 
     /// Probabilities for a whole dataset.

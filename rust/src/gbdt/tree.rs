@@ -73,6 +73,42 @@ impl Tree {
         }
     }
 
+    /// Append this tree to a [`FlatForest`](crate::gbdt::FlatForest) arena
+    /// in BFS order, so every split's children land adjacently (`lo`,
+    /// `lo + 1`). An empty tree flattens to a single zero-valued leaf (the
+    /// compact `predict_one` would panic on it; the flat path degrades to a
+    /// no-op contribution instead).
+    pub fn flatten_into(&self, out: &mut Vec<crate::gbdt::flat::FlatNode>) {
+        use crate::gbdt::flat::FlatNode;
+        let base = out.len();
+        let placeholder = FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: 0.0 };
+        if self.nodes.is_empty() {
+            out.push(placeholder);
+            return;
+        }
+        // BFS over compact indices; `order[i]` is the compact node placed at
+        // arena slot `base + i`. Children are reserved in pairs as their
+        // parent is visited, which is exactly what makes them adjacent.
+        let mut order: Vec<u32> = vec![0];
+        out.push(placeholder);
+        let mut head = 0usize;
+        while head < order.len() {
+            let n = &self.nodes[order[head] as usize];
+            let slot = base + head;
+            if n.feat == LEAF {
+                out[slot] = FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: n.value };
+            } else {
+                let lo = (base + order.len()) as u32;
+                order.push(n.left);
+                order.push(n.right);
+                out.push(placeholder);
+                out.push(placeholder);
+                out[slot] = FlatNode { feat: n.feat, thresh: n.thresh, lo, value: 0.0 };
+            }
+            head += 1;
+        }
+    }
+
     /// Export to a dense perfect-depth layout for the tensorized (Pallas)
     /// forest kernel:
     ///

@@ -139,17 +139,13 @@ pub fn build(cfg: &StackConfig) -> Result<Stack> {
             .context("spawning PJRT engine worker — run `make artifacts`")?;
             let f_max = worker.f_max;
             (
-                Arc::new(PjrtBackend {
-                    worker: Arc::new(worker),
-                }),
+                Arc::new(PjrtBackend::new(Arc::new(worker))),
                 f_max,
                 true,
             )
         }
         "native" => (
-            Arc::new(NativeBackend {
-                model: pipeline.second.clone(),
-            }),
+            Arc::new(NativeBackend::new(pipeline.second.clone())),
             data.n_features(),
             false,
         ),

@@ -10,7 +10,29 @@
 //! training-side model to machine precision.
 
 use super::LrwBinsModel;
+use crate::tabular::RowBlock;
 use crate::util::json::Json;
+
+/// Reusable scratch for the block evaluators ([`ServingTables::bin_of_block`]
+/// / [`ServingTables::evaluate_block`]). Holding one of these across calls
+/// makes the batched stage-1 path allocation-free at steady state.
+#[derive(Clone, Debug, Default)]
+pub struct BlockScratch {
+    /// Normalized feature columns, slot-major: `norm[slot * n_rows + r]`.
+    norm: Vec<f32>,
+    /// Per-row edge counts for the feature currently being binned.
+    cnt: Vec<u32>,
+    /// Per-row combined-bin ids.
+    bins: Vec<u32>,
+    /// Slot (into `norm`) of each binning feature, in `bin_features` order.
+    slot_of_bin: Vec<u32>,
+    /// Slot (into `norm`) of each inference feature, in `infer_features` order.
+    slot_of_infer: Vec<u32>,
+    /// Raw feature id of each slot (slot → feature inverse map).
+    slot_feat: Vec<u32>,
+    /// Raw feature → slot map (`usize::MAX` = not needed).
+    feat_slot: Vec<usize>,
+}
 
 /// Dense, allocation-free-on-read serving tables.
 #[derive(Clone, Debug, PartialEq)]
@@ -130,6 +152,141 @@ impl ServingTables {
             z += w[j] * x;
         }
         (crate::util::sigmoid_f32(z), self.route[bin] != 0)
+    }
+
+    // ------------------------------------------------------------------
+    // Batched (columnar RowBlock) hot path.
+    //
+    // Bit-identical to the scalar path by construction: every row sees the
+    // exact same operations in the exact same order — normalization is the
+    // same `((v as f64 - mean) * inv_std) as f32` expression (computed once
+    // per (row, feature) and shared between binning and the dot product,
+    // which is legal because it is a pure function), edge counts are sums
+    // of independent `(x > e)` indicators (order-insensitive over exact
+    // u32 adds), and the per-row dot product accumulates bias-then-weights
+    // in the same `j` order. What changes is only the *loop order*: columns
+    // are normalized feature-major so the per-feature constants stay in
+    // registers, and edges are applied edge-major over the whole block so
+    // the quantile table stays in L1 while the row dimension streams.
+    // ------------------------------------------------------------------
+
+    /// Populate `scratch` for `block`: assign a slot to every feature the
+    /// evaluator needs (binning features, plus inference features when
+    /// `include_infer`), then normalize each needed column exactly once.
+    fn prepare_block(&self, block: &RowBlock, scratch: &mut BlockScratch, include_infer: bool) {
+        debug_assert!(block.is_empty() || block.n_features() == self.n_features);
+        let n = block.n_rows();
+        scratch.feat_slot.clear();
+        scratch.feat_slot.resize(self.n_features, usize::MAX);
+        scratch.slot_feat.clear();
+        scratch.slot_of_bin.clear();
+        scratch.slot_of_infer.clear();
+        {
+            let feat_slot = &mut scratch.feat_slot;
+            let slot_feat = &mut scratch.slot_feat;
+            let mut slot_of = |f: u32| -> u32 {
+                let f = f as usize;
+                if feat_slot[f] == usize::MAX {
+                    feat_slot[f] = slot_feat.len();
+                    slot_feat.push(f as u32);
+                }
+                feat_slot[f] as u32
+            };
+            for &f in &self.bin_features {
+                let s = slot_of(f);
+                scratch.slot_of_bin.push(s);
+            }
+            if include_infer {
+                for &f in &self.infer_features {
+                    let s = slot_of(f);
+                    scratch.slot_of_infer.push(s);
+                }
+            }
+        }
+        let n_slots = scratch.slot_feat.len();
+        scratch.norm.clear();
+        scratch.norm.resize(n_slots * n, 0.0);
+        for (slot, &f) in scratch.slot_feat.iter().enumerate() {
+            let f = f as usize;
+            let mean = self.means[f];
+            let inv = self.inv_stds[f];
+            let src = block.feature(f);
+            let dst = &mut scratch.norm[slot * n..(slot + 1) * n];
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = ((v as f64 - mean) * inv) as f32;
+            }
+        }
+    }
+
+    /// Combined-bin ids from prepared scratch into `out`.
+    fn bins_from_prepared(&self, n: usize, scratch: &mut BlockScratch, out: &mut Vec<u32>) {
+        out.clear();
+        out.resize(n, 0);
+        let BlockScratch {
+            norm,
+            cnt,
+            slot_of_bin,
+            ..
+        } = scratch;
+        cnt.resize(n, 0);
+        for (i, &slot) in slot_of_bin.iter().enumerate() {
+            let edges = &self.quantiles[i * self.q_max..(i + 1) * self.q_max];
+            let x = &norm[slot as usize * n..slot as usize * n + n];
+            let cnt = &mut cnt[..n];
+            cnt.fill(0);
+            // Edge-major, branchless: each edge broadcasts over the block.
+            for &e in edges {
+                for (c, &xv) in cnt.iter_mut().zip(&*x) {
+                    *c += (xv > e) as u32;
+                }
+            }
+            let stride = self.strides[i];
+            for (o, &c) in out.iter_mut().zip(&*cnt) {
+                *o += c * stride;
+            }
+        }
+    }
+
+    /// Combined-bin ids for a whole block — bit-identical to calling
+    /// [`ServingTables::bin_of`] per row. `out` is cleared and refilled.
+    pub fn bin_of_block(&self, block: &RowBlock, scratch: &mut BlockScratch, out: &mut Vec<u32>) {
+        self.prepare_block(block, scratch, false);
+        self.bins_from_prepared(block.n_rows(), scratch, out);
+    }
+
+    /// Full stage-1 evaluation for a whole block — bit-identical to calling
+    /// [`ServingTables::evaluate`] per row. `probs`/`routed` are cleared and
+    /// refilled with one entry per row.
+    pub fn evaluate_block(
+        &self,
+        block: &RowBlock,
+        scratch: &mut BlockScratch,
+        probs: &mut Vec<f32>,
+        routed: &mut Vec<bool>,
+    ) {
+        let n = block.n_rows();
+        self.prepare_block(block, scratch, true);
+        let mut bins = std::mem::take(&mut scratch.bins);
+        self.bins_from_prepared(n, scratch, &mut bins);
+        probs.clear();
+        probs.reserve(n);
+        routed.clear();
+        routed.reserve(n);
+        let ni = self.n_infer();
+        let w_stride = ni + 1;
+        let norm = &scratch.norm;
+        let slot_of_infer = &scratch.slot_of_infer;
+        for (r, &bin) in bins.iter().enumerate() {
+            let bin = bin as usize;
+            let w = &self.weights[bin * w_stride..(bin + 1) * w_stride];
+            let mut z = w[ni]; // bias
+            for (j, &slot) in slot_of_infer.iter().enumerate() {
+                z += w[j] * norm[slot as usize * n + r];
+            }
+            probs.push(crate::util::sigmoid_f32(z));
+            routed.push(self.route[bin] != 0);
+        }
+        scratch.bins = bins;
     }
 
     // ------------------------------------------------------------------
@@ -399,6 +556,59 @@ mod tests {
                 crate::util::sigmoid_f32(z)
             );
         }
+    }
+
+    #[test]
+    fn block_path_bit_identical_to_scalar() {
+        let d = world(3000, 6);
+        let mut m = model(&d);
+        let routed_set: std::collections::HashSet<u32> =
+            m.weights.keys().copied().filter(|&b| b % 2 == 0).collect();
+        m.set_route(routed_set);
+        let t = ServingTables::from_model(&m);
+
+        let mut rows: Vec<Vec<f32>> = (0..200).map(|r| d.row(r)).collect();
+        // Inject NaNs: the block path must propagate them identically.
+        rows[3][0] = f32::NAN;
+        rows[17][2] = f32::NAN;
+        rows[42] = vec![f32::NAN; 5];
+
+        let mut scratch = BlockScratch::default();
+        let mut bins = Vec::new();
+        let mut probs = Vec::new();
+        let mut routed = Vec::new();
+        for chunk in [1usize, 7, 64, 200] {
+            for (c, rows) in rows.chunks(chunk).enumerate() {
+                let block = crate::tabular::RowBlock::from_rows(rows);
+                t.bin_of_block(&block, &mut scratch, &mut bins);
+                t.evaluate_block(&block, &mut scratch, &mut probs, &mut routed);
+                for (i, row) in rows.iter().enumerate() {
+                    let (p, rt) = t.evaluate(row);
+                    assert_eq!(bins[i], t.bin_of(row), "chunk {chunk}/{c} row {i}");
+                    assert_eq!(
+                        probs[i].to_bits(),
+                        p.to_bits(),
+                        "chunk {chunk}/{c} row {i}: {} vs {p}",
+                        probs[i]
+                    );
+                    assert_eq!(routed[i], rt, "chunk {chunk}/{c} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_path_empty_block() {
+        let d = world(500, 7);
+        let t = ServingTables::from_model(&model(&d));
+        // Empty blocks must clear the outputs, not leave stale entries.
+        let mut block = crate::tabular::RowBlock::new();
+        block.reset(t.n_features, 0);
+        let mut scratch = BlockScratch::default();
+        let (mut bins, mut probs, mut routed) = (vec![9], vec![9.0], vec![true]);
+        t.bin_of_block(&block, &mut scratch, &mut bins);
+        t.evaluate_block(&block, &mut scratch, &mut probs, &mut routed);
+        assert!(bins.is_empty() && probs.is_empty() && routed.is_empty());
     }
 
     #[test]

@@ -24,16 +24,58 @@ pub trait Backend: Send + Sync {
 }
 
 /// Native GBDT backend (no PJRT) — used in tests and as an ablation.
+/// Serves from a [`FlatForest`](crate::gbdt::FlatForest) image of the model
+/// (contiguous arena, tree-major row-blocked traversal) and shards large
+/// batches across scoped threads.
 pub struct NativeBackend {
     pub model: crate::gbdt::GbdtModel,
+    flat: crate::gbdt::FlatForest,
+}
+
+/// Minimum rows per shard thread: below this the per-thread spawn cost
+/// outweighs the parallel traversal. Sharding engages from 2 shards up, so
+/// it is reachable at the default batcher `max_batch` (128).
+const NATIVE_SHARD_ROWS: usize = 64;
+
+impl NativeBackend {
+    pub fn new(model: crate::gbdt::GbdtModel) -> NativeBackend {
+        let flat = model.flatten();
+        NativeBackend { model, flat }
+    }
 }
 
 impl Backend for NativeBackend {
     fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
-        let mut out = Vec::with_capacity(n);
-        for r in 0..n {
-            let row = &rows[r * row_len..(r + 1) * row_len];
-            out.push(self.model.predict_one(&row[..self.model.n_features.min(row_len)]));
+        if row_len < self.model.n_features {
+            // Degenerate narrow rows: preserve the scalar path's semantics
+            // (panics if a tree references a missing feature).
+            let mut out = Vec::with_capacity(n);
+            for r in 0..n {
+                let row = &rows[r * row_len..(r + 1) * row_len];
+                out.push(self.model.predict_one(row));
+            }
+            return out;
+        }
+        let mut out = vec![0f32; n];
+        // Shard so every thread gets at least NATIVE_SHARD_ROWS rows.
+        let threads = crate::util::threadpool::default_threads().min(n / NATIVE_SHARD_ROWS);
+        if threads > 1 {
+            let chunk = n.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
+                    let start = ci * chunk;
+                    let flat = &self.flat;
+                    let shard = &rows[start * row_len..(start + out_chunk.len()) * row_len];
+                    s.spawn(move || {
+                        let mut scratch = crate::gbdt::ForestScratch::default();
+                        flat.predict_flat_rows(shard, row_len, &mut scratch, out_chunk);
+                    });
+                }
+            });
+        } else {
+            let mut scratch = crate::gbdt::ForestScratch::default();
+            self.flat
+                .predict_flat_rows(&rows[..n * row_len], row_len, &mut scratch, &mut out);
         }
         out
     }
@@ -44,17 +86,43 @@ impl Backend for NativeBackend {
 }
 
 /// PJRT backend executing the AOT second-stage artifact (via the dedicated
-/// engine thread — see `runtime::worker`).
+/// engine thread — see `runtime::worker`). A small pool of staging buffers
+/// cycles through the engine thread instead of allocating a fresh row copy
+/// per batch — a pool (not a single slot) because the server's batcher
+/// workers call `predict` concurrently.
 pub struct PjrtBackend {
     pub worker: Arc<crate::runtime::EngineWorker>,
+    staging: Mutex<Vec<Vec<f32>>>,
+}
+
+/// Staging buffers kept for reuse; more concurrent batches than this just
+/// allocate (and the extras are dropped on return).
+const PJRT_STAGING_POOL: usize = 8;
+
+impl PjrtBackend {
+    pub fn new(worker: Arc<crate::runtime::EngineWorker>) -> PjrtBackend {
+        PjrtBackend {
+            worker,
+            staging: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl Backend for PjrtBackend {
     fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
         assert_eq!(row_len, self.worker.f_max, "PJRT backend needs padded rows");
-        self.worker
-            .second_stage(rows.to_vec(), n)
-            .expect("PJRT execution failed")
+        let mut buf = self.staging.lock().unwrap().pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(rows);
+        let (probs, buf) = self
+            .worker
+            .second_stage_with_buf(buf, n)
+            .expect("PJRT execution failed");
+        let mut pool = self.staging.lock().unwrap();
+        if pool.len() < PJRT_STAGING_POOL {
+            pool.push(buf);
+        }
+        probs
     }
 
     fn row_len(&self) -> usize {

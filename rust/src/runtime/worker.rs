@@ -18,7 +18,9 @@ enum Job {
     Second {
         rows: Vec<f32>,
         n: usize,
-        reply: mpsc::Sender<Result<Vec<f32>>>,
+        /// Replies with `(probs, rows)` — the input buffer travels back to
+        /// the caller so the request path can recycle it.
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>)>>,
     },
     First {
         rows: Vec<f32>,
@@ -64,7 +66,8 @@ impl EngineWorker {
                     match job {
                         Job::Second { rows, n, reply } => {
                             let forest = forest.as_ref().expect("no forest configured");
-                            let _ = reply.send(engine.second_stage(&rows, n, forest));
+                            let out = engine.second_stage(&rows, n, forest);
+                            let _ = reply.send(out.map(|probs| (probs, rows)));
                         }
                         Job::First { rows, n, reply } => {
                             let kernel = kernel.as_ref().expect("no kernel inputs configured");
@@ -86,6 +89,13 @@ impl EngineWorker {
 
     /// Second-stage prediction over padded rows (`rows.len() == n * f_max`).
     pub fn second_stage(&self, rows: Vec<f32>, n: usize) -> Result<Vec<f32>> {
+        self.second_stage_with_buf(rows, n).map(|(probs, _)| probs)
+    }
+
+    /// Like [`EngineWorker::second_stage`], but hands the row buffer back so
+    /// the caller can recycle it (`PjrtBackend` keeps one staging buffer
+    /// cycling through the engine thread instead of allocating per batch).
+    pub fn second_stage_with_buf(&self, rows: Vec<f32>, n: usize) -> Result<(Vec<f32>, Vec<f32>)> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .lock()

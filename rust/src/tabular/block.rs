@@ -1,0 +1,208 @@
+//! Columnar row-batch abstraction (`RowBlock`) for the serving hot path.
+//!
+//! # Layout
+//!
+//! A `RowBlock` stores a batch of request rows **feature-major** (structure
+//! of arrays): `data[f * n_rows + r]` is feature `f` of row `r`. This is the
+//! layout every batched consumer wants:
+//!
+//! * the stage-1 block evaluator (`ServingTables::evaluate_block`)
+//!   normalizes and edge-counts one feature column at a time, so the
+//!   per-feature constants (mean, inv_std, quantile edges) stay in
+//!   registers/L1 while the row dimension streams sequentially — the inner
+//!   loops are straight-line, branchless and auto-vectorizable;
+//! * the flat forest (`gbdt::FlatForest::predict_block`) gathers
+//!   `x[r][feat]` per split; with a columnar block, consecutive rows of the
+//!   same feature share cache lines, so tree-major/row-minor traversal hits
+//!   warm lines as the row lanes advance in lockstep;
+//! * `Dataset` is already column-major, so building a block from stored
+//!   data is a straight `copy_from_slice` per feature — no per-row gather.
+//!
+//! Blocks are designed for reuse: every `fill_*` method recycles the
+//! backing buffer, so a steady-state serving loop performs no allocation.
+
+use super::Dataset;
+
+/// A columnar (feature-major) batch of dense `f32` rows.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RowBlock {
+    n_rows: usize,
+    n_features: usize,
+    /// Feature-major values: `data[f * n_rows + r]`.
+    data: Vec<f32>,
+}
+
+impl RowBlock {
+    pub fn new() -> RowBlock {
+        RowBlock::default()
+    }
+
+    /// Build a block directly from row slices (all rows must share a width).
+    pub fn from_rows<R: AsRef<[f32]>>(rows: &[R]) -> RowBlock {
+        let mut b = RowBlock::new();
+        b.fill_from_rows(rows);
+        b
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_rows == 0
+    }
+
+    /// Reset to an all-zero `n_features × n_rows` block, reusing the buffer.
+    pub fn reset(&mut self, n_features: usize, n_rows: usize) {
+        self.n_features = n_features;
+        self.n_rows = n_rows;
+        self.data.clear();
+        self.data.resize(n_features * n_rows, 0.0);
+    }
+
+    /// Transpose row-major `rows` into this block, reusing the buffer.
+    pub fn fill_from_rows<R: AsRef<[f32]>>(&mut self, rows: &[R]) {
+        let n_features = rows.first().map_or(0, |r| r.as_ref().len());
+        self.reset(n_features, rows.len());
+        for (r, row) in rows.iter().enumerate() {
+            let row = row.as_ref();
+            // Hard assert: a ragged batch zero-filled silently would serve
+            // plausible-but-wrong probabilities (the per-row path panicked).
+            assert_eq!(row.len(), n_features, "ragged row batch (row {r})");
+            for (f, &v) in row.iter().enumerate() {
+                self.data[f * self.n_rows + r] = v;
+            }
+        }
+    }
+
+    /// Transpose a flat row-major buffer (`rows.len() >= n_rows * row_len`),
+    /// reusing the block's buffer. Extra trailing values are ignored.
+    pub fn fill_from_flat(&mut self, rows: &[f32], n_rows: usize, row_len: usize) {
+        debug_assert!(rows.len() >= n_rows * row_len);
+        self.reset(row_len, n_rows);
+        for r in 0..n_rows {
+            let src = &rows[r * row_len..(r + 1) * row_len];
+            for (f, &v) in src.iter().enumerate() {
+                self.data[f * n_rows + r] = v;
+            }
+        }
+    }
+
+    /// Copy `n` rows starting at `start` out of a (column-major) dataset —
+    /// one straight `copy_from_slice` per feature column.
+    pub fn fill_from_dataset(&mut self, d: &Dataset, start: usize, n: usize) {
+        debug_assert!(start + n <= d.n_rows());
+        self.reset(d.n_features(), n);
+        for (f, col) in d.cols.iter().enumerate() {
+            self.data[f * n..(f + 1) * n].copy_from_slice(&col[start..start + n]);
+        }
+    }
+
+    /// Contiguous column of feature `f` across all rows.
+    #[inline]
+    pub fn feature(&self, f: usize) -> &[f32] {
+        &self.data[f * self.n_rows..(f + 1) * self.n_rows]
+    }
+
+    /// Single value (row `r`, feature `f`).
+    #[inline]
+    pub fn get(&self, r: usize, f: usize) -> f32 {
+        debug_assert!(r < self.n_rows && f < self.n_features);
+        self.data[f * self.n_rows + r]
+    }
+
+    /// Gather row `r` into `buf` (cleared first) in feature order.
+    pub fn row_into(&self, r: usize, buf: &mut Vec<f32>) {
+        buf.clear();
+        buf.reserve(self.n_features);
+        for f in 0..self.n_features {
+            buf.push(self.data[f * self.n_rows + r]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tabular::Schema;
+
+    fn sample_rows() -> Vec<Vec<f32>> {
+        vec![
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 9.0],
+            vec![-1.0, -2.0, -3.0],
+        ]
+    }
+
+    #[test]
+    fn from_rows_roundtrip() {
+        let rows = sample_rows();
+        let b = RowBlock::from_rows(&rows);
+        assert_eq!(b.n_rows(), 4);
+        assert_eq!(b.n_features(), 3);
+        let mut buf = Vec::new();
+        for (r, row) in rows.iter().enumerate() {
+            b.row_into(r, &mut buf);
+            assert_eq!(&buf, row, "row {r}");
+            for (f, &v) in row.iter().enumerate() {
+                assert_eq!(b.get(r, f), v);
+            }
+        }
+    }
+
+    #[test]
+    fn feature_columns_contiguous() {
+        let b = RowBlock::from_rows(&sample_rows());
+        assert_eq!(b.feature(0), &[1.0, 4.0, 7.0, -1.0]);
+        assert_eq!(b.feature(2), &[3.0, 6.0, 9.0, -3.0]);
+    }
+
+    #[test]
+    fn fill_from_flat_matches_from_rows() {
+        let rows = sample_rows();
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        let mut b = RowBlock::new();
+        b.fill_from_flat(&flat, rows.len(), 3);
+        assert_eq!(b, RowBlock::from_rows(&rows));
+    }
+
+    #[test]
+    fn fill_from_dataset_matches_rows() {
+        let mut d = Dataset::new(Schema::numeric(3));
+        for (i, row) in sample_rows().iter().enumerate() {
+            d.push_row(row, (i % 2) as f32);
+        }
+        let mut b = RowBlock::new();
+        b.fill_from_dataset(&d, 1, 2);
+        assert_eq!(b.n_rows(), 2);
+        let mut buf = Vec::new();
+        b.row_into(0, &mut buf);
+        assert_eq!(buf, d.row(1));
+        b.row_into(1, &mut buf);
+        assert_eq!(buf, d.row(2));
+    }
+
+    #[test]
+    fn reuse_shrinks_and_grows() {
+        let mut b = RowBlock::new();
+        b.fill_from_rows(&sample_rows());
+        assert_eq!(b.n_rows(), 4);
+        b.fill_from_rows(&sample_rows()[..1]);
+        assert_eq!(b.n_rows(), 1);
+        assert_eq!(b.feature(1), &[2.0]);
+        b.fill_from_rows(&sample_rows());
+        assert_eq!(b.feature(1), &[2.0, 5.0, 8.0, -2.0]);
+    }
+
+    #[test]
+    fn empty_block() {
+        let b = RowBlock::from_rows(&Vec::<Vec<f32>>::new());
+        assert!(b.is_empty());
+        assert_eq!(b.n_features(), 0);
+    }
+}

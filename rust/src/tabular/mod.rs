@@ -6,12 +6,15 @@
 //! categorical — which get special handling during binning (Algorithm 1).
 //! Storage is column-major `f32` (categoricals are stored as small integer
 //! codes), which is the layout the histogram GBDT trainer and quantile
-//! computations want; the serving path materializes row vectors on demand.
+//! computations want; the serving path materializes row vectors on demand,
+//! or whole columnar batches via [`block::RowBlock`] on the batched path.
 
+pub mod block;
 pub mod csv;
 pub mod split;
 pub mod stats;
 
+pub use block::RowBlock;
 pub use split::{Split, ThreeWaySplit};
 
 /// Feature type. Categorical features carry their cardinality so binning can

@@ -5,6 +5,7 @@
 //! CPU-time measurement, mean/median/stddev, and Markdown table output so
 //! bench results paste directly into EXPERIMENTS.md.
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -25,6 +26,29 @@ impl BenchResult {
     pub fn throughput_per_sec(&self) -> Option<f64> {
         self.items_per_iter
             .map(|items| items as f64 / (self.mean_ns / 1e9))
+    }
+
+    /// Machine-readable form (one entry of `BENCH_*.json`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        j.set("iters", Json::Num(self.iters as f64));
+        j.set("mean_ns", Json::Num(self.mean_ns));
+        j.set("median_ns", Json::Num(self.median_ns));
+        j.set("stddev_ns", Json::Num(self.stddev_ns));
+        j.set("min_ns", Json::Num(self.min_ns));
+        j.set("max_ns", Json::Num(self.max_ns));
+        match (self.items_per_iter, self.throughput_per_sec()) {
+            (Some(items), Some(thr)) => {
+                j.set("items_per_iter", Json::Num(items as f64));
+                j.set("throughput_per_sec", Json::Num(thr));
+            }
+            _ => {
+                j.set("items_per_iter", Json::Null);
+                j.set("throughput_per_sec", Json::Null);
+            }
+        }
+        j
     }
 
     pub fn row(&self) -> String {
@@ -190,6 +214,28 @@ impl Bench {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Machine-readable report: `{title, warmup_ms, measure_ms, results}`.
+    /// Benches dump this next to the Markdown table so perf trajectories can
+    /// be tracked across PRs (see `BENCH_hotpath.json`). The warmup/measure
+    /// budgets are provenance: they distinguish full runs from `--quick`
+    /// noise when comparing files across commits.
+    pub fn to_json(&self, title: &str) -> Json {
+        let mut j = Json::obj();
+        j.set("title", Json::Str(title.to_string()));
+        j.set("warmup_ms", Json::Num(self.warmup.as_secs_f64() * 1e3));
+        j.set("measure_ms", Json::Num(self.measure.as_secs_f64() * 1e3));
+        j.set(
+            "results",
+            Json::Arr(self.results.iter().map(BenchResult::to_json).collect()),
+        );
+        j
+    }
+
+    /// Write the JSON report to `path` (pretty-printed, trailing newline).
+    pub fn write_json(&self, title: &str, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(title).pretty() + "\n")
+    }
 }
 
 /// Is `--quick` present in the process args? All bench binaries honor it.
@@ -249,5 +295,23 @@ mod tests {
         let rep = b.report("Title");
         assert!(rep.contains("external"));
         assert!(rep.contains("Title"));
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut b = Bench::new();
+        b.record("layer-a", 200.0, Some(64));
+        b.record("layer-b", 10.0, None);
+        let j = b.to_json("hotpath");
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("title").and_then(Json::as_str), Some("hotpath"));
+        let results = parsed.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 2);
+        let a = &results[0];
+        assert_eq!(a.get("name").and_then(Json::as_str), Some("layer-a"));
+        // 64 items in 200ns = 320M/s.
+        let thr = a.get("throughput_per_sec").and_then(Json::as_f64).unwrap();
+        assert!((thr - 64.0 / 200.0e-9).abs() / thr < 1e-9);
+        assert_eq!(results[1].get("throughput_per_sec"), Some(&Json::Null));
     }
 }

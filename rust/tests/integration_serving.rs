@@ -148,9 +148,9 @@ fn server_death_surfaces_as_error_not_hang() {
         // Bind a throwaway server we immediately drop to steal the slot.
         lrwbins::rpc::server::RpcServer::start(
             "127.0.0.1:0",
-            std::sync::Arc::new(lrwbins::rpc::server::NativeBackend {
-                model: stack.pipeline.second.clone(),
-            }),
+            std::sync::Arc::new(lrwbins::rpc::server::NativeBackend::new(
+                stack.pipeline.second.clone(),
+            )),
             std::sync::Arc::new(lrwbins::rpc::netsim::NetSim::new(NetSimConfig::off(), 1)),
             Default::default(),
             std::sync::Arc::new(lrwbins::telemetry::ServeMetrics::new()),

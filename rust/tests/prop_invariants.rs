@@ -59,6 +59,75 @@ fn tables_evaluate_agrees_with_model_on_random_worlds() {
 }
 
 #[test]
+fn block_paths_bit_identical_to_scalar_paths() {
+    use lrwbins::gbdt::ForestScratch;
+    use lrwbins::lrwbins::BlockScratch;
+    use lrwbins::tabular::RowBlock;
+
+    check(12, |g| {
+        let d = random_world(g, 250, 8);
+        let order: Vec<usize> = (0..d.n_features()).collect();
+        let params = LrwBinsParams {
+            b: g.usize(2..4),
+            n_bin_features: g.usize(1..3).min(d.n_features()),
+            n_infer_features: d.n_features(),
+            min_bin_rows: 10,
+            ..Default::default()
+        };
+        let model = LrwBinsModel::train(&d, &order, &params);
+        let tables = ServingTables::from_model(&model);
+        let gbdt = gbdt::train(
+            &d,
+            &GbdtParams { n_trees: 7, max_depth: 3, ..Default::default() },
+        );
+        let forest = gbdt.flatten();
+
+        // Random rows, some carrying NaNs (the request path must propagate
+        // them identically: NaN bins below every edge, NaN splits go right).
+        let mut rows: Vec<Vec<f32>> = (0..d.n_rows().min(120)).map(|r| d.row(r)).collect();
+        for row in rows.iter_mut() {
+            if g.bool(0.15) {
+                let f = g.usize(0..row.len());
+                row[f] = f32::NAN;
+            }
+        }
+
+        let mut tab_scratch = BlockScratch::default();
+        let mut forest_scratch = ForestScratch::default();
+        let (mut bins, mut probs, mut routed, mut preds) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let block_size = g.usize(1..70);
+        for chunk in rows.chunks(block_size) {
+            let block = RowBlock::from_rows(chunk);
+            tables.bin_of_block(&block, &mut tab_scratch, &mut bins);
+            tables.evaluate_block(&block, &mut tab_scratch, &mut probs, &mut routed);
+            forest.predict_block(&block, &mut forest_scratch, &mut preds);
+            for (i, row) in chunk.iter().enumerate() {
+                let (p, rt) = tables.evaluate(row);
+                prop_assert!(bins[i] == tables.bin_of(row), "bin mismatch row {i}");
+                prop_assert!(
+                    probs[i].to_bits() == p.to_bits(),
+                    "stage-1 prob mismatch row {i}: {} vs {p}",
+                    probs[i]
+                );
+                prop_assert!(routed[i] == rt, "routing mismatch row {i}");
+                let q = gbdt.predict_one(row);
+                prop_assert!(
+                    preds[i].to_bits() == q.to_bits(),
+                    "forest prob mismatch row {i}: {} vs {q}",
+                    preds[i]
+                );
+                prop_assert!(
+                    forest.predict_one(row).to_bits() == q.to_bits(),
+                    "flat scalar mismatch row {i}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn route_subsets_never_increase_coverage() {
     check(15, |g| {
         let d = random_world(g, 300, 6);
