@@ -98,6 +98,46 @@ fn main() -> anyhow::Result<()> {
         rows.len() as f64 / wall.as_secs_f64()
     );
 
+    // --- pipelined batched serving (async coordinator, depth 2) ---------
+    // Stage-1 hits of each block are delivered the moment the embedded
+    // pass finishes; the coalesced miss RPC stays in flight while the NEXT
+    // block's stage-1 pass runs. Results must stay bit-identical to the
+    // synchronous path above.
+    let mut block = lrwbins::tabular::RowBlock::new();
+    let mut async_preds = Vec::new();
+    let mut pending: Option<lrwbins::coordinator::BlockPending<'_>> = None;
+    let t = Instant::now();
+    for chunk in rows.chunks(batch) {
+        block.fill_from_rows(chunk);
+        let next = stack.coordinator.predict_block_async(&block)?;
+        if let Some(p) = pending.replace(next) {
+            async_preds.extend(p.wait()?);
+        }
+    }
+    if let Some(p) = pending {
+        async_preds.extend(p.wait()?);
+    }
+    let wall_async = t.elapsed();
+    println!(
+        "\n--- multistage: same workload, pipelined async blocks ---\nwall {:.2}s  throughput {:.0} rows/s  ({:.2}x vs sync batched)",
+        wall_async.as_secs_f64(),
+        rows.len() as f64 / wall_async.as_secs_f64(),
+        wall.as_secs_f64() / wall_async.as_secs_f64()
+    );
+    println!(
+        "per-stage completion: stage1-done mean {:.0}µs, rpc-done mean {:.0}µs",
+        stack.metrics.block_stage1_complete.mean_ns() / 1e3,
+        stack.metrics.block_rpc_complete.mean_ns() / 1e3,
+    );
+    anyhow::ensure!(
+        async_preds.len() == preds.len()
+            && async_preds
+                .iter()
+                .zip(&preds)
+                .all(|(a, b)| a.0.to_bits() == b.0.to_bits() && a.1 == b.1),
+        "pipelined results must be bit-identical to the synchronous block path"
+    );
+
     // --- correctness of the served predictions --------------------------
     let served: Vec<f32> = preds.iter().map(|(p, _)| *p).collect();
     let labels = &stack.test.labels[..served.len()];

@@ -16,12 +16,10 @@
 use lrwbins::datagen;
 use lrwbins::features::{rank_features, RankMethod};
 use lrwbins::gbdt::{self, ForestScratch, GbdtParams};
-use lrwbins::harness;
 use lrwbins::lrwbins::{BlockScratch, LrwBinsModel, LrwBinsParams, ServingTables};
 use lrwbins::rpc::netsim::{NetSim, NetSimConfig};
 use lrwbins::rpc::server::{BatcherConfig, NativeBackend, RpcServer};
 use lrwbins::rpc::RpcClient;
-use lrwbins::runtime::{EngineWorker, ForestParams, Graph};
 use lrwbins::tabular::RowBlock;
 use lrwbins::telemetry::ServeMetrics;
 use lrwbins::util::bench::{quick_requested, Bench};
@@ -123,34 +121,7 @@ fn main() {
     }
 
     // --- PJRT second-stage artifact ---------------------------------------
-    let dir = harness::default_artifacts_dir();
-    if dir.join("manifest.json").exists() {
-        let shapes_depth = 6; // manifest default
-        let ft = second.to_forest_tensors_at(shapes_depth);
-        let worker = EngineWorker::spawn(
-            &dir,
-            vec![Graph::SecondStage],
-            Some(ForestParams::from_tensors(&ft, &manifest_shapes(&dir)).unwrap()),
-            None,
-        )
-        .expect("engine");
-        let f_max = worker.f_max;
-        for &batch in &[1usize, 16, 128, 1024] {
-            let mut padded = vec![0f32; batch * f_max];
-            for (i, row) in rows.iter().cycle().take(batch).enumerate() {
-                padded[i * f_max..i * f_max + row.len()].copy_from_slice(row);
-            }
-            bench.run_items(
-                &format!("PJRT second_stage execute (batch={batch})"),
-                batch as u64,
-                || {
-                    std::hint::black_box(worker.second_stage(padded.clone(), batch).unwrap());
-                },
-            );
-        }
-    } else {
-        eprintln!("(skipping PJRT benches — run `make artifacts`)");
-    }
+    pjrt_section(&mut bench, &second, &rows);
 
     println!("{}", bench.report("Hot-path microbenchmarks"));
 
@@ -169,6 +140,45 @@ fn main() {
     }
 }
 
+#[cfg(feature = "pjrt")]
+fn pjrt_section(bench: &mut Bench, second: &gbdt::GbdtModel, rows: &[Vec<f32>]) {
+    use lrwbins::runtime::{EngineWorker, ForestParams, Graph};
+    let dir = lrwbins::harness::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("(skipping PJRT benches — run `make artifacts`)");
+        return;
+    }
+    let shapes_depth = 6; // manifest default
+    let ft = second.to_forest_tensors_at(shapes_depth);
+    let worker = EngineWorker::spawn(
+        &dir,
+        vec![Graph::SecondStage],
+        Some(ForestParams::from_tensors(&ft, &manifest_shapes(&dir)).unwrap()),
+        None,
+    )
+    .expect("engine");
+    let f_max = worker.f_max;
+    for &batch in &[1usize, 16, 128, 1024] {
+        let mut padded = vec![0f32; batch * f_max];
+        for (i, row) in rows.iter().cycle().take(batch).enumerate() {
+            padded[i * f_max..i * f_max + row.len()].copy_from_slice(row);
+        }
+        bench.run_items(
+            &format!("PJRT second_stage execute (batch={batch})"),
+            batch as u64,
+            || {
+                std::hint::black_box(worker.second_stage(padded.clone(), batch).unwrap());
+            },
+        );
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section(_bench: &mut Bench, _second: &gbdt::GbdtModel, _rows: &[Vec<f32>]) {
+    eprintln!("(skipping PJRT benches — built without the `pjrt` feature)");
+}
+
+#[cfg(feature = "pjrt")]
 fn manifest_shapes(dir: &std::path::Path) -> lrwbins::runtime::Shapes {
     let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
     let j = lrwbins::util::json::Json::parse(&text).unwrap();

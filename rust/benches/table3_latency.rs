@@ -115,11 +115,13 @@ fn main() {
     println!("\nresource accounting (multistage run):\n{}", stack.metrics.report());
 
     // --- Block-path variants (columnar RowBlock through the coordinator) --
-    // Runs AFTER the resource-accounting report above so its (fetch-free)
-    // traffic does not pollute the Table 3 metrics. Per-inference latency of
-    // `predict_block` at product batch sizes; the feature-fetch simulator
-    // does not apply on the batch API (features arrive with the request),
-    // so compare across block sizes, not against the fetch-loaded rows.
+    // Runs AFTER the resource-accounting report above so its traffic does
+    // not pollute the Table 3 metrics. The block path honors the same
+    // per-row feature-fetch cost model as the scalar path; this workload
+    // models batched product requests whose features arrive WITH the
+    // request, so the fetch simulator is disabled here — compare across
+    // block sizes, not against the fetch-loaded scalar rows above.
+    stack.coordinator.fetch = None;
     println!("\n| block batch | stage-1 only | always-RPC | multistage |");
     println!("|---|---|---|---|");
     let n_avail = stack.test.n_rows();
@@ -152,4 +154,60 @@ fn main() {
             fmt_ns(per_mode[2])
         );
     }
+
+    // --- Pipelined block serving (the async coordinator) ------------------
+    // Same multistage workload, two drivers: the synchronous
+    // `predict_block` (each block waits out its coalesced miss RPC before
+    // the next starts) vs the pipelined `predict_block_async` (block N+1's
+    // stage-1 pass and RPC launch overlap block N's outstanding RPC; depth
+    // 2). The gap is the network wait the paper's architecture leaves on
+    // the table when blocks are served with a barrier.
+    stack.coordinator.mode = Mode::Multistage;
+    println!("\n| block batch | sync predict_block | pipelined async | sync/async speedup |");
+    println!("|---|---|---|---|");
+    for &bs in &[8usize, 64, 256] {
+        let bs = bs.min(n_avail);
+        let reps = (total / bs).max(2);
+        let span = n_avail - bs; // valid fill offsets: 0..=span
+
+        // Warm up both paths (connections, scratch, batcher).
+        block.fill_from_dataset(&stack.test, 0, bs);
+        let _ = stack.coordinator.predict_block(&block);
+
+        let t0 = Instant::now();
+        for rep in 0..reps {
+            block.fill_from_dataset(&stack.test, (rep * bs) % (span + 1), bs);
+            let _ = stack.coordinator.predict_block(&block);
+        }
+        let sync_ns = t0.elapsed().as_nanos() as f64 / (reps * bs) as f64;
+
+        let t0 = Instant::now();
+        let mut pending = None;
+        for rep in 0..reps {
+            block.fill_from_dataset(&stack.test, (rep * bs) % (span + 1), bs);
+            let next = stack
+                .coordinator
+                .predict_block_async(&block)
+                .expect("async block");
+            if let Some(p) = pending.replace(next) {
+                let _ = p.wait().expect("join block");
+            }
+        }
+        if let Some(p) = pending {
+            let _ = p.wait().expect("join last block");
+        }
+        let async_ns = t0.elapsed().as_nanos() as f64 / (reps * bs) as f64;
+
+        println!(
+            "| {bs} | {} | {} | {:.2}x |",
+            fmt_ns(sync_ns),
+            fmt_ns(async_ns),
+            sync_ns / async_ns
+        );
+    }
+    println!(
+        "\nper-stage completion (multistage blocks): stage1-done mean {}, rpc-done mean {}",
+        fmt_ns(stack.metrics.block_stage1_complete.mean_ns()),
+        fmt_ns(stack.metrics.block_rpc_complete.mean_ns()),
+    );
 }

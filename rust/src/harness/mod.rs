@@ -9,12 +9,13 @@ use crate::coordinator::Coordinator;
 use crate::datagen;
 use crate::lrwbins::ServingTables;
 use crate::rpc::netsim::{NetSim, NetSimConfig};
-use crate::rpc::server::{Backend, BatcherConfig, NativeBackend, PjrtBackend, RpcServer};
+use crate::rpc::server::{Backend, BatcherConfig, NativeBackend, RpcServer};
 use crate::rpc::RpcClient;
-use crate::runtime::{EngineWorker, ForestParams, Graph};
 use crate::tabular::{split, Dataset};
 use crate::telemetry::ServeMetrics;
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -124,7 +125,10 @@ pub fn build(cfg: &StackConfig) -> Result<Stack> {
     let netsim = Arc::new(NetSim::new(cfg.netsim.clone(), cfg.seed ^ 0x7777));
 
     let (backend, rpc_row_len, pjrt): (Arc<dyn Backend>, usize, bool) = match cfg.backend.as_str() {
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
+            use crate::rpc::server::PjrtBackend;
+            use crate::runtime::{EngineWorker, ForestParams, Graph};
             let shapes = manifest_shapes(&cfg.artifacts_dir)?;
             let ft = pipeline.second.to_forest_tensors_at(shapes.depth);
             let worker = EngineWorker::spawn(
@@ -144,6 +148,8 @@ pub fn build(cfg: &StackConfig) -> Result<Stack> {
                 true,
             )
         }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!("this build has no PJRT runtime (rebuild with --features pjrt)"),
         "native" => (
             Arc::new(NativeBackend::new(pipeline.second.clone())),
             data.n_features(),
@@ -172,6 +178,7 @@ pub fn build(cfg: &StackConfig) -> Result<Stack> {
     })
 }
 
+#[cfg(feature = "pjrt")]
 fn manifest_shapes(dir: &std::path::Path) -> Result<crate::runtime::Shapes> {
     // Engine::load parses these; we need them before the worker spawns to
     // pad the forest, so parse the manifest cheaply here.

@@ -31,6 +31,11 @@ pub mod lrwbins;
 pub mod metrics;
 pub mod picasso;
 pub mod rpc;
+/// PJRT runtime (Layer 2). Compiled only with `--features pjrt`: the `xla`
+/// bindings are not on crates.io, so the default build serves through the
+/// dependency-free native backend and this module is gated off (see
+/// `Cargo.toml` for how to enable it).
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod telemetry;
 pub mod tabular;

@@ -1,90 +1,338 @@
-//! Pooled synchronous RPC client — the product-code side of the RPC API.
+//! Pipelined pooled RPC client — the product-code side of the RPC API.
 //!
-//! Each call grabs a pooled connection (or dials a new one), writes one
-//! request frame and blocks for the response; pipelining happens naturally
-//! across caller threads, and the server's dynamic batcher coalesces them.
+//! Each connection is **multiplexed**: callers write request frames onto a
+//! shared pooled connection without waiting for earlier responses, and a
+//! dedicated reader thread demultiplexes response frames back to the right
+//! caller by `req_id`. That is what lets the coordinator keep a coalesced
+//! fallback RPC in flight while it evaluates the next block's stage-1 pass
+//! (and lets the server's dynamic batcher coalesce requests that share a
+//! connection). The old design — one exclusively-owned connection per call
+//! for its full round trip — serialized everything behind the slowest
+//! outstanding request.
+//!
+//! [`RpcClient::predict_async`] returns a [`PendingPredict`] handle
+//! immediately after the request frame is written; [`PendingPredict::wait`]
+//! blocks for the demuxed response. [`RpcClient::predict`] is the blocking
+//! composition of the two.
+//!
+//! ## Failure handling
+//!
+//! A pooled connection can go stale between calls (server restarted, idle
+//! reap on the far side). Both failure sides are retried **once** on a
+//! fresh dial, but only when the failed connection was *pooled* — a
+//! connection dialed by this very call failing means the server is really
+//! gone:
+//! * write side: `write_frame` fails (stale socket rejects the send);
+//! * read side: the response never arrives because the reader saw
+//!   EOF/reset — the stale socket *accepted* the write into a dead buffer.
+//!
+//! A response frame flagged as a server-side error (backend failure) is
+//! surfaced as an error without retry: it is a live answer from a healthy
+//! connection, and resending would fail the same way.
 
-use super::proto::{self, Request};
+use super::proto::{self, Request, Response};
+use std::collections::HashMap;
+use std::io;
 use std::net::{SocketAddr, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
-/// Thread-safe pooled client.
+/// Connections kept per client. Requests round-robin across them so
+/// per-connection frame transmission overlaps across concurrent requests.
+const POOL_CONNS: usize = 4;
+
+/// Responses carry the instant their frame arrived at the client: metrics
+/// want completion time, which is earlier than the caller's join when the
+/// caller overlaps other work before waiting.
+type ReplyTx = mpsc::Sender<io::Result<(Response, Instant)>>;
+
+/// One pipelined connection: a writer half shared by callers (frames are
+/// written whole under the lock) and a reader thread that routes response
+/// frames to the pending table by `req_id`.
+struct Conn {
+    writer: Mutex<TcpStream>,
+    pending: Mutex<HashMap<u64, ReplyTx>>,
+    dead: AtomicBool,
+}
+
+impl Conn {
+    fn lock_writer(&self) -> MutexGuard<'_, TcpStream> {
+        self.writer.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn lock_pending(&self) -> MutexGuard<'_, HashMap<u64, ReplyTx>> {
+        self.pending.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Mark the connection dead and fail every in-flight request on it.
+    fn fail_all(&self, kind: io::ErrorKind, msg: &str) {
+        self.dead.store(true, Ordering::Relaxed);
+        for (_, tx) in self.lock_pending().drain() {
+            let _ = tx.send(Err(io::Error::new(kind, msg)));
+        }
+    }
+}
+
+/// Reader loop: demultiplex response frames until the connection dies.
+/// Any read failure (including an idle timeout) retires the connection —
+/// in-flight callers get a transport error and retry on a fresh dial.
+fn reader_loop(conn: Arc<Conn>, mut stream: TcpStream) {
+    loop {
+        match proto::read_response(&mut stream) {
+            Ok(Some(resp)) => {
+                // Unknown ids are responses to abandoned (timed-out)
+                // requests; dropping them keeps the stream in sync.
+                if let Some(tx) = conn.lock_pending().remove(&resp.req_id) {
+                    let _ = tx.send(Ok((resp, Instant::now())));
+                }
+            }
+            Ok(None) => {
+                conn.fail_all(io::ErrorKind::UnexpectedEof, "server closed connection");
+                return;
+            }
+            Err(e) => {
+                conn.fail_all(e.kind(), "connection failed mid-response");
+                return;
+            }
+        }
+    }
+}
+
+/// Thread-safe pipelined client.
 pub struct RpcClient {
     addr: SocketAddr,
-    pool: Mutex<Vec<TcpStream>>,
+    pool: Mutex<Vec<Arc<Conn>>>,
     next_id: AtomicU64,
+    rr: AtomicUsize,
     timeout: Duration,
 }
 
+/// An in-flight [`RpcClient::predict_async`] call. Dropping it abandons the
+/// request (a late response is discarded by the reader thread).
+pub struct PendingPredict<'a> {
+    client: &'a RpcClient,
+    conn: Arc<Conn>,
+    /// The connection was dialed by this call (so a failure on it is not a
+    /// stale-pool artifact and must not be retried).
+    fresh: bool,
+    req: Request,
+    rx: mpsc::Receiver<io::Result<(Response, Instant)>>,
+    n_rows: usize,
+}
+
+impl PendingPredict<'_> {
+    /// Rows this call asked the service to score.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Block for the response. Retries exactly once on a fresh dial when a
+    /// *pooled* connection failed at the transport level (see module docs).
+    pub fn wait(self) -> io::Result<Vec<f32>> {
+        self.wait_timed().map(|(probs, _)| probs)
+    }
+
+    /// Like [`PendingPredict::wait`], also returning the instant the
+    /// response frame arrived at the client — completion time for latency
+    /// accounting, which precedes the join when the caller overlapped
+    /// other work before waiting.
+    pub fn wait_timed(self) -> io::Result<(Vec<f32>, Instant)> {
+        match recv_result(self.client, &self.conn, &self.req, &self.rx, self.n_rows) {
+            Err(e) if !self.fresh && stale_connection_error(&e) => {
+                self.client.call_on_fresh(&self.req, self.n_rows)
+            }
+            other => other,
+        }
+    }
+}
+
+/// Transport failures that indicate a stale pooled connection (the far side
+/// closed it between calls) — the only errors worth a fresh-dial retry. A
+/// spent deadline (`TimedOut`) and live server answers (error frames map to
+/// `Other`, malformed lengths to `InvalidData`) are final.
+fn stale_connection_error(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::BrokenPipe
+            | io::ErrorKind::NotConnected
+    )
+}
+
+/// One receive attempt for `req` on `conn` — no retry policy here.
+fn recv_result(
+    client: &RpcClient,
+    conn: &Conn,
+    req: &Request,
+    rx: &mpsc::Receiver<io::Result<(Response, Instant)>>,
+    n_rows: usize,
+) -> io::Result<(Vec<f32>, Instant)> {
+    match rx.recv_timeout(client.timeout) {
+        Ok(Ok((resp, arrived))) => finish(req, n_rows, resp).map(|probs| (probs, arrived)),
+        Ok(Err(e)) => Err(e),
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            // Reader thread vanished without answering (shutdown race).
+            Err(io::Error::new(io::ErrorKind::BrokenPipe, "connection reader gone"))
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            // Abandon the request and retire the (possibly wedged)
+            // connection; the deadline is already spent.
+            conn.lock_pending().remove(&req.req_id);
+            conn.dead.store(true, Ordering::Relaxed);
+            Err(io::Error::new(io::ErrorKind::TimedOut, "rpc response timed out"))
+        }
+    }
+}
+
+/// Map a decoded response to the caller-visible result.
+fn finish(req: &Request, n_rows: usize, resp: Response) -> io::Result<Vec<f32>> {
+    if resp.req_id != req.req_id {
+        // The demux table makes this unreachable; keep the invariant hard.
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "response id mismatch"));
+    }
+    if resp.error {
+        return Err(io::Error::other("server reported a backend failure"));
+    }
+    if resp.probs.len() != n_rows {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("expected {n_rows} probabilities, got {}", resp.probs.len()),
+        ));
+    }
+    Ok(resp.probs)
+}
+
 impl RpcClient {
-    pub fn connect(addr: SocketAddr) -> std::io::Result<RpcClient> {
+    pub fn connect(addr: SocketAddr) -> io::Result<RpcClient> {
         let client = RpcClient {
             addr,
             pool: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(1),
+            rr: AtomicUsize::new(0),
             timeout: Duration::from_secs(30),
         };
         // Eagerly dial one connection to fail fast on a bad address.
-        let s = client.dial()?;
-        client.pool.lock().unwrap().push(s);
+        client.dial_into_pool()?;
         Ok(client)
     }
 
-    fn dial(&self) -> std::io::Result<TcpStream> {
-        let s = TcpStream::connect_timeout(&self.addr, Duration::from_secs(5))?;
-        s.set_nodelay(true)?;
-        s.set_read_timeout(Some(self.timeout))?;
-        s.set_write_timeout(Some(self.timeout))?;
-        Ok(s)
+    fn lock_pool(&self) -> MutexGuard<'_, Vec<Arc<Conn>>> {
+        self.pool.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
-    fn take_stream(&self) -> std::io::Result<TcpStream> {
-        if let Some(s) = self.pool.lock().unwrap().pop() {
-            return Ok(s);
+    /// Dial a connection, spawn its reader thread, and pool it.
+    fn dial_into_pool(&self) -> io::Result<Arc<Conn>> {
+        let stream = TcpStream::connect_timeout(&self.addr, Duration::from_secs(5))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        let reader_half = stream.try_clone()?;
+        let conn = Arc::new(Conn {
+            writer: Mutex::new(stream),
+            pending: Mutex::new(HashMap::new()),
+            dead: AtomicBool::new(false),
+        });
+        let for_reader = conn.clone();
+        std::thread::Builder::new()
+            .name("rpc-client-reader".into())
+            .spawn(move || reader_loop(for_reader, reader_half))?;
+        let mut pool = self.lock_pool();
+        pool.retain(|c| !c.dead.load(Ordering::Relaxed));
+        if pool.len() < POOL_CONNS {
+            pool.push(conn.clone());
         }
-        self.dial()
+        Ok(conn)
     }
 
-    fn put_stream(&self, s: TcpStream) {
-        let mut pool = self.pool.lock().unwrap();
-        if pool.len() < 64 {
-            pool.push(s);
+    /// A live connection for the next request: round-robin over the pool,
+    /// growing it toward [`POOL_CONNS`]. The `bool` is true if the
+    /// connection was freshly dialed by this call.
+    fn live_conn(&self) -> io::Result<(Arc<Conn>, bool)> {
+        {
+            let mut pool = self.lock_pool();
+            pool.retain(|c| !c.dead.load(Ordering::Relaxed));
+            if pool.len() >= POOL_CONNS {
+                let i = self.rr.fetch_add(1, Ordering::Relaxed) % pool.len();
+                return Ok((pool[i].clone(), false));
+            }
         }
+        Ok((self.dial_into_pool()?, true))
     }
 
-    /// Synchronous batched inference call. `rows.len() = n · row_len`.
-    /// Returns one probability per row.
-    pub fn predict(&self, rows: &[f32], row_len: usize) -> std::io::Result<Vec<f32>> {
+    /// Register the request in `conn`'s pending table and write its frame.
+    fn send_on(
+        &self,
+        conn: &Conn,
+        req: &Request,
+        buf: &[u8],
+    ) -> io::Result<mpsc::Receiver<io::Result<(Response, Instant)>>> {
+        let (tx, rx) = mpsc::channel();
+        conn.lock_pending().insert(req.req_id, tx);
+        let res = proto::write_frame(&mut *conn.lock_writer(), buf);
+        if let Err(e) = res {
+            conn.lock_pending().remove(&req.req_id);
+            conn.dead.store(true, Ordering::Relaxed);
+            return Err(e);
+        }
+        // The reader may have retired the connection (setting `dead`, then
+        // draining `pending`) before our entry was registered — in that
+        // case nobody will ever answer it. `fail_all` sets `dead` before
+        // draining, so seeing it clear here means our entry either survives
+        // or was drained with an error already queued on `rx`.
+        if conn.dead.load(Ordering::Relaxed) && conn.lock_pending().remove(&req.req_id).is_some() {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "connection retired"));
+        }
+        Ok(rx)
+    }
+
+    /// Start an asynchronous batched inference call: the request frame is
+    /// on the wire when this returns, and the response is collected by
+    /// [`PendingPredict::wait`]. `rows.len() = n · row_len`.
+    pub fn predict_async(&self, rows: &[f32], row_len: usize) -> io::Result<PendingPredict<'_>> {
         let req = Request {
             req_id: self.next_id.fetch_add(1, Ordering::Relaxed),
             row_len: row_len as u32,
             rows: rows.to_vec(),
         };
-        let mut stream = self.take_stream()?;
-        let mut buf = Vec::new();
+        let n_rows = req.n_rows() as usize;
+        let mut buf = Vec::with_capacity(req.wire_size());
         proto::encode_request(&req, &mut buf);
-        if proto::write_frame(&mut stream, &buf).is_err() {
-            // Stale pooled connection — retry once on a fresh dial.
-            stream = self.dial()?;
-            proto::write_frame(&mut stream, &buf)?;
+
+        let (conn, fresh) = self.live_conn()?;
+        match self.send_on(&conn, &req, &buf) {
+            Ok(rx) => Ok(PendingPredict { client: self, conn, fresh, req, rx, n_rows }),
+            Err(e) if fresh => Err(e),
+            Err(_) => {
+                // Stale pooled connection rejected the write — retry once
+                // on a fresh dial.
+                let conn = self.dial_into_pool()?;
+                let rx = self.send_on(&conn, &req, &buf)?;
+                Ok(PendingPredict { client: self, conn, fresh: true, req, rx, n_rows })
+            }
         }
-        let resp = proto::read_response(&mut stream)?.ok_or_else(|| {
-            std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "server closed")
-        })?;
-        if resp.req_id != req.req_id {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                "response id mismatch",
-            ));
-        }
-        self.put_stream(stream);
-        Ok(resp.probs)
+    }
+
+    /// One full round trip on a freshly dialed connection (the read-side
+    /// retry path — no further retries).
+    fn call_on_fresh(&self, req: &Request, n_rows: usize) -> io::Result<(Vec<f32>, Instant)> {
+        let mut buf = Vec::with_capacity(req.wire_size());
+        proto::encode_request(req, &mut buf);
+        let conn = self.dial_into_pool()?;
+        let rx = self.send_on(&conn, req, &buf)?;
+        recv_result(self, &conn, req, &rx, n_rows)
+    }
+
+    /// Synchronous batched inference call. `rows.len() = n · row_len`.
+    /// Returns one probability per row.
+    pub fn predict(&self, rows: &[f32], row_len: usize) -> io::Result<Vec<f32>> {
+        self.predict_async(rows, row_len)?.wait()
     }
 
     /// Round-trip ping (health check / RTT probe).
-    pub fn ping(&self) -> std::io::Result<Duration> {
+    pub fn ping(&self) -> io::Result<Duration> {
         let t0 = std::time::Instant::now();
         let probs = self.predict(&[], 0)?;
         debug_assert!(probs.is_empty());
@@ -96,6 +344,17 @@ impl RpcClient {
         let req = 4 + 8 + 4 + 4 + (n_rows * row_len * 4) as u64;
         let resp = 4 + 8 + 4 + (n_rows * 4) as u64;
         req + resp
+    }
+}
+
+impl Drop for RpcClient {
+    /// Shut the sockets down so every reader thread sees EOF and exits now
+    /// instead of idling until its read timeout.
+    fn drop(&mut self) {
+        for c in self.lock_pool().drain(..) {
+            c.dead.store(true, Ordering::Relaxed);
+            let _ = c.lock_writer().shutdown(std::net::Shutdown::Both);
+        }
     }
 }
 
@@ -161,6 +420,25 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_requests_demux_by_id() {
+        // Many requests in flight on ONE client before any wait: responses
+        // may complete out of order server-side; demux must route each to
+        // its caller.
+        let (server, _m) = start_server();
+        let client = RpcClient::connect(server.addr).unwrap();
+        let pendings: Vec<_> = (0..32)
+            .map(|i| {
+                let v = i as f32;
+                client.predict_async(&[v, v + 2.0], 2).unwrap()
+            })
+            .collect();
+        for (i, p) in pendings.into_iter().enumerate() {
+            let probs = p.wait().unwrap();
+            assert_eq!(probs, vec![i as f32 + 1.0], "request {i}");
+        }
+    }
+
+    #[test]
     fn concurrent_clients_all_answered() {
         let (server, metrics) = start_server();
         let addr = server.addr;
@@ -219,6 +497,39 @@ mod tests {
         client.predict(&[1.0, 2.0], 2).unwrap();
         let full = t0.elapsed();
         assert!(full >= Duration::from_millis(3), "full={full:?}");
+    }
+
+    #[test]
+    fn stale_pooled_connection_recovers_across_server_restart() {
+        // Cycle the server between calls: the pooled connection the first
+        // call parked is dead for the second. Whichever side notices (the
+        // write is rejected, the reader sees EOF after the write was
+        // swallowed, or the reader already retired the connection), the
+        // call must transparently succeed against the restarted server.
+        let (server, _m) = start_server();
+        let addr = server.addr;
+        let client = RpcClient::connect(addr).unwrap();
+        // Warm the pool to POOL_CONNS so the post-restart call is routed to
+        // a POOLED (reused) connection — the only case eligible for retry.
+        for i in 0..(2 * POOL_CONNS) {
+            let v = i as f32;
+            assert_eq!(client.predict(&[v, v + 2.0], 2).unwrap(), vec![v + 1.0]);
+        }
+
+        drop(server);
+        std::thread::sleep(Duration::from_millis(50));
+        let server2 = RpcServer::start(
+            &addr.to_string(),
+            Arc::new(MeanBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig::default(),
+            Arc::new(ServeMetrics::new()),
+        )
+        .expect("rebind the same address");
+        assert_eq!(server2.addr, addr);
+
+        let probs = client.predict(&[10.0, 20.0], 2).unwrap();
+        assert_eq!(probs, vec![15.0]);
     }
 
     #[test]

@@ -3,15 +3,16 @@
 //!
 //! A real TCP service over a length-prefixed binary protocol (`proto`), a
 //! dynamic batcher that coalesces concurrent requests into backend batches
-//! (`server`), a pooled synchronous client (`client`), and a calibrated
-//! network-latency simulator (`netsim`) standing in for the datacenter hop
-//! the paper measures (DESIGN.md §6).
+//! (`server`), a pooled **pipelined** client (`client`) that multiplexes
+//! in-flight requests over shared connections and demultiplexes responses
+//! by `req_id`, and a calibrated network-latency simulator (`netsim`)
+//! standing in for the datacenter hop the paper measures (DESIGN.md §6).
 
 pub mod client;
 pub mod netsim;
 pub mod proto;
 pub mod server;
 
-pub use client::RpcClient;
+pub use client::{PendingPredict, RpcClient};
 pub use netsim::NetSim;
 pub use server::{Backend, BatcherConfig, RpcServer};

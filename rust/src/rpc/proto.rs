@@ -7,10 +7,21 @@
 //!
 //! `row_len` is the padded feature width; probabilities come back one per
 //! row. A zero-row request is a ping (used for health checks / RTT probes).
+//!
+//! Responses are correlated to requests by `req_id`, never by arrival
+//! order: the client pipelines several request frames on one connection and
+//! the server answers each as its batch completes, so responses can arrive
+//! out of order. A response whose `n_rows` field is [`ERROR_SENTINEL`]
+//! (`u32::MAX`, impossible for a real row count) carries no probabilities
+//! and means the server failed to serve that request (e.g. the backend
+//! panicked); the connection itself stays usable.
 
 use std::io::{Read, Write};
 
 pub const MAX_FRAME: usize = 64 << 20;
+
+/// `n_rows` value marking a response as a server-side failure report.
+pub const ERROR_SENTINEL: u32 = u32::MAX;
 
 /// Inference request.
 #[derive(Clone, Debug, PartialEq)]
@@ -34,14 +45,24 @@ impl Request {
     }
 }
 
-/// Inference response.
+/// Inference response. `error` marks a server-side failure (encoded as an
+/// [`ERROR_SENTINEL`] row count, no probabilities).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Response {
     pub req_id: u64,
     pub probs: Vec<f32>,
+    pub error: bool,
 }
 
 impl Response {
+    pub fn ok(req_id: u64, probs: Vec<f32>) -> Response {
+        Response { req_id, probs, error: false }
+    }
+
+    pub fn err(req_id: u64) -> Response {
+        Response { req_id, probs: Vec::new(), error: true }
+    }
+
     pub fn wire_size(&self) -> usize {
         4 + 8 + 4 + self.probs.len() * 4
     }
@@ -71,6 +92,12 @@ pub fn encode_request(r: &Request, buf: &mut Vec<u8>) {
 /// Encode a response frame.
 pub fn encode_response(r: &Response, buf: &mut Vec<u8>) {
     buf.clear();
+    if r.error {
+        put_u32(buf, 8 + 4);
+        put_u64(buf, r.req_id);
+        put_u32(buf, ERROR_SENTINEL);
+        return;
+    }
     let payload = 8 + 4 + r.probs.len() * 4;
     put_u32(buf, payload as u32);
     put_u64(buf, r.req_id);
@@ -172,7 +199,17 @@ pub fn read_response(stream: &mut impl Read) -> std::io::Result<Option<Response>
         ));
     }
     let req_id = get_u64(&payload, 0);
-    let n = get_u32(&payload, 8) as usize;
+    let n_field = get_u32(&payload, 8);
+    if n_field == ERROR_SENTINEL {
+        if len != 12 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "error response carries a payload",
+            ));
+        }
+        return Ok(Some(Response::err(req_id)));
+    }
+    let n = n_field as usize;
     if 12 + n * 4 != len {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
@@ -183,7 +220,7 @@ pub fn read_response(stream: &mut impl Read) -> std::io::Result<Option<Response>
     for c in payload[12..].chunks_exact(4) {
         probs.push(f32::from_le_bytes(c.try_into().unwrap()));
     }
-    Ok(Some(Response { req_id, probs }))
+    Ok(Some(Response::ok(req_id, probs)))
 }
 
 /// Write a pre-encoded frame.
@@ -214,14 +251,35 @@ mod tests {
 
     #[test]
     fn response_roundtrip() {
-        let r = Response {
-            req_id: 7,
-            probs: vec![0.25, 0.75],
-        };
+        let r = Response::ok(7, vec![0.25, 0.75]);
         let mut buf = Vec::new();
         encode_response(&r, &mut buf);
         let r2 = read_response(&mut Cursor::new(buf)).unwrap().unwrap();
         assert_eq!(r, r2);
+    }
+
+    #[test]
+    fn error_response_roundtrip() {
+        let r = Response::err(99);
+        let mut buf = Vec::new();
+        encode_response(&r, &mut buf);
+        let r2 = read_response(&mut Cursor::new(buf)).unwrap().unwrap();
+        assert!(r2.error);
+        assert_eq!(r2.req_id, 99);
+        assert!(r2.probs.is_empty());
+    }
+
+    #[test]
+    fn error_response_with_payload_rejected() {
+        // ERROR_SENTINEL row count must not carry probabilities.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&5u64.to_le_bytes());
+        payload.extend_from_slice(&ERROR_SENTINEL.to_le_bytes());
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        assert!(read_response(&mut Cursor::new(buf)).is_err());
     }
 
     #[test]

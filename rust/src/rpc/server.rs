@@ -5,6 +5,17 @@
 //! batches (up to `max_batch` rows or `max_wait`, whichever first) — the
 //! standard dynamic-batching pattern of model servers (vLLM/Triton style),
 //! which is what makes the RPC side a realistic baseline for Table 3.
+//!
+//! Connections are **pipelined**: the per-connection reader keeps parsing
+//! and admitting requests without waiting for earlier responses, and each
+//! completed job writes its own response frame through the connection's
+//! shared write half — possibly out of request order; the client
+//! demultiplexes by `req_id`. Simulated network hops (`NetSim`) model
+//! propagation delay, so they run off-thread and overlap instead of
+//! stacking behind one another. A panicking [`Backend::predict`] is
+//! contained to its batch: the worker catches the unwind, answers the
+//! batch's requests with error frames, and keeps serving (queue locks are
+//! poison-tolerant throughout).
 
 use super::netsim::NetSim;
 use super::proto::{self, Request, Response};
@@ -12,7 +23,7 @@ use crate::telemetry::ServeMetrics;
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 /// Backend model abstraction: PJRT artifact or native GBDT.
@@ -90,6 +101,7 @@ impl Backend for NativeBackend {
 /// cycles through the engine thread instead of allocating a fresh row copy
 /// per batch — a pool (not a single slot) because the server's batcher
 /// workers call `predict` concurrently.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     pub worker: Arc<crate::runtime::EngineWorker>,
     staging: Mutex<Vec<Vec<f32>>>,
@@ -97,8 +109,10 @@ pub struct PjrtBackend {
 
 /// Staging buffers kept for reuse; more concurrent batches than this just
 /// allocate (and the extras are dropped on return).
+#[cfg(feature = "pjrt")]
 const PJRT_STAGING_POOL: usize = 8;
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     pub fn new(worker: Arc<crate::runtime::EngineWorker>) -> PjrtBackend {
         PjrtBackend {
@@ -108,6 +122,7 @@ impl PjrtBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Backend for PjrtBackend {
     fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
         assert_eq!(row_len, self.worker.f_max, "PJRT backend needs padded rows");
@@ -155,17 +170,77 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Write half of a connection, shared by every response path; frames are
+/// written whole under the lock, so responses from different batches can
+/// never interleave on the wire.
+type SharedWriter = Arc<Mutex<TcpStream>>;
+
 struct Job {
+    req_id: u64,
     rows: Vec<f32>,
     n: usize,
     row_len: usize,
-    resp: mpsc::Sender<Vec<f32>>,
+    out: SharedWriter,
+    netsim: Arc<NetSim>,
+}
+
+impl Job {
+    /// Answer this job: `Some(probs)` served, `None` = error frame.
+    fn respond(&self, result: Option<Vec<f32>>) {
+        respond(&self.out, &self.netsim, self.req_id, result);
+    }
+}
+
+/// Deliver one response to a client. Successful non-ping responses pay the
+/// simulated outbound network hop; when the sim is on, the delay runs on
+/// its own thread — hops are propagation, not transmission, so concurrent
+/// responses must overlap rather than queue behind one another's sleeps.
+/// Error frames and pings skip the hop (failure notifications are cheap;
+/// the RTT probe measures a single simulated hop).
+fn respond(out: &SharedWriter, netsim: &Arc<NetSim>, req_id: u64, result: Option<Vec<f32>>) {
+    let resp = match result {
+        Some(probs) => Response::ok(req_id, probs),
+        None => Response::err(req_id),
+    };
+    if netsim.enabled() && !resp.error && !resp.probs.is_empty() {
+        let out = out.clone();
+        let netsim = netsim.clone();
+        // A spawn failure (total resource collapse) drops the frame and
+        // surfaces as a client-side timeout — the sim-only thread cost is
+        // bounded by the in-flight request count.
+        std::thread::Builder::new()
+            .name("netsim-hop".into())
+            .spawn(move || {
+                netsim.inject();
+                write_response(&out, &resp);
+            })
+            .ok();
+    } else {
+        write_response(out, &resp);
+    }
+}
+
+fn write_response(out: &SharedWriter, resp: &Response) {
+    let mut buf = Vec::new();
+    proto::encode_response(resp, &mut buf);
+    let mut stream = out.lock().unwrap_or_else(PoisonError::into_inner);
+    // A write failure means the client hung up; it will be rediscovered by
+    // the connection reader, so it is ignorable here.
+    let _ = proto::write_frame(&mut *stream, &buf);
 }
 
 struct Queue {
     jobs: Mutex<VecDeque<Job>>,
     avail: Condvar,
     shutdown: AtomicBool,
+}
+
+impl Queue {
+    /// Jobs are self-contained (a poisoning panic cannot leave one half
+    /// mutated), so a poisoned lock must not take the service down.
+    fn lock_jobs(&self) -> MutexGuard<'_, VecDeque<Job>> {
+        self.jobs.lock().unwrap_or_else(PoisonError::into_inner)
+    }
 }
 
 /// Running RPC server; shuts down on drop.
@@ -247,9 +322,11 @@ impl Drop for RpcServer {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         self.queue.shutdown.store(true, Ordering::Relaxed);
-        // Drop queued jobs: their reply senders close, so connection
-        // threads waiting on recv() error out and hang up promptly.
-        self.queue.jobs.lock().unwrap().clear();
+        // Answer queued jobs with error frames so pipelined clients get a
+        // prompt failure instead of waiting out their response timeout.
+        for job in self.queue.lock_jobs().drain(..) {
+            job.respond(None);
+        }
         self.queue.avail.notify_all();
         // Unblock accept() with a dummy connection.
         let _ = TcpStream::connect(self.addr);
@@ -262,48 +339,71 @@ impl Drop for RpcServer {
     }
 }
 
+/// Per-connection reader: parse frames and admit requests, never waiting
+/// for responses — completed jobs write their own frames (possibly out of
+/// request order; the client demultiplexes by `req_id`).
 fn connection_loop(mut stream: TcpStream, queue: Arc<Queue>, netsim: Arc<NetSim>) {
     stream.set_nodelay(true).ok();
-    let mut out_buf = Vec::new();
+    let Ok(write_half) = stream.try_clone() else { return };
+    let out: SharedWriter = Arc::new(Mutex::new(write_half));
     loop {
         let req: Request = match proto::read_request(&mut stream) {
             Ok(Some(r)) => r,
-            Ok(None) => return, // client closed
-            Err(_) => return,
+            Ok(None) | Err(_) => break, // client closed / protocol error
         };
-        // Inbound network hop (simulated datacenter latency).
-        netsim.inject();
-        let n = req.n_rows() as usize;
-        if n == 0 {
-            // Ping.
-            proto::encode_response(&Response { req_id: req.req_id, probs: vec![] }, &mut out_buf);
-            if proto::write_frame(&mut stream, &out_buf).is_err() {
-                return;
-            }
-            continue;
-        }
-        let (tx, rx) = mpsc::channel();
-        {
-            let mut jobs = queue.jobs.lock().unwrap();
-            if queue.shutdown.load(Ordering::Relaxed) {
-                return; // server stopping: hang up so the client errors fast
-            }
-            jobs.push_back(Job {
-                rows: req.rows,
-                n,
-                row_len: req.row_len as usize,
-                resp: tx,
-            });
-        }
-        queue.avail.notify_one();
-        let Ok(probs) = rx.recv() else { return };
-        // Outbound network hop.
-        netsim.inject();
-        proto::encode_response(&Response { req_id: req.req_id, probs }, &mut out_buf);
-        if proto::write_frame(&mut stream, &out_buf).is_err() {
-            return;
+        // Inbound network hop (simulated datacenter latency). Like the
+        // outbound side, the hop is propagation delay: pipelined frames
+        // travel the network concurrently, so the sleep must not block the
+        // reader from parsing (or admitting) the frames behind this one —
+        // when the sim is on, delay-then-admit runs on its own thread.
+        if netsim.enabled() {
+            let queue = queue.clone();
+            let netsim = netsim.clone();
+            let out = out.clone();
+            std::thread::Builder::new()
+                .name("netsim-hop".into())
+                .spawn(move || {
+                    netsim.inject();
+                    admit(req, queue, out, netsim);
+                })
+                .ok();
+        } else {
+            admit(req, queue.clone(), out.clone(), netsim.clone());
         }
     }
+    // Reader exit closes the read half; in-flight responses keep the write
+    // half alive through `out` and fail harmlessly once the client is gone.
+}
+
+/// Admit one parsed request: pings answer immediately, a shutting-down
+/// server hangs the connection up (so pooled clients fail over to a fresh
+/// dial), everything else parks on the batcher queue.
+fn admit(req: Request, queue: Arc<Queue>, out: SharedWriter, netsim: Arc<NetSim>) {
+    let n = req.n_rows() as usize;
+    if n == 0 {
+        respond(&out, &netsim, req.req_id, Some(Vec::new()));
+        return;
+    }
+    {
+        let mut jobs = queue.lock_jobs();
+        if queue.shutdown.load(Ordering::Relaxed) {
+            drop(jobs);
+            let _ = out
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .shutdown(std::net::Shutdown::Both);
+            return;
+        }
+        jobs.push_back(Job {
+            req_id: req.req_id,
+            rows: req.rows,
+            n,
+            row_len: req.row_len as usize,
+            out,
+            netsim,
+        });
+    }
+    queue.avail.notify_one();
 }
 
 fn batcher_loop(
@@ -318,7 +418,7 @@ fn batcher_loop(
         let mut batch: Vec<Job> = Vec::new();
         let mut total_rows = 0usize;
         {
-            let mut jobs = queue.jobs.lock().unwrap();
+            let mut jobs = queue.lock_jobs();
             loop {
                 if let Some(j) = jobs.pop_front() {
                     total_rows += j.n;
@@ -328,7 +428,10 @@ fn batcher_loop(
                 if queue.shutdown.load(Ordering::Relaxed) {
                     return;
                 }
-                jobs = queue.avail.wait(jobs).unwrap();
+                jobs = queue
+                    .avail
+                    .wait(jobs)
+                    .unwrap_or_else(PoisonError::into_inner);
             }
             let deadline = Instant::now() + cfg.max_wait;
             while total_rows < cfg.max_batch {
@@ -348,7 +451,7 @@ fn batcher_loop(
                 let (guard, timeout) = queue
                     .avail
                     .wait_timeout(jobs, deadline - now)
-                    .unwrap();
+                    .unwrap_or_else(PoisonError::into_inner);
                 jobs = guard;
                 if timeout.timed_out() && jobs.is_empty() {
                     break;
@@ -371,16 +474,84 @@ fn batcher_loop(
                 j += 1;
             }
             let t0 = Instant::now();
-            let probs = backend.predict(&rows, n, row_len);
+            // A panicking backend must not kill the worker (with every
+            // worker dead the queue grows unserved forever — the service is
+            // bricked). Contain the unwind to this batch and answer its
+            // requests with error frames.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                backend.predict(&rows, n, row_len)
+            }));
             metrics.backend_exec.record_duration(t0.elapsed());
-            debug_assert_eq!(probs.len(), n);
-            let mut off = 0;
-            for job in &batch[i..j] {
-                let slice = probs[off..off + job.n].to_vec();
-                off += job.n;
-                let _ = job.resp.send(slice);
+            match result {
+                Ok(probs) => {
+                    debug_assert_eq!(probs.len(), n);
+                    let mut off = 0;
+                    for job in &batch[i..j] {
+                        let slice = probs[off..off + job.n].to_vec();
+                        off += job.n;
+                        job.respond(Some(slice));
+                    }
+                }
+                Err(_) => {
+                    for job in &batch[i..j] {
+                        job.respond(None);
+                    }
+                }
             }
             i = j;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::netsim::NetSimConfig;
+    use crate::rpc::RpcClient;
+
+    /// Backend that panics on any NaN input (a stand-in for a model bug on
+    /// a poison row) and otherwise echoes the first value of each row.
+    struct PanickyBackend;
+
+    impl Backend for PanickyBackend {
+        fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+            assert!(!rows.iter().any(|v| v.is_nan()), "poison row reached the backend");
+            (0..n).map(|r| rows[r * row_len]).collect()
+        }
+        fn row_len(&self) -> usize {
+            0
+        }
+    }
+
+    #[test]
+    fn backend_panic_answers_batch_and_keeps_serving() {
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(PanickyBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::ZERO,
+                // A single worker: if the panic killed it, every later
+                // request would hang instead of being served.
+                workers: 1,
+            },
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        let client = RpcClient::connect(server.addr).unwrap();
+
+        // Sanity: the happy path works.
+        assert_eq!(client.predict(&[7.0, 0.0], 2).unwrap(), vec![7.0]);
+
+        // Poison batch: must surface as an error, not a hang or a crash.
+        let err = client.predict(&[f32::NAN, 1.0], 2);
+        assert!(err.is_err(), "panicking backend must report failure");
+
+        // The worker survived: subsequent requests are still answered.
+        for i in 0..5 {
+            let v = 10.0 + i as f32;
+            assert_eq!(client.predict(&[v, 0.0], 2).unwrap(), vec![v], "request {i}");
         }
     }
 }

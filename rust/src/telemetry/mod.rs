@@ -61,6 +61,15 @@ pub struct ServeMetrics {
     pub rpc: Histogram,
     /// Backend batch-execution latency.
     pub backend_exec: Histogram,
+    /// Block path, per-stage completion timestamps: nanoseconds from block
+    /// arrival until (a) the embedded stage-1 pass delivered its hits and
+    /// (b) the coalesced fallback RPC delivered the misses. Recorded once
+    /// per block; the gap between the two is exactly the window the
+    /// pipelined coordinator overlaps with the next block's stage-1 pass.
+    /// Keeping them separate is what lets hit latency and miss latency be
+    /// reported as measured instead of amortized out of one wall clock.
+    pub block_stage1_complete: Histogram,
+    pub block_rpc_complete: Histogram,
     /// Requests served by stage 1 / by RPC.
     pub stage1_hits: AtomicU64,
     pub rpc_calls: AtomicU64,
@@ -100,6 +109,8 @@ impl ServeMetrics {
         self.stage1.reset();
         self.rpc.reset();
         self.backend_exec.reset();
+        self.block_stage1_complete.reset();
+        self.block_rpc_complete.reset();
         for c in [
             &self.stage1_hits,
             &self.rpc_calls,
@@ -125,7 +136,7 @@ impl ServeMetrics {
 
     /// Multi-line report for logs / EXPERIMENTS.md.
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "e2e:     {}\nstage1:  {}\nrpc:     {}\nbackend: {}\ncoverage: {:.1}%  stage1_cpu: {:.3}ms  rpc_cpu: {:.3}ms  feats: {}  rpc_bytes: {}",
             self.e2e.summary_ms(),
             self.stage1.summary_ms(),
@@ -136,7 +147,15 @@ impl ServeMetrics {
             self.rpc_cpu_ns.load(Ordering::Relaxed) as f64 / 1e6,
             self.features_fetched.load(Ordering::Relaxed),
             self.rpc_bytes.load(Ordering::Relaxed),
-        )
+        );
+        if self.block_stage1_complete.count() > 0 {
+            s.push_str(&format!(
+                "\nblock stage1-done: {}\nblock rpc-done:    {}",
+                self.block_stage1_complete.summary_ms(),
+                self.block_rpc_complete.summary_ms(),
+            ));
+        }
+        s
     }
 }
 
@@ -174,6 +193,18 @@ mod tests {
         std::hint::black_box(acc);
         let b = process_cpu_ns();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn block_completion_recorded_and_reported() {
+        let m = ServeMetrics::new();
+        assert!(!m.report().contains("block stage1-done"));
+        m.block_stage1_complete.record(1_000);
+        m.block_rpc_complete.record(5_000);
+        assert!(m.report().contains("block stage1-done"));
+        m.reset_all();
+        assert_eq!(m.block_stage1_complete.count(), 0);
+        assert_eq!(m.block_rpc_complete.count(), 0);
     }
 
     #[test]

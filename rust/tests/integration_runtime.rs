@@ -4,8 +4,10 @@
 //! implementations of the first-stage model agree to within machine
 //! precision" — here between (a) the embedded Rust evaluator, (b) the
 //! training-side model, and (c) the AOT-compiled Pallas kernels run through
-//! PJRT. Requires `make artifacts`; tests skip (with a loud message) if the
-//! artifacts directory is missing.
+//! PJRT. Requires `make artifacts` AND a `--features pjrt` build (the
+//! default build gates the XLA bindings off); tests skip (with a loud
+//! message) if the artifacts directory is missing.
+#![cfg(feature = "pjrt")]
 
 use lrwbins::datagen;
 use lrwbins::features::{rank_features, RankMethod};

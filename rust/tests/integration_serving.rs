@@ -139,6 +139,46 @@ fn netsim_shifts_rpc_latency_but_not_stage1() {
 }
 
 #[test]
+fn async_block_delivers_hits_while_rpc_in_flight() {
+    // Full harness stack with a deterministic 40ms simulated hop: the
+    // coalesced miss RPC cannot complete in under ~80ms, yet the pipelined
+    // block API must hand back stage-1 hits immediately.
+    let stack = native_stack(
+        6_000,
+        NetSimConfig {
+            base_us: 40_000.0,
+            sigma: 0.0,
+            max_us: 80_000.0,
+        },
+    );
+    let rows: Vec<Vec<f32>> = (0..96).map(|r| stack.test.row(r)).collect();
+    let block = lrwbins::tabular::RowBlock::from_rows(&rows);
+    let t0 = std::time::Instant::now();
+    let pending = stack.coordinator.predict_block_async(&block).unwrap();
+    let issued = t0.elapsed();
+    if pending.n_misses() == 0 || pending.n_hits() == 0 {
+        // The tolerance-driven allocation routed everything one way on
+        // this seed; the mixed-block property is pinned by the coordinator
+        // unit tests.
+        return;
+    }
+    assert!(pending.rpc_in_flight());
+    let early_hits = pending.stage1_hits().count();
+    assert_eq!(early_hits, pending.n_hits());
+    assert!(
+        issued < std::time::Duration::from_millis(35),
+        "stage-1 delivery must not wait for the RPC (issued in {issued:?})"
+    );
+    let full = pending.wait().unwrap();
+    assert!(t0.elapsed() >= std::time::Duration::from_millis(70));
+    assert_eq!(full.len(), rows.len());
+    assert!(full.iter().all(|(p, _)| (0.0..=1.0).contains(p)));
+    let s1 = stack.metrics.stage1_hits.load(Ordering::Relaxed);
+    let rp = stack.metrics.rpc_calls.load(Ordering::Relaxed);
+    assert_eq!(s1 + rp, rows.len() as u64, "every row accounted to exactly one stage");
+}
+
+#[test]
 fn server_death_surfaces_as_error_not_hang() {
     let mut stack = native_stack(4_000, NetSimConfig::off());
     stack.coordinator.mode = Mode::AlwaysRpc;
