@@ -5,6 +5,8 @@
 //!                columnar block variants at batch = {1, 8, 64, 256};
 //!   L3 native:   GBDT predict_one vs FlatForest predict_block at the same
 //!                batch sizes;
+//!   shard_scaling: ShardPool (persistent shard-per-core engine) rows/sec
+//!                at shards {1, 2, 4, 8} × batch {64, 256, 1024};
 //!   RPC:         loopback round trip (netsim OFF) at several batch sizes;
 //!   L1/L2 PJRT:  second-stage artifact execution per batch variant.
 //!
@@ -99,6 +101,42 @@ fn main() {
                 std::hint::black_box(preds.last());
             },
         );
+    }
+
+    // --- shard_scaling: persistent shard-per-core pool ---------------------
+    // Rows/sec of the ShardPool engine across shard counts and batch sizes
+    // (ROADMAP "shard-per-core serving"). Batches below min_task_rows×2
+    // stay whole, so small batches measure the hand-off floor and big ones
+    // the parallel traversal ceiling.
+    {
+        use lrwbins::runtime::{ShardPool, ShardPoolConfig};
+        let row_len = data.n_features();
+        let max_batch = 1024usize;
+        let mut wire = vec![0f32; max_batch * row_len];
+        for (i, row) in rows.iter().cycle().take(max_batch).enumerate() {
+            wire[i * row_len..i * row_len + row.len()].copy_from_slice(row);
+        }
+        for &shards in &[1usize, 2, 4, 8] {
+            let pool = ShardPool::with_config(ShardPoolConfig {
+                n_shards: shards,
+                ..Default::default()
+            });
+            let id = pool.register(flat.clone());
+            for &batch in &[64usize, 256, 1024] {
+                let mut out = vec![0f32; batch];
+                bench.run_items(
+                    &format!("shard_scaling pool predict (shards={shards}, batch={batch})"),
+                    batch as u64,
+                    || {
+                        let failed =
+                            pool.predict_spans(id, &wire[..batch * row_len], row_len, &mut out);
+                        debug_assert!(failed.is_empty());
+                        std::hint::black_box(out.last());
+                    },
+                );
+            }
+            eprintln!("  [shards={shards}] {}", pool.stats().report());
+        }
     }
 
     // --- RPC round trip (netsim OFF → pure stack cost) --------------------

@@ -32,10 +32,29 @@
 use crate::lrwbins::{BlockScratch, ServingTables};
 use crate::rpc::client::PendingPredict;
 use crate::rpc::RpcClient;
+use crate::runtime::{ModelId, ShardPool};
 use crate::tabular::RowBlock;
 use crate::telemetry::{CpuTimer, ServeMetrics};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+/// Where route-missed rows go for second-stage scoring.
+///
+/// * `Rpc` — the paper's architecture: a coalesced call to the remote
+///   dynamic-batched service.
+/// * `Embedded` — the in-process **multi-tenant** mode: the coordinator
+///   registered its second-stage forest in a shared shard-per-core
+///   [`ShardPool`] and scores misses on it directly — no wire, no frames,
+///   several tenants (coordinators) sharing one pool of cores. Rows served
+///   this way still report [`Served::Rpc`] ("second stage"), with zero
+///   network bytes accounted.
+pub enum SecondStage {
+    Rpc(RpcClient),
+    Embedded {
+        pool: Arc<ShardPool>,
+        model: ModelId,
+    },
+}
 
 /// Routing override, used by the Table 3 bench to measure each mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,9 +126,9 @@ struct CoordScratch {
 /// The product-code front-end.
 pub struct Coordinator {
     pub tables: ServingTables,
-    rpc: Option<RpcClient>,
-    /// Padded row width expected by the RPC backend (PJRT f_max, or the raw
-    /// feature count for the native backend).
+    fallback: Option<SecondStage>,
+    /// Padded row width expected by the second-stage backend (PJRT f_max,
+    /// or the raw feature count for the native/embedded backends).
     rpc_row_len: usize,
     pub metrics: Arc<ServeMetrics>,
     pub mode: Mode,
@@ -125,6 +144,35 @@ impl Coordinator {
         rpc_row_len: usize,
         metrics: Arc<ServeMetrics>,
     ) -> Coordinator {
+        Coordinator::with_fallback(tables, rpc.map(SecondStage::Rpc), rpc_row_len, metrics)
+    }
+
+    /// Embedded multi-tenant mode: this coordinator's second-stage forest
+    /// was registered (by the caller) in `pool` — possibly shared with
+    /// other tenants — and misses are scored in-process on it. See the
+    /// crate docs.
+    pub fn new_embedded(
+        tables: ServingTables,
+        pool: Arc<ShardPool>,
+        model: ModelId,
+        metrics: Arc<ServeMetrics>,
+    ) -> Coordinator {
+        let row_len = pool.n_features(model).max(tables.n_features);
+        Coordinator::with_fallback(
+            tables,
+            Some(SecondStage::Embedded { pool, model }),
+            row_len,
+            metrics,
+        )
+    }
+
+    /// General form: any [`SecondStage`] (or none — stage-1-only serving).
+    pub fn with_fallback(
+        tables: ServingTables,
+        fallback: Option<SecondStage>,
+        rpc_row_len: usize,
+        metrics: Arc<ServeMetrics>,
+    ) -> Coordinator {
         let rpc_row_len = if rpc_row_len == 0 {
             tables.n_features
         } else {
@@ -133,7 +181,7 @@ impl Coordinator {
         assert!(rpc_row_len >= tables.n_features);
         Coordinator {
             tables,
-            rpc,
+            fallback,
             rpc_row_len,
             metrics,
             mode: Mode::Multistage,
@@ -148,13 +196,53 @@ impl Coordinator {
         buf.resize(buf.len() + (self.rpc_row_len - row.len()), 0.0);
     }
 
-    fn rpc_predict(&self, rows: &[f32], n: usize) -> std::io::Result<Vec<f32>> {
-        let client = self.rpc.as_ref().ok_or_else(|| {
-            std::io::Error::new(std::io::ErrorKind::NotConnected, "no RPC backend configured")
-        })?;
-        let probs = client.predict(rows, self.rpc_row_len)?;
-        debug_assert_eq!(probs.len(), n);
-        Ok(probs)
+    /// Score `n` padded rows on the configured second stage, blocking.
+    fn second_stage_predict(&self, rows: &[f32], n: usize) -> std::io::Result<Vec<f32>> {
+        match &self.fallback {
+            None => Err(no_second_stage()),
+            Some(SecondStage::Rpc(client)) => {
+                let probs = client.predict(rows, self.rpc_row_len)?;
+                debug_assert_eq!(probs.len(), n);
+                Ok(probs)
+            }
+            Some(SecondStage::Embedded { pool, model }) => {
+                let mut probs = vec![0f32; n];
+                pool.predict(*model, rows, self.rpc_row_len, &mut probs)
+                    .map_err(std::io::Error::other)?;
+                Ok(probs)
+            }
+        }
+    }
+
+    /// Wire bytes a k-row miss batch moves — zero for the embedded
+    /// (in-process) second stage.
+    fn miss_wire_bytes(&self, k: usize) -> u64 {
+        match &self.fallback {
+            Some(SecondStage::Rpc(_)) => RpcClient::wire_bytes(k, self.rpc_row_len),
+            _ => 0,
+        }
+    }
+
+    /// Book the completion of a block's `k` misses at `wall` ns — the ONE
+    /// implementation of the Table-3 miss accounting, shared by the RPC
+    /// join ([`BlockPending::wait`]) and the embedded in-process path: per
+    /// miss, second-stage latency/CPU/features plus an even byte split of
+    /// the single coalesced frame (remainder on the first), and the
+    /// per-block rpc-complete timestamp.
+    fn record_miss_completion(&self, k: usize, wall: u64, cpu_share: u64, total_bytes: u64) {
+        debug_assert!(k > 0);
+        let byte_share = total_bytes / k as u64;
+        let byte_rem = total_bytes % k as u64;
+        for j in 0..k {
+            self.metrics.hit_rpc(
+                wall,
+                cpu_share,
+                self.tables.n_features as u64,
+                byte_share + if j == 0 { byte_rem } else { 0 },
+            );
+            self.metrics.e2e.record(wall);
+        }
+        self.metrics.block_rpc_complete.record(wall);
     }
 
     /// Serve one inference. Returns `(probability, stage)`.
@@ -196,13 +284,13 @@ impl Coordinator {
         }
         let mut padded = Vec::with_capacity(self.rpc_row_len);
         self.pad_for_rpc(row, &mut padded);
-        let probs = self.rpc_predict(&padded, 1)?;
+        let probs = self.second_stage_predict(&padded, 1)?;
         let wall = t0.elapsed().as_nanos() as u64;
         self.metrics.hit_rpc(
             wall,
             cpu.elapsed_ns(),
             self.tables.n_features as u64,
-            RpcClient::wire_bytes(1, self.rpc_row_len),
+            self.miss_wire_bytes(1),
         );
         self.metrics.e2e.record(wall);
         Ok((probs[0], Served::Rpc))
@@ -295,7 +383,7 @@ impl Coordinator {
         // One batched stage-1 pass over the whole block (also routing).
         // `t0`/`cpu` started in the caller, before the (lock-free) stage-1
         // feature fetch, so the fetch cost is in every row's accounting.
-        let (out, miss_idx, miss_rows) = {
+        let (mut out, miss_idx, miss_rows) = {
             let s = &mut *guard;
             self.tables
                 .evaluate_block(block, &mut s.tab, &mut s.probs, &mut s.routed);
@@ -359,8 +447,9 @@ impl Coordinator {
         }
 
         // Misses: fetch the features the stage-1 attempt did not cover
-        // (AlwaysRpc already fetched everything), then launch — without
-        // waiting on — the coalesced fallback RPC.
+        // (AlwaysRpc already fetched everything), then hand them to the
+        // second stage — launched without waiting for the RPC fallback,
+        // scored in-process for the embedded (multi-tenant pool) fallback.
         let rpc = if miss_idx.is_empty() {
             None
         } else {
@@ -370,8 +459,35 @@ impl Coordinator {
                     f.fetch(miss_idx.len() * rest);
                 }
             }
-            match self.rpc_send(&miss_rows) {
-                Ok(pending) => Some(pending),
+            let launched: std::io::Result<Option<PendingPredict<'_>>> = match &self.fallback {
+                None => Err(no_second_stage()),
+                Some(SecondStage::Rpc(client)) => client
+                    .predict_async(&miss_rows, self.rpc_row_len)
+                    .map(Some),
+                Some(SecondStage::Embedded { pool, model }) => {
+                    // In-process second stage: complete the misses right
+                    // here (no wire to overlap) and account them exactly
+                    // as `BlockPending::wait` would — with zero bytes.
+                    let k = miss_idx.len();
+                    let mut probs = vec![0f32; k];
+                    match pool.predict(*model, &miss_rows, self.rpc_row_len, &mut probs) {
+                        Err(e) => Err(std::io::Error::other(e)),
+                        Ok(()) => {
+                            for (j, &i) in miss_idx.iter().enumerate() {
+                                out[i].0 = probs[j];
+                            }
+                            let wall = t0.elapsed().as_nanos() as u64;
+                            let cpu_share = stage1_cpu_per_row
+                                + cpu.elapsed_ns().saturating_sub(stage1_cpu_total) / k as u64;
+                            // miss_wire_bytes is 0 for the embedded stage.
+                            self.record_miss_completion(k, wall, cpu_share, self.miss_wire_bytes(k));
+                            Ok(None)
+                        }
+                    }
+                }
+            };
+            match launched {
+                Ok(pending) => pending,
                 Err(e) => {
                     // Hand the gather buffers back before surfacing.
                     let mut g = self.lock_scratch();
@@ -401,12 +517,13 @@ impl Coordinator {
         })
     }
 
-    fn rpc_send(&self, rows: &[f32]) -> std::io::Result<PendingPredict<'_>> {
-        let client = self.rpc.as_ref().ok_or_else(|| {
-            std::io::Error::new(std::io::ErrorKind::NotConnected, "no RPC backend configured")
-        })?;
-        client.predict_async(rows, self.rpc_row_len)
-    }
+}
+
+fn no_second_stage() -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::NotConnected,
+        "no second-stage backend configured",
+    )
 }
 
 /// An in-flight block request: stage-1 results are already available (and
@@ -470,20 +587,11 @@ impl BlockPending<'_> {
             debug_assert_eq!(probs.len(), k);
             let wall = arrived.saturating_duration_since(self.t0).as_nanos() as u64;
             let cpu_share = self.miss_cpu_base + cpu.elapsed_ns() / k as u64;
-            let total_bytes = RpcClient::wire_bytes(k, self.coord.rpc_row_len);
-            let byte_share = total_bytes / k as u64;
-            let byte_rem = total_bytes % k as u64;
             for (j, &i) in self.miss_idx.iter().enumerate() {
                 self.out[i].0 = probs[j];
-                self.coord.metrics.hit_rpc(
-                    wall,
-                    cpu_share,
-                    self.coord.tables.n_features as u64,
-                    byte_share + if j == 0 { byte_rem } else { 0 },
-                );
-                self.coord.metrics.e2e.record(wall);
             }
-            self.coord.metrics.block_rpc_complete.record(wall);
+            self.coord
+                .record_miss_completion(k, wall, cpu_share, self.coord.miss_wire_bytes(k));
         }
         Ok(std::mem::take(&mut self.out))
     }
@@ -816,6 +924,84 @@ mod tests {
                 .load(std::sync::atomic::Ordering::Relaxed),
             0
         );
+    }
+
+    #[test]
+    fn embedded_multi_tenant_coordinators_share_one_pool() {
+        // Two tenants — distinct datasets, stage-1 tables, and second-stage
+        // models — fall back to ONE shared shard pool, in-process (no RPC
+        // server anywhere in this test).
+        let pool = Arc::new(ShardPool::new(2));
+        let mut tenants = Vec::new();
+        for seed in [5u64, 11] {
+            let spec = datagen::preset("aci").unwrap().with_rows(4000);
+            let data = datagen::generate(&spec, seed);
+            let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+            let mut first = LrwBinsModel::train(
+                &data,
+                &ranking.order,
+                &LrwBinsParams {
+                    b: 2,
+                    n_bin_features: 3,
+                    n_infer_features: 6,
+                    ..Default::default()
+                },
+            );
+            let route: std::collections::HashSet<u32> =
+                first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+            first.set_route(route);
+            let second = crate::gbdt::train(&data, &crate::gbdt::GbdtParams::quick());
+            let id = pool.register(second.flatten());
+            let coord = Coordinator::new_embedded(
+                ServingTables::from_model(&first),
+                pool.clone(),
+                id,
+                Arc::new(ServeMetrics::new()),
+            );
+            tenants.push((data, coord, second));
+        }
+        // Both tenants serve concurrently; every miss must score on the
+        // tenant's OWN model, bit-identical to its scalar prediction.
+        std::thread::scope(|s| {
+            for (data, coord, second) in &tenants {
+                s.spawn(move || {
+                    let mut row = Vec::new();
+                    let mut misses = 0;
+                    for r in 0..300 {
+                        data.row_into(r, &mut row);
+                        let (p, served) = coord.predict(&row).unwrap();
+                        if served == Served::Rpc {
+                            misses += 1;
+                            assert_eq!(
+                                p.to_bits(),
+                                second.predict_one(&row).to_bits(),
+                                "row {r}: embedded miss must score on the tenant's model"
+                            );
+                        }
+                    }
+                    assert!(misses > 0, "tenant must exercise the shared pool");
+                    // Block path rides the same embedded fallback,
+                    // bit-identical to the scalar path.
+                    let rows: Vec<Vec<f32>> = (0..96).map(|r| data.row(r)).collect();
+                    let block = crate::tabular::RowBlock::from_rows(&rows);
+                    let via_block = coord.predict_block(&block).unwrap();
+                    for (i, row) in rows.iter().enumerate() {
+                        let (p, served) = coord.predict(row).unwrap();
+                        assert_eq!(via_block[i].1, served, "row {i}");
+                        assert_eq!(via_block[i].0.to_bits(), p.to_bits(), "row {i}");
+                    }
+                });
+            }
+        });
+        // The in-process second stage moves no bytes over any wire.
+        for (_, coord, _) in &tenants {
+            let load =
+                |c: &std::sync::atomic::AtomicU64| c.load(std::sync::atomic::Ordering::Relaxed);
+            assert!(load(&coord.metrics.rpc_calls) > 0);
+            assert_eq!(load(&coord.metrics.rpc_bytes), 0, "embedded mode: zero network bytes");
+        }
+        // And both tenants' traffic really went through the one pool.
+        assert!(pool.stats().spans_completed() + pool.stats().inline_runs.load(std::sync::atomic::Ordering::Relaxed) > 0);
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod tree;
 pub use binner::FeatureBinner;
 pub use flat::{FlatForest, FlatNode, ForestScratch};
 pub use train::train;
-pub use tree::{DenseTree, Tree, LEAF};
+pub use tree::{DenseTree, Node, Tree, LEAF};
 
 use crate::tabular::Dataset;
 use crate::util::json::Json;

@@ -14,6 +14,25 @@
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
 //!   stage-1 LRwBins batch evaluator and the stage-2 forest traversal.
 //!
+//! ## Serving engines
+//!
+//! Second-stage (GBDT) predictions execute on the persistent
+//! **shard-per-core engine** [`runtime::ShardPool`]: one long-lived worker
+//! thread per shard, each owning its own [`gbdt::FlatForest`] replica and
+//! scratch, fed by a bounded lock-free MPMC queue — no per-request or
+//! per-batch thread churn. Two deployment shapes share the engine:
+//!
+//! * **RPC service** — [`rpc::server::NativeBackend`] splits every batch
+//!   into per-shard sub-ranges and awaits completion; a panicking shard
+//!   degrades to error frames for its sub-batch only.
+//! * **Embedded multi-tenant** — several [`coordinator::Coordinator`]s
+//!   (tenants), each with their own stage-1 tables and second-stage model,
+//!   register their forests in ONE shared pool
+//!   ([`runtime::ShardPool::register`] +
+//!   [`coordinator::Coordinator::new_embedded`]) and fall back to it
+//!   in-process instead of over RPC: per-shard replicas are materialized
+//!   lazily per model, so co-tenants share cores without sharing hot state.
+//!
 //! See DESIGN.md for the full system inventory and experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
@@ -31,11 +50,10 @@ pub mod lrwbins;
 pub mod metrics;
 pub mod picasso;
 pub mod rpc;
-/// PJRT runtime (Layer 2). Compiled only with `--features pjrt`: the `xla`
-/// bindings are not on crates.io, so the default build serves through the
-/// dependency-free native backend and this module is gated off (see
+/// Execution runtime (Layer 2): the always-compiled shard-per-core serving
+/// engine ([`runtime::ShardPool`]) plus the PJRT engine, which needs
+/// `--features pjrt` (the `xla` bindings are not on crates.io; see
 /// `Cargo.toml` for how to enable it).
-#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod telemetry;
 pub mod tabular;

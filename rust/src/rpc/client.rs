@@ -29,18 +29,37 @@
 //! A response frame flagged as a server-side error (backend failure) is
 //! surfaced as an error without retry: it is a live answer from a healthy
 //! connection, and resending would fail the same way.
+//!
+//! ## Backpressure
+//!
+//! In-flight frames are capped per connection ([`DEFAULT_MAX_IN_FLIGHT`],
+//! tunable via [`RpcClient::set_max_in_flight`]): a sender that would push
+//! a connection past the cap blocks until the server answers (or the
+//! connection fails), and gives up with `TimedOut` at the client timeout.
+//! Without the cap, a slow server would let the pending demux table — and
+//! its own admission queue — grow with every pipelined call that outruns
+//! the responses.
 
 use super::proto::{self, Request, Response};
 use std::collections::HashMap;
 use std::io;
 use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 /// Connections kept per client. Requests round-robin across them so
 /// per-connection frame transmission overlaps across concurrent requests.
 const POOL_CONNS: usize = 4;
+
+/// Default cap on in-flight (pipelined, unanswered) requests per
+/// connection. A slow or wedged server must exert **backpressure** on
+/// callers instead of letting the pending demux table — and the server's
+/// admission queue — grow without bound: once a connection carries this
+/// many unanswered frames, further sends on it block until a response (or
+/// failure) frees a slot, and give up with `TimedOut` after the client
+/// timeout.
+pub const DEFAULT_MAX_IN_FLIGHT: usize = 64;
 
 /// Responses carry the instant their frame arrived at the client: metrics
 /// want completion time, which is earlier than the caller's join when the
@@ -53,6 +72,10 @@ type ReplyTx = mpsc::Sender<io::Result<(Response, Instant)>>;
 struct Conn {
     writer: Mutex<TcpStream>,
     pending: Mutex<HashMap<u64, ReplyTx>>,
+    /// Signalled whenever `pending` shrinks (response demuxed, request
+    /// abandoned, connection failed): senders blocked on the in-flight cap
+    /// wait here.
+    slot_freed: Condvar,
     dead: AtomicBool,
 }
 
@@ -65,12 +88,34 @@ impl Conn {
         self.pending.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
+    /// Remove a pending entry and wake one capped sender.
+    fn release(&self, req_id: u64) -> Option<ReplyTx> {
+        let tx = self.lock_pending().remove(&req_id);
+        if tx.is_some() {
+            self.slot_freed.notify_one();
+        }
+        tx
+    }
+
+    /// Mark the connection dead and wake EVERY capped sender: once a
+    /// connection is retired no response will ever free another slot, so
+    /// waiters must all re-check (see the `dead` condition in `send_on`)
+    /// instead of sleeping out their deadlines one notify at a time.
+    fn retire(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        let _g = self.lock_pending();
+        self.slot_freed.notify_all();
+    }
+
     /// Mark the connection dead and fail every in-flight request on it.
     fn fail_all(&self, kind: io::ErrorKind, msg: &str) {
         self.dead.store(true, Ordering::Relaxed);
         for (_, tx) in self.lock_pending().drain() {
             let _ = tx.send(Err(io::Error::new(kind, msg)));
         }
+        // The table emptied: every capped sender gets to proceed (and see
+        // `dead`).
+        self.slot_freed.notify_all();
     }
 }
 
@@ -83,7 +128,7 @@ fn reader_loop(conn: Arc<Conn>, mut stream: TcpStream) {
             Ok(Some(resp)) => {
                 // Unknown ids are responses to abandoned (timed-out)
                 // requests; dropping them keeps the stream in sync.
-                if let Some(tx) = conn.lock_pending().remove(&resp.req_id) {
+                if let Some(tx) = conn.release(resp.req_id) {
                     let _ = tx.send(Ok((resp, Instant::now())));
                 }
             }
@@ -106,6 +151,8 @@ pub struct RpcClient {
     next_id: AtomicU64,
     rr: AtomicUsize,
     timeout: Duration,
+    /// Per-connection in-flight frame cap (see [`DEFAULT_MAX_IN_FLIGHT`]).
+    max_in_flight: usize,
 }
 
 /// An in-flight [`RpcClient::predict_async`] call. Dropping it abandons the
@@ -179,9 +226,10 @@ fn recv_result(
         }
         Err(mpsc::RecvTimeoutError::Timeout) => {
             // Abandon the request and retire the (possibly wedged)
-            // connection; the deadline is already spent.
+            // connection; the deadline is already spent. `retire` wakes
+            // every capped sender — no response will free slots now.
             conn.lock_pending().remove(&req.req_id);
-            conn.dead.store(true, Ordering::Relaxed);
+            conn.retire();
             Err(io::Error::new(io::ErrorKind::TimedOut, "rpc response timed out"))
         }
     }
@@ -213,6 +261,7 @@ impl RpcClient {
             next_id: AtomicU64::new(1),
             rr: AtomicUsize::new(0),
             timeout: Duration::from_secs(30),
+            max_in_flight: DEFAULT_MAX_IN_FLIGHT,
         };
         // Eagerly dial one connection to fail fast on a bad address.
         client.dial_into_pool()?;
@@ -221,6 +270,23 @@ impl RpcClient {
 
     fn lock_pool(&self) -> MutexGuard<'_, Vec<Arc<Conn>>> {
         self.pool.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Cap the in-flight (unanswered) frames per connection — total
+    /// outstanding work is bounded by `cap ×` [`POOL_CONNS`]. Lowering it
+    /// tightens backpressure against a slow server; must be set before the
+    /// client is shared.
+    pub fn set_max_in_flight(&mut self, cap: usize) {
+        self.max_in_flight = cap.max(1);
+    }
+
+    /// Unanswered requests currently registered across the pool (the demux
+    /// tables' total size — what the in-flight cap bounds).
+    pub fn total_in_flight(&self) -> usize {
+        self.lock_pool()
+            .iter()
+            .map(|c| c.lock_pending().len())
+            .sum()
     }
 
     /// Dial a connection, spawn its reader thread, and pool it.
@@ -233,6 +299,7 @@ impl RpcClient {
         let conn = Arc::new(Conn {
             writer: Mutex::new(stream),
             pending: Mutex::new(HashMap::new()),
+            slot_freed: Condvar::new(),
             dead: AtomicBool::new(false),
         });
         let for_reader = conn.clone();
@@ -263,6 +330,9 @@ impl RpcClient {
     }
 
     /// Register the request in `conn`'s pending table and write its frame.
+    /// Blocks while the connection already carries [`RpcClient::max_in_flight`]
+    /// unanswered frames (backpressure from a slow server), giving up with
+    /// `TimedOut` after the client timeout.
     fn send_on(
         &self,
         conn: &Conn,
@@ -270,11 +340,33 @@ impl RpcClient {
         buf: &[u8],
     ) -> io::Result<mpsc::Receiver<io::Result<(Response, Instant)>>> {
         let (tx, rx) = mpsc::channel();
-        conn.lock_pending().insert(req.req_id, tx);
+        {
+            let deadline = Instant::now() + self.timeout;
+            let mut pending = conn.lock_pending();
+            while pending.len() >= self.max_in_flight && !conn.dead.load(Ordering::Relaxed) {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "in-flight cap: no response freed a slot within the timeout",
+                    ));
+                }
+                let (guard, _) = conn
+                    .slot_freed
+                    .wait_timeout(pending, deadline - now)
+                    .unwrap_or_else(PoisonError::into_inner);
+                pending = guard;
+            }
+            // A dead connection is surfaced by the existing post-write
+            // check below (the write itself may also fail); registering on
+            // it is harmless — fail_all already drained or will never run
+            // again, and the entry is removed right there.
+            pending.insert(req.req_id, tx);
+        }
         let res = proto::write_frame(&mut *conn.lock_writer(), buf);
         if let Err(e) = res {
             conn.lock_pending().remove(&req.req_id);
-            conn.dead.store(true, Ordering::Relaxed);
+            conn.retire();
             return Err(e);
         }
         // The reader may have retired the connection (setting `dead`, then
@@ -282,7 +374,7 @@ impl RpcClient {
         // case nobody will ever answer it. `fail_all` sets `dead` before
         // draining, so seeing it clear here means our entry either survives
         // or was drained with an error already queued on `rx`.
-        if conn.dead.load(Ordering::Relaxed) && conn.lock_pending().remove(&req.req_id).is_some() {
+        if conn.dead.load(Ordering::Relaxed) && conn.release(req.req_id).is_some() {
             return Err(io::Error::new(io::ErrorKind::BrokenPipe, "connection retired"));
         }
         Ok(rx)
@@ -304,7 +396,9 @@ impl RpcClient {
         let (conn, fresh) = self.live_conn()?;
         match self.send_on(&conn, &req, &buf) {
             Ok(rx) => Ok(PendingPredict { client: self, conn, fresh, req, rx, n_rows }),
-            Err(e) if fresh => Err(e),
+            // A spent in-flight-cap deadline is final: dialing a fresh
+            // connection to dodge the cap would defeat the backpressure.
+            Err(e) if fresh || e.kind() == io::ErrorKind::TimedOut => Err(e),
             Err(_) => {
                 // Stale pooled connection rejected the write — retry once
                 // on a fresh dial.
@@ -530,6 +624,89 @@ mod tests {
 
         let probs = client.predict(&[10.0, 20.0], 2).unwrap();
         assert_eq!(probs, vec![15.0]);
+    }
+
+    /// Backend slow enough that pipelined senders outrun the responses.
+    struct SlowBackend;
+
+    impl Backend for SlowBackend {
+        fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+            std::thread::sleep(Duration::from_millis(10));
+            (0..n).map(|r| rows[r * row_len]).collect()
+        }
+        fn row_len(&self) -> usize {
+            0
+        }
+    }
+
+    #[test]
+    fn in_flight_cap_bounds_pending_against_slow_server() {
+        use std::sync::atomic::AtomicBool;
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(SlowBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::ZERO,
+                workers: 1, // one slow lane: responses trail far behind sends
+            },
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(server.addr).unwrap();
+        const CAP: usize = 2;
+        client.set_max_in_flight(CAP);
+
+        // 4 producers × 6 pipelined calls = 24 requests, far past the
+        // bound of CAP × POOL_CONNS = 8 — without the cap the pending
+        // tables would grow to ~24; with it, senders block instead.
+        let done = AtomicBool::new(false);
+        let max_seen = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let client = &client;
+            let done = &done;
+            let max_seen = &max_seen;
+            s.spawn(move || {
+                let mut max = 0;
+                while !done.load(Ordering::Relaxed) {
+                    max = max.max(client.total_in_flight());
+                    std::thread::sleep(Duration::from_micros(300));
+                }
+                max_seen.store(max, Ordering::Relaxed);
+            });
+            let producers: Vec<_> = (0..4)
+                .map(|t| {
+                    s.spawn(move || {
+                        let pendings: Vec<_> = (0..6)
+                            .map(|i| {
+                                let v = (t * 100 + i) as f32;
+                                client.predict_async(&[v, 0.0], 2).unwrap()
+                            })
+                            .collect();
+                        for (i, p) in pendings.into_iter().enumerate() {
+                            let v = (t * 100 + i) as f32;
+                            assert_eq!(p.wait().unwrap(), vec![v], "producer {t} call {i}");
+                        }
+                    })
+                })
+                .collect();
+            for h in producers {
+                h.join().unwrap();
+            }
+            // Producers done: release the sampler (joined on scope exit).
+            done.store(true, Ordering::Relaxed);
+        });
+        // The structural invariant (insert only under the cap check) keeps
+        // every connection at ≤ CAP; the sampler must never have observed
+        // more than CAP × POOL_CONNS across the pool.
+        assert!(
+            max_seen.load(Ordering::Relaxed) <= CAP * POOL_CONNS,
+            "pending grew past the cap: {} > {}",
+            max_seen.load(Ordering::Relaxed),
+            CAP * POOL_CONNS
+        );
+        assert_eq!(client.total_in_flight(), 0, "all slots released");
     }
 
     #[test]

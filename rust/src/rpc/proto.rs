@@ -137,14 +137,42 @@ fn get_u64(b: &[u8], off: usize) -> u64 {
     u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
 }
 
-/// Read one request frame. `Ok(None)` = clean EOF.
-pub fn read_request(stream: &mut impl Read) -> std::io::Result<Option<Request>> {
+/// A parsed inbound frame: a well-formed request, or a frame whose length
+/// prefix was honest (stream sync preserved — exactly `len` payload bytes
+/// were consumed) but whose content is inconsistent. Malformed frames are
+/// *answerable*: the server replies with an error frame for `req_id` and
+/// keeps the connection, instead of hanging it up and failing every other
+/// request pipelined on it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Inbound {
+    Req(Request),
+    /// Content-malformed frame; `req_id` is 0 when the payload was too
+    /// short to carry one (the reply is then dropped by the client demux,
+    /// which never issues id 0).
+    ///
+    /// Tradeoff, stated explicitly: if the frame is *corrupted* (rather
+    /// than produced by a buggy encoder), these 8 bytes are garbage, and
+    /// the error frame sent back could collide with a live pipelined
+    /// request's id (2⁻⁶⁴ per corrupt frame), failing that one request
+    /// early and orphaning its real response. The pre-PR 3 alternative —
+    /// hanging up — deterministically failed EVERY in-flight request on
+    /// the connection, so answering is strictly less damage.
+    Malformed { req_id: u64 },
+}
+
+/// Read one request frame, leniently. `Ok(None)` = clean EOF; `Err` only
+/// for failures that desynchronize the stream (EOF mid-frame, a length
+/// prefix past [`MAX_FRAME`]) — content problems inside an honestly-sized
+/// frame come back as [`Inbound::Malformed`].
+pub fn read_inbound(stream: &mut impl Read) -> std::io::Result<Option<Inbound>> {
     let mut hdr = [0u8; 4];
     if !read_exact_or_eof(stream, &mut hdr)? {
         return Ok(None);
     }
     let len = get_u32(&hdr, 0) as usize;
-    if len < 16 || len > MAX_FRAME {
+    if len > MAX_FRAME {
+        // Unreadable length: the framing itself is untrustworthy, so the
+        // connection cannot be resynchronized. Fatal.
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
             format!("bad frame length {len}"),
@@ -157,25 +185,42 @@ pub fn read_request(stream: &mut impl Read) -> std::io::Result<Option<Request>> 
             "truncated request",
         ));
     }
-    let req_id = get_u64(&payload, 0);
-    let n_rows = get_u32(&payload, 8) as usize;
-    let row_len = get_u32(&payload, 12);
-    let expected = 16 + n_rows * row_len as usize * 4;
-    if expected != len {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("frame length {len} != expected {expected}"),
-        ));
+    if len < 16 {
+        let req_id = if len >= 8 { get_u64(&payload, 0) } else { 0 };
+        return Ok(Some(Inbound::Malformed { req_id }));
     }
-    let mut rows = Vec::with_capacity(n_rows * row_len as usize);
+    let req_id = get_u64(&payload, 0);
+    let n_rows = get_u32(&payload, 8);
+    let row_len = get_u32(&payload, 12);
+    // u64 math: a hostile n_rows × row_len (e.g. the u32::MAX sentinel)
+    // must not overflow the expected-size check.
+    let expected = 16u64 + n_rows as u64 * row_len as u64 * 4;
+    if expected != len as u64 {
+        return Ok(Some(Inbound::Malformed { req_id }));
+    }
+    let mut rows = Vec::with_capacity(n_rows as usize * row_len as usize);
     for c in payload[16..].chunks_exact(4) {
         rows.push(f32::from_le_bytes(c.try_into().unwrap()));
     }
-    Ok(Some(Request {
+    Ok(Some(Inbound::Req(Request {
         req_id,
         row_len,
         rows,
-    }))
+    })))
+}
+
+/// Read one request frame, strictly: any malformed content is an error.
+/// (The server uses [`read_inbound`] so it can answer malformed frames;
+/// this strict form is for tests and tools.)
+pub fn read_request(stream: &mut impl Read) -> std::io::Result<Option<Request>> {
+    match read_inbound(stream)? {
+        None => Ok(None),
+        Some(Inbound::Req(r)) => Ok(Some(r)),
+        Some(Inbound::Malformed { req_id }) => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("malformed request frame (req_id {req_id})"),
+        )),
+    }
 }
 
 /// Read one response frame. `Ok(None)` = clean EOF.
@@ -334,6 +379,115 @@ mod tests {
         buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         buf.extend_from_slice(&payload);
         assert!(read_request(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn malformed_but_framed_request_is_answerable_not_fatal() {
+        // Honest length prefix, inconsistent content (claims 3×2 rows,
+        // carries 1 value): read_inbound must surface the req_id so the
+        // server can answer with an error frame, and the stream must stay
+        // in sync for the NEXT frame.
+        let mut buf = Vec::new();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&77u64.to_le_bytes());
+        payload.extend_from_slice(&3u32.to_le_bytes());
+        payload.extend_from_slice(&2u32.to_le_bytes());
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        // A good frame right behind it.
+        let mut tmp = Vec::new();
+        encode_request(&Request { req_id: 78, row_len: 1, rows: vec![2.0] }, &mut tmp);
+        buf.extend_from_slice(&tmp);
+
+        let mut cur = Cursor::new(buf);
+        assert_eq!(
+            read_inbound(&mut cur).unwrap(),
+            Some(Inbound::Malformed { req_id: 77 })
+        );
+        match read_inbound(&mut cur).unwrap() {
+            Some(Inbound::Req(r)) => assert_eq!(r.req_id, 78),
+            other => panic!("stream lost sync after malformed frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sentinel_rowcount_request_is_malformed_not_overflow() {
+        // n_rows == u32::MAX (the RESPONSE error sentinel) in a REQUEST:
+        // the expected-size check must do u64 math (u32::MAX² × 4 would
+        // overflow 32-bit and could alias a small len) and classify the
+        // frame as malformed, carrying the req_id back out.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&5u64.to_le_bytes());
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // n_rows sentinel
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // row_len, maximally hostile
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        assert_eq!(
+            read_inbound(&mut Cursor::new(buf)).unwrap(),
+            Some(Inbound::Malformed { req_id: 5 })
+        );
+    }
+
+    #[test]
+    fn short_frame_without_id_is_malformed_id_zero() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&4u32.to_le_bytes()); // 4-byte payload: no room for req_id
+        buf.extend_from_slice(&[0xAB; 4]);
+        assert_eq!(
+            read_inbound(&mut Cursor::new(buf)).unwrap(),
+            Some(Inbound::Malformed { req_id: 0 })
+        );
+    }
+
+    #[test]
+    fn prop_request_roundtrip_randomized_shapes() {
+        crate::util::proptest::check(150, |g| {
+            // 0-row (ping) edge included via the 0.._ size draw.
+            let n_rows = g.usize(0..40);
+            let row_len = if n_rows == 0 { 0 } else { g.usize(1..24) };
+            let rows = g.vec_f32((n_rows * row_len)..(n_rows * row_len + 1), -1e6..1e6);
+            let req = Request {
+                req_id: g.rng.below(u64::MAX),
+                row_len: row_len as u32,
+                rows,
+            };
+            let mut buf = Vec::new();
+            encode_request(&req, &mut buf);
+            let got = read_request(&mut Cursor::new(&buf))
+                .map_err(|e| format!("decode failed: {e}"))?
+                .ok_or("unexpected EOF")?;
+            crate::prop_assert!(got == req, "roundtrip mismatch: {got:?} != {req:?}");
+            crate::prop_assert!(got.n_rows() as usize == n_rows);
+            // And the lenient reader agrees with the strict one.
+            let lenient = read_inbound(&mut Cursor::new(&buf))
+                .map_err(|e| format!("lenient decode failed: {e}"))?;
+            crate::prop_assert!(lenient == Some(Inbound::Req(req.clone())));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_response_roundtrip_randomized_including_error_sentinel() {
+        crate::util::proptest::check(150, |g| {
+            let req_id = g.rng.below(u64::MAX);
+            // 1-in-4 frames carry the u32::MAX error sentinel; the rest a
+            // randomized probability vector (0-row responses included).
+            let resp = if g.bool(0.25) {
+                Response::err(req_id)
+            } else {
+                Response::ok(req_id, g.vec_f32(0..60, 0.0..1.0))
+            };
+            let mut buf = Vec::new();
+            encode_response(&resp, &mut buf);
+            let got = read_response(&mut Cursor::new(&buf))
+                .map_err(|e| format!("decode failed: {e}"))?
+                .ok_or("unexpected EOF")?;
+            crate::prop_assert!(got == resp, "roundtrip mismatch: {got:?} != {resp:?}");
+            crate::prop_assert!(got.error == resp.error);
+            Ok(())
+        });
     }
 
     #[test]

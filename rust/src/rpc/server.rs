@@ -12,13 +12,21 @@
 //! shared write half — possibly out of request order; the client
 //! demultiplexes by `req_id`. Simulated network hops (`NetSim`) model
 //! propagation delay, so they run off-thread and overlap instead of
-//! stacking behind one another. A panicking [`Backend::predict`] is
-//! contained to its batch: the worker catches the unwind, answers the
-//! batch's requests with error frames, and keeps serving (queue locks are
-//! poison-tolerant throughout).
+//! stacking behind one another.
+//!
+//! Failures are contained at the finest granularity available: a backend
+//! panic reaches the batcher as [`PredictOutcome::failed`] row spans
+//! (whole-batch for plain backends, per-shard for the pool-backed
+//! [`NativeBackend`]); only the requests overlapping a failed span get
+//! error frames, the rest of the batch is served, and the worker keeps
+//! running (queue locks are poison-tolerant throughout). A
+//! content-malformed frame with honest length is likewise answered with an
+//! error frame instead of killing the (pipelined, shared) connection —
+//! only an unrecoverable desync hangs it up.
 
 use super::netsim::NetSim;
-use super::proto::{self, Request, Response};
+use super::proto::{self, Inbound, Request, Response};
+use crate::runtime::{ModelId, ShardPool};
 use crate::telemetry::ServeMetrics;
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
@@ -26,32 +34,93 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
-/// Backend model abstraction: PJRT artifact or native GBDT.
+/// Outcome of a checked backend execution: probabilities for every row,
+/// plus the row spans (if any) whose execution failed. Rows inside a failed
+/// span carry unspecified values; the batcher answers their requests with
+/// error frames and serves the rest.
+pub struct PredictOutcome {
+    pub probs: Vec<f32>,
+    /// Failed row ranges, disjoint and sorted. Empty = fully served.
+    pub failed: Vec<std::ops::Range<usize>>,
+}
+
+impl PredictOutcome {
+    /// True if any row of `span` falls inside a failed range.
+    pub fn span_failed(&self, span: &std::ops::Range<usize>) -> bool {
+        self.failed
+            .iter()
+            .any(|f| f.start < span.end && span.start < f.end)
+    }
+}
+
+/// Run `f`, containing a panic to a whole-batch failure — the coarse
+/// containment used by the [`Backend::predict_checked`] default and by
+/// backends on code paths without sub-range granularity.
+fn contain_whole_batch(n: usize, f: impl FnOnce() -> Vec<f32>) -> PredictOutcome {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(probs) => PredictOutcome { probs, failed: Vec::new() },
+        Err(_) => PredictOutcome {
+            probs: vec![0.0; n],
+            failed: vec![0..n],
+        },
+    }
+}
+
+/// Backend model abstraction: shard-pool native GBDT or PJRT artifact.
 pub trait Backend: Send + Sync {
     /// Predict probabilities for `n` rows of width `row_len` (row-major).
     fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32>;
+
     /// Expected row width (0 = any).
     fn row_len(&self) -> usize;
+
+    /// Like [`Backend::predict`], but failures come back as data instead of
+    /// unwinding. The default contains a panicking `predict` to a
+    /// whole-batch failure; backends with finer-grained execution (the
+    /// shard pool) override it to fail only the affected sub-ranges.
+    fn predict_checked(&self, rows: &[f32], n: usize, row_len: usize) -> PredictOutcome {
+        contain_whole_batch(n, || self.predict(rows, n, row_len))
+    }
 }
 
-/// Native GBDT backend (no PJRT) — used in tests and as an ablation.
-/// Serves from a [`FlatForest`](crate::gbdt::FlatForest) image of the model
-/// (contiguous arena, tree-major row-blocked traversal) and shards large
-/// batches across scoped threads.
+/// Native GBDT backend (no PJRT). Serves from the persistent shard-per-core
+/// engine ([`ShardPool`]): one long-lived worker per core, each with its own
+/// [`FlatForest`](crate::gbdt::FlatForest) replica, fed by a bounded
+/// lock-free queue — big batches split into per-shard sub-ranges with no
+/// thread spawn/teardown per call (the old design ran scoped threads per
+/// batch). A panicking shard fails only its sub-range
+/// ([`Backend::predict_checked`]); the rest of the batch is served.
 pub struct NativeBackend {
     pub model: crate::gbdt::GbdtModel,
-    flat: crate::gbdt::FlatForest,
+    pool: Arc<ShardPool>,
+    model_id: ModelId,
 }
 
-/// Minimum rows per shard thread: below this the per-thread spawn cost
-/// outweighs the parallel traversal. Sharding engages from 2 shards up, so
-/// it is reachable at the default batcher `max_batch` (128).
-const NATIVE_SHARD_ROWS: usize = 64;
-
 impl NativeBackend {
+    /// Dedicated pool, one shard per core.
     pub fn new(model: crate::gbdt::GbdtModel) -> NativeBackend {
-        let flat = model.flatten();
-        NativeBackend { model, flat }
+        let pool = Arc::new(ShardPool::new(crate::util::threadpool::default_threads()));
+        NativeBackend::with_pool(model, pool)
+    }
+
+    /// Register `model` in an existing (possibly shared, multi-tenant)
+    /// pool and serve from it.
+    pub fn with_pool(model: crate::gbdt::GbdtModel, pool: Arc<ShardPool>) -> NativeBackend {
+        let model_id = pool.register(model.flatten());
+        NativeBackend { model, pool, model_id }
+    }
+
+    /// The serving pool (shareable with co-tenant backends/coordinators).
+    pub fn pool(&self) -> &Arc<ShardPool> {
+        &self.pool
+    }
+
+    fn pooled_outcome(&self, rows: &[f32], n: usize, row_len: usize) -> PredictOutcome {
+        let mut probs = vec![0f32; n];
+        let failed = self
+            .pool
+            .predict_spans(self.model_id, &rows[..n * row_len], row_len, &mut probs);
+        PredictOutcome { probs, failed }
     }
 }
 
@@ -67,28 +136,25 @@ impl Backend for NativeBackend {
             }
             return out;
         }
-        let mut out = vec![0f32; n];
-        // Shard so every thread gets at least NATIVE_SHARD_ROWS rows.
-        let threads = crate::util::threadpool::default_threads().min(n / NATIVE_SHARD_ROWS);
-        if threads > 1 {
-            let chunk = n.div_ceil(threads);
-            std::thread::scope(|s| {
-                for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
-                    let start = ci * chunk;
-                    let flat = &self.flat;
-                    let shard = &rows[start * row_len..(start + out_chunk.len()) * row_len];
-                    s.spawn(move || {
-                        let mut scratch = crate::gbdt::ForestScratch::default();
-                        flat.predict_flat_rows(shard, row_len, &mut scratch, out_chunk);
-                    });
-                }
-            });
-        } else {
-            let mut scratch = crate::gbdt::ForestScratch::default();
-            self.flat
-                .predict_flat_rows(&rows[..n * row_len], row_len, &mut scratch, &mut out);
+        let outcome = self.pooled_outcome(rows, n, row_len);
+        // The unchecked contract is all-or-nothing: re-raise shard failures
+        // as the panic the scalar path would have produced.
+        assert!(
+            outcome.failed.is_empty(),
+            "shard panic on row spans {:?}",
+            outcome.failed
+        );
+        outcome.probs
+    }
+
+    fn predict_checked(&self, rows: &[f32], n: usize, row_len: usize) -> PredictOutcome {
+        if row_len < self.model.n_features {
+            // Narrow rows take the scalar path; contain its panics per the
+            // default whole-batch contract.
+            return contain_whole_batch(n, || self.predict(rows, n, row_len));
         }
-        out
+        // Pool path: a panicking shard fails only its own sub-range.
+        self.pooled_outcome(rows, n, row_len)
     }
 
     fn row_len(&self) -> usize {
@@ -347,9 +413,18 @@ fn connection_loop(mut stream: TcpStream, queue: Arc<Queue>, netsim: Arc<NetSim>
     let Ok(write_half) = stream.try_clone() else { return };
     let out: SharedWriter = Arc::new(Mutex::new(write_half));
     loop {
-        let req: Request = match proto::read_request(&mut stream) {
-            Ok(Some(r)) => r,
-            Ok(None) | Err(_) => break, // client closed / protocol error
+        let req: Request = match proto::read_inbound(&mut stream) {
+            Ok(Some(Inbound::Req(r))) => r,
+            Ok(Some(Inbound::Malformed { req_id })) => {
+                // Content-malformed frame with honest length: the stream is
+                // still in sync, and the connection is shared by pipelined
+                // requests — answer THIS id with an error frame and keep
+                // serving the rest. (Error frames skip the netsim hop.)
+                respond(&out, &netsim, req_id, None);
+                continue;
+            }
+            // Client closed / unrecoverable desync.
+            Ok(None) | Err(_) => break,
         };
         // Inbound network hop (simulated datacenter latency). Like the
         // outbound side, the hop is propagation delay: pipelined frames
@@ -474,22 +549,30 @@ fn batcher_loop(
                 j += 1;
             }
             let t0 = Instant::now();
-            // A panicking backend must not kill the worker (with every
-            // worker dead the queue grows unserved forever — the service is
-            // bricked). Contain the unwind to this batch and answer its
-            // requests with error frames.
+            // Failures come back as data (`predict_checked`): per-shard
+            // spans from the pool-backed backend, whole-batch from plain
+            // ones. The catch_unwind is a last-resort net for a backend
+            // whose OVERRIDDEN predict_checked itself panics — with every
+            // worker dead the queue grows unserved forever (the service is
+            // bricked), so the worker must survive anything.
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                backend.predict(&rows, n, row_len)
+                backend.predict_checked(&rows, n, row_len)
             }));
             metrics.backend_exec.record_duration(t0.elapsed());
             match result {
-                Ok(probs) => {
-                    debug_assert_eq!(probs.len(), n);
+                Ok(outcome) => {
+                    debug_assert_eq!(outcome.probs.len(), n);
+                    // Error frames go only to the requests whose rows
+                    // intersect a failed span; the rest are served.
                     let mut off = 0;
                     for job in &batch[i..j] {
-                        let slice = probs[off..off + job.n].to_vec();
+                        let span = off..off + job.n;
                         off += job.n;
-                        job.respond(Some(slice));
+                        if outcome.span_failed(&span) {
+                            job.respond(None);
+                        } else {
+                            job.respond(Some(outcome.probs[span].to_vec()));
+                        }
                     }
                 }
                 Err(_) => {
@@ -553,5 +636,200 @@ mod tests {
             let v = 10.0 + i as f32;
             assert_eq!(client.predict(&[v, 0.0], 2).unwrap(), vec![v], "request {i}");
         }
+    }
+
+    /// Backend whose `predict_checked` fails every maximal run of rows with
+    /// first value ≥ [`SPAN_FAIL_THRESHOLD`] — content-addressed failure
+    /// spans, so the outcome per request is identical however the dynamic
+    /// batcher splits or orders the batch.
+    struct SpanFailBackend;
+
+    const SPAN_FAIL_THRESHOLD: f32 = 16.0;
+
+    impl Backend for SpanFailBackend {
+        fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+            (0..n).map(|r| rows[r * row_len]).collect()
+        }
+        fn predict_checked(&self, rows: &[f32], n: usize, row_len: usize) -> PredictOutcome {
+            let probs = self.predict(rows, n, row_len);
+            let mut failed = Vec::new();
+            let mut run_start = None;
+            for r in 0..n {
+                let bad = rows[r * row_len] >= SPAN_FAIL_THRESHOLD;
+                match (bad, run_start) {
+                    (true, None) => run_start = Some(r),
+                    (false, Some(s)) => {
+                        failed.push(s..r);
+                        run_start = None;
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(s) = run_start {
+                failed.push(s..n);
+            }
+            PredictOutcome { probs, failed }
+        }
+        fn row_len(&self) -> usize {
+            0
+        }
+    }
+
+    #[test]
+    fn failed_span_errors_only_overlapping_requests() {
+        // Four pipelined 4-row requests; requests 2 and 3 carry first
+        // values ≥ the failure threshold, requests 0 and 1 stay below it.
+        // Because the backend's failed spans are content-addressed, the
+        // outcome is deterministic under ANY batcher split/order: 0 and 1
+        // are served with their own echoes, 2 and 3 get error frames.
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(SpanFailBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig {
+                max_batch: 64,
+                // Generous coalescing window so the requests usually land
+                // in ONE batch and really exercise the span→job mapping.
+                max_wait: Duration::from_millis(100),
+                workers: 1,
+            },
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        let client = RpcClient::connect(server.addr).unwrap();
+        let pendings: Vec<_> = (0..4)
+            .map(|q| {
+                let rows: Vec<f32> = (0..8).map(|k| (q * 8 + k) as f32).collect(); // 4 rows × 2
+                client.predict_async(&rows, 2).unwrap()
+            })
+            .collect();
+        let results: Vec<_> = pendings.into_iter().map(|p| p.wait()).collect();
+        for (q, res) in results.iter().enumerate() {
+            if q < 2 {
+                let probs = res.as_ref().unwrap_or_else(|e| {
+                    panic!("request {q} has no failing rows, must be served: {e}")
+                });
+                let expect: Vec<f32> = (0..4).map(|r| (q * 8 + r * 2) as f32).collect();
+                assert_eq!(probs, &expect, "request {q} served with wrong rows");
+            } else {
+                assert!(res.is_err(), "request {q} overlaps a failed span, must error");
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_frame_gets_error_frame_not_hangup() {
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(PanickyBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig::default(),
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        // Raw socket: a content-malformed frame (honest length, row count
+        // that disagrees with the payload), then a well-formed request,
+        // pipelined on the SAME connection.
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&20u32.to_le_bytes()); // payload length: honest
+        bad.extend_from_slice(&41u64.to_le_bytes()); // req_id
+        bad.extend_from_slice(&7u32.to_le_bytes()); // claims 7 rows
+        bad.extend_from_slice(&3u32.to_le_bytes()); // of width 3
+        bad.extend_from_slice(&1.5f32.to_le_bytes()); // but carries 1 value
+        use std::io::Write as _;
+        stream.write_all(&bad).unwrap();
+        let mut good = Vec::new();
+        proto::encode_request(
+            &Request { req_id: 42, row_len: 2, rows: vec![9.0, 0.0] },
+            &mut good,
+        );
+        proto::write_frame(&mut stream, &good).unwrap();
+
+        // Both must be answered on this same connection: an error frame
+        // for 41, a real response for 42 (order may vary — pipelined).
+        let mut got_err = None;
+        let mut got_ok = None;
+        for _ in 0..2 {
+            let resp = proto::read_response(&mut stream)
+                .expect("connection must stay alive after a malformed frame")
+                .expect("server must answer, not hang up");
+            match resp.req_id {
+                41 => got_err = Some(resp),
+                42 => got_ok = Some(resp),
+                other => panic!("unexpected req_id {other}"),
+            }
+        }
+        let err = got_err.expect("malformed frame must be answered");
+        assert!(err.error, "the malformed frame's answer is an error frame");
+        let ok = got_ok.expect("well-formed request must be served");
+        assert!(!ok.error);
+        assert_eq!(ok.probs, vec![9.0]);
+    }
+
+    /// A GBDT whose flattened forest reads feature index 9 999 999 when a
+    /// row's x[0] exceeds 1e30 — an index panic on "poison" rows, the
+    /// fault-injection stand-in for a model bug.
+    fn poison_model(n_features: usize) -> crate::gbdt::GbdtModel {
+        use crate::gbdt::{Node, Tree, LEAF};
+        let node = |feat: u32, thresh: f32, left: u32, right: u32, value: f32| Node {
+            feat,
+            thresh,
+            left,
+            right,
+            value,
+            gain: 0.0,
+        };
+        let tree = Tree {
+            nodes: vec![
+                node(0, 1e30, 1, 2, 0.0),
+                node(LEAF, 0.0, 0, 0, 0.3),
+                node(9_999_999, 0.0, 3, 4, 0.0),
+                node(LEAF, 0.0, 0, 0, 0.0),
+                node(LEAF, 0.0, 0, 0, 0.0),
+            ],
+        };
+        crate::gbdt::GbdtModel {
+            trees: vec![tree],
+            base_score: 0.0,
+            n_features,
+            feature_gain: vec![0.0; n_features],
+            max_depth: 2,
+        }
+    }
+
+    #[test]
+    fn native_backend_contains_shard_panic_to_its_span() {
+        // Explicit 4-shard pool with 64-row tasks so the split is
+        // deterministic regardless of the host's core count.
+        let pool = Arc::new(ShardPool::with_config(crate::runtime::ShardPoolConfig {
+            n_shards: 4,
+            min_task_rows: 64,
+            ..Default::default()
+        }));
+        let backend = NativeBackend::with_pool(poison_model(4), pool);
+        let n = 256;
+        let row_len = 4;
+        let mut rows = vec![0.25f32; n * row_len];
+        rows[150 * row_len] = f32::INFINITY; // poison row in shard 128..192
+        let outcome = backend.predict_checked(&rows, n, row_len);
+        assert_eq!(outcome.failed, vec![128..192]);
+        assert!(outcome.span_failed(&(150..151)));
+        assert!(outcome.span_failed(&(190..200)), "overlap counts");
+        assert!(!outcome.span_failed(&(0..128)));
+        assert!(!outcome.span_failed(&(192..256)));
+        let expected = crate::util::sigmoid(0.3) as f32;
+        for r in (0..128).chain(192..256) {
+            assert_eq!(outcome.probs[r].to_bits(), expected.to_bits(), "row {r}");
+        }
+        // The pool survived: the next clean batch is fully served, and the
+        // unchecked path works again too.
+        let clean = vec![0.25f32; n * row_len];
+        let outcome = backend.predict_checked(&clean, n, row_len);
+        assert!(outcome.failed.is_empty());
+        let probs = backend.predict(&clean, n, row_len);
+        assert!(probs.iter().all(|p| p.to_bits() == expected.to_bits()));
+        assert_eq!(backend.pool().stats().panics(), 1);
     }
 }

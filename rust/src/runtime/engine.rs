@@ -1,0 +1,289 @@
+//! PJRT engine — loads the AOT HLO-text artifacts and executes them.
+//!
+//! The compile path (`python/compile/aot.py`) runs once at build time; this
+//! module is the only place the serving stack touches XLA: CPU PJRT client →
+//! `HloModuleProto::from_text_file` → compile → execute. One compiled
+//! executable per (graph, batch-variant); the runtime picks the smallest
+//! variant ≥ the live batch and pads.
+
+use crate::gbdt::ForestTensors;
+use crate::lrwbins::tables::{KernelInputs, ServingTables};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Padded artifact shapes (mirror of `python/compile/model.py::Shapes`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shapes {
+    pub f_max: usize,
+    pub nb_max: usize,
+    pub q_max: usize,
+    pub nf_max: usize,
+    pub bins_max: usize,
+    pub t_max: usize,
+    pub depth: usize,
+}
+
+impl Shapes {
+    pub fn ni(&self) -> usize {
+        (1 << self.depth) - 1
+    }
+    pub fn nl(&self) -> usize {
+        1 << self.depth
+    }
+
+    fn from_manifest(j: &Json) -> Result<Shapes> {
+        let s = j.get("shapes").ok_or_else(|| anyhow!("manifest: no shapes"))?;
+        let get = |k: &str| {
+            s.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest: missing shapes.{k}"))
+        };
+        Ok(Shapes {
+            f_max: get("f_max")?,
+            nb_max: get("nb_max")?,
+            q_max: get("q_max")?,
+            nf_max: get("nf_max")?,
+            bins_max: get("bins_max")?,
+            t_max: get("t_max")?,
+            depth: get("depth")?,
+        })
+    }
+}
+
+/// A compiled executable for one batch variant.
+struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+}
+
+/// Which graph to load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Graph {
+    FirstStage,
+    SecondStage,
+    Multistage,
+}
+
+impl Graph {
+    fn key(&self) -> &'static str {
+        match self {
+            Graph::FirstStage => "first_stage",
+            Graph::SecondStage => "second_stage",
+            Graph::Multistage => "multistage",
+        }
+    }
+}
+
+/// The PJRT engine: client + compiled batch variants per graph.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub shapes: Shapes,
+    artifacts: BTreeMap<(Graph, usize), Artifact>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load the manifest and compile the requested graphs (all batch
+    /// variants listed in the manifest).
+    pub fn load(artifacts_dir: &Path, graphs: &[Graph]) -> Result<Engine> {
+        let manifest_path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let shapes = Shapes::from_manifest(&manifest)?;
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut engine = Engine {
+            client,
+            shapes,
+            artifacts: BTreeMap::new(),
+            dir: artifacts_dir.to_path_buf(),
+        };
+        let arts = manifest
+            .get("artifacts")
+            .ok_or_else(|| anyhow!("manifest: no artifacts"))?;
+        for &g in graphs {
+            let per_batch = arts
+                .get(g.key())
+                .ok_or_else(|| anyhow!("manifest: no {} artifacts", g.key()))?;
+            if let Json::Obj(o) = per_batch {
+                for (bstr, fname) in o.iter() {
+                    let batch: usize = bstr.parse().map_err(|_| anyhow!("bad batch {bstr}"))?;
+                    let fname = fname.as_str().ok_or_else(|| anyhow!("bad artifact name"))?;
+                    engine.compile_artifact(g, batch, fname)?;
+                }
+            } else {
+                bail!("manifest: artifacts.{} not an object", g.key());
+            }
+        }
+        Ok(engine)
+    }
+
+    fn compile_artifact(&mut self, g: Graph, batch: usize, fname: &str) -> Result<()> {
+        let path = self.dir.join(fname);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {fname}"))?;
+        self.artifacts.insert((g, batch), Artifact { exe, batch });
+        Ok(())
+    }
+
+    /// Batch variants available for a graph (ascending).
+    pub fn variants(&self, g: Graph) -> Vec<usize> {
+        self.artifacts
+            .keys()
+            .filter(|(gg, _)| *gg == g)
+            .map(|(_, b)| *b)
+            .collect()
+    }
+
+    /// Smallest compiled variant ≥ n, or the largest one (caller chunks).
+    fn pick(&self, g: Graph, n: usize) -> Result<&Artifact> {
+        let mut best: Option<&Artifact> = None;
+        let mut largest: Option<&Artifact> = None;
+        for ((gg, _), a) in self.artifacts.iter() {
+            if *gg != g {
+                continue;
+            }
+            if a.batch >= n && best.map_or(true, |b| a.batch < b.batch) {
+                best = Some(a);
+            }
+            if largest.map_or(true, |l| a.batch > l.batch) {
+                largest = Some(a);
+            }
+        }
+        best.or(largest)
+            .ok_or_else(|| anyhow!("no artifact for {:?}", g))
+    }
+
+    fn lit_f32(v: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(v).reshape(dims)?)
+    }
+
+    fn lit_i32(v: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(v).reshape(dims)?)
+    }
+
+    /// Execute the second-stage forest over a batch of padded feature rows
+    /// (`rows.len() == n * f_max`). Returns `n` probabilities.
+    pub fn second_stage(&self, rows: &[f32], n: usize, forest: &ForestParams) -> Result<Vec<f32>> {
+        let s = &self.shapes;
+        debug_assert_eq!(rows.len(), n * s.f_max);
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0;
+        while start < n {
+            let art = self.pick(Graph::SecondStage, n - start)?;
+            let take = art.batch.min(n - start);
+            let mut x = vec![0f32; art.batch * s.f_max];
+            x[..take * s.f_max].copy_from_slice(&rows[start * s.f_max..(start + take) * s.f_max]);
+            let args = [
+                Self::lit_f32(&x, &[art.batch as i64, s.f_max as i64])?,
+                Self::lit_i32(&forest.feat, &[s.t_max as i64, s.ni() as i64])?,
+                Self::lit_f32(&forest.thresh, &[s.t_max as i64, s.ni() as i64])?,
+                Self::lit_f32(&forest.leaf, &[s.t_max as i64, s.nl() as i64])?,
+                Self::lit_f32(&[forest.base_score], &[1])?,
+            ];
+            let result = art.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let probs = result.to_tuple1()?.to_vec::<f32>()?;
+            out.extend_from_slice(&probs[..take]);
+            start += take;
+        }
+        Ok(out)
+    }
+
+    /// Execute the first-stage artifact (cross-check path). Returns
+    /// `(probs, accept)` for `n` rows.
+    pub fn first_stage(
+        &self,
+        rows: &[f32],
+        n: usize,
+        k: &KernelInputs,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let s = &self.shapes;
+        debug_assert_eq!(rows.len(), n * s.f_max);
+        assert_eq!(k.nb_max, s.nb_max);
+        assert_eq!(k.q_max, s.q_max);
+        assert_eq!(k.nf_max, s.nf_max);
+        assert_eq!(k.bins_max, s.bins_max);
+        let mut probs_out = Vec::with_capacity(n);
+        let mut accept_out = Vec::with_capacity(n);
+        let mut start = 0;
+        while start < n {
+            let art = self.pick(Graph::FirstStage, n - start)?;
+            let take = art.batch.min(n - start);
+            let mut x = vec![0f32; art.batch * s.f_max];
+            x[..take * s.f_max].copy_from_slice(&rows[start * s.f_max..(start + take) * s.f_max]);
+            let args = [
+                Self::lit_f32(&x, &[art.batch as i64, s.f_max as i64])?,
+                Self::lit_i32(&k.bin_features, &[s.nb_max as i64])?,
+                Self::lit_f32(&k.quantiles, &[s.nb_max as i64, s.q_max as i64])?,
+                Self::lit_i32(&k.strides, &[s.nb_max as i64])?,
+                Self::lit_i32(&k.infer_features, &[s.nf_max as i64])?,
+                Self::lit_f32(&k.weights, &[s.bins_max as i64, (s.nf_max + 1) as i64])?,
+                Self::lit_f32(&k.route, &[s.bins_max as i64])?,
+            ];
+            let result = art.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let (p, a) = result.to_tuple2()?;
+            let p = p.to_vec::<f32>()?;
+            let a = a.to_vec::<f32>()?;
+            probs_out.extend_from_slice(&p[..take]);
+            accept_out.extend_from_slice(&a[..take]);
+            start += take;
+        }
+        Ok((probs_out, accept_out))
+    }
+
+    /// Pad a raw feature row to `f_max` for the second-stage artifact
+    /// (raw values — trees split raw space).
+    pub fn pad_row(&self, row: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; self.shapes.f_max];
+        out[..row.len()].copy_from_slice(row);
+        out
+    }
+}
+
+/// Forest tensors padded to the artifact shapes.
+#[derive(Clone, Debug)]
+pub struct ForestParams {
+    pub feat: Vec<i32>,
+    pub thresh: Vec<f32>,
+    pub leaf: Vec<f32>,
+    pub base_score: f32,
+}
+
+impl ForestParams {
+    /// Pad a trained forest to the artifact shapes.
+    pub fn from_tensors(ft: &ForestTensors, shapes: &Shapes) -> Result<ForestParams> {
+        if ft.depth != shapes.depth {
+            bail!("forest depth {} != artifact depth {}", ft.depth, shapes.depth);
+        }
+        if ft.n_trees > shapes.t_max {
+            bail!("forest has {} trees > artifact t_max {}", ft.n_trees, shapes.t_max);
+        }
+        if ft.n_features > shapes.f_max {
+            bail!("forest features {} > f_max {}", ft.n_features, shapes.f_max);
+        }
+        let padded = ft.padded(shapes.t_max, shapes.f_max);
+        Ok(ForestParams {
+            feat: padded.feat,
+            thresh: padded.thresh,
+            leaf: padded.leaf,
+            base_score: padded.base_score,
+        })
+    }
+}
+
+/// Convenience: kernel inputs for the first-stage artifact from serving
+/// tables, using the engine's shapes.
+pub fn kernel_inputs_for(tables: &ServingTables, shapes: &Shapes) -> KernelInputs {
+    tables.kernel_inputs(shapes.nb_max, shapes.q_max, shapes.nf_max, shapes.bins_max)
+}

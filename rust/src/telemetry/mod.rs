@@ -159,9 +159,124 @@ impl ServeMetrics {
     }
 }
 
+/// Shard-per-core pool telemetry: per-shard occupancy and task counters
+/// plus queue-depth tracking for the shared MPMC ring
+/// (see [`crate::runtime::ShardPool`]).
+///
+/// Gauges are racy by design (monitoring, not synchronization); counters
+/// follow a strict discipline — every count is recorded *before* the
+/// batch's completion latch opens, so a submitter returning from a pool
+/// call observes totals that already include its own batch.
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// Per-shard executed task counts.
+    shard_tasks: Vec<AtomicU64>,
+    /// Per-shard busy gauge (1 while a task is executing on that shard).
+    shard_busy: Vec<AtomicU64>,
+    /// Sub-range tasks submitted across all batches.
+    pub spans_submitted: AtomicU64,
+    /// Tasks run inline on the submitter because the ring was full
+    /// (backpressure events).
+    pub inline_runs: AtomicU64,
+    /// Shard panics contained to their task span.
+    pub shard_panics: AtomicU64,
+    /// High-water mark of the shared queue depth.
+    pub queue_depth_hwm: AtomicU64,
+}
+
+impl ShardStats {
+    pub fn new(n_shards: usize) -> ShardStats {
+        ShardStats {
+            shard_tasks: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+            shard_busy: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shard_tasks.len()
+    }
+
+    pub fn record_task(&self, shard: usize) {
+        self.shard_tasks[shard].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn set_busy(&self, shard: usize, busy: bool) {
+        self.shard_busy[shard].store(u64::from(busy), Ordering::Relaxed);
+    }
+
+    pub fn note_queue_depth(&self, depth: usize) {
+        self.queue_depth_hwm.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Tasks executed by shard `i`.
+    pub fn tasks_on(&self, shard: usize) -> u64 {
+        self.shard_tasks[shard].load(Ordering::Relaxed)
+    }
+
+    /// Tasks executed across all shards (excludes inline runs).
+    pub fn spans_completed(&self) -> u64 {
+        self.shard_tasks.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Shards currently executing a task (occupancy gauge).
+    pub fn busy_shards(&self) -> usize {
+        self.shard_busy
+            .iter()
+            .filter(|b| b.load(Ordering::Relaxed) != 0)
+            .count()
+    }
+
+    pub fn panics(&self) -> u64 {
+        self.shard_panics.load(Ordering::Relaxed)
+    }
+
+    /// One-line report for logs: per-shard task counts + global counters.
+    pub fn report(&self) -> String {
+        let per_shard: Vec<String> = self
+            .shard_tasks
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed).to_string())
+            .collect();
+        format!(
+            "shards[{}] tasks/shard=[{}] submitted={} inline={} panics={} busy={} q_hwm={}",
+            self.n_shards(),
+            per_shard.join(","),
+            self.spans_submitted.load(Ordering::Relaxed),
+            self.inline_runs.load(Ordering::Relaxed),
+            self.panics(),
+            self.busy_shards(),
+            self.queue_depth_hwm.load(Ordering::Relaxed),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shard_stats_counters_and_report() {
+        let s = ShardStats::new(3);
+        assert_eq!(s.n_shards(), 3);
+        s.record_task(0);
+        s.record_task(2);
+        s.record_task(2);
+        s.set_busy(1, true);
+        s.note_queue_depth(5);
+        s.note_queue_depth(2); // hwm keeps the max
+        s.spans_submitted.fetch_add(4, Ordering::Relaxed);
+        s.inline_runs.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(s.spans_completed(), 3);
+        assert_eq!(s.tasks_on(2), 2);
+        assert_eq!(s.busy_shards(), 1);
+        assert_eq!(s.queue_depth_hwm.load(Ordering::Relaxed), 5);
+        let rep = s.report();
+        assert!(rep.contains("tasks/shard=[1,0,2]"), "{rep}");
+        assert!(rep.contains("q_hwm=5"), "{rep}");
+        s.set_busy(1, false);
+        assert_eq!(s.busy_shards(), 0);
+    }
 
     #[test]
     fn thread_cpu_advances_under_work() {

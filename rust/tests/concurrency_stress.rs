@@ -1,0 +1,204 @@
+//! Concurrency stress battery for the pipelined serving path.
+//!
+//! N client threads issue interleaved `predict_async` (raw RPC) and
+//! `predict_block_async` (coordinator) calls against ONE server, holding
+//! several requests in flight each so responses complete out of order and
+//! the demux tables stay hot. Every response must match the synchronous
+//! path **bit-for-bit** — which simultaneously proves no `req_id` is ever
+//! delivered to the wrong waiter: distinct windows carry distinct expected
+//! probability vectors, so a swapped delivery shows up as a value mismatch.
+//!
+//! Run with `--test-threads` > 1 (the verify recipe forces it) so these
+//! interleave with the rest of the suite too.
+
+use lrwbins::coordinator::Coordinator;
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams, ServingTables};
+use lrwbins::rpc::netsim::{NetSim, NetSimConfig};
+use lrwbins::rpc::server::{BatcherConfig, NativeBackend, RpcServer};
+use lrwbins::rpc::RpcClient;
+use lrwbins::tabular::{Dataset, RowBlock};
+use lrwbins::telemetry::ServeMetrics;
+use std::sync::Arc;
+
+const N_ROWS: usize = 256;
+const WINDOW: usize = 24;
+const THREADS: usize = 8;
+const ITERS: usize = 30;
+
+struct Rig {
+    data: Dataset,
+    model: lrwbins::gbdt::GbdtModel,
+    coordinator: Coordinator,
+    client: RpcClient,
+    _server: RpcServer,
+}
+
+fn build_rig() -> Rig {
+    let spec = datagen::preset("aci").unwrap().with_rows(4000);
+    let data = datagen::generate(&spec, 5);
+    let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+    let mut first = LrwBinsModel::train(
+        &data,
+        &ranking.order,
+        &LrwBinsParams {
+            b: 2,
+            n_bin_features: 3,
+            n_infer_features: 6,
+            ..Default::default()
+        },
+    );
+    let route: std::collections::HashSet<u32> =
+        first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+    first.set_route(route);
+    let model = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::quick());
+    let metrics = Arc::new(ServeMetrics::new());
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(NativeBackend::new(model.clone())),
+        Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+        BatcherConfig::default(),
+        metrics.clone(),
+    )
+    .expect("server");
+    let client = RpcClient::connect(server.addr).expect("stress client");
+    let coordinator = Coordinator::new(
+        ServingTables::from_model(&first),
+        Some(RpcClient::connect(server.addr).expect("coord client")),
+        0,
+        metrics,
+    );
+    Rig { data, model, coordinator, client, _server: server }
+}
+
+/// Deterministic per-(thread, iteration) window start — threads hit
+/// overlapping but distinct row windows.
+fn window_start(t: usize, i: usize) -> usize {
+    (t * 37 + i * 13) % (N_ROWS - WINDOW)
+}
+
+#[test]
+fn interleaved_async_clients_match_sync_bit_for_bit() {
+    let rig = build_rig();
+    let nf = rig.data.n_features();
+
+    // Sync references, computed serially up front.
+    //  - raw RPC expectation: the model itself (the RPC boundary is
+    //    numerically transparent; responses are f32-exact).
+    let expected_probs: Vec<u32> = (0..N_ROWS)
+        .map(|r| rig.model.predict_one(&rig.data.row(r)).to_bits())
+        .collect();
+    //  - coordinator expectation: the synchronous block path per window.
+    let sync_blocks: Vec<Vec<(u32, lrwbins::coordinator::Served)>> = (0..N_ROWS - WINDOW)
+        .map(|start| {
+            let rows: Vec<Vec<f32>> = (start..start + WINDOW).map(|r| rig.data.row(r)).collect();
+            rig.coordinator
+                .predict_block(&RowBlock::from_rows(&rows))
+                .expect("sync block")
+                .into_iter()
+                .map(|(p, s)| (p.to_bits(), s))
+                .collect()
+        })
+        .collect();
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let rig = &rig;
+            let expected_probs = &expected_probs;
+            let sync_blocks = &sync_blocks;
+            s.spawn(move || {
+                let mut flat = Vec::new();
+                for i in 0..ITERS {
+                    let start = window_start(t, i);
+                    let rows: Vec<Vec<f32>> =
+                        (start..start + WINDOW).map(|r| rig.data.row(r)).collect();
+                    if (t + i) % 2 == 0 {
+                        // Raw pipelined RPC: several windows in flight at
+                        // once, waited in reverse issue order so responses
+                        // must be demuxed by id, not arrival.
+                        let starts = [start, window_start(t, i + ITERS), window_start(t + 1, i)];
+                        let pendings: Vec<_> = starts
+                            .iter()
+                            .map(|&st| {
+                                flat.clear();
+                                for r in st..st + WINDOW {
+                                    flat.extend_from_slice(&rig.data.row(r));
+                                }
+                                rig.client.predict_async(&flat, nf).expect("issue")
+                            })
+                            .collect();
+                        for (&st, p) in starts.iter().zip(pendings).rev() {
+                            let probs = p.wait().expect("rpc answer");
+                            assert_eq!(probs.len(), WINDOW, "t{t} i{i}");
+                            for (k, p) in probs.iter().enumerate() {
+                                assert_eq!(
+                                    p.to_bits(),
+                                    expected_probs[st + k],
+                                    "t{t} i{i} window {st} row {k}: wrong value — \
+                                     response routed to the wrong waiter?"
+                                );
+                            }
+                        }
+                    } else {
+                        // Pipelined coordinator blocks: issue two, wait in
+                        // reverse, compare against the sync block path.
+                        let block_a = RowBlock::from_rows(&rows);
+                        let start_b = window_start(t, i + 7 * ITERS);
+                        let rows_b: Vec<Vec<f32>> =
+                            (start_b..start_b + WINDOW).map(|r| rig.data.row(r)).collect();
+                        let block_b = RowBlock::from_rows(&rows_b);
+                        let pa = rig.coordinator.predict_block_async(&block_a).expect("block a");
+                        let pb = rig.coordinator.predict_block_async(&block_b).expect("block b");
+                        for (st, pending) in [(start_b, pb), (start, pa)] {
+                            let got = pending.wait().expect("block answer");
+                            let want = &sync_blocks[st];
+                            assert_eq!(got.len(), want.len());
+                            for (k, (p, served)) in got.iter().enumerate() {
+                                assert_eq!(*served, want[k].1, "t{t} i{i} block {st} row {k}");
+                                assert_eq!(
+                                    p.to_bits(),
+                                    want[k].0,
+                                    "t{t} i{i} block {st} row {k}: async != sync"
+                                );
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn async_and_sync_calls_share_a_client_safely() {
+    // A second, smaller storm where raw async predicts and blocking
+    // predicts interleave on the SAME client handle from every thread.
+    let rig = build_rig();
+    let nf = rig.data.n_features();
+    let expected: Vec<u32> = (0..N_ROWS)
+        .map(|r| rig.model.predict_one(&rig.data.row(r)).to_bits())
+        .collect();
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let rig = &rig;
+            let expected = &expected;
+            s.spawn(move || {
+                for i in 0..ITERS {
+                    let r = (t * 53 + i * 11) % N_ROWS;
+                    let row = rig.data.row(r);
+                    if i % 3 == 0 {
+                        let p = rig.client.predict(&row, nf).expect("sync");
+                        assert_eq!(p.len(), 1);
+                        assert_eq!(p[0].to_bits(), expected[r], "t{t} i{i} row {r}");
+                    } else {
+                        let pending = rig.client.predict_async(&row, nf).expect("async");
+                        assert_eq!(pending.n_rows(), 1);
+                        let p = pending.wait().expect("async answer");
+                        assert_eq!(p[0].to_bits(), expected[r], "t{t} i{i} row {r}");
+                    }
+                }
+            });
+        }
+    });
+}
