@@ -98,28 +98,31 @@ fn main() -> anyhow::Result<()> {
         rows.len() as f64 / wall.as_secs_f64()
     );
 
-    // --- pipelined batched serving (async coordinator, depth 2) ---------
+    // --- pipelined batched serving (async coordinator, adaptive depth) --
     // Stage-1 hits of each block are delivered the moment the embedded
     // pass finishes; the coalesced miss RPC stays in flight while the NEXT
-    // block's stage-1 pass runs. Results must stay bit-identical to the
-    // synchronous path above.
+    // block's stage-1 pass runs. The overlap depth is picked live (1–4)
+    // from the measured stage1-done/rpc-done completion gap — the sync
+    // sweep above already seeded that history. Results must stay
+    // bit-identical to the synchronous path above.
     let mut block = lrwbins::tabular::RowBlock::new();
     let mut async_preds = Vec::new();
-    let mut pending: Option<lrwbins::coordinator::BlockPending<'_>> = None;
+    let mut pipe = lrwbins::coordinator::BlockPipeline::new(&stack.coordinator);
+    let mut depth_seen = 0usize;
     let t = Instant::now();
     for chunk in rows.chunks(batch) {
         block.fill_from_rows(chunk);
-        let next = stack.coordinator.predict_block_async(&block)?;
-        if let Some(p) = pending.replace(next) {
-            async_preds.extend(p.wait()?);
+        for done in pipe.submit(&block)? {
+            async_preds.extend(done);
         }
+        depth_seen = depth_seen.max(pipe.in_flight());
     }
-    if let Some(p) = pending {
-        async_preds.extend(p.wait()?);
+    for done in pipe.finish()? {
+        async_preds.extend(done);
     }
     let wall_async = t.elapsed();
     println!(
-        "\n--- multistage: same workload, pipelined async blocks ---\nwall {:.2}s  throughput {:.0} rows/s  ({:.2}x vs sync batched)",
+        "\n--- multistage: same workload, pipelined async blocks (adaptive depth, peak {depth_seen}) ---\nwall {:.2}s  throughput {:.0} rows/s  ({:.2}x vs sync batched)",
         wall_async.as_secs_f64(),
         rows.len() as f64 / wall_async.as_secs_f64(),
         wall.as_secs_f64() / wall_async.as_secs_f64()

@@ -7,7 +7,13 @@
 //!                batch sizes;
 //!   shard_scaling: ShardPool (persistent shard-per-core engine) rows/sec
 //!                at shards {1, 2, 4, 8} × batch {64, 256, 1024};
+//!   steal_skew:  block completion under ONE pinned-hot shard, steal=on vs
+//!                steal=off, shards {2, 4, 8} — work-stealing's tail win
+//!                (p50/p99 recorded alongside the mean);
 //!   RPC:         loopback round trip (netsim OFF) at several batch sizes;
+//!   stream_vs_monolithic: client-observed full-block RPC latency and
+//!                time-to-first-span, streamed CHUNK responses vs one
+//!                monolithic frame, block {64, 256, 1024};
 //!   L1/L2 PJRT:  second-stage artifact execution per batch variant.
 //!
 //! Emits `BENCH_hotpath.json` (rows/sec per layer) at the repo root so the
@@ -139,6 +145,87 @@ fn main() {
         }
     }
 
+    // --- steal_skew: one hot shard, work-stealing on vs off ----------------
+    // An antagonist tenant pins ONE shard with expensive single-task
+    // batches while the probe submits ordinary blocks. With stealing, idle
+    // shards drain the probe tasks parked behind the hog; without, the hog
+    // gates them. p50/p99 block completion land in the JSON next to the
+    // mean (the acceptance criterion is a p99 win at no balanced-path
+    // regression).
+    {
+        use lrwbins::runtime::{ShardPool, ShardPoolConfig};
+        use lrwbins::util::histogram::Histogram;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let row_len = data.n_features();
+        let probe_batch = 256usize;
+        let mut wire = vec![0f32; probe_batch * row_len];
+        for (i, row) in rows.iter().cycle().take(probe_batch).enumerate() {
+            wire[i * row_len..i * row_len + row.len()].copy_from_slice(row);
+        }
+        // Expensive hog forest: one shallow tree repeated, single-task
+        // batches (31 rows < 2×min_task_rows).
+        let hog_forest = {
+            use lrwbins::gbdt::flat::FlatNode;
+            use lrwbins::gbdt::{FlatForest, LEAF};
+            FlatForest {
+                nodes: vec![
+                    FlatNode { feat: 0, thresh: 0.0, lo: 1, value: 0.0 },
+                    FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: 1e-7 },
+                    FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: -1e-7 },
+                ],
+                roots: vec![0; if quick { 200_000 } else { 1_000_000 }],
+                base_score: 0.0,
+                n_features: row_len,
+            }
+        };
+        let reps = if quick { 40 } else { 200 };
+        for &shards in &[2usize, 4, 8] {
+            for steal in [true, false] {
+                let pool = ShardPool::with_config(ShardPoolConfig {
+                    n_shards: shards,
+                    min_task_rows: 16,
+                    steal,
+                    ..Default::default()
+                });
+                let probe_id = pool.register(flat.clone());
+                let hog_id = pool.register(hog_forest.clone());
+                let stop = AtomicBool::new(false);
+                let hist = Histogram::new();
+                std::thread::scope(|s| {
+                    let stop = &stop;
+                    let pool_ref = &pool;
+                    s.spawn(move || {
+                        let hog_rows = vec![0.5f32; 31 * row_len];
+                        let mut out = vec![0f32; 31];
+                        while !stop.load(Ordering::Relaxed) {
+                            let _ = pool_ref.predict_spans(hog_id, &hog_rows, row_len, &mut out);
+                        }
+                    });
+                    while pool.stats().busy_shards() == 0 {
+                        std::hint::spin_loop();
+                    }
+                    let mut out = vec![0f32; probe_batch];
+                    for _ in 0..reps {
+                        let t0 = std::time::Instant::now();
+                        let failed = pool.predict_spans(probe_id, &wire, row_len, &mut out);
+                        hist.record_duration(t0.elapsed());
+                        debug_assert!(failed.is_empty());
+                        std::hint::black_box(out.last());
+                    }
+                    stop.store(true, Ordering::Relaxed);
+                });
+                let label = format!(
+                    "steal_skew block completion (shards={shards}, batch={probe_batch}, steal={})",
+                    if steal { "on" } else { "off" }
+                );
+                bench.record(&label, hist.mean_ns(), Some(probe_batch as u64));
+                bench.record(&format!("{label} p50"), hist.quantile_ns(0.50) as f64, None);
+                bench.record(&format!("{label} p99"), hist.quantile_ns(0.99) as f64, None);
+                eprintln!("  [{label}] {}", pool.stats().report());
+            }
+        }
+    }
+
     // --- RPC round trip (netsim OFF → pure stack cost) --------------------
     let metrics = Arc::new(ServeMetrics::new());
     let server = RpcServer::start(
@@ -156,6 +243,81 @@ fn main() {
         bench.run_items(&format!("RPC loopback roundtrip (batch={batch})"), batch as u64, || {
             std::hint::black_box(client.predict(&wire, nf).unwrap());
         });
+    }
+
+    // --- stream_vs_monolithic: chunked CHUNK responses vs one frame --------
+    // Same pool-backed service twice, streaming on vs off. Two numbers per
+    // block size: the full-completion throughput (streaming must not
+    // regress it) and the client-observed time-to-first-span — the latency
+    // win of consuming fallback rows while later sub-batches are still in
+    // flight.
+    {
+        use lrwbins::runtime::{ShardPool, ShardPoolConfig};
+        let nf = data.n_features();
+        let mk_server = |stream: bool| {
+            let pool = Arc::new(ShardPool::with_config(ShardPoolConfig {
+                n_shards: 4,
+                min_task_rows: 16,
+                ..Default::default()
+            }));
+            RpcServer::start(
+                "127.0.0.1:0",
+                Arc::new(NativeBackend::with_pool(second.clone(), pool)),
+                Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+                BatcherConfig { stream, ..Default::default() },
+                Arc::new(ServeMetrics::new()),
+            )
+            .unwrap()
+        };
+        let streamed_srv = mk_server(true);
+        let mono_srv = mk_server(false);
+        let streamed_client = RpcClient::connect(streamed_srv.addr).unwrap();
+        let mono_client = RpcClient::connect(mono_srv.addr).unwrap();
+        for &batch in &[64usize, 256, 1024] {
+            let wire: Vec<f32> = rows.iter().cycle().take(batch).flatten().copied().collect();
+            for (mode, client) in [("stream", &streamed_client), ("monolithic", &mono_client)] {
+                bench.run_items(
+                    &format!("stream_vs_monolithic full block (batch={batch}, {mode})"),
+                    batch as u64,
+                    || {
+                        std::hint::black_box(client.predict(&wire, nf).unwrap());
+                    },
+                );
+                // Time to FIRST consumable rows (first span on the streamed
+                // path, the whole response on the monolithic one).
+                let reps = if quick { 30 } else { 150 };
+                let mut first_ns = 0f64;
+                for _ in 0..reps {
+                    let t0 = std::time::Instant::now();
+                    let mut pending = client.predict_async(&wire, nf).unwrap();
+                    let t_first = if mode == "stream" {
+                        // First span = first consumable fallback rows.
+                        let t = loop {
+                            if !pending.poll_spans().is_empty() {
+                                break t0.elapsed();
+                            }
+                            assert!(
+                                t0.elapsed() < std::time::Duration::from_secs(5),
+                                "stream stalled"
+                            );
+                            std::hint::spin_loop();
+                        };
+                        let _ = pending.wait();
+                        t
+                    } else {
+                        // Monolithic: rows only consumable at the join.
+                        let _ = pending.wait();
+                        t0.elapsed()
+                    };
+                    first_ns += t_first.as_nanos() as f64;
+                }
+                bench.record(
+                    &format!("stream_vs_monolithic first rows (batch={batch}, {mode})"),
+                    first_ns / reps as f64,
+                    None,
+                );
+            }
+        }
     }
 
     // --- PJRT second-stage artifact ---------------------------------------

@@ -158,19 +158,22 @@ fn main() {
     // --- Pipelined block serving (the async coordinator) ------------------
     // Same multistage workload, two drivers: the synchronous
     // `predict_block` (each block waits out its coalesced miss RPC before
-    // the next starts) vs the pipelined `predict_block_async` (block N+1's
-    // stage-1 pass and RPC launch overlap block N's outstanding RPC; depth
-    // 2). The gap is the network wait the paper's architecture leaves on
-    // the table when blocks are served with a barrier.
+    // the next starts) vs the ADAPTIVE pipeline (`BlockPipeline`): the
+    // overlap depth is picked live, per submission, from the measured
+    // stage1-done/rpc-done completion gap (1–4) instead of the old
+    // hardwired depth 2. The gap is the network wait the paper's
+    // architecture leaves on the table when blocks are served with a
+    // barrier.
     stack.coordinator.mode = Mode::Multistage;
-    println!("\n| block batch | sync predict_block | pipelined async | sync/async speedup |");
-    println!("|---|---|---|---|");
+    println!("\n| block batch | sync predict_block | pipelined (adaptive depth) | depth | sync/async speedup |");
+    println!("|---|---|---|---|---|");
     for &bs in &[8usize, 64, 256] {
         let bs = bs.min(n_avail);
         let reps = (total / bs).max(2);
         let span = n_avail - bs; // valid fill offsets: 0..=span
 
-        // Warm up both paths (connections, scratch, batcher).
+        // Warm up both paths (connections, scratch, batcher) — this also
+        // seeds the per-stage completion metrics the depth adapts from.
         block.fill_from_dataset(&stack.test, 0, bs);
         let _ = stack.coordinator.predict_block(&block);
 
@@ -182,24 +185,18 @@ fn main() {
         let sync_ns = t0.elapsed().as_nanos() as f64 / (reps * bs) as f64;
 
         let t0 = Instant::now();
-        let mut pending = None;
+        let mut pipe = lrwbins::coordinator::BlockPipeline::new(&stack.coordinator);
+        let mut depth_seen = 0usize;
         for rep in 0..reps {
             block.fill_from_dataset(&stack.test, (rep * bs) % (span + 1), bs);
-            let next = stack
-                .coordinator
-                .predict_block_async(&block)
-                .expect("async block");
-            if let Some(p) = pending.replace(next) {
-                let _ = p.wait().expect("join block");
-            }
+            let _ = pipe.submit(&block).expect("async block");
+            depth_seen = depth_seen.max(pipe.in_flight());
         }
-        if let Some(p) = pending {
-            let _ = p.wait().expect("join last block");
-        }
+        let _ = pipe.finish().expect("join tail blocks");
         let async_ns = t0.elapsed().as_nanos() as f64 / (reps * bs) as f64;
 
         println!(
-            "| {bs} | {} | {} | {:.2}x |",
+            "| {bs} | {} | {} | {depth_seen} | {:.2}x |",
             fmt_ns(sync_ns),
             fmt_ns(async_ns),
             sync_ns / async_ns

@@ -23,11 +23,23 @@
 //! is a thin `async → wait()` wrapper, so the bit-identity property tests
 //! pin both paths at once.
 //!
+//! The fallback itself is **streamed**: the server answers the coalesced
+//! miss RPC in sub-batch `CHUNK` frames as its shards complete them, and
+//! [`BlockPending::poll_fallback`] surfaces each span's rows the moment its
+//! frame lands — callers consume early fallback rows while later spans are
+//! still in flight, the per-span analogue of reading stage-1 hits under the
+//! outstanding RPC. [`BlockPipeline`] stacks this with **adaptive depth**:
+//! it keeps as many blocks in flight as the live stage1-done/rpc-done
+//! completion gap ([`ServeMetrics::suggested_pipeline_depth`]) says the
+//! network can hide, instead of a hardwired depth.
+//!
 //! Per-row accounting matches the scalar path: a hit's latency is the time
 //! until the stage-1 pass delivered it; a miss's latency is the time until
-//! the fallback RPC delivered it (not an amortized share of one wall
-//! clock); the coalesced RPC's wire bytes are those of ONE k-row frame,
-//! split across the k missed rows.
+//! the fallback delivered **its span** (streamed spans complete at their
+//! chunk's arrival, monolithic responses at the response's — never an
+//! amortized share of one wall clock); the coalesced RPC's wire bytes are
+//! the ACTUAL frames moved (one k-row request plus the response frames,
+//! chunked or not), split across the k missed rows.
 
 use crate::lrwbins::{BlockScratch, ServingTables};
 use crate::rpc::client::PendingPredict;
@@ -223,17 +235,20 @@ impl Coordinator {
         }
     }
 
-    /// Book the completion of a block's `k` misses at `wall` ns — the ONE
-    /// implementation of the Table-3 miss accounting, shared by the RPC
-    /// join ([`BlockPending::wait`]) and the embedded in-process path: per
-    /// miss, second-stage latency/CPU/features plus an even byte split of
-    /// the single coalesced frame (remainder on the first), and the
-    /// per-block rpc-complete timestamp.
-    fn record_miss_completion(&self, k: usize, wall: u64, cpu_share: u64, total_bytes: u64) {
+    /// Book the completion of a block's misses, one wall clock per miss row
+    /// — the ONE implementation of the Table-3 miss accounting, shared by
+    /// the RPC join ([`BlockPending::wait`]) and the embedded in-process
+    /// path: per miss, second-stage latency/CPU/features plus an even byte
+    /// split of the coalesced traffic (remainder on the first row), and the
+    /// per-block rpc-complete timestamp (the LAST row's completion — the
+    /// block is done when its slowest span is).
+    fn record_miss_rows(&self, walls: &[u64], cpu_share: u64, total_bytes: u64) {
+        let k = walls.len();
         debug_assert!(k > 0);
         let byte_share = total_bytes / k as u64;
         let byte_rem = total_bytes % k as u64;
-        for j in 0..k {
+        let mut max_wall = 0u64;
+        for (j, &wall) in walls.iter().enumerate() {
             self.metrics.hit_rpc(
                 wall,
                 cpu_share,
@@ -241,8 +256,15 @@ impl Coordinator {
                 byte_share + if j == 0 { byte_rem } else { 0 },
             );
             self.metrics.e2e.record(wall);
+            max_wall = max_wall.max(wall);
         }
-        self.metrics.block_rpc_complete.record(wall);
+        self.metrics.block_rpc_complete.record(max_wall);
+    }
+
+    /// Uniform-wall shorthand for [`Coordinator::record_miss_rows`] (the
+    /// embedded path, where all misses complete together in-process).
+    fn record_miss_completion(&self, k: usize, wall: u64, cpu_share: u64, total_bytes: u64) {
+        self.record_miss_rows(&vec![wall; k], cpu_share, total_bytes);
     }
 
     /// Serve one inference. Returns `(probability, stage)`.
@@ -514,9 +536,9 @@ impl Coordinator {
             rpc,
             t0,
             miss_cpu_base,
+            span_walls: Vec::new(),
         })
     }
-
 }
 
 fn no_second_stage() -> std::io::Error {
@@ -533,7 +555,9 @@ fn no_second_stage() -> std::io::Error {
 /// response) and recycles the gather buffers.
 pub struct BlockPending<'a> {
     coord: &'a Coordinator,
-    /// Per-row results; missed rows hold a placeholder until `wait`.
+    /// Per-row results; missed rows hold a placeholder until `wait` (or
+    /// their span's [`BlockPending::poll_fallback`] delivery, whichever
+    /// comes first).
     out: Vec<(f32, Served)>,
     miss_idx: Vec<usize>,
     miss_rows: Vec<f32>,
@@ -541,6 +565,9 @@ pub struct BlockPending<'a> {
     t0: Instant,
     /// Per-miss CPU share accrued before the RPC wait.
     miss_cpu_base: u64,
+    /// Streamed-span completions drained so far: `(miss-order start, len,
+    /// wall ns since t0)` — the per-row walls `wait` books.
+    span_walls: Vec<(usize, usize, u64)>,
 }
 
 impl BlockPending<'_> {
@@ -571,29 +598,146 @@ impl BlockPending<'_> {
             .map(|(i, (p, _))| (i, *p))
     }
 
+    /// Drain — without blocking — any fallback sub-spans the streamed miss
+    /// RPC has delivered so far: each newly completed row is written into
+    /// the pending results and returned as `(block_row_index, prob)`, so
+    /// callers consume early fallback rows while later spans are still on
+    /// the wire. Empty when nothing new arrived, the fallback is embedded
+    /// or monolithic, or there were no misses. A failed span is recorded
+    /// (telemetry) but surfaces as the block's error at
+    /// [`BlockPending::wait`], exactly like the monolithic path.
+    pub fn poll_fallback(&mut self) -> Vec<(usize, f32)> {
+        let Some(rpc) = self.rpc.as_mut() else {
+            return Vec::new();
+        };
+        let mut ready = Vec::new();
+        for s in rpc.poll_spans() {
+            let wall = s.arrived.saturating_duration_since(self.t0).as_nanos() as u64;
+            self.coord
+                .metrics
+                .stream_chunks
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.coord.metrics.block_span_complete.record(wall);
+            self.span_walls.push((s.span.start, s.span.len(), wall));
+            if s.failed {
+                continue;
+            }
+            for (k, &p) in s.probs.iter().enumerate() {
+                let i = self.miss_idx[s.span.start + k];
+                self.out[i].0 = p;
+                ready.push((i, p));
+            }
+        }
+        ready
+    }
+
     /// Join the fallback RPC and return the complete per-row results,
     /// bit-identical to [`Coordinator::predict_block`]. Missed rows are
-    /// accounted here: their latency runs from block arrival to RPC
-    /// completion (the scalar path's semantics), and the coalesced frame's
-    /// wire bytes — ONE frame of k rows — are split across the k rows.
+    /// accounted here: each row's latency runs from block arrival to the
+    /// arrival of the frame that delivered IT — its chunk when the server
+    /// streamed, the response otherwise (the scalar path's semantics, never
+    /// an amortized share of one wall clock) — and the coalesced traffic's
+    /// ACTUAL wire bytes (request + response frames, chunked or not) are
+    /// split across the k rows.
     pub fn wait(mut self) -> std::io::Result<Vec<(f32, Served)>> {
         if let Some(rpc) = self.rpc.take() {
             let cpu = CpuTimer::start();
             let k = self.miss_idx.len();
-            // The response's ARRIVAL instant is the miss rows' completion
-            // time: a pipelined caller joins late, and that slack is the
-            // overlap win — it must not be booked back into miss latency.
-            let (probs, arrived) = rpc.wait_timed()?;
-            debug_assert_eq!(probs.len(), k);
-            let wall = arrived.saturating_duration_since(self.t0).as_nanos() as u64;
-            let cpu_share = self.miss_cpu_base + cpu.elapsed_ns() / k as u64;
-            for (j, &i) in self.miss_idx.iter().enumerate() {
-                self.out[i].0 = probs[j];
+            // Frame ARRIVAL instants are the miss rows' completion times: a
+            // pipelined caller joins late, and that slack is the overlap
+            // win — it must not be booked back into miss latency.
+            let outcome = rpc.wait_outcome()?;
+            debug_assert_eq!(outcome.probs.len(), k);
+            if outcome.retried {
+                // Spans polled off the aborted first attempt belong to a
+                // dead stream: the delivered probabilities are the fresh
+                // attempt's, so only ITS span arrivals (below) may shape
+                // the per-row walls.
+                self.span_walls.clear();
             }
+            // Spans that streamed in during the join (not drained earlier
+            // by poll_fallback).
+            for (span, at, _failed) in &outcome.spans {
+                let wall = at.saturating_duration_since(self.t0).as_nanos() as u64;
+                self.coord
+                    .metrics
+                    .stream_chunks
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.coord.metrics.block_span_complete.record(wall);
+                self.span_walls.push((span.start, span.len(), wall));
+            }
+            let final_wall = outcome
+                .arrived
+                .saturating_duration_since(self.t0)
+                .as_nanos() as u64;
+            for (j, &i) in self.miss_idx.iter().enumerate() {
+                self.out[i].0 = outcome.probs[j];
+            }
+            // Per-row walls: streamed rows completed at their span's
+            // arrival; anything else (monolithic) at the terminal frame's.
+            let mut walls = vec![final_wall; k];
+            for &(start, len, wall) in &self.span_walls {
+                walls[start..start + len].fill(wall);
+            }
+            let cpu_share = self.miss_cpu_base + cpu.elapsed_ns() / k as u64;
             self.coord
-                .record_miss_completion(k, wall, cpu_share, self.coord.miss_wire_bytes(k));
+                .record_miss_rows(&walls, cpu_share, outcome.req_bytes + outcome.resp_bytes);
         }
         Ok(std::mem::take(&mut self.out))
+    }
+}
+
+/// Adaptive-depth block pipeline (ROADMAP "adaptive pipeline depth"): keeps
+/// up to [`ServeMetrics::suggested_pipeline_depth`] blocks in flight —
+/// re-evaluated live per submission from the stage1-done/rpc-done
+/// completion gap — instead of a hardwired depth. With a fast (or embedded)
+/// fallback the window collapses to 1 and the pipeline degenerates to the
+/// synchronous path; with a slow network hop it widens to 4.
+///
+/// [`ServeMetrics::suggested_pipeline_depth`]:
+/// crate::telemetry::ServeMetrics::suggested_pipeline_depth
+pub struct BlockPipeline<'a> {
+    coord: &'a Coordinator,
+    pending: std::collections::VecDeque<BlockPending<'a>>,
+}
+
+impl<'a> BlockPipeline<'a> {
+    pub fn new(coord: &'a Coordinator) -> BlockPipeline<'a> {
+        BlockPipeline {
+            coord,
+            pending: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// The overlap window currently in force (live, metrics-driven).
+    pub fn depth(&self) -> usize {
+        self.coord.metrics.suggested_pipeline_depth()
+    }
+
+    /// Blocks currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Submit one block; returns the results of any blocks that fell out of
+    /// the live overlap window (possibly none), oldest first, each
+    /// bit-identical to its synchronous [`Coordinator::predict_block`].
+    pub fn submit(&mut self, block: &RowBlock) -> std::io::Result<Vec<Vec<(f32, Served)>>> {
+        self.pending.push_back(self.coord.predict_block_async(block)?);
+        let mut done = Vec::new();
+        while self.pending.len() > self.depth() {
+            done.push(self.pending.pop_front().expect("non-empty").wait()?);
+        }
+        Ok(done)
+    }
+
+    /// Join every block still in flight, oldest first.
+    pub fn finish(mut self) -> std::io::Result<Vec<Vec<(f32, Served)>>> {
+        let mut done = Vec::new();
+        while let Some(p) = self.pending.pop_front() {
+            done.push(p.wait()?);
+        }
+        Ok(done)
     }
 }
 
@@ -658,6 +802,45 @@ mod tests {
 
     fn setup() -> (crate::tabular::Dataset, Coordinator, RpcServer) {
         setup_with_netsim(NetSimConfig::off())
+    }
+
+    /// Like `setup`, but the server's shard pool splits at 8-row tasks so
+    /// block-sized miss RPCs really stream in several chunks.
+    fn setup_streaming() -> (crate::tabular::Dataset, Coordinator, RpcServer) {
+        let spec = datagen::preset("aci").unwrap().with_rows(4000);
+        let data = datagen::generate(&spec, 5);
+        let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+        let mut first = LrwBinsModel::train(
+            &data,
+            &ranking.order,
+            &LrwBinsParams {
+                b: 2,
+                n_bin_features: 3,
+                n_infer_features: 6,
+                ..Default::default()
+            },
+        );
+        let route: std::collections::HashSet<u32> =
+            first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+        first.set_route(route);
+        let second = crate::gbdt::train(&data, &crate::gbdt::GbdtParams::quick());
+        let pool = Arc::new(ShardPool::with_config(crate::runtime::ShardPoolConfig {
+            n_shards: 4,
+            min_task_rows: 8,
+            ..Default::default()
+        }));
+        let metrics = Arc::new(ServeMetrics::new());
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(crate::rpc::server::NativeBackend::with_pool(second, pool)),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig::default(),
+            metrics.clone(),
+        )
+        .unwrap();
+        let client = RpcClient::connect(server.addr).unwrap();
+        let coord = Coordinator::new(ServingTables::from_model(&first), Some(client), 0, metrics);
+        (data, coord, server)
     }
 
     /// A deterministic "datacenter hop": every injected delay is exactly
@@ -893,6 +1076,107 @@ mod tests {
         // Whole-ns per-feature costs are unchanged by the f64 total.
         let g = FetchSim { per_feature_us: 2.0 };
         assert_eq!(g.duration(3), Duration::from_nanos(6000));
+    }
+
+    /// Tentpole acceptance, coordinator level: the streamed fallback's rows
+    /// are consumable span by span through `poll_fallback`, and the joined
+    /// block stays bit-identical to the synchronous path.
+    #[test]
+    fn streamed_fallback_polls_spans_and_stays_bit_identical() {
+        let (data, mut coord, _server) = setup_streaming();
+        // Every row misses: the coalesced RPC carries the whole block, big
+        // enough for the server's 8-row-task pool to chunk it.
+        coord.mode = Mode::AlwaysRpc;
+        let rows: Vec<Vec<f32>> = (0..256).map(|r| data.row(r)).collect();
+        let block = crate::tabular::RowBlock::from_rows(&rows);
+        let sync: Vec<(u32, Served)> = coord
+            .predict_block(&block)
+            .unwrap()
+            .into_iter()
+            .map(|(p, s)| (p.to_bits(), s))
+            .collect();
+
+        coord.metrics.reset_all();
+        let mut pending = coord.predict_block_async(&block).unwrap();
+        assert_eq!(pending.n_misses(), 256);
+        let t0 = Instant::now();
+        let mut polled: Vec<(usize, f32)> = Vec::new();
+        while polled.len() < 256 {
+            let before = polled.len();
+            polled.extend(pending.poll_fallback());
+            assert!(t0.elapsed() < Duration::from_secs(10), "stream stalled");
+            if polled.len() == before {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        }
+        // Every row arrived exactly once through the polls...
+        let mut seen = vec![false; 256];
+        for &(i, p) in &polled {
+            assert!(!seen[i], "row {i} delivered twice");
+            seen[i] = true;
+            assert_eq!(p.to_bits(), sync[i].0, "row {i}: polled != sync");
+        }
+        // ...and the join returns the identical complete block.
+        let full = pending.wait().unwrap();
+        for i in 0..256 {
+            assert_eq!(full[i].0.to_bits(), sync[i].0, "row {i}");
+            assert_eq!(full[i].1, sync[i].1, "row {i}");
+        }
+        // Telemetry saw the chunks: several spans, recorded per arrival.
+        let chunks = coord
+            .metrics
+            .stream_chunks
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(chunks >= 2, "expected a chunked stream, saw {chunks}");
+        assert_eq!(coord.metrics.block_span_complete.count(), chunks);
+    }
+
+    #[test]
+    fn block_pipeline_adapts_depth_and_stays_bit_identical() {
+        let (data, coord, _server) = setup_with_netsim(fixed_hop_ms(20));
+        let blocks: Vec<crate::tabular::RowBlock> = (0..8)
+            .map(|b| {
+                let rows: Vec<Vec<f32>> =
+                    (b * 32..b * 32 + 64).map(|r| data.row(r)).collect();
+                crate::tabular::RowBlock::from_rows(&rows)
+            })
+            .collect();
+        // Sync references (also the reason fresh metrics aren't empty when
+        // the pipeline starts — depth adapts from live history).
+        coord.metrics.reset_all();
+        let mut pipe = BlockPipeline::new(&coord);
+        assert_eq!(pipe.depth(), 1, "no completion history yet: depth 1");
+        let sync: Vec<Vec<(u32, Served)>> = blocks
+            .iter()
+            .map(|b| {
+                coord
+                    .predict_block(b)
+                    .unwrap()
+                    .into_iter()
+                    .map(|(p, s)| (p.to_bits(), s))
+                    .collect()
+            })
+            .collect();
+        // A 20ms hop each way dwarfs the stage-1 pass: the live gap must
+        // open the window wide.
+        assert_eq!(pipe.depth(), 4, "40ms RPCs over µs stage-1 saturate the cap");
+
+        let mut results = Vec::new();
+        let mut max_in_flight = 0;
+        for b in &blocks {
+            results.extend(pipe.submit(b).unwrap());
+            max_in_flight = max_in_flight.max(pipe.in_flight());
+        }
+        results.extend(pipe.finish().unwrap());
+        assert!(max_in_flight >= 2, "adaptive window never opened: {max_in_flight}");
+        assert_eq!(results.len(), blocks.len());
+        for (bi, (got, want)) in results.iter().zip(&sync).enumerate() {
+            assert_eq!(got.len(), want.len());
+            for i in 0..got.len() {
+                assert_eq!(got[i].0.to_bits(), want[i].0, "block {bi} row {i}");
+                assert_eq!(got[i].1, want[i].1, "block {bi} row {i}");
+            }
+        }
     }
 
     #[test]

@@ -74,6 +74,7 @@ impl StackConfig {
                 max_batch: sc.max_batch,
                 max_wait: Duration::from_micros(sc.max_wait_us),
                 workers: sc.workers,
+                ..Default::default()
             },
             artifacts_dir: sc.artifacts_dir.clone(),
             ..Default::default()

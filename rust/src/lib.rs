@@ -19,11 +19,19 @@
 //! Second-stage (GBDT) predictions execute on the persistent
 //! **shard-per-core engine** [`runtime::ShardPool`]: one long-lived worker
 //! thread per shard, each owning its own [`gbdt::FlatForest`] replica and
-//! scratch, fed by a bounded lock-free MPMC queue — no per-request or
+//! scratch, fed by per-shard bounded lock-free MPMC rings with
+//! **work-stealing** — an idle shard pops a hot neighbor's ring, splitting
+//! big spans in half (adaptive task granularity from live occupancy), so a
+//! straggler shard no longer gates a block's tail. No per-request or
 //! per-batch thread churn. Two deployment shapes share the engine:
 //!
 //! * **RPC service** — [`rpc::server::NativeBackend`] splits every batch
-//!   into per-shard sub-ranges and awaits completion; a panicking shard
+//!   into sub-range tasks and **streams**: each completed sub-range leaves
+//!   the server immediately as a `CHUNK` frame (terminator carries the
+//!   chunk count; a poisoned sub-range error-frames only its span), the
+//!   pipelined client reassembles bit-identically and surfaces spans
+//!   incrementally ([`rpc::client::PendingPredict::poll_spans`],
+//!   [`coordinator::BlockPending::poll_fallback`]). A panicking shard
 //!   degrades to error frames for its sub-batch only.
 //! * **Embedded multi-tenant** — several [`coordinator::Coordinator`]s
 //!   (tenants), each with their own stage-1 tables and second-stage model,
@@ -32,6 +40,12 @@
 //!   [`coordinator::Coordinator::new_embedded`]) and fall back to it
 //!   in-process instead of over RPC: per-shard replicas are materialized
 //!   lazily per model, so co-tenants share cores without sharing hot state.
+//!
+//! Block serving overlaps stages end to end: stage-1 hits are readable
+//! while the coalesced miss RPC is in flight, fallback spans are consumable
+//! as their chunks land, and [`coordinator::BlockPipeline`] keeps as many
+//! blocks outstanding as the live stage1-done/rpc-done completion gap
+//! warrants (adaptive depth 1–4).
 //!
 //! See DESIGN.md for the full system inventory and experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.

@@ -15,6 +15,21 @@
 //! blocks for the demuxed response. [`RpcClient::predict`] is the blocking
 //! composition of the two.
 //!
+//! ## Streamed responses
+//!
+//! The server may answer a request as a **stream** of `CHUNK` frames (one
+//! per completed sub-batch, any order) closed by a terminator — see
+//! `proto`. The reader thread routes chunks to the request's pending entry
+//! without retiring it; [`PendingPredict::poll_spans`] drains whatever
+//! sub-spans have arrived so far — fallback rows become consumable while
+//! later spans are still in flight — and [`PendingPredict::wait`]
+//! reassembles the full response ([`proto::StreamAssembler`]),
+//! bit-identical to a monolithic answer. A failed span mid-stream surfaces
+//! from `wait` as the request's error, exactly like a whole-request error
+//! frame (the span data remains visible through
+//! [`PendingPredict::wait_outcome`]). Callers that never poll see no
+//! difference between a streamed and a monolithic response.
+//!
 //! ## Failure handling
 //!
 //! A pooled connection can go stale between calls (server restarted, idle
@@ -40,10 +55,11 @@
 //! its own admission queue — grow with every pipelined call that outruns
 //! the responses.
 
-use super::proto::{self, Request, Response};
+use super::proto::{self, ClientFrame, Request};
 use std::collections::HashMap;
 use std::io;
 use std::net::{SocketAddr, TcpStream};
+use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
@@ -61,10 +77,12 @@ const POOL_CONNS: usize = 4;
 /// timeout.
 pub const DEFAULT_MAX_IN_FLIGHT: usize = 64;
 
-/// Responses carry the instant their frame arrived at the client: metrics
-/// want completion time, which is earlier than the caller's join when the
-/// caller overlaps other work before waiting.
-type ReplyTx = mpsc::Sender<io::Result<(Response, Instant)>>;
+/// Frames carry the instant they arrived at the client: metrics want
+/// completion time, which is earlier than the caller's join when the
+/// caller overlaps other work before waiting. A request receives several
+/// frames when the server streams (chunks, then the terminator).
+type ReplyTx = mpsc::Sender<io::Result<(ClientFrame, Instant)>>;
+type ReplyRx = mpsc::Receiver<io::Result<(ClientFrame, Instant)>>;
 
 /// One pipelined connection: a writer half shared by callers (frames are
 /// written whole under the lock) and a reader thread that routes response
@@ -119,17 +137,30 @@ impl Conn {
     }
 }
 
-/// Reader loop: demultiplex response frames until the connection dies.
-/// Any read failure (including an idle timeout) retires the connection —
-/// in-flight callers get a transport error and retry on a fresh dial.
+/// Reader loop: demultiplex frames until the connection dies. Terminal
+/// frames (monolithic/error responses, stream terminators) retire the
+/// pending entry — freeing its in-flight slot; mid-stream chunks route to
+/// the entry without retiring it. Any read failure (including an idle
+/// timeout) retires the connection — in-flight callers get a transport
+/// error and retry on a fresh dial.
 fn reader_loop(conn: Arc<Conn>, mut stream: TcpStream) {
     loop {
-        match proto::read_response(&mut stream) {
-            Ok(Some(resp)) => {
-                // Unknown ids are responses to abandoned (timed-out)
-                // requests; dropping them keeps the stream in sync.
-                if let Some(tx) = conn.release(resp.req_id) {
-                    let _ = tx.send(Ok((resp, Instant::now())));
+        match proto::read_client_frame(&mut stream) {
+            Ok(Some(frame)) => {
+                let req_id = frame.req_id();
+                if frame.is_terminal() {
+                    // Unknown ids are responses to abandoned (timed-out)
+                    // requests; dropping them keeps the stream in sync.
+                    if let Some(tx) = conn.release(req_id) {
+                        let _ = tx.send(Ok((frame, Instant::now())));
+                    }
+                } else {
+                    // Chunks for abandoned requests are dropped the same
+                    // way; their stream's terminator cleans up the slot.
+                    let pending = conn.lock_pending();
+                    if let Some(tx) = pending.get(&req_id) {
+                        let _ = tx.send(Ok((frame, Instant::now())));
+                    }
                 }
             }
             Ok(None) => {
@@ -155,8 +186,39 @@ pub struct RpcClient {
     max_in_flight: usize,
 }
 
+/// One streamed fallback sub-span drained by [`PendingPredict::poll_spans`]:
+/// the request-row range it covers, its probabilities (empty when the span
+/// failed server-side), and the instant its frame arrived.
+pub struct FallbackSpan {
+    pub span: Range<usize>,
+    pub probs: Vec<f32>,
+    pub failed: bool,
+    pub arrived: Instant,
+}
+
+/// Everything a completed call yields beyond the probabilities: the
+/// completion instant, per-span arrival metadata (streamed responses only —
+/// spans already drained by `poll_spans` are excluded), and the actual
+/// request/response wire bytes moved (streamed responses carry per-chunk
+/// frame overhead the up-front estimate cannot know).
+pub struct StreamOutcome {
+    pub probs: Vec<f32>,
+    /// Arrival instant of the terminal frame — the request's completion.
+    pub arrived: Instant,
+    /// `(span, arrival, failed)` for chunks drained during the final join.
+    pub spans: Vec<(Range<usize>, Instant, bool)>,
+    pub req_bytes: u64,
+    pub resp_bytes: u64,
+    /// The first attempt died on a stale pooled connection and this
+    /// outcome comes from the fresh-dial retry. Spans a caller drained
+    /// from the FIRST attempt belong to an aborted stream and must be
+    /// discarded in favor of `spans`; byte counts here already include
+    /// both attempts' traffic.
+    pub retried: bool,
+}
+
 /// An in-flight [`RpcClient::predict_async`] call. Dropping it abandons the
-/// request (a late response is discarded by the reader thread).
+/// request (late frames are discarded by the reader thread).
 pub struct PendingPredict<'a> {
     client: &'a RpcClient,
     conn: Arc<Conn>,
@@ -164,14 +226,68 @@ pub struct PendingPredict<'a> {
     /// stale-pool artifact and must not be retried).
     fresh: bool,
     req: Request,
-    rx: mpsc::Receiver<io::Result<(Response, Instant)>>,
+    rx: ReplyRx,
     n_rows: usize,
+    /// Streamed-chunk reassembly state (None until the first chunk).
+    asm: Option<proto::StreamAssembler>,
+    /// Response-side wire bytes consumed so far.
+    resp_bytes: u64,
+    /// Terminal frame drained early by `poll_spans`, replayed by the join.
+    terminal: Option<(ClientFrame, Instant)>,
+    /// Fatal error discovered by `poll_spans`, replayed by the join.
+    early_err: Option<io::Error>,
 }
 
 impl PendingPredict<'_> {
     /// Rows this call asked the service to score.
     pub fn n_rows(&self) -> usize {
         self.n_rows
+    }
+
+    /// Wire bytes of the request frame this call sent.
+    pub fn req_wire_bytes(&self) -> u64 {
+        self.req.wire_size() as u64
+    }
+
+    /// Drain — without blocking — any streamed sub-spans that have arrived
+    /// since the last poll: fallback rows become consumable while later
+    /// spans are still on the wire. Returns an empty vec when nothing new
+    /// arrived, the response is monolithic, or the stream has ended (call
+    /// [`PendingPredict::wait`] to join). Failed spans are reported here
+    /// with `failed = true` and surface again as the request's error at the
+    /// join.
+    pub fn poll_spans(&mut self) -> Vec<FallbackSpan> {
+        let mut out = Vec::new();
+        if self.terminal.is_some() || self.early_err.is_some() {
+            return out;
+        }
+        while let Ok(msg) = self.rx.try_recv() {
+            match msg {
+                Ok((ClientFrame::Chunk(c), arrived)) => {
+                    self.resp_bytes += c.wire_size() as u64;
+                    let asm = self
+                        .asm
+                        .get_or_insert_with(|| proto::StreamAssembler::new(self.n_rows));
+                    let span = c.span();
+                    let failed = c.failed;
+                    if let Err(e) = asm.push(&c) {
+                        self.early_err = Some(e);
+                        break;
+                    }
+                    out.push(FallbackSpan { span, probs: c.probs, failed, arrived });
+                }
+                Ok(terminal) => {
+                    // Bytes are booked when the join consumes it.
+                    self.terminal = Some(terminal);
+                    break;
+                }
+                Err(e) => {
+                    self.early_err = Some(e);
+                    break;
+                }
+            }
+        }
+        out
     }
 
     /// Block for the response. Retries exactly once on a fresh dial when a
@@ -181,15 +297,167 @@ impl PendingPredict<'_> {
     }
 
     /// Like [`PendingPredict::wait`], also returning the instant the
-    /// response frame arrived at the client — completion time for latency
+    /// terminal frame arrived at the client — completion time for latency
     /// accounting, which precedes the join when the caller overlapped
     /// other work before waiting.
     pub fn wait_timed(self) -> io::Result<(Vec<f32>, Instant)> {
-        match recv_result(self.client, &self.conn, &self.req, &self.rx, self.n_rows) {
+        self.wait_outcome().map(|o| (o.probs, o.arrived))
+    }
+
+    /// Full join: probabilities plus the accounting metadata (per-span
+    /// arrivals, actual wire bytes). Errors if the server failed the
+    /// request OR any streamed span — span-level detail for the error case
+    /// is visible through [`PendingPredict::poll_spans`] before the join.
+    pub fn wait_outcome(mut self) -> io::Result<StreamOutcome> {
+        match self.drive() {
             Err(e) if !self.fresh && stale_connection_error(&e) => {
-                self.client.call_on_fresh(&self.req, self.n_rows)
+                let mut o = self.client.call_on_fresh(&self.req, self.n_rows)?;
+                // The aborted first attempt's traffic really crossed the
+                // wire: fold its request frame and partial chunks into the
+                // byte accounting, and flag the retry so callers discard
+                // any spans they drained from the dead stream.
+                o.req_bytes += self.req.wire_size() as u64;
+                o.resp_bytes += self.resp_bytes;
+                o.retried = true;
+                Ok(o)
             }
             other => other,
+        }
+    }
+
+    /// Abandon the request and retire the (possibly wedged) connection.
+    fn abandon(&self) {
+        self.conn.lock_pending().remove(&self.req.req_id);
+        self.conn.retire();
+    }
+
+    /// Drive this call to its terminal frame — no retry policy here.
+    fn drive(&mut self) -> io::Result<StreamOutcome> {
+        if let Some(e) = self.early_err.take() {
+            if stale_connection_error(&e) {
+                return Err(e); // transport failure: entry already drained
+            }
+            self.abandon();
+            return Err(e);
+        }
+        let mut spans: Vec<(Range<usize>, Instant, bool)> = Vec::new();
+        loop {
+            let (frame, arrived) = match self.terminal.take() {
+                Some(t) => t,
+                None => match self.rx.recv_timeout(self.client.timeout) {
+                    Ok(Ok(pair)) => pair,
+                    Ok(Err(e)) => return Err(e),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        // Reader thread vanished without answering
+                        // (shutdown race).
+                        return Err(io::Error::new(
+                            io::ErrorKind::BrokenPipe,
+                            "connection reader gone",
+                        ));
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // The deadline is already spent; `retire` wakes
+                        // every capped sender — no response frees slots now.
+                        self.abandon();
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "rpc response timed out",
+                        ));
+                    }
+                },
+            };
+            self.resp_bytes += frame.wire_size();
+            match frame {
+                ClientFrame::Chunk(c) => {
+                    let asm = self
+                        .asm
+                        .get_or_insert_with(|| proto::StreamAssembler::new(self.n_rows));
+                    let span = c.span();
+                    let failed = c.failed;
+                    if let Err(e) = asm.push(&c) {
+                        self.abandon();
+                        return Err(e);
+                    }
+                    spans.push((span, arrived, failed));
+                }
+                ClientFrame::StreamEnd { req_id, n_chunks } => {
+                    debug_assert_eq!(req_id, self.req.req_id, "demux invariant");
+                    let asm = self
+                        .asm
+                        .take()
+                        .unwrap_or_else(|| proto::StreamAssembler::new(self.n_rows));
+                    let (probs, failed) = match asm.finish(n_chunks) {
+                        Ok(ok) => ok,
+                        Err(e) => {
+                            // Entry already retired by the terminal frame;
+                            // the connection itself lost protocol sync.
+                            self.conn.retire();
+                            return Err(e);
+                        }
+                    };
+                    if !failed.is_empty() {
+                        return Err(io::Error::other(format!(
+                            "server failed {} sub-span(s) of the streamed response",
+                            failed.len()
+                        )));
+                    }
+                    if probs.len() != self.n_rows {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!("expected {} probabilities, got {}", self.n_rows, probs.len()),
+                        ));
+                    }
+                    return Ok(StreamOutcome {
+                        probs,
+                        arrived,
+                        spans,
+                        req_bytes: self.req.wire_size() as u64,
+                        resp_bytes: self.resp_bytes,
+                        retried: false,
+                    });
+                }
+                ClientFrame::Response(resp) => {
+                    if resp.req_id != self.req.req_id {
+                        // The demux table makes this unreachable; keep the
+                        // invariant hard.
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            "response id mismatch",
+                        ));
+                    }
+                    if resp.error {
+                        // A live answer from a healthy connection — final,
+                        // whether or not chunks preceded it (a panicking
+                        // streamed backend error-frames the whole request).
+                        return Err(io::Error::other("server reported a backend failure"));
+                    }
+                    if self.asm.is_some() {
+                        self.conn.retire();
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            "monolithic response arrived mid-stream",
+                        ));
+                    }
+                    if resp.probs.len() != self.n_rows {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!(
+                                "expected {} probabilities, got {}",
+                                self.n_rows,
+                                resp.probs.len()
+                            ),
+                        ));
+                    }
+                    return Ok(StreamOutcome {
+                        probs: resp.probs,
+                        arrived,
+                        spans,
+                        req_bytes: self.req.wire_size() as u64,
+                        resp_bytes: self.resp_bytes,
+                        retried: false,
+                    });
+                }
+            }
         }
     }
 }
@@ -207,50 +475,6 @@ fn stale_connection_error(e: &io::Error) -> bool {
             | io::ErrorKind::BrokenPipe
             | io::ErrorKind::NotConnected
     )
-}
-
-/// One receive attempt for `req` on `conn` — no retry policy here.
-fn recv_result(
-    client: &RpcClient,
-    conn: &Conn,
-    req: &Request,
-    rx: &mpsc::Receiver<io::Result<(Response, Instant)>>,
-    n_rows: usize,
-) -> io::Result<(Vec<f32>, Instant)> {
-    match rx.recv_timeout(client.timeout) {
-        Ok(Ok((resp, arrived))) => finish(req, n_rows, resp).map(|probs| (probs, arrived)),
-        Ok(Err(e)) => Err(e),
-        Err(mpsc::RecvTimeoutError::Disconnected) => {
-            // Reader thread vanished without answering (shutdown race).
-            Err(io::Error::new(io::ErrorKind::BrokenPipe, "connection reader gone"))
-        }
-        Err(mpsc::RecvTimeoutError::Timeout) => {
-            // Abandon the request and retire the (possibly wedged)
-            // connection; the deadline is already spent. `retire` wakes
-            // every capped sender — no response will free slots now.
-            conn.lock_pending().remove(&req.req_id);
-            conn.retire();
-            Err(io::Error::new(io::ErrorKind::TimedOut, "rpc response timed out"))
-        }
-    }
-}
-
-/// Map a decoded response to the caller-visible result.
-fn finish(req: &Request, n_rows: usize, resp: Response) -> io::Result<Vec<f32>> {
-    if resp.req_id != req.req_id {
-        // The demux table makes this unreachable; keep the invariant hard.
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "response id mismatch"));
-    }
-    if resp.error {
-        return Err(io::Error::other("server reported a backend failure"));
-    }
-    if resp.probs.len() != n_rows {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            format!("expected {n_rows} probabilities, got {}", resp.probs.len()),
-        ));
-    }
-    Ok(resp.probs)
 }
 
 impl RpcClient {
@@ -333,12 +557,7 @@ impl RpcClient {
     /// Blocks while the connection already carries [`RpcClient::max_in_flight`]
     /// unanswered frames (backpressure from a slow server), giving up with
     /// `TimedOut` after the client timeout.
-    fn send_on(
-        &self,
-        conn: &Conn,
-        req: &Request,
-        buf: &[u8],
-    ) -> io::Result<mpsc::Receiver<io::Result<(Response, Instant)>>> {
+    fn send_on(&self, conn: &Conn, req: &Request, buf: &[u8]) -> io::Result<ReplyRx> {
         let (tx, rx) = mpsc::channel();
         {
             let deadline = Instant::now() + self.timeout;
@@ -395,7 +614,7 @@ impl RpcClient {
 
         let (conn, fresh) = self.live_conn()?;
         match self.send_on(&conn, &req, &buf) {
-            Ok(rx) => Ok(PendingPredict { client: self, conn, fresh, req, rx, n_rows }),
+            Ok(rx) => Ok(self.pending(conn, fresh, req, rx, n_rows)),
             // A spent in-flight-cap deadline is final: dialing a fresh
             // connection to dodge the cap would defeat the backpressure.
             Err(e) if fresh || e.kind() == io::ErrorKind::TimedOut => Err(e),
@@ -404,19 +623,42 @@ impl RpcClient {
                 // on a fresh dial.
                 let conn = self.dial_into_pool()?;
                 let rx = self.send_on(&conn, &req, &buf)?;
-                Ok(PendingPredict { client: self, conn, fresh: true, req, rx, n_rows })
+                Ok(self.pending(conn, true, req, rx, n_rows))
             }
+        }
+    }
+
+    fn pending(
+        &self,
+        conn: Arc<Conn>,
+        fresh: bool,
+        req: Request,
+        rx: ReplyRx,
+        n_rows: usize,
+    ) -> PendingPredict<'_> {
+        PendingPredict {
+            client: self,
+            conn,
+            fresh,
+            req,
+            rx,
+            n_rows,
+            asm: None,
+            resp_bytes: 0,
+            terminal: None,
+            early_err: None,
         }
     }
 
     /// One full round trip on a freshly dialed connection (the read-side
     /// retry path — no further retries).
-    fn call_on_fresh(&self, req: &Request, n_rows: usize) -> io::Result<(Vec<f32>, Instant)> {
+    fn call_on_fresh(&self, req: &Request, n_rows: usize) -> io::Result<StreamOutcome> {
         let mut buf = Vec::with_capacity(req.wire_size());
         proto::encode_request(req, &mut buf);
         let conn = self.dial_into_pool()?;
         let rx = self.send_on(&conn, req, &buf)?;
-        recv_result(self, &conn, req, &rx, n_rows)
+        let mut retry = self.pending(conn, true, req.clone(), rx, n_rows);
+        retry.drive()
     }
 
     /// Synchronous batched inference call. `rows.len() = n · row_len`.
@@ -487,6 +729,7 @@ mod tests {
                 max_batch: 64,
                 max_wait: Duration::from_micros(100),
                 workers: 2,
+                stream: true,
             },
             metrics.clone(),
         )
@@ -650,6 +893,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: Duration::ZERO,
                 workers: 1, // one slow lane: responses trail far behind sends
+                stream: true,
             },
             Arc::new(ServeMetrics::new()),
         )
@@ -707,6 +951,154 @@ mod tests {
             CAP * POOL_CONNS
         );
         assert_eq!(client.total_in_flight(), 0, "all slots released");
+    }
+
+    /// Backend that streams 8-row sub-spans front to back with a pause
+    /// between them — deterministic incremental arrival for the client
+    /// tests. Rows whose first value is ≥ 1000 fail their whole span.
+    struct TrickleBackend;
+
+    const TRICKLE_SPAN: usize = 8;
+
+    impl Backend for TrickleBackend {
+        fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+            (0..n).map(|r| rows[r * row_len]).collect()
+        }
+        fn predict_streamed(
+            &self,
+            rows: &[f32],
+            n: usize,
+            row_len: usize,
+            sink: &(dyn Fn(std::ops::Range<usize>, &[f32], bool) + Sync),
+        ) -> bool {
+            if n < 2 * TRICKLE_SPAN {
+                return false;
+            }
+            let mut at = 0;
+            while at < n {
+                let hi = (at + TRICKLE_SPAN).min(n);
+                let probs: Vec<f32> = (at..hi).map(|r| rows[r * row_len]).collect();
+                if probs.iter().any(|&v| v >= 1000.0) {
+                    sink(at..hi, &[], true);
+                } else {
+                    sink(at..hi, &probs, false);
+                }
+                at = hi;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            true
+        }
+        fn row_len(&self) -> usize {
+            0
+        }
+    }
+
+    fn trickle_server() -> RpcServer {
+        RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(TrickleBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig::default(),
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn poll_spans_consumes_fallback_rows_while_stream_in_flight() {
+        let server = trickle_server();
+        let client = RpcClient::connect(server.addr).unwrap();
+        let n = 32; // 4 trickle spans, ~5ms apart
+        let rows: Vec<f32> = (0..n * 2).map(|i| (i / 2) as f32).collect();
+        let mut pending = client.predict_async(&rows, 2).unwrap();
+
+        // Drain incrementally: the FIRST span must be consumable well
+        // before the stream ends (the tail spans are still being slept
+        // out server-side).
+        let t0 = Instant::now();
+        let mut got: Vec<FallbackSpan> = Vec::new();
+        let mut first_at = None;
+        while got.iter().map(|s| s.span.len()).sum::<usize>() < n {
+            for s in pending.poll_spans() {
+                if first_at.is_none() {
+                    first_at = Some(t0.elapsed());
+                }
+                got.push(s);
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "stream stalled");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let first_at = first_at.expect("at least one span");
+        let all_at = t0.elapsed();
+        assert!(
+            first_at < all_at,
+            "first span ({first_at:?}) must beat stream completion ({all_at:?})"
+        );
+        // Spans carry the right rows (prob = first value of the row).
+        got.sort_by_key(|s| s.span.start);
+        for s in &got {
+            assert!(!s.failed);
+            for (k, &p) in s.probs.iter().enumerate() {
+                assert_eq!(p, (s.span.start + k) as f32, "span {:?}", s.span);
+            }
+        }
+        // The join returns the full reassembled response.
+        let probs = pending.wait().unwrap();
+        let expect: Vec<f32> = (0..n).map(|r| r as f32).collect();
+        assert_eq!(probs, expect);
+    }
+
+    #[test]
+    fn streamed_failed_span_errors_the_join_but_polls_good_spans() {
+        let server = trickle_server();
+        let client = RpcClient::connect(server.addr).unwrap();
+        let n = 24; // spans 0..8 ok, 8..16 poisoned, 16..24 ok
+        let mut rows: Vec<f32> = (0..n * 2).map(|i| (i / 2) as f32).collect();
+        rows[10 * 2] = 2000.0;
+        let mut pending = client.predict_async(&rows, 2).unwrap();
+        let t0 = Instant::now();
+        let mut seen = Vec::new();
+        while seen.iter().map(|s: &FallbackSpan| s.span.len()).sum::<usize>() < n {
+            seen.extend(pending.poll_spans());
+            assert!(t0.elapsed() < Duration::from_secs(5), "stream stalled");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        seen.sort_by_key(|s| s.span.start);
+        assert_eq!(seen.len(), 3);
+        assert!(!seen[0].failed && !seen[2].failed);
+        assert!(seen[1].failed, "the poisoned span reports failed");
+        assert!(seen[1].probs.is_empty());
+        // Good spans still delivered their rows...
+        assert_eq!(seen[2].probs[0], 16.0);
+        // ...but the join surfaces the failure, like a whole-request error.
+        assert!(pending.wait().is_err());
+    }
+
+    #[test]
+    fn wait_outcome_reports_streamed_spans_and_actual_bytes() {
+        let server = trickle_server();
+        let client = RpcClient::connect(server.addr).unwrap();
+        let n = 16; // exactly 2 spans
+        let rows: Vec<f32> = (0..n * 2).map(|i| (i / 2) as f32).collect();
+        let pending = client.predict_async(&rows, 2).unwrap();
+        let req_bytes = pending.req_wire_bytes();
+        let outcome = pending.wait_outcome().unwrap();
+        assert_eq!(outcome.probs.len(), n);
+        assert_eq!(outcome.spans.len(), 2, "un-polled spans surface at the join");
+        assert_eq!(outcome.req_bytes, req_bytes);
+        // Actual bytes: 2 chunk frames (header 28 + 8×4 payload) + end (20).
+        let expected_resp = 2 * (4 + 8 + 4 + 4 + 4 + 4 + TRICKLE_SPAN * 4) as u64 + 20;
+        assert_eq!(outcome.resp_bytes, expected_resp);
+        // Monolithic comparison: a tiny request (backend declines to
+        // stream) books exactly the classic estimate.
+        let pending = client.predict_async(&rows[..4 * 2], 2).unwrap();
+        let outcome = pending.wait_outcome().unwrap();
+        assert!(outcome.spans.is_empty());
+        assert_eq!(
+            outcome.req_bytes + outcome.resp_bytes,
+            RpcClient::wire_bytes(4, 2),
+            "monolithic path matches the wire_bytes estimate"
+        );
     }
 
     #[test]

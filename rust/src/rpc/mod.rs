@@ -1,18 +1,21 @@
 //! RPC substrate: the "ML service" the product code calls for second-stage
 //! inference.
 //!
-//! A real TCP service over a length-prefixed binary protocol (`proto`), a
-//! dynamic batcher that coalesces concurrent requests into backend batches
-//! (`server`), a pooled **pipelined** client (`client`) that multiplexes
-//! in-flight requests over shared connections and demultiplexes responses
-//! by `req_id`, and a calibrated network-latency simulator (`netsim`)
-//! standing in for the datacenter hop the paper measures (DESIGN.md §6).
+//! A real TCP service over a length-prefixed binary protocol (`proto`,
+//! including the streamed `CHUNK`/terminator frames), a dynamic batcher
+//! that coalesces concurrent requests into backend batches and **streams**
+//! sub-batch completions back per request (`server`), a pooled
+//! **pipelined** client (`client`) that multiplexes in-flight requests over
+//! shared connections, demultiplexes frames by `req_id`, and surfaces
+//! streamed spans incrementally, and a calibrated network-latency simulator
+//! (`netsim`) standing in for the datacenter hop the paper measures
+//! (DESIGN.md §6).
 
 pub mod client;
 pub mod netsim;
 pub mod proto;
 pub mod server;
 
-pub use client::{PendingPredict, RpcClient};
+pub use client::{FallbackSpan, PendingPredict, RpcClient, StreamOutcome};
 pub use netsim::NetSim;
 pub use server::{Backend, BatcherConfig, RpcServer};

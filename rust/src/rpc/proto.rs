@@ -3,6 +3,9 @@
 //! ```text
 //! request  := u32 payload_len | u64 req_id | u32 n_rows | u32 row_len | f32[n_rows*row_len]
 //! response := u32 payload_len | u64 req_id | u32 n_rows | f32[n_rows]
+//! chunk    := u32 payload_len | u64 req_id | u32 CHUNK | u32 row_start | u32 n_rows
+//!             | u32 status | f32[status == 0 ? n_rows : 0]
+//! end      := u32 payload_len | u64 req_id | u32 STREAM_END | u32 n_chunks
 //! ```
 //!
 //! `row_len` is the padded feature width; probabilities come back one per
@@ -15,13 +18,39 @@
 //! (`u32::MAX`, impossible for a real row count) carries no probabilities
 //! and means the server failed to serve that request (e.g. the backend
 //! panicked); the connection itself stays usable.
+//!
+//! ## Streamed responses
+//!
+//! A request may be answered **monolithically** (one `response` frame) or as
+//! a **stream**: any number of `chunk` frames — each carrying a disjoint
+//! `[row_start, row_start + n_rows)` sub-span of the request's rows — closed
+//! by one `end` frame whose `n_chunks` is the exact chunk count (the
+//! receiver's completeness check). Chunks may arrive in ANY order; the spans
+//! of one stream tile the request's rows exactly once. A chunk whose
+//! `status` field is [`ERROR_SENTINEL`] reports that span as failed
+//! server-side (a poisoned shard) and carries no payload — the other chunks
+//! of the stream still deliver their rows, so a failure is contained to its
+//! sub-batch even mid-stream. The sentinels [`CHUNK_SENTINEL`] /
+//! [`STREAM_END_SENTINEL`] occupy `n_rows` values no real response can take
+//! (`MAX_FRAME` caps genuine row counts far below `u32::MAX - 2`), so a
+//! reader can dispatch on that one field; [`read_client_frame`] does.
+//! [`StreamAssembler`] reassembles a stream order-independently and
+//! bit-identically to the equivalent monolithic response.
 
 use std::io::{Read, Write};
+use std::ops::Range;
 
 pub const MAX_FRAME: usize = 64 << 20;
 
-/// `n_rows` value marking a response as a server-side failure report.
+/// `n_rows` value marking a response as a server-side failure report. Also
+/// the `status` value marking a streamed chunk's span as failed.
 pub const ERROR_SENTINEL: u32 = u32::MAX;
+
+/// `n_rows` value marking a frame as a streamed sub-span chunk.
+pub const CHUNK_SENTINEL: u32 = u32::MAX - 1;
+
+/// `n_rows` value marking a frame as a stream terminator.
+pub const STREAM_END_SENTINEL: u32 = u32::MAX - 2;
 
 /// Inference request.
 #[derive(Clone, Debug, PartialEq)]
@@ -68,6 +97,86 @@ impl Response {
     }
 }
 
+/// One streamed sub-span of a response (see the module docs). `probs` is
+/// empty exactly when `failed` — a failed span reports its extent but
+/// carries no payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Chunk {
+    pub req_id: u64,
+    /// First request row this chunk covers.
+    pub row_start: u32,
+    /// Rows covered (`probs.len()` when served, still the span length when
+    /// failed).
+    pub n_rows: u32,
+    pub failed: bool,
+    pub probs: Vec<f32>,
+}
+
+impl Chunk {
+    pub fn ok(req_id: u64, row_start: usize, probs: Vec<f32>) -> Chunk {
+        Chunk {
+            req_id,
+            row_start: row_start as u32,
+            n_rows: probs.len() as u32,
+            failed: false,
+            probs,
+        }
+    }
+
+    pub fn err(req_id: u64, span: Range<usize>) -> Chunk {
+        Chunk {
+            req_id,
+            row_start: span.start as u32,
+            n_rows: span.len() as u32,
+            failed: true,
+            probs: Vec::new(),
+        }
+    }
+
+    /// The request-row span this chunk covers.
+    pub fn span(&self) -> Range<usize> {
+        self.row_start as usize..self.row_start as usize + self.n_rows as usize
+    }
+
+    pub fn wire_size(&self) -> usize {
+        4 + 8 + 4 + 4 + 4 + 4 + self.probs.len() * 4
+    }
+}
+
+/// Any frame a client can receive on a connection: a monolithic (or error)
+/// response, a streamed chunk, or a stream terminator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientFrame {
+    Response(Response),
+    Chunk(Chunk),
+    StreamEnd { req_id: u64, n_chunks: u32 },
+}
+
+impl ClientFrame {
+    pub fn req_id(&self) -> u64 {
+        match self {
+            ClientFrame::Response(r) => r.req_id,
+            ClientFrame::Chunk(c) => c.req_id,
+            ClientFrame::StreamEnd { req_id, .. } => *req_id,
+        }
+    }
+
+    /// True for the frame kinds that close a request (a monolithic/error
+    /// response or the stream terminator).
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, ClientFrame::Chunk(_))
+    }
+
+    /// Bytes this frame occupies on the wire (length prefix included).
+    pub fn wire_size(&self) -> u64 {
+        (match self {
+            ClientFrame::Response(r) => r.wire_size(),
+            ClientFrame::Chunk(c) => c.wire_size(),
+            ClientFrame::StreamEnd { .. } => 4 + 8 + 4 + 4,
+        }) as u64
+    }
+}
+
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
@@ -105,6 +214,32 @@ pub fn encode_response(r: &Response, buf: &mut Vec<u8>) {
     for v in &r.probs {
         buf.extend_from_slice(&v.to_le_bytes());
     }
+}
+
+/// Encode a streamed chunk frame.
+pub fn encode_chunk(c: &Chunk, buf: &mut Vec<u8>) {
+    buf.clear();
+    debug_assert!(!c.failed || c.probs.is_empty(), "failed chunks carry no payload");
+    debug_assert!(c.failed || c.probs.len() == c.n_rows as usize);
+    let payload = 8 + 4 + 4 + 4 + 4 + c.probs.len() * 4;
+    put_u32(buf, payload as u32);
+    put_u64(buf, c.req_id);
+    put_u32(buf, CHUNK_SENTINEL);
+    put_u32(buf, c.row_start);
+    put_u32(buf, c.n_rows);
+    put_u32(buf, if c.failed { ERROR_SENTINEL } else { 0 });
+    for v in &c.probs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a stream-terminator frame.
+pub fn encode_stream_end(req_id: u64, n_chunks: u32, buf: &mut Vec<u8>) {
+    buf.clear();
+    put_u32(buf, 8 + 4 + 4);
+    put_u64(buf, req_id);
+    put_u32(buf, STREAM_END_SENTINEL);
+    put_u32(buf, n_chunks);
 }
 
 fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<bool> {
@@ -223,18 +358,29 @@ pub fn read_request(stream: &mut impl Read) -> std::io::Result<Option<Request>> 
     }
 }
 
-/// Read one response frame. `Ok(None)` = clean EOF.
-pub fn read_response(stream: &mut impl Read) -> std::io::Result<Option<Response>> {
+fn bad_data(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+fn decode_f32s(bytes: &[u8], n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    out
+}
+
+/// Read any client-side frame — monolithic response, streamed chunk, or
+/// stream terminator. `Ok(None)` = clean EOF. This is the demux entry point
+/// of the pipelined client's reader thread.
+pub fn read_client_frame(stream: &mut impl Read) -> std::io::Result<Option<ClientFrame>> {
     let mut hdr = [0u8; 4];
     if !read_exact_or_eof(stream, &mut hdr)? {
         return Ok(None);
     }
     let len = get_u32(&hdr, 0) as usize;
     if len < 12 || len > MAX_FRAME {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("bad frame length {len}"),
-        ));
+        return Err(bad_data(format!("bad frame length {len}")));
     }
     let mut payload = vec![0u8; len];
     if !read_exact_or_eof(stream, &mut payload)? {
@@ -245,27 +391,160 @@ pub fn read_response(stream: &mut impl Read) -> std::io::Result<Option<Response>
     }
     let req_id = get_u64(&payload, 0);
     let n_field = get_u32(&payload, 8);
-    if n_field == ERROR_SENTINEL {
-        if len != 12 {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                "error response carries a payload",
-            ));
+    match n_field {
+        ERROR_SENTINEL => {
+            if len != 12 {
+                return Err(bad_data("error response carries a payload".into()));
+            }
+            Ok(Some(ClientFrame::Response(Response::err(req_id))))
         }
-        return Ok(Some(Response::err(req_id)));
+        STREAM_END_SENTINEL => {
+            if len != 16 {
+                return Err(bad_data(format!("stream-end frame length {len}")));
+            }
+            let n_chunks = get_u32(&payload, 12);
+            Ok(Some(ClientFrame::StreamEnd { req_id, n_chunks }))
+        }
+        CHUNK_SENTINEL => {
+            if len < 24 {
+                return Err(bad_data(format!("chunk frame length {len}")));
+            }
+            let row_start = get_u32(&payload, 12);
+            let n_rows = get_u32(&payload, 16);
+            let status = get_u32(&payload, 20);
+            // u64 math: hostile n_rows must not wrap the size check.
+            let expect = |rows: u64| 24u64 + rows * 4;
+            match status {
+                0 => {
+                    if expect(n_rows as u64) != len as u64 {
+                        return Err(bad_data("chunk length mismatch".into()));
+                    }
+                    Ok(Some(ClientFrame::Chunk(Chunk {
+                        req_id,
+                        row_start,
+                        n_rows,
+                        failed: false,
+                        probs: decode_f32s(&payload[24..], n_rows as usize),
+                    })))
+                }
+                ERROR_SENTINEL => {
+                    if len != 24 {
+                        return Err(bad_data("failed chunk carries a payload".into()));
+                    }
+                    Ok(Some(ClientFrame::Chunk(Chunk {
+                        req_id,
+                        row_start,
+                        n_rows,
+                        failed: true,
+                        probs: Vec::new(),
+                    })))
+                }
+                other => Err(bad_data(format!("unknown chunk status {other}"))),
+            }
+        }
+        _ => {
+            let n = n_field as usize;
+            if 12 + n * 4 != len {
+                return Err(bad_data("response length mismatch".into()));
+            }
+            Ok(Some(ClientFrame::Response(Response::ok(
+                req_id,
+                decode_f32s(&payload[12..], n),
+            ))))
+        }
     }
-    let n = n_field as usize;
-    if 12 + n * 4 != len {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "response length mismatch",
-        ));
+}
+
+/// Read one monolithic response frame, strictly: streamed chunk/terminator
+/// frames are an error here. `Ok(None)` = clean EOF. (The pipelined client
+/// uses [`read_client_frame`]; this strict form serves tests and tools that
+/// expect unstreamed responses.)
+pub fn read_response(stream: &mut impl Read) -> std::io::Result<Option<Response>> {
+    match read_client_frame(stream)? {
+        None => Ok(None),
+        Some(ClientFrame::Response(r)) => Ok(Some(r)),
+        Some(other) => Err(bad_data(format!(
+            "expected a monolithic response, got a streamed frame (req_id {})",
+            other.req_id()
+        ))),
     }
-    let mut probs = Vec::with_capacity(n);
-    for c in payload[12..].chunks_exact(4) {
-        probs.push(f32::from_le_bytes(c.try_into().unwrap()));
+}
+
+/// Order-independent reassembly of a streamed response: push chunks in any
+/// arrival order, then [`StreamAssembler::finish`] with the terminator's
+/// chunk count. Rejects overlapping or out-of-bounds spans and enforces that
+/// the stream tiled every row exactly once — the reassembled probabilities
+/// are bit-identical to the monolithic response the stream replaced.
+pub struct StreamAssembler {
+    probs: Vec<f32>,
+    filled: Vec<bool>,
+    rows_done: usize,
+    chunks_seen: u32,
+    failed: Vec<Range<usize>>,
+}
+
+impl StreamAssembler {
+    pub fn new(n_rows: usize) -> StreamAssembler {
+        StreamAssembler {
+            probs: vec![0.0; n_rows],
+            filled: vec![false; n_rows],
+            rows_done: 0,
+            chunks_seen: 0,
+            failed: Vec::new(),
+        }
     }
-    Ok(Some(Response::ok(req_id, probs)))
+
+    /// Rows delivered so far (served or failed).
+    pub fn rows_done(&self) -> usize {
+        self.rows_done
+    }
+
+    /// Accept one chunk. Errors on span overlap / overflow — a malformed
+    /// stream must surface, not silently corrupt rows.
+    pub fn push(&mut self, c: &Chunk) -> std::io::Result<()> {
+        let span = c.span();
+        if span.end > self.probs.len() || span.is_empty() {
+            return Err(bad_data(format!(
+                "chunk span {span:?} outside response of {} rows",
+                self.probs.len()
+            )));
+        }
+        if self.filled[span.clone()].iter().any(|&f| f) {
+            return Err(bad_data(format!("chunk span {span:?} overlaps an earlier chunk")));
+        }
+        if !c.failed {
+            self.probs[span.clone()].copy_from_slice(&c.probs);
+        } else {
+            self.failed.push(span.clone());
+        }
+        for f in &mut self.filled[span.clone()] {
+            *f = true;
+        }
+        self.rows_done += span.len();
+        self.chunks_seen += 1;
+        Ok(())
+    }
+
+    /// Close the stream against the terminator's chunk count. Returns the
+    /// reassembled probabilities and the failed spans (sorted; rows inside
+    /// them hold 0.0 placeholders).
+    pub fn finish(mut self, n_chunks: u32) -> std::io::Result<(Vec<f32>, Vec<Range<usize>>)> {
+        if self.chunks_seen != n_chunks {
+            return Err(bad_data(format!(
+                "stream ended after {} chunks, terminator claims {n_chunks}",
+                self.chunks_seen
+            )));
+        }
+        if self.rows_done != self.probs.len() {
+            return Err(bad_data(format!(
+                "stream covered {}/{} rows",
+                self.rows_done,
+                self.probs.len()
+            )));
+        }
+        self.failed.sort_by_key(|r| r.start);
+        Ok((self.probs, self.failed))
+    }
 }
 
 /// Write a pre-encoded frame.
@@ -486,6 +765,195 @@ mod tests {
                 .ok_or("unexpected EOF")?;
             crate::prop_assert!(got == resp, "roundtrip mismatch: {got:?} != {resp:?}");
             crate::prop_assert!(got.error == resp.error);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chunk_and_end_roundtrip() {
+        let c = Chunk::ok(9, 4, vec![0.5, 0.25, 0.125]);
+        let mut buf = Vec::new();
+        encode_chunk(&c, &mut buf);
+        let got = read_client_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(got, ClientFrame::Chunk(c.clone()));
+        assert_eq!(got.wire_size() as usize, buf.len());
+        assert!(!got.is_terminal());
+        assert_eq!(c.span(), 4..7);
+
+        let e = Chunk::err(9, 7..19);
+        encode_chunk(&e, &mut buf);
+        let got = read_client_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(got, ClientFrame::Chunk(e));
+
+        encode_stream_end(9, 2, &mut buf);
+        let got = read_client_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(got, ClientFrame::StreamEnd { req_id: 9, n_chunks: 2 });
+        assert!(got.is_terminal());
+        assert_eq!(got.wire_size() as usize, buf.len());
+    }
+
+    #[test]
+    fn strict_reader_rejects_streamed_frames() {
+        let mut buf = Vec::new();
+        encode_chunk(&Chunk::ok(3, 0, vec![1.0]), &mut buf);
+        assert!(read_response(&mut Cursor::new(&buf)).is_err());
+        encode_stream_end(3, 1, &mut buf);
+        assert!(read_response(&mut Cursor::new(&buf)).is_err());
+        // And the lenient client reader still reads plain responses.
+        encode_response(&Response::ok(3, vec![1.0]), &mut buf);
+        assert_eq!(
+            read_client_frame(&mut Cursor::new(&buf)).unwrap().unwrap(),
+            ClientFrame::Response(Response::ok(3, vec![1.0]))
+        );
+    }
+
+    #[test]
+    fn malformed_chunk_frames_rejected() {
+        // Unknown status.
+        let mut buf = Vec::new();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&7u64.to_le_bytes());
+        payload.extend_from_slice(&CHUNK_SENTINEL.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes()); // row_start
+        payload.extend_from_slice(&1u32.to_le_bytes()); // n_rows
+        payload.extend_from_slice(&17u32.to_le_bytes()); // bogus status
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        assert!(read_client_frame(&mut Cursor::new(&buf)).is_err());
+
+        // Failed chunk carrying a payload.
+        let mut e = Vec::new();
+        encode_chunk(&Chunk::err(7, 0..2), &mut e);
+        e.extend_from_slice(&1.0f32.to_le_bytes());
+        let len = (e.len() - 4) as u32;
+        e[..4].copy_from_slice(&len.to_le_bytes());
+        assert!(read_client_frame(&mut Cursor::new(&e)).is_err());
+
+        // Ok chunk whose n_rows disagrees with the payload — with the
+        // hostile-maximal row count (must not wrap the u64 size math).
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&7u64.to_le_bytes());
+        payload.extend_from_slice(&CHUNK_SENTINEL.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.extend_from_slice(&(STREAM_END_SENTINEL - 1).to_le_bytes()); // huge n_rows
+        payload.extend_from_slice(&0u32.to_le_bytes()); // status ok
+        payload.extend_from_slice(&1.0f32.to_le_bytes()); // 1 value
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        assert!(read_client_frame(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn assembler_rejects_overlap_gap_and_miscount() {
+        // Overlap.
+        let mut asm = StreamAssembler::new(4);
+        asm.push(&Chunk::ok(1, 0, vec![1.0, 2.0])).unwrap();
+        assert!(asm.push(&Chunk::ok(1, 1, vec![9.0])).is_err());
+
+        // Out of bounds / empty span.
+        let mut asm = StreamAssembler::new(4);
+        assert!(asm.push(&Chunk::ok(1, 3, vec![1.0, 2.0])).is_err());
+        assert!(asm.push(&Chunk::err(1, 2..2)).is_err());
+
+        // Gap: 4 rows, only 2 delivered.
+        let mut asm = StreamAssembler::new(4);
+        asm.push(&Chunk::ok(1, 0, vec![1.0, 2.0])).unwrap();
+        assert!(asm.finish(1).is_err());
+
+        // Chunk-count mismatch with the terminator.
+        let mut asm = StreamAssembler::new(2);
+        asm.push(&Chunk::ok(1, 0, vec![1.0, 2.0])).unwrap();
+        assert!(asm.finish(2).is_err());
+    }
+
+    /// Satellite property test: a response split into randomized chunk
+    /// spans — including `u32::MAX`-status error chunks interleaved
+    /// mid-stream — reassembles bit-identically to the monolithic response,
+    /// under ANY chunk arrival order, through the real wire encoding.
+    #[test]
+    fn prop_streamed_chunks_reassemble_bit_identical_any_order() {
+        crate::util::proptest::check(120, |g| {
+            let n = g.usize(1..200);
+            let req_id = g.rng.below(u64::MAX);
+            // The monolithic truth, with bit-interesting values (NaN, -0.0,
+            // denormals survive the wire bit-for-bit).
+            let mut probs = g.vec_f32(n..n + 1, -1e3..1e3);
+            if n > 2 {
+                probs[0] = f32::NAN;
+                probs[1] = -0.0;
+            }
+            // Random disjoint tiling of 0..n; ~1 in 5 spans fails.
+            let mut spans: Vec<(Range<usize>, bool)> = Vec::new();
+            let mut at = 0usize;
+            while at < n {
+                let len = g.usize(1..(n - at + 1).min(40));
+                spans.push((at..at + len, g.bool(0.2)));
+                at += len;
+            }
+            // Encode every chunk, then shuffle the arrival order.
+            let mut frames: Vec<Vec<u8>> = spans
+                .iter()
+                .map(|(span, failed)| {
+                    let mut buf = Vec::new();
+                    let chunk = if *failed {
+                        Chunk::err(req_id, span.clone())
+                    } else {
+                        Chunk::ok(req_id, span.start, probs[span.clone()].to_vec())
+                    };
+                    encode_chunk(&chunk, &mut buf);
+                    buf
+                })
+                .collect();
+            for i in (1..frames.len()).rev() {
+                frames.swap(i, g.usize(0..i + 1));
+            }
+            let mut wire: Vec<u8> = frames.concat();
+            let mut end = Vec::new();
+            encode_stream_end(req_id, spans.len() as u32, &mut end);
+            wire.extend_from_slice(&end);
+
+            // Decode + reassemble through the public reader.
+            let mut cur = Cursor::new(&wire);
+            let mut asm = StreamAssembler::new(n);
+            let (got, failed_spans) = loop {
+                match read_client_frame(&mut cur)
+                    .map_err(|e| format!("decode failed: {e}"))?
+                    .ok_or("unexpected EOF")?
+                {
+                    ClientFrame::Chunk(c) => {
+                        crate::prop_assert!(c.req_id == req_id);
+                        asm.push(&c).map_err(|e| format!("push failed: {e}"))?;
+                    }
+                    ClientFrame::StreamEnd { n_chunks, .. } => {
+                        break asm
+                            .finish(n_chunks)
+                            .map_err(|e| format!("finish failed: {e}"))?;
+                    }
+                    other => return Err(format!("unexpected frame {other:?}")),
+                }
+            };
+            let expect_failed: Vec<Range<usize>> = spans
+                .iter()
+                .filter(|(_, f)| *f)
+                .map(|(s, _)| s.clone())
+                .collect();
+            crate::prop_assert!(
+                failed_spans == expect_failed,
+                "failed spans {failed_spans:?} != {expect_failed:?}"
+            );
+            for r in 0..n {
+                if expect_failed.iter().any(|s| s.contains(&r)) {
+                    continue; // failed rows hold placeholders
+                }
+                crate::prop_assert!(
+                    got[r].to_bits() == probs[r].to_bits(),
+                    "row {r}: {:#x} != {:#x}",
+                    got[r].to_bits(),
+                    probs[r].to_bits()
+                );
+            }
             Ok(())
         });
     }

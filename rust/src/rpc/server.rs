@@ -14,15 +14,26 @@
 //! propagation delay, so they run off-thread and overlap instead of
 //! stacking behind one another.
 //!
+//! Responses are **streamed** when the backend can complete sub-batches
+//! independently (the shard-pool-backed [`NativeBackend`]): each completed
+//! sub-range is fanned out immediately as `CHUNK` frames to the overlapping
+//! requests' connections — a request's rows leave the server the moment
+//! their shard finishes, instead of buffering behind the slowest shard —
+//! and a terminal frame closes each stream with its chunk count. Backends
+//! without sub-batch granularity (and batches too small to split) keep the
+//! monolithic single-response path; [`BatcherConfig::stream`] turns
+//! streaming off entirely for A/B measurement.
+//!
 //! Failures are contained at the finest granularity available: a backend
 //! panic reaches the batcher as [`PredictOutcome::failed`] row spans
 //! (whole-batch for plain backends, per-shard for the pool-backed
 //! [`NativeBackend`]); only the requests overlapping a failed span get
-//! error frames, the rest of the batch is served, and the worker keeps
-//! running (queue locks are poison-tolerant throughout). A
-//! content-malformed frame with honest length is likewise answered with an
-//! error frame instead of killing the (pipelined, shared) connection —
-//! only an unrecoverable desync hangs it up.
+//! error frames — a failed-span `CHUNK` mid-stream on the streamed path —
+//! the rest of the batch is served, and the worker keeps running (queue
+//! locks are poison-tolerant throughout). A content-malformed frame with
+//! honest length is likewise answered with an error frame instead of
+//! killing the (pipelined, shared) connection — only an unrecoverable
+//! desync hangs it up.
 
 use super::netsim::NetSim;
 use super::proto::{self, Inbound, Request, Response};
@@ -30,8 +41,9 @@ use crate::runtime::{ModelId, ShardPool};
 use crate::telemetry::ServeMetrics;
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 /// Outcome of a checked backend execution: probabilities for every row,
@@ -80,6 +92,27 @@ pub trait Backend: Send + Sync {
     /// shard pool) override it to fail only the affected sub-ranges.
     fn predict_checked(&self, rows: &[f32], n: usize, row_len: usize) -> PredictOutcome {
         contain_whole_batch(n, || self.predict(rows, n, row_len))
+    }
+
+    /// Streamed prediction: deliver each completed sub-range to `sink` the
+    /// moment it finishes — from whatever thread finished it, concurrently
+    /// — with the span (row range within this batch), its probabilities
+    /// (empty when the span failed), and the failed flag. Spans are
+    /// disjoint and tile the batch; the call blocks until the last span is
+    /// delivered.
+    ///
+    /// Returns `false` — **before delivering anything** — when this backend
+    /// (or this particular batch shape) has no sub-batch granularity worth
+    /// streaming; the caller then falls back to [`Backend::predict_checked`]
+    /// and a monolithic response. The default declines always.
+    fn predict_streamed(
+        &self,
+        _rows: &[f32],
+        _n: usize,
+        _row_len: usize,
+        _sink: &(dyn Fn(Range<usize>, &[f32], bool) + Sync),
+    ) -> bool {
+        false
     }
 }
 
@@ -157,6 +190,30 @@ impl Backend for NativeBackend {
         self.pooled_outcome(rows, n, row_len)
     }
 
+    fn predict_streamed(
+        &self,
+        rows: &[f32],
+        n: usize,
+        row_len: usize,
+        sink: &(dyn Fn(Range<usize>, &[f32], bool) + Sync),
+    ) -> bool {
+        if row_len < self.model.n_features {
+            return false; // narrow-row scalar path has no sub-ranges
+        }
+        if n < 2 * self.pool.min_task_rows() {
+            // The pool would run this as ONE task: a single-chunk stream is
+            // strictly more frames than the monolithic response.
+            return false;
+        }
+        let mut probs = vec![0f32; n];
+        // Failed spans reach the sink as failed chunks; the return value is
+        // already folded into the stream, so it is deliberately dropped.
+        let _ = self
+            .pool
+            .predict_spans_streamed(self.model_id, &rows[..n * row_len], row_len, &mut probs, sink);
+        true
+    }
+
     fn row_len(&self) -> usize {
         0
     }
@@ -220,6 +277,12 @@ pub struct BatcherConfig {
     pub max_wait: Duration,
     /// Batcher worker threads.
     pub workers: usize,
+    /// Stream sub-batch completions as `CHUNK` frames when the backend
+    /// supports it (see [`Backend::predict_streamed`]). Off = always answer
+    /// with one monolithic response per request (the pre-streaming wire
+    /// behavior, kept for A/B benchmarking — `stream_vs_monolithic` in
+    /// `hotpath_microbench`).
+    pub stream: bool,
 }
 
 impl Default for BatcherConfig {
@@ -232,9 +295,15 @@ impl Default for BatcherConfig {
             // RTT for no concurrent-throughput gain).
             max_wait: Duration::ZERO,
             workers: 2,
+            stream: true,
         }
     }
 }
+
+/// Ceiling on one blocking response write (see `connection_loop`): the
+/// price of a client that stops reading is a bounded worker stall, never a
+/// wedged shard.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Write half of a connection, shared by every response path; frames are
 /// written whole under the lock, so responses from different batches can
@@ -293,6 +362,165 @@ fn write_response(out: &SharedWriter, resp: &Response) {
     // A write failure means the client hung up; it will be rediscovered by
     // the connection reader, so it is ignorable here.
     let _ = proto::write_frame(&mut *stream, &buf);
+}
+
+/// Per-job streamed-frame writer. Without netsim, frames go straight to the
+/// connection (whole frames under the writer lock, so streams from
+/// different batches never interleave mid-frame). With netsim, a dedicated
+/// pacing thread delays each frame by an independently sampled hop while
+/// preserving intra-stream order: the chunks of one response are concurrent
+/// packets on one path — their propagation delays overlap, they do not
+/// queue behind one another — but a chunk never overtakes its predecessor
+/// (and the terminator never overtakes a chunk).
+enum StreamOut {
+    Direct(SharedWriter),
+    Paced {
+        out: SharedWriter,
+        netsim: Arc<NetSim>,
+        /// Pacing thread + channel, spawned LAZILY on the first frame: a
+        /// backend that declines to stream must cost nothing here.
+        tx: std::sync::OnceLock<mpsc::Sender<Vec<u8>>>,
+    },
+}
+
+impl StreamOut {
+    fn new(job: &Job) -> StreamOut {
+        if !job.netsim.enabled() {
+            StreamOut::Direct(job.out.clone())
+        } else {
+            StreamOut::Paced {
+                out: job.out.clone(),
+                netsim: job.netsim.clone(),
+                tx: std::sync::OnceLock::new(),
+            }
+        }
+    }
+
+    fn send(&self, buf: Vec<u8>) {
+        match self {
+            StreamOut::Direct(out) => {
+                let mut stream = out.lock().unwrap_or_else(PoisonError::into_inner);
+                // A write failure means the client hung up; the connection
+                // reader rediscovers that, so it is ignorable here.
+                let _ = proto::write_frame(&mut *stream, &buf);
+            }
+            StreamOut::Paced { out, netsim, tx } => {
+                let sender = tx.get_or_init(|| {
+                    let (tx, rx) = mpsc::channel::<Vec<u8>>();
+                    let out = out.clone();
+                    let netsim = netsim.clone();
+                    // A spawn failure (total resource collapse) drops the
+                    // stream and surfaces as a client-side timeout — one
+                    // sim-only thread per streamed request, bounded by the
+                    // in-flight request count.
+                    std::thread::Builder::new()
+                        .name("netsim-stream".into())
+                        .spawn(move || {
+                            let mut deadline = Instant::now();
+                            for frame in rx {
+                                // Sampled per-frame hop, clamped monotone so
+                                // intra-stream order holds while hops overlap.
+                                deadline = deadline.max(Instant::now() + netsim.sample());
+                                let now = Instant::now();
+                                if deadline > now {
+                                    std::thread::sleep(deadline - now);
+                                }
+                                let mut stream =
+                                    out.lock().unwrap_or_else(PoisonError::into_inner);
+                                let _ = proto::write_frame(&mut *stream, &frame);
+                            }
+                        })
+                        .ok();
+                    tx
+                });
+                let _ = sender.send(buf); // pacing thread gone ⇒ frame dropped
+            }
+        }
+    }
+
+    fn send_chunk(&self, chunk: &proto::Chunk) {
+        let mut buf = Vec::with_capacity(chunk.wire_size());
+        proto::encode_chunk(chunk, &mut buf);
+        self.send(buf);
+    }
+
+    fn send_end(&self, req_id: u64, n_chunks: u32) {
+        let mut buf = Vec::new();
+        proto::encode_stream_end(req_id, n_chunks, &mut buf);
+        self.send(buf);
+    }
+}
+
+/// Serve one coalesced backend batch as streamed chunk responses: every
+/// completed backend sub-range is fanned out immediately to the overlapping
+/// jobs' connections, each job's stream closing (terminal frame with the
+/// chunk count) as soon as ITS rows are all delivered — a fast request is
+/// not gated by a straggler sub-batch elsewhere in the coalesced batch.
+/// Returns `false` without side effects when the backend declines to
+/// stream; the caller falls back to the monolithic path.
+fn stream_batch(
+    backend: &dyn Backend,
+    rows: &[f32],
+    n: usize,
+    row_len: usize,
+    jobs: &[Job],
+    metrics: &ServeMetrics,
+) -> bool {
+    struct JobStream<'a> {
+        job: &'a Job,
+        /// Batch-row offset of this job's first row.
+        offset: usize,
+        remaining: AtomicUsize,
+        chunks: AtomicU64,
+        out: StreamOut,
+    }
+    let mut offset = 0usize;
+    let streams: Vec<JobStream> = jobs
+        .iter()
+        .map(|job| {
+            let s = JobStream {
+                job,
+                offset,
+                remaining: AtomicUsize::new(job.n),
+                chunks: AtomicU64::new(0),
+                out: StreamOut::new(job),
+            };
+            offset += job.n;
+            s
+        })
+        .collect();
+    debug_assert_eq!(offset, n);
+    let t0 = Instant::now();
+    let sink = |span: Range<usize>, probs: &[f32], failed: bool| {
+        metrics.chunk_emit.record_duration(t0.elapsed());
+        for js in &streams {
+            let lo = span.start.max(js.offset);
+            let hi = span.end.min(js.offset + js.job.n);
+            if lo >= hi {
+                continue;
+            }
+            let rel = (lo - js.offset)..(hi - js.offset);
+            let chunk = if failed {
+                proto::Chunk::err(js.job.req_id, rel)
+            } else {
+                proto::Chunk::ok(
+                    js.job.req_id,
+                    rel.start,
+                    probs[lo - span.start..hi - span.start].to_vec(),
+                )
+            };
+            js.chunks.fetch_add(1, Ordering::Relaxed);
+            metrics.stream_chunks.fetch_add(1, Ordering::Relaxed);
+            js.out.send_chunk(&chunk);
+            // Chunk written BEFORE the countdown: the final decrement
+            // (AcqRel) therefore happens-after every sibling chunk's write,
+            // so the terminal frame really closes the stream on the wire.
+            if js.remaining.fetch_sub(hi - lo, Ordering::AcqRel) == hi - lo {
+                js.out.send_end(js.job.req_id, js.chunks.load(Ordering::Acquire) as u32);
+            }
+        }
+    };
+    backend.predict_streamed(rows, n, row_len, &sink)
 }
 
 struct Queue {
@@ -410,6 +638,13 @@ impl Drop for RpcServer {
 /// request order; the client demultiplexes by `req_id`).
 fn connection_loop(mut stream: TcpStream, queue: Arc<Queue>, netsim: Arc<NetSim>) {
     stream.set_nodelay(true).ok();
+    // Bound every response write: streamed chunk frames are written from
+    // ShardPool WORKER threads (inside the completion sink, before the
+    // batch latch opens), so a client that stops draining its socket must
+    // cost a bounded stall, not a wedged compute worker + a stuck latch.
+    // On timeout the write fails, the frame is dropped, and only THAT
+    // client's stream desyncs (its reader will hang up the connection).
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
     let Ok(write_half) = stream.try_clone() else { return };
     let out: SharedWriter = Arc::new(Mutex::new(write_half));
     loop {
@@ -548,6 +783,33 @@ fn batcher_loop(
                 n += batch[j].n;
                 j += 1;
             }
+            // Streamed path first: chunk frames flow per completed shard
+            // sub-range, each job's stream closing independently. The
+            // catch_unwind mirrors the monolithic net below — a panicking
+            // OVERRIDDEN predict_streamed may have partially streamed, and
+            // a whole-request error frame is terminal for the client demux
+            // either way.
+            if cfg.stream {
+                let t0 = Instant::now();
+                let streamed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    stream_batch(&*backend, &rows, n, row_len, &batch[i..j], &metrics)
+                }));
+                match streamed {
+                    Ok(true) => {
+                        metrics.backend_exec.record_duration(t0.elapsed());
+                        i = j;
+                        continue;
+                    }
+                    Ok(false) => {} // backend declined — monolithic below
+                    Err(_) => {
+                        for job in &batch[i..j] {
+                            job.respond(None);
+                        }
+                        i = j;
+                        continue;
+                    }
+                }
+            }
             let t0 = Instant::now();
             // Failures come back as data (`predict_checked`): per-shard
             // spans from the pool-backed backend, whole-batch from plain
@@ -618,6 +880,7 @@ mod tests {
                 // A single worker: if the panic killed it, every later
                 // request would hang instead of being served.
                 workers: 1,
+                stream: true,
             },
             Arc::new(ServeMetrics::new()),
         )
@@ -692,6 +955,7 @@ mod tests {
                 // in ONE batch and really exercise the span→job mapping.
                 max_wait: Duration::from_millis(100),
                 workers: 1,
+                stream: true,
             },
             Arc::new(ServeMetrics::new()),
         )
@@ -831,5 +1095,185 @@ mod tests {
         let probs = backend.predict(&clean, n, row_len);
         assert!(probs.iter().all(|p| p.to_bits() == expected.to_bits()));
         assert_eq!(backend.pool().stats().panics(), 1);
+    }
+
+    fn trained_model() -> (crate::gbdt::GbdtModel, crate::tabular::Dataset) {
+        let spec = crate::datagen::preset("aci").unwrap().with_rows(2000);
+        let data = crate::datagen::generate(&spec, 9);
+        let m = crate::gbdt::train(&data, &crate::gbdt::GbdtParams::quick());
+        (m, data)
+    }
+
+    fn flat_rows(data: &crate::tabular::Dataset, n: usize) -> (Vec<f32>, usize) {
+        let row_len = data.n_features();
+        let mut rows = vec![0f32; n * row_len];
+        let mut row = Vec::new();
+        for r in 0..n {
+            data.row_into(r, &mut row);
+            rows[r * row_len..(r + 1) * row_len].copy_from_slice(&row);
+        }
+        (rows, row_len)
+    }
+
+    fn pool_server(
+        model: &crate::gbdt::GbdtModel,
+        stream: bool,
+    ) -> (RpcServer, Arc<ServeMetrics>) {
+        let pool = Arc::new(ShardPool::with_config(crate::runtime::ShardPoolConfig {
+            n_shards: 4,
+            min_task_rows: 8,
+            ..Default::default()
+        }));
+        let metrics = Arc::new(ServeMetrics::new());
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(NativeBackend::with_pool(model.clone(), pool)),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig { stream, ..Default::default() },
+            metrics.clone(),
+        )
+        .unwrap();
+        (server, metrics)
+    }
+
+    /// Tentpole acceptance at the server boundary: the streamed wire path
+    /// answers bit-identically to the monolithic one (and to the model).
+    #[test]
+    fn streamed_responses_bit_identical_to_monolithic() {
+        let (model, data) = trained_model();
+        let (streamed_srv, streamed_metrics) = pool_server(&model, true);
+        let (mono_srv, mono_metrics) = pool_server(&model, false);
+        let n = 200;
+        let (rows, row_len) = flat_rows(&data, n);
+
+        let a = RpcClient::connect(streamed_srv.addr).unwrap().predict(&rows, row_len).unwrap();
+        let b = RpcClient::connect(mono_srv.addr).unwrap().predict(&rows, row_len).unwrap();
+        assert_eq!(a.len(), n);
+        let mut row = Vec::new();
+        for r in 0..n {
+            assert_eq!(a[r].to_bits(), b[r].to_bits(), "row {r}: streamed != monolithic");
+            data.row_into(r, &mut row);
+            assert_eq!(a[r].to_bits(), model.predict_one(&row).to_bits(), "row {r}");
+        }
+        assert!(
+            streamed_metrics.stream_chunks.load(Ordering::Relaxed) >= 2,
+            "big batch must really have streamed"
+        );
+        assert!(streamed_metrics.chunk_emit.count() >= 2);
+        assert_eq!(mono_metrics.stream_chunks.load(Ordering::Relaxed), 0);
+    }
+
+    /// Protocol-level proof of streaming: a raw socket sees ≥2 chunk frames
+    /// whose spans tile the request, closed by a terminator carrying the
+    /// exact chunk count.
+    #[test]
+    fn raw_socket_sees_chunked_stream_with_terminal_count() {
+        let (model, data) = trained_model();
+        let (server, _m) = pool_server(&model, true);
+        let n = 128;
+        let (rows, row_len) = flat_rows(&data, n);
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut buf = Vec::new();
+        proto::encode_request(
+            &Request { req_id: 7, row_len: row_len as u32, rows },
+            &mut buf,
+        );
+        proto::write_frame(&mut stream, &buf).unwrap();
+
+        let mut asm = proto::StreamAssembler::new(n);
+        let mut chunks = 0u32;
+        let probs = loop {
+            match proto::read_client_frame(&mut stream).unwrap().expect("frame") {
+                proto::ClientFrame::Chunk(c) => {
+                    assert_eq!(c.req_id, 7);
+                    assert!(!c.failed);
+                    chunks += 1;
+                    asm.push(&c).unwrap();
+                }
+                proto::ClientFrame::StreamEnd { req_id, n_chunks } => {
+                    assert_eq!(req_id, 7);
+                    assert_eq!(n_chunks, chunks, "terminator must carry the chunk count");
+                    let (probs, failed) = asm.finish(n_chunks).unwrap();
+                    assert!(failed.is_empty());
+                    break probs;
+                }
+                proto::ClientFrame::Response(r) => panic!("expected a stream, got {r:?}"),
+            }
+        };
+        assert!(chunks >= 2, "128 rows over a 4-shard pool must chunk");
+        let mut row = Vec::new();
+        for r in 0..n {
+            data.row_into(r, &mut row);
+            assert_eq!(probs[r].to_bits(), model.predict_one(&row).to_bits(), "row {r}");
+        }
+    }
+
+    /// Streamed fault injection (satellite): the poisoned sub-range arrives
+    /// as ONE failed chunk while every other chunk still streams its rows,
+    /// and the connection keeps serving streams afterwards.
+    #[test]
+    fn streamed_fault_injection_error_chunks_only_the_poisoned_span() {
+        // Deterministic split: 256 rows over 4 shards at min_task_rows=64
+        // is exactly 4×64-row tasks (too small for steal-splits).
+        let pool = Arc::new(ShardPool::with_config(crate::runtime::ShardPoolConfig {
+            n_shards: 4,
+            min_task_rows: 64,
+            ..Default::default()
+        }));
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(NativeBackend::with_pool(poison_model(4), pool)),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig::default(),
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        let n = 256;
+        let row_len = 4;
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+
+        let read_stream = |stream: &mut TcpStream, req_id: u64| {
+            let mut asm = proto::StreamAssembler::new(n);
+            let mut failed_chunks = Vec::new();
+            loop {
+                match proto::read_client_frame(stream).unwrap().expect("frame") {
+                    proto::ClientFrame::Chunk(c) => {
+                        assert_eq!(c.req_id, req_id);
+                        if c.failed {
+                            failed_chunks.push(c.span());
+                        }
+                        asm.push(&c).unwrap();
+                    }
+                    proto::ClientFrame::StreamEnd { n_chunks, .. } => {
+                        let (probs, failed) = asm.finish(n_chunks).unwrap();
+                        return (probs, failed, failed_chunks);
+                    }
+                    proto::ClientFrame::Response(r) => panic!("expected a stream, got {r:?}"),
+                }
+            }
+        };
+
+        let mut rows = vec![0.25f32; n * row_len];
+        rows[150 * row_len] = f32::INFINITY; // poison row in task 128..192
+        let mut buf = Vec::new();
+        proto::encode_request(&Request { req_id: 21, row_len: 4, rows }, &mut buf);
+        proto::write_frame(&mut stream, &buf).unwrap();
+        let (probs, failed, failed_chunks) = read_stream(&mut stream, 21);
+        assert_eq!(failed, vec![128..192], "exactly the poisoned task's span failed");
+        assert_eq!(failed_chunks, vec![128..192]);
+        let expected = crate::util::sigmoid(0.3) as f32;
+        for r in (0..128).chain(192..256) {
+            assert_eq!(probs[r].to_bits(), expected.to_bits(), "row {r} streamed despite the poison");
+        }
+
+        // The same connection still serves full streams afterwards.
+        let clean = vec![0.25f32; n * row_len];
+        proto::encode_request(&Request { req_id: 22, row_len: 4, rows: clean }, &mut buf);
+        proto::write_frame(&mut stream, &buf).unwrap();
+        let (probs, failed, _) = read_stream(&mut stream, 22);
+        assert!(failed.is_empty());
+        assert!(probs.iter().all(|p| p.to_bits() == expected.to_bits()));
     }
 }

@@ -4,8 +4,9 @@
 //!
 //! * [`shard_pool`] — the dependency-free **shard-per-core serving engine**:
 //!   one persistent worker thread per shard, each holding its own
-//!   [`FlatForest`](crate::gbdt::FlatForest) replica and scratch, fed by a
-//!   bounded lock-free MPMC task queue. This is the default second-stage
+//!   [`FlatForest`](crate::gbdt::FlatForest) replica and scratch, fed by
+//!   per-shard bounded lock-free MPMC task rings with work-stealing and
+//!   streamed sub-range completion. This is the default second-stage
 //!   execution substrate (the native backend and the embedded multi-tenant
 //!   mode both serve from it) and is always compiled.
 //! * [`worker`] / [`engine`] — the PJRT engine executing the AOT-compiled
@@ -24,4 +25,4 @@ pub use engine::{kernel_inputs_for, Engine, ForestParams, Graph, Shapes};
 #[cfg(feature = "pjrt")]
 pub use worker::EngineWorker;
 
-pub use shard_pool::{ModelId, ShardPool, ShardPoolConfig};
+pub use shard_pool::{ModelId, ShardPool, ShardPoolConfig, SpanSink, STEAL_GRAIN};

@@ -1,5 +1,5 @@
 //! Shard-per-core serving engine: a persistent worker pool with per-shard
-//! [`FlatForest`] replicas and a bounded lock-free MPMC task queue.
+//! [`FlatForest`] replicas, per-shard task rings, and **work-stealing**.
 //!
 //! # Why
 //!
@@ -8,9 +8,10 @@
 //! `NativeBackend` spun up scoped threads per big batch and tore them down
 //! again — fine for benches, but every batch paid thread spawn/join and the
 //! OS scheduler had no warm affinity to exploit. This engine keeps one
-//! long-lived worker per shard (core), parked on a shared queue, in the
-//! spirit of provisioned pipeline workers (InferLine) and database-style
-//! decision-forest serving engines.
+//! long-lived worker per shard (core), in the spirit of provisioned
+//! pipeline workers (InferLine) and database-style decision-forest serving
+//! engines. Work-stealing attacks the **tail**: without it, a straggler
+//! shard gates an entire block while its neighbors park idle.
 //!
 //! # Architecture
 //!
@@ -19,24 +20,44 @@
 //!   lazily on first use, allocated by the worker thread itself — the right
 //!   memory locality story) plus a private [`ForestScratch`], so the hot
 //!   loop touches no shared mutable state.
-//! * **Queue** — a bounded MPMC ring (Vyukov sequence-counter design): push
-//!   and pop are single-CAS lock-free operations; workers spin briefly then
-//!   park on a condvar that the submit path only touches when sleepers
-//!   exist.
+//! * **Rings** — one bounded MPMC ring (Vyukov sequence-counter design) per
+//!   shard: push and pop are single-CAS lock-free operations. MPMC matters:
+//!   a steal is just a `try_pop` on a neighbor's ring, no separate deque
+//!   protocol needed. Idle workers spin briefly then park on a shared
+//!   condvar that the submit path only touches when sleepers exist.
 //! * **Submission** — [`ShardPool::predict_spans`] splits a flat row batch
-//!   into per-shard sub-ranges (at least [`ShardPoolConfig::min_task_rows`]
-//!   rows each), submits one task per sub-range, and blocks on a per-batch
-//!   completion latch (`remaining` count + condvar) until every task is
-//!   done. Tasks borrow the caller's buffers via raw pointers — sound
-//!   because the call cannot return before the latch opens.
-//! * **Backpressure** — the queue is bounded; a submitter that finds it full
-//!   runs the task **inline** on its own thread (serving from the shared
-//!   registry image) instead of blocking the request path behind a wedged
-//!   queue.
+//!   into sub-range tasks and round-robins them across the shard rings.
+//!   **Adaptive granularity**: when live [`ShardStats`] occupancy shows the
+//!   pool idle (balance), the batch splits into at most one task per shard
+//!   — minimal hand-off, steals rare; when shards are busy (skew), it
+//!   splits up to [`STEAL_GRAIN`]× finer so a steal moves a small unit
+//!   cheaply. The submitter blocks on a per-batch completion latch that
+//!   counts **rows** (not tasks — so splitting a task in flight needs no
+//!   latch surgery). Tasks borrow the caller's buffers via raw pointers —
+//!   sound because the call cannot return before the latch opens.
+//! * **Work-stealing** — a worker whose own ring is empty scans its
+//!   neighbors' rings (nearest first) and steals a queued task. A stolen
+//!   task spanning ≥ 2×`min_task_rows` is **split**: the thief keeps the
+//!   back half and requeues the front half on the victim's ring — half the
+//!   remaining span per steal, so recursive halving spreads a hot shard's
+//!   backlog across every idle neighbor in O(log) steals while the victim
+//!   keeps the rows nearest its cursor. The row-counting latch makes the
+//!   split trivially sound; [`ShardStats`] counts steals per thief and
+//!   splits globally.
+//! * **Backpressure** — rings are bounded; a submitter that finds the home
+//!   ring full tries every other ring once, then runs the task **inline**
+//!   on its own thread (serving from the shared registry image) instead of
+//!   blocking the request path behind a wedged queue.
+//! * **Streaming** — [`ShardPool::predict_spans_streamed`] additionally
+//!   delivers every completed sub-range to a caller sink *as it finishes*,
+//!   from the worker that finished it. This is what the RPC server's
+//!   streamed `CHUNK` responses hang off: a block's rows leave the process
+//!   the moment their shard is done, not when the slowest shard is.
 //! * **Poison tolerance** — a panicking shard (a model bug on a poison row)
 //!   is contained to its task: the unwind is caught, the task's row span is
-//!   reported as failed, the completion latch still opens, and the worker
-//!   keeps serving. The engine never wedges and never loses a batch.
+//!   reported as failed (to the sink too, mid-stream), the completion latch
+//!   still opens, and the worker keeps serving. The engine never wedges and
+//!   never loses a batch.
 //! * **Multi-tenancy** — [`ShardPool::register`] adds models while the pool
 //!   is live; several `Coordinator`s (tenants) can share one pool, each
 //!   falling back to its own registered forest (the embedded multi-tenant
@@ -45,7 +66,8 @@
 //! Outputs are bit-identical to the scalar and block paths: replicas are
 //! value-clones of the registered [`FlatForest`], and
 //! [`FlatForest::predict_flat_rows`] over a sub-range computes exactly what
-//! the single-threaded call would.
+//! the single-threaded call would — however the spans end up split or
+//! stolen.
 
 use crate::gbdt::{FlatForest, ForestScratch};
 use crate::telemetry::ShardStats;
@@ -61,18 +83,33 @@ use std::time::Duration;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ModelId(u32);
 
+/// When live occupancy shows skew (busy shards at submit time), a batch is
+/// split up to this many times finer than one-task-per-shard, so steals
+/// move small units cheaply.
+pub const STEAL_GRAIN: usize = 4;
+
+/// Completion sink for streamed prediction: called once per finished
+/// sub-range — from the worker thread that finished it — with the span
+/// (absolute row indices within the batch), its probabilities (empty when
+/// failed), and the failed flag. Spans are disjoint and tile the batch.
+pub type SpanSink<'a> = &'a (dyn Fn(Range<usize>, &[f32], bool) + Sync);
+
 /// Pool construction knobs.
 #[derive(Clone, Debug)]
 pub struct ShardPoolConfig {
     /// Worker threads (shards). Default: one per core (capped like
     /// [`crate::util::threadpool::default_threads`]).
     pub n_shards: usize,
-    /// Task-queue capacity (rounded up to a power of two). A full queue
-    /// makes submitters run tasks inline rather than block.
+    /// Per-shard task-ring capacity (rounded up to a power of two). When
+    /// every ring is full, submitters run tasks inline rather than block.
     pub queue_capacity: usize,
     /// Minimum rows per task: below this, splitting a batch across shards
-    /// costs more in hand-off than the parallel traversal wins.
+    /// (or splitting a stolen task in half) costs more in hand-off than the
+    /// parallel traversal wins.
     pub min_task_rows: usize,
+    /// Work-stealing between shards (on by default; the off switch exists
+    /// for A/B benchmarking — `steal_skew` in `hotpath_microbench`).
+    pub steal: bool,
 }
 
 impl Default for ShardPoolConfig {
@@ -81,6 +118,7 @@ impl Default for ShardPoolConfig {
             n_shards: crate::util::threadpool::default_threads(),
             queue_capacity: 1024,
             min_task_rows: 64,
+            steal: true,
         }
     }
 }
@@ -91,6 +129,9 @@ impl Default for ShardPoolConfig {
 /// Raw pointers, not borrows: tasks outlive the submitting stack frame only
 /// until the latch opens, and the submitter blocks on the latch before
 /// returning — see the safety argument on [`ShardPool::predict_spans`].
+/// `Copy` so a thief can split a task into two window views of the same
+/// buffers.
+#[derive(Clone, Copy)]
 struct Task {
     model: u32,
     rows: *const f32,
@@ -98,54 +139,63 @@ struct Task {
     row_len: usize,
     n: usize,
     out: *mut f32,
-    /// Row offset of this task inside the parent batch (failure reporting).
+    /// Row offset of this task inside the parent batch (failure reporting
+    /// and streamed-span addressing).
     span_start: usize,
     batch: *const BatchLatch,
 }
 
 // SAFETY: the pointers target buffers owned by a submitter that cannot
 // return before this task completes (completion latch), and each task's
-// output range is disjoint.
+// output range is disjoint — splits partition a range, never duplicate it.
 unsafe impl Send for Task {}
 
-/// Per-batch completion latch: workers count down `remaining`; the
-/// submitter sleeps on `cv` until the last decrement flips `done`.
+/// Per-batch completion latch: workers count down `rows_remaining` by the
+/// row count of each finished sub-range; the decrement that reaches zero
+/// opens the latch. Counting rows (not tasks) is what lets a thief split a
+/// task in flight without telling the latch anything.
 struct BatchLatch {
-    remaining: AtomicUsize,
+    rows_remaining: AtomicUsize,
     /// Failed row spans (a panicking shard reports its sub-range here).
     failed: Mutex<Vec<Range<usize>>>,
     done: Mutex<bool>,
     cv: Condvar,
+    /// Streamed-completion sink (None on the plain path). Raw pointer with
+    /// the same lifetime argument as the task pointers: the submitter's
+    /// sink outlives the latch wait.
+    sink: Option<*const (dyn Fn(Range<usize>, &[f32], bool) + Sync)>,
 }
 
 impl BatchLatch {
-    fn new(tasks: usize) -> BatchLatch {
+    fn new(rows: usize, sink: Option<SpanSink<'_>>) -> BatchLatch {
         BatchLatch {
-            remaining: AtomicUsize::new(tasks),
+            rows_remaining: AtomicUsize::new(rows),
             failed: Mutex::new(Vec::new()),
             done: Mutex::new(false),
             cv: Condvar::new(),
+            sink: sink.map(|s| s as *const (dyn Fn(Range<usize>, &[f32], bool) + Sync)),
         }
     }
 
-    /// Record a task completion; the LAST completion opens the latch.
-    /// Nothing may touch the latch after the open (the submitter's stack
-    /// frame is free to die), so the failure span goes in first.
-    fn complete(&self, failed_span: Option<Range<usize>>) {
-        if let Some(span) = failed_span {
+    /// Record a sub-range completion; the decrement reaching zero opens the
+    /// latch. Nothing may touch the latch after the open (the submitter's
+    /// stack frame is free to die), so the failure span goes in first.
+    fn complete(&self, span: Range<usize>, failed: bool) {
+        if failed {
             self.failed
                 .lock()
                 .unwrap_or_else(PoisonError::into_inner)
-                .push(span);
+                .push(span.clone());
         }
-        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        let len = span.len();
+        if self.rows_remaining.fetch_sub(len, Ordering::AcqRel) == len {
             let mut done = self.done.lock().unwrap_or_else(PoisonError::into_inner);
             *done = true;
             self.cv.notify_all();
         }
     }
 
-    /// Block until every task completed; returns the failed spans (sorted).
+    /// Block until every row completed; returns the failed spans (sorted).
     fn wait(&self) -> Vec<Range<usize>> {
         let mut done = self.done.lock().unwrap_or_else(PoisonError::into_inner);
         while !*done {
@@ -171,9 +221,9 @@ struct Slot {
     task: UnsafeCell<MaybeUninit<Task>>,
 }
 
-/// Bounded lock-free MPMC task queue (Vyukov ring) with condvar parking
-/// for idle workers. The data path (push/try_pop) takes no lock; the
-/// park/wake path touches a mutex only when a worker is actually asleep.
+/// Bounded lock-free MPMC task ring (Vyukov design). One per shard; "MPMC"
+/// is load-bearing — any worker may pop any ring, which is exactly what a
+/// steal is. Parking lives in [`Parker`], shared across rings.
 struct TaskQueue {
     slots: Box<[Slot]>,
     mask: usize,
@@ -181,11 +231,6 @@ struct TaskQueue {
     head: AtomicUsize,
     /// Producer cursor.
     tail: AtomicUsize,
-    /// Workers currently parked (read/written around SeqCst fences — see
-    /// `wake_one` for the handshake).
-    sleepers: AtomicUsize,
-    park: Mutex<()>,
-    wake: Condvar,
 }
 
 // SAFETY: slot payloads are published/claimed through the `seq` acquire/
@@ -208,14 +253,12 @@ impl TaskQueue {
             mask: cap - 1,
             head: AtomicUsize::new(0),
             tail: AtomicUsize::new(0),
-            sleepers: AtomicUsize::new(0),
-            park: Mutex::new(()),
-            wake: Condvar::new(),
         }
     }
 
     /// Lock-free bounded push. `Err(task)` hands the task back on a full
-    /// ring (the caller runs it inline — backpressure, not blocking).
+    /// ring (the caller tries another ring or runs it inline — back-
+    /// pressure, not blocking).
     fn push(&self, task: Task) -> Result<(), Task> {
         let mut pos = self.tail.load(Ordering::Relaxed);
         loop {
@@ -234,7 +277,6 @@ impl TaskQueue {
                         // this producer; consumers wait for the seq store.
                         unsafe { (*slot.task.get()).write(task) };
                         slot.seq.store(pos + 1, Ordering::Release);
-                        self.wake_one();
                         return Ok(());
                     }
                     Err(now) => pos = now,
@@ -247,7 +289,8 @@ impl TaskQueue {
         }
     }
 
-    /// Lock-free pop; `None` when empty.
+    /// Lock-free pop; `None` when empty. Called by the ring's home worker
+    /// and by thieves alike.
     fn try_pop(&self) -> Option<Task> {
         let mut pos = self.head.load(Ordering::Relaxed);
         loop {
@@ -286,74 +329,39 @@ impl TaskQueue {
         let head = self.head.load(Ordering::Relaxed);
         tail.saturating_sub(head)
     }
+}
 
-    fn wake_one(&self) {
-        // Eventcount handshake (store-buffering/Dekker shape): the caller
-        // published the task (`seq` Release store), then fences SeqCst and
-        // loads `sleepers`; the sleeper increments `sleepers`, fences
-        // SeqCst, then re-checks the queue. The two SeqCst fences order the
-        // sides so that either this load observes the sleeper (and we
-        // notify under the park lock), or the sleeper's re-check observes
-        // the published task. The long timed wait in `pop_blocking` is a
-        // belt-and-braces backstop, not a correctness requirement.
-        std::sync::atomic::fence(Ordering::SeqCst);
-        if self.sleepers.load(Ordering::Relaxed) > 0 {
-            let _g = self.park.lock().unwrap_or_else(PoisonError::into_inner);
-            self.wake.notify_one();
+/// Shared idle-worker parking: one condvar for the whole pool. The data
+/// path (ring push/pop) takes no lock; the park/wake path touches the
+/// mutex only when a worker is actually asleep.
+struct Parker {
+    /// Workers currently parked (read/written around SeqCst fences — see
+    /// `wake_for_push` for the handshake).
+    sleepers: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Parker {
+    fn new() -> Parker {
+        Parker {
+            sleepers: AtomicUsize::new(0),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
         }
     }
 
     fn wake_all(&self) {
-        let _g = self.park.lock().unwrap_or_else(PoisonError::into_inner);
-        self.wake.notify_all();
-    }
-
-    /// Worker-side pop: spin briefly, then park. Returns `None` only when
-    /// `shutdown` is set AND the queue has drained — queued work is always
-    /// finished before a worker exits, so no submitter is left waiting on a
-    /// latch that nobody will hit.
-    fn pop_blocking(&self, shutdown: &AtomicBool) -> Option<Task> {
-        loop {
-            for spin in 0..96u32 {
-                if let Some(t) = self.try_pop() {
-                    return Some(t);
-                }
-                if spin % 16 == 15 {
-                    std::thread::yield_now();
-                } else {
-                    std::hint::spin_loop();
-                }
-            }
-            let guard = self.park.lock().unwrap_or_else(PoisonError::into_inner);
-            self.sleepers.fetch_add(1, Ordering::Relaxed);
-            // Advertise the sleep, THEN re-check the queue — the SeqCst
-            // fence pairs with the one in `wake_one` (see there), so a push
-            // racing this park is seen by exactly one side.
-            std::sync::atomic::fence(Ordering::SeqCst);
-            if let Some(t) = self.try_pop() {
-                self.sleepers.fetch_sub(1, Ordering::Relaxed);
-                return Some(t);
-            }
-            if shutdown.load(Ordering::SeqCst) {
-                self.sleepers.fetch_sub(1, Ordering::Relaxed);
-                return None;
-            }
-            // The fence handshake makes wakeups reliable; the long timeout
-            // only bounds the damage of an OS-level anomaly. Idle workers
-            // wake ~20×/s instead of spinning.
-            let (guard, _) = self
-                .wake
-                .wait_timeout(guard, Duration::from_millis(50))
-                .unwrap_or_else(PoisonError::into_inner);
-            self.sleepers.fetch_sub(1, Ordering::Relaxed);
-            drop(guard);
-        }
+        let _g = self.lock.lock().unwrap_or_else(PoisonError::into_inner);
+        self.cv.notify_all();
     }
 }
 
 /// State shared between the pool handle and its workers.
 struct PoolShared {
-    queue: TaskQueue,
+    /// One task ring per shard.
+    rings: Box<[TaskQueue]>,
+    parker: Parker,
     /// Registered forests, indexed by [`ModelId`]. Workers read-lock once
     /// per (shard, model) to materialize their replica, never in the steady
     /// state.
@@ -361,6 +369,9 @@ struct PoolShared {
     shutdown: AtomicBool,
     stats: ShardStats,
     min_task_rows: usize,
+    steal: bool,
+    /// Round-robin base for home-shard assignment across batches.
+    rr: AtomicUsize,
 }
 
 impl PoolShared {
@@ -369,6 +380,39 @@ impl PoolShared {
             .read()
             .unwrap_or_else(PoisonError::into_inner)[model as usize]
             .clone()
+    }
+
+    fn queue_depth_total(&self) -> usize {
+        self.rings.iter().map(TaskQueue::depth).sum()
+    }
+
+    /// Wake after a ring push. Eventcount handshake (store-buffering/Dekker
+    /// shape): the caller published the task (`seq` Release store), then
+    /// fences SeqCst and loads `sleepers`; the sleeper increments
+    /// `sleepers`, fences SeqCst, then re-checks the rings. The two SeqCst
+    /// fences order the sides so that either this load observes the sleeper
+    /// (and we notify under the park lock), or the sleeper's re-check
+    /// observes the published task. The long timed wait in `acquire` is a
+    /// belt-and-braces backstop, not a correctness requirement.
+    ///
+    /// With stealing on, ANY woken worker can serve the task (its re-check
+    /// scans every ring), so one wakeup suffices; with stealing off only
+    /// the home shard can, and a misdirected single wakeup would leave the
+    /// task to the timeout backstop — so wake everyone.
+    fn wake_for_push(&self) {
+        std::sync::atomic::fence(Ordering::SeqCst);
+        if self.parker.sleepers.load(Ordering::Relaxed) > 0 {
+            let _g = self
+                .parker
+                .lock
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            if self.steal {
+                self.parker.cv.notify_one();
+            } else {
+                self.parker.cv.notify_all();
+            }
+        }
     }
 }
 
@@ -391,11 +435,16 @@ impl ShardPool {
     pub fn with_config(cfg: ShardPoolConfig) -> ShardPool {
         let n_shards = cfg.n_shards.max(1);
         let shared = Arc::new(PoolShared {
-            queue: TaskQueue::new(cfg.queue_capacity),
+            rings: (0..n_shards)
+                .map(|_| TaskQueue::new(cfg.queue_capacity))
+                .collect(),
+            parker: Parker::new(),
             registry: RwLock::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             stats: ShardStats::new(n_shards),
             min_task_rows: cfg.min_task_rows.max(1),
+            steal: cfg.steal,
+            rr: AtomicUsize::new(0),
         });
         let workers = (0..n_shards)
             .map(|shard| {
@@ -417,14 +466,20 @@ impl ShardPool {
         self.n_shards
     }
 
-    /// Per-shard occupancy / queue-depth telemetry.
+    /// The task-granularity floor this pool was built with (sub-batch
+    /// splits and steal-splits never go below it).
+    pub fn min_task_rows(&self) -> usize {
+        self.shared.min_task_rows
+    }
+
+    /// Per-shard occupancy / steal / queue-depth telemetry.
     pub fn stats(&self) -> &ShardStats {
         &self.shared.stats
     }
 
-    /// Tasks currently queued (telemetry gauge).
+    /// Tasks currently queued across all rings (telemetry gauge).
     pub fn queue_depth(&self) -> usize {
-        self.shared.queue.depth()
+        self.shared.queue_depth_total()
     }
 
     /// Register a forest; tenants keep the returned id. Safe while the pool
@@ -459,18 +514,54 @@ impl ShardPool {
         row_len: usize,
         out: &mut [f32],
     ) -> Vec<Range<usize>> {
+        self.predict_inner(model, rows, row_len, out, None)
+    }
+
+    /// Like [`ShardPool::predict_spans`], additionally delivering every
+    /// completed sub-range to `sink` the moment its shard finishes it —
+    /// called from worker threads, concurrently, while later spans are
+    /// still executing. When this returns, every span has been delivered
+    /// exactly once (served or failed) and `out` is fully written. The
+    /// streamed spans concatenate bit-identically to the blocking result.
+    pub fn predict_spans_streamed(
+        &self,
+        model: ModelId,
+        rows: &[f32],
+        row_len: usize,
+        out: &mut [f32],
+        sink: SpanSink<'_>,
+    ) -> Vec<Range<usize>> {
+        self.predict_inner(model, rows, row_len, out, Some(sink))
+    }
+
+    fn predict_inner(
+        &self,
+        model: ModelId,
+        rows: &[f32],
+        row_len: usize,
+        out: &mut [f32],
+        sink: Option<SpanSink<'_>>,
+    ) -> Vec<Range<usize>> {
         let n = out.len();
         assert!(rows.len() >= n * row_len, "rows buffer shorter than n*row_len");
         if n == 0 {
             return Vec::new();
         }
         let shared = &*self.shared;
-        // Per-shard sub-ranges: never more tasks than shards, never fewer
-        // than min_task_rows rows per task (a tiny batch stays whole).
-        let tasks = (n / shared.min_task_rows).clamp(1, self.n_shards);
+        // Adaptive granularity from live occupancy (see module docs): a
+        // balanced (idle) pool gets at most one task per shard; an occupied
+        // pool gets up to STEAL_GRAIN× finer tasks so steals are cheap.
+        // Never fewer than min_task_rows rows per task.
+        let busy = shared.stats.busy_shards();
+        let max_tasks = if busy == 0 {
+            self.n_shards
+        } else {
+            self.n_shards * STEAL_GRAIN
+        };
+        let tasks = (n / shared.min_task_rows).clamp(1, max_tasks);
         let chunk = n.div_ceil(tasks);
         let n_tasks = n.div_ceil(chunk);
-        let latch = BatchLatch::new(n_tasks);
+        let latch = BatchLatch::new(n, sink);
         shared
             .stats
             .spans_submitted
@@ -478,14 +569,17 @@ impl ShardPool {
 
         let rows_ptr = rows.as_ptr();
         let out_ptr = out.as_mut_ptr();
+        let base = shared.rr.fetch_add(1, Ordering::Relaxed);
         let mut start = 0usize;
+        let mut ti = 0usize;
         while start < n {
             let len = chunk.min(n - start);
             // SAFETY (task lifetime): `latch.wait()` below does not return
-            // until every task called `complete`, and workers never touch a
-            // task's pointers after completing it — so `rows`, `out`, and
-            // `latch` strictly outlive all uses. Output sub-slices are
-            // disjoint by construction.
+            // until every row completed, and workers never touch a task's
+            // pointers after completing it — so `rows`, `out`, `latch` (and
+            // the sink behind it) strictly outlive all uses. Output
+            // sub-slices are disjoint by construction, and splits partition
+            // a task's range without ever duplicating rows.
             let task = Task {
                 model: model.0,
                 rows: unsafe { rows_ptr.add(start * row_len) },
@@ -496,16 +590,31 @@ impl ShardPool {
                 span_start: start,
                 batch: &latch,
             };
-            if let Err(task) = shared.queue.push(task) {
-                // Full queue: run inline on the submitter (backpressure —
-                // the request path must not deadlock behind a wedged ring).
-                shared.stats.inline_runs.fetch_add(1, Ordering::Relaxed);
-                run_task(task, &shared.forest(model.0), &mut ForestScratch::default(), shared);
-            }
+            self.submit_task(task, (base + ti) % self.n_shards);
             start += len;
+            ti += 1;
         }
-        shared.stats.note_queue_depth(shared.queue.depth());
+        shared.stats.note_queue_depth(shared.queue_depth_total());
         latch.wait()
+    }
+
+    /// Push one task: home ring first, then every other ring once, inline
+    /// as the last resort (backpressure — the request path must not
+    /// deadlock behind wedged rings).
+    fn submit_task(&self, task: Task, home: usize) {
+        let shared = &*self.shared;
+        let mut task = task;
+        for d in 0..self.n_shards {
+            match shared.rings[(home + d) % self.n_shards].push(task) {
+                Ok(()) => {
+                    shared.wake_for_push();
+                    return;
+                }
+                Err(t) => task = t,
+            }
+        }
+        shared.stats.inline_runs.fetch_add(1, Ordering::Relaxed);
+        run_task(task, &shared.forest(task.model), &mut ForestScratch::default(), shared);
     }
 
     /// Like [`ShardPool::predict_spans`], but collapses shard failures into
@@ -545,36 +654,177 @@ impl std::error::Error for ShardPanic {}
 impl Drop for ShardPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.queue.wake_all();
+        self.shared.parker.wake_all();
         for w in self.workers.drain(..) {
-            // Workers drain the queue before exiting, so queued batches
+            // Workers drain every ring before exiting, so queued batches
             // complete rather than strand their submitters.
-            self.shared.queue.wake_all();
+            self.shared.parker.wake_all();
             let _ = w.join();
         }
     }
 }
 
-/// Execute one task against `forest`, containing panics to the task's span.
+/// Execute one task against `forest`, containing panics to the task's span
+/// and delivering the completed span to the batch's sink (if streaming).
 fn run_task(task: Task, forest: &FlatForest, scratch: &mut ForestScratch, shared: &PoolShared) {
-    // SAFETY: see the lifetime argument in `predict_spans` — the submitter
+    // SAFETY: see the lifetime argument in `predict_inner` — the submitter
     // blocks on the latch, so these borrows are live, and no other task
     // writes this output range.
     let rows = unsafe { std::slice::from_raw_parts(task.rows, task.rows_len) };
     let out = unsafe { std::slice::from_raw_parts_mut(task.out, task.n) };
+    let t0 = std::time::Instant::now();
     let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         forest.predict_flat_rows(rows, task.row_len, scratch, out);
     }));
-    let failed_span = match r {
-        Ok(()) => None,
-        Err(_) => {
-            shared.stats.shard_panics.fetch_add(1, Ordering::Relaxed);
-            Some(task.span_start..task.span_start + task.n)
+    // Recorded BEFORE the latch countdown: a submitter returning from
+    // `wait()` observes chunk timings that include its whole batch.
+    shared.stats.chunk_exec.record_duration(t0.elapsed());
+    let failed = r.is_err();
+    if failed {
+        shared.stats.shard_panics.fetch_add(1, Ordering::Relaxed);
+    }
+    let span = task.span_start..task.span_start + task.n;
+    // SAFETY: the latch (and sink) outlive the submitter's wait; the sink
+    // call plus `complete` are the LAST touches, `complete` strictly last
+    // (nothing may follow the final countdown).
+    unsafe {
+        let latch = &*task.batch;
+        if let Some(sink) = latch.sink {
+            let probs: &[f32] = if failed { &[] } else { &*out };
+            // A panicking SINK must be contained exactly like a panicking
+            // model: skipping `complete` would strand the submitter on the
+            // latch forever and kill this worker. The span's data is
+            // already in `out`, so the batch result is unaffected — only
+            // the sink's own delivery is lost.
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                (*sink)(span.clone(), probs, failed);
+            }))
+            .is_err()
+            {
+                shared.stats.shard_panics.fetch_add(1, Ordering::Relaxed);
+            }
         }
+        latch.complete(span, failed);
+    }
+}
+
+/// Scan the other shards' rings for a queued task, nearest neighbor first.
+fn steal(thief: usize, shared: &PoolShared) -> Option<Task> {
+    let n = shared.rings.len();
+    for d in 1..n {
+        let victim = (thief + d) % n;
+        if let Some(t) = shared.rings[victim].try_pop() {
+            shared.stats.record_steal(thief);
+            return Some(split_stolen(t, victim, shared));
+        }
+    }
+    None
+}
+
+/// Chunked steal: keep the BACK half of a big stolen span and requeue the
+/// front half on the victim's ring, where the victim (or another thief)
+/// finds it — each steal takes half the remaining span, so recursive
+/// halving drains a hot shard's backlog in O(log) steals. Small tasks move
+/// whole; a refilled victim ring also moves the task whole.
+fn split_stolen(t: Task, victim: usize, shared: &PoolShared) -> Task {
+    if t.n < 2 * shared.min_task_rows {
+        return t;
+    }
+    let keep = t.n / 2;
+    let leave = t.n - keep;
+    let rest = Task {
+        rows_len: leave * t.row_len,
+        n: leave,
+        ..t
     };
-    // SAFETY: the latch outlives the submitter's wait; `complete` is the
-    // LAST touch (nothing may follow the final countdown).
-    unsafe { (*task.batch).complete(failed_span) };
+    // SAFETY: window views over the stolen task's (live, disjoint) range —
+    // `rest` covers rows [0, leave), `stolen` rows [leave, n).
+    let stolen = Task {
+        rows: unsafe { t.rows.add(leave * t.row_len) },
+        rows_len: keep * t.row_len,
+        n: keep,
+        out: unsafe { t.out.add(leave) },
+        span_start: t.span_start + leave,
+        ..t
+    };
+    match shared.rings[victim].push(rest) {
+        Ok(()) => {
+            shared.stats.steal_splits.fetch_add(1, Ordering::Relaxed);
+            // The requeued remainder is a NEW span: keep the
+            // submitted == completed + inline invariant intact.
+            shared.stats.spans_submitted.fetch_add(1, Ordering::Relaxed);
+            shared.wake_for_push();
+            stolen
+        }
+        Err(_) => t,
+    }
+}
+
+/// Pop from the worker's own ring, falling back to a steal when allowed.
+fn pop_or_steal(shard: usize, shared: &PoolShared, allow_steal: bool) -> Option<Task> {
+    if let Some(t) = shared.rings[shard].try_pop() {
+        return Some(t);
+    }
+    if allow_steal {
+        steal(shard, shared)
+    } else {
+        None
+    }
+}
+
+/// Worker-side task acquisition: spin on the own ring (stealing
+/// periodically), then park. Returns `None` only when `shutdown` is set AND
+/// every ring has drained — queued work is always finished before a worker
+/// exits, so no submitter is left waiting on a latch that nobody will hit.
+fn acquire(shard: usize, shared: &PoolShared) -> Option<Task> {
+    loop {
+        for spin in 0..96u32 {
+            if let Some(t) = shared.rings[shard].try_pop() {
+                return Some(t);
+            }
+            if shared.steal && spin % 32 == 31 {
+                if let Some(t) = steal(shard, shared) {
+                    return Some(t);
+                }
+            }
+            if spin % 16 == 15 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let guard = shared
+            .parker
+            .lock
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        shared.parker.sleepers.fetch_add(1, Ordering::Relaxed);
+        // Advertise the sleep, THEN re-check the rings — the SeqCst fence
+        // pairs with the one in `wake_for_push` (see there), so a push
+        // racing this park is seen by exactly one side.
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let shutting_down = shared.shutdown.load(Ordering::SeqCst);
+        // During shutdown every worker scans every ring (steal or not) so
+        // the drain guarantee holds.
+        if let Some(t) = pop_or_steal(shard, shared, shared.steal || shutting_down) {
+            shared.parker.sleepers.fetch_sub(1, Ordering::Relaxed);
+            return Some(t);
+        }
+        if shutting_down {
+            shared.parker.sleepers.fetch_sub(1, Ordering::Relaxed);
+            return None;
+        }
+        // The fence handshake makes wakeups reliable; the long timeout
+        // only bounds the damage of an OS-level anomaly. Idle workers
+        // wake ~20×/s instead of spinning.
+        let (guard, _) = shared
+            .parker
+            .cv
+            .wait_timeout(guard, Duration::from_millis(50))
+            .unwrap_or_else(PoisonError::into_inner);
+        shared.parker.sleepers.fetch_sub(1, Ordering::Relaxed);
+        drop(guard);
+    }
 }
 
 fn worker_loop(shard: usize, shared: Arc<PoolShared>) {
@@ -584,7 +834,7 @@ fn worker_loop(shard: usize, shared: Arc<PoolShared>) {
     // call.
     let mut replicas: Vec<Option<FlatForest>> = Vec::new();
     let mut scratch = ForestScratch::default();
-    while let Some(task) = shared.queue.pop_blocking(&shared.shutdown) {
+    while let Some(task) = acquire(shard, &shared) {
         shared.stats.set_busy(shard, true);
         let model = task.model as usize;
         if replicas.len() <= model {
@@ -638,6 +888,22 @@ mod tests {
                 FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: 0.0 },
             ],
             roots: vec![0],
+            base_score: 0.0,
+            n_features,
+        }
+    }
+
+    /// A deliberately expensive forest: ONE shallow tree whose root is
+    /// repeated `reps` times, so a single small batch grinds a shard for a
+    /// long, tunable time (the "hot neighbor" in the steal tests).
+    fn slow_forest(n_features: usize, reps: usize) -> FlatForest {
+        FlatForest {
+            nodes: vec![
+                FlatNode { feat: 0, thresh: 0.0, lo: 1, value: 0.0 },
+                FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: 1e-7 },
+                FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: -1e-7 },
+            ],
+            roots: vec![0; reps],
             base_score: 0.0,
             n_features,
         }
@@ -713,11 +979,13 @@ mod tests {
         });
         let id = pool.register(poison_forest(row_len));
         let mut rows = vec![0.5f32; n * row_len];
-        // Mark one row in the third shard's sub-range (rows 128..192).
+        // Mark one row in the third task's sub-range (rows 128..192). The
+        // 256-row batch splits into 4×64-row tasks (64 < 2×min_task_rows,
+        // so steal-splits cannot refine the failure span further).
         rows[150 * row_len] = f32::INFINITY;
         let mut out = vec![-1f32; n];
         let failed = pool.predict_spans(id, &rows, row_len, &mut out);
-        assert_eq!(failed, vec![128..192], "exactly the poisoned shard's span");
+        assert_eq!(failed, vec![128..192], "exactly the poisoned task's span");
         let expected = crate::util::sigmoid(0.2) as f32;
         for (r, &p) in out.iter().enumerate() {
             if (128..192).contains(&r) {
@@ -728,7 +996,7 @@ mod tests {
         assert_eq!(pool.stats().panics(), 1);
 
         // Subsequent submissions succeed on ALL shards — the panic did not
-        // wedge the queue or kill a worker.
+        // wedge the rings or kill a worker.
         for round in 0..3 {
             let clean = vec![0.5f32; n * row_len];
             let mut out = vec![0f32; n];
@@ -736,8 +1004,12 @@ mod tests {
             assert!(failed.is_empty(), "round {round}");
             assert!(out.iter().all(|p| p.to_bits() == expected.to_bits()));
         }
-        // Every sub-range task of every batch completed despite the panic.
-        assert_eq!(pool.stats().spans_completed(), 16);
+        // Every sub-range task of every batch completed despite the panic
+        // (no steal-splits possible at this task size — see above).
+        assert_eq!(
+            pool.stats().spans_completed() + pool.stats().inline_runs.load(Ordering::Relaxed),
+            16
+        );
     }
 
     #[test]
@@ -819,12 +1091,13 @@ mod tests {
     #[test]
     fn full_queue_degrades_to_inline_runs_not_deadlock() {
         let (m, d) = trained();
-        // A 2-slot ring with every batch split into 2 tasks and 6
-        // concurrent submitters guarantees push failures.
+        // 2-slot rings with every batch split into several tasks and 6
+        // concurrent submitters guarantee push failures.
         let pool = Arc::new(ShardPool::with_config(ShardPoolConfig {
             n_shards: 2,
             queue_capacity: 2,
             min_task_rows: 8,
+            steal: true,
         }));
         let id = pool.register(FlatForest::from_model(&m));
         let (rows, row_len) = flat_rows(&d, 64);
@@ -841,6 +1114,8 @@ mod tests {
             }
         });
         let st = pool.stats();
+        // Split remainders count as newly submitted spans, so the
+        // conservation law holds under stealing too.
         assert_eq!(
             st.spans_completed() + st.inline_runs.load(Ordering::Relaxed),
             st.spans_submitted.load(Ordering::Relaxed),
@@ -848,12 +1123,184 @@ mod tests {
         );
     }
 
+    /// The work-stealing acceptance scenario: one shard pinned hot by an
+    /// expensive single-task tenant, a cheap probe batch split across the
+    /// rings. Idle shards must steal the probe tasks parked behind the hog
+    /// (splitting the big ones), the probe must complete while the hog is
+    /// still grinding, and results stay bit-identical.
+    #[test]
+    fn idle_shards_steal_from_a_hot_neighbor() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let pool = Arc::new(ShardPool::with_config(ShardPoolConfig {
+            n_shards: 2,
+            min_task_rows: 16,
+            ..Default::default()
+        }));
+        let fast = pool.register(flat.clone());
+        // 31 rows < 2×min_task_rows ⇒ the hog batch is ONE task pinned to
+        // one shard; ~2M repeated roots make it grind for a long time.
+        let slow = pool.register(slow_forest(4, 2_000_000));
+        let (rows, row_len) = flat_rows(&d, 300);
+        let mut reference = vec![0f32; 300];
+        {
+            let mut scratch = ForestScratch::default();
+            flat.predict_flat_rows(&rows, row_len, &mut scratch, &mut reference);
+        }
+
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let pool_hog = pool.clone();
+            let stop = &stop;
+            s.spawn(move || {
+                let hog_rows = vec![0.5f32; 31 * 4];
+                let mut out = vec![0f32; 31];
+                while !stop.load(Ordering::Relaxed) {
+                    assert!(pool_hog.predict_spans(slow, &hog_rows, 4, &mut out).is_empty());
+                }
+            });
+            // Wait until the hog really occupies a shard.
+            while pool.stats().busy_shards() == 0 {
+                std::hint::spin_loop();
+            }
+            for round in 0..10 {
+                let mut out = vec![0f32; 300];
+                // busy ≥ 1 ⇒ adaptive granularity splits ~8 fine tasks
+                // across both rings; the free shard must steal the ones
+                // parked behind the hog for this to complete promptly.
+                let failed = pool.predict_spans(fast, &rows, row_len, &mut out);
+                assert!(failed.is_empty(), "round {round}");
+                for r in 0..300 {
+                    assert_eq!(
+                        out[r].to_bits(),
+                        reference[r].to_bits(),
+                        "round {round} row {r}: stealing must not change results"
+                    );
+                }
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        let st = pool.stats();
+        assert!(st.steals() > 0, "no steals under a pinned-hot shard: {}", st.report());
+        assert!(
+            st.steal_splits.load(Ordering::Relaxed) > 0,
+            "big stolen tasks must split: {}",
+            st.report()
+        );
+    }
+
+    /// The steal=false escape hatch (bench A/B) still serves correctly —
+    /// covering the wake-all parking path.
+    #[test]
+    fn steal_disabled_still_correct() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 3,
+            min_task_rows: 16,
+            steal: false,
+            ..Default::default()
+        });
+        let id = pool.register(flat.clone());
+        let (rows, row_len) = flat_rows(&d, 200);
+        let mut reference = vec![0f32; 200];
+        let mut scratch = ForestScratch::default();
+        flat.predict_flat_rows(&rows, row_len, &mut scratch, &mut reference);
+        for _ in 0..5 {
+            let mut out = vec![0f32; 200];
+            assert!(pool.predict_spans(id, &rows, row_len, &mut out).is_empty());
+            for r in 0..200 {
+                assert_eq!(out[r].to_bits(), reference[r].to_bits(), "row {r}");
+            }
+        }
+        assert_eq!(pool.stats().steals(), 0, "stealing really was off");
+    }
+
+    /// Streamed prediction: every span arrives at the sink exactly once,
+    /// spans tile the batch, streamed probabilities are bit-identical to
+    /// the blocking output, and the out buffer matches too.
+    #[test]
+    fn streamed_sink_delivers_every_span_once_bit_identical() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 4,
+            min_task_rows: 16,
+            ..Default::default()
+        });
+        let id = pool.register(flat.clone());
+        let (rows, row_len) = flat_rows(&d, 300);
+        let mut reference = vec![0f32; 300];
+        let mut scratch = ForestScratch::default();
+        flat.predict_flat_rows(&rows, row_len, &mut scratch, &mut reference);
+
+        let seen: Mutex<Vec<(Range<usize>, Vec<f32>, bool)>> = Mutex::new(Vec::new());
+        let mut out = vec![0f32; 300];
+        let failed = pool.predict_spans_streamed(id, &rows, row_len, &mut out, &|span, probs, failed| {
+            seen.lock().unwrap().push((span, probs.to_vec(), failed));
+        });
+        assert!(failed.is_empty());
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_by_key(|(s, _, _)| s.start);
+        // Disjoint tiling of 0..300.
+        let mut at = 0usize;
+        for (span, probs, failed) in &seen {
+            assert_eq!(span.start, at, "gap or overlap at {at}");
+            assert!(!failed);
+            assert_eq!(probs.len(), span.len());
+            for (k, p) in probs.iter().enumerate() {
+                assert_eq!(p.to_bits(), reference[span.start + k].to_bits());
+            }
+            at = span.end;
+        }
+        assert_eq!(at, 300, "spans must tile the batch");
+        for r in 0..300 {
+            assert_eq!(out[r].to_bits(), reference[r].to_bits(), "row {r}");
+        }
+    }
+
+    /// Streamed fault injection: the poisoned span arrives at the sink as
+    /// failed (empty payload) while every other span streams its rows.
+    #[test]
+    fn streamed_sink_reports_failed_span_mid_stream() {
+        let row_len = 4;
+        let n = 256;
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 4,
+            min_task_rows: 64,
+            ..Default::default()
+        });
+        let id = pool.register(poison_forest(row_len));
+        let mut rows = vec![0.5f32; n * row_len];
+        rows[150 * row_len] = f32::INFINITY;
+        let mut out = vec![0f32; n];
+        let seen: Mutex<Vec<(Range<usize>, usize, bool)>> = Mutex::new(Vec::new());
+        let failed = pool.predict_spans_streamed(id, &rows, row_len, &mut out, &|span, probs, failed| {
+            seen.lock().unwrap().push((span, probs.len(), failed));
+        });
+        assert_eq!(failed, vec![128..192]);
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_by_key(|(s, _, _)| s.start);
+        let mut rows_seen = 0;
+        for (span, n_probs, failed) in &seen {
+            if *failed {
+                assert_eq!(span, &(128..192));
+                assert_eq!(*n_probs, 0, "failed spans carry no payload");
+            } else {
+                assert_eq!(*n_probs, span.len());
+            }
+            rows_seen += span.len();
+        }
+        assert_eq!(rows_seen, n, "every row delivered exactly once, failed or not");
+        assert_eq!(seen.iter().filter(|(_, _, f)| *f).count(), 1);
+    }
+
     #[test]
     fn queue_ring_push_pop_fifo_and_bounds() {
         // Direct ring test (no workers): FIFO within a single producer and
         // exact capacity behavior.
         let q = TaskQueue::new(4);
-        let latch = BatchLatch::new(usize::MAX); // never opens; tasks are dummies
+        let latch = BatchLatch::new(usize::MAX, None); // never opens; tasks are dummies
         let mk = |i: usize| Task {
             model: 0,
             rows: std::ptr::null(),

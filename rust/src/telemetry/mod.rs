@@ -81,6 +81,16 @@ pub struct ServeMetrics {
     pub features_fetched: AtomicU64,
     /// Bytes moved over the RPC boundary (network-communication claim).
     pub rpc_bytes: AtomicU64,
+    /// Streamed sub-batch chunk frames (emitted server-side / consumed
+    /// client-side, whichever side owns this instance).
+    pub stream_chunks: AtomicU64,
+    /// Server side: backend batch start → each streamed chunk's emission.
+    /// The head of this distribution is the latency win streaming buys over
+    /// buffering a whole block into one monolithic response.
+    pub chunk_emit: Histogram,
+    /// Client side: block arrival → each fallback sub-span's completion
+    /// (the per-chunk analogue of `block_rpc_complete`).
+    pub block_span_complete: Histogram,
 }
 
 impl ServeMetrics {
@@ -111,6 +121,8 @@ impl ServeMetrics {
         self.backend_exec.reset();
         self.block_stage1_complete.reset();
         self.block_rpc_complete.reset();
+        self.chunk_emit.reset();
+        self.block_span_complete.reset();
         for c in [
             &self.stage1_hits,
             &self.rpc_calls,
@@ -118,9 +130,25 @@ impl ServeMetrics {
             &self.rpc_cpu_ns,
             &self.features_fetched,
             &self.rpc_bytes,
+            &self.stream_chunks,
         ] {
             c.store(0, Ordering::Relaxed);
         }
+    }
+
+    /// Pick a block-pipeline overlap depth (1–4) from the live per-stage
+    /// completion gap: while one block's fallback RPC is outstanding
+    /// (`block_rpc_complete` mean), roughly `gap / stage1` further blocks
+    /// can run their stage-1 pass (`block_stage1_complete` mean) under it.
+    /// With no history (or an RPC that completes as fast as stage 1) the
+    /// answer is 1 — no overlap is worth holding results back for.
+    pub fn suggested_pipeline_depth(&self) -> usize {
+        let s1 = self.block_stage1_complete.mean_ns();
+        let rpc = self.block_rpc_complete.mean_ns();
+        if self.block_rpc_complete.count() == 0 || s1 <= 0.0 || rpc <= s1 {
+            return 1;
+        }
+        (1.0 + (rpc - s1) / s1).min(4.0) as usize
     }
 
     /// Fraction of requests served by stage 1.
@@ -155,33 +183,58 @@ impl ServeMetrics {
                 self.block_rpc_complete.summary_ms(),
             ));
         }
+        let chunks = self.stream_chunks.load(Ordering::Relaxed);
+        if chunks > 0 {
+            s.push_str(&format!("\nstream chunks: {chunks}"));
+            if self.chunk_emit.count() > 0 {
+                s.push_str(&format!("  chunk-emit: {}", self.chunk_emit.summary_ms()));
+            }
+            if self.block_span_complete.count() > 0 {
+                s.push_str(&format!(
+                    "  span-done: {}",
+                    self.block_span_complete.summary_ms()
+                ));
+            }
+        }
         s
     }
 }
 
-/// Shard-per-core pool telemetry: per-shard occupancy and task counters
-/// plus queue-depth tracking for the shared MPMC ring
+/// Shard-per-core pool telemetry: per-shard occupancy, task and steal
+/// counters plus queue-depth tracking for the per-shard MPMC rings
 /// (see [`crate::runtime::ShardPool`]).
 ///
 /// Gauges are racy by design (monitoring, not synchronization); counters
 /// follow a strict discipline — every count is recorded *before* the
 /// batch's completion latch opens, so a submitter returning from a pool
-/// call observes totals that already include its own batch.
-#[derive(Debug, Default)]
+/// call observes totals that already include its own batch. (Steal/split
+/// counters are the exception: a steal is a scheduling event, not a
+/// completion, and may land just after the latch it raced.)
+#[derive(Default)]
 pub struct ShardStats {
     /// Per-shard executed task counts.
     shard_tasks: Vec<AtomicU64>,
     /// Per-shard busy gauge (1 while a task is executing on that shard).
     shard_busy: Vec<AtomicU64>,
-    /// Sub-range tasks submitted across all batches.
+    /// Per-shard counts of tasks stolen BY that shard from a neighbor's
+    /// ring (the thief's side of the work-stealing protocol).
+    shard_steals: Vec<AtomicU64>,
+    /// Sub-range tasks submitted across all batches (split remainders
+    /// count as new spans when requeued).
     pub spans_submitted: AtomicU64,
-    /// Tasks run inline on the submitter because the ring was full
+    /// Stolen tasks split in half (thief kept the back half, remainder
+    /// requeued on the victim's ring).
+    pub steal_splits: AtomicU64,
+    /// Tasks run inline on the submitter because the rings were full
     /// (backpressure events).
     pub inline_runs: AtomicU64,
     /// Shard panics contained to their task span.
     pub shard_panics: AtomicU64,
-    /// High-water mark of the shared queue depth.
+    /// High-water mark of the total queued depth across the rings.
     pub queue_depth_hwm: AtomicU64,
+    /// Per-chunk (sub-range task) execution latency on the shards — the
+    /// granularity at which streamed responses complete.
+    pub chunk_exec: Histogram,
 }
 
 impl ShardStats {
@@ -189,6 +242,7 @@ impl ShardStats {
         ShardStats {
             shard_tasks: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
             shard_busy: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+            shard_steals: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
             ..Default::default()
         }
     }
@@ -231,6 +285,21 @@ impl ShardStats {
         self.shard_panics.load(Ordering::Relaxed)
     }
 
+    /// Record a task stolen by `thief` from a neighbor's ring.
+    pub fn record_steal(&self, thief: usize) {
+        self.shard_steals[thief].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Tasks stolen by shard `i`.
+    pub fn steals_by(&self, shard: usize) -> u64 {
+        self.shard_steals[shard].load(Ordering::Relaxed)
+    }
+
+    /// Tasks stolen across all shards.
+    pub fn steals(&self) -> u64 {
+        self.shard_steals.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
     /// One-line report for logs: per-shard task counts + global counters.
     pub fn report(&self) -> String {
         let per_shard: Vec<String> = self
@@ -238,11 +307,18 @@ impl ShardStats {
             .iter()
             .map(|c| c.load(Ordering::Relaxed).to_string())
             .collect();
+        let steals: Vec<String> = self
+            .shard_steals
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed).to_string())
+            .collect();
         format!(
-            "shards[{}] tasks/shard=[{}] submitted={} inline={} panics={} busy={} q_hwm={}",
+            "shards[{}] tasks/shard=[{}] steals/shard=[{}] submitted={} splits={} inline={} panics={} busy={} q_hwm={}",
             self.n_shards(),
             per_shard.join(","),
+            steals.join(","),
             self.spans_submitted.load(Ordering::Relaxed),
+            self.steal_splits.load(Ordering::Relaxed),
             self.inline_runs.load(Ordering::Relaxed),
             self.panics(),
             self.busy_shards(),
@@ -267,15 +343,62 @@ mod tests {
         s.note_queue_depth(2); // hwm keeps the max
         s.spans_submitted.fetch_add(4, Ordering::Relaxed);
         s.inline_runs.fetch_add(1, Ordering::Relaxed);
+        s.record_steal(1);
+        s.record_steal(1);
+        s.steal_splits.fetch_add(1, Ordering::Relaxed);
+        s.chunk_exec.record(1_000);
         assert_eq!(s.spans_completed(), 3);
         assert_eq!(s.tasks_on(2), 2);
         assert_eq!(s.busy_shards(), 1);
+        assert_eq!(s.steals_by(1), 2);
+        assert_eq!(s.steals(), 2);
         assert_eq!(s.queue_depth_hwm.load(Ordering::Relaxed), 5);
+        assert_eq!(s.chunk_exec.count(), 1);
         let rep = s.report();
         assert!(rep.contains("tasks/shard=[1,0,2]"), "{rep}");
+        assert!(rep.contains("steals/shard=[0,2,0]"), "{rep}");
+        assert!(rep.contains("splits=1"), "{rep}");
         assert!(rep.contains("q_hwm=5"), "{rep}");
         s.set_busy(1, false);
         assert_eq!(s.busy_shards(), 0);
+    }
+
+    #[test]
+    fn suggested_depth_tracks_completion_gap() {
+        let m = ServeMetrics::new();
+        // No history: no overlap worth holding results for.
+        assert_eq!(m.suggested_pipeline_depth(), 1);
+        // RPC as fast as stage 1: still depth 1.
+        m.block_stage1_complete.record(1_000);
+        m.block_rpc_complete.record(1_000);
+        assert_eq!(m.suggested_pipeline_depth(), 1);
+        // RPC ~3× stage 1: two extra blocks fit under the outstanding RPC.
+        m.reset_all();
+        m.block_stage1_complete.record(1_000);
+        m.block_rpc_complete.record(3_000);
+        assert_eq!(m.suggested_pipeline_depth(), 3);
+        // A huge gap saturates at the depth-4 cap.
+        m.reset_all();
+        m.block_stage1_complete.record(1_000);
+        m.block_rpc_complete.record(1_000_000);
+        assert_eq!(m.suggested_pipeline_depth(), 4);
+    }
+
+    #[test]
+    fn stream_metrics_recorded_and_reported() {
+        let m = ServeMetrics::new();
+        assert!(!m.report().contains("stream chunks"));
+        m.stream_chunks.fetch_add(3, Ordering::Relaxed);
+        m.chunk_emit.record(2_000);
+        m.block_span_complete.record(4_000);
+        let rep = m.report();
+        assert!(rep.contains("stream chunks: 3"), "{rep}");
+        assert!(rep.contains("chunk-emit"), "{rep}");
+        assert!(rep.contains("span-done"), "{rep}");
+        m.reset_all();
+        assert_eq!(m.stream_chunks.load(Ordering::Relaxed), 0);
+        assert_eq!(m.chunk_emit.count(), 0);
+        assert_eq!(m.block_span_complete.count(), 0);
     }
 
     #[test]

@@ -1,123 +1,21 @@
-//! Work-stealing-free fixed thread pool and data-parallel helpers.
+//! Data-parallel helpers for the TRAINERS — not a serving pool.
 //!
-//! The offline build has no `rayon`/`tokio`; this module provides the
-//! parallelism substrate: a fixed pool with a shared injector queue for the
-//! serving stack, and `parallel_for_chunks` / `parallel_map` built on
-//! `std::thread::scope` for the trainers (GBDT histogram building, per-bin LR
-//! training, AutoML sweeps).
+//! The offline build has no `rayon`/`tokio`; `parallel_for_chunks` /
+//! `parallel_map` are built on `std::thread::scope` for the training-time
+//! workloads (GBDT histogram building, per-bin LR training, AutoML sweeps),
+//! where thread spawn cost is amortized over seconds of compute and a
+//! persistent pool would buy nothing.
+//!
+//! The crate's ONE persistent worker pool is the serving engine,
+//! [`crate::runtime::ShardPool`] — per-shard task rings, work-stealing,
+//! panic containment, streamed completion. An earlier general-purpose
+//! `ThreadPool` (shared FIFO injector queue, no stealing) lived here too;
+//! it had no users outside its own tests and was deleted rather than be a
+//! second, worse pool to maintain. Reach for `ShardPool` for anything
+//! long-lived and latency-sensitive, and for these helpers in offline
+//! training code.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-struct Shared {
-    queue: Mutex<std::collections::VecDeque<Job>>,
-    available: Condvar,
-    shutdown: Mutex<bool>,
-    active: AtomicUsize,
-}
-
-/// Fixed-size thread pool with a shared FIFO queue.
-pub struct ThreadPool {
-    shared: Arc<Shared>,
-    workers: Vec<thread::JoinHandle<()>>,
-    size: usize,
-}
-
-impl ThreadPool {
-    pub fn new(size: usize) -> Self {
-        let size = size.max(1);
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(std::collections::VecDeque::new()),
-            available: Condvar::new(),
-            shutdown: Mutex::new(false),
-            active: AtomicUsize::new(0),
-        });
-        let workers = (0..size)
-            .map(|i| {
-                let shared = shared.clone();
-                thread::Builder::new()
-                    .name(format!("pool-{i}"))
-                    .spawn(move || worker_loop(shared))
-                    .expect("spawn pool worker")
-            })
-            .collect();
-        ThreadPool {
-            shared,
-            workers,
-            size,
-        }
-    }
-
-    pub fn size(&self) -> usize {
-        self.size
-    }
-
-    /// Number of jobs queued or running.
-    pub fn in_flight(&self) -> usize {
-        let queued = self.shared.queue.lock().unwrap().len();
-        queued + self.shared.active.load(Ordering::Relaxed)
-    }
-
-    /// Submit a job.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        let mut q = self.shared.queue.lock().unwrap();
-        q.push_back(Box::new(f));
-        drop(q);
-        self.shared.available.notify_one();
-    }
-
-    /// Submit a job returning a receiver for its result.
-    pub fn submit<T, F>(&self, f: F) -> mpsc::Receiver<T>
-    where
-        T: Send + 'static,
-        F: FnOnce() -> T + Send + 'static,
-    {
-        let (tx, rx) = mpsc::channel();
-        self.execute(move || {
-            let _ = tx.send(f());
-        });
-        rx
-    }
-}
-
-impl Drop for ThreadPool {
-    fn drop(&mut self) {
-        *self.shared.shutdown.lock().unwrap() = true;
-        self.shared.available.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-    }
-}
-
-fn worker_loop(shared: Arc<Shared>) {
-    loop {
-        let job = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if let Some(j) = q.pop_front() {
-                    break Some(j);
-                }
-                if *shared.shutdown.lock().unwrap() {
-                    break None;
-                }
-                q = shared.available.wait(q).unwrap();
-            }
-        };
-        match job {
-            Some(j) => {
-                shared.active.fetch_add(1, Ordering::Relaxed);
-                j();
-                shared.active.fetch_sub(1, Ordering::Relaxed);
-            }
-            None => return,
-        }
-    }
-}
 
 /// Default worker count: physical-ish parallelism, capped for CI sanity.
 pub fn default_threads() -> usize {
@@ -181,39 +79,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
-
-    #[test]
-    fn pool_runs_all_jobs() {
-        let pool = ThreadPool::new(4);
-        let counter = Arc::new(AtomicU64::new(0));
-        let rxs: Vec<_> = (0..100)
-            .map(|i| {
-                let c = counter.clone();
-                pool.submit(move || {
-                    c.fetch_add(i, Ordering::Relaxed);
-                    i
-                })
-            })
-            .collect();
-        let sum: u64 = rxs.into_iter().map(|rx| rx.recv().unwrap()).sum();
-        assert_eq!(sum, 4950);
-        assert_eq!(counter.load(Ordering::Relaxed), 4950);
-    }
-
-    #[test]
-    fn pool_drop_joins() {
-        let pool = ThreadPool::new(2);
-        let c = Arc::new(AtomicU64::new(0));
-        for _ in 0..10 {
-            let c = c.clone();
-            pool.execute(move || {
-                thread::sleep(std::time::Duration::from_millis(1));
-                c.fetch_add(1, Ordering::Relaxed);
-            });
-        }
-        drop(pool); // must not hang; jobs already queued may be dropped or run
-    }
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn parallel_map_preserves_order() {

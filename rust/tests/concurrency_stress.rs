@@ -170,6 +170,102 @@ fn interleaved_async_clients_match_sync_bit_for_bit() {
     });
 }
 
+/// Streamed responses under concurrency: a fine-grained server pool (8-row
+/// tasks) makes every window-sized RPC stream in several CHUNK frames, with
+/// N threads' streams multiplexed on the same pooled connections. Chunks of
+/// different requests interleave arbitrarily on the wire; the demux plus
+/// [`StreamAssembler`] reassembly must still hand every caller ITS rows,
+/// bit-for-bit — and incremental `poll_spans` consumption must agree with
+/// the joined result.
+#[test]
+fn interleaved_streamed_responses_demux_and_reassemble_bit_for_bit() {
+    use lrwbins::runtime::{ShardPool, ShardPoolConfig};
+
+    let spec = datagen::preset("aci").unwrap().with_rows(4000);
+    let data = datagen::generate(&spec, 5);
+    let model = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::quick());
+    let pool = std::sync::Arc::new(ShardPool::with_config(ShardPoolConfig {
+        n_shards: 4,
+        min_task_rows: 8,
+        ..Default::default()
+    }));
+    let metrics = Arc::new(ServeMetrics::new());
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(NativeBackend::with_pool(model.clone(), pool)),
+        Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+        BatcherConfig::default(),
+        metrics.clone(),
+    )
+    .expect("server");
+    let client = RpcClient::connect(server.addr).expect("client");
+
+    const STREAM_WINDOW: usize = 48; // ≥ 2×min_task_rows ⇒ streams
+    let nf = data.n_features();
+    let expected: Vec<u32> = (0..N_ROWS)
+        .map(|r| model.predict_one(&data.row(r)).to_bits())
+        .collect();
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let client = &client;
+            let data = &data;
+            let expected = &expected;
+            s.spawn(move || {
+                for i in 0..ITERS {
+                    let start = (t * 41 + i * 17) % (N_ROWS - STREAM_WINDOW);
+                    let mut flat = Vec::new();
+                    for r in start..start + STREAM_WINDOW {
+                        flat.extend_from_slice(&data.row(r));
+                    }
+                    let mut pending = client.predict_async(&flat, nf).expect("issue");
+                    if (t + i) % 2 == 0 {
+                        // Incremental consumption: drain spans as they land,
+                        // then join — both views must match the model.
+                        let mut rows_seen = vec![false; STREAM_WINDOW];
+                        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+                        while rows_seen.iter().any(|&b| !b) {
+                            for span in pending.poll_spans() {
+                                assert!(!span.failed, "t{t} i{i}");
+                                for (k, p) in span.probs.iter().enumerate() {
+                                    let row = start + span.span.start + k;
+                                    assert!(!rows_seen[span.span.start + k], "duplicate row");
+                                    rows_seen[span.span.start + k] = true;
+                                    assert_eq!(
+                                        p.to_bits(),
+                                        expected[row],
+                                        "t{t} i{i} window {start} span {:?} row {k}: \
+                                         chunk routed to the wrong stream?",
+                                        span.span
+                                    );
+                                }
+                            }
+                            assert!(std::time::Instant::now() < deadline, "t{t} i{i} stalled");
+                        }
+                    }
+                    let probs = pending.wait().expect("join");
+                    assert_eq!(probs.len(), STREAM_WINDOW);
+                    for (k, p) in probs.iter().enumerate() {
+                        assert_eq!(
+                            p.to_bits(),
+                            expected[start + k],
+                            "t{t} i{i} window {start} row {k}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+    // The server really streamed (several chunks per request across the
+    // storm), not just answered monolithically.
+    assert!(
+        metrics.stream_chunks.load(std::sync::atomic::Ordering::Relaxed)
+            >= (THREADS * ITERS) as u64,
+        "expected chunked streams: {}",
+        metrics.stream_chunks.load(std::sync::atomic::Ordering::Relaxed)
+    );
+}
+
 #[test]
 fn async_and_sync_calls_share_a_client_safely() {
     // A second, smaller storm where raw async predicts and blocking

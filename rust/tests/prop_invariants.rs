@@ -201,7 +201,8 @@ fn protocol_fuzz_never_panics() {
         let bytes: Vec<u8> = (0..len).map(|_| g.usize(0..256) as u8).collect();
         // Must return Ok(None) / Ok(Some) / Err — never panic.
         let _ = proto::read_request(&mut std::io::Cursor::new(bytes.clone()));
-        let _ = proto::read_response(&mut std::io::Cursor::new(bytes));
+        let _ = proto::read_response(&mut std::io::Cursor::new(bytes.clone()));
+        let _ = proto::read_client_frame(&mut std::io::Cursor::new(bytes));
         Ok(())
     });
 }
@@ -234,6 +235,7 @@ fn batcher_conservation_under_random_load() {
                 max_batch: g.usize(1..32),
                 max_wait: std::time::Duration::from_micros(g.usize(0..500) as u64),
                 workers: g.usize(1..4),
+                stream: g.bool(0.5),
             },
             Arc::new(ServeMetrics::new()),
         )
