@@ -1,0 +1,190 @@
+"""Mirror-simulation of the Rust lane-tiled stage-1 binning kernels.
+
+The build container ships no Rust toolchain (see .claude/skills/verify/
+SKILL.md), so this file mirrors the arithmetic of
+``rust/src/lrwbins/tables.rs`` — the scalar reference kernel
+(``bins_scalar``), the lane-tiled kernel (``bins_tiled``: ``[f32; LANE]``
+row chunks against the edge-tiled ``q_max x LANE`` quantile table, fused
+f64 normalize for bin-only features, scalar remainder tail) — with explicit
+f32/f64 dtype control, and proves them bit-identical over randomized and
+adversarial inputs (NaN, +/-inf, denormals, exact edge ties, constant
+columns, every lane remainder).
+
+This validates the ALGORITHM (lane tiling and normalize fusion cannot
+change bits when vectorization runs across rows); the Rust build itself is
+verified by tests/simd_parity.rs once a toolchain is present.
+"""
+
+import numpy as np
+
+LANE = 8  # mirrors lrwbins::tables::LANE
+
+
+def normalize_scalar(v, mean, inv):
+    """((v as f64 - mean) * inv_std) as f32 — one value, one rounding."""
+    return np.float32((np.float64(v) - np.float64(mean)) * np.float64(inv))
+
+
+def scalar_bins(raw_cols, edges_per_feat, strides, means, invs):
+    """Per-row reference: mirrors ServingTables::bin_of / bins_scalar.
+
+    raw_cols: list of 1-D float32 arrays, one per binning feature.
+    """
+    n = len(raw_cols[0])
+    out = np.zeros(n, dtype=np.uint32)
+    for col, edges, stride, mean, inv in zip(
+        raw_cols, edges_per_feat, strides, means, invs
+    ):
+        for r in range(n):
+            x = normalize_scalar(col[r], mean, inv)
+            b = np.uint32(0)
+            for e in edges:  # edge order, exact u32 adds
+                b += np.uint32(x > e)
+            out[r] += b * np.uint32(stride)
+    return out
+
+
+def tiled_bins(raw_cols, edges_per_feat, strides, means, invs):
+    """Lane-tiled kernel: mirrors ServingTables::bins_tiled.
+
+    Edge-tiled table: each edge pre-replicated LANE wide; rows advance in
+    [f32; LANE] chunks; the fused normalize happens per chunk in f64 with a
+    single f64->f32 rounding per value (numpy casts round to nearest even,
+    exactly like Rust `as f32`); the remainder tail reuses the per-row
+    scalar arithmetic.
+    """
+    n = len(raw_cols[0])
+    out = np.zeros(n, dtype=np.uint32)
+    for col, edges, stride, mean, inv in zip(
+        raw_cols, edges_per_feat, strides, means, invs
+    ):
+        # q_max x LANE edge tiles (each row of the tile is one edge,
+        # broadcast across the lane).
+        tiles = np.repeat(np.asarray(edges, dtype=np.float32), LANE).reshape(
+            len(edges), LANE
+        )
+        r = 0
+        while r + LANE <= n:
+            chunk = col[r : r + LANE]
+            x = ((chunk.astype(np.float64) - mean) * inv).astype(np.float32)
+            c = np.zeros(LANE, dtype=np.uint32)
+            for e in range(tiles.shape[0]):
+                c += (x > tiles[e]).astype(np.uint32)
+            out[r : r + LANE] += c * np.uint32(stride)
+            r += LANE
+        for rr in range(r, n):
+            x = normalize_scalar(col[rr], mean, inv)
+            b = np.uint32(0)
+            for e in edges:
+                b += np.uint32(x > e)
+            out[rr] += b * np.uint32(stride)
+    return out
+
+
+def synth_tables(rng, n_bin, q_max):
+    """Sorted finite edges padded with +inf; mixed-radix strides."""
+    edges_per_feat = []
+    sizes = []
+    for _ in range(n_bin):
+        k = int(rng.integers(1, q_max + 1))
+        edges = np.sort(rng.standard_normal(k).astype(np.float32))
+        edges = np.concatenate(
+            [edges, np.full(q_max - k, np.float32(np.inf), dtype=np.float32)]
+        )
+        edges_per_feat.append(edges)
+        sizes.append(k + 1)
+    strides = []
+    total = 1
+    for s in sizes:
+        strides.append(total)
+        total *= s
+    means = [0.0 if i % 2 == 0 else float(rng.standard_normal()) for i in range(n_bin)]
+    invs = [1.0 if i % 2 == 0 else float(rng.uniform(0.2, 3.0)) for i in range(n_bin)]
+    return edges_per_feat, strides, means, invs
+
+
+def synth_cols(rng, edges_per_feat, means, n):
+    """Adversarial raw columns: NaN, +/-inf, denormals, exact edge ties on
+    identity-normalized features, one constant column."""
+    cols = []
+    for i, edges in enumerate(edges_per_feat):
+        col = (rng.standard_normal(n) * 1.5).astype(np.float32)
+        for _ in range(max(1, n // 8)):
+            r = int(rng.integers(n))
+            kind = int(rng.integers(5))
+            if kind == 0:
+                col[r] = np.float32(np.nan)
+            elif kind == 1:
+                col[r] = np.float32(np.inf)
+            elif kind == 2:
+                col[r] = np.float32(-np.inf)
+            elif kind == 3:
+                # denormal bit pattern (optionally negative)
+                bits = int(rng.integers(1, 0x007FFFFF))
+                if rng.integers(2):
+                    bits |= 0x80000000
+                col[r] = np.array([bits], dtype=np.uint32).view(np.float32)[0]
+            elif kind == 4 and means[i] == 0.0:
+                e = edges[int(rng.integers(len(edges)))]
+                if np.isfinite(e):
+                    col[r] = e  # exact tie: x > e must be False
+        cols.append(col)
+    if len(cols) > 1:
+        cols[-1][:] = np.float32(0.25)  # constant column
+    return cols
+
+
+def test_tiled_binning_bit_identical_to_scalar():
+    rng = np.random.default_rng(0x51D)
+    checked = 0
+    for case in range(40):
+        n_bin = int(rng.integers(1, 5))
+        q_max = int(rng.integers(1, 5))
+        edges, strides, means, invs = synth_tables(rng, n_bin, q_max)
+        # Sizes sweep every lane remainder plus full tiles.
+        for n in list(range(1, LANE)) + [LANE, LANE + 1, 3 * LANE + 5]:
+            cols = synth_cols(rng, edges, means, n)
+            a = scalar_bins(cols, edges, strides, means, invs)
+            b = tiled_bins(cols, edges, strides, means, invs)
+            assert np.array_equal(a, b), f"case {case} n={n}: {a} vs {b}"
+            checked += n
+    assert checked > 2000  # the battery really ran
+
+
+def test_fused_normalize_single_rounding_matches_scalar():
+    # The fused lane normalize — vectorized (f64 - mean) * inv -> f32 —
+    # must produce the scalar expression's bits for every lane, including
+    # denormal inputs and results.
+    rng = np.random.default_rng(7)
+    vals = np.concatenate(
+        [
+            (rng.standard_normal(64) * 1e3).astype(np.float32),
+            np.array(
+                [0.0, -0.0, np.inf, -np.inf, np.nan, 1e-45, -1e-45, 3.4e38],
+                dtype=np.float32,
+            ),
+        ]
+    )
+    for mean, inv in [(0.0, 1.0), (0.731, 1.9), (-12.5, 0.037)]:
+        lane = ((vals.astype(np.float64) - mean) * inv).astype(np.float32)
+        for k, v in enumerate(vals):
+            s = normalize_scalar(v, mean, inv)
+            assert lane[k].tobytes() == s.tobytes(), (
+                f"lane {k}: {lane[k]!r} vs {s!r} (v={v!r}, mean={mean}, inv={inv})"
+            )
+
+
+def test_edge_tie_lands_in_lower_bin_on_both_paths():
+    # Identity normalization, edges [-0.75, 0.5, +inf]: a value bit-equal
+    # to an edge is NOT above it; one ULP above is.
+    edges = [np.array([-0.75, 0.5, np.inf], dtype=np.float32)]
+    strides, means, invs = [1], [0.0], [1.0]
+    up = lambda v: np.nextafter(np.float32(v), np.float32(np.inf), dtype=np.float32)
+    col = np.array(
+        [-0.75, up(-0.75), 0.5, up(0.5), np.nan, np.inf] * 2, dtype=np.float32
+    )
+    expect = np.array([0, 1, 1, 2, 0, 2] * 2, dtype=np.uint32)
+    a = scalar_bins([col], edges, strides, means, invs)
+    b = tiled_bins([col], edges, strides, means, invs)
+    assert np.array_equal(a, expect)
+    assert np.array_equal(b, expect)

@@ -5,6 +5,11 @@
 //!                columnar block variants at batch = {1, 8, 64, 256};
 //!   L3 native:   GBDT predict_one vs FlatForest predict_block at the same
 //!                batch sizes;
+//!   stage1_simd: the dispatchable stage-1 block kernels A/B'd per tier —
+//!                forced scalar vs lane-tiled vs AVX2 intrinsics (where
+//!                detected) at batch {8, 64, 256, 1024};
+//!   forest_soa:  SoA flat-forest lane walk vs the per-row scalar walk at
+//!                the same batch grid;
 //!   shard_scaling: ShardPool (persistent shard-per-core engine) rows/sec
 //!                at shards {1, 2, 4, 8} × batch {64, 256, 1024};
 //!   steal_skew:  block completion under ONE pinned-hot shard, steal=on vs
@@ -55,7 +60,7 @@ fn main() {
     );
     let tables = ServingTables::from_model(&first);
     let second = gbdt::train(&data, &GbdtParams::default());
-    let rows: Vec<Vec<f32>> = (0..256).map(|r| data.row(r)).collect();
+    let rows: Vec<Vec<f32>> = (0..1024).map(|r| data.row(r)).collect();
 
     // --- L3 embedded hot path (scalar baselines) --------------------------
     let mut i = 0usize;
@@ -104,6 +109,68 @@ fn main() {
             batch as u64,
             || {
                 flat.predict_block(&block, &mut forest_scratch, &mut preds);
+                std::hint::black_box(preds.last());
+            },
+        );
+    }
+
+    // --- stage1_simd: dispatchable stage-1 kernels, tier vs tier -----------
+    // The same tables forced onto each kernel tier (bit-identical by the
+    // simd_parity battery): scalar reference vs portable lane-tiled vs AVX2
+    // intrinsics where the machine has them. The spread between tiers is
+    // the PR's stage-1 win; the stderr line below records which tier
+    // runtime dispatch picks on this machine (that tier's rows ARE the
+    // production numbers — no separate tier=auto entry is emitted).
+    {
+        use lrwbins::lrwbins::Stage1Dispatch;
+        eprintln!(
+            "  [stage1_simd] detected tier: {:?}",
+            Stage1Dispatch::detect()
+        );
+        for tier in Stage1Dispatch::available_tiers() {
+            let name = tier.name();
+            let mut t = tables.clone();
+            assert_eq!(t.set_dispatch(tier), tier);
+            for &batch in &[8usize, 64, 256, 1024] {
+                let block = RowBlock::from_rows(&rows[..batch]);
+                bench.run_items(
+                    &format!("stage1_simd bin_of_block (batch={batch}, tier={name})"),
+                    batch as u64,
+                    || {
+                        t.bin_of_block(&block, &mut tab_scratch, &mut bins);
+                        std::hint::black_box(bins.last());
+                    },
+                );
+                bench.run_items(
+                    &format!("stage1_simd evaluate_block (batch={batch}, tier={name})"),
+                    batch as u64,
+                    || {
+                        t.evaluate_block(&block, &mut tab_scratch, &mut probs, &mut routed);
+                        std::hint::black_box(probs.last());
+                    },
+                );
+            }
+        }
+    }
+
+    // --- forest_soa: SoA lane walk vs per-row scalar walk ------------------
+    // Same flat forest, same blocks: the interleaved 16-lane walk over the
+    // SoA arena against the plain one-row-at-a-time traversal.
+    for &batch in &[8usize, 64, 256, 1024] {
+        let block = RowBlock::from_rows(&rows[..batch]);
+        bench.run_items(
+            &format!("forest_soa predict_block lane-walk (batch={batch})"),
+            batch as u64,
+            || {
+                flat.predict_block(&block, &mut forest_scratch, &mut preds);
+                std::hint::black_box(preds.last());
+            },
+        );
+        bench.run_items(
+            &format!("forest_soa predict_block scalar-walk (batch={batch})"),
+            batch as u64,
+            || {
+                flat.predict_block_scalar(&block, &mut forest_scratch, &mut preds);
                 std::hint::black_box(preds.last());
             },
         );
@@ -167,16 +234,16 @@ fn main() {
         let hog_forest = {
             use lrwbins::gbdt::flat::FlatNode;
             use lrwbins::gbdt::{FlatForest, LEAF};
-            FlatForest {
-                nodes: vec![
+            FlatForest::from_nodes(
+                &[
                     FlatNode { feat: 0, thresh: 0.0, lo: 1, value: 0.0 },
                     FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: 1e-7 },
                     FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: -1e-7 },
                 ],
-                roots: vec![0; if quick { 200_000 } else { 1_000_000 }],
-                base_score: 0.0,
-                n_features: row_len,
-            }
+                vec![0; if quick { 200_000 } else { 1_000_000 }],
+                0.0,
+                row_len,
+            )
         };
         let reps = if quick { 40 } else { 200 };
         for &shards in &[2usize, 4, 8] {

@@ -20,6 +20,11 @@ pub struct ServeConfig {
     pub bind: String,
     /// Backend kind: "pjrt" (AOT artifact) or "native" (Rust GBDT).
     pub backend: String,
+    /// Stage-1 block-kernel tier: "auto" (runtime detection) or a forced
+    /// "scalar" | "tiled" | "avx2" for A/B runs — every tier is
+    /// bit-identical (see `lrwbins::tables`), so this is a perf switch,
+    /// never a correctness one.
+    pub stage1_simd: String,
     /// Dynamic batcher.
     pub max_batch: usize,
     pub max_wait_us: u64,
@@ -38,6 +43,7 @@ impl Default for ServeConfig {
             gbdt_path: PathBuf::from("data/model.gbdt.json"),
             bind: "127.0.0.1:7171".into(),
             backend: "pjrt".into(),
+            stage1_simd: "auto".into(),
             max_batch: 128,
             max_wait_us: 200,
             workers: 2,
@@ -56,6 +62,7 @@ impl ServeConfig {
         j.set("gbdt_path", Json::Str(self.gbdt_path.display().to_string()));
         j.set("bind", Json::Str(self.bind.clone()));
         j.set("backend", Json::Str(self.backend.clone()));
+        j.set("stage1_simd", Json::Str(self.stage1_simd.clone()));
         j.set("max_batch", Json::Num(self.max_batch as f64));
         j.set("max_wait_us", Json::Num(self.max_wait_us as f64));
         j.set("workers", Json::Num(self.workers as f64));
@@ -77,6 +84,7 @@ impl ServeConfig {
             gbdt_path: PathBuf::from(s("gbdt_path", &d.gbdt_path.display().to_string())),
             bind: s("bind", &d.bind),
             backend: s("backend", &d.backend),
+            stage1_simd: s("stage1_simd", &d.stage1_simd),
             max_batch: n("max_batch", d.max_batch as f64) as usize,
             max_wait_us: n("max_wait_us", d.max_wait_us as f64) as u64,
             workers: n("workers", d.workers as f64) as usize,
@@ -88,10 +96,16 @@ impl ServeConfig {
         Ok(cfg)
     }
 
+    /// Parsed stage-1 kernel override (`None` = auto-detect).
+    pub fn stage1_dispatch(&self) -> Result<Option<crate::lrwbins::Stage1Dispatch>, String> {
+        crate::lrwbins::Stage1Dispatch::parse(&self.stage1_simd)
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if self.backend != "pjrt" && self.backend != "native" {
             return Err(format!("backend must be pjrt|native, got '{}'", self.backend));
         }
+        self.stage1_dispatch()?;
         if self.max_batch == 0 {
             return Err("max_batch must be > 0".into());
         }
@@ -164,6 +178,20 @@ mod tests {
     #[test]
     fn rejects_bad_backend() {
         let j = Json::parse(r#"{"backend": "gpu"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn stage1_simd_parses_and_rejects() {
+        let j = Json::parse(r#"{"backend": "native", "stage1_simd": "scalar"}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(
+            c.stage1_dispatch().unwrap(),
+            Some(crate::lrwbins::Stage1Dispatch::Scalar)
+        );
+        // Default is auto (None = runtime detection).
+        assert_eq!(ServeConfig::default().stage1_dispatch().unwrap(), None);
+        let j = Json::parse(r#"{"backend": "native", "stage1_simd": "sse9"}"#).unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
     }
 

@@ -33,6 +33,12 @@
 //! completion gap ([`ServeMetrics::suggested_pipeline_depth`]) says the
 //! network can hide, instead of a hardwired depth.
 //!
+//! The embedded stage-1 pass itself runs the lane-tiled/AVX2 block kernels
+//! of [`crate::lrwbins::tables`] (runtime-dispatched at table construction,
+//! forceable per coordinator via [`Coordinator::set_stage1_dispatch`]);
+//! every tier is bit-identical, so routing decisions and Table 3 numbers
+//! cannot depend on which machine served the block.
+//!
 //! Per-row accounting matches the scalar path: a hit's latency is the time
 //! until the stage-1 pass delivered it; a miss's latency is the time until
 //! the fallback delivered **its span** (streamed spans complete at their
@@ -41,7 +47,7 @@
 //! the ACTUAL frames moved (one k-row request plus the response frames,
 //! chunked or not), split across the k missed rows.
 
-use crate::lrwbins::{BlockScratch, ServingTables};
+use crate::lrwbins::{BlockScratch, ServingTables, Stage1Dispatch};
 use crate::rpc::client::PendingPredict;
 use crate::rpc::RpcClient;
 use crate::runtime::{ModelId, ShardPool};
@@ -200,6 +206,14 @@ impl Coordinator {
             fetch: None,
             scratch: Mutex::new(CoordScratch::default()),
         }
+    }
+
+    /// Force the stage-1 block-kernel tier (`ServeConfig::stage1_simd`,
+    /// A/B benching — see [`crate::lrwbins::tables`] for the tiers and the
+    /// bit-identity guarantee). Returns the tier actually installed
+    /// (unavailable requests clamp).
+    pub fn set_stage1_dispatch(&mut self, d: Stage1Dispatch) -> Stage1Dispatch {
+        self.tables.set_dispatch(d)
     }
 
     fn pad_for_rpc(&self, row: &[f32], buf: &mut Vec<f32>) {
@@ -1177,6 +1191,36 @@ mod tests {
                 assert_eq!(got[i].1, want[i].1, "block {bi} row {i}");
             }
         }
+    }
+
+    /// The stage-1 kernel tier must be invisible end to end: identical
+    /// routing, identical probabilities, whatever tier the coordinator is
+    /// forced onto.
+    #[test]
+    fn forced_dispatch_tiers_serve_bit_identically() {
+        let (data, mut coord, _server) = setup();
+        let rows: Vec<Vec<f32>> = (0..96).map(|r| data.row(r)).collect();
+        let block = crate::tabular::RowBlock::from_rows(&rows);
+        assert_eq!(
+            coord.set_stage1_dispatch(Stage1Dispatch::Scalar),
+            Stage1Dispatch::Scalar
+        );
+        let reference: Vec<(u32, Served)> = coord
+            .predict_block(&block)
+            .unwrap()
+            .into_iter()
+            .map(|(p, s)| (p.to_bits(), s))
+            .collect();
+        for tier in Stage1Dispatch::available_tiers() {
+            assert_eq!(coord.set_stage1_dispatch(tier), tier);
+            let got = coord.predict_block(&block).unwrap();
+            for (i, (p, s)) in got.iter().enumerate() {
+                assert_eq!(p.to_bits(), reference[i].0, "{tier:?} row {i}");
+                assert_eq!(*s, reference[i].1, "{tier:?} row {i}");
+            }
+        }
+        // Unavailable requests clamp to a tier that can actually run.
+        assert!(coord.set_stage1_dispatch(Stage1Dispatch::Avx2).available());
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! `FlatForest` — the whole GBDT flattened into one contiguous node arena
-//! for the serving hot path.
+//! `FlatForest` — the whole GBDT flattened into one contiguous **SoA** node
+//! arena for the serving hot path.
 //!
 //! # Layout
 //!
@@ -8,33 +8,48 @@
 //! pointer chase with no locality across trees. `FlatForest` re-lays the
 //! forest out for inference:
 //!
-//! * **one arena**: every node of every tree lives in a single
-//!   `Vec<FlatNode>`; a tree is a root index into it, so the forest is one
-//!   allocation and traversal touches one linear address range;
+//! * **one arena, structure-of-arrays**: every node of every tree lives at
+//!   one index into four parallel arrays — `feat`, `thresh`, `lo`, `value`
+//!   — so the forest is four allocations and a traversal step loads **only
+//!   the field it needs**: `feat[i]` to classify the node, then either
+//!   `thresh[i]`/`lo[i]` (interior) or `value[i]` (leaf). The old
+//!   interleaved 16-byte node dragged the unused fields through the cache
+//!   with every load; SoA quadruples the nodes per cache line on the
+//!   `feat`-probe that every step performs.
 //! * **adjacent children**: nodes are re-numbered in BFS order per tree so
-//!   a split's children always sit at `lo` and `lo + 1` — the node is 16
-//!   bytes (4 per cache line) and the branch direction becomes the single
-//!   bit `!(x <= thresh)` added to `lo`, with no `right` pointer to load;
-//! * **tree-major, row-minor blocks**: `predict_block` walks all rows of a
+//!   a split's children always sit at `lo` and `lo + 1` — the branch
+//!   direction is the single bit `!(x <= thresh)` added to `lo`, with no
+//!   `right` pointer to load.
+//! * **tree-major, lane-tiled blocks**: `predict_block` walks all rows of a
 //!   block through one tree before moving to the next, so each tree's top
-//!   levels stay in L1 across the whole block, and it steps a small set of
-//!   row *lanes* in lockstep so the independent node loads of different
-//!   rows overlap in the memory pipeline (the classic decision-forest
-//!   row-blocking/interleaving optimization).
+//!   levels stay in L1 across the whole block, and it steps [`LANES`]
+//!   independent row *walks* in lockstep with a **pending-lane mask**: each
+//!   pass advances every still-walking lane with the branchless
+//!   compare-advance `lo[i] + !(x <= thresh[i])`, lanes that reach a leaf
+//!   drop out of the mask, and the unrelated arena loads of the surviving
+//!   lanes overlap in the memory pipeline (the classic decision-forest
+//!   row-blocking/interleaving optimization; SoA is what lets the widened
+//!   lane count stay fed from L1).
 //!
 //! # Exactness
 //!
-//! Outputs are bit-identical to [`GbdtModel::predict_one`]: the same
-//! `x <= thresh → left` comparison (NaN therefore goes right, as in
-//! training), leaf margins accumulated into an `f64` in tree order starting
-//! from `base_score`, and the same `sigmoid(f64) as f32` at the end.
+//! Outputs are bit-identical to [`GbdtModel::predict_one`]: lanes vectorize
+//! **across rows**, so each row still sees the same `x <= thresh → left`
+//! comparison sequence (NaN therefore goes right, as in training), leaf
+//! margins accumulated into an `f64` in tree order starting from
+//! `base_score`, and the same `sigmoid(f64) as f32` at the end — regardless
+//! of how many lanes travel together or where the remainder tail begins.
+//! [`FlatForest::predict_block_scalar`] keeps the plain per-row walk as the
+//! A/B baseline (`forest_soa` bench section) and the property-test anchor.
 
 use super::tree::LEAF;
 use super::GbdtModel;
 use crate::tabular::RowBlock;
 use crate::util::sigmoid;
 
-/// One arena node. 16 bytes; 4 per cache line.
+/// One build-time node, as emitted by [`Tree::flatten_into`]
+/// (`super::tree::Tree::flatten_into`); [`FlatForest::from_nodes`] shreds
+/// these into the SoA arrays.
 #[derive(Clone, Copy, Debug)]
 pub struct FlatNode {
     /// Split feature, or [`LEAF`].
@@ -48,15 +63,24 @@ pub struct FlatNode {
     pub value: f32,
 }
 
-/// Number of row lanes stepped in lockstep by the block kernel. Eight
-/// in-flight walks are enough to cover an L2 hit's latency without
-/// spilling the lane state out of registers.
-const LANES: usize = 8;
+/// Number of row lanes stepped in lockstep by the block kernel. Sixteen
+/// in-flight walks cover an L2 hit's latency; the SoA arena keeps the
+/// per-step state (a `u32` index per lane plus the shared field arrays)
+/// small enough that the wider tile still lives in registers/L1.
+const LANES: usize = 16;
 
-/// A whole forest in one contiguous arena (see module docs).
+/// A whole forest in one contiguous SoA arena (see module docs).
 #[derive(Clone, Debug, Default)]
 pub struct FlatForest {
-    pub nodes: Vec<FlatNode>,
+    /// Split feature per node, or [`LEAF`].
+    pub feat: Vec<u32>,
+    /// Split threshold per node (unused for leaves).
+    pub thresh: Vec<f32>,
+    /// Left-child index per node; right child is `lo + 1` (unused for
+    /// leaves).
+    pub lo: Vec<u32>,
+    /// Leaf margin contribution per node (zero for interior nodes).
+    pub value: Vec<f32>,
     /// Arena index of each tree's root, in boosting order.
     pub roots: Vec<u32>,
     pub base_score: f64,
@@ -83,30 +107,48 @@ impl FlatForest {
             roots.push(nodes.len() as u32);
             t.flatten_into(&mut nodes);
         }
+        FlatForest::from_nodes(&nodes, roots, m.base_score, m.n_features)
+    }
+
+    /// Shred a build-time AoS node list (BFS-ordered, adjacent children)
+    /// into the SoA arena.
+    pub fn from_nodes(
+        nodes: &[FlatNode],
+        roots: Vec<u32>,
+        base_score: f64,
+        n_features: usize,
+    ) -> FlatForest {
         FlatForest {
-            nodes,
+            feat: nodes.iter().map(|n| n.feat).collect(),
+            thresh: nodes.iter().map(|n| n.thresh).collect(),
+            lo: nodes.iter().map(|n| n.lo).collect(),
+            value: nodes.iter().map(|n| n.value).collect(),
             roots,
-            base_score: m.base_score,
-            n_features: m.n_features,
+            base_score,
+            n_features,
         }
+    }
+
+    /// Nodes in the arena.
+    pub fn n_nodes(&self) -> usize {
+        self.feat.len()
     }
 
     /// Margin for one row — bit-identical to
     /// [`GbdtModel::predict_margin_one`].
     #[inline]
     pub fn predict_margin_one(&self, row: &[f32]) -> f64 {
-        let nodes = &self.nodes;
         let mut m = self.base_score;
         for &root in &self.roots {
             let mut i = root as usize;
             loop {
-                let nd = nodes[i];
-                if nd.feat == LEAF {
-                    m += nd.value as f64;
+                let f = self.feat[i];
+                if f == LEAF {
+                    m += self.value[i] as f64;
                     break;
                 }
-                let x = row[nd.feat as usize];
-                i = (nd.lo + u32::from(!(x <= nd.thresh))) as usize;
+                let x = row[f as usize];
+                i = (self.lo[i] + u32::from(!(x <= self.thresh[i]))) as usize;
             }
         }
         m
@@ -126,7 +168,23 @@ impl FlatForest {
         let n = block.n_rows();
         out.clear();
         out.resize(n, 0.0);
-        self.predict_with(n, |r, f| block.get(r, f as usize), scratch, out);
+        self.predict_with(n, |r, f| block.get(r, f as usize), scratch, out, true);
+    }
+
+    /// Per-row reference walk over a block — the A/B baseline for the
+    /// lane-tiled kernel (the `forest_soa` bench section) and the anchor
+    /// the property tests compare it against. Bit-identical to
+    /// [`FlatForest::predict_block`].
+    pub fn predict_block_scalar(
+        &self,
+        block: &RowBlock,
+        scratch: &mut ForestScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let n = block.n_rows();
+        out.clear();
+        out.resize(n, 0.0);
+        self.predict_with(n, |r, f| block.get(r, f as usize), scratch, out, false);
     }
 
     /// Probabilities for row-major flat rows (the RPC wire layout), written
@@ -142,61 +200,74 @@ impl FlatForest {
         let n = out.len();
         debug_assert!(rows.len() >= n * row_len);
         debug_assert!(row_len >= self.n_features);
-        self.predict_with(n, |r, f| rows[r * row_len + f as usize], scratch, out);
+        self.predict_with(n, |r, f| rows[r * row_len + f as usize], scratch, out, true);
     }
 
     /// Shared block kernel over an arbitrary `(row, feat) -> x` accessor.
+    /// `lanes = false` forces the plain per-row walk.
     fn predict_with<G: Fn(usize, u32) -> f32>(
         &self,
         n: usize,
         get: G,
         scratch: &mut ForestScratch,
         out: &mut [f32],
+        lanes: bool,
     ) {
         debug_assert_eq!(out.len(), n);
         let margins = &mut scratch.margins;
         margins.clear();
         margins.resize(n, self.base_score);
-        let nodes = &self.nodes;
+        let (feat, thresh, lo, value) = (&self.feat, &self.thresh, &self.lo, &self.value);
         for &root in &self.roots {
             let mut r = 0usize;
-            // Interleaved lanes: LANES independent walks advance one node
-            // per pass, so their (unrelated) arena loads overlap.
-            while r + LANES <= n {
-                let mut idx = [root as usize; LANES];
-                let mut val = [0f32; LANES];
-                let mut pending: u32 = (1 << LANES) - 1;
-                while pending != 0 {
-                    for (k, ik) in idx.iter_mut().enumerate() {
-                        if pending & (1 << k) == 0 {
-                            continue;
-                        }
-                        let nd = nodes[*ik];
-                        if nd.feat == LEAF {
-                            val[k] = nd.value;
-                            pending &= !(1 << k);
-                        } else {
-                            let x = get(r + k, nd.feat);
-                            *ik = (nd.lo + u32::from(!(x <= nd.thresh))) as usize;
+            if lanes {
+                // Lane-tiled walk: LANES independent row walks advance in
+                // lockstep under a pending mask. Each pass visits only the
+                // still-walking lanes (bit iteration skips parked ones),
+                // loads `feat` to classify, and either retires the lane
+                // (leaf: one `value` load) or advances it with the
+                // branchless compare `lo + !(x <= thresh)` — so the
+                // unrelated SoA loads of different lanes overlap in the
+                // memory pipeline.
+                while r + LANES <= n {
+                    let mut idx = [root; LANES];
+                    let mut val = [0f32; LANES];
+                    let mut pending: u32 = (1 << LANES) - 1;
+                    while pending != 0 {
+                        let mut p = pending;
+                        while p != 0 {
+                            let k = p.trailing_zeros() as usize;
+                            p &= p - 1;
+                            let i = idx[k] as usize;
+                            let f = feat[i];
+                            if f == LEAF {
+                                val[k] = value[i];
+                                pending &= !(1 << k);
+                            } else {
+                                let x = get(r + k, f);
+                                idx[k] = lo[i] + u32::from(!(x <= thresh[i]));
+                            }
                         }
                     }
+                    for (k, &v) in val.iter().enumerate() {
+                        margins[r + k] += v as f64;
+                    }
+                    r += LANES;
                 }
-                for (k, &v) in val.iter().enumerate() {
-                    margins[r + k] += v as f64;
-                }
-                r += LANES;
             }
-            // Remainder rows: plain iterative walk.
+            // Remainder rows (or the whole block in scalar mode): plain
+            // iterative walk — the same per-row comparisons in the same
+            // order, so where the tile boundary falls cannot change bits.
             while r < n {
                 let mut i = root as usize;
                 loop {
-                    let nd = nodes[i];
-                    if nd.feat == LEAF {
-                        margins[r] += nd.value as f64;
+                    let f = feat[i];
+                    if f == LEAF {
+                        margins[r] += value[i] as f64;
                         break;
                     }
-                    let x = get(r, nd.feat);
-                    i = (nd.lo + u32::from(!(x <= nd.thresh))) as usize;
+                    let x = get(r, f);
+                    i = (lo[i] + u32::from(!(x <= thresh[i]))) as usize;
                 }
                 r += 1;
             }
@@ -250,15 +321,24 @@ mod tests {
         rows[31] = vec![f32::NAN; 4];
         let mut scratch = ForestScratch::default();
         let mut out = Vec::new();
-        for chunk in [1usize, 3, LANES, LANES + 1, 64, 100] {
+        let mut out_scalar = Vec::new();
+        // Chunk sizes straddle the lane tile: every remainder 1..LANES-1
+        // plus exact and off-by-one tiles.
+        for chunk in [1usize, 3, LANES - 1, LANES, LANES + 1, 64, 100] {
             for rows in rows.chunks(chunk) {
                 let block = RowBlock::from_rows(rows);
                 flat.predict_block(&block, &mut scratch, &mut out);
+                flat.predict_block_scalar(&block, &mut scratch, &mut out_scalar);
                 for (i, row) in rows.iter().enumerate() {
                     assert_eq!(
                         out[i].to_bits(),
                         m.predict_one(row).to_bits(),
                         "chunk {chunk} row {i}"
+                    );
+                    assert_eq!(
+                        out[i].to_bits(),
+                        out_scalar[i].to_bits(),
+                        "lane walk vs scalar walk, chunk {chunk} row {i}"
                     );
                 }
             }
@@ -287,18 +367,20 @@ mod tests {
     }
 
     #[test]
-    fn arena_children_adjacent() {
+    fn arena_children_adjacent_soa() {
         let (m, _) = trained();
         let flat = FlatForest::from_model(&m);
         assert_eq!(flat.roots.len(), m.trees.len());
-        assert_eq!(
-            flat.nodes.len(),
-            m.trees.iter().map(|t| t.nodes.len()).sum::<usize>()
-        );
-        for nd in &flat.nodes {
-            if nd.feat != LEAF {
+        let total: usize = m.trees.iter().map(|t| t.nodes.len()).sum();
+        assert_eq!(flat.n_nodes(), total);
+        // The SoA arrays stay parallel.
+        assert_eq!(flat.thresh.len(), total);
+        assert_eq!(flat.lo.len(), total);
+        assert_eq!(flat.value.len(), total);
+        for i in 0..flat.n_nodes() {
+            if flat.feat[i] != LEAF {
                 // Both children (lo, lo + 1) must be in-arena.
-                assert!(nd.lo as usize + 1 < flat.nodes.len());
+                assert!(flat.lo[i] as usize + 1 < flat.n_nodes());
             }
         }
     }

@@ -35,6 +35,9 @@ pub struct StackConfig {
     pub batcher: BatcherConfig,
     /// Artifacts dir (for pjrt backend).
     pub artifacts_dir: std::path::PathBuf,
+    /// Forced stage-1 kernel tier (`None` = runtime auto-detection; see
+    /// `ServeConfig::stage1_simd`).
+    pub stage1_dispatch: Option<crate::lrwbins::Stage1Dispatch>,
 }
 
 impl Default for StackConfig {
@@ -48,6 +51,7 @@ impl Default for StackConfig {
             netsim: NetSimConfig::default(),
             batcher: BatcherConfig::default(),
             artifacts_dir: default_artifacts_dir(),
+            stage1_dispatch: None,
         }
     }
 }
@@ -77,6 +81,16 @@ impl StackConfig {
                 ..Default::default()
             },
             artifacts_dir: sc.artifacts_dir.clone(),
+            // `ServeConfig::validate` already rejects bad strings on the
+            // load path; a hand-built config that skipped validation
+            // degrades to auto-detection, loudly.
+            stage1_dispatch: match sc.stage1_dispatch() {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("serve config: {e}; using auto stage-1 dispatch");
+                    None
+                }
+            },
             ..Default::default()
         }
     }
@@ -120,7 +134,19 @@ pub fn build(cfg: &StackConfig) -> Result<Stack> {
     let s = split::three_way_split(&data, (0.6, 0.2, 0.2), &mut rng);
 
     let pipeline = automl::run_pipeline(&s.train, &s.val, &cfg.pipeline);
-    let tables = ServingTables::from_model(&pipeline.first);
+    let mut tables = ServingTables::from_model(&pipeline.first);
+    if let Some(d) = cfg.stage1_dispatch {
+        let applied = tables.set_dispatch(d);
+        if applied != d {
+            // A forced tier this machine cannot run must not pass silently:
+            // A/B numbers attributed to `d` would really be `applied`'s.
+            eprintln!(
+                "stage1_simd: requested {} unavailable on this machine; serving on {}",
+                d.name(),
+                applied.name()
+            );
+        }
+    }
 
     let metrics = Arc::new(ServeMetrics::new());
     let netsim = Arc::new(NetSim::new(cfg.netsim.clone(), cfg.seed ^ 0x7777));

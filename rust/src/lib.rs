@@ -47,6 +47,14 @@
 //! blocks outstanding as the live stage1-done/rpc-done completion gap
 //! warrants (adaptive depth 1–4).
 //!
+//! Both hot kernels are lane-tiled SIMD with runtime dispatch: the stage-1
+//! block evaluator runs a forced-scalar / portable-tiled / AVX2-intrinsics
+//! tier chosen per machine at table construction
+//! ([`lrwbins::Stage1Dispatch`], forceable for A/B), and the flat forest is
+//! a structure-of-arrays arena walked sixteen row-lanes at a time — every
+//! tier bit-identical to the scalar path by construction (vectorized
+//! across rows; see [`lrwbins::tables`] and [`gbdt::flat`]).
+//!
 //! See DESIGN.md for the full system inventory and experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 

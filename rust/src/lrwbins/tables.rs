@@ -8,30 +8,197 @@
 //! embedded Rust evaluator (`coordinator::embedded`) and the Pallas kernel
 //! both consume this exact layout, and a test proves they agree with the
 //! training-side model to machine precision.
+//!
+//! # Tiled SIMD kernels and runtime dispatch
+//!
+//! The batched stage-1 path runs one of three kernels, chosen **once at
+//! construction** (every constructor finishes through [`ServingTables::from_parts`],
+//! which calls [`Stage1Dispatch::detect`]) and forceable per instance with
+//! [`ServingTables::set_dispatch`] for A/B benching:
+//!
+//! * [`Stage1Dispatch::Scalar`] — the original scalar-coded edge-major block
+//!   loop. Always compiled; the bit-identity anchor every other tier is
+//!   property-tested against.
+//! * [`Stage1Dispatch::Tiled`] — portable lane-tiled kernel: rows are
+//!   processed in fixed `[f32; LANE]` chunks against the **edge-tiled**
+//!   quantile table (`q_max × LANE` per feature — each edge pre-replicated
+//!   across the lane so the inner loop is a straight element-wise
+//!   compare-accumulate the compiler auto-vectorizes). Default off x86.
+//! * [`Stage1Dispatch::Avx2`] — explicit AVX2 intrinsics over the same
+//!   tiled layout (`x86_64` only, selected when
+//!   `is_x86_feature_detected!("avx2")` holds).
+//!
+//! The tiled tiers additionally **fuse normalization into binning** for
+//! bin-only features: a feature used for binning but not inference never
+//! round-trips its normalized column through `BlockScratch::norm` — the
+//! kernel normalizes each `[f32; LANE]` chunk in registers and bins it
+//! immediately (on [`ServingTables::bin_of_block`] that is *every* feature,
+//! so the whole materialization pass disappears). Features the weight dot
+//! also reads stay materialized and are shared, exactly as before.
+//!
+//! ## Why every tier is bit-identical, by construction
+//!
+//! The kernels vectorize **across rows** — one row per lane — so each row's
+//! arithmetic never changes shape, only which rows travel together:
+//!
+//! * normalization is the same single expression
+//!   `((v as f64 - mean) * inv_std) as f32` per (row, feature), one
+//!   rounding, whether it lands in `norm` or in a lane register (the AVX2
+//!   path does the same f64 subtract/multiply and the same
+//!   round-to-nearest-even f64→f32 conversion, element-wise);
+//! * a row's edge count is a sum of independent `(x > e)` indicators over
+//!   **exact** `u32` adds — accumulation order cannot change the value, and
+//!   the tiled table replicates each edge verbatim so lane `k` compares
+//!   against the identical bits (`x > +inf` padding is false on every
+//!   tier; NaN compares false under both scalar `>` and `_CMP_GT_OQ`);
+//! * the combined id `Σ bᵢ · strideᵢ` is exact integer arithmetic;
+//! * the `evaluate_block` weight dot accumulates bias-then-weights in
+//!   feature order per row, unchanged — no FMA, no reassociation.
+//!
+//! Remainder rows (`n % LANE`) run the same per-row expressions in a scalar
+//! tail. Property tests (`tests/simd_parity.rs`) pin all of this against
+//! the forced-scalar path, including NaN/±∞/denormal/edge-tie inputs.
 
 use super::LrwBinsModel;
 use crate::tabular::RowBlock;
 use crate::util::json::Json;
 
+/// Row lanes per tiled-kernel step: the `[f32; LANE]` chunk width and the
+/// replication factor of the edge-tiled quantile table. Eight f32 lanes is
+/// one AVX2 vector; the portable tiled kernel uses the same width so both
+/// tiers share one layout.
+pub const LANE: usize = 8;
+
+/// `slot_of_bin` sentinel: this binning feature has no materialized `norm`
+/// column — the tiled kernels normalize it on the fly (bin-only fusion).
+const FUSED: u32 = u32::MAX;
+
+/// One row's edge count via the shared per-row arithmetic — the remainder
+/// tail of BOTH tiled kernels (and bit-identical to [`ServingTables::bin_of`]'s
+/// inner loop). One implementation so the tails cannot drift apart.
+#[inline]
+fn bin_row_tail(col: &[f32], rr: usize, fused: bool, mean: f64, inv: f64, edges: &[f32]) -> u32 {
+    let xv = if fused {
+        ((col[rr] as f64 - mean) * inv) as f32
+    } else {
+        col[rr]
+    };
+    let mut b = 0u32;
+    for &e in edges {
+        b += (xv > e) as u32;
+    }
+    b
+}
+
+/// Which stage-1 block kernel an instance runs (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage1Dispatch {
+    /// Scalar-coded reference block path (always available).
+    Scalar,
+    /// Portable lane-tiled kernel (always available).
+    Tiled,
+    /// AVX2 intrinsics kernel (`x86_64` with AVX2 detected only).
+    Avx2,
+}
+
+impl Stage1Dispatch {
+    /// Best tier available on this machine, probed once per call via
+    /// `is_x86_feature_detected!` (the result is cached per instance at
+    /// construction, not per block).
+    pub fn detect() -> Stage1Dispatch {
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Stage1Dispatch::Avx2;
+        }
+        Stage1Dispatch::Tiled
+    }
+
+    /// Can this tier run on this machine?
+    pub fn available(self) -> bool {
+        match self {
+            Stage1Dispatch::Scalar | Stage1Dispatch::Tiled => true,
+            Stage1Dispatch::Avx2 => Stage1Dispatch::detect() == Stage1Dispatch::Avx2,
+        }
+    }
+
+    /// Every tier this machine can run, scalar first — the single tier
+    /// inventory the property tests and A/B benches iterate (add new
+    /// tiers HERE so nothing silently stops covering them).
+    pub fn available_tiers() -> Vec<Stage1Dispatch> {
+        let mut tiers = vec![Stage1Dispatch::Scalar, Stage1Dispatch::Tiled];
+        if Stage1Dispatch::Avx2.available() {
+            tiers.push(Stage1Dispatch::Avx2);
+        }
+        tiers
+    }
+
+    /// Config-string / bench-label name of the tier.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage1Dispatch::Scalar => "scalar",
+            Stage1Dispatch::Tiled => "tiled",
+            Stage1Dispatch::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a config string (`auto` ⇒ `None` ⇒ use [`Stage1Dispatch::detect`]).
+    pub fn parse(s: &str) -> Result<Option<Stage1Dispatch>, String> {
+        match s {
+            "auto" => Ok(None),
+            "scalar" => Ok(Some(Stage1Dispatch::Scalar)),
+            "tiled" => Ok(Some(Stage1Dispatch::Tiled)),
+            "avx2" => Ok(Some(Stage1Dispatch::Avx2)),
+            other => Err(format!(
+                "stage1_simd must be auto|scalar|tiled|avx2, got '{other}'"
+            )),
+        }
+    }
+}
+
 /// Reusable scratch for the block evaluators ([`ServingTables::bin_of_block`]
 /// / [`ServingTables::evaluate_block`]). Holding one of these across calls
-/// makes the batched stage-1 path allocation-free at steady state.
+/// makes the batched stage-1 path allocation-free at steady state. Buffers
+/// grow but never re-zero memory the kernels fully overwrite.
 #[derive(Clone, Debug, Default)]
 pub struct BlockScratch {
     /// Normalized feature columns, slot-major: `norm[slot * n_rows + r]`.
+    /// Grow-only: may be longer than the live region.
     norm: Vec<f32>,
-    /// Per-row edge counts for the feature currently being binned.
+    /// Per-row edge counts for the feature currently being binned (scalar
+    /// reference kernel only; the tiled kernels count in registers).
     cnt: Vec<u32>,
     /// Per-row combined-bin ids.
     bins: Vec<u32>,
-    /// Slot (into `norm`) of each binning feature, in `bin_features` order.
+    /// Slot (into `norm`) of each binning feature, in `bin_features` order;
+    /// [`FUSED`] when the tiled kernels normalize it on the fly instead.
     slot_of_bin: Vec<u32>,
     /// Slot (into `norm`) of each inference feature, in `infer_features` order.
     slot_of_infer: Vec<u32>,
     /// Raw feature id of each slot (slot → feature inverse map).
     slot_feat: Vec<u32>,
-    /// Raw feature → slot map (`usize::MAX` = not needed).
+    /// Raw feature → slot map (`usize::MAX` = not materialized).
     feat_slot: Vec<usize>,
+}
+
+/// Raw table arrays for [`ServingTables::from_parts`] — the synthetic
+/// construction path (property tests, external tooling build tables with
+/// hand-picked quantiles). [`ServingTables::from_model`] and
+/// [`ServingTables::from_json`] are the production paths; all three finish
+/// through the same tile build + dispatch detection.
+#[derive(Clone, Debug)]
+pub struct TableParts {
+    pub n_features: usize,
+    pub bin_features: Vec<u32>,
+    pub quantiles: Vec<f32>,
+    pub q_max: usize,
+    pub strides: Vec<u32>,
+    pub total_bins: u32,
+    pub means: Vec<f64>,
+    pub inv_stds: Vec<f64>,
+    pub infer_features: Vec<u32>,
+    pub weights: Vec<f32>,
+    pub global_weights: Vec<f32>,
+    pub route: Vec<u8>,
 }
 
 /// Dense, allocation-free-on-read serving tables.
@@ -64,6 +231,14 @@ pub struct ServingTables {
     pub global_weights: Vec<f32>,
     /// Route mask `[total_bins]`: 1 ⇒ stage 1 serves this bin.
     pub route: Vec<u8>,
+    // --- derived (never serialized; rebuilt by every constructor) ---
+    /// Edge-tiled quantiles `[n_bin_features × q_max × LANE]`: edge `e` of
+    /// feature `i` replicated across the lane at
+    /// `[(i*q_max + e)*LANE ..][..LANE]`, so a lane chunk compares against
+    /// one contiguous, pre-broadcast vector per edge.
+    tiled_quantiles: Vec<f32>,
+    /// The kernel tier this instance runs (see [`Stage1Dispatch`]).
+    dispatch: Stage1Dispatch,
 }
 
 impl ServingTables {
@@ -98,7 +273,7 @@ impl ServingTables {
             }
         }
 
-        ServingTables {
+        ServingTables::from_parts(TableParts {
             n_features: model.normalizer.means.len(),
             bin_features: model.binner.features.iter().map(|&f| f as u32).collect(),
             quantiles: model.binner.padded_edge_table(q_max),
@@ -111,7 +286,73 @@ impl ServingTables {
             weights,
             global_weights,
             route,
+        })
+    }
+
+    /// Finish construction from raw arrays: build the edge-tiled quantile
+    /// table and pick the kernel tier for this machine. The one constructor
+    /// every path ends in.
+    ///
+    /// # Panics
+    ///
+    /// On inconsistent array sizes — the kernels index by these invariants,
+    /// so a malformed table must fail HERE, at the construction site, not
+    /// with an out-of-bounds slice mid-serve. (`from_json` pre-validates
+    /// the same invariants and returns `Err` instead.)
+    pub fn from_parts(p: TableParts) -> ServingTables {
+        assert_eq!(
+            p.quantiles.len(),
+            p.bin_features.len() * p.q_max,
+            "quantiles must be [n_bin_features × q_max]"
+        );
+        assert_eq!(p.strides.len(), p.bin_features.len(), "one stride per bin feature");
+        assert_eq!(p.route.len(), p.total_bins as usize, "one route flag per bin");
+        assert_eq!(
+            p.weights.len(),
+            p.total_bins as usize * (p.infer_features.len() + 1),
+            "weights must be [total_bins × (n_infer + 1)]"
+        );
+        assert_eq!(
+            p.global_weights.len(),
+            p.infer_features.len() + 1,
+            "global weights must be [n_infer + 1]"
+        );
+        assert_eq!(p.means.len(), p.n_features, "one mean per raw feature");
+        assert_eq!(p.inv_stds.len(), p.n_features, "one inv_std per raw feature");
+        let mut tiled_quantiles = Vec::with_capacity(p.quantiles.len() * LANE);
+        for &e in &p.quantiles {
+            tiled_quantiles.extend_from_slice(&[e; LANE]);
         }
+        ServingTables {
+            n_features: p.n_features,
+            bin_features: p.bin_features,
+            quantiles: p.quantiles,
+            q_max: p.q_max,
+            strides: p.strides,
+            total_bins: p.total_bins,
+            means: p.means,
+            inv_stds: p.inv_stds,
+            infer_features: p.infer_features,
+            weights: p.weights,
+            global_weights: p.global_weights,
+            route: p.route,
+            tiled_quantiles,
+            dispatch: Stage1Dispatch::detect(),
+        }
+    }
+
+    /// The kernel tier this instance runs.
+    pub fn dispatch(&self) -> Stage1Dispatch {
+        self.dispatch
+    }
+
+    /// Force a kernel tier (A/B benching, the property tests, the
+    /// `stage1_simd` config switch). A request for a tier this machine
+    /// cannot run clamps to [`Stage1Dispatch::Tiled`]; returns the tier
+    /// actually installed.
+    pub fn set_dispatch(&mut self, d: Stage1Dispatch) -> Stage1Dispatch {
+        self.dispatch = if d.available() { d } else { Stage1Dispatch::Tiled };
+        self.dispatch
     }
 
     pub fn n_infer(&self) -> usize {
@@ -155,27 +396,18 @@ impl ServingTables {
     }
 
     // ------------------------------------------------------------------
-    // Batched (columnar RowBlock) hot path.
-    //
-    // Bit-identical to the scalar path by construction: every row sees the
-    // exact same operations in the exact same order — normalization is the
-    // same `((v as f64 - mean) * inv_std) as f32` expression (computed once
-    // per (row, feature) and shared between binning and the dot product,
-    // which is legal because it is a pure function), edge counts are sums
-    // of independent `(x > e)` indicators (order-insensitive over exact
-    // u32 adds), and the per-row dot product accumulates bias-then-weights
-    // in the same `j` order. What changes is only the *loop order*: columns
-    // are normalized feature-major so the per-feature constants stay in
-    // registers, and edges are applied edge-major over the whole block so
-    // the quantile table stays in L1 while the row dimension streams.
+    // Batched (columnar RowBlock) hot path. See the module docs for the
+    // kernel tiers and the vectorize-across-rows bit-identity argument.
     // ------------------------------------------------------------------
 
-    /// Populate `scratch` for `block`: assign a slot to every feature the
-    /// evaluator needs (binning features, plus inference features when
-    /// `include_infer`), then normalize each needed column exactly once.
+    /// Populate `scratch` for `block`: assign a `norm` slot to every feature
+    /// whose normalized column must be materialized, then normalize each of
+    /// those columns exactly once. Under the tiled tiers, bin-only features
+    /// get no slot ([`FUSED`]) — the kernels normalize them in registers.
     fn prepare_block(&self, block: &RowBlock, scratch: &mut BlockScratch, include_infer: bool) {
         debug_assert!(block.is_empty() || block.n_features() == self.n_features);
         let n = block.n_rows();
+        let fuse = self.dispatch != Stage1Dispatch::Scalar;
         scratch.feat_slot.clear();
         scratch.feat_slot.resize(self.n_features, usize::MAX);
         scratch.slot_feat.clear();
@@ -192,20 +424,40 @@ impl ServingTables {
                 }
                 feat_slot[f] as u32
             };
-            for &f in &self.bin_features {
-                let s = slot_of(f);
-                scratch.slot_of_bin.push(s);
-            }
+            // Infer features first: the weight dot always reads them from
+            // `norm`, and a bin feature doubling as an infer feature then
+            // reuses that column instead of re-normalizing per edge pass.
             if include_infer {
                 for &f in &self.infer_features {
                     let s = slot_of(f);
                     scratch.slot_of_infer.push(s);
                 }
             }
+            if !fuse {
+                for &f in &self.bin_features {
+                    let s = slot_of(f);
+                    scratch.slot_of_bin.push(s);
+                }
+            }
+        }
+        if fuse {
+            // Tiled tiers: a bin feature reuses an infer slot when one
+            // exists; bin-only features are FUSED (normalized in-kernel,
+            // never materialized).
+            for &f in &self.bin_features {
+                let s = scratch.feat_slot[f as usize];
+                scratch
+                    .slot_of_bin
+                    .push(if s == usize::MAX { FUSED } else { s as u32 });
+            }
         }
         let n_slots = scratch.slot_feat.len();
-        scratch.norm.clear();
-        scratch.norm.resize(n_slots * n, 0.0);
+        // Grow-only, non-zeroing reuse: the normalize pass below overwrites
+        // every cell of the live `n_slots * n` region.
+        let need = n_slots * n;
+        if scratch.norm.len() < need {
+            scratch.norm.resize(need, 0.0);
+        }
         for (slot, &f) in scratch.slot_feat.iter().enumerate() {
             let f = f as usize;
             let mean = self.means[f];
@@ -218,24 +470,51 @@ impl ServingTables {
         }
     }
 
-    /// Combined-bin ids from prepared scratch into `out`.
-    fn bins_from_prepared(&self, n: usize, scratch: &mut BlockScratch, out: &mut Vec<u32>) {
+    /// Combined-bin ids for `block` into `out` (cleared and refilled),
+    /// running the kernel tier installed on this instance.
+    fn bins_for_block(&self, block: &RowBlock, scratch: &mut BlockScratch, out: &mut Vec<u32>) {
+        let n = block.n_rows();
         out.clear();
         out.resize(n, 0);
+        match self.dispatch {
+            Stage1Dispatch::Scalar => self.bins_scalar(n, scratch, out),
+            Stage1Dispatch::Tiled => self.bins_tiled(block, n, scratch, out),
+            Stage1Dispatch::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: `Avx2` is only installed by `from_parts` /
+                // `set_dispatch` after `is_x86_feature_detected!("avx2")`
+                // confirmed the instructions exist on this machine.
+                unsafe {
+                    self.bins_avx2(block, n, scratch, out)
+                };
+                #[cfg(not(target_arch = "x86_64"))]
+                self.bins_tiled(block, n, scratch, out);
+            }
+        }
+    }
+
+    /// Scalar reference kernel: edge-major, branchless, materialized
+    /// columns only. This is the exact pre-SIMD block path and the anchor
+    /// the tiled tiers are property-tested against.
+    fn bins_scalar(&self, n: usize, scratch: &mut BlockScratch, out: &mut [u32]) {
         let BlockScratch {
             norm,
             cnt,
             slot_of_bin,
             ..
         } = scratch;
-        cnt.resize(n, 0);
         for (i, &slot) in slot_of_bin.iter().enumerate() {
+            debug_assert_ne!(slot, FUSED, "scalar kernel needs materialized columns");
             let edges = &self.quantiles[i * self.q_max..(i + 1) * self.q_max];
             let x = &norm[slot as usize * n..slot as usize * n + n];
-            let cnt = &mut cnt[..n];
-            cnt.fill(0);
-            // Edge-major, branchless: each edge broadcasts over the block.
-            for &e in edges {
+            let Some((&e0, rest)) = edges.split_first() else {
+                continue;
+            };
+            // First edge writes the counts, the rest accumulate — no
+            // zero-fill pass over memory that is about to be overwritten.
+            cnt.clear();
+            cnt.extend(x.iter().map(|&xv| (xv > e0) as u32));
+            for &e in rest {
                 for (c, &xv) in cnt.iter_mut().zip(&*x) {
                     *c += (xv > e) as u32;
                 }
@@ -247,11 +526,122 @@ impl ServingTables {
         }
     }
 
+    /// Portable lane-tiled kernel: `[f32; LANE]` row chunks against the
+    /// edge-tiled quantile table; bin-only features normalize in registers
+    /// (fused). Straight element-wise inner loops the compiler
+    /// auto-vectorizes; remainder rows run the same per-row arithmetic.
+    fn bins_tiled(&self, block: &RowBlock, n: usize, scratch: &BlockScratch, out: &mut [u32]) {
+        for (i, &slot) in scratch.slot_of_bin.iter().enumerate() {
+            let tiles = &self.tiled_quantiles[i * self.q_max * LANE..(i + 1) * self.q_max * LANE];
+            let edges = &self.quantiles[i * self.q_max..(i + 1) * self.q_max];
+            let stride = self.strides[i];
+            let f = self.bin_features[i] as usize;
+            let (mean, inv) = (self.means[f], self.inv_stds[f]);
+            let fused = slot == FUSED;
+            let col: &[f32] = if fused {
+                block.feature(f)
+            } else {
+                &scratch.norm[slot as usize * n..slot as usize * n + n]
+            };
+            let mut x = [0f32; LANE];
+            let mut r = 0usize;
+            while r + LANE <= n {
+                if fused {
+                    for (xk, &v) in x.iter_mut().zip(&col[r..r + LANE]) {
+                        *xk = ((v as f64 - mean) * inv) as f32;
+                    }
+                } else {
+                    x.copy_from_slice(&col[r..r + LANE]);
+                }
+                let mut c = [0u32; LANE];
+                for et in tiles.chunks_exact(LANE) {
+                    for (ck, (&xk, &ek)) in c.iter_mut().zip(x.iter().zip(et)) {
+                        *ck += (xk > ek) as u32;
+                    }
+                }
+                for (o, &ck) in out[r..r + LANE].iter_mut().zip(&c) {
+                    *o += ck * stride;
+                }
+                r += LANE;
+            }
+            for (rr, o) in out.iter_mut().enumerate().skip(r) {
+                *o += bin_row_tail(col, rr, fused, mean, inv, edges) * stride;
+            }
+        }
+    }
+
+    /// AVX2 intrinsics kernel over the edge-tiled layout. Element-wise ops
+    /// only — `_CMP_GT_OQ` matches scalar `>` (false on NaN), the fused
+    /// normalize does the same f64 subtract/multiply and f64→f32
+    /// round-to-nearest-even conversion per lane, and counts/ids are exact
+    /// integer vectors — so every lane computes the scalar path's bits.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 support (`is_x86_feature_detected!`).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn bins_avx2(&self, block: &RowBlock, n: usize, scratch: &BlockScratch, out: &mut [u32]) {
+        use std::arch::x86_64::*;
+        debug_assert_eq!(LANE, 8, "AVX2 kernel is written for 8-wide lanes");
+        for (i, &slot) in scratch.slot_of_bin.iter().enumerate() {
+            let tiles = &self.tiled_quantiles[i * self.q_max * LANE..(i + 1) * self.q_max * LANE];
+            let edges = &self.quantiles[i * self.q_max..(i + 1) * self.q_max];
+            let stride = self.strides[i];
+            let f = self.bin_features[i] as usize;
+            let (mean, inv) = (self.means[f], self.inv_stds[f]);
+            let fused = slot == FUSED;
+            let col: &[f32] = if fused {
+                block.feature(f)
+            } else {
+                &scratch.norm[slot as usize * n..slot as usize * n + n]
+            };
+            let stride_v = _mm256_set1_epi32(stride as i32);
+            let mean_v = _mm256_set1_pd(mean);
+            let inv_v = _mm256_set1_pd(inv);
+            let mut r = 0usize;
+            while r + LANE <= n {
+                // SAFETY: `r + LANE <= n == col.len()` bounds every load.
+                let raw = _mm256_loadu_ps(col.as_ptr().add(r));
+                let x = if fused {
+                    // ((v as f64 - mean) * inv) as f32, lane-wise: cvtps_pd
+                    // is exact, sub/mul/cvtpd_ps round to nearest even —
+                    // the scalar expression's bits in each lane.
+                    let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(raw));
+                    let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(raw));
+                    let lo = _mm256_cvtpd_ps(_mm256_mul_pd(_mm256_sub_pd(lo, mean_v), inv_v));
+                    let hi = _mm256_cvtpd_ps(_mm256_mul_pd(_mm256_sub_pd(hi, mean_v), inv_v));
+                    _mm256_set_m128(hi, lo)
+                } else {
+                    raw
+                };
+                let mut c = _mm256_setzero_si256();
+                let mut t = tiles.as_ptr();
+                for _ in 0..self.q_max {
+                    // The GT mask is all-ones (-1) per true lane; counting
+                    // is a vector subtract of the mask.
+                    let e = _mm256_loadu_ps(t);
+                    let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(x, e);
+                    c = _mm256_sub_epi32(c, _mm256_castps_si256(gt));
+                    t = t.add(LANE);
+                }
+                let o = out.as_mut_ptr().add(r) as *mut __m256i;
+                let prev = _mm256_loadu_si256(o);
+                _mm256_storeu_si256(o, _mm256_add_epi32(prev, _mm256_mullo_epi32(c, stride_v)));
+                r += LANE;
+            }
+            // Remainder rows: the identical per-row arithmetic, scalar.
+            for (rr, o) in out.iter_mut().enumerate().skip(r) {
+                *o += bin_row_tail(col, rr, fused, mean, inv, edges) * stride;
+            }
+        }
+    }
+
     /// Combined-bin ids for a whole block — bit-identical to calling
     /// [`ServingTables::bin_of`] per row. `out` is cleared and refilled.
     pub fn bin_of_block(&self, block: &RowBlock, scratch: &mut BlockScratch, out: &mut Vec<u32>) {
         self.prepare_block(block, scratch, false);
-        self.bins_from_prepared(block.n_rows(), scratch, out);
+        self.bins_for_block(block, scratch, out);
     }
 
     /// Full stage-1 evaluation for a whole block — bit-identical to calling
@@ -267,7 +657,7 @@ impl ServingTables {
         let n = block.n_rows();
         self.prepare_block(block, scratch, true);
         let mut bins = std::mem::take(&mut scratch.bins);
-        self.bins_from_prepared(n, scratch, &mut bins);
+        self.bins_for_block(block, scratch, &mut bins);
         probs.clear();
         probs.reserve(n);
         routed.clear();
@@ -330,7 +720,7 @@ impl ServingTables {
                 .and_then(|v| v.as_f64_vec())
                 .ok_or_else(|| err(k))
         };
-        let t = ServingTables {
+        let p = TableParts {
             n_features: numf("n_features")?,
             bin_features: vecf("bin_features")?.iter().map(|&v| v as u32).collect(),
             quantiles: vecf("quantiles")?.iter().map(|&v| v as f32).collect(),
@@ -344,16 +734,19 @@ impl ServingTables {
             global_weights: vecf("global_weights")?.iter().map(|&v| v as f32).collect(),
             route: vecf("route")?.iter().map(|&v| v as u8).collect(),
         };
-        // Structural validation.
-        if t.quantiles.len() != t.bin_features.len() * t.q_max
-            || t.route.len() != t.total_bins as usize
-            || t.weights.len() != t.total_bins as usize * (t.infer_features.len() + 1)
-            || t.means.len() != t.n_features
-            || t.inv_stds.len() != t.n_features
+        // Structural validation (the same invariants `from_parts` asserts —
+        // checked here first so malformed JSON is an Err, not a panic).
+        if p.quantiles.len() != p.bin_features.len() * p.q_max
+            || p.strides.len() != p.bin_features.len()
+            || p.route.len() != p.total_bins as usize
+            || p.weights.len() != p.total_bins as usize * (p.infer_features.len() + 1)
+            || p.global_weights.len() != p.infer_features.len() + 1
+            || p.means.len() != p.n_features
+            || p.inv_stds.len() != p.n_features
         {
             return Err("serving tables: inconsistent array sizes".into());
         }
-        Ok(t)
+        Ok(ServingTables::from_parts(p))
     }
 
     /// Kernel-side padding: returns copies padded to fixed shapes
@@ -520,6 +913,26 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_clamps_to_available() {
+        let d = world(300, 9);
+        let mut t = ServingTables::from_model(&model(&d));
+        // The detected default is available by definition.
+        assert!(t.dispatch().available());
+        for tier in [Stage1Dispatch::Scalar, Stage1Dispatch::Tiled, Stage1Dispatch::Avx2] {
+            let applied = t.set_dispatch(tier);
+            assert!(applied.available());
+            if tier.available() {
+                assert_eq!(applied, tier);
+            } else {
+                assert_eq!(applied, Stage1Dispatch::Tiled);
+            }
+        }
+        assert_eq!(Stage1Dispatch::parse("auto"), Ok(None));
+        assert_eq!(Stage1Dispatch::parse("scalar"), Ok(Some(Stage1Dispatch::Scalar)));
+        assert!(Stage1Dispatch::parse("mmx").is_err());
+    }
+
+    #[test]
     fn kernel_inputs_preserve_bin_and_score() {
         // Reference-check the padded kernel layout by evaluating the kernel
         // algorithm in plain Rust over the padded arrays.
@@ -559,13 +972,12 @@ mod tests {
     }
 
     #[test]
-    fn block_path_bit_identical_to_scalar() {
+    fn block_path_bit_identical_to_scalar_on_every_tier() {
         let d = world(3000, 6);
         let mut m = model(&d);
         let routed_set: std::collections::HashSet<u32> =
             m.weights.keys().copied().filter(|&b| b % 2 == 0).collect();
         m.set_route(routed_set);
-        let t = ServingTables::from_model(&m);
 
         let mut rows: Vec<Vec<f32>> = (0..200).map(|r| d.row(r)).collect();
         // Inject NaNs: the block path must propagate them identically.
@@ -573,25 +985,30 @@ mod tests {
         rows[17][2] = f32::NAN;
         rows[42] = vec![f32::NAN; 5];
 
-        let mut scratch = BlockScratch::default();
-        let mut bins = Vec::new();
-        let mut probs = Vec::new();
-        let mut routed = Vec::new();
-        for chunk in [1usize, 7, 64, 200] {
-            for (c, rows) in rows.chunks(chunk).enumerate() {
-                let block = crate::tabular::RowBlock::from_rows(rows);
-                t.bin_of_block(&block, &mut scratch, &mut bins);
-                t.evaluate_block(&block, &mut scratch, &mut probs, &mut routed);
-                for (i, row) in rows.iter().enumerate() {
-                    let (p, rt) = t.evaluate(row);
-                    assert_eq!(bins[i], t.bin_of(row), "chunk {chunk}/{c} row {i}");
-                    assert_eq!(
-                        probs[i].to_bits(),
-                        p.to_bits(),
-                        "chunk {chunk}/{c} row {i}: {} vs {p}",
-                        probs[i]
-                    );
-                    assert_eq!(routed[i], rt, "chunk {chunk}/{c} row {i}");
+        for tier in Stage1Dispatch::available_tiers() {
+            let mut t = ServingTables::from_model(&m);
+            assert_eq!(t.set_dispatch(tier), tier);
+            let mut scratch = BlockScratch::default();
+            let mut bins = Vec::new();
+            let mut probs = Vec::new();
+            let mut routed = Vec::new();
+            // Chunk sizes cover 1..LANE-1 remainders and multi-lane blocks.
+            for chunk in [1usize, 7, LANE, LANE + 3, 64, 200] {
+                for (c, rows) in rows.chunks(chunk).enumerate() {
+                    let block = crate::tabular::RowBlock::from_rows(rows);
+                    t.bin_of_block(&block, &mut scratch, &mut bins);
+                    t.evaluate_block(&block, &mut scratch, &mut probs, &mut routed);
+                    for (i, row) in rows.iter().enumerate() {
+                        let (p, rt) = t.evaluate(row);
+                        assert_eq!(bins[i], t.bin_of(row), "{tier:?} chunk {chunk}/{c} row {i}");
+                        assert_eq!(
+                            probs[i].to_bits(),
+                            p.to_bits(),
+                            "{tier:?} chunk {chunk}/{c} row {i}: {} vs {p}",
+                            probs[i]
+                        );
+                        assert_eq!(routed[i], rt, "{tier:?} chunk {chunk}/{c} row {i}");
+                    }
                 }
             }
         }

@@ -9,6 +9,12 @@
 use crate::gbdt::ForestTensors;
 use crate::lrwbins::tables::{KernelInputs, ServingTables};
 use crate::util::json::Json;
+// The XLA bindings are not on crates.io; builds without them type-check
+// against the stub (and fail fast at runtime). To run the real engine,
+// vendor the bindings, add the `xla` dependency, and DELETE this import —
+// the `xla::` paths below then resolve to the real crate. See the
+// `xla_shim` module docs and the Cargo.toml header.
+use super::xla_shim as xla;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -10,13 +10,17 @@
 //!   execution substrate (the native backend and the embedded multi-tenant
 //!   mode both serve from it) and is always compiled.
 //! * [`worker`] / [`engine`] — the PJRT engine executing the AOT-compiled
-//!   XLA artifacts. Compiled only with `--features pjrt` (the `xla` bindings
-//!   are not on crates.io; see `Cargo.toml`).
+//!   XLA artifacts. Compiled only with `--features pjrt`. The `xla`
+//!   bindings are not on crates.io, so un-vendored builds type-check
+//!   against the typed stub in `xla_shim` (the `cargo check --features
+//!   pjrt` CI gate) and fail fast at runtime; see `Cargo.toml`.
 
 pub mod shard_pool;
 
 #[cfg(feature = "pjrt")]
 mod engine;
+#[cfg(feature = "pjrt")]
+mod xla_shim;
 #[cfg(feature = "pjrt")]
 pub mod worker;
 

@@ -18,8 +18,15 @@
 //! * **Shards** — `n_shards` worker threads, spawned once. Each worker owns
 //!   a private deep **replica** of every forest it has served (materialized
 //!   lazily on first use, allocated by the worker thread itself — the right
-//!   memory locality story) plus a private [`ForestScratch`], so the hot
-//!   loop touches no shared mutable state.
+//!   memory locality story; replicas are the SoA [`FlatForest`] arenas, so
+//!   each shard's lane-tiled walk streams only the node fields it touches)
+//!   plus a private [`ForestScratch`], so the hot loop touches no shared
+//!   mutable state. With [`ShardPoolConfig::pin_threads`] each worker
+//!   additionally pins itself to core `shard % online` at startup
+//!   (`sched_setaffinity` on Linux, no-op elsewhere), keeping replica cache
+//!   residency and the OS scheduler out of each other's way;
+//!   [`crate::telemetry::ShardStats`] records the CPU id each worker landed
+//!   on (or the failure, in restricted cpusets).
 //! * **Rings** — one bounded MPMC ring (Vyukov sequence-counter design) per
 //!   shard: push and pop are single-CAS lock-free operations. MPMC matters:
 //!   a steal is just a `try_pop` on a neighbor's ring, no separate deque
@@ -110,6 +117,14 @@ pub struct ShardPoolConfig {
     /// Work-stealing between shards (on by default; the off switch exists
     /// for A/B benchmarking — `steal_skew` in `hotpath_microbench`).
     pub steal: bool,
+    /// Pin each shard's worker thread to a CPU core (`sched_setaffinity`
+    /// on Linux; a no-op elsewhere). Off by default: pinning wins when the
+    /// pool owns the machine (one shard per core, stable cache residency
+    /// for the per-shard replicas) and hurts when it shares it — so it is
+    /// an explicit deployment decision, not a default.
+    /// [`ShardStats::pinned_cpu`](crate::telemetry::ShardStats::pinned_cpu)
+    /// reports the CPU each worker landed on.
+    pub pin_threads: bool,
 }
 
 impl Default for ShardPoolConfig {
@@ -119,6 +134,7 @@ impl Default for ShardPoolConfig {
             queue_capacity: 1024,
             min_task_rows: 64,
             steal: true,
+            pin_threads: false,
         }
     }
 }
@@ -370,6 +386,7 @@ struct PoolShared {
     stats: ShardStats,
     min_task_rows: usize,
     steal: bool,
+    pin_threads: bool,
     /// Round-robin base for home-shard assignment across batches.
     rr: AtomicUsize,
 }
@@ -444,6 +461,7 @@ impl ShardPool {
             stats: ShardStats::new(n_shards),
             min_task_rows: cfg.min_task_rows.max(1),
             steal: cfg.steal,
+            pin_threads: cfg.pin_threads,
             rr: AtomicUsize::new(0),
         });
         let workers = (0..n_shards)
@@ -827,7 +845,45 @@ fn acquire(shard: usize, shared: &PoolShared) -> Option<Task> {
     }
 }
 
+/// Pin the calling thread to CPU `shard % online_cpus` via
+/// `sched_setaffinity` (pid 0 = this thread). Returns the CPU id on
+/// success; `None` when the syscall is unavailable, fails (restricted
+/// cpusets, containers), or the CPU count cannot be read.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(shard: usize) -> Option<u32> {
+    // SAFETY: sysconf takes no pointers; sched_setaffinity reads a fully
+    // initialized cpu_set_t of the size we pass.
+    unsafe {
+        let online = libc::sysconf(libc::_SC_NPROCESSORS_ONLN);
+        if online <= 0 {
+            return None;
+        }
+        let cpu = shard % online as usize;
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        libc::CPU_SET(cpu, &mut set);
+        if libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) != 0 {
+            return None;
+        }
+        Some(cpu as u32)
+    }
+}
+
+/// Thread affinity is Linux-only; elsewhere pinning is a no-op.
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_shard: usize) -> Option<u32> {
+    None
+}
+
 fn worker_loop(shard: usize, shared: Arc<PoolShared>) {
+    if shared.pin_threads {
+        match pin_current_thread(shard) {
+            Some(cpu) => shared.stats.set_pinned(shard, cpu),
+            None => {
+                shared.stats.pin_failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
     // Per-shard model replicas, materialized on first use: a deep clone of
     // the registered forest, allocated by THIS thread (locality), indexed
     // by model id. The scratch is shared across models — it is cleared per
@@ -876,8 +932,8 @@ mod tests {
     /// A forest that panics (out-of-bounds feature read) on any row with
     /// `x[0] == f32::INFINITY` and returns sigmoid(base + 0.2) otherwise.
     fn poison_forest(n_features: usize) -> FlatForest {
-        FlatForest {
-            nodes: vec![
+        FlatForest::from_nodes(
+            &[
                 // root: x[0] <= 1e30 → left leaf; else → poison node.
                 FlatNode { feat: 0, thresh: 1e30, lo: 1, value: 0.0 },
                 FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: 0.2 },
@@ -887,26 +943,26 @@ mod tests {
                 FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: 0.0 },
                 FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: 0.0 },
             ],
-            roots: vec![0],
-            base_score: 0.0,
+            vec![0],
+            0.0,
             n_features,
-        }
+        )
     }
 
     /// A deliberately expensive forest: ONE shallow tree whose root is
     /// repeated `reps` times, so a single small batch grinds a shard for a
     /// long, tunable time (the "hot neighbor" in the steal tests).
     fn slow_forest(n_features: usize, reps: usize) -> FlatForest {
-        FlatForest {
-            nodes: vec![
+        FlatForest::from_nodes(
+            &[
                 FlatNode { feat: 0, thresh: 0.0, lo: 1, value: 0.0 },
                 FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: 1e-7 },
                 FlatNode { feat: LEAF, thresh: 0.0, lo: 0, value: -1e-7 },
             ],
-            roots: vec![0; reps],
-            base_score: 0.0,
+            vec![0; reps],
+            0.0,
             n_features,
-        }
+        )
     }
 
     fn flat_rows(d: &Dataset, n: usize) -> (Vec<f32>, usize) {
@@ -1293,6 +1349,65 @@ mod tests {
         }
         assert_eq!(rows_seen, n, "every row delivered exactly once, failed or not");
         assert_eq!(seen.iter().filter(|(_, _, f)| *f).count(), 1);
+    }
+
+    /// Core-pinned workers serve bit-identically, and the pin outcome is
+    /// observable: on Linux every worker either records its CPU id or
+    /// bumps `pin_failures` (restricted cpusets in CI containers).
+    #[test]
+    fn pinned_workers_serve_identically_and_record_cpu() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 2,
+            min_task_rows: 16,
+            pin_threads: true,
+            ..Default::default()
+        });
+        let id = pool.register(flat.clone());
+        let (rows, row_len) = flat_rows(&d, 200);
+        let mut reference = vec![0f32; 200];
+        let mut scratch = ForestScratch::default();
+        flat.predict_flat_rows(&rows, row_len, &mut scratch, &mut reference);
+        for round in 0..3 {
+            let mut out = vec![0f32; 200];
+            assert!(pool.predict_spans(id, &rows, row_len, &mut out).is_empty());
+            for r in 0..200 {
+                assert_eq!(out[r].to_bits(), reference[r].to_bits(), "round {round} row {r}");
+            }
+        }
+        #[cfg(target_os = "linux")]
+        {
+            // Workers pin (or record the failure) before their first
+            // acquire; serving above guarantees they are up. Poll briefly
+            // anyway: a worker may not have been needed yet.
+            let deadline = std::time::Instant::now() + Duration::from_secs(2);
+            loop {
+                let resolved = (0..2)
+                    .filter(|&s| pool.stats().pinned_cpu(s).is_some())
+                    .count() as u64
+                    + pool.stats().pin_failures.load(Ordering::Relaxed);
+                if resolved >= 2 {
+                    break;
+                }
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "pin outcome never recorded: {}",
+                    pool.stats().report()
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let online = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+            for s in 0..2 {
+                if let Some(cpu) = pool.stats().pinned_cpu(s) {
+                    assert!((cpu as i64) < online, "shard {s} pinned to CPU {cpu}");
+                }
+            }
+        }
+        // An unpinned pool records nothing.
+        let plain = ShardPool::new(2);
+        assert!(plain.stats().pinned_cpu(0).is_none());
+        assert_eq!(plain.stats().pin_failures.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -1,0 +1,108 @@
+//! Typed stub of the (unvendored) `xla` bindings' API surface.
+//!
+//! The PJRT engine (`runtime::engine`) compiles against the Rust XLA
+//! bindings, which are not on crates.io — and a dependency with a dangling
+//! `path = ...` would break `cargo metadata` for every build, so the real
+//! crate cannot even be declared optionally. Before this shim existed the
+//! whole `pjrt` feature was un-checkable in CI and bit-rotted silently.
+//!
+//! This module mirrors exactly the types and signatures `engine.rs` uses,
+//! with constructors that fail fast at runtime (`PjRtClient::cpu()` returns
+//! an error telling the operator to vendor the bindings), so:
+//!
+//! * `cargo check --features pjrt` type-checks the engine/worker/backend
+//!   code on every CI run (the compile gate);
+//! * a `--features pjrt` build without vendored bindings still *runs* —
+//!   it just reports "xla bindings not vendored" the moment someone asks
+//!   for the PJRT backend, instead of failing to build the whole crate.
+//!
+//! To deploy the real engine: vendor the bindings (see the `Cargo.toml`
+//! header comment), add `xla = { path = "<vendored-xla-rs>" }` to
+//! `[dependencies]`, and delete the `use super::xla_shim as xla;` line in
+//! `engine.rs` — its `xla::` paths then resolve to the real crate.
+//! Everything else is written against the real API and compiles unchanged.
+
+use anyhow::{bail, Result};
+
+fn not_vendored<T>() -> Result<T> {
+    bail!(
+        "xla bindings not vendored: this build's `pjrt` feature compiled \
+         against the typed stub (runtime/xla_shim.rs); vendor the XLA \
+         bindings per the Cargo.toml header to run the PJRT engine"
+    )
+}
+
+/// Stub of `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        not_vendored()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        not_vendored()
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// The type parameter mirrors the real API's argument-literal generic.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        not_vendored()
+    }
+}
+
+/// Stub of `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        not_vendored()
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        not_vendored()
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        not_vendored()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        not_vendored()
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        not_vendored()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        not_vendored()
+    }
+}

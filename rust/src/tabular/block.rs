@@ -19,7 +19,9 @@
 //!   data is a straight `copy_from_slice` per feature — no per-row gather.
 //!
 //! Blocks are designed for reuse: every `fill_*` method recycles the
-//! backing buffer, so a steady-state serving loop performs no allocation.
+//! backing buffer, so a steady-state serving loop performs no allocation —
+//! and, because each fill overwrites its whole region, no redundant
+//! zero-fill pass either (only `reset` promises blank cells).
 
 use super::Dataset;
 
@@ -64,10 +66,28 @@ impl RowBlock {
         self.data.resize(n_features * n_rows, 0.0);
     }
 
+    /// Shape the buffer for a fill that overwrites **every** cell:
+    /// grow-only, no zeroing pass over memory the caller is about to
+    /// write (the `fill_*` methods below all write the full region; a
+    /// steady-state serving loop re-filling one block thus never touches
+    /// a cell twice). `reset` stays the all-zero API for callers that
+    /// want blank cells.
+    fn reuse_for_overwrite(&mut self, n_features: usize, n_rows: usize) {
+        self.n_features = n_features;
+        self.n_rows = n_rows;
+        let need = n_features * n_rows;
+        if self.data.len() < need {
+            self.data.resize(need, 0.0);
+        } else {
+            // Truncate adjusts the length without writing the kept cells.
+            self.data.truncate(need);
+        }
+    }
+
     /// Transpose row-major `rows` into this block, reusing the buffer.
     pub fn fill_from_rows<R: AsRef<[f32]>>(&mut self, rows: &[R]) {
         let n_features = rows.first().map_or(0, |r| r.as_ref().len());
-        self.reset(n_features, rows.len());
+        self.reuse_for_overwrite(n_features, rows.len());
         for (r, row) in rows.iter().enumerate() {
             let row = row.as_ref();
             // Hard assert: a ragged batch zero-filled silently would serve
@@ -83,7 +103,7 @@ impl RowBlock {
     /// reusing the block's buffer. Extra trailing values are ignored.
     pub fn fill_from_flat(&mut self, rows: &[f32], n_rows: usize, row_len: usize) {
         debug_assert!(rows.len() >= n_rows * row_len);
-        self.reset(row_len, n_rows);
+        self.reuse_for_overwrite(row_len, n_rows);
         for r in 0..n_rows {
             let src = &rows[r * row_len..(r + 1) * row_len];
             for (f, &v) in src.iter().enumerate() {
@@ -96,7 +116,7 @@ impl RowBlock {
     /// one straight `copy_from_slice` per feature column.
     pub fn fill_from_dataset(&mut self, d: &Dataset, start: usize, n: usize) {
         debug_assert!(start + n <= d.n_rows());
-        self.reset(d.n_features(), n);
+        self.reuse_for_overwrite(d.n_features(), n);
         for (f, col) in d.cols.iter().enumerate() {
             self.data[f * n..(f + 1) * n].copy_from_slice(&col[start..start + n]);
         }
@@ -197,6 +217,22 @@ mod tests {
         assert_eq!(b.feature(1), &[2.0]);
         b.fill_from_rows(&sample_rows());
         assert_eq!(b.feature(1), &[2.0, 5.0, 8.0, -2.0]);
+    }
+
+    #[test]
+    fn non_zeroing_reuse_never_leaks_stale_cells() {
+        let mut b = RowBlock::new();
+        b.fill_from_rows(&vec![vec![9.0f32; 4]; 8]); // big, dirty fill
+        b.fill_from_rows(&[vec![1.0f32, 2.0], vec![3.0, 4.0]]); // smaller
+        assert_eq!((b.n_rows(), b.n_features()), (2, 2));
+        assert_eq!(b.feature(0), &[1.0, 3.0]);
+        assert_eq!(b.feature(1), &[2.0, 4.0]);
+        // Equality with a fresh block: leftover capacity must not leak
+        // into the compared region.
+        assert_eq!(b, RowBlock::from_rows(&[vec![1.0f32, 2.0], vec![3.0, 4.0]]));
+        // reset() keeps its all-zero contract even over a dirty buffer.
+        b.reset(3, 2);
+        assert!((0..3).flat_map(|f| b.feature(f).iter()).all(|&v| v == 0.0));
     }
 
     #[test]

@@ -219,6 +219,12 @@ pub struct ShardStats {
     /// Per-shard counts of tasks stolen BY that shard from a neighbor's
     /// ring (the thief's side of the work-stealing protocol).
     shard_steals: Vec<AtomicU64>,
+    /// CPU id each shard's worker pinned itself to (+1, so 0 means "not
+    /// pinned" — workers only write on a successful `sched_setaffinity`).
+    shard_pinned: Vec<AtomicU64>,
+    /// Workers that requested pinning but could not (non-Linux target or a
+    /// failing `sched_setaffinity`, e.g. restricted container cpusets).
+    pub pin_failures: AtomicU64,
     /// Sub-range tasks submitted across all batches (split remainders
     /// count as new spans when requeued).
     pub spans_submitted: AtomicU64,
@@ -243,6 +249,7 @@ impl ShardStats {
             shard_tasks: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
             shard_busy: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
             shard_steals: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+            shard_pinned: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
             ..Default::default()
         }
     }
@@ -285,6 +292,19 @@ impl ShardStats {
         self.shard_panics.load(Ordering::Relaxed)
     }
 
+    /// Record the CPU a shard's worker successfully pinned itself to.
+    pub fn set_pinned(&self, shard: usize, cpu: u32) {
+        self.shard_pinned[shard].store(cpu as u64 + 1, Ordering::Relaxed);
+    }
+
+    /// CPU id shard `i`'s worker is pinned to (`None` = not pinned).
+    pub fn pinned_cpu(&self, shard: usize) -> Option<u32> {
+        match self.shard_pinned[shard].load(Ordering::Relaxed) {
+            0 => None,
+            v => Some((v - 1) as u32),
+        }
+    }
+
     /// Record a task stolen by `thief` from a neighbor's ring.
     pub fn record_steal(&self, thief: usize) {
         self.shard_steals[thief].fetch_add(1, Ordering::Relaxed);
@@ -312,7 +332,7 @@ impl ShardStats {
             .iter()
             .map(|c| c.load(Ordering::Relaxed).to_string())
             .collect();
-        format!(
+        let mut s = format!(
             "shards[{}] tasks/shard=[{}] steals/shard=[{}] submitted={} splits={} inline={} panics={} busy={} q_hwm={}",
             self.n_shards(),
             per_shard.join(","),
@@ -323,7 +343,21 @@ impl ShardStats {
             self.panics(),
             self.busy_shards(),
             self.queue_depth_hwm.load(Ordering::Relaxed),
-        )
+        );
+        let pin_failures = self.pin_failures.load(Ordering::Relaxed);
+        if pin_failures > 0 || (0..self.n_shards()).any(|i| self.pinned_cpu(i).is_some()) {
+            let pinned: Vec<String> = (0..self.n_shards())
+                .map(|i| {
+                    self.pinned_cpu(i)
+                        .map_or_else(|| "-".into(), |c| c.to_string())
+                })
+                .collect();
+            s.push_str(&format!(
+                " pinned_cpu=[{}] pin_failures={pin_failures}",
+                pinned.join(",")
+            ));
+        }
+        s
     }
 }
 
@@ -359,6 +393,18 @@ mod tests {
         assert!(rep.contains("steals/shard=[0,2,0]"), "{rep}");
         assert!(rep.contains("splits=1"), "{rep}");
         assert!(rep.contains("q_hwm=5"), "{rep}");
+        // No pinning requested: the report omits the affinity section.
+        assert!(!rep.contains("pinned_cpu"), "{rep}");
+        assert_eq!(s.pinned_cpu(0), None);
+        s.set_pinned(0, 3);
+        s.set_pinned(2, 0);
+        s.pin_failures.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(s.pinned_cpu(0), Some(3));
+        assert_eq!(s.pinned_cpu(1), None);
+        assert_eq!(s.pinned_cpu(2), Some(0));
+        let rep = s.report();
+        assert!(rep.contains("pinned_cpu=[3,-,0]"), "{rep}");
+        assert!(rep.contains("pin_failures=1"), "{rep}");
         s.set_busy(1, false);
         assert_eq!(s.busy_shards(), 0);
     }

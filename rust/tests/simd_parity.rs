@@ -1,0 +1,289 @@
+//! SIMD-parity property battery: every stage-1 dispatch tier and the
+//! forest lane walk must be **bit-identical** to the forced-scalar
+//! reference — on random tables/blocks and on the adversarial inputs the
+//! IEEE corner cases live in: NaN rows, ±∞, denormals, values exactly
+//! equal to a quantile edge (the `x > e` tie must land in the lower bin on
+//! every tier), all-constant columns, and block sizes leaving every
+//! possible `1..LANE-1` remainder for the lane tiles.
+//!
+//! The synthetic tables are built through [`ServingTables::from_parts`]
+//! with identity normalization on half the features, so a raw f32 value
+//! can be placed EXACTLY on an edge (normalized bits == raw bits), and
+//! scaled f64 normalization on the rest, so the fused
+//! normalize-into-binning path is exercised against the materialized one.
+
+use lrwbins::gbdt::{self, FlatForest, ForestScratch, GbdtParams};
+use lrwbins::lrwbins::{BlockScratch, ServingTables, Stage1Dispatch, TableParts, LANE};
+use lrwbins::tabular::{Dataset, RowBlock, Schema};
+use lrwbins::util::rng::Rng;
+
+/// Random-but-consistent serving tables: `n_bin` binning features (some
+/// shared with the `n_infer` inference features, some bin-only → fused on
+/// the tiled tiers), sorted finite edges padded to `q_max` with +inf,
+/// mixed-radix strides, and a weight row per combined bin.
+fn synth_tables(rng: &mut Rng, n_features: usize, n_bin: usize, n_infer: usize) -> ServingTables {
+    assert!(n_bin <= n_features && n_infer <= n_features);
+    let q_max = 1 + rng.index(4); // 1..=4 edge slots per feature
+    let bin_features: Vec<u32> = (0..n_bin as u32).collect();
+    // Infer features overlap the tail of the bin set and run past it, so
+    // the battery always contains bin-only, bin+infer, and infer-only
+    // features.
+    let start = n_bin / 2;
+    let infer_features: Vec<u32> = (start..start + n_infer).map(|f| (f % n_features) as u32).collect();
+
+    let mut quantiles = Vec::with_capacity(n_bin * q_max);
+    let mut sizes = Vec::with_capacity(n_bin);
+    for _ in 0..n_bin {
+        let n_edges = 1 + rng.index(q_max);
+        let mut edges: Vec<f32> = (0..n_edges).map(|_| rng.normal() as f32).collect();
+        edges.sort_by(f32::total_cmp);
+        sizes.push(n_edges as u32 + 1);
+        edges.resize(q_max, f32::INFINITY);
+        quantiles.extend_from_slice(&edges);
+    }
+    let mut strides = Vec::with_capacity(n_bin);
+    let mut total: u32 = 1;
+    for &s in &sizes {
+        strides.push(total);
+        total *= s;
+    }
+
+    // Identity normalization on even features (edge ties constructible in
+    // raw space), random affine on odd ones (fused-path f64 rounding).
+    let means: Vec<f64> = (0..n_features)
+        .map(|f| if f % 2 == 0 { 0.0 } else { rng.normal() })
+        .collect();
+    let inv_stds: Vec<f64> = (0..n_features)
+        .map(|f| if f % 2 == 0 { 1.0 } else { rng.range_f64(0.2, 3.0) })
+        .collect();
+
+    let weights: Vec<f32> = (0..total as usize * (n_infer + 1))
+        .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+        .collect();
+    let global_weights: Vec<f32> = (0..n_infer + 1)
+        .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+        .collect();
+    let route: Vec<u8> = (0..total).map(|b| (b % 3 != 0) as u8).collect();
+
+    ServingTables::from_parts(TableParts {
+        n_features,
+        bin_features,
+        quantiles,
+        q_max,
+        strides,
+        total_bins: total,
+        means,
+        inv_stds,
+        infer_features,
+        weights,
+        global_weights,
+        route,
+    })
+}
+
+/// Adversarial row batch: random values plus NaN/±∞/denormals, raw values
+/// sitting EXACTLY on quantile edges of identity-normalized features, and
+/// one all-constant column.
+fn synth_rows(rng: &mut Rng, t: &ServingTables, n: usize) -> Vec<Vec<f32>> {
+    let nf = t.n_features;
+    let mut rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..nf).map(|_| (rng.normal() * 1.5) as f32).collect())
+        .collect();
+    for row in rows.iter_mut() {
+        match rng.index(6) {
+            0 => row[rng.index(nf)] = f32::NAN,
+            1 => row[rng.index(nf)] = f32::INFINITY,
+            2 => row[rng.index(nf)] = f32::NEG_INFINITY,
+            // Denormal: tiny non-zero bit patterns (and their negation).
+            3 => {
+                let bits = 1 + rng.below(0x007f_ffff) as u32;
+                let neg = if rng.bool(0.5) { 0x8000_0000 } else { 0 };
+                row[rng.index(nf)] = f32::from_bits(bits | neg);
+            }
+            // Exact edge tie on an identity-normalized bin feature: the
+            // normalized value bit-equals the edge, so `x > e` must be
+            // false (lower bin) on every tier.
+            4 => {
+                let i = rng.index(t.bin_features.len());
+                let f = t.bin_features[i] as usize;
+                if f % 2 == 0 {
+                    let e = t.quantiles[i * t.q_max + rng.index(t.q_max)];
+                    if e.is_finite() {
+                        row[f] = e;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    // One all-constant column (every lane compares equal — a degenerate
+    // case for masked/tiled stepping).
+    let cf = rng.index(nf);
+    let cv = (rng.normal()) as f32;
+    for row in rows.iter_mut() {
+        row[cf] = cv;
+    }
+    // A couple of fully poisoned rows.
+    if n >= 4 {
+        rows[n / 3] = vec![f32::NAN; nf];
+        rows[2 * n / 3] = vec![f32::INFINITY; nf];
+    }
+    rows
+}
+
+/// The acceptance property: for random synthetic tables and adversarial
+/// blocks, `bin_of_block` / `evaluate_block` on every available tier match
+/// the forced-scalar instance AND the per-row scalar path, bit for bit —
+/// across block sizes covering every lane remainder.
+#[test]
+fn stage1_tiers_bit_identical_on_adversarial_blocks() {
+    let mut rng = Rng::new(0x51_3d_9a);
+    for case in 0..12 {
+        let n_features = 3 + rng.index(8); // 3..=10
+        let n_bin = 1 + rng.index(n_features.min(4));
+        let n_infer = 1 + rng.index(n_features);
+        let tables = synth_tables(&mut rng, n_features, n_bin, n_infer);
+        let rows = synth_rows(&mut rng, &tables, 3 * LANE + 5);
+
+        // Reference: forced-scalar block path + the per-row path.
+        let mut scalar_t = tables.clone();
+        assert_eq!(scalar_t.set_dispatch(Stage1Dispatch::Scalar), Stage1Dispatch::Scalar);
+
+        // Block sizes: every remainder 1..LANE-1, exact tiles, odd sizes.
+        let mut sizes: Vec<usize> = (1..LANE).collect();
+        sizes.extend([LANE, LANE + 1, 2 * LANE, 3 * LANE + 5]);
+        for tier in Stage1Dispatch::available_tiers() {
+            let mut t = tables.clone();
+            assert_eq!(t.set_dispatch(tier), tier);
+            let mut scratch = BlockScratch::default();
+            let mut ref_scratch = BlockScratch::default();
+            let (mut bins, mut ref_bins) = (Vec::new(), Vec::new());
+            let (mut probs, mut routed) = (Vec::new(), Vec::new());
+            let (mut ref_probs, mut ref_routed) = (Vec::new(), Vec::new());
+            for &take in &sizes {
+                let chunk = &rows[..take.min(rows.len())];
+                let block = RowBlock::from_rows(chunk);
+                t.bin_of_block(&block, &mut scratch, &mut bins);
+                t.evaluate_block(&block, &mut scratch, &mut probs, &mut routed);
+                scalar_t.bin_of_block(&block, &mut ref_scratch, &mut ref_bins);
+                scalar_t.evaluate_block(&block, &mut ref_scratch, &mut ref_probs, &mut ref_routed);
+                for (i, row) in chunk.iter().enumerate() {
+                    let ctx = format!("case {case} tier {tier:?} n={take} row {i}");
+                    assert_eq!(bins[i], ref_bins[i], "{ctx}: tier vs scalar block");
+                    assert_eq!(bins[i], tables.bin_of(row), "{ctx}: tier vs per-row");
+                    assert_eq!(
+                        probs[i].to_bits(),
+                        ref_probs[i].to_bits(),
+                        "{ctx}: probs {} vs {}",
+                        probs[i],
+                        ref_probs[i]
+                    );
+                    let (p_row, r_row) = tables.evaluate(row);
+                    assert_eq!(probs[i].to_bits(), p_row.to_bits(), "{ctx}: probs vs per-row");
+                    assert_eq!(routed[i], ref_routed[i], "{ctx}: routed");
+                    assert_eq!(routed[i], r_row, "{ctx}: routed vs per-row");
+                }
+            }
+        }
+    }
+}
+
+/// Exact edge ties: a value whose normalized bits equal a quantile edge
+/// counts as NOT above it (`x > e` is false) — the tie lands in the lower
+/// bin on every tier, and one ULP above the edge lands in the upper bin.
+#[test]
+fn edge_ties_land_in_the_lower_bin_on_every_tier() {
+    // One identity-normalized feature with edges [-0.75, 0.5, +inf].
+    let tables = ServingTables::from_parts(TableParts {
+        n_features: 2,
+        bin_features: vec![0],
+        quantiles: vec![-0.75, 0.5, f32::INFINITY],
+        q_max: 3,
+        strides: vec![1],
+        total_bins: 3,
+        means: vec![0.0, 0.0],
+        inv_stds: vec![1.0, 1.0],
+        infer_features: vec![1],
+        weights: vec![0.1, 0.2, 0.3, -0.1, 0.5, 0.0],
+        global_weights: vec![0.0, 0.0],
+        route: vec![1, 1, 1],
+    });
+    // Next representable value above `v` (for negative values the bit
+    // pattern DECREMENTS toward zero).
+    let above = |v: f32| {
+        if v >= 0.0 {
+            f32::from_bits(v.to_bits() + 1)
+        } else {
+            f32::from_bits(v.to_bits() - 1)
+        }
+    };
+    // Rows padded past one lane so the tie sits inside a full tile AND in
+    // the remainder tail on different sizes.
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..2 {
+        rows.push(vec![-0.75, 0.0]); // tie on edge 0    → bin 0
+        rows.push(vec![above(-0.75), 0.0]); // one ULP above  → bin 1
+        rows.push(vec![0.5, 0.0]); // tie on edge 1        → bin 1
+        rows.push(vec![above(0.5), 0.0]); // one ULP above   → bin 2
+        rows.push(vec![f32::NAN, 0.0]); // NaN compares false → bin 0
+        rows.push(vec![f32::INFINITY, 0.0]); // above finite edges, not +inf pad → bin 2
+    }
+    let expect: Vec<u32> = vec![0, 1, 1, 2, 0, 2, 0, 1, 1, 2, 0, 2];
+    for tier in Stage1Dispatch::available_tiers() {
+        let mut t = tables.clone();
+        assert_eq!(t.set_dispatch(tier), tier);
+        let mut scratch = BlockScratch::default();
+        let mut bins = Vec::new();
+        for take in [5usize, 12] {
+            let block = RowBlock::from_rows(&rows[..take]);
+            t.bin_of_block(&block, &mut scratch, &mut bins);
+            assert_eq!(&bins[..], &expect[..take], "tier {tier:?} take {take}");
+        }
+    }
+}
+
+/// Forest side: the widened masked lane walk matches the per-row scalar
+/// walk and the training-side model bit-for-bit — including NaN routing,
+/// ±∞ thresholds-vs-values, and every lane-tile remainder.
+#[test]
+fn forest_lane_walk_bit_identical_to_scalar_walk() {
+    let mut rng = Rng::new(77);
+    let mut d = Dataset::new(Schema::numeric(6));
+    for _ in 0..3000 {
+        let x: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+        let y = (x[0] * x[1] - x[4] > 0.2) as u8 as f32;
+        d.push_row(&x, y);
+    }
+    let m = gbdt::train(&d, &GbdtParams { n_trees: 21, max_depth: 6, ..Default::default() });
+    let flat = FlatForest::from_model(&m);
+
+    let mut rows: Vec<Vec<f32>> = (0..140).map(|r| d.row(r)).collect();
+    rows[3][0] = f32::NAN;
+    rows[40] = vec![f32::NAN; 6];
+    rows[41][2] = f32::INFINITY;
+    rows[42][5] = f32::NEG_INFINITY;
+    rows[43][1] = f32::from_bits(7); // denormal
+    let mut scratch = ForestScratch::default();
+    let (mut lanes, mut scalar) = (Vec::new(), Vec::new());
+    // 1..=17 sweeps every remainder around the 16-lane tile; bigger sizes
+    // mix full tiles with tails.
+    let mut sizes: Vec<usize> = (1..=17).collect();
+    sizes.extend([31, 32, 64, 140]);
+    for &take in &sizes {
+        let block = RowBlock::from_rows(&rows[..take]);
+        flat.predict_block(&block, &mut scratch, &mut lanes);
+        flat.predict_block_scalar(&block, &mut scratch, &mut scalar);
+        for i in 0..take {
+            assert_eq!(
+                lanes[i].to_bits(),
+                scalar[i].to_bits(),
+                "n={take} row {i}: lane walk vs scalar walk"
+            );
+            assert_eq!(
+                lanes[i].to_bits(),
+                m.predict_one(&rows[i]).to_bits(),
+                "n={take} row {i}: lane walk vs model"
+            );
+        }
+    }
+}
