@@ -207,4 +207,51 @@ fn main() {
         fmt_ns(stack.metrics.block_stage1_complete.mean_ns()),
         fmt_ns(stack.metrics.block_rpc_complete.mean_ns()),
     );
+
+    // --- Degraded mode (breaker open vs closed) ---------------------------
+    // DegradeMode::Stage1Prior with the client breaker force-opened: every
+    // miss is answered by its stage-1 prior (Served::Degraded) with zero
+    // wire traffic. The open-breaker row bounds what the fleet can hold
+    // while the second stage is down — serving through the outage instead
+    // of failing — and the closed row is the same workload healthy.
+    use std::sync::atomic::Ordering;
+    stack.coordinator.mode = Mode::Multistage;
+    stack.coordinator.degrade = lrwbins::coordinator::DegradeMode::Stage1Prior;
+    println!("\n| degraded mode: block batch | breaker closed | breaker open (stage-1 prior) | closed/open | degraded rows |");
+    println!("|---|---|---|---|---|");
+    for &bs in &[64usize, 256] {
+        let bs = bs.min(n_avail);
+        let reps = (total / bs).max(1);
+        let mut per_state = [0.0f64; 2];
+        let mut degraded = 0u64;
+        for (si, open) in [false, true].into_iter().enumerate() {
+            let breaker = stack.coordinator.rpc_client().expect("rpc stack").breaker();
+            if open {
+                breaker.force_open();
+            } else {
+                breaker.force_close();
+            }
+            // Warm up the state (first open-breaker block pays the flip).
+            block.fill_from_dataset(&stack.test, 0, bs);
+            let _ = stack.coordinator.predict_block(&block);
+            let d0 = stack.metrics.degraded_rows.load(Ordering::Relaxed);
+            let t0 = Instant::now();
+            for rep in 0..reps {
+                block.fill_from_dataset(&stack.test, (rep * bs) % (n_avail - bs + 1), bs);
+                let _ = stack.coordinator.predict_block(&block);
+            }
+            per_state[si] = t0.elapsed().as_nanos() as f64 / (reps * bs) as f64;
+            if open {
+                degraded = stack.metrics.degraded_rows.load(Ordering::Relaxed) - d0;
+            }
+        }
+        stack.coordinator.rpc_client().expect("rpc stack").breaker().force_close();
+        println!(
+            "| {bs} | {} | {} | {:.2}x | {degraded} |",
+            fmt_ns(per_state[0]),
+            fmt_ns(per_state[1]),
+            per_state[0] / per_state[1],
+        );
+    }
+    stack.coordinator.degrade = lrwbins::coordinator::DegradeMode::Fail;
 }

@@ -33,6 +33,23 @@ pub struct ServeConfig {
     pub netsim_base_us: f64,
     pub netsim_sigma: f64,
     pub seed: u64,
+    /// Failure model — client retry policy: extra attempts after the first
+    /// (0 disables retrying) and the starting backoff (doubles per retry,
+    /// jittered; see `rpc::fault::RetryPolicy`).
+    pub retry_max: u32,
+    pub retry_base_backoff_ms: u64,
+    /// Circuit breaker: consecutive transport failures that trip it open,
+    /// and how long it fails fast before the half-open probe.
+    pub breaker_failures: u32,
+    pub breaker_cooldown_ms: u64,
+    /// What a route-missed row gets when the second stage cannot serve it:
+    /// "fail" (propagate the error), "stage1-prior" (answer with the
+    /// stage-1 prior, marked degraded), or "block" (wait out the breaker).
+    pub degrade: String,
+    /// Default per-request deadline budget, milliseconds; 0 = none. The
+    /// budget rides the wire so the server batcher and shard pool shed
+    /// expired work instead of computing answers nobody can use.
+    pub deadline_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -50,6 +67,12 @@ impl Default for ServeConfig {
             netsim_base_us: 250.0,
             netsim_sigma: 0.25,
             seed: 7,
+            retry_max: 2,
+            retry_base_backoff_ms: 5,
+            breaker_failures: 5,
+            breaker_cooldown_ms: 250,
+            degrade: "fail".into(),
+            deadline_ms: 0,
         }
     }
 }
@@ -69,6 +92,18 @@ impl ServeConfig {
         j.set("netsim_base_us", Json::Num(self.netsim_base_us));
         j.set("netsim_sigma", Json::Num(self.netsim_sigma));
         j.set("seed", Json::Num(self.seed as f64));
+        j.set("retry_max", Json::Num(self.retry_max as f64));
+        j.set(
+            "retry_base_backoff_ms",
+            Json::Num(self.retry_base_backoff_ms as f64),
+        );
+        j.set("breaker_failures", Json::Num(self.breaker_failures as f64));
+        j.set(
+            "breaker_cooldown_ms",
+            Json::Num(self.breaker_cooldown_ms as f64),
+        );
+        j.set("degrade", Json::Str(self.degrade.clone()));
+        j.set("deadline_ms", Json::Num(self.deadline_ms as f64));
         j
     }
 
@@ -91,6 +126,13 @@ impl ServeConfig {
             netsim_base_us: n("netsim_base_us", d.netsim_base_us),
             netsim_sigma: n("netsim_sigma", d.netsim_sigma),
             seed: n("seed", d.seed as f64) as u64,
+            retry_max: n("retry_max", d.retry_max as f64) as u32,
+            retry_base_backoff_ms: n("retry_base_backoff_ms", d.retry_base_backoff_ms as f64)
+                as u64,
+            breaker_failures: n("breaker_failures", d.breaker_failures as f64) as u32,
+            breaker_cooldown_ms: n("breaker_cooldown_ms", d.breaker_cooldown_ms as f64) as u64,
+            degrade: s("degrade", &d.degrade),
+            deadline_ms: n("deadline_ms", d.deadline_ms as f64) as u64,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -101,16 +143,63 @@ impl ServeConfig {
         crate::lrwbins::Stage1Dispatch::parse(&self.stage1_simd)
     }
 
+    /// Parsed degrade policy for the coordinator.
+    pub fn degrade_mode(&self) -> Result<crate::coordinator::DegradeMode, String> {
+        use crate::coordinator::DegradeMode;
+        match self.degrade.as_str() {
+            "fail" => Ok(DegradeMode::Fail),
+            "stage1-prior" => Ok(DegradeMode::Stage1Prior),
+            "block" => Ok(DegradeMode::Block),
+            other => Err(format!(
+                "degrade must be fail|stage1-prior|block, got '{other}'"
+            )),
+        }
+    }
+
+    /// Client transport config (retry policy + breaker thresholds) built
+    /// from the failure-model knobs.
+    pub fn client_config(&self) -> crate::rpc::ClientConfig {
+        use std::time::Duration;
+        crate::rpc::ClientConfig {
+            retry: crate::rpc::RetryPolicy {
+                max_retries: self.retry_max,
+                base_backoff: Duration::from_millis(self.retry_base_backoff_ms),
+                ..Default::default()
+            },
+            breaker: crate::rpc::BreakerConfig {
+                failure_threshold: self.breaker_failures,
+                cooldown: Duration::from_millis(self.breaker_cooldown_ms),
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Per-request options from the configured default deadline budget.
+    pub fn predict_options(&self) -> crate::rpc::PredictOptions {
+        if self.deadline_ms == 0 {
+            crate::rpc::PredictOptions::default()
+        } else {
+            crate::rpc::PredictOptions::with_budget(std::time::Duration::from_millis(
+                self.deadline_ms,
+            ))
+        }
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if self.backend != "pjrt" && self.backend != "native" {
             return Err(format!("backend must be pjrt|native, got '{}'", self.backend));
         }
         self.stage1_dispatch()?;
+        self.degrade_mode()?;
         if self.max_batch == 0 {
             return Err("max_batch must be > 0".into());
         }
         if self.workers == 0 {
             return Err("workers must be > 0".into());
+        }
+        if self.breaker_failures == 0 {
+            return Err("breaker_failures must be > 0 (use a huge value to disable)".into());
         }
         Ok(())
     }
@@ -199,5 +288,51 @@ mod tests {
     fn rejects_zero_batch() {
         let j = Json::parse(r#"{"max_batch": 0}"#).unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn failure_model_knobs_roundtrip() {
+        let c = ServeConfig {
+            retry_max: 4,
+            retry_base_backoff_ms: 11,
+            breaker_failures: 3,
+            breaker_cooldown_ms: 77,
+            degrade: "stage1-prior".into(),
+            deadline_ms: 25,
+            ..Default::default()
+        };
+        let c2 = ServeConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(c2.retry_max, 4);
+        assert_eq!(c2.retry_base_backoff_ms, 11);
+        assert_eq!(c2.breaker_failures, 3);
+        assert_eq!(c2.breaker_cooldown_ms, 77);
+        assert_eq!(
+            c2.degrade_mode().unwrap(),
+            crate::coordinator::DegradeMode::Stage1Prior
+        );
+        let cc = c2.client_config();
+        assert_eq!(cc.retry.max_retries, 4);
+        assert_eq!(cc.breaker.failure_threshold, 3);
+        assert_eq!(
+            cc.breaker.cooldown,
+            std::time::Duration::from_millis(77)
+        );
+        let opts = c2.predict_options();
+        assert!(opts.deadline.is_some());
+        assert!(ServeConfig::default().predict_options().deadline.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_degrade_and_zero_breaker_threshold() {
+        let j = Json::parse(r#"{"degrade": "shrug"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"breaker_failures": 0}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+        // Defaults stay degrade=fail, no deadline.
+        let c = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(
+            c.degrade_mode().unwrap(),
+            crate::coordinator::DegradeMode::Fail
+        );
     }
 }

@@ -49,7 +49,8 @@
 
 use crate::lrwbins::{BlockScratch, ServingTables, Stage1Dispatch};
 use crate::rpc::client::PendingPredict;
-use crate::rpc::RpcClient;
+use crate::rpc::fault::is_breaker_open;
+use crate::rpc::{PredictOptions, RpcClient};
 use crate::runtime::{ModelId, ShardPool};
 use crate::tabular::RowBlock;
 use crate::telemetry::{CpuTimer, ServeMetrics};
@@ -90,7 +91,38 @@ pub enum Mode {
 pub enum Served {
     Stage1,
     Rpc,
+    /// The second stage was unavailable (breaker open, deadline spent, or a
+    /// transport failure that outlived the retry policy) and the row was
+    /// answered with its **stage-1 prior** under
+    /// [`DegradeMode::Stage1Prior`]. An explicit outcome, never silently
+    /// conflated with a real second-stage answer: degraded rows are counted
+    /// in [`ServeMetrics::degraded_rows`](crate::telemetry::ServeMetrics),
+    /// not `rpc_calls`.
+    Degraded,
 }
+
+/// What a route-missed row gets when the second stage cannot serve it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DegradeMode {
+    /// Propagate the failure to the caller (an error instead of results).
+    /// The default — degradation is an explicit opt-in.
+    #[default]
+    Fail,
+    /// Answer missed rows with their stage-1 prior, marked
+    /// [`Served::Degraded`]; stage-1-amenable rows are unaffected.
+    Stage1Prior,
+    /// Wait out an open breaker (bounded by the request deadline, or
+    /// [`BLOCK_MODE_CAP`] without one) and try again; transport failures
+    /// still propagate.
+    Block,
+}
+
+/// Upper bound on how long [`DegradeMode::Block`] waits for the breaker to
+/// re-admit when the request carries no deadline.
+pub const BLOCK_MODE_CAP: Duration = Duration::from_secs(1);
+
+/// Sleep quantum while [`DegradeMode::Block`] waits on an open breaker.
+const BLOCK_MODE_POLL: Duration = Duration::from_millis(5);
 
 /// Feature-fetch cost model (paper §5.2: feature fetching is a CPU
 /// bottleneck; LRwBins fetches only the top-n subset, giving the 1.2×
@@ -150,6 +182,10 @@ pub struct Coordinator {
     rpc_row_len: usize,
     pub metrics: Arc<ServeMetrics>,
     pub mode: Mode,
+    /// What route-missed rows get when the second stage cannot serve them
+    /// (breaker open, deadline spent, transport failure past the retry
+    /// policy). Default: [`DegradeMode::Fail`].
+    pub degrade: DegradeMode,
     /// Optional feature-fetch cost model (None = features already in hand).
     pub fetch: Option<FetchSim>,
     scratch: Mutex<CoordScratch>,
@@ -203,9 +239,50 @@ impl Coordinator {
             rpc_row_len,
             metrics,
             mode: Mode::Multistage,
+            degrade: DegradeMode::default(),
             fetch: None,
             scratch: Mutex::new(CoordScratch::default()),
         }
+    }
+
+    /// The second-stage RPC client, when that is the configured fallback
+    /// (breaker drills, failure telemetry).
+    pub fn rpc_client(&self) -> Option<&RpcClient> {
+        match &self.fallback {
+            Some(SecondStage::Rpc(client)) => Some(client),
+            _ => None,
+        }
+    }
+
+    /// Mirror the client's retry/breaker counters into [`ServeMetrics`] so
+    /// one report covers the whole failure model. Called on every second-
+    /// stage completion and every degradation.
+    fn sync_rpc_failure_counters(&self) {
+        if let Some(client) = self.rpc_client() {
+            use std::sync::atomic::Ordering;
+            self.metrics
+                .rpc_retries
+                .store(client.retries(), Ordering::Relaxed);
+            self.metrics.breaker_trips.store(
+                client.breaker().trips.load(Ordering::Relaxed),
+                Ordering::Relaxed,
+            );
+        }
+    }
+
+    /// [`DegradeMode::Block`]: sleep out an open breaker, bounded by the
+    /// request deadline (or [`BLOCK_MODE_CAP`] without one). Returns false
+    /// once the bound is spent — the caller then propagates the error.
+    fn block_on_breaker(&self, opts: &PredictOptions, waited: &mut Duration) -> bool {
+        let cap = opts
+            .deadline
+            .map_or(BLOCK_MODE_CAP, |d| d.remaining().min(BLOCK_MODE_CAP));
+        if *waited >= cap {
+            return false;
+        }
+        std::thread::sleep(BLOCK_MODE_POLL);
+        *waited += BLOCK_MODE_POLL;
+        true
     }
 
     /// Force the stage-1 block-kernel tier (`ServeConfig::stage1_simd`,
@@ -223,13 +300,29 @@ impl Coordinator {
     }
 
     /// Score `n` padded rows on the configured second stage, blocking.
-    fn second_stage_predict(&self, rows: &[f32], n: usize) -> std::io::Result<Vec<f32>> {
+    fn second_stage_predict(
+        &self,
+        rows: &[f32],
+        n: usize,
+        opts: &PredictOptions,
+    ) -> std::io::Result<Vec<f32>> {
         match &self.fallback {
             None => Err(no_second_stage()),
             Some(SecondStage::Rpc(client)) => {
-                let probs = client.predict(rows, self.rpc_row_len)?;
-                debug_assert_eq!(probs.len(), n);
-                Ok(probs)
+                let mut waited = Duration::ZERO;
+                loop {
+                    match client.predict_opts(rows, self.rpc_row_len, opts) {
+                        Ok(probs) => {
+                            debug_assert_eq!(probs.len(), n);
+                            return Ok(probs);
+                        }
+                        Err(e)
+                            if self.degrade == DegradeMode::Block
+                                && is_breaker_open(&e)
+                                && self.block_on_breaker(opts, &mut waited) => {}
+                        Err(e) => return Err(e),
+                    }
+                }
             }
             Some(SecondStage::Embedded { pool, model }) => {
                 let mut probs = vec![0f32; n];
@@ -273,6 +366,7 @@ impl Coordinator {
             max_wall = max_wall.max(wall);
         }
         self.metrics.block_rpc_complete.record(max_wall);
+        self.sync_rpc_failure_counters();
     }
 
     /// Uniform-wall shorthand for [`Coordinator::record_miss_rows`] (the
@@ -283,6 +377,18 @@ impl Coordinator {
 
     /// Serve one inference. Returns `(probability, stage)`.
     pub fn predict(&self, row: &[f32]) -> std::io::Result<(f32, Served)> {
+        self.predict_with(row, &PredictOptions::default())
+    }
+
+    /// [`Coordinator::predict`] with per-request options: the deadline
+    /// budget rides every downstream hop (client send, server batcher,
+    /// shard pool), and the degrade policy decides what a miss gets when
+    /// the second stage cannot serve it.
+    pub fn predict_with(
+        &self,
+        row: &[f32],
+        opts: &PredictOptions,
+    ) -> std::io::Result<(f32, Served)> {
         debug_assert_eq!(row.len(), self.tables.n_features);
         let t0 = Instant::now();
         let cpu = CpuTimer::start();
@@ -320,7 +426,22 @@ impl Coordinator {
         }
         let mut padded = Vec::with_capacity(self.rpc_row_len);
         self.pad_for_rpc(row, &mut padded);
-        let probs = self.second_stage_predict(&padded, 1)?;
+        let probs = match self.second_stage_predict(&padded, 1, opts) {
+            Ok(probs) => probs,
+            Err(e) => {
+                self.sync_rpc_failure_counters();
+                if self.degrade != DegradeMode::Stage1Prior {
+                    return Err(e);
+                }
+                // Graceful degradation: answer with the stage-1 prior,
+                // explicitly marked — and counted — as degraded.
+                use std::sync::atomic::Ordering;
+                self.metrics.degraded_rows.fetch_add(1, Ordering::Relaxed);
+                self.metrics.degraded_requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics.e2e.record(t0.elapsed().as_nanos() as u64);
+                return Ok((p1, Served::Degraded));
+            }
+        };
         let wall = t0.elapsed().as_nanos() as u64;
         self.metrics.hit_rpc(
             wall,
@@ -329,6 +450,7 @@ impl Coordinator {
             self.miss_wire_bytes(1),
         );
         self.metrics.e2e.record(wall);
+        self.sync_rpc_failure_counters();
         Ok((probs[0], Served::Rpc))
     }
 
@@ -348,7 +470,14 @@ impl Coordinator {
         let mut guard = self.lock_scratch();
         let mut block = std::mem::take(&mut guard.block);
         block.fill_from_rows(rows);
-        let pending = self.serve_block_async(&block, Some(rows), guard, t0, cpu);
+        let pending = self.serve_block_async(
+            &block,
+            Some(rows),
+            guard,
+            t0,
+            cpu,
+            &PredictOptions::default(),
+        );
         self.lock_scratch().block = block;
         pending?.wait()
     }
@@ -370,11 +499,22 @@ impl Coordinator {
     /// blocks before waiting to overlap their stage-1 passes with this
     /// block's RPC.
     pub fn predict_block_async(&self, block: &RowBlock) -> std::io::Result<BlockPending<'_>> {
+        self.predict_block_async_opts(block, &PredictOptions::default())
+    }
+
+    /// [`Coordinator::predict_block_async`] with per-request options — the
+    /// deadline budget rides the coalesced miss RPC and the degrade policy
+    /// governs what missed rows get when the second stage fails.
+    pub fn predict_block_async_opts(
+        &self,
+        block: &RowBlock,
+        opts: &PredictOptions,
+    ) -> std::io::Result<BlockPending<'_>> {
         let t0 = Instant::now();
         let cpu = CpuTimer::start();
         self.fetch_stage1(block.n_rows());
         let guard = self.lock_scratch();
-        self.serve_block_async(block, None, guard, t0, cpu)
+        self.serve_block_async(block, None, guard, t0, cpu, opts)
     }
 
     /// Simulated feature fetch for a whole block's stage-1 attempt,
@@ -412,6 +552,7 @@ impl Coordinator {
         mut guard: MutexGuard<'_, CoordScratch>,
         t0: Instant,
         cpu: CpuTimer,
+        opts: &PredictOptions,
     ) -> std::io::Result<BlockPending<'a>> {
         debug_assert!(block.is_empty() || block.n_features() == self.tables.n_features);
         let n = block.n_rows();
@@ -436,7 +577,9 @@ impl Coordinator {
                     out.push((p1, Served::Stage1));
                 } else {
                     s.miss_idx.push(i);
-                    out.push((0.0, Served::Rpc)); // placeholder
+                    // Placeholder carries the stage-1 prior so a degraded
+                    // join can keep it without re-running stage 1.
+                    out.push((p1, Served::Rpc));
                 }
             }
             if s.miss_idx.is_empty() {
@@ -497,9 +640,19 @@ impl Coordinator {
             }
             let launched: std::io::Result<Option<PendingPredict<'_>>> = match &self.fallback {
                 None => Err(no_second_stage()),
-                Some(SecondStage::Rpc(client)) => client
-                    .predict_async(&miss_rows, self.rpc_row_len)
-                    .map(Some),
+                Some(SecondStage::Rpc(client)) => {
+                    let mut waited = Duration::ZERO;
+                    loop {
+                        match client.predict_async_opts(&miss_rows, self.rpc_row_len, opts) {
+                            Ok(p) => break Ok(Some(p)),
+                            Err(e)
+                                if self.degrade == DegradeMode::Block
+                                    && is_breaker_open(&e)
+                                    && self.block_on_breaker(opts, &mut waited) => {}
+                            Err(e) => break Err(e),
+                        }
+                    }
+                }
                 Some(SecondStage::Embedded { pool, model }) => {
                     // In-process second stage: complete the misses right
                     // here (no wire to overlap) and account them exactly
@@ -525,6 +678,33 @@ impl Coordinator {
             match launched {
                 Ok(pending) => pending,
                 Err(e) => {
+                    self.sync_rpc_failure_counters();
+                    if self.degrade == DegradeMode::Stage1Prior {
+                        // Second stage unreachable (breaker open, deadline
+                        // spent, dead connection): every missed row keeps
+                        // its stage-1 prior, explicitly marked degraded.
+                        use std::sync::atomic::Ordering;
+                        let wall = t0.elapsed().as_nanos() as u64;
+                        for &i in &miss_idx {
+                            out[i].1 = Served::Degraded;
+                            self.metrics.e2e.record(wall);
+                        }
+                        self.metrics
+                            .degraded_rows
+                            .fetch_add(miss_idx.len() as u64, Ordering::Relaxed);
+                        self.metrics.degraded_requests.fetch_add(1, Ordering::Relaxed);
+                        return Ok(BlockPending {
+                            coord: self,
+                            out,
+                            miss_idx,
+                            miss_rows,
+                            rpc: None,
+                            t0,
+                            miss_cpu_base: 0,
+                            span_walls: Vec::new(),
+                            delivered: Vec::new(),
+                        });
+                    }
                     // Hand the gather buffers back before surfacing.
                     let mut g = self.lock_scratch();
                     g.miss_idx = miss_idx;
@@ -542,6 +722,7 @@ impl Coordinator {
             stage1_cpu_per_row
                 + (cpu.elapsed_ns().saturating_sub(stage1_cpu_total)) / miss_idx.len() as u64
         };
+        let delivered = vec![false; miss_idx.len()];
         Ok(BlockPending {
             coord: self,
             out,
@@ -551,6 +732,7 @@ impl Coordinator {
             t0,
             miss_cpu_base,
             span_walls: Vec::new(),
+            delivered,
         })
     }
 }
@@ -582,6 +764,10 @@ pub struct BlockPending<'a> {
     /// Streamed-span completions drained so far: `(miss-order start, len,
     /// wall ns since t0)` — the per-row walls `wait` books.
     span_walls: Vec<(usize, usize, u64)>,
+    /// Per-miss (miss-order) delivery flags: true once a streamed span
+    /// actually wrote the row's second-stage probability — the rows a
+    /// degraded join keeps as `Served::Rpc` instead of falling back.
+    delivered: Vec<bool>,
 }
 
 impl BlockPending<'_> {
@@ -639,6 +825,7 @@ impl BlockPending<'_> {
             for (k, &p) in s.probs.iter().enumerate() {
                 let i = self.miss_idx[s.span.start + k];
                 self.out[i].0 = p;
+                self.delivered[s.span.start + k] = true;
                 ready.push((i, p));
             }
         }
@@ -660,7 +847,10 @@ impl BlockPending<'_> {
             // Frame ARRIVAL instants are the miss rows' completion times: a
             // pipelined caller joins late, and that slack is the overlap
             // win — it must not be booked back into miss latency.
-            let outcome = rpc.wait_outcome()?;
+            let outcome = match rpc.wait_outcome() {
+                Ok(o) => o,
+                Err(e) => return self.degraded_join(e, cpu),
+            };
             debug_assert_eq!(outcome.probs.len(), k);
             if outcome.retried {
                 // Spans polled off the aborted first attempt belong to a
@@ -696,6 +886,54 @@ impl BlockPending<'_> {
             let cpu_share = self.miss_cpu_base + cpu.elapsed_ns() / k as u64;
             self.coord
                 .record_miss_rows(&walls, cpu_share, outcome.req_bytes + outcome.resp_bytes);
+        }
+        Ok(std::mem::take(&mut self.out))
+    }
+
+    /// The block's RPC join failed. Under [`DegradeMode::Stage1Prior`] the
+    /// block still completes: rows a streamed span already delivered keep
+    /// their real second-stage probability (accounted as `Served::Rpc`,
+    /// zero extra wire bytes — the coalesced traffic never finished, so no
+    /// byte total exists to split); the rest answer with their stage-1
+    /// prior as [`Served::Degraded`]. Every other mode surfaces the error.
+    fn degraded_join(
+        mut self,
+        e: std::io::Error,
+        cpu: CpuTimer,
+    ) -> std::io::Result<Vec<(f32, Served)>> {
+        use std::sync::atomic::Ordering;
+        let coord = self.coord;
+        coord.sync_rpc_failure_counters();
+        if coord.degrade != DegradeMode::Stage1Prior {
+            return Err(e);
+        }
+        let k = self.miss_idx.len();
+        let wall = self.t0.elapsed().as_nanos() as u64;
+        let cpu_share = self.miss_cpu_base + cpu.elapsed_ns() / k.max(1) as u64;
+        // Per-miss walls for delivered rows: their span's arrival.
+        let mut walls = vec![wall; k];
+        for &(start, len, w) in &self.span_walls {
+            walls[start..start + len].fill(w);
+        }
+        let mut degraded = 0u64;
+        for (j, &i) in self.miss_idx.iter().enumerate() {
+            if self.delivered[j] {
+                coord.metrics.hit_rpc(
+                    walls[j],
+                    cpu_share,
+                    coord.tables.n_features as u64,
+                    0,
+                );
+                coord.metrics.e2e.record(walls[j]);
+            } else {
+                self.out[i].1 = Served::Degraded;
+                coord.metrics.e2e.record(wall);
+                degraded += 1;
+            }
+        }
+        coord.metrics.degraded_rows.fetch_add(degraded, Ordering::Relaxed);
+        if degraded > 0 {
+            coord.metrics.degraded_requests.fetch_add(1, Ordering::Relaxed);
         }
         Ok(std::mem::take(&mut self.out))
     }
@@ -880,6 +1118,7 @@ mod tests {
             match served {
                 Served::Stage1 => s1 += 1,
                 Served::Rpc => rpc += 1,
+                Served::Degraded => panic!("healthy backend must not degrade"),
             }
         }
         assert_eq!(s1 + rpc, 500);
@@ -1346,7 +1585,9 @@ mod tests {
             data.row_into(r, &mut row);
             match lone.predict(&row) {
                 Ok((_, Served::Stage1)) => {}
-                Ok((_, Served::Rpc)) => panic!("cannot serve rpc without client"),
+                Ok((_, Served::Rpc | Served::Degraded)) => {
+                    panic!("cannot serve rpc or degrade without client")
+                }
                 Err(_) => {
                     saw_error = true;
                     break;
@@ -1354,5 +1595,94 @@ mod tests {
             }
         }
         assert!(saw_error, "expected an error on the first miss");
+    }
+
+    /// Breaker drill (the graceful-degradation contract): with the breaker
+    /// forced open under `DegradeMode::Stage1Prior`, routed rows serve
+    /// normally, missed rows answer with their stage-1 prior explicitly
+    /// marked `Served::Degraded` (bit-identical to the embedded pass, no
+    /// rpc_calls booked), the degraded counters reconcile exactly — and
+    /// `force_close` restores full `Served::Rpc` service.
+    #[test]
+    fn forced_open_breaker_degrades_to_stage1_prior() {
+        use std::sync::atomic::Ordering;
+        let (data, mut coord, _server) = setup();
+        coord.degrade = DegradeMode::Stage1Prior;
+        coord.rpc_client().unwrap().breaker().force_open();
+
+        // Scalar path.
+        let mut row = Vec::new();
+        let mut degraded = 0u64;
+        for r in 0..200 {
+            data.row_into(r, &mut row);
+            let (p1_ref, routed) = coord.tables.evaluate(&row);
+            let (p, served) = coord.predict(&row).unwrap();
+            if routed {
+                assert_eq!(served, Served::Stage1);
+            } else {
+                assert_eq!(served, Served::Degraded);
+                assert_eq!(
+                    p.to_bits(),
+                    p1_ref.to_bits(),
+                    "degraded row {r} must answer the stage-1 prior"
+                );
+                degraded += 1;
+            }
+        }
+        assert!(degraded > 0, "drill needs missed rows");
+        assert_eq!(coord.metrics.degraded_rows.load(Ordering::Relaxed), degraded);
+        assert_eq!(
+            coord.metrics.degraded_requests.load(Ordering::Relaxed),
+            degraded
+        );
+        assert_eq!(
+            coord.metrics.rpc_calls.load(Ordering::Relaxed),
+            0,
+            "degraded rows must never count as rpc_calls"
+        );
+
+        // Block path: hits stay Stage1, misses degrade, counters reconcile.
+        let rows: Vec<Vec<f32>> = (200..328)
+            .map(|r| {
+                data.row_into(r, &mut row);
+                row.clone()
+            })
+            .collect();
+        let block = crate::tabular::RowBlock::from_rows(&rows);
+        let out = coord.predict_block(&block).unwrap();
+        assert_eq!(out.len(), rows.len());
+        let block_degraded = out
+            .iter()
+            .filter(|(_, s)| *s == Served::Degraded)
+            .count() as u64;
+        assert!(block_degraded > 0, "block drill needs missed rows");
+        for (i, (p, served)) in out.iter().enumerate() {
+            let (p1_ref, _) = coord.tables.evaluate(&rows[i]);
+            match served {
+                Served::Stage1 | Served::Degraded => {
+                    assert_eq!(p.to_bits(), p1_ref.to_bits())
+                }
+                Served::Rpc => panic!("breaker is open — no rpc service"),
+            }
+        }
+        assert_eq!(
+            coord.metrics.degraded_rows.load(Ordering::Relaxed),
+            degraded + block_degraded
+        );
+        assert_eq!(
+            coord.metrics.degraded_requests.load(Ordering::Relaxed),
+            degraded + 1
+        );
+
+        // Close the drill: normal second-stage service resumes.
+        coord.rpc_client().unwrap().breaker().force_close();
+        let mut served_rpc = false;
+        for r in 0..200 {
+            data.row_into(r, &mut row);
+            let (_, served) = coord.predict(&row).unwrap();
+            assert_ne!(served, Served::Degraded, "breaker closed — no degradation");
+            served_rpc |= served == Served::Rpc;
+        }
+        assert!(served_rpc, "rpc service must resume after force_close");
     }
 }

@@ -55,6 +55,44 @@
 //! tier bit-identical to the scalar path by construction (vectorized
 //! across rows; see [`lrwbins::tables`] and [`gbdt::flat`]).
 //!
+//! ## Failure model
+//!
+//! The serving stack has an explicit request lifecycle under failure
+//! (ROADMAP §Failure model; proven end to end by `tests/chaos_battery.rs`):
+//!
+//! * **Deadlines** — [`rpc::PredictOptions`] carries a per-request latency
+//!   budget ([`rpc::Deadline`]). The client refuses to send once it is
+//!   spent, the **remaining** budget rides the request frame (microseconds,
+//!   re-anchored against the receiver's clock so skew never accumulates),
+//!   the server batcher sheds expired requests before execution, and the
+//!   shard pool sheds expired not-yet-started spans — work nobody can use
+//!   is dropped at every hop, and shed work is counted
+//!   ([`telemetry::ServeMetrics::deadline_shed_rows`], per-shard
+//!   `deadline_shed`).
+//! * **Retries + circuit breaker** — every transport failure goes through
+//!   ONE policy ([`rpc::RetryPolicy`]: bounded attempts, exponential
+//!   backoff with jitter, a client-wide retry *budget*) and one
+//!   [`rpc::CircuitBreaker`] (closed → open on consecutive failures or a
+//!   p99 breach, open → half-open probe after cooldown). A connection whose
+//!   reader dies error-completes **every** pending request on it
+//!   immediately — waits fail fast, they never dangle.
+//! * **Graceful degradation** — when the second stage cannot serve a miss
+//!   (breaker open, deadline spent, retries exhausted), the coordinator's
+//!   [`coordinator::DegradeMode`] decides: propagate the error (`Fail`,
+//!   default), answer with the row's stage-1 prior explicitly marked
+//!   [`coordinator::Served::Degraded`] (`Stage1Prior`), or wait out the
+//!   breaker bounded by the deadline (`Block`). Degraded rows are counted
+//!   separately (`degraded_rows`/`degraded_requests`) and never as
+//!   second-stage answers; stage-1-amenable rows are unaffected.
+//! * **Embedded differences** — the in-process fallback has no wire, so no
+//!   retries and no breaker: panics are contained per-span by the shard
+//!   pool, and `Stage1Prior` degradation applies only if the pool itself
+//!   fails the batch.
+//! * **Chaos substrate** — [`rpc::ChaosPlan`] scripts per-frame faults
+//!   (reset, stall, truncation, header corruption, batcher pause) into the
+//!   server; the battery proves no hang, no wrong bits, and exact
+//!   hit/miss/error/degraded accounting under each.
+//!
 //! See DESIGN.md for the full system inventory and experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 

@@ -32,18 +32,34 @@
 //!
 //! ## Failure handling
 //!
-//! A pooled connection can go stale between calls (server restarted, idle
-//! reap on the far side). Both failure sides are retried **once** on a
-//! fresh dial, but only when the failed connection was *pooled* — a
-//! connection dialed by this very call failing means the server is really
-//! gone:
-//! * write side: `write_frame` fails (stale socket rejects the send);
-//! * read side: the response never arrives because the reader saw
-//!   EOF/reset — the stale socket *accepted* the write into a dead buffer.
+//! Transport failures — a stale pooled connection rejecting the write, the
+//! reader thread dying mid-response (EOF/reset), a refused fresh dial —
+//! are retried under a unified [`RetryPolicy`]: bounded attempts with
+//! exponential backoff + jitter, gated by a shared token-bucket
+//! [`RetryBudget`](super::fault::RetryBudget) so a hard-down server costs
+//! a bounded number of extra dials instead of a retry storm. Every
+//! attempt's outcome feeds the client's [`CircuitBreaker`]; after enough
+//! consecutive failures it trips open and calls fail fast with
+//! [`fault::breaker_error`] (classify via [`fault::is_breaker_open`])
+//! until a cooldown's half-open probe succeeds. A response frame flagged
+//! as a server-side error (backend failure) is surfaced as an error
+//! without retry: it is a live answer from a healthy connection, and
+//! resending would fail the same way.
 //!
-//! A response frame flagged as a server-side error (backend failure) is
-//! surfaced as an error without retry: it is a live answer from a healthy
-//! connection, and resending would fail the same way.
+//! When a connection's reader thread dies, the client
+//! error-completes **every** pending `req_id` on it and wakes every
+//! sender blocked on the in-flight cap — nobody sleeps out an individual
+//! timeout waiting on a connection that is already gone.
+//!
+//! ## Deadlines
+//!
+//! [`RpcClient::predict_async_opts`] threads a per-request [`Deadline`]
+//! through the call: the remaining budget rides the request frame
+//! (`deadline_us` — see `proto`), the in-flight-cap wait, backoff sleeps,
+//! and the response wait are all clamped to it, and expiry surfaces as
+//! [`fault::deadline_error`] (client-side shedding; the server batcher
+//! and shard pool shed expired work on their side from the same wire
+//! field).
 //!
 //! ## Backpressure
 //!
@@ -55,7 +71,11 @@
 //! its own admission queue — grow with every pipelined call that outruns
 //! the responses.
 
+use super::fault::{
+    self, BreakerConfig, CircuitBreaker, Deadline, PredictOptions, RetryBudget, RetryPolicy,
+};
 use super::proto::{self, ClientFrame, Request};
+use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::io;
 use std::net::{SocketAddr, TcpStream};
@@ -175,6 +195,33 @@ fn reader_loop(conn: Arc<Conn>, mut stream: TcpStream) {
     }
 }
 
+/// Client tuning: timeout/backpressure plus the failure-model knobs
+/// (retry policy and circuit-breaker thresholds). `Default` gives the
+/// production shape; [`RetryPolicy::none`] turns retrying off for
+/// baselines.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Per-call response timeout (also the write/read socket timeout).
+    pub timeout: Duration,
+    /// Per-connection in-flight frame cap (see [`DEFAULT_MAX_IN_FLIGHT`]).
+    pub max_in_flight: usize,
+    /// Transport-failure retry policy (backoff, jitter, bounded attempts).
+    pub retry: RetryPolicy,
+    /// Circuit-breaker thresholds (consecutive failures, cooldown, p99).
+    pub breaker: BreakerConfig,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            timeout: Duration::from_secs(30),
+            max_in_flight: DEFAULT_MAX_IN_FLIGHT,
+            retry: RetryPolicy::default(),
+            breaker: BreakerConfig::default(),
+        }
+    }
+}
+
 /// Thread-safe pipelined client.
 pub struct RpcClient {
     addr: SocketAddr,
@@ -184,6 +231,16 @@ pub struct RpcClient {
     timeout: Duration,
     /// Per-connection in-flight frame cap (see [`DEFAULT_MAX_IN_FLIGHT`]).
     max_in_flight: usize,
+    /// Transport-failure retry policy (see [`ClientConfig`]).
+    retry: RetryPolicy,
+    /// Token-bucket gate on retries, shared by every call on this client.
+    budget: RetryBudget,
+    /// Breaker over the whole backend as seen from this client.
+    breaker: CircuitBreaker,
+    /// Jitter source for backoff sleeps.
+    backoff_rng: Mutex<Rng>,
+    /// Retries actually performed (telemetry).
+    retries: AtomicU64,
 }
 
 /// One streamed fallback sub-span drained by [`PendingPredict::poll_spans`]:
@@ -222,12 +279,13 @@ pub struct StreamOutcome {
 pub struct PendingPredict<'a> {
     client: &'a RpcClient,
     conn: Arc<Conn>,
-    /// The connection was dialed by this call (so a failure on it is not a
-    /// stale-pool artifact and must not be retried).
-    fresh: bool,
     req: Request,
     rx: ReplyRx,
     n_rows: usize,
+    /// Per-request deadline; clamps every wait below.
+    deadline: Option<Deadline>,
+    /// When the request frame went out (breaker latency accounting).
+    sent_at: Instant,
     /// Streamed-chunk reassembly state (None until the first chunk).
     asm: Option<proto::StreamAssembler>,
     /// Response-side wire bytes consumed so far.
@@ -282,6 +340,23 @@ impl PendingPredict<'_> {
                     break;
                 }
                 Err(e) => {
+                    // Early stream end (reader death error-completed this
+                    // request after some chunks, before `STREAM_END`):
+                    // surface every not-yet-delivered row range as an
+                    // explicit failed span so pollers account the whole
+                    // request instead of waiting on rows that will never
+                    // arrive.
+                    if let Some(asm) = &self.asm {
+                        let now = Instant::now();
+                        for span in asm.missing_spans() {
+                            out.push(FallbackSpan {
+                                span,
+                                probs: Vec::new(),
+                                failed: true,
+                                arrived: now,
+                            });
+                        }
+                    }
                     self.early_err = Some(e);
                     break;
                 }
@@ -290,8 +365,8 @@ impl PendingPredict<'_> {
         out
     }
 
-    /// Block for the response. Retries exactly once on a fresh dial when a
-    /// *pooled* connection failed at the transport level (see module docs).
+    /// Block for the response. Transport failures retry on fresh dials
+    /// under the client's [`RetryPolicy`] (see module docs).
     pub fn wait(self) -> io::Result<Vec<f32>> {
         self.wait_timed().map(|(probs, _)| probs)
     }
@@ -308,20 +383,47 @@ impl PendingPredict<'_> {
     /// arrivals, actual wire bytes). Errors if the server failed the
     /// request OR any streamed span — span-level detail for the error case
     /// is visible through [`PendingPredict::poll_spans`] before the join.
+    ///
+    /// Transport failures are retried on fresh dials under the client's
+    /// unified [`RetryPolicy`]; each failed attempt feeds the breaker, a
+    /// successful join feeds its latency histogram and the retry budget.
     pub fn wait_outcome(mut self) -> io::Result<StreamOutcome> {
-        match self.drive() {
-            Err(e) if !self.fresh && stale_connection_error(&e) => {
-                let mut o = self.client.call_on_fresh(&self.req, self.n_rows)?;
-                // The aborted first attempt's traffic really crossed the
-                // wire: fold its request frame and partial chunks into the
-                // byte accounting, and flag the retry so callers discard
-                // any spans they drained from the dead stream.
-                o.req_bytes += self.req.wire_size() as u64;
-                o.resp_bytes += self.resp_bytes;
-                o.retried = true;
-                Ok(o)
+        let mut err = match self.drive() {
+            Ok(o) => return Ok(self.client.settle_success(o, self.sent_at)),
+            Err(e) => e,
+        };
+        // The aborted first attempt's traffic really crossed the wire:
+        // fold its request frame and partial chunks into the byte
+        // accounting of whichever retry succeeds.
+        let mut extra_req = self.req.wire_size() as u64;
+        let extra_resp = self.resp_bytes;
+        let mut retry = 0u32;
+        loop {
+            if fault::is_deadline_exceeded(&err) {
+                // Client-imposed budget expiry, not a backend failure.
+                return Err(err);
             }
-            other => other,
+            self.client.breaker.record_failure();
+            if !retryable_error(&err)
+                || !self.client.pay_for_retry(retry + 1, self.deadline)
+            {
+                return Err(err);
+            }
+            retry += 1;
+            match self.client.call_on_fresh(&self.req, self.n_rows, self.deadline) {
+                Ok(mut o) => {
+                    o.req_bytes += extra_req;
+                    o.resp_bytes += extra_resp;
+                    // Flag the retry so callers discard any spans they
+                    // drained from the dead stream in favor of `o.spans`.
+                    o.retried = true;
+                    return Ok(self.client.settle_success(o, self.sent_at));
+                }
+                Err(e) => {
+                    extra_req += self.req.wire_size() as u64;
+                    err = e;
+                }
+            }
         }
     }
 
@@ -344,27 +446,44 @@ impl PendingPredict<'_> {
         loop {
             let (frame, arrived) = match self.terminal.take() {
                 Some(t) => t,
-                None => match self.rx.recv_timeout(self.client.timeout) {
-                    Ok(Ok(pair)) => pair,
-                    Ok(Err(e)) => return Err(e),
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        // Reader thread vanished without answering
-                        // (shutdown race).
-                        return Err(io::Error::new(
-                            io::ErrorKind::BrokenPipe,
-                            "connection reader gone",
-                        ));
+                None => {
+                    // Wait to the client timeout, clamped to the request's
+                    // own deadline when it carries one.
+                    let mut wait = self.client.timeout;
+                    if let Some(d) = self.deadline {
+                        let left = d.remaining();
+                        if left.is_zero() {
+                            self.abandon();
+                            return Err(fault::deadline_error());
+                        }
+                        wait = wait.min(left);
                     }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        // The deadline is already spent; `retire` wakes
-                        // every capped sender — no response frees slots now.
-                        self.abandon();
-                        return Err(io::Error::new(
-                            io::ErrorKind::TimedOut,
-                            "rpc response timed out",
-                        ));
+                    match self.rx.recv_timeout(wait) {
+                        Ok(Ok(pair)) => pair,
+                        Ok(Err(e)) => return Err(e),
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            // Reader thread vanished without answering
+                            // (shutdown race).
+                            return Err(io::Error::new(
+                                io::ErrorKind::BrokenPipe,
+                                "connection reader gone",
+                            ));
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            // The wait is already spent; `retire` wakes
+                            // every capped sender — no response frees
+                            // slots now.
+                            self.abandon();
+                            if self.deadline.is_some_and(|d| d.expired()) {
+                                return Err(fault::deadline_error());
+                            }
+                            return Err(io::Error::new(
+                                io::ErrorKind::TimedOut,
+                                "rpc response timed out",
+                            ));
+                        }
                     }
-                },
+                }
             };
             self.resp_bytes += frame.wire_size();
             match frame {
@@ -477,19 +596,83 @@ fn stale_connection_error(e: &io::Error) -> bool {
     )
 }
 
+/// Errors the retry policy may spend attempts on: stale-connection
+/// transport failures plus a refused fresh dial (the server may be
+/// mid-restart). Breaker fast-fails also map to `ConnectionRefused` by
+/// kind but never reach a retry loop — they are returned before any
+/// attempt is made.
+fn retryable_error(e: &io::Error) -> bool {
+    stale_connection_error(e) || e.kind() == io::ErrorKind::ConnectionRefused
+}
+
 impl RpcClient {
     pub fn connect(addr: SocketAddr) -> io::Result<RpcClient> {
+        RpcClient::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect with explicit failure-model tuning.
+    pub fn connect_with(addr: SocketAddr, cfg: ClientConfig) -> io::Result<RpcClient> {
         let client = RpcClient {
             addr,
             pool: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(1),
             rr: AtomicUsize::new(0),
-            timeout: Duration::from_secs(30),
-            max_in_flight: DEFAULT_MAX_IN_FLIGHT,
+            timeout: cfg.timeout,
+            max_in_flight: cfg.max_in_flight.max(1),
+            retry: cfg.retry,
+            budget: RetryBudget::default(),
+            breaker: CircuitBreaker::new(cfg.breaker),
+            backoff_rng: Mutex::new(Rng::new(0x5eed_b0ff)),
+            retries: AtomicU64::new(0),
         };
         // Eagerly dial one connection to fail fast on a bad address.
         client.dial_into_pool()?;
         Ok(client)
+    }
+
+    /// The client's circuit breaker — observable state/trip counters, and
+    /// `force_open`/`force_close` for drills and degradation tests.
+    pub fn breaker(&self) -> &CircuitBreaker {
+        &self.breaker
+    }
+
+    /// Transport-level retries performed so far (telemetry).
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Whole retries the budget can still pay for (telemetry).
+    pub fn retry_budget_left(&self) -> u64 {
+        self.budget.available()
+    }
+
+    /// Pay for retry number `retry` (1-based): bounded by the policy,
+    /// charged to the shared budget, and its backoff sleep must fit inside
+    /// the caller's deadline. Returns `false` — don't retry — otherwise
+    /// sleeps out the jittered backoff and counts the retry.
+    fn pay_for_retry(&self, retry: u32, deadline: Option<Deadline>) -> bool {
+        if retry > self.retry.max_retries || !self.budget.try_withdraw() {
+            return false;
+        }
+        let pause = {
+            let mut rng = self.backoff_rng.lock().unwrap_or_else(PoisonError::into_inner);
+            self.retry.backoff(retry, &mut rng)
+        };
+        if deadline.is_some_and(|d| d.remaining() <= pause) {
+            return false; // the remaining budget can't absorb the backoff
+        }
+        self.retries.fetch_add(1, Ordering::Relaxed);
+        std::thread::sleep(pause);
+        true
+    }
+
+    /// Book a fully-successful round trip: feeds the breaker's latency
+    /// histogram (p99 rule) and replenishes the retry budget.
+    fn settle_success(&self, o: StreamOutcome, sent_at: Instant) -> StreamOutcome {
+        self.breaker
+            .record_success(o.arrived.saturating_duration_since(sent_at));
+        self.budget.deposit();
+        o
     }
 
     fn lock_pool(&self) -> MutexGuard<'_, Vec<Arc<Conn>>> {
@@ -539,32 +722,44 @@ impl RpcClient {
     }
 
     /// A live connection for the next request: round-robin over the pool,
-    /// growing it toward [`POOL_CONNS`]. The `bool` is true if the
-    /// connection was freshly dialed by this call.
-    fn live_conn(&self) -> io::Result<(Arc<Conn>, bool)> {
+    /// growing it toward [`POOL_CONNS`].
+    fn live_conn(&self) -> io::Result<Arc<Conn>> {
         {
             let mut pool = self.lock_pool();
             pool.retain(|c| !c.dead.load(Ordering::Relaxed));
             if pool.len() >= POOL_CONNS {
                 let i = self.rr.fetch_add(1, Ordering::Relaxed) % pool.len();
-                return Ok((pool[i].clone(), false));
+                return Ok(pool[i].clone());
             }
         }
-        Ok((self.dial_into_pool()?, true))
+        self.dial_into_pool()
     }
 
     /// Register the request in `conn`'s pending table and write its frame.
     /// Blocks while the connection already carries [`RpcClient::max_in_flight`]
     /// unanswered frames (backpressure from a slow server), giving up with
-    /// `TimedOut` after the client timeout.
-    fn send_on(&self, conn: &Conn, req: &Request, buf: &[u8]) -> io::Result<ReplyRx> {
+    /// `TimedOut` after the client timeout — or with a deadline error at
+    /// the request's own deadline, whichever is sooner.
+    fn send_on(
+        &self,
+        conn: &Conn,
+        req: &Request,
+        buf: &[u8],
+        deadline: Option<Deadline>,
+    ) -> io::Result<ReplyRx> {
         let (tx, rx) = mpsc::channel();
         {
-            let deadline = Instant::now() + self.timeout;
+            let mut cap_deadline = Instant::now() + self.timeout;
+            if let Some(d) = deadline {
+                cap_deadline = cap_deadline.min(d.instant());
+            }
             let mut pending = conn.lock_pending();
             while pending.len() >= self.max_in_flight && !conn.dead.load(Ordering::Relaxed) {
                 let now = Instant::now();
-                if now >= deadline {
+                if now >= cap_deadline {
+                    if deadline.is_some_and(|d| d.expired()) {
+                        return Err(fault::deadline_error());
+                    }
                     return Err(io::Error::new(
                         io::ErrorKind::TimedOut,
                         "in-flight cap: no response freed a slot within the timeout",
@@ -572,7 +767,7 @@ impl RpcClient {
                 }
                 let (guard, _) = conn
                     .slot_freed
-                    .wait_timeout(pending, deadline - now)
+                    .wait_timeout(pending, cap_deadline - now)
                     .unwrap_or_else(PoisonError::into_inner);
                 pending = guard;
             }
@@ -603,27 +798,61 @@ impl RpcClient {
     /// on the wire when this returns, and the response is collected by
     /// [`PendingPredict::wait`]. `rows.len() = n · row_len`.
     pub fn predict_async(&self, rows: &[f32], row_len: usize) -> io::Result<PendingPredict<'_>> {
+        self.predict_async_opts(rows, row_len, &PredictOptions::default())
+    }
+
+    /// Like [`RpcClient::predict_async`], with per-call options: an expired
+    /// deadline refuses the send outright ([`fault::deadline_error`]), an
+    /// open breaker fails fast ([`fault::breaker_error`]), and the
+    /// remaining budget rides the request frame so every downstream hop
+    /// can shed the work once it expires.
+    pub fn predict_async_opts(
+        &self,
+        rows: &[f32],
+        row_len: usize,
+        opts: &PredictOptions,
+    ) -> io::Result<PendingPredict<'_>> {
+        if let Some(d) = opts.deadline {
+            if d.expired() {
+                return Err(fault::deadline_error());
+            }
+        }
+        if !self.breaker.admit() {
+            return Err(fault::breaker_error());
+        }
         let req = Request {
             req_id: self.next_id.fetch_add(1, Ordering::Relaxed),
             row_len: row_len as u32,
             rows: rows.to_vec(),
+            deadline_us: opts.deadline.map_or(0, |d| d.remaining_us()),
         };
         let n_rows = req.n_rows() as usize;
         let mut buf = Vec::with_capacity(req.wire_size());
         proto::encode_request(&req, &mut buf);
 
-        let (conn, fresh) = self.live_conn()?;
-        match self.send_on(&conn, &req, &buf) {
-            Ok(rx) => Ok(self.pending(conn, fresh, req, rx, n_rows)),
-            // A spent in-flight-cap deadline is final: dialing a fresh
-            // connection to dodge the cap would defeat the backpressure.
-            Err(e) if fresh || e.kind() == io::ErrorKind::TimedOut => Err(e),
-            Err(_) => {
-                // Stale pooled connection rejected the write — retry once
-                // on a fresh dial.
-                let conn = self.dial_into_pool()?;
-                let rx = self.send_on(&conn, &req, &buf)?;
-                Ok(self.pending(conn, true, req, rx, n_rows))
+        // Write-side retry loop: the first attempt uses a pooled
+        // connection; every retry dials fresh, under the unified policy.
+        let mut attempt = 0u32;
+        loop {
+            let sent = if attempt == 0 { self.live_conn() } else { self.dial_into_pool() }
+                .and_then(|conn| {
+                    let rx = self.send_on(&conn, &req, &buf, opts.deadline)?;
+                    Ok((conn, rx))
+                });
+            match sent {
+                Ok((conn, rx)) => return Ok(self.pending(conn, req, rx, n_rows, opts.deadline)),
+                // A spent in-flight cap or deadline is final and client-side:
+                // dialing fresh to dodge the cap would defeat the
+                // backpressure, and it says nothing about backend health.
+                Err(e) if e.kind() == io::ErrorKind::TimedOut => return Err(e),
+                Err(e) => {
+                    self.breaker.record_failure();
+                    if retryable_error(&e) && self.pay_for_retry(attempt + 1, opts.deadline) {
+                        attempt += 1;
+                    } else {
+                        return Err(e);
+                    }
+                }
             }
         }
     }
@@ -631,18 +860,19 @@ impl RpcClient {
     fn pending(
         &self,
         conn: Arc<Conn>,
-        fresh: bool,
         req: Request,
         rx: ReplyRx,
         n_rows: usize,
+        deadline: Option<Deadline>,
     ) -> PendingPredict<'_> {
         PendingPredict {
             client: self,
             conn,
-            fresh,
             req,
             rx,
             n_rows,
+            deadline,
+            sent_at: Instant::now(),
             asm: None,
             resp_bytes: 0,
             terminal: None,
@@ -651,13 +881,23 @@ impl RpcClient {
     }
 
     /// One full round trip on a freshly dialed connection (the read-side
-    /// retry path — no further retries).
-    fn call_on_fresh(&self, req: &Request, n_rows: usize) -> io::Result<StreamOutcome> {
+    /// retry path — no nested retries; the caller's loop owns the policy).
+    fn call_on_fresh(
+        &self,
+        req: &Request,
+        n_rows: usize,
+        deadline: Option<Deadline>,
+    ) -> io::Result<StreamOutcome> {
+        let mut req = req.clone();
+        if let Some(d) = deadline {
+            // Re-encode the budget actually left at this (later) send.
+            req.deadline_us = d.remaining_us();
+        }
         let mut buf = Vec::with_capacity(req.wire_size());
-        proto::encode_request(req, &mut buf);
+        proto::encode_request(&req, &mut buf);
         let conn = self.dial_into_pool()?;
-        let rx = self.send_on(&conn, req, &buf)?;
-        let mut retry = self.pending(conn, true, req.clone(), rx, n_rows);
+        let rx = self.send_on(&conn, &req, &buf, deadline)?;
+        let mut retry = self.pending(conn, req, rx, n_rows, deadline);
         retry.drive()
     }
 
@@ -665,6 +905,16 @@ impl RpcClient {
     /// Returns one probability per row.
     pub fn predict(&self, rows: &[f32], row_len: usize) -> io::Result<Vec<f32>> {
         self.predict_async(rows, row_len)?.wait()
+    }
+
+    /// Synchronous call with per-call options (deadline etc.).
+    pub fn predict_opts(
+        &self,
+        rows: &[f32],
+        row_len: usize,
+        opts: &PredictOptions,
+    ) -> io::Result<Vec<f32>> {
+        self.predict_async_opts(rows, row_len, opts)?.wait()
     }
 
     /// Round-trip ping (health check / RTT probe).
@@ -677,7 +927,8 @@ impl RpcClient {
 
     /// Bytes that `predict` would move over the wire for bookkeeping.
     pub fn wire_bytes(n_rows: usize, row_len: usize) -> u64 {
-        let req = 4 + 8 + 4 + 4 + (n_rows * row_len * 4) as u64;
+        // Request header: len|req_id|n_rows|row_len|deadline_us = 24 bytes.
+        let req = 4 + 8 + 4 + 4 + 4 + (n_rows * row_len * 4) as u64;
         let resp = 4 + 8 + 4 + (n_rows * 4) as u64;
         req + resp
     }
@@ -867,6 +1118,58 @@ mod tests {
 
         let probs = client.predict(&[10.0, 20.0], 2).unwrap();
         assert_eq!(probs, vec![15.0]);
+    }
+
+    #[test]
+    fn breaker_force_open_fails_fast_then_recovers() {
+        let (server, _m) = start_server();
+        let client = RpcClient::connect(server.addr).unwrap();
+        assert_eq!(client.predict(&[2.0, 4.0], 2).unwrap(), vec![3.0]);
+
+        client.breaker().force_open();
+        let t0 = Instant::now();
+        let e = client.predict(&[2.0, 4.0], 2).unwrap_err();
+        assert!(fault::is_breaker_open(&e), "unexpected error: {e}");
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "open breaker must fail fast, not attempt the call"
+        );
+
+        client.breaker().force_close();
+        assert_eq!(client.predict(&[2.0, 4.0], 2).unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn expired_deadline_refused_before_send() {
+        let (server, _m) = start_server();
+        let client = RpcClient::connect(server.addr).unwrap();
+        let opts = PredictOptions {
+            deadline: Some(Deadline::at(Instant::now() - Duration::from_millis(1))),
+        };
+        let e = client.predict_opts(&[1.0, 1.0], 2, &opts).unwrap_err();
+        assert!(fault::is_deadline_exceeded(&e), "unexpected error: {e}");
+    }
+
+    #[test]
+    fn deadline_bounds_the_wait_against_a_slow_server() {
+        // SlowBackend takes ~10ms per batch; a 3ms budget must surface as
+        // a deadline error at ~3ms, not ride out the server's pace (nor
+        // the client's 30s timeout).
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(SlowBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig::default(),
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        let client = RpcClient::connect(server.addr).unwrap();
+        let t0 = Instant::now();
+        let e = client
+            .predict_opts(&[1.0, 2.0], 2, &PredictOptions::with_budget(Duration::from_millis(3)))
+            .unwrap_err();
+        assert!(fault::is_deadline_exceeded(&e), "unexpected error: {e}");
+        assert!(t0.elapsed() < Duration::from_secs(2), "deadline must bound the wait");
     }
 
     /// Backend slow enough that pipelined senders outrun the responses.

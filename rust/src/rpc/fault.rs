@@ -1,0 +1,604 @@
+//! Failure-model primitives for the serving stack: per-request deadlines,
+//! bounded retry with exponential backoff + jitter and a shared retry
+//! budget, and a circuit breaker (closed / open / half-open).
+//!
+//! These are the pieces the fault-tolerance layer is assembled from
+//! (coordinator → [`RpcClient`](crate::rpc::RpcClient) → server batcher →
+//! [`ShardPool`](crate::runtime::ShardPool)):
+//!
+//! * [`Deadline`] — an absolute per-request budget that travels with the
+//!   request (the remaining budget is re-encoded at every hop:
+//!   `deadline_us` in the request frame header). Every hop sheds work whose
+//!   deadline already passed instead of computing an answer nobody is
+//!   waiting for.
+//! * [`RetryPolicy`] + [`RetryBudget`] — bounded transparent retries on
+//!   transport failures with exponential backoff and jitter, gated by a
+//!   token-bucket budget replenished by successes, so a hard-down backend
+//!   costs a bounded number of extra dials instead of a retry storm.
+//! * [`CircuitBreaker`] — trips open on consecutive transport failures (or
+//!   a p99 latency breach), fails calls fast while open, and probes with a
+//!   half-open trial call after a cooldown. The breaker is what lets the
+//!   coordinator degrade to stage-1-only service *before* burning the
+//!   request's latency budget on a backend that is known to be down.
+//!
+//! Failure classification helpers ([`is_deadline_exceeded`],
+//! [`is_breaker_open`]) let callers tell "the budget ran out" and "we never
+//! tried" apart from ordinary transport errors — the coordinator's
+//! degradation accounting depends on the distinction.
+
+use crate::util::histogram::Histogram;
+use crate::util::rng::Rng;
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Deadline
+
+/// Absolute per-request deadline. `Copy`, so it travels with requests and
+/// tasks for free; the *remaining* budget is what gets encoded on the wire
+/// (`deadline_us`), so each hop measures against its own clock and clock
+/// skew never accumulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Deadline(Instant);
+
+impl Deadline {
+    /// Deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline(Instant::now() + budget)
+    }
+
+    /// Deadline at an absolute instant.
+    pub fn at(t: Instant) -> Deadline {
+        Deadline(t)
+    }
+
+    /// The absolute instant.
+    pub fn instant(&self) -> Instant {
+        self.0
+    }
+
+    /// Budget left; `Duration::ZERO` once expired.
+    pub fn remaining(&self) -> Duration {
+        self.0.saturating_duration_since(Instant::now())
+    }
+
+    /// True once the budget is exhausted.
+    pub fn expired(&self) -> bool {
+        self.remaining() == Duration::ZERO
+    }
+
+    /// Remaining budget in whole microseconds for the wire (`deadline_us`
+    /// request-header field), clamped to `1..=u32::MAX` — 0 is the wire's
+    /// "no deadline" sentinel, so an expired-but-sent deadline encodes as 1
+    /// and the receiving hop sheds it on arrival.
+    pub fn remaining_us(&self) -> u32 {
+        (self.remaining().as_micros().min(u32::MAX as u128) as u32).max(1)
+    }
+
+    /// Decode a wire `deadline_us` (0 = none) against this hop's clock.
+    pub fn from_wire_us(us: u32) -> Option<Deadline> {
+        if us == 0 {
+            None
+        } else {
+            Some(Deadline::after(Duration::from_micros(us as u64)))
+        }
+    }
+}
+
+/// Per-call options threaded through the serving entry points. `Default`
+/// keeps the pre-deadline behavior (no budget, never shed).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PredictOptions {
+    /// Absolute deadline for the whole request; work still pending at the
+    /// deadline is shed at whichever hop notices first.
+    pub deadline: Option<Deadline>,
+}
+
+impl PredictOptions {
+    /// Options with a deadline `budget` from now.
+    pub fn with_budget(budget: Duration) -> PredictOptions {
+        PredictOptions {
+            deadline: Some(Deadline::after(budget)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Error classification
+
+/// Marker payload for "the request's deadline expired" errors.
+#[derive(Debug)]
+pub struct DeadlineExceeded;
+
+impl std::fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request deadline exceeded")
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
+
+/// Marker payload for "the circuit breaker is open, call not attempted".
+#[derive(Debug)]
+pub struct BreakerOpen;
+
+impl std::fmt::Display for BreakerOpen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "circuit breaker open: second stage unavailable")
+    }
+}
+
+impl std::error::Error for BreakerOpen {}
+
+/// An error carrying [`DeadlineExceeded`].
+pub fn deadline_error() -> io::Error {
+    io::Error::new(io::ErrorKind::TimedOut, DeadlineExceeded)
+}
+
+/// An error carrying [`BreakerOpen`].
+pub fn breaker_error() -> io::Error {
+    io::Error::new(io::ErrorKind::ConnectionRefused, BreakerOpen)
+}
+
+/// True if `e` is a deadline expiry (this hop's or a downstream one's).
+pub fn is_deadline_exceeded(e: &io::Error) -> bool {
+    e.get_ref().is_some_and(|inner| inner.is::<DeadlineExceeded>())
+}
+
+/// True if `e` is a breaker fast-fail (the call was never attempted).
+pub fn is_breaker_open(e: &io::Error) -> bool {
+    e.get_ref().is_some_and(|inner| inner.is::<BreakerOpen>())
+}
+
+// ---------------------------------------------------------------------------
+// Retry policy + budget
+
+/// Bounded-retry policy with exponential backoff and jitter. Governs how
+/// the client reacts to *transport* failures (stale pooled connections,
+/// reader death mid-response); application errors (the server answered
+/// with an error frame) are never retried — the server already saw and
+/// rejected the request.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Extra attempts after the first (0 disables retrying entirely).
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles per subsequent retry.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Fraction of each backoff that is randomized (0 = deterministic,
+    /// 1 = full jitter): `sleep = backoff · (1 - jitter·U[0,1))`.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 2,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(200),
+            jitter: 0.5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Policy that never retries (the embedded path, and A/B baselines).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 0,
+            ..Default::default()
+        }
+    }
+
+    /// Jittered backoff before retry number `retry` (1-based).
+    pub fn backoff(&self, retry: u32, rng: &mut Rng) -> Duration {
+        let exp = self
+            .base_backoff
+            .saturating_mul(1u32 << (retry.saturating_sub(1)).min(16))
+            .min(self.max_backoff);
+        let scale = 1.0 - self.jitter.clamp(0.0, 1.0) * rng.f64();
+        Duration::from_nanos((exp.as_nanos() as f64 * scale) as u64)
+    }
+}
+
+/// Token-bucket retry budget shared by every request on a client: each
+/// *success* deposits a fraction of a token, each retry withdraws a whole
+/// one. Under a healthy backend the bucket stays full and retries are
+/// free; under a hard-down backend the bucket drains and retries stop —
+/// callers fail fast instead of amplifying the outage with a dial storm.
+pub struct RetryBudget {
+    /// Milli-tokens, so fractional deposits stay integral.
+    millitokens: AtomicU64,
+    cap: u64,
+    deposit: u64,
+}
+
+impl RetryBudget {
+    /// Budget holding up to `cap` retries, replenished `per_success`
+    /// tokens per recorded success. Starts full.
+    pub fn new(cap: f64, per_success: f64) -> RetryBudget {
+        let cap_mt = (cap.max(0.0) * 1000.0) as u64;
+        RetryBudget {
+            millitokens: AtomicU64::new(cap_mt),
+            cap: cap_mt,
+            deposit: (per_success.max(0.0) * 1000.0) as u64,
+        }
+    }
+
+    /// Record one successful call (replenishes the bucket).
+    pub fn deposit(&self) {
+        let cap = self.cap;
+        let _ = self
+            .millitokens
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |t| {
+                Some((t + self.deposit).min(cap))
+            });
+    }
+
+    /// Try to pay for one retry; `false` = budget exhausted, don't retry.
+    pub fn try_withdraw(&self) -> bool {
+        self.millitokens
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |t| {
+                t.checked_sub(1000)
+            })
+            .is_ok()
+    }
+
+    /// Whole retries currently affordable (telemetry).
+    pub fn available(&self) -> u64 {
+        self.millitokens.load(Ordering::Relaxed) / 1000
+    }
+}
+
+impl Default for RetryBudget {
+    /// 10 retries capacity, +0.1 per success (≤ ~10% retry amplification
+    /// in steady state — the classic Finagle-style budget shape).
+    fn default() -> Self {
+        RetryBudget::new(10.0, 0.1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Circuit breaker
+
+/// Breaker states. `Closed` = calls flow; `Open` = calls fail fast;
+/// `HalfOpen` = a trial call probes the backend after the cooldown — its
+/// success re-closes the breaker, its failure re-opens it for another
+/// cooldown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// Breaker tuning.
+#[derive(Clone, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive transport failures that trip the breaker open.
+    pub failure_threshold: u32,
+    /// How long an open breaker fails fast before probing half-open.
+    pub cooldown: Duration,
+    /// Optional latency rule: trip when observed success p99 exceeds this
+    /// (the SLO-breach trigger; `None` disables it).
+    pub p99_limit: Option<Duration>,
+    /// Minimum successes observed before the p99 rule may fire.
+    pub min_p99_samples: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            failure_threshold: 5,
+            cooldown: Duration::from_millis(250),
+            p99_limit: None,
+            min_p99_samples: 64,
+        }
+    }
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at: Option<Instant>,
+    /// Manually forced open (tests, drills, maintenance): stays open until
+    /// [`CircuitBreaker::force_close`], ignoring the cooldown probe.
+    forced: bool,
+}
+
+/// Closed / open / half-open circuit breaker over the second-stage RPC.
+/// Thread-safe; the hot path cost is one short mutex hold per call.
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    inner: Mutex<BreakerInner>,
+    /// Success-latency histogram feeding the p99 rule.
+    latency: Histogram,
+    /// Closed/half-open → open transitions (observable in reports).
+    pub trips: AtomicU64,
+    /// All state transitions.
+    pub transitions: AtomicU64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at: None,
+                forced: false,
+            }),
+            latency: Histogram::new(),
+            trips: AtomicU64::new(0),
+            transitions: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BreakerInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn transition(&self, inner: &mut BreakerInner, to: BreakerState) {
+        if inner.state == to {
+            return;
+        }
+        if to == BreakerState::Open {
+            inner.opened_at = Some(Instant::now());
+            self.trips.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.state = to;
+        self.transitions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// May a call proceed right now? Open → `false` (fail fast) until the
+    /// cooldown elapses, then ONE caller is admitted as the half-open
+    /// probe; half-open admits (the probe outcome decides what's next).
+    pub fn admit(&self) -> bool {
+        let mut inner = self.lock();
+        match inner.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                if inner.forced {
+                    return false;
+                }
+                let cooled = match inner.opened_at {
+                    Some(t) => t.elapsed() >= self.cfg.cooldown,
+                    None => true,
+                };
+                if cooled {
+                    self.transition(&mut inner, BreakerState::HalfOpen);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful call (with its latency, feeding the p99 rule).
+    /// A half-open probe's success re-closes the breaker.
+    pub fn record_success(&self, latency: Duration) {
+        self.latency.record_duration(latency);
+        let mut inner = self.lock();
+        inner.consecutive_failures = 0;
+        if inner.state == BreakerState::HalfOpen && !inner.forced {
+            self.transition(&mut inner, BreakerState::Closed);
+        }
+        // SLO-breach rule: sustained p99 above the limit trips the breaker
+        // even though calls are "succeeding" — latency is the contract.
+        if let Some(limit) = self.cfg.p99_limit {
+            if inner.state == BreakerState::Closed
+                && self.latency.count() >= self.cfg.min_p99_samples
+                && self.latency.quantile_ns(0.99) > limit.as_nanos() as u64
+            {
+                self.transition(&mut inner, BreakerState::Open);
+                drop(inner);
+                self.latency.reset();
+            }
+        }
+    }
+
+    /// Record a failed call. Trips open on the threshold's consecutive
+    /// failure (or immediately when the half-open probe fails).
+    pub fn record_failure(&self) {
+        let mut inner = self.lock();
+        inner.consecutive_failures = inner.consecutive_failures.saturating_add(1);
+        let trip = match inner.state {
+            BreakerState::HalfOpen => true,
+            BreakerState::Closed => {
+                inner.consecutive_failures >= self.cfg.failure_threshold
+            }
+            BreakerState::Open => false,
+        };
+        if trip {
+            self.transition(&mut inner, BreakerState::Open);
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.lock().state
+    }
+
+    /// Force the breaker open until [`CircuitBreaker::force_close`] —
+    /// no half-open probes. For tests, chaos drills, and maintenance.
+    pub fn force_open(&self) {
+        let mut inner = self.lock();
+        inner.forced = true;
+        self.transition(&mut inner, BreakerState::Open);
+    }
+
+    /// Clear a forced-open (or any) state back to closed.
+    pub fn force_close(&self) {
+        let mut inner = self.lock();
+        inner.forced = false;
+        inner.consecutive_failures = 0;
+        self.transition(&mut inner, BreakerState::Closed);
+    }
+}
+
+impl Default for CircuitBreaker {
+    fn default() -> Self {
+        CircuitBreaker::new(BreakerConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_budget_and_wire_roundtrip() {
+        let d = Deadline::after(Duration::from_millis(50));
+        assert!(!d.expired());
+        assert!(d.remaining() <= Duration::from_millis(50));
+        let us = d.remaining_us();
+        assert!(us > 0 && us <= 50_000);
+        let decoded = Deadline::from_wire_us(us).unwrap();
+        assert!(decoded.remaining() <= Duration::from_micros(us as u64));
+        assert!(Deadline::from_wire_us(0).is_none());
+
+        let past = Deadline::at(Instant::now() - Duration::from_millis(1));
+        assert!(past.expired());
+        assert_eq!(past.remaining(), Duration::ZERO);
+        // Expired deadlines still encode as a (minimal) live wire value,
+        // never as the "no deadline" sentinel.
+        assert_eq!(past.remaining_us(), 1);
+    }
+
+    #[test]
+    fn deadline_errors_classify() {
+        let e = deadline_error();
+        assert!(is_deadline_exceeded(&e));
+        assert!(!is_breaker_open(&e));
+        let b = breaker_error();
+        assert!(is_breaker_open(&b));
+        assert!(!is_deadline_exceeded(&b));
+        let plain = io::Error::new(io::ErrorKind::TimedOut, "ordinary timeout");
+        assert!(!is_deadline_exceeded(&plain));
+        assert!(!is_breaker_open(&plain));
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps_with_jitter_bounds() {
+        let p = RetryPolicy {
+            max_retries: 5,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(50),
+            jitter: 0.5,
+        };
+        let mut rng = Rng::new(7);
+        for retry in 1..=5u32 {
+            let nominal = Duration::from_millis(10)
+                .saturating_mul(1 << (retry - 1))
+                .min(Duration::from_millis(50));
+            for _ in 0..100 {
+                let b = p.backoff(retry, &mut rng);
+                assert!(b <= nominal, "retry {retry}: {b:?} > {nominal:?}");
+                // jitter 0.5 ⇒ at least half the nominal backoff remains.
+                assert!(
+                    b.as_secs_f64() >= nominal.as_secs_f64() * 0.5 - 1e-9,
+                    "retry {retry}: {b:?} below jitter floor"
+                );
+            }
+        }
+        // Zero jitter is deterministic.
+        let det = RetryPolicy { jitter: 0.0, ..p };
+        assert_eq!(det.backoff(1, &mut rng), Duration::from_millis(10));
+        assert_eq!(det.backoff(2, &mut rng), Duration::from_millis(20));
+        assert_eq!(det.backoff(4, &mut rng), Duration::from_millis(50), "capped");
+    }
+
+    #[test]
+    fn retry_budget_drains_and_replenishes() {
+        let b = RetryBudget::new(2.0, 0.5);
+        assert_eq!(b.available(), 2);
+        assert!(b.try_withdraw());
+        assert!(b.try_withdraw());
+        assert!(!b.try_withdraw(), "drained budget must refuse");
+        // Two successes buy back one retry at 0.5/success.
+        b.deposit();
+        assert!(!b.try_withdraw());
+        b.deposit();
+        assert!(b.try_withdraw());
+        // Deposits cap at the bucket size.
+        for _ in 0..100 {
+            b.deposit();
+        }
+        assert_eq!(b.available(), 2);
+    }
+
+    #[test]
+    fn breaker_trips_on_consecutive_failures_and_probes_half_open() {
+        let br = CircuitBreaker::new(BreakerConfig {
+            failure_threshold: 3,
+            cooldown: Duration::from_millis(20),
+            ..Default::default()
+        });
+        assert_eq!(br.state(), BreakerState::Closed);
+        // A success in between resets the consecutive count.
+        br.record_failure();
+        br.record_failure();
+        br.record_success(Duration::from_micros(100));
+        br.record_failure();
+        br.record_failure();
+        assert_eq!(br.state(), BreakerState::Closed);
+        br.record_failure();
+        assert_eq!(br.state(), BreakerState::Open);
+        assert_eq!(br.trips.load(Ordering::Relaxed), 1);
+        assert!(!br.admit(), "open breaker fails fast");
+
+        // After the cooldown exactly one caller probes half-open.
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(br.admit());
+        assert_eq!(br.state(), BreakerState::HalfOpen);
+        // Probe fails → re-open immediately.
+        br.record_failure();
+        assert_eq!(br.state(), BreakerState::Open);
+        assert_eq!(br.trips.load(Ordering::Relaxed), 2);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(br.admit());
+        // Probe succeeds → closed again.
+        br.record_success(Duration::from_micros(100));
+        assert_eq!(br.state(), BreakerState::Closed);
+        assert!(br.admit());
+    }
+
+    #[test]
+    fn breaker_force_open_ignores_cooldown_until_force_close() {
+        let br = CircuitBreaker::new(BreakerConfig {
+            cooldown: Duration::from_millis(1),
+            ..Default::default()
+        });
+        br.force_open();
+        assert_eq!(br.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(!br.admit(), "forced-open never probes");
+        // A stray success must not close a forced-open breaker.
+        br.record_success(Duration::from_micros(50));
+        assert_eq!(br.state(), BreakerState::Open);
+        br.force_close();
+        assert_eq!(br.state(), BreakerState::Closed);
+        assert!(br.admit());
+    }
+
+    #[test]
+    fn breaker_p99_breach_trips() {
+        let br = CircuitBreaker::new(BreakerConfig {
+            failure_threshold: 1000, // only the latency rule can trip
+            p99_limit: Some(Duration::from_millis(1)),
+            min_p99_samples: 10,
+            ..Default::default()
+        });
+        for _ in 0..9 {
+            br.record_success(Duration::from_millis(10));
+        }
+        assert_eq!(br.state(), BreakerState::Closed, "below min samples");
+        br.record_success(Duration::from_millis(10));
+        assert_eq!(br.state(), BreakerState::Open, "p99 breach must trip");
+        assert_eq!(br.trips.load(Ordering::Relaxed), 1);
+    }
+}

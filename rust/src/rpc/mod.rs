@@ -10,12 +10,22 @@
 //! streamed spans incrementally, and a calibrated network-latency simulator
 //! (`netsim`) standing in for the datacenter hop the paper measures
 //! (DESIGN.md §6).
+//!
+//! The failure model lives in `fault` (per-request [`Deadline`]s carried in
+//! the request frames, [`RetryPolicy`] + retry budget, [`CircuitBreaker`])
+//! and `netsim`'s chaos layer ([`ChaosPlan`]: scripted connection resets,
+//! stalls, partial/corrupt frames, server pause/resume) — see the crate
+//! docs §Failure model and `tests/chaos_battery.rs`.
 
 pub mod client;
+pub mod fault;
 pub mod netsim;
 pub mod proto;
 pub mod server;
 
-pub use client::{FallbackSpan, PendingPredict, RpcClient, StreamOutcome};
-pub use netsim::NetSim;
+pub use client::{ClientConfig, FallbackSpan, PendingPredict, RpcClient, StreamOutcome};
+pub use fault::{
+    BreakerConfig, BreakerState, CircuitBreaker, Deadline, PredictOptions, RetryPolicy,
+};
+pub use netsim::{ChaosPlan, Fault, NetSim};
 pub use server::{Backend, BatcherConfig, RpcServer};

@@ -1,4 +1,4 @@
-//! Network-latency simulator.
+//! Network-latency simulator + scriptable chaos fault injection.
 //!
 //! We run over loopback (~50µs RTT); the paper measures a datacenter hop
 //! between the application front-end and the ML back-end. `NetSim` injects a
@@ -6,10 +6,21 @@
 //! ratio matches the paper's regime (first stage ≈ 5× faster than RPC,
 //! Table 3). The delay distribution is configurable per experiment and the
 //! benches report the measured ratio next to the paper's.
+//!
+//! The **chaos layer** ([`ChaosPlan`]) rides the same server-side hooks:
+//! a deterministic script maps outbound-frame indices to [`Fault`]s
+//! (connection reset, write stall, partial frame, header corruption), and
+//! an explicit pause/resume gate stalls the batcher wholesale — the
+//! fault-injection substrate `tests/chaos_battery.rs` drives to prove the
+//! serving stack's failure invariants (no hang, no wrong bits, every row
+//! accounted exactly once). Fault scripts are index-addressed rather than
+//! probabilistic so every battery run is reproducible from its seed + plan.
 
 use crate::util::rng::Rng;
-use std::sync::Mutex;
-use std::time::Duration;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
 
 /// Latency model: `delay = base · exp(sigma · N(0,1))`, clamped to
 /// `[0, max]`. `base_us = 0` disables injection entirely.
@@ -42,10 +53,145 @@ impl NetSimConfig {
     }
 }
 
-/// Thread-safe delay sampler.
+/// One scripted fault, applied to a specific outbound server frame (by
+/// global frame index — see [`ChaosPlan::script`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Drop the connection instead of writing the frame — the client's
+    /// reader sees EOF/reset mid-stream.
+    Reset,
+    /// Sleep this many milliseconds before writing (a write stall; the
+    /// read side of the peer stalls symmetrically).
+    StallMs(u64),
+    /// Write only a prefix of the frame, then drop the connection — a
+    /// truncated frame the peer must detect, never misparse.
+    PartialFrame,
+    /// Flip the frame's count/status header byte before writing. The
+    /// corruption is structural (payload length no longer matches the
+    /// declared row count), so the peer MUST reject the frame rather than
+    /// deliver wrong bits.
+    Corrupt,
+    /// Pause the server's batcher for this many milliseconds starting at
+    /// this frame (pause/resume; explicit [`ChaosPlan::pause`] also works).
+    PauseMs(u64),
+}
+
+/// Deterministic fault script: outbound-frame index → fault, plus a
+/// pause/resume gate for the batcher. Attached to a [`NetSim`] via
+/// [`NetSim::with_chaos`]; the server consults it on every outbound frame
+/// ([`ChaosPlan::next_frame_fault`]) and before executing every batch
+/// ([`ChaosPlan::wait_if_paused`]).
+#[derive(Default)]
+pub struct ChaosPlan {
+    /// Reproducibility tag: logged by the chaos battery next to results so
+    /// a failing run can be replayed exactly.
+    pub seed: u64,
+    script: Mutex<HashMap<u64, Fault>>,
+    frame_counter: AtomicU64,
+    /// Faults actually applied (telemetry; proves the script fired).
+    pub injected: AtomicU64,
+    pause: Mutex<PauseState>,
+    pause_cv: Condvar,
+}
+
+#[derive(Default)]
+struct PauseState {
+    /// Explicitly paused until resumed.
+    held: bool,
+    /// Timed pause (from [`Fault::PauseMs`]).
+    until: Option<Instant>,
+}
+
+impl ChaosPlan {
+    pub fn new(seed: u64) -> ChaosPlan {
+        ChaosPlan {
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// Script `fault` for the `frame`-th outbound server frame (0-based,
+    /// counted across all connections).
+    pub fn script(&self, frame: u64, fault: Fault) {
+        self.script
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(frame, fault);
+    }
+
+    /// Advance the outbound-frame counter and return the scripted fault
+    /// for this frame, if any. Pause faults are routed to the pause gate
+    /// here (and still reported to the caller for accounting).
+    pub fn next_frame_fault(&self) -> Option<Fault> {
+        let idx = self.frame_counter.fetch_add(1, Ordering::Relaxed);
+        let fault = self
+            .script
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .remove(&idx)?;
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        if let Fault::PauseMs(ms) = fault {
+            let mut p = self.pause.lock().unwrap_or_else(PoisonError::into_inner);
+            p.until = Some(Instant::now() + Duration::from_millis(ms));
+        }
+        Some(fault)
+    }
+
+    /// Outbound frames observed so far (for addressing scripts in tests).
+    pub fn frames_seen(&self) -> u64 {
+        self.frame_counter.load(Ordering::Relaxed)
+    }
+
+    /// Pause the server's batcher until [`ChaosPlan::resume`].
+    pub fn pause(&self) {
+        self.pause.lock().unwrap_or_else(PoisonError::into_inner).held = true;
+    }
+
+    /// Resume a paused batcher.
+    pub fn resume(&self) {
+        let mut p = self.pause.lock().unwrap_or_else(PoisonError::into_inner);
+        p.held = false;
+        p.until = None;
+        drop(p);
+        self.pause_cv.notify_all();
+    }
+
+    /// Block while the plan holds the server paused (explicitly or by a
+    /// running [`Fault::PauseMs`] window). Called by the batcher before
+    /// executing a batch; a plan that never pauses costs one lock here.
+    pub fn wait_if_paused(&self) {
+        let mut p = self.pause.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if let Some(until) = p.until {
+                let now = Instant::now();
+                if now < until {
+                    let (guard, _) = self
+                        .pause_cv
+                        .wait_timeout(p, until - now)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    p = guard;
+                    continue;
+                }
+                p.until = None;
+            }
+            if p.held {
+                p = self
+                    .pause_cv
+                    .wait_timeout(p, Duration::from_millis(20))
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .0;
+                continue;
+            }
+            return;
+        }
+    }
+}
+
+/// Thread-safe delay sampler (plus the optional chaos plan).
 pub struct NetSim {
     cfg: NetSimConfig,
     rng: Mutex<Rng>,
+    chaos: Option<ChaosPlan>,
 }
 
 impl NetSim {
@@ -53,7 +199,23 @@ impl NetSim {
         NetSim {
             cfg,
             rng: Mutex::new(Rng::new(seed)),
+            chaos: None,
         }
+    }
+
+    /// A simulator carrying a chaos fault plan (the server consults it on
+    /// every outbound frame and batch).
+    pub fn with_chaos(cfg: NetSimConfig, seed: u64, plan: ChaosPlan) -> NetSim {
+        NetSim {
+            cfg,
+            rng: Mutex::new(Rng::new(seed)),
+            chaos: Some(plan),
+        }
+    }
+
+    /// The attached chaos plan, if any.
+    pub fn chaos(&self) -> Option<&ChaosPlan> {
+        self.chaos.as_ref()
     }
 
     pub fn enabled(&self) -> bool {
@@ -106,6 +268,64 @@ mod tests {
             / n as f64;
         // lognormal mean = base·exp(sigma²/2) ≈ 204
         assert!((mean_us - 204.0).abs() < 10.0, "mean={mean_us}");
+    }
+
+    #[test]
+    fn chaos_script_fires_once_per_indexed_frame() {
+        let plan = ChaosPlan::new(42);
+        plan.script(1, Fault::Reset);
+        plan.script(3, Fault::StallMs(5));
+        assert_eq!(plan.next_frame_fault(), None, "frame 0 unscripted");
+        assert_eq!(plan.next_frame_fault(), Some(Fault::Reset), "frame 1");
+        assert_eq!(plan.next_frame_fault(), None, "frame 2");
+        assert_eq!(plan.next_frame_fault(), Some(Fault::StallMs(5)), "frame 3");
+        assert_eq!(plan.next_frame_fault(), None, "frame 4: script exhausted");
+        assert_eq!(plan.injected.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(plan.frames_seen(), 5);
+        assert_eq!(plan.seed, 42);
+    }
+
+    #[test]
+    fn chaos_pause_blocks_until_resume() {
+        let ns = std::sync::Arc::new(NetSim::with_chaos(
+            NetSimConfig::off(),
+            1,
+            ChaosPlan::new(7),
+        ));
+        let plan = ns.chaos().unwrap();
+        plan.pause();
+        let t0 = std::time::Instant::now();
+        let ns2 = ns.clone();
+        let h = std::thread::spawn(move || {
+            ns2.chaos().unwrap().wait_if_paused();
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        ns.chaos().unwrap().resume();
+        let waited = h.join().unwrap();
+        assert!(waited >= Duration::from_millis(25), "paused gate must hold: {waited:?}");
+        // Unpaused gate is immediate.
+        let t0 = std::time::Instant::now();
+        plan.wait_if_paused();
+        assert!(t0.elapsed() < Duration::from_millis(10));
+    }
+
+    #[test]
+    fn chaos_timed_pause_expires_on_its_own() {
+        let plan = ChaosPlan::new(9);
+        plan.script(0, Fault::PauseMs(30));
+        assert_eq!(plan.next_frame_fault(), Some(Fault::PauseMs(30)));
+        let t0 = std::time::Instant::now();
+        plan.wait_if_paused();
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(25), "timed pause held: {waited:?}");
+        assert!(waited < Duration::from_secs(5), "timed pause must expire");
+    }
+
+    #[test]
+    fn plain_netsim_has_no_chaos() {
+        let ns = NetSim::new(NetSimConfig::off(), 1);
+        assert!(ns.chaos().is_none());
     }
 
     #[test]

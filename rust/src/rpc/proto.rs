@@ -1,7 +1,8 @@
 //! Wire protocol: length-prefixed little-endian binary frames.
 //!
 //! ```text
-//! request  := u32 payload_len | u64 req_id | u32 n_rows | u32 row_len | f32[n_rows*row_len]
+//! request  := u32 payload_len | u64 req_id | u32 n_rows | u32 row_len
+//!             | u32 deadline_us | f32[n_rows*row_len]
 //! response := u32 payload_len | u64 req_id | u32 n_rows | f32[n_rows]
 //! chunk    := u32 payload_len | u64 req_id | u32 CHUNK | u32 row_start | u32 n_rows
 //!             | u32 status | f32[status == 0 ? n_rows : 0]
@@ -10,6 +11,13 @@
 //!
 //! `row_len` is the padded feature width; probabilities come back one per
 //! row. A zero-row request is a ping (used for health checks / RTT probes).
+//!
+//! `deadline_us` carries the request's **remaining** latency budget in
+//! microseconds at send time (0 = no deadline). The receiving hop decodes
+//! it against its own clock ([`crate::rpc::fault::Deadline::from_wire_us`]),
+//! so clock skew never accumulates across hops; the server's batcher and
+//! the shard pool shed work whose budget has already run out instead of
+//! computing answers nobody is waiting for.
 //!
 //! Responses are correlated to requests by `req_id`, never by arrival
 //! order: the client pipelines several request frames on one connection and
@@ -52,15 +60,27 @@ pub const CHUNK_SENTINEL: u32 = u32::MAX - 1;
 /// `n_rows` value marking a frame as a stream terminator.
 pub const STREAM_END_SENTINEL: u32 = u32::MAX - 2;
 
-/// Inference request.
+/// Inference request. `deadline_us` is the remaining latency budget in
+/// microseconds at encode time (0 = no deadline — the default).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
     pub req_id: u64,
     pub row_len: u32,
+    pub deadline_us: u32,
     pub rows: Vec<f32>,
 }
 
 impl Request {
+    /// A request without a deadline.
+    pub fn new(req_id: u64, row_len: u32, rows: Vec<f32>) -> Request {
+        Request {
+            req_id,
+            row_len,
+            deadline_us: 0,
+            rows,
+        }
+    }
+
     pub fn n_rows(&self) -> u32 {
         if self.row_len == 0 {
             0
@@ -69,8 +89,14 @@ impl Request {
         }
     }
 
+    /// The wire deadline decoded against this hop's clock (None = no
+    /// deadline).
+    pub fn deadline(&self) -> Option<super::fault::Deadline> {
+        super::fault::Deadline::from_wire_us(self.deadline_us)
+    }
+
     pub fn wire_size(&self) -> usize {
-        4 + 8 + 4 + 4 + self.rows.len() * 4
+        4 + 8 + 4 + 4 + 4 + self.rows.len() * 4
     }
 }
 
@@ -188,11 +214,12 @@ fn put_u64(buf: &mut Vec<u8>, v: u64) {
 /// Encode a request frame.
 pub fn encode_request(r: &Request, buf: &mut Vec<u8>) {
     buf.clear();
-    let payload = 8 + 4 + 4 + r.rows.len() * 4;
+    let payload = 8 + 4 + 4 + 4 + r.rows.len() * 4;
     put_u32(buf, payload as u32);
     put_u64(buf, r.req_id);
     put_u32(buf, r.n_rows());
     put_u32(buf, r.row_len);
+    put_u32(buf, r.deadline_us);
     for v in &r.rows {
         buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -320,26 +347,28 @@ pub fn read_inbound(stream: &mut impl Read) -> std::io::Result<Option<Inbound>> 
             "truncated request",
         ));
     }
-    if len < 16 {
+    if len < 20 {
         let req_id = if len >= 8 { get_u64(&payload, 0) } else { 0 };
         return Ok(Some(Inbound::Malformed { req_id }));
     }
     let req_id = get_u64(&payload, 0);
     let n_rows = get_u32(&payload, 8);
     let row_len = get_u32(&payload, 12);
+    let deadline_us = get_u32(&payload, 16);
     // u64 math: a hostile n_rows × row_len (e.g. the u32::MAX sentinel)
     // must not overflow the expected-size check.
-    let expected = 16u64 + n_rows as u64 * row_len as u64 * 4;
+    let expected = 20u64 + n_rows as u64 * row_len as u64 * 4;
     if expected != len as u64 {
         return Ok(Some(Inbound::Malformed { req_id }));
     }
     let mut rows = Vec::with_capacity(n_rows as usize * row_len as usize);
-    for c in payload[16..].chunks_exact(4) {
+    for c in payload[20..].chunks_exact(4) {
         rows.push(f32::from_le_bytes(c.try_into().unwrap()));
     }
     Ok(Some(Inbound::Req(Request {
         req_id,
         row_len,
+        deadline_us,
         rows,
     })))
 }
@@ -525,6 +554,27 @@ impl StreamAssembler {
         Ok(())
     }
 
+    /// Contiguous spans of rows **not yet** covered by any chunk, sorted.
+    /// Used when a stream ends early (connection lost before `STREAM_END`)
+    /// to convert the unfilled remainder into explicit per-span errors
+    /// instead of a hang or a silent zero-fill.
+    pub fn missing_spans(&self) -> Vec<Range<usize>> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.filled.len() {
+            if self.filled[i] {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < self.filled.len() && !self.filled[i] {
+                i += 1;
+            }
+            out.push(start..i);
+        }
+        out
+    }
+
     /// Close the stream against the terminator's chunk count. Returns the
     /// reassembled probabilities and the failed spans (sorted; rows inside
     /// them hold 0.0 placeholders).
@@ -563,6 +613,7 @@ mod tests {
         let r = Request {
             req_id: 42,
             row_len: 3,
+            deadline_us: 0,
             rows: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
         };
         let mut buf = Vec::new();
@@ -571,6 +622,26 @@ mod tests {
         let r2 = read_request(&mut cur).unwrap().unwrap();
         assert_eq!(r, r2);
         assert_eq!(r2.n_rows(), 2);
+        assert!(r2.deadline().is_none(), "0 = no deadline");
+    }
+
+    #[test]
+    fn request_deadline_roundtrip() {
+        let r = Request {
+            req_id: 4,
+            row_len: 1,
+            deadline_us: 7_500,
+            rows: vec![1.0],
+        };
+        let mut buf = Vec::new();
+        encode_request(&r, &mut buf);
+        assert_eq!(buf.len(), r.wire_size());
+        let r2 = read_request(&mut Cursor::new(buf)).unwrap().unwrap();
+        assert_eq!(r2.deadline_us, 7_500);
+        let d = r2.deadline().expect("deadline decoded");
+        // Decoded against the receiver's clock: at most the sent budget.
+        assert!(d.remaining() <= std::time::Duration::from_micros(7_500));
+        assert!(!d.expired());
     }
 
     #[test]
@@ -611,6 +682,7 @@ mod tests {
         let r = Request {
             req_id: 1,
             row_len: 0,
+            deadline_us: 0,
             rows: vec![],
         };
         let mut buf = Vec::new();
@@ -630,6 +702,7 @@ mod tests {
         let r = Request {
             req_id: 9,
             row_len: 2,
+            deadline_us: 0,
             rows: vec![1.0, 2.0],
         };
         let mut buf = Vec::new();
@@ -676,7 +749,7 @@ mod tests {
         buf.extend_from_slice(&payload);
         // A good frame right behind it.
         let mut tmp = Vec::new();
-        encode_request(&Request { req_id: 78, row_len: 1, rows: vec![2.0] }, &mut tmp);
+        encode_request(&Request::new(78, 1, vec![2.0]), &mut tmp);
         buf.extend_from_slice(&tmp);
 
         let mut cur = Cursor::new(buf);
@@ -700,6 +773,7 @@ mod tests {
         payload.extend_from_slice(&5u64.to_le_bytes());
         payload.extend_from_slice(&u32::MAX.to_le_bytes()); // n_rows sentinel
         payload.extend_from_slice(&u32::MAX.to_le_bytes()); // row_len, maximally hostile
+        payload.extend_from_slice(&0u32.to_le_bytes()); // deadline_us (full 20-byte header)
         let mut buf = Vec::new();
         buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         buf.extend_from_slice(&payload);
@@ -731,6 +805,7 @@ mod tests {
                 req_id: g.rng.below(u64::MAX),
                 row_len: row_len as u32,
                 rows,
+                deadline_us: g.rng.below(u32::MAX as u64 + 1) as u32,
             };
             let mut buf = Vec::new();
             encode_request(&req, &mut buf);
@@ -868,6 +943,19 @@ mod tests {
         assert!(asm.finish(2).is_err());
     }
 
+    #[test]
+    fn assembler_missing_spans_cover_unfilled_rows_exactly() {
+        let mut asm = StreamAssembler::new(10);
+        assert_eq!(asm.missing_spans(), vec![0..10], "nothing delivered yet");
+        asm.push(&Chunk::ok(1, 2, vec![1.0, 2.0, 3.0])).unwrap(); // rows 2..5
+        asm.push(&Chunk::err(1, 8..9)).unwrap(); // failed rows still count as covered
+        assert_eq!(asm.missing_spans(), vec![0..2, 5..8, 9..10]);
+        asm.push(&Chunk::ok(1, 0, vec![4.0, 5.0])).unwrap();
+        asm.push(&Chunk::ok(1, 5, vec![6.0, 7.0, 8.0])).unwrap();
+        asm.push(&Chunk::ok(1, 9, vec![9.0])).unwrap();
+        assert!(asm.missing_spans().is_empty(), "fully tiled stream has no gaps");
+    }
+
     /// Satellite property test: a response split into randomized chunk
     /// spans — including `u32::MAX`-status error chunks interleaved
     /// mid-stream — reassembles bit-identically to the monolithic response,
@@ -963,14 +1051,7 @@ mod tests {
         let mut buf = Vec::new();
         let mut tmp = Vec::new();
         for id in 0..3 {
-            encode_request(
-                &Request {
-                    req_id: id,
-                    row_len: 1,
-                    rows: vec![id as f32],
-                },
-                &mut tmp,
-            );
+            encode_request(&Request::new(id, 1, vec![id as f32]), &mut tmp);
             buf.extend_from_slice(&tmp);
         }
         let mut cur = Cursor::new(buf);

@@ -35,7 +35,8 @@
 //! killing the (pipelined, shared) connection — only an unrecoverable
 //! desync hangs it up.
 
-use super::netsim::NetSim;
+use super::fault::Deadline;
+use super::netsim::{Fault, NetSim};
 use super::proto::{self, Inbound, Request, Response};
 use crate::runtime::{ModelId, ShardPool};
 use crate::telemetry::ServeMetrics;
@@ -114,6 +115,35 @@ pub trait Backend: Send + Sync {
     ) -> bool {
         false
     }
+
+    /// Deadline-aware [`Backend::predict_checked`]: work still pending once
+    /// `deadline` passes may come back as failed spans instead of being
+    /// computed for nobody. The default ignores the deadline (plain
+    /// backends have no intra-batch granularity to shed at); the pool-backed
+    /// [`NativeBackend`] sheds whole not-yet-started shard tasks.
+    fn predict_checked_deadline(
+        &self,
+        rows: &[f32],
+        n: usize,
+        row_len: usize,
+        _deadline: Option<Deadline>,
+    ) -> PredictOutcome {
+        self.predict_checked(rows, n, row_len)
+    }
+
+    /// Deadline-aware [`Backend::predict_streamed`] — same shedding
+    /// contract as [`Backend::predict_checked_deadline`], with shed spans
+    /// delivered to the sink as failed chunks.
+    fn predict_streamed_deadline(
+        &self,
+        rows: &[f32],
+        n: usize,
+        row_len: usize,
+        _deadline: Option<Deadline>,
+        sink: &(dyn Fn(Range<usize>, &[f32], bool) + Sync),
+    ) -> bool {
+        self.predict_streamed(rows, n, row_len, sink)
+    }
 }
 
 /// Native GBDT backend (no PJRT). Serves from the persistent shard-per-core
@@ -148,11 +178,21 @@ impl NativeBackend {
         &self.pool
     }
 
-    fn pooled_outcome(&self, rows: &[f32], n: usize, row_len: usize) -> PredictOutcome {
+    fn pooled_outcome(
+        &self,
+        rows: &[f32],
+        n: usize,
+        row_len: usize,
+        deadline: Option<Deadline>,
+    ) -> PredictOutcome {
         let mut probs = vec![0f32; n];
-        let failed = self
-            .pool
-            .predict_spans(self.model_id, &rows[..n * row_len], row_len, &mut probs);
+        let failed = self.pool.predict_spans_deadline(
+            self.model_id,
+            &rows[..n * row_len],
+            row_len,
+            &mut probs,
+            deadline.map(|d| d.instant()),
+        );
         PredictOutcome { probs, failed }
     }
 }
@@ -169,7 +209,7 @@ impl Backend for NativeBackend {
             }
             return out;
         }
-        let outcome = self.pooled_outcome(rows, n, row_len);
+        let outcome = self.pooled_outcome(rows, n, row_len, None);
         // The unchecked contract is all-or-nothing: re-raise shard failures
         // as the panic the scalar path would have produced.
         assert!(
@@ -181,13 +221,24 @@ impl Backend for NativeBackend {
     }
 
     fn predict_checked(&self, rows: &[f32], n: usize, row_len: usize) -> PredictOutcome {
+        self.predict_checked_deadline(rows, n, row_len, None)
+    }
+
+    fn predict_checked_deadline(
+        &self,
+        rows: &[f32],
+        n: usize,
+        row_len: usize,
+        deadline: Option<Deadline>,
+    ) -> PredictOutcome {
         if row_len < self.model.n_features {
             // Narrow rows take the scalar path; contain its panics per the
             // default whole-batch contract.
             return contain_whole_batch(n, || self.predict(rows, n, row_len));
         }
-        // Pool path: a panicking shard fails only its own sub-range.
-        self.pooled_outcome(rows, n, row_len)
+        // Pool path: a panicking shard fails only its own sub-range, and
+        // tasks still queued past the deadline are shed as failed spans.
+        self.pooled_outcome(rows, n, row_len, deadline)
     }
 
     fn predict_streamed(
@@ -195,6 +246,17 @@ impl Backend for NativeBackend {
         rows: &[f32],
         n: usize,
         row_len: usize,
+        sink: &(dyn Fn(Range<usize>, &[f32], bool) + Sync),
+    ) -> bool {
+        self.predict_streamed_deadline(rows, n, row_len, None, sink)
+    }
+
+    fn predict_streamed_deadline(
+        &self,
+        rows: &[f32],
+        n: usize,
+        row_len: usize,
+        deadline: Option<Deadline>,
         sink: &(dyn Fn(Range<usize>, &[f32], bool) + Sync),
     ) -> bool {
         if row_len < self.model.n_features {
@@ -208,9 +270,14 @@ impl Backend for NativeBackend {
         let mut probs = vec![0f32; n];
         // Failed spans reach the sink as failed chunks; the return value is
         // already folded into the stream, so it is deliberately dropped.
-        let _ = self
-            .pool
-            .predict_spans_streamed(self.model_id, &rows[..n * row_len], row_len, &mut probs, sink);
+        let _ = self.pool.predict_spans_streamed_deadline(
+            self.model_id,
+            &rows[..n * row_len],
+            row_len,
+            &mut probs,
+            deadline.map(|d| d.instant()),
+            sink,
+        );
         true
     }
 
@@ -317,12 +384,64 @@ struct Job {
     row_len: usize,
     out: SharedWriter,
     netsim: Arc<NetSim>,
+    /// Decoded from the request frame's `deadline_us` against this host's
+    /// clock; the batcher sheds the job once it expires.
+    deadline: Option<Deadline>,
 }
 
 impl Job {
     /// Answer this job: `Some(probs)` served, `None` = error frame.
     fn respond(&self, result: Option<Vec<f32>>) {
         respond(&self.out, &self.netsim, self.req_id, result);
+    }
+}
+
+/// Write one outbound frame through the chaos plan (when the simulator
+/// carries one): the scripted fault for this frame index — if any — is
+/// applied here. `Reset` and `PartialFrame` kill the connection (the
+/// structural failure the client must detect and retry); `Corrupt` flips
+/// the count/status header byte so the peer rejects the frame on its
+/// length-consistency check rather than ever seeing wrong payload bits;
+/// `StallMs` delays the write; `PauseMs` was already routed to the batcher
+/// pause gate when the fault was drawn.
+fn chaos_write(stream: &mut TcpStream, buf: &[u8], netsim: &NetSim) -> std::io::Result<()> {
+    let fault = netsim.chaos().and_then(|p| p.next_frame_fault());
+    match fault {
+        None | Some(Fault::PauseMs(_)) => proto::write_frame(stream, buf),
+        Some(Fault::StallMs(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            proto::write_frame(stream, buf)
+        }
+        Some(Fault::Reset) => {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "chaos: connection reset instead of frame write",
+            ))
+        }
+        Some(Fault::PartialFrame) => {
+            use std::io::Write as _;
+            let cut = (buf.len() / 2).max(1);
+            let _ = stream.write_all(&buf[..cut]);
+            let _ = stream.flush();
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionAborted,
+                "chaos: truncated frame then hangup",
+            ))
+        }
+        Some(Fault::Corrupt) => {
+            let mut bad = buf.to_vec();
+            if bad.len() > 12 {
+                // Frame layout: len(4) | req_id(8) | count-or-status(4)...
+                // Flipping the count/status byte breaks the frame's
+                // length-consistency, which the peer MUST reject; flipping
+                // req_id (misroute) or payload floats (wrong bits) would
+                // violate the battery's no-wrong-bits invariant.
+                bad[12] ^= 0xFF;
+            }
+            proto::write_frame(stream, &bad)
+        }
     }
 }
 
@@ -347,21 +466,22 @@ fn respond(out: &SharedWriter, netsim: &Arc<NetSim>, req_id: u64, result: Option
             .name("netsim-hop".into())
             .spawn(move || {
                 netsim.inject();
-                write_response(&out, &resp);
+                write_response(&out, &netsim, &resp);
             })
             .ok();
     } else {
-        write_response(out, &resp);
+        write_response(out, netsim, &resp);
     }
 }
 
-fn write_response(out: &SharedWriter, resp: &Response) {
+fn write_response(out: &SharedWriter, netsim: &NetSim, resp: &Response) {
     let mut buf = Vec::new();
     proto::encode_response(resp, &mut buf);
     let mut stream = out.lock().unwrap_or_else(PoisonError::into_inner);
-    // A write failure means the client hung up; it will be rediscovered by
-    // the connection reader, so it is ignorable here.
-    let _ = proto::write_frame(&mut *stream, &buf);
+    // A write failure means the client hung up (or the chaos plan cut the
+    // connection); it will be rediscovered by the connection reader, so it
+    // is ignorable here.
+    let _ = chaos_write(&mut stream, &buf, netsim);
 }
 
 /// Per-job streamed-frame writer. Without netsim, frames go straight to the
@@ -373,7 +493,10 @@ fn write_response(out: &SharedWriter, resp: &Response) {
 /// queue behind one another — but a chunk never overtakes its predecessor
 /// (and the terminator never overtakes a chunk).
 enum StreamOut {
-    Direct(SharedWriter),
+    Direct {
+        out: SharedWriter,
+        netsim: Arc<NetSim>,
+    },
     Paced {
         out: SharedWriter,
         netsim: Arc<NetSim>,
@@ -386,7 +509,10 @@ enum StreamOut {
 impl StreamOut {
     fn new(job: &Job) -> StreamOut {
         if !job.netsim.enabled() {
-            StreamOut::Direct(job.out.clone())
+            StreamOut::Direct {
+                out: job.out.clone(),
+                netsim: job.netsim.clone(),
+            }
         } else {
             StreamOut::Paced {
                 out: job.out.clone(),
@@ -398,11 +524,11 @@ impl StreamOut {
 
     fn send(&self, buf: Vec<u8>) {
         match self {
-            StreamOut::Direct(out) => {
+            StreamOut::Direct { out, netsim } => {
                 let mut stream = out.lock().unwrap_or_else(PoisonError::into_inner);
                 // A write failure means the client hung up; the connection
                 // reader rediscovers that, so it is ignorable here.
-                let _ = proto::write_frame(&mut *stream, &buf);
+                let _ = chaos_write(&mut stream, &buf, netsim);
             }
             StreamOut::Paced { out, netsim, tx } => {
                 let sender = tx.get_or_init(|| {
@@ -427,7 +553,7 @@ impl StreamOut {
                                 }
                                 let mut stream =
                                     out.lock().unwrap_or_else(PoisonError::into_inner);
-                                let _ = proto::write_frame(&mut *stream, &frame);
+                                let _ = chaos_write(&mut stream, &frame, &netsim);
                             }
                         })
                         .ok();
@@ -463,6 +589,7 @@ fn stream_batch(
     rows: &[f32],
     n: usize,
     row_len: usize,
+    deadline: Option<Deadline>,
     jobs: &[Job],
     metrics: &ServeMetrics,
 ) -> bool {
@@ -520,7 +647,7 @@ fn stream_batch(
             }
         }
     };
-    backend.predict_streamed(rows, n, row_len, &sink)
+    backend.predict_streamed_deadline(rows, n, row_len, deadline, &sink)
 }
 
 struct Queue {
@@ -704,6 +831,7 @@ fn admit(req: Request, queue: Arc<Queue>, out: SharedWriter, netsim: Arc<NetSim>
                 .shutdown(std::net::Shutdown::Both);
             return;
         }
+        let deadline = req.deadline();
         jobs.push_back(Job {
             req_id: req.req_id,
             rows: req.rows,
@@ -711,6 +839,7 @@ fn admit(req: Request, queue: Arc<Queue>, out: SharedWriter, netsim: Arc<NetSim>
             row_len: req.row_len as usize,
             out,
             netsim,
+            deadline,
         });
     }
     queue.avail.notify_one();
@@ -769,6 +898,31 @@ fn batcher_loop(
             }
         }
 
+        // Chaos pause gate: a scripted server pause holds every batcher
+        // worker here — admission keeps running, execution stalls.
+        if let Some(plan) = batch[0].netsim.chaos() {
+            plan.wait_if_paused();
+        }
+
+        // Shed jobs whose deadline already passed: an error frame now beats
+        // an answer nobody is waiting for (the client gave up at its own
+        // deadline), and the backend capacity goes to live requests.
+        batch.retain(|job| {
+            if job.deadline.is_some_and(|d| d.expired()) {
+                metrics.deadline_shed_rows.fetch_add(job.n as u64, Ordering::Relaxed);
+                metrics
+                    .deadline_shed_requests
+                    .fetch_add(1, Ordering::Relaxed);
+                job.respond(None);
+                false
+            } else {
+                true
+            }
+        });
+        if batch.is_empty() {
+            continue;
+        }
+
         // All jobs in a batch must share row_len (they do: one model per
         // service); split by row_len defensively.
         batch.sort_by_key(|j| j.row_len);
@@ -783,6 +937,17 @@ fn batcher_loop(
                 n += batch[j].n;
                 j += 1;
             }
+            // Deadline for the fused execution: the LATEST deadline among
+            // the co-batched jobs, and only when every job carries one —
+            // shedding mid-execution on an early co-tenant's deadline would
+            // sacrifice rows whose owners are still waiting. Exact for
+            // single-job batches (the common case at max_wait = 0).
+            let exec_deadline = batch[i..j].iter().try_fold(None, |acc: Option<Deadline>, job| {
+                job.deadline.map(|d| match acc {
+                    Some(prev) if prev.instant() >= d.instant() => Some(prev),
+                    _ => Some(d),
+                })
+            }).flatten();
             // Streamed path first: chunk frames flow per completed shard
             // sub-range, each job's stream closing independently. The
             // catch_unwind mirrors the monolithic net below — a panicking
@@ -792,7 +957,15 @@ fn batcher_loop(
             if cfg.stream {
                 let t0 = Instant::now();
                 let streamed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    stream_batch(&*backend, &rows, n, row_len, &batch[i..j], &metrics)
+                    stream_batch(
+                        &*backend,
+                        &rows,
+                        n,
+                        row_len,
+                        exec_deadline,
+                        &batch[i..j],
+                        &metrics,
+                    )
                 }));
                 match streamed {
                     Ok(true) => {
@@ -818,7 +991,7 @@ fn batcher_loop(
             // worker dead the queue grows unserved forever (the service is
             // bricked), so the worker must survive anything.
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                backend.predict_checked(&rows, n, row_len)
+                backend.predict_checked_deadline(&rows, n, row_len, exec_deadline)
             }));
             metrics.backend_exec.record_duration(t0.elapsed());
             match result {
@@ -982,6 +1155,56 @@ mod tests {
     }
 
     #[test]
+    fn paused_batcher_sheds_expired_request_on_resume() {
+        use crate::rpc::{ChaosPlan, PredictOptions};
+        let metrics = Arc::new(ServeMetrics::new());
+        let ns = Arc::new(NetSim::with_chaos(
+            NetSimConfig::off(),
+            1,
+            ChaosPlan::new(0xC0),
+        ));
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(PanickyBackend),
+            ns.clone(),
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::ZERO,
+                workers: 1,
+                stream: false,
+            },
+            metrics.clone(),
+        )
+        .unwrap();
+        let client = RpcClient::connect(server.addr).unwrap();
+
+        // Hold the batcher at the chaos gate, admit a request whose 5ms
+        // budget expires during the pause, then release: the batcher must
+        // shed it (error frame + metric), never execute it.
+        ns.chaos().unwrap().pause();
+        let pending = client
+            .predict_async_opts(&[3.0, 0.0], 2, &PredictOptions::with_budget(Duration::from_millis(5)))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        ns.chaos().unwrap().resume();
+        let res = pending.wait();
+        assert!(res.is_err(), "expired request must error, got {res:?}");
+
+        // The shed is observable in ServeMetrics (poll: it lands just
+        // after resume, asynchronously to the client's own deadline).
+        let t0 = Instant::now();
+        while metrics.deadline_shed_requests.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "shed metric never recorded");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(metrics.deadline_shed_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.deadline_shed_rows.load(Ordering::Relaxed), 1);
+
+        // The worker survived the shed; an undeadlined request is served.
+        assert_eq!(client.predict(&[5.0, 0.0], 2).unwrap(), vec![5.0]);
+    }
+
+    #[test]
     fn malformed_frame_gets_error_frame_not_hangup() {
         let server = RpcServer::start(
             "127.0.0.1:0",
@@ -1001,12 +1224,12 @@ mod tests {
         bad.extend_from_slice(&41u64.to_le_bytes()); // req_id
         bad.extend_from_slice(&7u32.to_le_bytes()); // claims 7 rows
         bad.extend_from_slice(&3u32.to_le_bytes()); // of width 3
-        bad.extend_from_slice(&1.5f32.to_le_bytes()); // but carries 1 value
+        bad.extend_from_slice(&0u32.to_le_bytes()); // deadline: none — but no row data follows
         use std::io::Write as _;
         stream.write_all(&bad).unwrap();
         let mut good = Vec::new();
         proto::encode_request(
-            &Request { req_id: 42, row_len: 2, rows: vec![9.0, 0.0] },
+            &Request::new(42, 2, vec![9.0, 0.0]),
             &mut good,
         );
         proto::write_frame(&mut stream, &good).unwrap();
@@ -1176,7 +1399,7 @@ mod tests {
         stream.set_nodelay(true).unwrap();
         let mut buf = Vec::new();
         proto::encode_request(
-            &Request { req_id: 7, row_len: row_len as u32, rows },
+            &Request::new(7, row_len as u32, rows),
             &mut buf,
         );
         proto::write_frame(&mut stream, &buf).unwrap();
@@ -1258,7 +1481,7 @@ mod tests {
         let mut rows = vec![0.25f32; n * row_len];
         rows[150 * row_len] = f32::INFINITY; // poison row in task 128..192
         let mut buf = Vec::new();
-        proto::encode_request(&Request { req_id: 21, row_len: 4, rows }, &mut buf);
+        proto::encode_request(&Request::new(21, 4, rows), &mut buf);
         proto::write_frame(&mut stream, &buf).unwrap();
         let (probs, failed, failed_chunks) = read_stream(&mut stream, 21);
         assert_eq!(failed, vec![128..192], "exactly the poisoned task's span failed");
@@ -1270,7 +1493,7 @@ mod tests {
 
         // The same connection still serves full streams afterwards.
         let clean = vec![0.25f32; n * row_len];
-        proto::encode_request(&Request { req_id: 22, row_len: 4, rows: clean }, &mut buf);
+        proto::encode_request(&Request::new(22, 4, clean), &mut buf);
         proto::write_frame(&mut stream, &buf).unwrap();
         let (probs, failed, _) = read_stream(&mut stream, 22);
         assert!(failed.is_empty());

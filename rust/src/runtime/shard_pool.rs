@@ -65,6 +65,13 @@
 //!   reported as failed (to the sink too, mid-stream), the completion latch
 //!   still opens, and the worker keeps serving. The engine never wedges and
 //!   never loses a batch.
+//! * **Deadline shedding** — [`ShardPool::predict_spans_deadline`] attaches
+//!   a shed horizon to a batch's tasks: a sub-range still queued once it
+//!   passes completes as a *failed span* (counted in
+//!   [`ShardStats::deadline_shed`](crate::telemetry::ShardStats)) instead
+//!   of executing for a caller that stopped waiting. Running tasks are
+//!   never interrupted — rows are always fully computed or reported
+//!   failed, never partial.
 //! * **Multi-tenancy** — [`ShardPool::register`] adds models while the pool
 //!   is live; several `Coordinator`s (tenants) can share one pool, each
 //!   falling back to its own registered forest (the embedded multi-tenant
@@ -83,7 +90,7 @@ use std::mem::MaybeUninit;
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Handle to a forest registered in a [`ShardPool`] (multi-tenant: each
 /// tenant registers its own model and keeps its id).
@@ -158,6 +165,10 @@ struct Task {
     /// Row offset of this task inside the parent batch (failure reporting
     /// and streamed-span addressing).
     span_start: usize,
+    /// Shed horizon: a task still unstarted past this instant completes as
+    /// a failed span instead of executing (nobody is waiting for the
+    /// answer any more). `None` = run unconditionally.
+    deadline: Option<Instant>,
     batch: *const BatchLatch,
 }
 
@@ -532,7 +543,25 @@ impl ShardPool {
         row_len: usize,
         out: &mut [f32],
     ) -> Vec<Range<usize>> {
-        self.predict_inner(model, rows, row_len, out, None)
+        self.predict_inner(model, rows, row_len, out, None, None)
+    }
+
+    /// Deadline-aware [`ShardPool::predict_spans`]: sub-range tasks still
+    /// queued (not yet started) once `deadline` passes come back as failed
+    /// spans instead of executing — capacity goes to work someone is still
+    /// waiting for. Tasks already running are never interrupted, so rows
+    /// are always either fully computed (bit-identical) or reported failed
+    /// — never partially written. Sheds are counted in
+    /// [`ShardStats::deadline_shed`](crate::telemetry::ShardStats).
+    pub fn predict_spans_deadline(
+        &self,
+        model: ModelId,
+        rows: &[f32],
+        row_len: usize,
+        out: &mut [f32],
+        deadline: Option<Instant>,
+    ) -> Vec<Range<usize>> {
+        self.predict_inner(model, rows, row_len, out, deadline, None)
     }
 
     /// Like [`ShardPool::predict_spans`], additionally delivering every
@@ -549,7 +578,21 @@ impl ShardPool {
         out: &mut [f32],
         sink: SpanSink<'_>,
     ) -> Vec<Range<usize>> {
-        self.predict_inner(model, rows, row_len, out, Some(sink))
+        self.predict_inner(model, rows, row_len, out, None, Some(sink))
+    }
+
+    /// Deadline-aware [`ShardPool::predict_spans_streamed`] — shed spans
+    /// reach the sink as failed chunks, exactly like a panicked shard's.
+    pub fn predict_spans_streamed_deadline(
+        &self,
+        model: ModelId,
+        rows: &[f32],
+        row_len: usize,
+        out: &mut [f32],
+        deadline: Option<Instant>,
+        sink: SpanSink<'_>,
+    ) -> Vec<Range<usize>> {
+        self.predict_inner(model, rows, row_len, out, deadline, Some(sink))
     }
 
     fn predict_inner(
@@ -558,6 +601,7 @@ impl ShardPool {
         rows: &[f32],
         row_len: usize,
         out: &mut [f32],
+        deadline: Option<Instant>,
         sink: Option<SpanSink<'_>>,
     ) -> Vec<Range<usize>> {
         let n = out.len();
@@ -606,6 +650,7 @@ impl ShardPool {
                 n: len,
                 out: unsafe { out_ptr.add(start) },
                 span_start: start,
+                deadline,
                 batch: &latch,
             };
             self.submit_task(task, (base + ti) % self.n_shards);
@@ -690,17 +735,26 @@ fn run_task(task: Task, forest: &FlatForest, scratch: &mut ForestScratch, shared
     // writes this output range.
     let rows = unsafe { std::slice::from_raw_parts(task.rows, task.rows_len) };
     let out = unsafe { std::slice::from_raw_parts_mut(task.out, task.n) };
-    let t0 = std::time::Instant::now();
-    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        forest.predict_flat_rows(rows, task.row_len, scratch, out);
-    }));
-    // Recorded BEFORE the latch countdown: a submitter returning from
-    // `wait()` observes chunk timings that include its whole batch.
-    shared.stats.chunk_exec.record_duration(t0.elapsed());
-    let failed = r.is_err();
-    if failed {
-        shared.stats.shard_panics.fetch_add(1, Ordering::Relaxed);
-    }
+    // Deadline shed: a task whose horizon already passed completes as a
+    // failed span WITHOUT executing — its submitter stopped waiting, so
+    // computing the rows would serve nobody. Rows are thus always either
+    // fully computed or reported failed, never partially written.
+    let failed = if task.deadline.is_some_and(|d| Instant::now() >= d) {
+        shared.stats.deadline_shed.fetch_add(1, Ordering::Relaxed);
+        true
+    } else {
+        let t0 = Instant::now();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forest.predict_flat_rows(rows, task.row_len, scratch, out);
+        }));
+        // Recorded BEFORE the latch countdown: a submitter returning from
+        // `wait()` observes chunk timings that include its whole batch.
+        shared.stats.chunk_exec.record_duration(t0.elapsed());
+        if r.is_err() {
+            shared.stats.shard_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        r.is_err()
+    };
     let span = task.span_start..task.span_start + task.n;
     // SAFETY: the latch (and sink) outlive the submitter's wait; the sink
     // call plus `complete` are the LAST touches, `complete` strictly last
@@ -1410,6 +1464,71 @@ mod tests {
         assert_eq!(plain.stats().pin_failures.load(Ordering::Relaxed), 0);
     }
 
+    /// Deadline shedding: an already-expired deadline fails every span
+    /// without executing a row; a generous deadline changes nothing
+    /// (bit-identical to the undeadlined path); sheds are counted.
+    #[test]
+    fn expired_deadline_sheds_spans_without_executing() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 2,
+            min_task_rows: 16,
+            ..Default::default()
+        });
+        let id = pool.register(flat.clone());
+        let (rows, row_len) = flat_rows(&d, 200);
+
+        // Expired before submission: every span must come back failed and
+        // tile the batch; no row may be written.
+        let past = Instant::now() - Duration::from_millis(1);
+        let mut out = vec![-7.0f32; 200];
+        let failed = pool.predict_spans_deadline(id, &rows, row_len, &mut out, Some(past));
+        let covered: usize = failed.iter().map(Range::len).sum();
+        assert_eq!(covered, 200, "expired deadline fails every row: {failed:?}");
+        assert!(out.iter().all(|p| *p == -7.0), "shed spans never write output");
+        let shed = pool.stats().deadline_shed.load(Ordering::Relaxed);
+        assert!(shed > 0, "sheds must be counted");
+        assert_eq!(pool.stats().panics(), 0, "a shed is not a panic");
+
+        // Generous deadline: served fully, bit-identical to no deadline.
+        let far = Instant::now() + Duration::from_secs(60);
+        let mut with_deadline = vec![0f32; 200];
+        let failed = pool.predict_spans_deadline(id, &rows, row_len, &mut with_deadline, Some(far));
+        assert!(failed.is_empty());
+        let mut reference = vec![0f32; 200];
+        let mut scratch = ForestScratch::default();
+        flat.predict_flat_rows(&rows, row_len, &mut scratch, &mut reference);
+        for r in 0..200 {
+            assert_eq!(with_deadline[r].to_bits(), reference[r].to_bits(), "row {r}");
+        }
+        assert_eq!(
+            pool.stats().deadline_shed.load(Ordering::Relaxed),
+            shed,
+            "a live deadline sheds nothing"
+        );
+
+        // Streamed variant: shed spans reach the sink as failed chunks.
+        let seen: Mutex<Vec<(Range<usize>, bool)>> = Mutex::new(Vec::new());
+        let mut out = vec![0f32; 200];
+        let failed = pool.predict_spans_streamed_deadline(
+            id,
+            &rows,
+            row_len,
+            &mut out,
+            Some(Instant::now() - Duration::from_millis(1)),
+            &|span, probs, failed| {
+                assert!(probs.is_empty());
+                seen.lock().unwrap().push((span, failed));
+            },
+        );
+        let covered: usize = failed.iter().map(Range::len).sum();
+        assert_eq!(covered, 200);
+        let seen = seen.into_inner().unwrap();
+        assert!(seen.iter().all(|(_, f)| *f));
+        assert_eq!(seen.iter().map(|(s, _)| s.len()).sum::<usize>(), 200);
+    }
+
     #[test]
     fn queue_ring_push_pop_fifo_and_bounds() {
         // Direct ring test (no workers): FIFO within a single producer and
@@ -1424,6 +1543,7 @@ mod tests {
             n: 0,
             out: std::ptr::null_mut(),
             span_start: i,
+            deadline: None,
             batch: &latch,
         };
         for i in 0..4 {

@@ -91,6 +91,21 @@ pub struct ServeMetrics {
     /// Client side: block arrival → each fallback sub-span's completion
     /// (the per-chunk analogue of `block_rpc_complete`).
     pub block_span_complete: Histogram,
+    /// Failure model (PR 6). Rows/requests shed because their deadline
+    /// expired before execution (server batcher or shard pool).
+    pub deadline_shed_rows: AtomicU64,
+    pub deadline_shed_requests: AtomicU64,
+    /// Rows answered degraded (stage-1 prior or explicit error in place of
+    /// the full model) and the requests that contained at least one such
+    /// row. Degraded rows are NEVER double-counted as rpc_calls.
+    pub degraded_rows: AtomicU64,
+    pub degraded_requests: AtomicU64,
+    /// RPC attempts beyond the first (client retry loop).
+    pub rpc_retries: AtomicU64,
+    /// Circuit-breaker closed→open transitions observed by the serving
+    /// layer (copied from the client breaker at report time or bumped by
+    /// the coordinator when it observes a trip).
+    pub breaker_trips: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -131,6 +146,12 @@ impl ServeMetrics {
             &self.features_fetched,
             &self.rpc_bytes,
             &self.stream_chunks,
+            &self.deadline_shed_rows,
+            &self.deadline_shed_requests,
+            &self.degraded_rows,
+            &self.degraded_requests,
+            &self.rpc_retries,
+            &self.breaker_trips,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -196,6 +217,17 @@ impl ServeMetrics {
                 ));
             }
         }
+        let degraded_rows = self.degraded_rows.load(Ordering::Relaxed);
+        let shed_rows = self.deadline_shed_rows.load(Ordering::Relaxed);
+        let retries = self.rpc_retries.load(Ordering::Relaxed);
+        let trips = self.breaker_trips.load(Ordering::Relaxed);
+        if degraded_rows + shed_rows + retries + trips > 0 {
+            s.push_str(&format!(
+                "\ndegraded rows: {degraded_rows} (reqs: {})  deadline-shed rows: {shed_rows} (reqs: {})  retries: {retries}  breaker trips: {trips}",
+                self.degraded_requests.load(Ordering::Relaxed),
+                self.deadline_shed_requests.load(Ordering::Relaxed),
+            ));
+        }
         s
     }
 }
@@ -236,6 +268,9 @@ pub struct ShardStats {
     pub inline_runs: AtomicU64,
     /// Shard panics contained to their task span.
     pub shard_panics: AtomicU64,
+    /// Sub-range tasks shed on the shards because their deadline expired
+    /// before execution (the span completes as failed, never silently).
+    pub deadline_shed: AtomicU64,
     /// High-water mark of the total queued depth across the rings.
     pub queue_depth_hwm: AtomicU64,
     /// Per-chunk (sub-range task) execution latency on the shards — the
@@ -344,6 +379,10 @@ impl ShardStats {
             self.busy_shards(),
             self.queue_depth_hwm.load(Ordering::Relaxed),
         );
+        let shed = self.deadline_shed.load(Ordering::Relaxed);
+        if shed > 0 {
+            s.push_str(&format!(" deadline_shed={shed}"));
+        }
         let pin_failures = self.pin_failures.load(Ordering::Relaxed);
         if pin_failures > 0 || (0..self.n_shards()).any(|i| self.pinned_cpu(i).is_some()) {
             let pinned: Vec<String> = (0..self.n_shards())
@@ -489,6 +528,35 @@ mod tests {
         m.reset_all();
         assert_eq!(m.block_stage1_complete.count(), 0);
         assert_eq!(m.block_rpc_complete.count(), 0);
+    }
+
+    #[test]
+    fn failure_counters_reported_and_reset() {
+        let m = ServeMetrics::new();
+        assert!(!m.report().contains("degraded rows"), "quiet when clean");
+        m.degraded_rows.fetch_add(7, Ordering::Relaxed);
+        m.degraded_requests.fetch_add(2, Ordering::Relaxed);
+        m.deadline_shed_rows.fetch_add(3, Ordering::Relaxed);
+        m.deadline_shed_requests.fetch_add(1, Ordering::Relaxed);
+        m.rpc_retries.fetch_add(4, Ordering::Relaxed);
+        m.breaker_trips.fetch_add(1, Ordering::Relaxed);
+        let rep = m.report();
+        assert!(rep.contains("degraded rows: 7 (reqs: 2)"), "{rep}");
+        assert!(rep.contains("deadline-shed rows: 3 (reqs: 1)"), "{rep}");
+        assert!(rep.contains("retries: 4"), "{rep}");
+        assert!(rep.contains("breaker trips: 1"), "{rep}");
+        m.reset_all();
+        assert_eq!(m.degraded_rows.load(Ordering::Relaxed), 0);
+        assert_eq!(m.breaker_trips.load(Ordering::Relaxed), 0);
+        assert!(!m.report().contains("degraded rows"));
+    }
+
+    #[test]
+    fn shard_deadline_shed_in_report_when_nonzero() {
+        let s = ShardStats::new(2);
+        assert!(!s.report().contains("deadline_shed"));
+        s.deadline_shed.fetch_add(5, Ordering::Relaxed);
+        assert!(s.report().contains("deadline_shed=5"), "{}", s.report());
     }
 
     #[test]

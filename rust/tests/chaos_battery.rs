@@ -1,0 +1,489 @@
+//! Chaos fault-injection battery for the serving stack's failure model.
+//!
+//! Every scenario drives the REAL client/server/coordinator stack through a
+//! scripted [`ChaosPlan`] (or a hand-rolled raw socket) and proves the three
+//! failure invariants end to end:
+//!
+//! 1. **No hang**: every call completes — success or error — within a
+//!    bounded wall clock, never by waiting out a fault forever.
+//! 2. **No wrong bits**: every delivered probability is bit-identical to
+//!    the fault-free computation; faults surface structurally (errors,
+//!    degraded outcomes), never as silently corrupted values.
+//! 3. **Exact accounting**: every submitted row is answered exactly once —
+//!    as a stage-1 hit, a second-stage (RPC) answer, a degraded answer, or
+//!    an explicit error — and the `ServeMetrics` counters reconcile with
+//!    the per-row outcomes the caller observed.
+//!
+//! Fault plans are index-addressed and seeded, and each test prints its
+//! plan seed, so a failing run is replayable exactly.
+
+use lrwbins::coordinator::{Coordinator, DegradeMode, Served};
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams, ServingTables};
+use lrwbins::rpc::netsim::{ChaosPlan, Fault, NetSim, NetSimConfig};
+use lrwbins::rpc::server::{Backend, BatcherConfig, RpcServer};
+use lrwbins::rpc::{ClientConfig, PredictOptions, RetryPolicy, RpcClient};
+use lrwbins::telemetry::ServeMetrics;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Deterministic pure-function backend: prob of a row is `row[0] + 0.5`.
+/// Expected bits are computable in-test without training anything.
+struct EchoBackend;
+
+impl Backend for EchoBackend {
+    fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+        (0..n).map(|r| rows[r * row_len] + 0.5).collect()
+    }
+    fn row_len(&self) -> usize {
+        0
+    }
+}
+
+/// Echo backend that holds every batch for `ms` — keeps requests in flight
+/// long enough for chaos to strike mid-service.
+struct SlowEchoBackend {
+    ms: u64,
+}
+
+impl Backend for SlowEchoBackend {
+    fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+        std::thread::sleep(Duration::from_millis(self.ms));
+        (0..n).map(|r| rows[r * row_len] + 0.5).collect()
+    }
+    fn row_len(&self) -> usize {
+        0
+    }
+}
+
+fn chaos_server(backend: Arc<dyn Backend>, seed: u64) -> (RpcServer, Arc<NetSim>) {
+    let plan = ChaosPlan::new(seed);
+    let ns = Arc::new(NetSim::with_chaos(NetSimConfig::off(), seed, plan));
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        backend,
+        ns.clone(),
+        BatcherConfig {
+            workers: 1,
+            ..Default::default()
+        },
+        Arc::new(ServeMetrics::new()),
+    )
+    .expect("chaos server");
+    (server, ns)
+}
+
+fn fast_retry_client(addr: std::net::SocketAddr) -> RpcClient {
+    RpcClient::connect_with(
+        addr,
+        ClientConfig {
+            timeout: Duration::from_secs(5),
+            retry: RetryPolicy {
+                max_retries: 3,
+                base_backoff: Duration::from_millis(1),
+                max_backoff: Duration::from_millis(20),
+                jitter: 0.5,
+            },
+            ..Default::default()
+        },
+    )
+    .expect("client")
+}
+
+/// Invariants 1 + 2, one scripted fault at a time: a connection reset, a
+/// write stall, a truncated frame, and a corrupted count header each strike
+/// one response mid-run. The retry policy must absorb every one of them —
+/// all requests answer bit-identically to the fault-free function, within a
+/// bounded wall clock, and the plan confirms the fault actually fired.
+#[test]
+fn scripted_faults_absorbed_no_hang_no_wrong_bits() {
+    const SEED: u64 = 0xBA77E41;
+    for fault in [Fault::Reset, Fault::StallMs(30), Fault::PartialFrame, Fault::Corrupt] {
+        println!("chaos scenario: seed={SEED:#x} fault={fault:?} @ frame 2");
+        let (server, ns) = chaos_server(Arc::new(EchoBackend), SEED);
+        ns.chaos().unwrap().script(2, fault);
+        let client = fast_retry_client(server.addr);
+        let t0 = Instant::now();
+        for i in 0..8u32 {
+            let v = i as f32;
+            let probs = client
+                .predict(&[v, 0.0], 2)
+                .unwrap_or_else(|e| panic!("fault {fault:?}, request {i}: {e}"));
+            assert_eq!(
+                probs[0].to_bits(),
+                (v + 0.5).to_bits(),
+                "fault {fault:?}, request {i}: wrong bits"
+            );
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "fault {fault:?}: battery stalled ({:?})",
+            t0.elapsed()
+        );
+        assert_eq!(
+            ns.chaos()
+                .unwrap()
+                .injected
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "fault {fault:?} was scripted but never fired"
+        );
+        drop(client);
+        drop(server);
+    }
+}
+
+/// A scripted `PauseMs` stalls the batcher; a deadline-carrying request
+/// caught behind the pause is shed server-side (counted in `ServeMetrics`)
+/// and refused client-side by its own budget — and the stack serves clean
+/// requests normally once the pause expires. Invariants 1 and 3 for the
+/// deadline path.
+#[test]
+fn timed_pause_sheds_deadline_work_then_recovers() {
+    const SEED: u64 = 0x9A05E;
+    println!("chaos scenario: seed={SEED:#x} fault=PauseMs(80) @ frame 0");
+    let metrics = Arc::new(ServeMetrics::new());
+    let plan = ChaosPlan::new(SEED);
+    plan.script(0, Fault::PauseMs(80));
+    let ns = Arc::new(NetSim::with_chaos(NetSimConfig::off(), SEED, plan));
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(EchoBackend),
+        ns.clone(),
+        BatcherConfig {
+            workers: 1,
+            ..Default::default()
+        },
+        metrics.clone(),
+    )
+    .expect("server");
+    let client = fast_retry_client(server.addr);
+
+    // Request 1 (clean) draws the PauseMs fault as its response is written.
+    assert_eq!(client.predict(&[1.0, 0.0], 2).unwrap(), vec![1.5]);
+    // Request 2 carries a 10ms budget into an 80ms pause: it must fail
+    // fast (client-side budget or server-side shed), never hang.
+    let t0 = Instant::now();
+    let r = client.predict_opts(
+        &[2.0, 0.0],
+        2,
+        &PredictOptions::with_budget(Duration::from_millis(10)),
+    );
+    assert!(r.is_err(), "10ms budget cannot survive an 80ms pause");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "deadline failure must be prompt, took {:?}",
+        t0.elapsed()
+    );
+    // The server sheds the expired job once the pause lifts.
+    let shed_deadline = Instant::now() + Duration::from_secs(5);
+    while metrics
+        .deadline_shed_requests
+        .load(std::sync::atomic::Ordering::Relaxed)
+        == 0
+    {
+        assert!(
+            Instant::now() < shed_deadline,
+            "server never shed the expired request"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        metrics
+            .deadline_shed_rows
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 1
+    );
+    // Post-pause service is clean and bit-exact.
+    assert_eq!(client.predict(&[3.0, 0.0], 2).unwrap(), vec![3.5]);
+}
+
+/// Satellite 1 regression: the client's per-connection reader thread dies
+/// (server torn down) with 32 requests in flight. Every pending `req_id`
+/// must complete PROMPTLY — served answers bit-identical, the rest explicit
+/// errors — and every in-flight slot must be released. No wait may hang.
+#[test]
+fn reader_death_with_32_in_flight_completes_every_wait() {
+    // max_batch 8 caps how many rows the first (already-running) batch can
+    // serve, so tearing the server down mid-run MUST strand the rest.
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(SlowEchoBackend { ms: 150 }),
+        Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+        BatcherConfig {
+            max_batch: 8,
+            workers: 1,
+            ..Default::default()
+        },
+        Arc::new(ServeMetrics::new()),
+    )
+    .expect("server");
+    let client = RpcClient::connect_with(
+        server.addr,
+        ClientConfig {
+            timeout: Duration::from_secs(10),
+            retry: RetryPolicy::none(),
+            ..Default::default()
+        },
+    )
+    .expect("client");
+
+    let pendings: Vec<_> = (0..32)
+        .map(|i| {
+            let v = i as f32;
+            client.predict_async(&[v, 0.0], 2).expect("issue")
+        })
+        .collect();
+    // Tear the server down while the batches sleep: server-side sockets
+    // close, every client reader sees EOF mid-stream and must
+    // error-complete its whole pending table.
+    std::thread::sleep(Duration::from_millis(30));
+    drop(server);
+
+    let t0 = Instant::now();
+    let mut ok = 0u32;
+    let mut err = 0u32;
+    for (i, p) in pendings.into_iter().enumerate() {
+        match p.wait() {
+            Ok(probs) => {
+                assert_eq!(
+                    probs[0].to_bits(),
+                    (i as f32 + 0.5).to_bits(),
+                    "request {i}: wrong bits"
+                );
+                ok += 1;
+            }
+            Err(_) => err += 1,
+        }
+    }
+    assert_eq!(ok + err, 32, "every request accounted exactly once");
+    assert!(err > 0, "tearing the server down mid-flight must error some");
+    assert!(
+        t0.elapsed() < Duration::from_secs(15),
+        "waits must fail fast on reader death, took {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(client.total_in_flight(), 0, "all in-flight slots released");
+}
+
+/// Satellite 2: a streamed response truncated mid-chunk (raw socket writes
+/// one valid CHUNK frame, then half of the next and hangs up). The stream
+/// assembler must surface the early end as an error for the remaining spans
+/// — promptly, never a hang — while rows the valid chunk delivered polled
+/// out bit-exact.
+#[test]
+fn truncated_stream_mid_chunk_errors_promptly_never_hangs() {
+    use lrwbins::rpc::proto::{encode_chunk, Chunk};
+    use std::io::{Read, Write};
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let (mut sock, _) = listener.accept().expect("accept");
+        // Read the request frame: u32 len, then the payload.
+        let mut len = [0u8; 4];
+        sock.read_exact(&mut len).expect("len");
+        let mut payload = vec![0u8; u32::from_le_bytes(len) as usize];
+        sock.read_exact(&mut payload).expect("payload");
+        let req_id = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+        // One valid chunk for rows 0..8...
+        let mut buf = Vec::new();
+        encode_chunk(
+            &Chunk {
+                req_id,
+                row_start: 0,
+                n_rows: 8,
+                failed: false,
+                probs: (0..8).map(|r| r as f32).collect(),
+            },
+            &mut buf,
+        );
+        sock.write_all(&buf).expect("chunk 1");
+        // ...then HALF of the next chunk's bytes, and hang up.
+        encode_chunk(
+            &Chunk {
+                req_id,
+                row_start: 8,
+                n_rows: 8,
+                failed: false,
+                probs: (8..16).map(|r| r as f32).collect(),
+            },
+            &mut buf,
+        );
+        sock.write_all(&buf[..buf.len() / 2]).expect("partial chunk");
+        let _ = sock.flush();
+        drop(sock);
+    });
+
+    let client = RpcClient::connect_with(
+        addr,
+        ClientConfig {
+            timeout: Duration::from_secs(5),
+            retry: RetryPolicy::none(),
+            ..Default::default()
+        },
+    )
+    .expect("client");
+    let rows: Vec<f32> = (0..16).flat_map(|r| [r as f32, 0.0]).collect();
+    let mut pending = client.predict_async(&rows, 2).expect("issue");
+
+    // Drain whatever the intact chunk delivered before the truncation
+    // kills the stream; delivered rows must be bit-exact.
+    let poll_deadline = Instant::now() + Duration::from_secs(2);
+    let mut polled_rows = 0usize;
+    while Instant::now() < poll_deadline {
+        for span in pending.poll_spans() {
+            assert!(!span.failed);
+            for (k, p) in span.probs.iter().enumerate() {
+                assert_eq!(
+                    p.to_bits(),
+                    ((span.span.start + k) as f32).to_bits(),
+                    "polled span delivered wrong bits"
+                );
+                polled_rows += 1;
+            }
+        }
+        if polled_rows >= 8 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // The join must error out promptly — the remaining span can never
+    // arrive and the assembler must say so instead of waiting forever.
+    let t0 = Instant::now();
+    let r = pending.wait();
+    assert!(r.is_err(), "truncated stream must surface as an error");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "truncation error must be prompt, took {:?}",
+        t0.elapsed()
+    );
+    fake.join().expect("fake server");
+}
+
+/// Invariant 3 end to end, through the coordinator: scripted faults strike
+/// a live multistage rig while a breaker drill forces a degraded phase.
+/// Every submitted row comes back exactly once as stage-1 / RPC / degraded,
+/// every delivered bit matches its fault-free reference, and the metrics
+/// reconcile with the caller-observed outcome counts.
+#[test]
+fn every_row_accounted_exactly_once_under_chaos() {
+    const SEED: u64 = 0xACC0;
+    println!("chaos scenario: seed={SEED:#x} faults=Reset@3, StallMs(20)@6, Corrupt@10");
+    let spec = datagen::preset("aci").unwrap().with_rows(4000);
+    let data = datagen::generate(&spec, 5);
+    let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+    let mut first = LrwBinsModel::train(
+        &data,
+        &ranking.order,
+        &LrwBinsParams {
+            b: 2,
+            n_bin_features: 3,
+            n_infer_features: 6,
+            ..Default::default()
+        },
+    );
+    let route: std::collections::HashSet<u32> =
+        first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+    first.set_route(route);
+    let model = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::quick());
+
+    let plan = ChaosPlan::new(SEED);
+    plan.script(3, Fault::Reset);
+    plan.script(6, Fault::StallMs(20));
+    plan.script(10, Fault::Corrupt);
+    let metrics = Arc::new(ServeMetrics::new());
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(lrwbins::rpc::server::NativeBackend::new(model.clone())),
+        Arc::new(NetSim::with_chaos(NetSimConfig::off(), SEED, plan)),
+        BatcherConfig::default(),
+        metrics.clone(),
+    )
+    .expect("server");
+    let mut coord = Coordinator::new(
+        ServingTables::from_model(&first),
+        Some(fast_retry_client(server.addr)),
+        0,
+        metrics.clone(),
+    );
+    coord.degrade = DegradeMode::Stage1Prior;
+
+    let mut s1 = 0u64;
+    let mut rpc = 0u64;
+    let mut deg = 0u64;
+    let mut row = Vec::new();
+    let t0 = Instant::now();
+    // Phase 1: healthy service under scripted transport faults — retries
+    // absorb them; no degraded answers, no wrong bits.
+    for r in 0..60 {
+        data.row_into(r, &mut row);
+        let (p1_ref, _) = coord.tables.evaluate(&row);
+        let (p, served) = coord.predict(&row).expect("phase 1 serve");
+        match served {
+            Served::Stage1 => {
+                assert_eq!(p.to_bits(), p1_ref.to_bits(), "row {r}: stage-1 bits");
+                s1 += 1;
+            }
+            Served::Rpc => {
+                assert_eq!(
+                    p.to_bits(),
+                    model.predict_one(&data.row(r)).to_bits(),
+                    "row {r}: second-stage bits under chaos"
+                );
+                rpc += 1;
+            }
+            Served::Degraded => deg += 1,
+        }
+    }
+    // Phase 2: breaker drill — forced open, misses degrade to the prior.
+    coord.rpc_client().unwrap().breaker().force_open();
+    for r in 60..120 {
+        data.row_into(r, &mut row);
+        let (p1_ref, _) = coord.tables.evaluate(&row);
+        let (p, served) = coord.predict(&row).expect("phase 2 serve");
+        match served {
+            Served::Stage1 => s1 += 1,
+            Served::Rpc => panic!("row {r}: rpc answer through an open breaker"),
+            Served::Degraded => {
+                assert_eq!(p.to_bits(), p1_ref.to_bits(), "row {r}: degraded bits");
+                deg += 1;
+            }
+        }
+    }
+    assert!(deg > 0, "the drill must degrade some rows");
+    // Phase 3: breaker closed — full service resumes.
+    coord.rpc_client().unwrap().breaker().force_close();
+    for r in 120..160 {
+        data.row_into(r, &mut row);
+        let (p, served) = coord.predict(&row).expect("phase 3 serve");
+        match served {
+            Served::Stage1 => s1 += 1,
+            Served::Rpc => {
+                assert_eq!(p.to_bits(), model.predict_one(&data.row(r)).to_bits());
+                rpc += 1;
+            }
+            Served::Degraded => panic!("row {r}: degraded after force_close"),
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "battery stalled: {:?}",
+        t0.elapsed()
+    );
+
+    // Conservation + reconciliation: rows in == outcomes out == metrics.
+    use std::sync::atomic::Ordering;
+    assert_eq!(s1 + rpc + deg, 160, "every row accounted exactly once");
+    assert_eq!(metrics.stage1_hits.load(Ordering::Relaxed), s1);
+    assert_eq!(metrics.rpc_calls.load(Ordering::Relaxed), rpc);
+    assert_eq!(metrics.degraded_rows.load(Ordering::Relaxed), deg);
+    assert!(rpc > 0, "chaos phases must still serve second-stage rows");
+    println!(
+        "accounted: stage1={s1} rpc={rpc} degraded={deg} retries={} breaker_trips={}",
+        metrics.rpc_retries.load(Ordering::Relaxed),
+        metrics.breaker_trips.load(Ordering::Relaxed),
+    );
+}

@@ -11,7 +11,7 @@
 //! Run with `--test-threads` > 1 (the verify recipe forces it) so these
 //! interleave with the rest of the suite too.
 
-use lrwbins::coordinator::Coordinator;
+use lrwbins::coordinator::{Coordinator, DegradeMode, Served};
 use lrwbins::datagen;
 use lrwbins::features::{rank_features, RankMethod};
 use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams, ServingTables};
@@ -263,6 +263,118 @@ fn interleaved_streamed_responses_demux_and_reassemble_bit_for_bit() {
             >= (THREADS * ITERS) as u64,
         "expected chunked streams: {}",
         metrics.stream_chunks.load(std::sync::atomic::Ordering::Relaxed)
+    );
+}
+
+/// Degraded-mode storm (the failure-model stress leg): N threads hammer the
+/// block path while the main thread FORCES the circuit breaker open mid-run
+/// under `DegradeMode::Stage1Prior`. Every result row — whatever phase its
+/// block straddled — must be one of exactly three things, each bit-exact:
+/// a stage-1 hit identical to the healthy sync baseline, a second-stage
+/// answer identical to the baseline's, or a degraded answer identical to
+/// the row's stage-1 prior. The degraded row count observed by callers must
+/// reconcile exactly with `ServeMetrics::degraded_rows`, and nothing may
+/// hang: an open breaker fails fast, it does not queue.
+#[test]
+fn degraded_storm_breaker_forced_open_mid_run_stays_bit_exact() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let mut rig = build_rig();
+    rig.coordinator.degrade = DegradeMode::Stage1Prior;
+    let rig = rig; // freeze
+
+    // Healthy references, computed serially before any chaos:
+    //  - per-window sync block results (stage-1 + second-stage bits),
+    //  - per-row stage-1 priors (what a degraded row must answer).
+    let sync_blocks: Vec<Vec<(u32, Served)>> = (0..N_ROWS - WINDOW)
+        .map(|start| {
+            let rows: Vec<Vec<f32>> = (start..start + WINDOW).map(|r| rig.data.row(r)).collect();
+            rig.coordinator
+                .predict_block(&RowBlock::from_rows(&rows))
+                .expect("sync baseline")
+                .into_iter()
+                .map(|(p, s)| (p.to_bits(), s))
+                .collect()
+        })
+        .collect();
+    let priors: Vec<u32> = (0..N_ROWS)
+        .map(|r| rig.coordinator.tables.evaluate(&rig.data.row(r)).0.to_bits())
+        .collect();
+    let degraded_base = rig
+        .coordinator
+        .metrics
+        .degraded_rows
+        .load(Ordering::Relaxed);
+
+    let observed_degraded = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let rig = &rig;
+            let sync_blocks = &sync_blocks;
+            let priors = &priors;
+            let observed_degraded = &observed_degraded;
+            s.spawn(move || {
+                for i in 0..ITERS {
+                    let start = window_start(t, i);
+                    let rows: Vec<Vec<f32>> =
+                        (start..start + WINDOW).map(|r| rig.data.row(r)).collect();
+                    let got = rig
+                        .coordinator
+                        .predict_block(&RowBlock::from_rows(&rows))
+                        .expect("degraded mode must answer, not error");
+                    let want = &sync_blocks[start];
+                    assert_eq!(got.len(), WINDOW);
+                    for (k, (p, served)) in got.iter().enumerate() {
+                        match served {
+                            Served::Stage1 => {
+                                assert_eq!(want[k].1, Served::Stage1, "t{t} i{i} row {k}");
+                                assert_eq!(
+                                    p.to_bits(),
+                                    want[k].0,
+                                    "t{t} i{i} row {k}: stage-1 bits drifted under chaos"
+                                );
+                            }
+                            Served::Rpc => {
+                                assert_eq!(want[k].1, Served::Rpc, "t{t} i{i} row {k}");
+                                assert_eq!(
+                                    p.to_bits(),
+                                    want[k].0,
+                                    "t{t} i{i} row {k}: second-stage bits drifted"
+                                );
+                            }
+                            Served::Degraded => {
+                                // Only a would-be miss can degrade, and it
+                                // must answer exactly its stage-1 prior.
+                                assert_eq!(want[k].1, Served::Rpc, "t{t} i{i} row {k}");
+                                assert_eq!(
+                                    p.to_bits(),
+                                    priors[start + k],
+                                    "t{t} i{i} row {k}: degraded row must carry the prior"
+                                );
+                                observed_degraded.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        // Mid-run breaker drill: force open partway through the storm and
+        // hold it open to the end, so late blocks MUST degrade.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        rig.coordinator.rpc_client().unwrap().breaker().force_open();
+    });
+
+    let observed = observed_degraded.load(Ordering::Relaxed);
+    assert!(observed > 0, "the drill must have degraded some rows");
+    let counted = rig
+        .coordinator
+        .metrics
+        .degraded_rows
+        .load(Ordering::Relaxed)
+        - degraded_base;
+    assert_eq!(
+        counted, observed,
+        "ServeMetrics degraded rows must reconcile with caller-observed outcomes"
     );
 }
 
