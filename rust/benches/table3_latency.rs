@@ -254,4 +254,180 @@ fn main() {
         );
     }
     stack.coordinator.degrade = lrwbins::coordinator::DegradeMode::Fail;
+
+    connection_scaling(quick);
+}
+
+/// --- Connection scaling (epoll reactor vs thread-per-connection) ----------
+/// N idle-but-open raw connections each push one verified echo request, then
+/// a fresh probe connection measures sequential RTTs while the flood holds
+/// open — the tail of those RTTs is what per-connection dispatch overhead
+/// costs at that connection count. Raw sockets on purpose: `RpcClient`
+/// spawns a reader thread per connection, which would drown the thread-count
+/// column. The threaded path is skipped above 1k connections — it needs ~2
+/// threads per connection, and demonstrating that wall is the point.
+fn connection_scaling(quick: bool) {
+    use lrwbins::rpc::netsim::{NetSim, NetSimConfig};
+    use lrwbins::rpc::proto::{self, ClientFrame, Request};
+    use lrwbins::rpc::server::{Backend, BatcherConfig, RpcServer};
+    use lrwbins::telemetry::ServeMetrics;
+    use std::io::Write;
+    use std::net::TcpStream;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    /// Pure-function echo: prob of a row is `row[0] + 0.5`, verifiable
+    /// without a trained model.
+    struct Echo;
+    impl Backend for Echo {
+        fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+            (0..n).map(|r| rows[r * row_len] + 0.5).collect()
+        }
+        fn row_len(&self) -> usize {
+            0
+        }
+    }
+
+    /// Best-effort `RLIMIT_NOFILE` raise; returns the effective soft limit.
+    fn raise_nofile(needed: u64) -> u64 {
+        // SAFETY: get/setrlimit on our own process with a stack rlimit.
+        unsafe {
+            let mut rl = libc::rlimit { rlim_cur: 0, rlim_max: 0 };
+            if libc::getrlimit(libc::RLIMIT_NOFILE, &mut rl) != 0 {
+                return 0;
+            }
+            if rl.rlim_cur < needed {
+                let bumped = libc::rlimit {
+                    rlim_cur: needed.min(rl.rlim_max),
+                    rlim_max: rl.rlim_max,
+                };
+                if libc::setrlimit(libc::RLIMIT_NOFILE, &bumped) == 0 {
+                    rl.rlim_cur = bumped.rlim_cur;
+                }
+            }
+            rl.rlim_cur
+        }
+    }
+
+    fn thread_count() -> usize {
+        std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+    }
+
+    fn connect_retry(addr: std::net::SocketAddr) -> TcpStream {
+        for _ in 0..200 {
+            if let Ok(s) = TcpStream::connect(addr) {
+                s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                s.set_nodelay(true).ok();
+                return s;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("could not connect to {addr}");
+    }
+
+    /// One complete single-row reply, monolithic or chunked.
+    fn read_one(stream: &mut TcpStream) -> Vec<f32> {
+        let mut streamed = None;
+        loop {
+            match proto::read_client_frame(stream).expect("frame").expect("server closed") {
+                ClientFrame::Response(r) => {
+                    assert!(!r.error, "echo request answered with an error frame");
+                    return r.probs;
+                }
+                ClientFrame::Chunk(c) => {
+                    assert!(!c.failed);
+                    streamed = Some(c.probs);
+                }
+                ClientFrame::StreamEnd { .. } => return streamed.expect("chunk before end"),
+            }
+        }
+    }
+
+    println!("\n# Connection scaling — epoll reactor vs thread-per-connection\n");
+    println!("| connections | path | RTT p50 | RTT p99 | process threads |");
+    println!("|---|---|---|---|---|");
+    const WORKERS: usize = 16;
+    let rtt_samples = if quick { 100 } else { 300 };
+    let conn_counts: &[usize] = if quick { &[100] } else { &[100, 1_000, 10_000] };
+    for &n_conns in conn_counts {
+        for reactor in [true, false] {
+            let path = if reactor { "reactor" } else { "threaded" };
+            if !reactor && n_conns > 1_000 {
+                println!(
+                    "| {n_conns} | {path} | — | — | — (skipped: needs ~2×{n_conns} threads) |"
+                );
+                continue;
+            }
+            let needed = (2 * n_conns + 512) as u64;
+            if raise_nofile(needed) < needed {
+                println!("| {n_conns} | {path} | — | — | — (skipped: RLIMIT_NOFILE < {needed}) |");
+                continue;
+            }
+            let server = RpcServer::start(
+                "127.0.0.1:0",
+                Arc::new(Echo),
+                Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+                BatcherConfig { reactor, ..Default::default() },
+                Arc::new(ServeMetrics::new()),
+            )
+            .expect("scaling server");
+
+            // Open the flood from a small worker pool; every connection
+            // exchanges one verified request so it is provably live.
+            let slice = n_conns.div_ceil(WORKERS);
+            let conns: Vec<TcpStream> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..WORKERS)
+                    .map(|w| {
+                        let addr = server.addr;
+                        s.spawn(move || {
+                            let count = slice.min(n_conns.saturating_sub(w * slice));
+                            let mut buf = Vec::new();
+                            (0..count)
+                                .map(|j| {
+                                    let mut c = connect_retry(addr);
+                                    let v = (w * slice + j) as f32;
+                                    proto::encode_request(
+                                        &Request::new(1, 2, vec![v, 0.0]),
+                                        &mut buf,
+                                    );
+                                    c.write_all(&buf).expect("send");
+                                    let probs = read_one(&mut c);
+                                    assert_eq!(probs[0].to_bits(), (v + 0.5).to_bits());
+                                    c
+                                })
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            });
+            let threads = thread_count();
+
+            // Sequential RTT probe on a fresh connection while the flood
+            // stays open.
+            let mut probe = connect_retry(server.addr);
+            let mut buf = Vec::new();
+            let mut rtts: Vec<Duration> = (0..rtt_samples)
+                .map(|i| {
+                    proto::encode_request(&Request::new(i as u64, 2, vec![0.25, 0.0]), &mut buf);
+                    let t0 = Instant::now();
+                    probe.write_all(&buf).expect("probe send");
+                    let probs = read_one(&mut probe);
+                    assert_eq!(probs[0].to_bits(), 0.75f32.to_bits());
+                    t0.elapsed()
+                })
+                .collect();
+            rtts.sort_unstable();
+            println!(
+                "| {n_conns} | {path} | {} | {} | {threads} |",
+                fmt_ns(rtts[rtts.len() / 2].as_nanos() as f64),
+                fmt_ns(rtts[(rtts.len() * 99) / 100].as_nanos() as f64),
+            );
+            drop(conns);
+        }
+    }
+    println!(
+        "\nreactor: fixed event loops (threads are a property of the machine); \
+         threaded: ~2 threads per connection (reader + writer)."
+    );
 }

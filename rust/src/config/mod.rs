@@ -29,6 +29,16 @@ pub struct ServeConfig {
     pub max_batch: usize,
     pub max_wait_us: u64,
     pub workers: usize,
+    /// Server I/O path: `true` (default) runs the epoll reactor on Linux —
+    /// a fixed set of event loops for all connections; `false` forces the
+    /// legacy thread-per-connection path (the A/B baseline). Non-Linux
+    /// targets always use the threaded path regardless.
+    pub reactor: bool,
+    /// Reactor event-loop count; 0 = auto (min(4, available cores)).
+    pub reactor_loops: usize,
+    /// Per-connection write-queue bound, frames; producers block briefly
+    /// when a slow client fills it (backpressure).
+    pub write_queue_frames: usize,
     /// Simulated datacenter RTT (one way), microseconds; 0 disables.
     pub netsim_base_us: f64,
     pub netsim_sigma: f64,
@@ -64,6 +74,9 @@ impl Default for ServeConfig {
             max_batch: 128,
             max_wait_us: 200,
             workers: 2,
+            reactor: true,
+            reactor_loops: 0,
+            write_queue_frames: 1024,
             netsim_base_us: 250.0,
             netsim_sigma: 0.25,
             seed: 7,
@@ -89,6 +102,12 @@ impl ServeConfig {
         j.set("max_batch", Json::Num(self.max_batch as f64));
         j.set("max_wait_us", Json::Num(self.max_wait_us as f64));
         j.set("workers", Json::Num(self.workers as f64));
+        j.set("reactor", Json::Bool(self.reactor));
+        j.set("reactor_loops", Json::Num(self.reactor_loops as f64));
+        j.set(
+            "write_queue_frames",
+            Json::Num(self.write_queue_frames as f64),
+        );
         j.set("netsim_base_us", Json::Num(self.netsim_base_us));
         j.set("netsim_sigma", Json::Num(self.netsim_sigma));
         j.set("seed", Json::Num(self.seed as f64));
@@ -123,6 +142,9 @@ impl ServeConfig {
             max_batch: n("max_batch", d.max_batch as f64) as usize,
             max_wait_us: n("max_wait_us", d.max_wait_us as f64) as u64,
             workers: n("workers", d.workers as f64) as usize,
+            reactor: j.get("reactor").and_then(Json::as_bool).unwrap_or(d.reactor),
+            reactor_loops: n("reactor_loops", d.reactor_loops as f64) as usize,
+            write_queue_frames: n("write_queue_frames", d.write_queue_frames as f64) as usize,
             netsim_base_us: n("netsim_base_us", d.netsim_base_us),
             netsim_sigma: n("netsim_sigma", d.netsim_sigma),
             seed: n("seed", d.seed as f64) as u64,
@@ -197,6 +219,9 @@ impl ServeConfig {
         }
         if self.workers == 0 {
             return Err("workers must be > 0".into());
+        }
+        if self.write_queue_frames == 0 {
+            return Err("write_queue_frames must be > 0".into());
         }
         if self.breaker_failures == 0 {
             return Err("breaker_failures must be > 0 (use a huge value to disable)".into());
@@ -320,6 +345,29 @@ mod tests {
         let opts = c2.predict_options();
         assert!(opts.deadline.is_some());
         assert!(ServeConfig::default().predict_options().deadline.is_none());
+    }
+
+    #[test]
+    fn reactor_knobs_roundtrip_and_validate() {
+        // Defaults: reactor on, auto loop count, bounded write queue.
+        let d = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(d.reactor);
+        assert_eq!(d.reactor_loops, 0);
+        assert_eq!(d.write_queue_frames, 1024);
+
+        let c = ServeConfig {
+            reactor: false,
+            reactor_loops: 3,
+            write_queue_frames: 64,
+            ..Default::default()
+        };
+        let c2 = ServeConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert!(!c2.reactor);
+        assert_eq!(c2.reactor_loops, 3);
+        assert_eq!(c2.write_queue_frames, 64);
+
+        let j = Json::parse(r#"{"write_queue_frames": 0}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -78,6 +78,9 @@ impl StackConfig {
                 max_batch: sc.max_batch,
                 max_wait: Duration::from_micros(sc.max_wait_us),
                 workers: sc.workers,
+                reactor: sc.reactor,
+                reactor_loops: sc.reactor_loops,
+                write_queue_frames: sc.write_queue_frames,
                 ..Default::default()
             },
             artifacts_dir: sc.artifacts_dir.clone(),

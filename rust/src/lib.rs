@@ -55,6 +55,45 @@
 //! tier bit-identical to the scalar path by construction (vectorized
 //! across rows; see [`lrwbins::tables`] and [`gbdt::flat`]).
 //!
+//! ## Event-driven server core (Linux)
+//!
+//! On Linux the RPC server's I/O is an **epoll reactor**
+//! (`rpc::reactor`, on by default; [`rpc::BatcherConfig`]`::reactor =
+//! false` forces the legacy thread-per-connection path for A/B runs):
+//!
+//! * **Loops** — one nonblocking acceptor plus a small fixed set of event
+//!   loops (`reactor_loops`, default `min(4, cores)`); accepted sockets are
+//!   handed round-robin to a loop and stay pinned to it for life. Thread
+//!   count is a function of the machine, not the connection count — 10k
+//!   concurrent connections run on the same handful of threads
+//!   (`tests/concurrency_stress.rs` C10K leg).
+//! * **Connection state machine** — each loop owns a slab of per-connection
+//!   states: an incremental [`rpc::proto::FrameDecoder`] accumulates
+//!   partial reads and yields complete request frames; decoded requests
+//!   hand off to the same dynamic batcher / shard pool as the threaded
+//!   path, so everything behind the socket is byte-for-byte identical.
+//! * **Write-queue backpressure** — responses and streamed
+//!   `CHUNK`/`STREAM_END` frames are enqueued on a **bounded**
+//!   per-connection write queue (`write_queue_frames`) and flushed by the
+//!   owning loop under writable-interest; a batcher worker that outruns a
+//!   slow client blocks briefly on the bound (counted as a backpressure
+//!   stall), and a connection that stays unwritable past the write timeout
+//!   is condemned — its queued frames and jobs error-complete and are
+//!   counted, never silently dropped.
+//! * **Simulated hop + chaos without threads** — `netsim` pacing becomes a
+//!   per-frame *due time* served by loop timers
+//!   ([`rpc::NetSim::due_after`], monotone per connection) instead of a
+//!   sleeping pacing thread per job, and `ChaosPlan` faults are drawn at
+//!   the reactor's flush point with the same per-frame indexing as the
+//!   threaded writer — the chaos battery runs every scenario on both paths.
+//! * **Failure-model mapping** — `deadline_us` still re-anchors when the
+//!   request is admitted (after its simulated inbound hop), expired work is
+//!   still shed pre-execution, error frames and per-span error chunks are
+//!   emitted unchanged, and a dead connection error-completes its in-flight
+//!   jobs (`dead_conn_jobs`) exactly like a dead reader thread did.
+//!   [`telemetry::ReactorStats`] exposes per-loop connection counts, epoll
+//!   wakeups, write-queue high-water marks, and backpressure stalls.
+//!
 //! ## Failure model
 //!
 //! The serving stack has an explicit request lifecycle under failure

@@ -981,6 +981,7 @@ mod tests {
                 max_wait: Duration::from_micros(100),
                 workers: 2,
                 stream: true,
+                ..Default::default()
             },
             metrics.clone(),
         )
@@ -1197,6 +1198,7 @@ mod tests {
                 max_wait: Duration::ZERO,
                 workers: 1, // one slow lane: responses trail far behind sends
                 stream: true,
+                ..Default::default()
             },
             Arc::new(ServeMetrics::new()),
         )

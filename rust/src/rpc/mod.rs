@@ -2,14 +2,23 @@
 //! inference.
 //!
 //! A real TCP service over a length-prefixed binary protocol (`proto`,
-//! including the streamed `CHUNK`/terminator frames), a dynamic batcher
-//! that coalesces concurrent requests into backend batches and **streams**
-//! sub-batch completions back per request (`server`), a pooled
+//! including the streamed `CHUNK`/terminator frames and a resumable
+//! [`FrameDecoder`](proto::FrameDecoder) for nonblocking reads), a dynamic
+//! batcher that coalesces concurrent requests into backend batches and
+//! **streams** sub-batch completions back per request (`server`), a pooled
 //! **pipelined** client (`client`) that multiplexes in-flight requests over
 //! shared connections, demultiplexes frames by `req_id`, and surfaces
 //! streamed spans incrementally, and a calibrated network-latency simulator
 //! (`netsim`) standing in for the datacenter hop the paper measures
 //! (DESIGN.md §6).
+//!
+//! On Linux the server's I/O runs on an **epoll reactor** (`reactor`): a
+//! small fixed set of event loops own every connection — incremental frame
+//! decode on readable, bounded per-connection write queues flushed on
+//! writable — so thread count stays flat as connections grow (the C10K
+//! path). `BatcherConfig::reactor = false` selects the legacy
+//! thread-per-connection path for A/B comparison; the wire protocol and
+//! batcher behind both paths are identical.
 //!
 //! The failure model lives in `fault` (per-request [`Deadline`]s carried in
 //! the request frames, [`RetryPolicy`] + retry budget, [`CircuitBreaker`])
@@ -21,6 +30,8 @@ pub mod client;
 pub mod fault;
 pub mod netsim;
 pub mod proto;
+#[cfg(target_os = "linux")]
+pub(crate) mod reactor;
 pub mod server;
 
 pub use client::{ClientConfig, FallbackSpan, PendingPredict, RpcClient, StreamOutcome};

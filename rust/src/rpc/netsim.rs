@@ -238,6 +238,20 @@ impl NetSim {
             std::thread::sleep(self.sample());
         }
     }
+
+    /// Deferred-flush due time for one simulated hop: `now + sample()`,
+    /// clamped monotone against `prev` so overlapping hops on the same
+    /// connection still deliver in order. The epoll reactor uses this
+    /// instead of sleeping threads — a frame (or a decoded request) carries
+    /// its due time and the event loop arms a timer, so thousands of
+    /// in-flight hops cost zero blocked threads.
+    pub fn due_after(&self, prev: Option<Instant>) -> Instant {
+        let due = Instant::now() + self.sample();
+        match prev {
+            Some(p) if p > due => p,
+            _ => due,
+        }
+    }
 }
 
 #[cfg(test)]

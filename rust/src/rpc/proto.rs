@@ -322,6 +322,37 @@ pub enum Inbound {
     Malformed { req_id: u64 },
 }
 
+/// Classify one honestly-framed inbound payload (the bytes after the length
+/// prefix). Shared by the blocking [`read_inbound`] reader and the resumable
+/// [`FrameDecoder`] so both paths parse bit-identically.
+fn parse_inbound_payload(payload: &[u8]) -> Inbound {
+    let len = payload.len();
+    if len < 20 {
+        let req_id = if len >= 8 { get_u64(payload, 0) } else { 0 };
+        return Inbound::Malformed { req_id };
+    }
+    let req_id = get_u64(payload, 0);
+    let n_rows = get_u32(payload, 8);
+    let row_len = get_u32(payload, 12);
+    let deadline_us = get_u32(payload, 16);
+    // u64 math: a hostile n_rows × row_len (e.g. the u32::MAX sentinel)
+    // must not overflow the expected-size check.
+    let expected = 20u64 + n_rows as u64 * row_len as u64 * 4;
+    if expected != len as u64 {
+        return Inbound::Malformed { req_id };
+    }
+    let mut rows = Vec::with_capacity(n_rows as usize * row_len as usize);
+    for c in payload[20..].chunks_exact(4) {
+        rows.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    Inbound::Req(Request {
+        req_id,
+        row_len,
+        deadline_us,
+        rows,
+    })
+}
+
 /// Read one request frame, leniently. `Ok(None)` = clean EOF; `Err` only
 /// for failures that desynchronize the stream (EOF mid-frame, a length
 /// prefix past [`MAX_FRAME`]) — content problems inside an honestly-sized
@@ -347,30 +378,72 @@ pub fn read_inbound(stream: &mut impl Read) -> std::io::Result<Option<Inbound>> 
             "truncated request",
         ));
     }
-    if len < 20 {
-        let req_id = if len >= 8 { get_u64(&payload, 0) } else { 0 };
-        return Ok(Some(Inbound::Malformed { req_id }));
+    Ok(Some(parse_inbound_payload(&payload)))
+}
+
+/// Resumable request-frame decoder for non-blocking reads: the reactor
+/// feeds whatever bytes `read()` produced (possibly splitting a frame at
+/// any byte boundary, possibly carrying several frames) via [`extend`],
+/// then drains complete frames with [`next_inbound`].
+///
+/// Parsing is bit-identical to [`read_inbound`]: both route honest-length
+/// payloads through the same classifier, so malformed-content handling and
+/// the fatal oversize-length check behave exactly like the blocking reader.
+/// EOF is the caller's concern (the reactor sees it as a 0-byte read);
+/// truncated frames simply stay pending here.
+///
+/// [`extend`]: FrameDecoder::extend
+/// [`next_inbound`]: FrameDecoder::next_inbound
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` — compacted once it outgrows the unread tail
+    /// so a long-lived connection's buffer never creeps.
+    pos: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
     }
-    let req_id = get_u64(&payload, 0);
-    let n_rows = get_u32(&payload, 8);
-    let row_len = get_u32(&payload, 12);
-    let deadline_us = get_u32(&payload, 16);
-    // u64 math: a hostile n_rows × row_len (e.g. the u32::MAX sentinel)
-    // must not overflow the expected-size check.
-    let expected = 20u64 + n_rows as u64 * row_len as u64 * 4;
-    if expected != len as u64 {
-        return Ok(Some(Inbound::Malformed { req_id }));
+
+    /// Bytes buffered but not yet decoded (a partial frame, or frames not
+    /// yet drained).
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.pos
     }
-    let mut rows = Vec::with_capacity(n_rows as usize * row_len as usize);
-    for c in payload[20..].chunks_exact(4) {
-        rows.push(f32::from_le_bytes(c.try_into().unwrap()));
+
+    /// Feed bytes received from the socket.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        if self.pos > 0 && self.pos >= self.buf.len().saturating_sub(self.pos) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
     }
-    Ok(Some(Inbound::Req(Request {
-        req_id,
-        row_len,
-        deadline_us,
-        rows,
-    })))
+
+    /// Decode the next complete frame, if one is buffered. `Ok(None)` =
+    /// need more bytes; `Err` = unrecoverable desync (length prefix past
+    /// [`MAX_FRAME`] — same fatal condition as [`read_inbound`]).
+    pub fn next_inbound(&mut self) -> std::io::Result<Option<Inbound>> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let len = get_u32(avail, 0) as usize;
+        if len > MAX_FRAME {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad frame length {len}"),
+            ));
+        }
+        if avail.len() < 4 + len {
+            return Ok(None);
+        }
+        let inbound = parse_inbound_payload(&avail[4..4 + len]);
+        self.pos += 4 + len;
+        Ok(Some(inbound))
+    }
 }
 
 /// Read one request frame, strictly: any malformed content is an error.
@@ -1042,6 +1115,132 @@ mod tests {
                     probs[r].to_bits()
                 );
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn frame_decoder_byte_at_a_time() {
+        // The adversarial split: every frame boundary AND every intra-frame
+        // boundary is exercised by feeding one byte per extend() call.
+        let mut wire = Vec::new();
+        let mut tmp = Vec::new();
+        encode_request(&Request::new(1, 2, vec![1.0, 2.0, 3.0, 4.0]), &mut tmp);
+        wire.extend_from_slice(&tmp);
+        encode_request(&Request { req_id: 2, row_len: 0, deadline_us: 0, rows: vec![] }, &mut tmp);
+        wire.extend_from_slice(&tmp); // a ping mid-stream
+        encode_request(&Request::new(3, 1, vec![9.0]), &mut tmp);
+        wire.extend_from_slice(&tmp);
+
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for &b in &wire {
+            dec.extend(&[b]);
+            while let Some(f) = dec.next_inbound().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 3);
+        match (&got[0], &got[1], &got[2]) {
+            (Inbound::Req(a), Inbound::Req(b), Inbound::Req(c)) => {
+                assert_eq!((a.req_id, a.n_rows()), (1, 2));
+                assert_eq!((b.req_id, b.n_rows()), (2, 0));
+                assert_eq!((c.req_id, c.rows.as_slice()), (3, &[9.0f32][..]));
+            }
+            other => panic!("unexpected decode {other:?}"),
+        }
+        assert_eq!(dec.pending_bytes(), 0, "stream fully drained");
+    }
+
+    #[test]
+    fn frame_decoder_oversize_length_is_fatal() {
+        let mut dec = FrameDecoder::new();
+        dec.extend(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert!(dec.next_inbound().is_err());
+    }
+
+    #[test]
+    fn frame_decoder_malformed_content_keeps_sync() {
+        // Same scenario as malformed_but_framed_request_is_answerable: an
+        // honest-length frame with inconsistent content, followed by a good
+        // frame — split across two extend() calls mid-bad-frame.
+        let mut wire = Vec::new();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&77u64.to_le_bytes());
+        payload.extend_from_slice(&3u32.to_le_bytes());
+        payload.extend_from_slice(&2u32.to_le_bytes());
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        wire.extend_from_slice(&payload);
+        let mut tmp = Vec::new();
+        encode_request(&Request::new(78, 1, vec![2.0]), &mut tmp);
+        wire.extend_from_slice(&tmp);
+
+        let mut dec = FrameDecoder::new();
+        dec.extend(&wire[..10]);
+        assert_eq!(dec.next_inbound().unwrap(), None, "partial frame pends");
+        dec.extend(&wire[10..]);
+        assert_eq!(
+            dec.next_inbound().unwrap(),
+            Some(Inbound::Malformed { req_id: 77 })
+        );
+        match dec.next_inbound().unwrap() {
+            Some(Inbound::Req(r)) => assert_eq!(r.req_id, 78),
+            other => panic!("decoder lost sync after malformed frame: {other:?}"),
+        }
+        assert_eq!(dec.next_inbound().unwrap(), None);
+    }
+
+    #[test]
+    fn prop_frame_decoder_matches_blocking_reader_under_random_splits() {
+        // Parity oracle: any frame sequence, cut at random boundaries, must
+        // decode to exactly what read_inbound sees on the whole stream —
+        // including malformed-content frames mixed in.
+        crate::util::proptest::check(80, |g| {
+            let n_frames = g.usize(1..8);
+            let mut wire = Vec::new();
+            for _ in 0..n_frames {
+                if g.bool(0.2) {
+                    // Honest length, malformed content (short header).
+                    let len = g.usize(0..20);
+                    wire.extend_from_slice(&(len as u32).to_le_bytes());
+                    for _ in 0..len {
+                        wire.push(g.usize(0..256) as u8);
+                    }
+                } else {
+                    let n_rows = g.usize(0..6);
+                    let row_len = if n_rows == 0 { 0 } else { g.usize(1..5) };
+                    let req = Request {
+                        req_id: g.rng.below(u64::MAX),
+                        row_len: row_len as u32,
+                        deadline_us: g.rng.below(1_000_000) as u32,
+                        rows: g.vec_f32((n_rows * row_len)..(n_rows * row_len + 1), -1e3..1e3),
+                    };
+                    let mut tmp = Vec::new();
+                    encode_request(&req, &mut tmp);
+                    wire.extend_from_slice(&tmp);
+                }
+            }
+            // Oracle: the blocking reader over the whole stream.
+            let mut cur = Cursor::new(&wire);
+            let mut expect = Vec::new();
+            while let Some(f) = read_inbound(&mut cur).map_err(|e| format!("oracle: {e}"))? {
+                expect.push(f);
+            }
+            // Subject: the resumable decoder over random split points.
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            let mut at = 0usize;
+            while at < wire.len() {
+                let take = g.usize(1..(wire.len() - at + 1).min(64));
+                dec.extend(&wire[at..at + take]);
+                at += take;
+                while let Some(f) = dec.next_inbound().map_err(|e| format!("decoder: {e}"))? {
+                    got.push(f);
+                }
+            }
+            crate::prop_assert!(got == expect, "split decode diverged: {got:?} != {expect:?}");
+            crate::prop_assert!(dec.pending_bytes() == 0);
             Ok(())
         });
     }

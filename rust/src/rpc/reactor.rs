@@ -1,0 +1,1039 @@
+//! Event-driven server core: epoll reactor replacing thread-per-connection.
+//!
+//! The threaded path in [`super::server`] spends a reader thread per
+//! connection, a pacing thread per streamed job, and a hop thread per
+//! simulated-delay response — at C10K that is the scaling wall, not the
+//! math. This module replaces all of it with one nonblocking acceptor and a
+//! small fixed set of I/O event loops (raw `libc::epoll`, no new deps):
+//!
+//! - **Loops.** Each loop owns an epoll instance, an eventfd for cross-
+//!   thread wakeups, and a slab of connection states. Loop 0 additionally
+//!   owns the nonblocking listener and round-robins accepted connections
+//!   across all loops (handing a socket to another loop through its
+//!   injection list + eventfd). A connection is touched only by its owning
+//!   loop; producers (batcher workers, shard-pool sinks) talk to it solely
+//!   through its [`Outbox`].
+//!
+//! - **Connection state machine.** Readable → drain the socket into a
+//!   resumable [`FrameDecoder`](super::proto::FrameDecoder) and admit every
+//!   completed request to the shared batcher queue (the batcher/`ShardPool`
+//!   are untouched by this refactor). Completed jobs enqueue encoded
+//!   response/chunk frames on the connection's outbox; the loop flushes
+//!   them with nonblocking writes, arming `EPOLLOUT` only while a flush is
+//!   blocked on the socket. EOF/`RDHUP`/error closes the connection and
+//!   error-completes everything still queued (counted, never silent).
+//!
+//! - **Deferred-flush timers.** The simulated network hop and the chaos
+//!   stall faults are *due-times on frames* (and on pending admissions),
+//!   served by the loop's timer heap — not sleeping threads. Pacing keeps
+//!   the threaded path's monotone clamp so a chunk never overtakes its
+//!   predecessor; the clamp is per connection here (strictly stronger than
+//!   the per-stream clamp, and what a real single-path network does).
+//!
+//! - **Backpressure.** Outboxes are bounded ([`BatcherConfig::
+//!   write_queue_frames`](super::server::BatcherConfig)); a producer that
+//!   finds one full blocks on its condvar until the loop drains it, bounded
+//!   by the same `WRITE_TIMEOUT` as the threaded path — a client that stops
+//!   reading costs a bounded stall and its own connection, never a wedged
+//!   shard.
+//!
+//! Every PR 6 contract holds on this path: `deadline_us` is re-anchored at
+//! admission (after the simulated inbound hop, exactly like the threaded
+//! hop thread), shedding/breaker/degrade live in the untouched batcher and
+//! coordinator, error frames skip pacing, and chaos faults are drawn at
+//! flush time per outbound frame with the same semantics as
+//! `chaos_write` (reset/truncation kill the connection, corruption flips
+//! the count/status byte, stalls defer the flush).
+
+use super::netsim::{Fault, NetSim};
+use super::proto::{self, FrameDecoder, Inbound, Request, Response};
+use super::server::{Job, Queue, RespOut, WRITE_TIMEOUT};
+use crate::telemetry::ReactorStats;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// epoll token of a loop's wake eventfd.
+const WAKE_TOKEN: u64 = u64::MAX;
+/// epoll token of the listener (loop 0 only).
+const LISTEN_TOKEN: u64 = u64::MAX - 1;
+/// Read buffer per drain pass; connections above this per event simply get
+/// another level-triggered wakeup.
+const READ_CHUNK: usize = 64 * 1024;
+/// Events fetched per `epoll_wait`.
+const MAX_EVENTS: usize = 256;
+
+// ---------------------------------------------------------------- syscalls
+
+fn epoll_create() -> std::io::Result<RawFd> {
+    let fd = unsafe { libc::epoll_create1(libc::EPOLL_CLOEXEC) };
+    if fd < 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    Ok(fd)
+}
+
+fn epoll_ctl(ep: RawFd, op: libc::c_int, fd: RawFd, events: u32, token: u64) -> std::io::Result<()> {
+    let mut ev = libc::epoll_event { events, u64: token };
+    let rc = unsafe { libc::epoll_ctl(ep, op, fd, &mut ev) };
+    if rc < 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+const IN_EVENTS: u32 = (libc::EPOLLIN | libc::EPOLLRDHUP) as u32;
+const INOUT_EVENTS: u32 = (libc::EPOLLIN | libc::EPOLLRDHUP | libc::EPOLLOUT) as u32;
+
+fn new_eventfd() -> std::io::Result<RawFd> {
+    let fd = unsafe { libc::eventfd(0, libc::EFD_NONBLOCK | libc::EFD_CLOEXEC) };
+    if fd < 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    Ok(fd)
+}
+
+fn write_wake(fd: RawFd) {
+    let one: u64 = 1;
+    // A full eventfd counter (EAGAIN) already guarantees a pending wakeup.
+    unsafe { libc::write(fd, std::ptr::addr_of!(one).cast(), 8) };
+}
+
+fn drain_wake(fd: RawFd) {
+    let mut cnt: u64 = 0;
+    unsafe { libc::read(fd, std::ptr::addr_of_mut!(cnt).cast(), 8) };
+}
+
+// ------------------------------------------------------------- loop handle
+
+/// The cross-thread face of one event loop: its wake eventfd plus the
+/// injection lists other threads feed. Owns the eventfd — producers hold an
+/// `Arc` through their outboxes, so the fd cannot be closed (and reused by
+/// the OS) while anyone might still write a wakeup to it.
+pub(crate) struct LoopShared {
+    wake_fd: RawFd,
+    /// Connections accepted by loop 0 awaiting registration on this loop.
+    new_conns: Mutex<Vec<TcpStream>>,
+    /// Slots whose outbox changed (new frames, or producer-side close)
+    /// since the loop last looked.
+    dirty: Mutex<Vec<u32>>,
+}
+
+impl LoopShared {
+    fn new() -> std::io::Result<Arc<LoopShared>> {
+        Ok(Arc::new(LoopShared {
+            wake_fd: new_eventfd()?,
+            new_conns: Mutex::new(Vec::new()),
+            dirty: Mutex::new(Vec::new()),
+        }))
+    }
+
+    fn notify_dirty(&self, slot: u32) {
+        self.dirty
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(slot);
+        write_wake(self.wake_fd);
+    }
+
+    fn inject_conn(&self, stream: TcpStream) {
+        self.new_conns
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(stream);
+        write_wake(self.wake_fd);
+    }
+
+    fn wake(&self) {
+        write_wake(self.wake_fd);
+    }
+}
+
+impl Drop for LoopShared {
+    fn drop(&mut self) {
+        unsafe { libc::close(self.wake_fd) };
+    }
+}
+
+// ------------------------------------------------------------------ outbox
+
+/// One queued outbound frame. `due` is the deferred-flush timer (simulated
+/// hop pacing, or an injected stall); the chaos fault is drawn exactly once
+/// per frame, at first flush attempt after the due-time — the same
+/// draw-at-write-after-delay ordering as the threaded `chaos_write`.
+struct OutFrame {
+    buf: Vec<u8>,
+    written: usize,
+    due: Option<Instant>,
+    fault: Option<Fault>,
+    drawn: bool,
+}
+
+#[derive(Default)]
+struct OutboxQ {
+    frames: VecDeque<OutFrame>,
+    /// Producer side sees the connection as gone; sends fail fast.
+    closed: bool,
+    /// Monotone pacing clamp: a paced frame is never due before its
+    /// predecessor, so intra-stream order holds on the wire.
+    last_due: Option<Instant>,
+    /// A dirty notification for this slot is already pending with the loop.
+    armed: bool,
+}
+
+/// Bounded per-connection write queue. Producers enqueue encoded frames
+/// (blocking briefly under backpressure); only the owning loop dequeues and
+/// writes.
+pub(crate) struct Outbox {
+    q: Mutex<OutboxQ>,
+    space: Condvar,
+    cap: usize,
+    slot: u32,
+    owner: Arc<LoopShared>,
+    netsim: Arc<NetSim>,
+    stats: Arc<ReactorStats>,
+}
+
+impl Outbox {
+    fn lock_q(&self) -> MutexGuard<'_, OutboxQ> {
+        self.q.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// A producer's handle on one reactor connection's write queue; held by
+/// jobs and stream sinks in place of the threaded path's `SharedWriter`.
+#[derive(Clone)]
+pub(crate) struct ConnHandle(Arc<Outbox>);
+
+/// The connection died (client hung up, chaos killed it, or it stopped
+/// reading past the write timeout); the frame was not delivered.
+#[derive(Debug)]
+pub(crate) struct ConnDead;
+
+impl ConnHandle {
+    /// Queue one encoded frame for the owning loop to write. `paced` frames
+    /// pay the simulated outbound hop as a deferred-flush due-time (clamped
+    /// monotone per connection); error frames and pings pass `false` and
+    /// flush immediately, exactly like the threaded path's hop skip.
+    ///
+    /// Blocks while the queue is full (backpressure), bounded by
+    /// `WRITE_TIMEOUT` — on timeout the connection is condemned, mirroring
+    /// the threaded blocking-write timeout.
+    pub(crate) fn send(&self, buf: Vec<u8>, paced: bool) -> Result<(), ConnDead> {
+        let ob = &self.0;
+        let mut q = ob.lock_q();
+        while q.frames.len() >= ob.cap && !q.closed {
+            ob.stats.backpressure_stalls.fetch_add(1, Ordering::Relaxed);
+            let (guard, timeout) = ob
+                .space
+                .wait_timeout(q, WRITE_TIMEOUT)
+                .unwrap_or_else(PoisonError::into_inner);
+            q = guard;
+            if timeout.timed_out() && q.frames.len() >= ob.cap && !q.closed {
+                // The client stopped draining its socket: kill the
+                // connection rather than wedge a compute worker.
+                ob.stats
+                    .dead_conn_frames
+                    .fetch_add(q.frames.len() as u64, Ordering::Relaxed);
+                q.frames.clear();
+                q.closed = true;
+                let was_armed = std::mem::replace(&mut q.armed, true);
+                drop(q);
+                ob.space.notify_all();
+                if !was_armed {
+                    ob.owner.notify_dirty(ob.slot); // loop: come close the fd
+                }
+                return Err(ConnDead);
+            }
+        }
+        if q.closed {
+            return Err(ConnDead);
+        }
+        let due = if paced {
+            let d = ob.netsim.due_after(q.last_due);
+            q.last_due = Some(d);
+            ob.stats.deferred_flushes.fetch_add(1, Ordering::Relaxed);
+            Some(d)
+        } else {
+            None
+        };
+        q.frames.push_back(OutFrame {
+            buf,
+            written: 0,
+            due,
+            fault: None,
+            drawn: false,
+        });
+        ob.stats.note_queue_depth(q.frames.len());
+        let was_armed = std::mem::replace(&mut q.armed, true);
+        drop(q);
+        if !was_armed {
+            ob.owner.notify_dirty(ob.slot);
+        }
+        Ok(())
+    }
+
+    /// Loop-thread enqueue (ping/error responses): never blocks — the loop
+    /// cannot wait on itself to drain the queue. A full queue condemns the
+    /// connection instead (a client flooding requests without reading
+    /// responses forfeits it).
+    fn send_local(&self, buf: Vec<u8>) -> Result<(), ConnDead> {
+        let ob = &self.0;
+        let mut q = ob.lock_q();
+        if q.closed {
+            return Err(ConnDead);
+        }
+        if q.frames.len() >= ob.cap {
+            condemn(&mut q, &ob.stats);
+            drop(q);
+            ob.space.notify_all();
+            return Err(ConnDead);
+        }
+        q.frames.push_back(OutFrame {
+            buf,
+            written: 0,
+            due: None,
+            fault: None,
+            drawn: false,
+        });
+        ob.stats.note_queue_depth(q.frames.len());
+        let was_armed = std::mem::replace(&mut q.armed, true);
+        drop(q);
+        if !was_armed {
+            ob.owner.notify_dirty(ob.slot);
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- connections
+
+/// Per-connection state, owned exclusively by one event loop.
+struct Conn {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    outbox: Arc<Outbox>,
+    /// Requests decoded but not yet admitted: the simulated inbound hop as
+    /// a due-time (monotone per connection), served by the loop timer.
+    /// Deadline decoding happens at admission — after the hop — preserving
+    /// the threaded path's re-anchoring point.
+    pending_admit: VecDeque<(Request, Instant)>,
+    last_admit_due: Option<Instant>,
+    /// Current epoll interest includes `EPOLLOUT`.
+    want_write: bool,
+}
+
+/// Shared, immutable reactor context.
+struct Ctx {
+    queue: Arc<Queue>,
+    netsim: Arc<NetSim>,
+    stats: Arc<ReactorStats>,
+    shutdown: Arc<AtomicBool>,
+    loops: Vec<Arc<LoopShared>>,
+    next_loop: AtomicU64,
+    write_queue_frames: usize,
+}
+
+/// Result of flushing a connection's outbox as far as it will go.
+enum Flush {
+    /// Queue empty; no write interest needed.
+    Idle,
+    /// Front frame not due yet; re-flush at this instant.
+    Wait(Instant),
+    /// Socket buffer full; arm `EPOLLOUT`.
+    Blocked,
+    /// Connection condemned (chaos kill, write error, producer timeout).
+    Dead,
+}
+
+// -------------------------------------------------------------------- core
+
+/// Running reactor: the event-loop threads plus their shared handles.
+/// Created by `RpcServer::start` when `BatcherConfig::reactor` is on;
+/// `shutdown` (from the server's `Drop`, after the batcher workers have
+/// been joined) runs each loop's final blocking flush and joins it.
+pub(crate) struct ReactorCore {
+    shutdown: Arc<AtomicBool>,
+    loops: Vec<Arc<LoopShared>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ReactorCore {
+    pub(crate) fn start(
+        listener: TcpListener,
+        queue: Arc<Queue>,
+        netsim: Arc<NetSim>,
+        stats: Arc<ReactorStats>,
+        n_loops: usize,
+        write_queue_frames: usize,
+    ) -> std::io::Result<ReactorCore> {
+        listener.set_nonblocking(true)?;
+        let n_loops = n_loops.max(1);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut loops = Vec::with_capacity(n_loops);
+        for _ in 0..n_loops {
+            loops.push(LoopShared::new()?);
+        }
+        let ctx = Arc::new(Ctx {
+            queue,
+            netsim,
+            stats,
+            shutdown: shutdown.clone(),
+            loops: loops.clone(),
+            next_loop: AtomicU64::new(0),
+            write_queue_frames: write_queue_frames.max(1),
+        });
+        let mut handles = Vec::with_capacity(n_loops);
+        let mut listener = Some(listener);
+        for idx in 0..n_loops {
+            let ctx = ctx.clone();
+            let listener = if idx == 0 { listener.take() } else { None };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rpc-loop-{idx}"))
+                    .spawn(move || run_loop(idx, &ctx, listener))
+                    .expect("spawn reactor loop"),
+            );
+        }
+        Ok(ReactorCore {
+            shutdown,
+            loops,
+            handles,
+        })
+    }
+
+    /// Stop the loops: final blocking flush of every outbox (the batcher
+    /// workers must already be joined so all responses have landed), close
+    /// every connection, join the threads. Idempotent.
+    pub(crate) fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        for l in &self.loops {
+            l.wake();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ReactorCore {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// -------------------------------------------------------------- event loop
+
+/// Mutable loop-local state (slab + timers).
+struct LoopState {
+    conns: Vec<Option<Conn>>,
+    free: Vec<u32>,
+    /// Deferred work: (fire-at, slot). Entries are lazily invalidated — a
+    /// fired timer just re-examines the slot, which is a no-op when stale.
+    timers: BinaryHeap<Reverse<(Instant, u32)>>,
+}
+
+fn run_loop(idx: usize, ctx: &Ctx, listener: Option<TcpListener>) {
+    let Ok(ep) = epoll_create() else { return };
+    let shared = ctx.loops[idx].clone();
+    let _ = epoll_ctl(ep, libc::EPOLL_CTL_ADD, shared.wake_fd, libc::EPOLLIN as u32, WAKE_TOKEN);
+    if let Some(l) = &listener {
+        let _ = epoll_ctl(ep, libc::EPOLL_CTL_ADD, l.as_raw_fd(), libc::EPOLLIN as u32, LISTEN_TOKEN);
+    }
+    let mut lp = LoopState {
+        conns: Vec::new(),
+        free: Vec::new(),
+        timers: BinaryHeap::new(),
+    };
+    let mut events = [libc::epoll_event { events: 0, u64: 0 }; MAX_EVENTS];
+    let mut rbuf = vec![0u8; READ_CHUNK];
+
+    while !ctx.shutdown.load(Ordering::Relaxed) {
+        let timeout_ms: libc::c_int = match lp.timers.peek() {
+            Some(&Reverse((due, _))) => {
+                let now = Instant::now();
+                if due <= now {
+                    0
+                } else {
+                    // Round up: firing a hair early would spin on a
+                    // not-yet-due frame.
+                    ((due - now).as_millis() as i64 + 1).min(60_000) as libc::c_int
+                }
+            }
+            None => -1,
+        };
+        let n = unsafe { libc::epoll_wait(ep, events.as_mut_ptr(), MAX_EVENTS as libc::c_int, timeout_ms) };
+        if n < 0 {
+            if std::io::Error::last_os_error().kind() == std::io::ErrorKind::Interrupted {
+                continue;
+            }
+            break;
+        }
+        ctx.stats.record_wakeup(idx);
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let mut accept_ready = false;
+        for ev in &events[..n as usize] {
+            let token = ev.u64;
+            let bits = ev.events;
+            match token {
+                WAKE_TOKEN => drain_wake(shared.wake_fd),
+                LISTEN_TOKEN => accept_ready = true,
+                slot64 => {
+                    let slot = slot64 as u32;
+                    let hup = bits & (libc::EPOLLHUP | libc::EPOLLERR | libc::EPOLLRDHUP) as u32 != 0;
+                    let readable = bits & libc::EPOLLIN as u32 != 0;
+                    let writable = bits & libc::EPOLLOUT as u32 != 0;
+                    // Read (and thus admit) before honoring a hangup: a
+                    // client that pipelines requests and closes its write
+                    // half still gets its queued frames... but a HUP with
+                    // nothing readable is a dead peer.
+                    let mut alive = true;
+                    if readable {
+                        alive = handle_readable(ctx, &mut lp, slot, ep, idx, &mut rbuf);
+                    }
+                    if alive && writable {
+                        alive = flush_slot(ctx, &mut lp, slot, ep, idx);
+                    }
+                    if alive && hup && !readable {
+                        close_conn(ctx, &mut lp, slot, ep, idx);
+                    }
+                }
+            }
+        }
+        if accept_ready {
+            if let Some(l) = &listener {
+                accept_loop(ctx, &mut lp, l, ep, idx);
+            }
+        }
+        // Connections handed over by the accepting loop.
+        let injected: Vec<TcpStream> =
+            std::mem::take(&mut *shared.new_conns.lock().unwrap_or_else(PoisonError::into_inner));
+        for stream in injected {
+            register_conn(ctx, &mut lp, stream, ep, idx);
+        }
+        // Outboxes producers touched since we last looked.
+        let dirty: Vec<u32> =
+            std::mem::take(&mut *shared.dirty.lock().unwrap_or_else(PoisonError::into_inner));
+        for slot in dirty {
+            flush_slot(ctx, &mut lp, slot, ep, idx);
+        }
+        // Deferred work that came due: pending admissions + paced/stalled
+        // frames.
+        fire_timers(ctx, &mut lp, ep, idx);
+    }
+
+    teardown(ctx, &mut lp, &shared, idx);
+    unsafe { libc::close(ep) };
+}
+
+fn accept_loop(ctx: &Ctx, lp: &mut LoopState, listener: &TcpListener, ep: RawFd, idx: usize) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let target =
+                    (ctx.next_loop.fetch_add(1, Ordering::Relaxed) as usize) % ctx.loops.len();
+                if target == idx {
+                    register_conn(ctx, lp, stream, ep, idx);
+                } else {
+                    ctx.loops[target].inject_conn(stream);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                // EMFILE and friends: back off briefly so the level-
+                // triggered listener event cannot spin a core.
+                std::thread::sleep(Duration::from_millis(1));
+                return;
+            }
+        }
+    }
+}
+
+fn register_conn(ctx: &Ctx, lp: &mut LoopState, stream: TcpStream, ep: RawFd, idx: usize) {
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    stream.set_nodelay(true).ok();
+    let slot = match lp.free.pop() {
+        Some(s) => s,
+        None => {
+            lp.conns.push(None);
+            (lp.conns.len() - 1) as u32
+        }
+    };
+    if epoll_ctl(ep, libc::EPOLL_CTL_ADD, stream.as_raw_fd(), IN_EVENTS, slot as u64).is_err() {
+        lp.free.push(slot);
+        return;
+    }
+    let outbox = Arc::new(Outbox {
+        q: Mutex::new(OutboxQ::default()),
+        space: Condvar::new(),
+        cap: ctx.write_queue_frames,
+        slot,
+        owner: ctx.loops[idx].clone(),
+        netsim: ctx.netsim.clone(),
+        stats: ctx.stats.clone(),
+    });
+    lp.conns[slot as usize] = Some(Conn {
+        stream,
+        decoder: FrameDecoder::new(),
+        outbox,
+        pending_admit: VecDeque::new(),
+        last_admit_due: None,
+        want_write: false,
+    });
+    ctx.stats.conn_opened(idx);
+}
+
+/// Drain the socket and admit every complete frame. Returns false when the
+/// connection was closed.
+fn handle_readable(
+    ctx: &Ctx,
+    lp: &mut LoopState,
+    slot: u32,
+    ep: RawFd,
+    idx: usize,
+    buf: &mut [u8],
+) -> bool {
+    loop {
+        let Some(conn) = lp.conns.get_mut(slot as usize).and_then(Option::as_mut) else {
+            return false;
+        };
+        match conn.stream.read(buf) {
+            Ok(0) => {
+                close_conn(ctx, lp, slot, ep, idx);
+                return false;
+            }
+            Ok(k) => {
+                conn.decoder.extend(&buf[..k]);
+                loop {
+                    let Some(conn) = lp.conns.get_mut(slot as usize).and_then(Option::as_mut)
+                    else {
+                        return false;
+                    };
+                    match conn.decoder.next_inbound() {
+                        Ok(Some(Inbound::Req(req))) => {
+                            if ctx.netsim.enabled() {
+                                // Inbound hop as an admission due-time; the
+                                // deadline is decoded when it fires.
+                                let due = ctx.netsim.due_after(conn.last_admit_due);
+                                conn.last_admit_due = Some(due);
+                                conn.pending_admit.push_back((req, due));
+                                lp.timers.push(Reverse((due, slot)));
+                            } else {
+                                let outbox = conn.outbox.clone();
+                                if !admit(ctx, &outbox, req) {
+                                    close_conn(ctx, lp, slot, ep, idx);
+                                    return false;
+                                }
+                            }
+                        }
+                        Ok(Some(Inbound::Malformed { req_id })) => {
+                            // Honest length, bad content: error-frame THIS
+                            // id, keep the (pipelined) connection.
+                            let mut out = Vec::new();
+                            proto::encode_response(&Response::err(req_id), &mut out);
+                            if ConnHandle(conn.outbox.clone()).send_local(out).is_err() {
+                                close_conn(ctx, lp, slot, ep, idx);
+                                return false;
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(_) => {
+                            // Unrecoverable desync (oversized length).
+                            close_conn(ctx, lp, slot, ep, idx);
+                            return false;
+                        }
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                close_conn(ctx, lp, slot, ep, idx);
+                return false;
+            }
+        }
+    }
+}
+
+/// Admit one parsed request (post-hop): pings answer immediately, a
+/// shutting-down server asks for the connection to be hung up (return
+/// false), everything else parks on the batcher queue.
+fn admit(ctx: &Ctx, outbox: &Arc<Outbox>, req: Request) -> bool {
+    let n = req.n_rows() as usize;
+    if n == 0 {
+        // Ping: answer immediately, no outbound hop (the RTT probe measures
+        // a single simulated hop, paid at admission).
+        let mut out = Vec::new();
+        proto::encode_response(&Response::ok(req.req_id, Vec::new()), &mut out);
+        return ConnHandle(outbox.clone()).send_local(out).is_ok();
+    }
+    {
+        let mut jobs = ctx.queue.lock_jobs();
+        if ctx.queue.shutdown.load(Ordering::Relaxed) {
+            return false;
+        }
+        let deadline = req.deadline();
+        jobs.push_back(Job {
+            req_id: req.req_id,
+            rows: req.rows,
+            n,
+            row_len: req.row_len as usize,
+            out: RespOut::Reactor(ConnHandle(outbox.clone())),
+            netsim: ctx.netsim.clone(),
+            deadline,
+        });
+    }
+    ctx.queue.avail.notify_one();
+    true
+}
+
+/// Flush a slot's outbox and apply the result to its epoll interest.
+/// Returns false when the connection was closed.
+fn flush_slot(ctx: &Ctx, lp: &mut LoopState, slot: u32, ep: RawFd, idx: usize) -> bool {
+    let Some(conn) = lp.conns.get_mut(slot as usize).and_then(Option::as_mut) else {
+        return false;
+    };
+    match flush_outbox(ctx, conn) {
+        Flush::Dead => {
+            close_conn(ctx, lp, slot, ep, idx);
+            false
+        }
+        Flush::Blocked => {
+            if !conn.want_write {
+                conn.want_write = true;
+                let _ = epoll_ctl(ep, libc::EPOLL_CTL_MOD, conn.stream.as_raw_fd(), INOUT_EVENTS, slot as u64);
+            }
+            true
+        }
+        Flush::Wait(due) => {
+            if conn.want_write {
+                conn.want_write = false;
+                let _ = epoll_ctl(ep, libc::EPOLL_CTL_MOD, conn.stream.as_raw_fd(), IN_EVENTS, slot as u64);
+            }
+            lp.timers.push(Reverse((due, slot)));
+            true
+        }
+        Flush::Idle => {
+            if conn.want_write {
+                conn.want_write = false;
+                let _ = epoll_ctl(ep, libc::EPOLL_CTL_MOD, conn.stream.as_raw_fd(), IN_EVENTS, slot as u64);
+            }
+            true
+        }
+    }
+}
+
+/// Write queued frames until the queue is empty, the front frame is not due
+/// yet, the socket blocks, or a fault kills the connection. Chaos faults
+/// are drawn once per frame at its first due flush attempt, with the same
+/// semantics as the threaded `chaos_write`.
+fn flush_outbox(ctx: &Ctx, conn: &mut Conn) -> Flush {
+    let ob = &conn.outbox;
+    let mut q = ob.lock_q();
+    q.armed = false;
+    if q.closed {
+        return Flush::Dead;
+    }
+    loop {
+        let Some(f) = q.frames.front_mut() else {
+            return Flush::Idle;
+        };
+        let now = Instant::now();
+        if let Some(due) = f.due {
+            if due > now {
+                return Flush::Wait(due);
+            }
+        }
+        if !f.drawn {
+            f.drawn = true;
+            f.fault = ctx.netsim.chaos().and_then(|p| p.next_frame_fault());
+            match f.fault {
+                Some(Fault::Corrupt) => {
+                    // Flip the count/status header byte (buf includes the
+                    // 4-byte length prefix): structural corruption the peer
+                    // must reject, never wrong payload bits.
+                    if f.buf.len() > 12 {
+                        f.buf[12] ^= 0xFF;
+                    }
+                }
+                Some(Fault::StallMs(ms)) => {
+                    // The write stall becomes a deferred-flush timer.
+                    f.due = Some(now + Duration::from_millis(ms));
+                    ctx.stats.deferred_flushes.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        match f.fault {
+            Some(Fault::Reset) => {
+                condemn(&mut q, &ctx.stats);
+                return Flush::Dead;
+            }
+            Some(Fault::PartialFrame) => {
+                let cut = (f.buf.len() / 2).max(1);
+                let _ = conn.stream.write(&f.buf[..cut]);
+                let _ = conn.stream.flush();
+                condemn(&mut q, &ctx.stats);
+                return Flush::Dead;
+            }
+            _ => {}
+        }
+        match conn.stream.write(&f.buf[f.written..]) {
+            Ok(0) => {
+                condemn(&mut q, &ctx.stats);
+                return Flush::Dead;
+            }
+            Ok(k) => {
+                f.written += k;
+                if f.written == f.buf.len() {
+                    q.frames.pop_front();
+                    ob.space.notify_all();
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Flush::Blocked,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                condemn(&mut q, &ctx.stats);
+                return Flush::Dead;
+            }
+        }
+    }
+}
+
+/// Mark an outbox dead: its frames will never be written — count them, so
+/// the loss is visible, then fail all future sends fast.
+fn condemn(q: &mut OutboxQ, stats: &ReactorStats) {
+    stats
+        .dead_conn_frames
+        .fetch_add(q.frames.len() as u64, Ordering::Relaxed);
+    q.frames.clear();
+    q.closed = true;
+}
+
+fn close_conn(ctx: &Ctx, lp: &mut LoopState, slot: u32, ep: RawFd, idx: usize) {
+    let Some(conn) = lp.conns.get_mut(slot as usize).and_then(Option::take) else {
+        return;
+    };
+    {
+        let mut q = conn.outbox.lock_q();
+        if !q.closed {
+            condemn(&mut q, &ctx.stats);
+        }
+    }
+    // In-flight jobs holding this outbox discover the death on their next
+    // send and error-complete (ServeMetrics::dead_conn_jobs); producers
+    // blocked on backpressure wake up to the same verdict.
+    conn.outbox.space.notify_all();
+    let _ = epoll_ctl(ep, libc::EPOLL_CTL_DEL, conn.stream.as_raw_fd(), 0, 0);
+    ctx.stats.conn_closed(idx);
+    lp.free.push(slot);
+    // Dropping the stream closes the fd; pending (un-admitted) requests
+    // die with it — their client is gone.
+}
+
+/// Pop and serve every timer that came due: pending admissions first, then
+/// a re-flush (which also re-arms the next frame due-time, if any).
+fn fire_timers(ctx: &Ctx, lp: &mut LoopState, ep: RawFd, idx: usize) {
+    let now = Instant::now();
+    while let Some(&Reverse((due, slot))) = lp.timers.peek() {
+        if due > now {
+            break;
+        }
+        lp.timers.pop();
+        let Some(conn) = lp.conns.get_mut(slot as usize).and_then(Option::as_mut) else {
+            continue; // stale: connection already closed
+        };
+        let mut hang_up = false;
+        while let Some((_, adue)) = conn.pending_admit.front() {
+            if *adue > now {
+                break;
+            }
+            let (req, _) = conn.pending_admit.pop_front().unwrap();
+            let outbox = conn.outbox.clone();
+            if !admit(ctx, &outbox, req) {
+                hang_up = true;
+                break;
+            }
+        }
+        if hang_up {
+            close_conn(ctx, lp, slot, ep, idx);
+            continue;
+        }
+        flush_slot(ctx, lp, slot, ep, idx);
+    }
+}
+
+/// Final pass at shutdown: every response is already enqueued (the server
+/// joins the batcher workers before stopping the reactor), so switch each
+/// socket back to blocking and write everything out — the same prompt
+/// error-or-answer guarantee on teardown as the threaded path — then close.
+fn teardown(ctx: &Ctx, lp: &mut LoopState, shared: &LoopShared, idx: usize) {
+    // Accepted-but-never-registered connections just hang up.
+    drop(std::mem::take(
+        &mut *shared.new_conns.lock().unwrap_or_else(PoisonError::into_inner),
+    ));
+    for entry in lp.conns.iter_mut() {
+        let Some(mut conn) = entry.take() else {
+            continue;
+        };
+        let _ = conn.stream.set_nonblocking(false);
+        let _ = conn.stream.set_write_timeout(Some(WRITE_TIMEOUT));
+        let mut q = conn.outbox.lock_q();
+        if !q.closed {
+            while let Some(mut f) = q.frames.pop_front() {
+                // Dues are void on teardown; chaos faults still apply, with
+                // the threaded (blocking) semantics.
+                if !f.drawn {
+                    f.drawn = true;
+                    f.fault = ctx.netsim.chaos().and_then(|p| p.next_frame_fault());
+                }
+                match f.fault {
+                    Some(Fault::Reset) | Some(Fault::PartialFrame) => {
+                        condemn(&mut q, &ctx.stats);
+                        break;
+                    }
+                    Some(Fault::StallMs(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+                    Some(Fault::Corrupt) => {
+                        if f.buf.len() > 12 {
+                            f.buf[12] ^= 0xFF;
+                        }
+                    }
+                    _ => {}
+                }
+                if proto::write_frame(&mut conn.stream, &f.buf[f.written..]).is_err() {
+                    condemn(&mut q, &ctx.stats);
+                    break;
+                }
+            }
+            q.closed = true;
+        }
+        drop(q);
+        conn.outbox.space.notify_all();
+        ctx.stats.conn_closed(idx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::netsim::NetSimConfig;
+
+    fn test_outbox(netsim: Arc<NetSim>, cap: usize) -> Arc<Outbox> {
+        Arc::new(Outbox {
+            q: Mutex::new(OutboxQ::default()),
+            space: Condvar::new(),
+            cap,
+            slot: 0,
+            owner: LoopShared::new().unwrap(),
+            netsim,
+            stats: Arc::new(ReactorStats::new(1)),
+        })
+    }
+
+    #[test]
+    fn paced_sends_get_monotone_due_times() {
+        let ns = Arc::new(NetSim::new(
+            NetSimConfig {
+                base_us: 500.0,
+                sigma: 0.5,
+                max_us: 5_000.0,
+            },
+            7,
+        ));
+        let ob = test_outbox(ns, 64);
+        let h = ConnHandle(ob.clone());
+        for i in 0..32 {
+            h.send(vec![i as u8; 8], true).unwrap();
+        }
+        let q = ob.lock_q();
+        let mut prev: Option<Instant> = None;
+        for f in &q.frames {
+            let due = f.due.expect("paced frames carry a due-time");
+            if let Some(p) = prev {
+                assert!(due >= p, "pacing clamp must be monotone");
+            }
+            prev = Some(due);
+        }
+        assert_eq!(ob.stats.deferred_flushes.load(Ordering::Relaxed), 32);
+        assert!(ob.stats.write_queue_hwm.load(Ordering::Relaxed) >= 32);
+    }
+
+    #[test]
+    fn unpaced_sends_have_no_due_time_and_dirty_notifies_once() {
+        let ns = Arc::new(NetSim::new(NetSimConfig::off(), 1));
+        let ob = test_outbox(ns, 64);
+        let h = ConnHandle(ob.clone());
+        h.send(vec![1, 2, 3], false).unwrap();
+        h.send(vec![4, 5, 6], false).unwrap();
+        assert!(ob.lock_q().frames.iter().all(|f| f.due.is_none()));
+        // Only the first send (unarmed) should have queued a dirty entry.
+        let dirty = ob.owner.dirty.lock().unwrap();
+        assert_eq!(dirty.len(), 1, "armed outbox must not re-notify");
+    }
+
+    #[test]
+    fn closed_outbox_rejects_sends_and_counts_nothing_silently() {
+        let ns = Arc::new(NetSim::new(NetSimConfig::off(), 1));
+        let ob = test_outbox(ns, 64);
+        let h = ConnHandle(ob.clone());
+        h.send(vec![0u8; 16], false).unwrap();
+        h.send(vec![1u8; 16], false).unwrap();
+        {
+            let mut q = ob.lock_q();
+            condemn(&mut q, &ob.stats);
+        }
+        assert!(h.send(vec![2u8; 16], false).is_err(), "dead conn fails fast");
+        assert_eq!(
+            ob.stats.dead_conn_frames.load(Ordering::Relaxed),
+            2,
+            "queued frames on a dead connection are counted, not dropped"
+        );
+        assert!(ob.lock_q().frames.is_empty());
+    }
+
+    #[test]
+    fn full_outbox_counts_backpressure_stall() {
+        let ns = Arc::new(NetSim::new(NetSimConfig::off(), 1));
+        let ob = test_outbox(ns, 2);
+        let h = ConnHandle(ob.clone());
+        h.send(vec![0u8; 4], false).unwrap();
+        h.send(vec![1u8; 4], false).unwrap();
+        // Third send blocks; a drainer thread frees a slot after a beat.
+        let ob2 = ob.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let mut q = ob2.lock_q();
+            q.frames.pop_front();
+            drop(q);
+            ob2.space.notify_all();
+        });
+        h.send(vec![2u8; 4], false).unwrap();
+        t.join().unwrap();
+        assert!(ob.stats.backpressure_stalls.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn local_send_never_blocks_full_queue_condemns() {
+        let ns = Arc::new(NetSim::new(NetSimConfig::off(), 1));
+        let ob = test_outbox(ns, 2);
+        let h = ConnHandle(ob.clone());
+        h.send_local(vec![0u8; 4]).unwrap();
+        h.send_local(vec![1u8; 4]).unwrap();
+        let t0 = Instant::now();
+        assert!(h.send_local(vec![2u8; 4]).is_err(), "full queue condemns");
+        assert!(t0.elapsed() < Duration::from_millis(100), "must not block");
+        assert!(ob.lock_q().closed);
+        assert_eq!(ob.stats.dead_conn_frames.load(Ordering::Relaxed), 2);
+    }
+}

@@ -1,18 +1,36 @@
 //! Second-stage inference service: TCP server + dynamic batcher.
 //!
-//! Connection threads parse requests and park them on a shared queue; a
-//! pool of batcher workers coalesces concurrent requests into backend
-//! batches (up to `max_batch` rows or `max_wait`, whichever first) — the
-//! standard dynamic-batching pattern of model servers (vLLM/Triton style),
-//! which is what makes the RPC side a realistic baseline for Table 3.
+//! The I/O front-end comes in two interchangeable flavors behind
+//! [`BatcherConfig::reactor`], serving the identical wire protocol:
 //!
-//! Connections are **pipelined**: the per-connection reader keeps parsing
-//! and admitting requests without waiting for earlier responses, and each
-//! completed job writes its own response frame through the connection's
-//! shared write half — possibly out of request order; the client
-//! demultiplexes by `req_id`. Simulated network hops (`NetSim`) model
-//! propagation delay, so they run off-thread and overlap instead of
-//! stacking behind one another.
+//! - **Reactor (default, Linux).** The epoll event-driven core in
+//!   [`super::reactor`]: one nonblocking acceptor plus a small fixed set of
+//!   I/O event loops, each owning a slab of connection states with
+//!   incremental frame parsing and a bounded per-connection write queue
+//!   driven by writable-interest. No per-connection reader/writer threads,
+//!   no per-job pacing threads — thread count is `loops + workers`,
+//!   independent of connection count (the C10K leg of
+//!   `concurrency_stress`). Simulated hops and chaos stalls become
+//!   deferred-flush timers on the loops.
+//! - **Threaded (fallback + A/B baseline).** A reader thread per
+//!   connection parses requests and parks them on the shared queue;
+//!   completed jobs write through the connection's shared write half;
+//!   netsim hops and stream pacing run on ephemeral threads. This is the
+//!   only path on non-Linux hosts (the reactor flag falls back silently).
+//!
+//! Either way, parsed requests park on a shared queue and a pool of
+//! batcher workers coalesces concurrent requests into backend batches (up
+//! to `max_batch` rows or `max_wait`, whichever first) — the standard
+//! dynamic-batching pattern of model servers (vLLM/Triton style), which is
+//! what makes the RPC side a realistic baseline for Table 3.
+//!
+//! Connections are **pipelined**: the server keeps parsing and admitting
+//! requests without waiting for earlier responses, and each completed job
+//! emits its own response frame — possibly out of request order; the
+//! client demultiplexes by `req_id`. Simulated network hops (`NetSim`)
+//! model propagation delay, so they overlap instead of stacking behind one
+//! another (off-thread on the threaded path, timer-deferred on the
+//! reactor).
 //!
 //! Responses are **streamed** when the backend can complete sub-batches
 //! independently (the shard-pool-backed [`NativeBackend`]): each completed
@@ -38,7 +56,11 @@
 use super::fault::Deadline;
 use super::netsim::{Fault, NetSim};
 use super::proto::{self, Inbound, Request, Response};
+#[cfg(target_os = "linux")]
+use super::reactor::{ConnHandle, ReactorCore};
 use crate::runtime::{ModelId, ShardPool};
+#[cfg(target_os = "linux")]
+use crate::telemetry::ReactorStats;
 use crate::telemetry::ServeMetrics;
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
@@ -350,6 +372,18 @@ pub struct BatcherConfig {
     /// behavior, kept for A/B benchmarking — `stream_vs_monolithic` in
     /// `hotpath_microbench`).
     pub stream: bool,
+    /// Serve connections on the epoll reactor (see [`super::reactor`])
+    /// instead of a thread per connection. Default on; the threaded path is
+    /// kept for A/B measurement (`connection_scaling` in `table3_latency`)
+    /// and as the only path on non-Linux hosts, where this flag silently
+    /// falls back.
+    pub reactor: bool,
+    /// Reactor I/O event loops. `0` = auto (min(4, available cores)).
+    pub reactor_loops: usize,
+    /// Bound on each reactor connection's write queue, in frames; a
+    /// producer that finds it full blocks until the loop drains it
+    /// (backpressure), bounded by the write timeout.
+    pub write_queue_frames: usize,
 }
 
 impl Default for BatcherConfig {
@@ -363,36 +397,68 @@ impl Default for BatcherConfig {
             max_wait: Duration::ZERO,
             workers: 2,
             stream: true,
+            reactor: true,
+            reactor_loops: 0,
+            write_queue_frames: 1024,
         }
     }
 }
 
-/// Ceiling on one blocking response write (see `connection_loop`): the
-/// price of a client that stops reading is a bounded worker stall, never a
-/// wedged shard.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Ceiling on one blocking response write (threaded path) or one
+/// backpressure wait on a full reactor write queue: the price of a client
+/// that stops reading is a bounded stall, never a wedged shard.
+pub(crate) const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Write half of a connection, shared by every response path; frames are
 /// written whole under the lock, so responses from different batches can
 /// never interleave on the wire.
 type SharedWriter = Arc<Mutex<TcpStream>>;
 
-struct Job {
-    req_id: u64,
-    rows: Vec<f32>,
-    n: usize,
-    row_len: usize,
-    out: SharedWriter,
-    netsim: Arc<NetSim>,
+/// Where a job's response frames go: the threaded path's shared write half,
+/// or a reactor connection's bounded write queue.
+pub(crate) enum RespOut {
+    Threaded(SharedWriter),
+    #[cfg(target_os = "linux")]
+    Reactor(ConnHandle),
+}
+
+pub(crate) struct Job {
+    pub(crate) req_id: u64,
+    pub(crate) rows: Vec<f32>,
+    pub(crate) n: usize,
+    pub(crate) row_len: usize,
+    pub(crate) out: RespOut,
+    pub(crate) netsim: Arc<NetSim>,
     /// Decoded from the request frame's `deadline_us` against this host's
     /// clock; the batcher sheds the job once it expires.
-    deadline: Option<Deadline>,
+    pub(crate) deadline: Option<Deadline>,
 }
 
 impl Job {
-    /// Answer this job: `Some(probs)` served, `None` = error frame.
-    fn respond(&self, result: Option<Vec<f32>>) {
-        respond(&self.out, &self.netsim, self.req_id, result);
+    /// Answer this job: `Some(probs)` served, `None` = error frame. On the
+    /// reactor path a dead connection error-completes the job visibly
+    /// ([`ServeMetrics::dead_conn_jobs`]) instead of dropping it silently.
+    #[cfg_attr(not(target_os = "linux"), allow(unused_variables))]
+    fn respond(&self, result: Option<Vec<f32>>, metrics: &ServeMetrics) {
+        match &self.out {
+            RespOut::Threaded(out) => respond(out, &self.netsim, self.req_id, result),
+            #[cfg(target_os = "linux")]
+            RespOut::Reactor(handle) => {
+                let resp = match result {
+                    Some(probs) => Response::ok(self.req_id, probs),
+                    None => Response::err(self.req_id),
+                };
+                // Successful non-ping responses pay the simulated outbound
+                // hop (as a deferred-flush due-time); error frames skip it,
+                // mirroring the threaded `respond`.
+                let paced = self.netsim.enabled() && !resp.error && !resp.probs.is_empty();
+                let mut buf = Vec::new();
+                proto::encode_response(&resp, &mut buf);
+                if handle.send(buf, paced).is_err() {
+                    metrics.dead_conn_jobs.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
     }
 }
 
@@ -504,25 +570,47 @@ enum StreamOut {
         /// backend that declines to stream must cost nothing here.
         tx: std::sync::OnceLock<mpsc::Sender<Vec<u8>>>,
     },
+    /// Reactor path: frames enqueue on the connection's write queue; pacing
+    /// (when the sim is on) is a deferred-flush due-time with the same
+    /// monotone clamp, served by the owning loop's timer — no thread. A
+    /// dead connection error-completes the job exactly once
+    /// ([`ServeMetrics::dead_conn_jobs`]) and counts every undeliverable
+    /// frame ([`ServeMetrics::stream_drop_frames`]).
+    #[cfg(target_os = "linux")]
+    Reactor {
+        handle: ConnHandle,
+        netsim: Arc<NetSim>,
+        dead: AtomicBool,
+    },
 }
 
 impl StreamOut {
     fn new(job: &Job) -> StreamOut {
-        if !job.netsim.enabled() {
-            StreamOut::Direct {
-                out: job.out.clone(),
-                netsim: job.netsim.clone(),
+        match &job.out {
+            RespOut::Threaded(out) => {
+                if !job.netsim.enabled() {
+                    StreamOut::Direct {
+                        out: out.clone(),
+                        netsim: job.netsim.clone(),
+                    }
+                } else {
+                    StreamOut::Paced {
+                        out: out.clone(),
+                        netsim: job.netsim.clone(),
+                        tx: std::sync::OnceLock::new(),
+                    }
+                }
             }
-        } else {
-            StreamOut::Paced {
-                out: job.out.clone(),
+            #[cfg(target_os = "linux")]
+            RespOut::Reactor(handle) => StreamOut::Reactor {
+                handle: handle.clone(),
                 netsim: job.netsim.clone(),
-                tx: std::sync::OnceLock::new(),
-            }
+                dead: AtomicBool::new(false),
+            },
         }
     }
 
-    fn send(&self, buf: Vec<u8>) {
+    fn send(&self, buf: Vec<u8>, metrics: &ServeMetrics) {
         match self {
             StreamOut::Direct { out, netsim } => {
                 let mut stream = out.lock().unwrap_or_else(PoisonError::into_inner);
@@ -559,21 +647,39 @@ impl StreamOut {
                         .ok();
                     tx
                 });
-                let _ = sender.send(buf); // pacing thread gone ⇒ frame dropped
+                // A gone pacing thread (spawn failure) means the frame can
+                // never reach the wire: count the loss, never silent.
+                if sender.send(buf).is_err() {
+                    metrics.stream_drop_frames.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            #[cfg(target_os = "linux")]
+            StreamOut::Reactor { handle, netsim, dead } => {
+                if dead.load(Ordering::Relaxed) {
+                    metrics.stream_drop_frames.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                if handle.send(buf, netsim.enabled()).is_err() {
+                    if !dead.swap(true, Ordering::Relaxed) {
+                        // Error-complete the job once: its client is gone.
+                        metrics.dead_conn_jobs.fetch_add(1, Ordering::Relaxed);
+                    }
+                    metrics.stream_drop_frames.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
     }
 
-    fn send_chunk(&self, chunk: &proto::Chunk) {
+    fn send_chunk(&self, chunk: &proto::Chunk, metrics: &ServeMetrics) {
         let mut buf = Vec::with_capacity(chunk.wire_size());
         proto::encode_chunk(chunk, &mut buf);
-        self.send(buf);
+        self.send(buf, metrics);
     }
 
-    fn send_end(&self, req_id: u64, n_chunks: u32) {
+    fn send_end(&self, req_id: u64, n_chunks: u32, metrics: &ServeMetrics) {
         let mut buf = Vec::new();
         proto::encode_stream_end(req_id, n_chunks, &mut buf);
-        self.send(buf);
+        self.send(buf, metrics);
     }
 }
 
@@ -638,28 +744,28 @@ fn stream_batch(
             };
             js.chunks.fetch_add(1, Ordering::Relaxed);
             metrics.stream_chunks.fetch_add(1, Ordering::Relaxed);
-            js.out.send_chunk(&chunk);
+            js.out.send_chunk(&chunk, metrics);
             // Chunk written BEFORE the countdown: the final decrement
             // (AcqRel) therefore happens-after every sibling chunk's write,
             // so the terminal frame really closes the stream on the wire.
             if js.remaining.fetch_sub(hi - lo, Ordering::AcqRel) == hi - lo {
-                js.out.send_end(js.job.req_id, js.chunks.load(Ordering::Acquire) as u32);
+                js.out.send_end(js.job.req_id, js.chunks.load(Ordering::Acquire) as u32, metrics);
             }
         }
     };
     backend.predict_streamed_deadline(rows, n, row_len, deadline, &sink)
 }
 
-struct Queue {
-    jobs: Mutex<VecDeque<Job>>,
-    avail: Condvar,
-    shutdown: AtomicBool,
+pub(crate) struct Queue {
+    pub(crate) jobs: Mutex<VecDeque<Job>>,
+    pub(crate) avail: Condvar,
+    pub(crate) shutdown: AtomicBool,
 }
 
 impl Queue {
     /// Jobs are self-contained (a poisoning panic cannot leave one half
     /// mutated), so a poisoned lock must not take the service down.
-    fn lock_jobs(&self) -> MutexGuard<'_, VecDeque<Job>> {
+    pub(crate) fn lock_jobs(&self) -> MutexGuard<'_, VecDeque<Job>> {
         self.jobs.lock().unwrap_or_else(PoisonError::into_inner)
     }
 }
@@ -671,6 +777,13 @@ pub struct RpcServer {
     accept_handle: Option<std::thread::JoinHandle<()>>,
     worker_handles: Vec<std::thread::JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
+    metrics: Arc<ServeMetrics>,
+    #[cfg(target_os = "linux")]
+    reactor: Option<ReactorCore>,
+    /// Reactor telemetry (loop gauges, wakeups, write-queue pressure);
+    /// `None` when serving on the threaded path.
+    #[cfg(target_os = "linux")]
+    pub reactor_stats: Option<Arc<ReactorStats>>,
 }
 
 impl RpcServer {
@@ -691,7 +804,7 @@ impl RpcServer {
         });
         let shutdown = Arc::new(AtomicBool::new(false));
 
-        // Batcher workers.
+        // Batcher workers (identical on both I/O paths).
         let mut worker_handles = Vec::new();
         for w in 0..cfg.workers.max(1) {
             let queue = queue.clone();
@@ -706,7 +819,40 @@ impl RpcServer {
             );
         }
 
-        // Accept loop.
+        // Reactor path: event loops own accept + read + write; no
+        // per-connection threads exist anywhere.
+        #[cfg(target_os = "linux")]
+        if cfg.reactor {
+            let n_loops = if cfg.reactor_loops == 0 {
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1)
+                    .min(4)
+            } else {
+                cfg.reactor_loops
+            };
+            let stats = Arc::new(ReactorStats::new(n_loops));
+            let core = ReactorCore::start(
+                listener,
+                queue.clone(),
+                netsim,
+                stats.clone(),
+                n_loops,
+                cfg.write_queue_frames,
+            )?;
+            return Ok(RpcServer {
+                addr: local,
+                queue,
+                accept_handle: None,
+                worker_handles,
+                shutdown,
+                metrics,
+                reactor: Some(core),
+                reactor_stats: Some(stats),
+            });
+        }
+
+        // Threaded path (A/B baseline; the only path off Linux).
         let accept_handle = {
             let queue = queue.clone();
             let shutdown = shutdown.clone();
@@ -735,6 +881,11 @@ impl RpcServer {
             accept_handle: Some(accept_handle),
             worker_handles,
             shutdown,
+            metrics,
+            #[cfg(target_os = "linux")]
+            reactor: None,
+            #[cfg(target_os = "linux")]
+            reactor_stats: None,
         })
     }
 }
@@ -746,16 +897,25 @@ impl Drop for RpcServer {
         // Answer queued jobs with error frames so pipelined clients get a
         // prompt failure instead of waiting out their response timeout.
         for job in self.queue.lock_jobs().drain(..) {
-            job.respond(None);
+            job.respond(None, &self.metrics);
         }
         self.queue.avail.notify_all();
-        // Unblock accept() with a dummy connection.
-        let _ = TcpStream::connect(self.addr);
+        // Unblock a threaded accept() with a dummy connection.
+        if self.accept_handle.is_some() {
+            let _ = TcpStream::connect(self.addr);
+        }
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
         for h in self.worker_handles.drain(..) {
             let _ = h.join();
+        }
+        // Reactor LAST: the workers above are joined, so every response
+        // frame has landed in an outbox — the loops' final pass flushes
+        // them all before closing the connections.
+        #[cfg(target_os = "linux")]
+        if let Some(mut core) = self.reactor.take() {
+            core.shutdown();
         }
     }
 }
@@ -837,7 +997,7 @@ fn admit(req: Request, queue: Arc<Queue>, out: SharedWriter, netsim: Arc<NetSim>
             rows: req.rows,
             n,
             row_len: req.row_len as usize,
-            out,
+            out: RespOut::Threaded(out),
             netsim,
             deadline,
         });
@@ -913,7 +1073,7 @@ fn batcher_loop(
                 metrics
                     .deadline_shed_requests
                     .fetch_add(1, Ordering::Relaxed);
-                job.respond(None);
+                job.respond(None, &metrics);
                 false
             } else {
                 true
@@ -976,7 +1136,7 @@ fn batcher_loop(
                     Ok(false) => {} // backend declined — monolithic below
                     Err(_) => {
                         for job in &batch[i..j] {
-                            job.respond(None);
+                            job.respond(None, &metrics);
                         }
                         i = j;
                         continue;
@@ -1004,15 +1164,15 @@ fn batcher_loop(
                         let span = off..off + job.n;
                         off += job.n;
                         if outcome.span_failed(&span) {
-                            job.respond(None);
+                            job.respond(None, &metrics);
                         } else {
-                            job.respond(Some(outcome.probs[span].to_vec()));
+                            job.respond(Some(outcome.probs[span].to_vec()), &metrics);
                         }
                     }
                 }
                 Err(_) => {
                     for job in &batch[i..j] {
-                        job.respond(None);
+                        job.respond(None, &metrics);
                     }
                 }
             }
@@ -1054,6 +1214,7 @@ mod tests {
                 // request would hang instead of being served.
                 workers: 1,
                 stream: true,
+                ..BatcherConfig::default()
             },
             Arc::new(ServeMetrics::new()),
         )
@@ -1129,6 +1290,7 @@ mod tests {
                 max_wait: Duration::from_millis(100),
                 workers: 1,
                 stream: true,
+                ..BatcherConfig::default()
             },
             Arc::new(ServeMetrics::new()),
         )
@@ -1172,6 +1334,7 @@ mod tests {
                 max_wait: Duration::ZERO,
                 workers: 1,
                 stream: false,
+                ..BatcherConfig::default()
             },
             metrics.clone(),
         )
@@ -1342,6 +1505,16 @@ mod tests {
         model: &crate::gbdt::GbdtModel,
         stream: bool,
     ) -> (RpcServer, Arc<ServeMetrics>) {
+        pool_server_path(model, stream, BatcherConfig::default().reactor)
+    }
+
+    /// Like [`pool_server`] with an explicit I/O path: `reactor` on or off
+    /// (the threaded A/B baseline).
+    fn pool_server_path(
+        model: &crate::gbdt::GbdtModel,
+        stream: bool,
+        reactor: bool,
+    ) -> (RpcServer, Arc<ServeMetrics>) {
         let pool = Arc::new(ShardPool::with_config(crate::runtime::ShardPoolConfig {
             n_shards: 4,
             min_task_rows: 8,
@@ -1352,7 +1525,7 @@ mod tests {
             "127.0.0.1:0",
             Arc::new(NativeBackend::with_pool(model.clone(), pool)),
             Arc::new(NetSim::new(NetSimConfig::off(), 1)),
-            BatcherConfig { stream, ..Default::default() },
+            BatcherConfig { stream, reactor, ..Default::default() },
             metrics.clone(),
         )
         .unwrap();
@@ -1498,5 +1671,117 @@ mod tests {
         let (probs, failed, _) = read_stream(&mut stream, 22);
         assert!(failed.is_empty());
         assert!(probs.iter().all(|p| p.to_bits() == expected.to_bits()));
+    }
+
+    /// Tentpole acceptance: the epoll reactor serves the full streamed
+    /// protocol bit-identically to the threaded server, with zero
+    /// per-connection threads (its telemetry proves connections really ran
+    /// through the loops).
+    #[test]
+    fn reactor_and_threaded_paths_bit_identical() {
+        let (model, data) = trained_model();
+        let (reactor_srv, reactor_metrics) = pool_server_path(&model, true, true);
+        let (threaded_srv, _tm) = pool_server_path(&model, true, false);
+        let n = 200;
+        let (rows, row_len) = flat_rows(&data, n);
+
+        let a = RpcClient::connect(reactor_srv.addr).unwrap().predict(&rows, row_len).unwrap();
+        let b = RpcClient::connect(threaded_srv.addr).unwrap().predict(&rows, row_len).unwrap();
+        assert_eq!(a.len(), n);
+        for r in 0..n {
+            assert_eq!(a[r].to_bits(), b[r].to_bits(), "row {r}: reactor != threaded");
+        }
+        #[cfg(target_os = "linux")]
+        {
+            let stats = reactor_srv.reactor_stats.as_ref().expect("reactor path has stats");
+            assert!(stats.accepted.load(Ordering::Relaxed) >= 1, "loop accepted the conn");
+            assert!(stats.wakeups() >= 1);
+            assert!(threaded_srv.reactor_stats.is_none(), "threaded path has none");
+            assert!(
+                reactor_metrics.stream_chunks.load(Ordering::Relaxed) >= 2,
+                "reactor path must really have streamed"
+            );
+        }
+        let _ = reactor_metrics;
+    }
+
+    /// Satellite regression: on the reactor path a connection that dies
+    /// with a job in flight error-completes the job VISIBLY — counted in
+    /// `dead_conn_jobs` — instead of dropping the frame silently (the old
+    /// `let _ = sender.send(buf)` hole).
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn reactor_dead_connection_error_completes_in_flight_job() {
+        /// Slow echo: long enough for the client to vanish mid-execution.
+        struct SlowBackend;
+        impl Backend for SlowBackend {
+            fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+                std::thread::sleep(Duration::from_millis(120));
+                (0..n).map(|r| rows[r * row_len]).collect()
+            }
+            fn row_len(&self) -> usize {
+                0
+            }
+        }
+        let metrics = Arc::new(ServeMetrics::new());
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(SlowBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig { reactor: true, workers: 1, ..Default::default() },
+            metrics.clone(),
+        )
+        .unwrap();
+        {
+            let mut stream = TcpStream::connect(server.addr).unwrap();
+            let mut buf = Vec::new();
+            proto::encode_request(&Request::new(9, 2, vec![1.0, 2.0]), &mut buf);
+            proto::write_frame(&mut stream, &buf).unwrap();
+            // Give the loop time to admit, then vanish mid-execution.
+            std::thread::sleep(Duration::from_millis(40));
+        } // socket dropped: RST/EOF reaches the loop while the backend runs
+        let t0 = Instant::now();
+        while metrics.dead_conn_jobs.load(Ordering::Relaxed) == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "dead connection must error-complete the in-flight job, counted"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(metrics.dead_conn_jobs.load(Ordering::Relaxed), 1);
+    }
+
+    /// The reactor write queue applies backpressure end-to-end: a client
+    /// that stops reading cannot wedge the server, and a pipelined flood
+    /// far beyond the queue bound is still served completely and in full.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn reactor_tiny_write_queue_survives_pipelined_flood() {
+        let metrics = Arc::new(ServeMetrics::new());
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(PanickyBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig {
+                reactor: true,
+                write_queue_frames: 2, // pathological bound
+                workers: 2,
+                ..Default::default()
+            },
+            metrics.clone(),
+        )
+        .unwrap();
+        let client = RpcClient::connect(server.addr).unwrap();
+        let pendings: Vec<_> = (0..64)
+            .map(|i| client.predict_async(&[i as f32, 0.0], 2).unwrap())
+            .collect();
+        for (i, p) in pendings.into_iter().enumerate() {
+            assert_eq!(p.wait().unwrap(), vec![i as f32], "request {i}");
+        }
+        let stats = server.reactor_stats.as_ref().unwrap();
+        assert!(
+            stats.write_queue_hwm.load(Ordering::Relaxed) <= 2,
+            "queue bound must hold"
+        );
     }
 }

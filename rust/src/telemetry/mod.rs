@@ -106,6 +106,15 @@ pub struct ServeMetrics {
     /// layer (copied from the client breaker at report time or bumped by
     /// the coordinator when it observes a trip).
     pub breaker_trips: AtomicU64,
+    /// Server side: streamed frames that could not be delivered because the
+    /// owning connection died mid-stream. Never silent — every undeliverable
+    /// frame is counted here (PR 7 regression guard for the old
+    /// `let _ = sender.send(..)` drop).
+    pub stream_drop_frames: AtomicU64,
+    /// Server side: jobs whose response (monolithic or streamed) found its
+    /// connection already dead — the work is abandoned but accounted, one
+    /// count per job.
+    pub dead_conn_jobs: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -152,6 +161,8 @@ impl ServeMetrics {
             &self.degraded_requests,
             &self.rpc_retries,
             &self.breaker_trips,
+            &self.stream_drop_frames,
+            &self.dead_conn_jobs,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -226,6 +237,13 @@ impl ServeMetrics {
                 "\ndegraded rows: {degraded_rows} (reqs: {})  deadline-shed rows: {shed_rows} (reqs: {})  retries: {retries}  breaker trips: {trips}",
                 self.degraded_requests.load(Ordering::Relaxed),
                 self.deadline_shed_requests.load(Ordering::Relaxed),
+            ));
+        }
+        let dropped = self.stream_drop_frames.load(Ordering::Relaxed);
+        let dead_jobs = self.dead_conn_jobs.load(Ordering::Relaxed);
+        if dropped + dead_jobs > 0 {
+            s.push_str(&format!(
+                "\ndead-conn jobs: {dead_jobs}  undeliverable stream frames: {dropped}"
             ));
         }
         s
@@ -400,9 +418,165 @@ impl ShardStats {
     }
 }
 
+/// Event-driven server core telemetry: per-loop connection gauges and
+/// wakeup counters for the epoll reactor (see [`crate::rpc::server`]'s
+/// reactor path), plus write-queue pressure accounting.
+///
+/// Same discipline as [`ShardStats`]: gauges are racy monitoring aids,
+/// counters are bumped by the thread that owns the event (the loop for
+/// wakeups/flushes, the producer for backpressure stalls).
+#[derive(Default)]
+pub struct ReactorStats {
+    /// Per-loop live connection gauge (incremented on assignment,
+    /// decremented on close by the owning loop).
+    loop_conns: Vec<AtomicU64>,
+    /// Per-loop `epoll_wait` returns (each return may carry many events).
+    loop_wakeups: Vec<AtomicU64>,
+    /// Connections accepted over the reactor's lifetime.
+    pub accepted: AtomicU64,
+    /// High-water mark of any single connection's write-queue depth
+    /// (frames), across all connections.
+    pub write_queue_hwm: AtomicU64,
+    /// Producer-side stalls: a batcher worker found a connection's write
+    /// queue full and had to wait for the loop to drain it (backpressure).
+    pub backpressure_stalls: AtomicU64,
+    /// Frames still queued on a connection when it died — never written,
+    /// never silently forgotten.
+    pub dead_conn_frames: AtomicU64,
+    /// Frames whose flush was deferred to a timer (netsim hop delay or an
+    /// injected stall) instead of a sleeping thread.
+    pub deferred_flushes: AtomicU64,
+}
+
+impl ReactorStats {
+    pub fn new(n_loops: usize) -> ReactorStats {
+        ReactorStats {
+            loop_conns: (0..n_loops).map(|_| AtomicU64::new(0)).collect(),
+            loop_wakeups: (0..n_loops).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        }
+    }
+
+    pub fn n_loops(&self) -> usize {
+        self.loop_conns.len()
+    }
+
+    pub fn conn_opened(&self, lp: usize) {
+        self.loop_conns[lp].fetch_add(1, Ordering::Relaxed);
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn conn_closed(&self, lp: usize) {
+        self.loop_conns[lp].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn record_wakeup(&self, lp: usize) {
+        self.loop_wakeups[lp].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Live connections owned by loop `lp`.
+    pub fn conns_on(&self, lp: usize) -> u64 {
+        self.loop_conns[lp].load(Ordering::Relaxed)
+    }
+
+    /// Live connections across all loops.
+    pub fn live_conns(&self) -> u64 {
+        self.loop_conns.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn wakeups(&self) -> u64 {
+        self.loop_wakeups.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn note_queue_depth(&self, depth: usize) {
+        self.write_queue_hwm.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// One-line report for logs: per-loop gauges + global counters.
+    pub fn report(&self) -> String {
+        let conns: Vec<String> = self
+            .loop_conns
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed).to_string())
+            .collect();
+        let wakeups: Vec<String> = self
+            .loop_wakeups
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed).to_string())
+            .collect();
+        let mut s = format!(
+            "reactor[{}] conns/loop=[{}] wakeups/loop=[{}] accepted={} wq_hwm={} stalls={}",
+            self.n_loops(),
+            conns.join(","),
+            wakeups.join(","),
+            self.accepted.load(Ordering::Relaxed),
+            self.write_queue_hwm.load(Ordering::Relaxed),
+            self.backpressure_stalls.load(Ordering::Relaxed),
+        );
+        let dead = self.dead_conn_frames.load(Ordering::Relaxed);
+        if dead > 0 {
+            s.push_str(&format!(" dead_conn_frames={dead}"));
+        }
+        let deferred = self.deferred_flushes.load(Ordering::Relaxed);
+        if deferred > 0 {
+            s.push_str(&format!(" deferred_flushes={deferred}"));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn reactor_stats_gauges_and_report() {
+        let r = ReactorStats::new(2);
+        assert_eq!(r.n_loops(), 2);
+        r.conn_opened(0);
+        r.conn_opened(1);
+        r.conn_opened(1);
+        r.record_wakeup(0);
+        r.record_wakeup(1);
+        r.record_wakeup(1);
+        r.note_queue_depth(7);
+        r.note_queue_depth(3); // hwm keeps the max
+        r.backpressure_stalls.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(r.live_conns(), 3);
+        assert_eq!(r.conns_on(1), 2);
+        assert_eq!(r.wakeups(), 3);
+        assert_eq!(r.accepted.load(Ordering::Relaxed), 3);
+        let rep = r.report();
+        assert!(rep.contains("conns/loop=[1,2]"), "{rep}");
+        assert!(rep.contains("wakeups/loop=[1,2]"), "{rep}");
+        assert!(rep.contains("wq_hwm=7"), "{rep}");
+        assert!(rep.contains("stalls=1"), "{rep}");
+        // Quiet sections stay absent until nonzero.
+        assert!(!rep.contains("dead_conn_frames"), "{rep}");
+        assert!(!rep.contains("deferred_flushes"), "{rep}");
+        r.dead_conn_frames.fetch_add(2, Ordering::Relaxed);
+        r.deferred_flushes.fetch_add(5, Ordering::Relaxed);
+        let rep = r.report();
+        assert!(rep.contains("dead_conn_frames=2"), "{rep}");
+        assert!(rep.contains("deferred_flushes=5"), "{rep}");
+        r.conn_closed(1);
+        assert_eq!(r.live_conns(), 2);
+    }
+
+    #[test]
+    fn dead_conn_accounting_reported_and_reset() {
+        let m = ServeMetrics::new();
+        assert!(!m.report().contains("dead-conn jobs"), "quiet when clean");
+        m.dead_conn_jobs.fetch_add(2, Ordering::Relaxed);
+        m.stream_drop_frames.fetch_add(9, Ordering::Relaxed);
+        let rep = m.report();
+        assert!(rep.contains("dead-conn jobs: 2"), "{rep}");
+        assert!(rep.contains("undeliverable stream frames: 9"), "{rep}");
+        m.reset_all();
+        assert_eq!(m.dead_conn_jobs.load(Ordering::Relaxed), 0);
+        assert_eq!(m.stream_drop_frames.load(Ordering::Relaxed), 0);
+        assert!(!m.report().contains("dead-conn jobs"));
+    }
 
     #[test]
     fn shard_stats_counters_and_report() {

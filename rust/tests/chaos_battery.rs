@@ -16,6 +16,13 @@
 //!
 //! Fault plans are index-addressed and seeded, and each test prints its
 //! plan seed, so a failing run is replayable exactly.
+//!
+//! Every server-backed scenario runs twice — `_threaded` forces the legacy
+//! thread-per-connection path, `_reactor` the epoll reactor (the Linux
+//! default; non-Linux quietly serves both legs threaded) — proving the
+//! failure invariants survive the event-driven refactor with the exact same
+//! scripts. The truncated-stream scenario drives a hand-rolled fake server,
+//! so it is I/O-path-independent and runs once.
 
 use lrwbins::coordinator::{Coordinator, DegradeMode, Served};
 use lrwbins::datagen;
@@ -57,7 +64,7 @@ impl Backend for SlowEchoBackend {
     }
 }
 
-fn chaos_server(backend: Arc<dyn Backend>, seed: u64) -> (RpcServer, Arc<NetSim>) {
+fn chaos_server(backend: Arc<dyn Backend>, seed: u64, reactor: bool) -> (RpcServer, Arc<NetSim>) {
     let plan = ChaosPlan::new(seed);
     let ns = Arc::new(NetSim::with_chaos(NetSimConfig::off(), seed, plan));
     let server = RpcServer::start(
@@ -66,6 +73,7 @@ fn chaos_server(backend: Arc<dyn Backend>, seed: u64) -> (RpcServer, Arc<NetSim>
         ns.clone(),
         BatcherConfig {
             workers: 1,
+            reactor,
             ..Default::default()
         },
         Arc::new(ServeMetrics::new()),
@@ -96,12 +104,11 @@ fn fast_retry_client(addr: std::net::SocketAddr) -> RpcClient {
 /// one response mid-run. The retry policy must absorb every one of them —
 /// all requests answer bit-identically to the fault-free function, within a
 /// bounded wall clock, and the plan confirms the fault actually fired.
-#[test]
-fn scripted_faults_absorbed_no_hang_no_wrong_bits() {
+fn scripted_faults_scenario(reactor: bool) {
     const SEED: u64 = 0xBA77E41;
     for fault in [Fault::Reset, Fault::StallMs(30), Fault::PartialFrame, Fault::Corrupt] {
-        println!("chaos scenario: seed={SEED:#x} fault={fault:?} @ frame 2");
-        let (server, ns) = chaos_server(Arc::new(EchoBackend), SEED);
+        println!("chaos scenario: seed={SEED:#x} fault={fault:?} @ frame 2 reactor={reactor}");
+        let (server, ns) = chaos_server(Arc::new(EchoBackend), SEED, reactor);
         ns.chaos().unwrap().script(2, fault);
         let client = fast_retry_client(server.addr);
         let t0 = Instant::now();
@@ -134,15 +141,24 @@ fn scripted_faults_absorbed_no_hang_no_wrong_bits() {
     }
 }
 
+#[test]
+fn scripted_faults_absorbed_no_hang_no_wrong_bits_threaded() {
+    scripted_faults_scenario(false);
+}
+
+#[test]
+fn scripted_faults_absorbed_no_hang_no_wrong_bits_reactor() {
+    scripted_faults_scenario(true);
+}
+
 /// A scripted `PauseMs` stalls the batcher; a deadline-carrying request
 /// caught behind the pause is shed server-side (counted in `ServeMetrics`)
 /// and refused client-side by its own budget — and the stack serves clean
 /// requests normally once the pause expires. Invariants 1 and 3 for the
 /// deadline path.
-#[test]
-fn timed_pause_sheds_deadline_work_then_recovers() {
+fn timed_pause_scenario(reactor: bool) {
     const SEED: u64 = 0x9A05E;
-    println!("chaos scenario: seed={SEED:#x} fault=PauseMs(80) @ frame 0");
+    println!("chaos scenario: seed={SEED:#x} fault=PauseMs(80) @ frame 0 reactor={reactor}");
     let metrics = Arc::new(ServeMetrics::new());
     let plan = ChaosPlan::new(SEED);
     plan.script(0, Fault::PauseMs(80));
@@ -153,6 +169,7 @@ fn timed_pause_sheds_deadline_work_then_recovers() {
         ns.clone(),
         BatcherConfig {
             workers: 1,
+            reactor,
             ..Default::default()
         },
         metrics.clone(),
@@ -199,12 +216,21 @@ fn timed_pause_sheds_deadline_work_then_recovers() {
     assert_eq!(client.predict(&[3.0, 0.0], 2).unwrap(), vec![3.5]);
 }
 
+#[test]
+fn timed_pause_sheds_deadline_work_then_recovers_threaded() {
+    timed_pause_scenario(false);
+}
+
+#[test]
+fn timed_pause_sheds_deadline_work_then_recovers_reactor() {
+    timed_pause_scenario(true);
+}
+
 /// Satellite 1 regression: the client's per-connection reader thread dies
 /// (server torn down) with 32 requests in flight. Every pending `req_id`
 /// must complete PROMPTLY — served answers bit-identical, the rest explicit
 /// errors — and every in-flight slot must be released. No wait may hang.
-#[test]
-fn reader_death_with_32_in_flight_completes_every_wait() {
+fn reader_death_scenario(reactor: bool) {
     // max_batch 8 caps how many rows the first (already-running) batch can
     // serve, so tearing the server down mid-run MUST strand the rest.
     let server = RpcServer::start(
@@ -214,6 +240,7 @@ fn reader_death_with_32_in_flight_completes_every_wait() {
         BatcherConfig {
             max_batch: 8,
             workers: 1,
+            reactor,
             ..Default::default()
         },
         Arc::new(ServeMetrics::new()),
@@ -265,6 +292,16 @@ fn reader_death_with_32_in_flight_completes_every_wait() {
         t0.elapsed()
     );
     assert_eq!(client.total_in_flight(), 0, "all in-flight slots released");
+}
+
+#[test]
+fn reader_death_with_32_in_flight_completes_every_wait_threaded() {
+    reader_death_scenario(false);
+}
+
+#[test]
+fn reader_death_with_32_in_flight_completes_every_wait_reactor() {
+    reader_death_scenario(true);
 }
 
 /// Satellite 2: a streamed response truncated mid-chunk (raw socket writes
@@ -368,10 +405,12 @@ fn truncated_stream_mid_chunk_errors_promptly_never_hangs() {
 /// Every submitted row comes back exactly once as stage-1 / RPC / degraded,
 /// every delivered bit matches its fault-free reference, and the metrics
 /// reconcile with the caller-observed outcome counts.
-#[test]
-fn every_row_accounted_exactly_once_under_chaos() {
+fn conservation_scenario(reactor: bool) {
     const SEED: u64 = 0xACC0;
-    println!("chaos scenario: seed={SEED:#x} faults=Reset@3, StallMs(20)@6, Corrupt@10");
+    println!(
+        "chaos scenario: seed={SEED:#x} faults=Reset@3, StallMs(20)@6, Corrupt@10 \
+         reactor={reactor}"
+    );
     let spec = datagen::preset("aci").unwrap().with_rows(4000);
     let data = datagen::generate(&spec, 5);
     let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
@@ -399,7 +438,10 @@ fn every_row_accounted_exactly_once_under_chaos() {
         "127.0.0.1:0",
         Arc::new(lrwbins::rpc::server::NativeBackend::new(model.clone())),
         Arc::new(NetSim::with_chaos(NetSimConfig::off(), SEED, plan)),
-        BatcherConfig::default(),
+        BatcherConfig {
+            reactor,
+            ..Default::default()
+        },
         metrics.clone(),
     )
     .expect("server");
@@ -486,4 +528,14 @@ fn every_row_accounted_exactly_once_under_chaos() {
         metrics.rpc_retries.load(Ordering::Relaxed),
         metrics.breaker_trips.load(Ordering::Relaxed),
     );
+}
+
+#[test]
+fn every_row_accounted_exactly_once_under_chaos_threaded() {
+    conservation_scenario(false);
+}
+
+#[test]
+fn every_row_accounted_exactly_once_under_chaos_reactor() {
+    conservation_scenario(true);
 }

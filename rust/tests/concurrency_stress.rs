@@ -378,6 +378,270 @@ fn degraded_storm_breaker_forced_open_mid_run_stays_bit_exact() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// C10K: the epoll reactor holds 10k+ concurrent pipelined connections with a
+// fixed thread count and flat tail latency.
+//
+// The clients here are RAW sockets on purpose: `RpcClient` spawns a reader
+// thread per connection, which would reintroduce exactly the
+// thread-per-connection scaling this battery is proving the server no longer
+// needs. A handful of worker threads each own a slice of connections,
+// pipeline two requests per connection before reading anything back, and
+// verify every response bit-for-bit against the model.
+#[cfg(target_os = "linux")]
+mod c10k {
+    use super::*;
+    use lrwbins::rpc::proto::{self, ClientFrame, Request, StreamAssembler};
+    use std::collections::HashMap;
+    use std::io::Write;
+    use std::net::TcpStream;
+    use std::time::{Duration, Instant};
+
+    const FLOOD_CONNS: usize = 10_000;
+    const BASE_CONNS: usize = 100;
+    const CLIENT_THREADS: usize = 16;
+    const PROBE_ROWS: usize = 64;
+    const RTT_SAMPLES: usize = 200;
+
+    /// Raise `RLIMIT_NOFILE` to at least `needed` (each loopback connection
+    /// costs TWO fds in this process: client end + server end). Returns the
+    /// effective soft limit.
+    fn raise_nofile(needed: u64) -> Result<u64, String> {
+        // SAFETY: plain get/setrlimit on our own process with a stack rlimit.
+        unsafe {
+            let mut rl = libc::rlimit { rlim_cur: 0, rlim_max: 0 };
+            if libc::getrlimit(libc::RLIMIT_NOFILE, &mut rl) != 0 {
+                return Err("getrlimit(RLIMIT_NOFILE) failed".into());
+            }
+            if rl.rlim_cur < needed {
+                let bumped = libc::rlimit {
+                    rlim_cur: needed.min(rl.rlim_max),
+                    rlim_max: rl.rlim_max,
+                };
+                if libc::setrlimit(libc::RLIMIT_NOFILE, &bumped) != 0 {
+                    return Err(format!(
+                        "setrlimit(RLIMIT_NOFILE, {}) failed",
+                        bumped.rlim_cur
+                    ));
+                }
+                rl.rlim_cur = bumped.rlim_cur;
+            }
+            Ok(rl.rlim_cur)
+        }
+    }
+
+    /// Live thread count of this process (test harness + server + client
+    /// workers — everything).
+    fn thread_count() -> usize {
+        std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(usize::MAX)
+    }
+
+    fn connect_retry(addr: std::net::SocketAddr) -> TcpStream {
+        for _ in 0..200 {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                    s.set_nodelay(true).ok();
+                    return s;
+                }
+                // Backlog overflow under the connect storm: back off briefly.
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        panic!("could not connect to {addr} after 200 attempts");
+    }
+
+    /// Read frames until `n` requests have completed; handles monolithic
+    /// responses and interleaved chunk streams alike. Single-row requests.
+    fn collect_replies(stream: &mut TcpStream, n: usize) -> HashMap<u64, Vec<f32>> {
+        let mut done = HashMap::new();
+        let mut partial: HashMap<u64, StreamAssembler> = HashMap::new();
+        while done.len() < n {
+            match proto::read_client_frame(stream)
+                .expect("read frame")
+                .expect("server closed mid-stream")
+            {
+                ClientFrame::Response(r) => {
+                    assert!(!r.error, "req {} answered with an error frame", r.req_id);
+                    done.insert(r.req_id, r.probs);
+                }
+                ClientFrame::Chunk(c) => {
+                    assert!(!c.failed, "req {} got a failed span", c.req_id);
+                    partial
+                        .entry(c.req_id)
+                        .or_insert_with(|| StreamAssembler::new(1))
+                        .push(&c)
+                        .expect("chunk fits");
+                }
+                ClientFrame::StreamEnd { req_id, n_chunks } => {
+                    let asm = partial.remove(&req_id).expect("chunks precede terminator");
+                    let (probs, missing) = asm.finish(n_chunks).expect("complete stream");
+                    assert!(missing.is_empty(), "req {req_id} missing spans");
+                    done.insert(req_id, probs);
+                }
+            }
+        }
+        done
+    }
+
+    /// The row a given (connection, pipeline slot) request carries.
+    fn probe_row(conn_idx: usize, k: usize) -> usize {
+        (conn_idx * 7 + k * 13) % PROBE_ROWS
+    }
+
+    /// Pipeline 2 requests down every connection (writes first, reads after
+    /// — genuine pipelining), then verify each answer bit-for-bit.
+    fn pump_wave(conns: &mut [TcpStream], data: &Dataset, expected: &[u32], nf: u32) {
+        let slice = conns.len().div_ceil(CLIENT_THREADS);
+        std::thread::scope(|s| {
+            for (w, chunk) in conns.chunks_mut(slice).enumerate() {
+                s.spawn(move || {
+                    let base = w * slice;
+                    let mut buf = Vec::new();
+                    for (j, stream) in chunk.iter_mut().enumerate() {
+                        let i = base + j;
+                        for k in 0..2u64 {
+                            let row = data.row(probe_row(i, k as usize));
+                            proto::encode_request(&Request::new(k, nf, row), &mut buf);
+                            stream.write_all(&buf).expect("send");
+                        }
+                        stream.flush().expect("flush");
+                    }
+                    for (j, stream) in chunk.iter_mut().enumerate() {
+                        let i = base + j;
+                        let got = collect_replies(stream, 2);
+                        for k in 0..2u64 {
+                            let probs = &got[&k];
+                            assert_eq!(probs.len(), 1, "conn {i} req {k}");
+                            assert_eq!(
+                                probs[0].to_bits(),
+                                expected[probe_row(i, k as usize)],
+                                "conn {i} req {k}: wrong bits under the flood"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    /// Sequential request/response RTTs on one fresh connection — the tail
+    /// of these is the "how responsive is the server right now" probe run
+    /// while N other connections are open.
+    fn sample_rtts(
+        addr: std::net::SocketAddr,
+        data: &Dataset,
+        expected: &[u32],
+        nf: u32,
+    ) -> Vec<Duration> {
+        let mut stream = connect_retry(addr);
+        let mut buf = Vec::new();
+        (0..RTT_SAMPLES)
+            .map(|i| {
+                let row = data.row(i % PROBE_ROWS);
+                proto::encode_request(&Request::new(i as u64, nf, row), &mut buf);
+                let t0 = Instant::now();
+                stream.write_all(&buf).expect("send");
+                stream.flush().expect("flush");
+                let got = collect_replies(&mut stream, 1);
+                let rtt = t0.elapsed();
+                assert_eq!(got[&(i as u64)][0].to_bits(), expected[i % PROBE_ROWS]);
+                rtt
+            })
+            .collect()
+    }
+
+    fn p99(samples: &mut [Duration]) -> Duration {
+        samples.sort_unstable();
+        samples[(samples.len() * 99) / 100]
+    }
+
+    #[test]
+    fn c10k_reactor_flat_p99_flat_threads_bit_identical() {
+        let needed = (2 * FLOOD_CONNS + 512) as u64;
+        match raise_nofile(needed) {
+            Ok(limit) if limit >= needed => {}
+            Ok(limit) => {
+                eprintln!(
+                    "SKIP c10k: RLIMIT_NOFILE hard cap {limit} < {needed} needed \
+                     (raise the hard limit to run the 10k-connection leg)"
+                );
+                return;
+            }
+            Err(e) => {
+                eprintln!("SKIP c10k: {e}");
+                return;
+            }
+        }
+
+        let spec = datagen::preset("aci").unwrap().with_rows(1000);
+        let data = datagen::generate(&spec, 5);
+        let model = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::quick());
+        let cfg = BatcherConfig::default();
+        assert!(cfg.reactor, "C10K proves the reactor path; default must be on");
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(NativeBackend::new(model.clone())),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            cfg,
+            Arc::new(ServeMetrics::new()),
+        )
+        .expect("server");
+        let nf = data.n_features() as u32;
+        let expected: Vec<u32> = (0..PROBE_ROWS)
+            .map(|r| model.predict_one(&data.row(r)).to_bits())
+            .collect();
+
+        // Baseline: 100 connections, verified bit-for-bit, then RTT-probed.
+        let mut base_conns: Vec<TcpStream> =
+            (0..BASE_CONNS).map(|_| connect_retry(server.addr)).collect();
+        pump_wave(&mut base_conns, &data, &expected, nf);
+        let base_p99 = p99(&mut sample_rtts(server.addr, &data, &expected, nf));
+        drop(base_conns);
+
+        // The flood: 10_000 concurrent connections, opened from the worker
+        // pool, all pipelined and verified.
+        let slice = FLOOD_CONNS.div_ceil(CLIENT_THREADS);
+        let mut flood_conns: Vec<TcpStream> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..CLIENT_THREADS)
+                .map(|w| {
+                    let addr = server.addr;
+                    s.spawn(move || {
+                        let n = slice.min(FLOOD_CONNS.saturating_sub(w * slice));
+                        (0..n).map(|_| connect_retry(addr)).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(flood_conns.len(), FLOOD_CONNS);
+
+        // Thread count ≪ connection count, BY CONSTRUCTION: this number
+        // covers the whole process — server loops + batcher workers + the
+        // 16 client workers + libtest — and a thread-per-connection server
+        // could not be under it with 10k connections open.
+        let threads = thread_count();
+        assert!(
+            threads < 100,
+            "{threads} threads alive with {FLOOD_CONNS} connections open — \
+             per-connection threads are back?"
+        );
+
+        pump_wave(&mut flood_conns, &data, &expected, nf);
+        let flood_p99 = p99(&mut sample_rtts(server.addr, &data, &expected, nf));
+        drop(flood_conns);
+
+        // Flat tail: the 10k-connection p99 stays within a generous
+        // constant factor of the 100-connection p99. The bound is loose to
+        // survive noisy shared CI; a thread-per-connection or O(conns)
+        // dispatch regression blows through it anyway.
+        assert!(
+            flood_p99 < base_p99 * 10 + Duration::from_millis(200),
+            "p99 collapsed under the flood: base {base_p99:?} vs 10k-conn {flood_p99:?}"
+        );
+    }
+}
+
 #[test]
 fn async_and_sync_calls_share_a_client_safely() {
     // A second, smaller storm where raw async predicts and blocking

@@ -236,6 +236,11 @@ fn batcher_conservation_under_random_load() {
                 max_wait: std::time::Duration::from_micros(g.usize(0..500) as u64),
                 workers: g.usize(1..4),
                 stream: g.bool(0.5),
+                // Flip I/O paths per case so the property (every row answered
+                // exactly once, bit-identical) covers reactor and threaded
+                // serving alike. Non-Linux ignores the flag.
+                reactor: g.bool(0.5),
+                ..Default::default()
             },
             Arc::new(ServeMetrics::new()),
         )
