@@ -15,6 +15,9 @@
 //!   steal_skew:  block completion under ONE pinned-hot shard, steal=on vs
 //!                steal=off, shards {2, 4, 8} — work-stealing's tail win
 //!                (p50/p99 recorded alongside the mean);
+//!   snapshot_load: model-lifecycle load path — binary snapshot parse +
+//!                zero-copy ForestView vs full materialization vs the
+//!                legacy JSON tables load;
 //!   RPC:         loopback round trip (netsim OFF) at several batch sizes;
 //!   stream_vs_monolithic: client-observed full-block RPC latency and
 //!                time-to-first-span, streamed CHUNK responses vs one
@@ -291,6 +294,34 @@ fn main() {
                 eprintln!("  [{label}] {}", pool.stats().report());
             }
         }
+    }
+
+    // --- snapshot_load: zero-copy model load vs full rebuild ---------------
+    // The model-lifecycle path (`snapshot`): one parse + checksum pass over
+    // the binary buffer, then (a) serving straight off the borrowed
+    // ForestView — the zero-copy hot-swap load — vs (b) materializing owned
+    // tables + forest, vs (c) the JSON tables load the snapshot replaces.
+    {
+        use lrwbins::snapshot::Snapshot;
+        let bytes = Snapshot::write(&tables, &flat);
+        eprintln!("  [snapshot_load] snapshot is {} bytes", bytes.len());
+        bench.run_items("snapshot_load write (serialize + checksum)", 1, || {
+            std::hint::black_box(Snapshot::write(&tables, &flat).len());
+        });
+        bench.run_items("snapshot_load parse + zero-copy forest_view", 1, || {
+            let s = Snapshot::parse(&bytes).unwrap();
+            std::hint::black_box(s.forest_view().n_nodes());
+        });
+        bench.run_items("snapshot_load parse + materialize tables+forest", 1, || {
+            let s = Snapshot::parse(&bytes).unwrap();
+            let t = s.tables().unwrap();
+            std::hint::black_box((s.forest().feat.len(), t.n_features));
+        });
+        let tables_json = tables.to_json().to_string();
+        bench.run_items("snapshot_load JSON tables parse (legacy path)", 1, || {
+            let j = lrwbins::util::json::Json::parse(&tables_json).unwrap();
+            std::hint::black_box(ServingTables::from_json(&j).unwrap().n_features);
+        });
     }
 
     // --- RPC round trip (netsim OFF → pure stack cost) --------------------

@@ -16,6 +16,11 @@ pub struct ServeConfig {
     pub tables_path: PathBuf,
     /// Second-stage GBDT model (JSON from `gbdt`).
     pub gbdt_path: PathBuf,
+    /// Binary model snapshot (`.snap`, see `snapshot`): when non-empty the
+    /// server loads BOTH stages from this one checksummed buffer instead of
+    /// the `tables_path`/`gbdt_path` JSON pair — the production load path
+    /// (`lrwbins train` writes it next to the JSON artifacts).
+    pub snapshot_path: PathBuf,
     /// Bind address for the backend service.
     pub bind: String,
     /// Backend kind: "pjrt" (AOT artifact) or "native" (Rust GBDT).
@@ -68,6 +73,7 @@ impl Default for ServeConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             tables_path: PathBuf::from("data/model.tables.json"),
             gbdt_path: PathBuf::from("data/model.gbdt.json"),
+            snapshot_path: PathBuf::new(),
             bind: "127.0.0.1:7171".into(),
             backend: "pjrt".into(),
             stage1_simd: "auto".into(),
@@ -96,6 +102,7 @@ impl ServeConfig {
         j.set("artifacts_dir", Json::Str(self.artifacts_dir.display().to_string()));
         j.set("tables_path", Json::Str(self.tables_path.display().to_string()));
         j.set("gbdt_path", Json::Str(self.gbdt_path.display().to_string()));
+        j.set("snapshot_path", Json::Str(self.snapshot_path.display().to_string()));
         j.set("bind", Json::Str(self.bind.clone()));
         j.set("backend", Json::Str(self.backend.clone()));
         j.set("stage1_simd", Json::Str(self.stage1_simd.clone()));
@@ -136,6 +143,7 @@ impl ServeConfig {
             artifacts_dir: PathBuf::from(s("artifacts_dir", &d.artifacts_dir.display().to_string())),
             tables_path: PathBuf::from(s("tables_path", &d.tables_path.display().to_string())),
             gbdt_path: PathBuf::from(s("gbdt_path", &d.gbdt_path.display().to_string())),
+            snapshot_path: PathBuf::from(s("snapshot_path", &d.snapshot_path.display().to_string())),
             bind: s("bind", &d.bind),
             backend: s("backend", &d.backend),
             stage1_simd: s("stage1_simd", &d.stage1_simd),
@@ -345,6 +353,20 @@ mod tests {
         let opts = c2.predict_options();
         assert!(opts.deadline.is_some());
         assert!(ServeConfig::default().predict_options().deadline.is_none());
+    }
+
+    #[test]
+    fn snapshot_path_roundtrips_and_defaults_empty() {
+        // Default: no snapshot — the JSON pair is the model source.
+        let d = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.snapshot_path, PathBuf::new());
+
+        let c = ServeConfig {
+            snapshot_path: PathBuf::from("data/model.snap"),
+            ..Default::default()
+        };
+        let c2 = ServeConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(c2.snapshot_path, PathBuf::from("data/model.snap"));
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::rpc::client::PendingPredict;
 use crate::rpc::fault::is_breaker_open;
 use crate::rpc::{PredictOptions, RpcClient};
 use crate::runtime::{ModelId, ShardPool};
+use crate::snapshot::Snapshot;
 use crate::tabular::RowBlock;
 use crate::telemetry::{CpuTimer, ServeMetrics};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
@@ -291,6 +292,41 @@ impl Coordinator {
     /// (unavailable requests clamp).
     pub fn set_stage1_dispatch(&mut self, d: Stage1Dispatch) -> Stage1Dispatch {
         self.tables.set_dispatch(d)
+    }
+
+    /// Live model reload from a parsed [`crate::snapshot::Snapshot`]: swap
+    /// this tenant's stage-1 tables and — in embedded mode — hot-swap its
+    /// second-stage forest in the shared [`ShardPool`], under traffic
+    /// (in-flight batches finish on the version they were stamped with; see
+    /// [`ShardPool::swap`]).
+    ///
+    /// The snapshot must serve the same feature width as the current tables:
+    /// `rpc_row_len` and every caller's row layout were sized against it at
+    /// construction, so a width change is a redeploy, not a reload, and is
+    /// rejected before anything is touched. On any error the coordinator is
+    /// unchanged. Returns the pool-side model version now serving (0 when
+    /// the second stage is RPC or absent — those backends own their own
+    /// model lifecycle and only the stage-1 tables are swapped).
+    pub fn reload(&mut self, snapshot: &Snapshot) -> Result<u32, String> {
+        let mut tables = snapshot.tables()?;
+        if tables.n_features != self.tables.n_features {
+            return Err(format!(
+                "reload: snapshot serves {} features, coordinator was built for {} \
+                 (feature-width changes require a new coordinator)",
+                tables.n_features, self.tables.n_features
+            ));
+        }
+        // Preserve a forced kernel tier across the reload (A/B runs pin it).
+        tables.set_dispatch(self.tables.dispatch());
+        let version = match &self.fallback {
+            Some(SecondStage::Embedded { pool, model }) => pool.swap(*model, snapshot.forest())?,
+            _ => 0,
+        };
+        self.tables = tables;
+        self.metrics
+            .model_reloads
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(version)
     }
 
     fn pad_for_rpc(&self, row: &[f32], buf: &mut Vec<f32>) {
@@ -1569,6 +1605,93 @@ mod tests {
         }
         // And both tenants' traffic really went through the one pool.
         assert!(pool.stats().spans_completed() + pool.stats().inline_runs.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    }
+
+    /// A self-contained trained stack over `n` numeric features, with half
+    /// the bins routed so the coordinator really exercises the second stage.
+    /// Distinct per seed, so a reload visibly changes both stages.
+    fn snap_stack(
+        n: usize,
+        seed: u64,
+    ) -> (crate::tabular::Dataset, ServingTables, crate::gbdt::GbdtModel) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut d = crate::tabular::Dataset::new(crate::tabular::Schema::numeric(n));
+        for _ in 0..1500 {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let y = (x[0] * x[1] + x[n - 1] > 0.2) as u8 as f32;
+            d.push_row(&x, y);
+        }
+        let order: Vec<usize> = (0..n).collect();
+        let mut first = LrwBinsModel::train(
+            &d,
+            &order,
+            &LrwBinsParams {
+                b: 2,
+                n_bin_features: 3,
+                n_infer_features: n,
+                min_bin_rows: 20,
+                ..Default::default()
+            },
+        );
+        let route: std::collections::HashSet<u32> =
+            first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+        first.set_route(route);
+        let second = crate::gbdt::train(&d, &crate::gbdt::GbdtParams::quick());
+        (d, ServingTables::from_model(&first), second)
+    }
+
+    #[test]
+    fn reload_swaps_both_stages_under_embedded_fallback() {
+        let (data, tables_a, second_a) = snap_stack(5, 5);
+        let (_, tables_b, second_b) = snap_stack(5, 11);
+        let pool = Arc::new(ShardPool::new(2));
+        let id = pool.register(second_a.flatten());
+        let mut coord =
+            Coordinator::new_embedded(tables_a, pool.clone(), id, Arc::new(ServeMetrics::new()));
+
+        let serve = |coord: &Coordinator, model: &crate::gbdt::GbdtModel| {
+            let mut row = Vec::new();
+            let mut misses = 0;
+            for r in 0..200 {
+                data.row_into(r, &mut row);
+                let (p, served) = coord.predict(&row).unwrap();
+                if served == Served::Rpc {
+                    misses += 1;
+                    assert_eq!(
+                        p.to_bits(),
+                        model.predict_one(&row).to_bits(),
+                        "row {r}: miss must score on the live model version"
+                    );
+                }
+            }
+            assert!(misses > 0, "stack must route some rows to the second stage");
+        };
+        serve(&coord, &second_a);
+
+        // Reload from snapshot bytes — the full production path: write →
+        // parse → validate → swap tables + pooled forest.
+        let bytes = crate::snapshot::Snapshot::write(&tables_b, &second_b.flatten());
+        let snap = Snapshot::parse(&bytes).unwrap();
+        assert_eq!(coord.reload(&snap).unwrap(), 2, "register was v1, reload is v2");
+        assert_eq!(coord.tables, tables_b, "stage-1 tables swapped");
+        serve(&coord, &second_b);
+
+        // The drained old version stays resolvable in the shadow window.
+        let (shadow_v, _) = pool.shadow(id).expect("previous version windowed");
+        assert_eq!(shadow_v, 1);
+
+        // A feature-width change is a redeploy, not a reload: rejected, and
+        // the coordinator is untouched.
+        let (_, tables_w, second_w) = snap_stack(3, 7);
+        let wide = crate::snapshot::Snapshot::write(&tables_w, &second_w.flatten());
+        let err = coord.reload(&Snapshot::parse(&wide).unwrap()).unwrap_err();
+        assert!(err.contains("features"), "err: {err}");
+        assert_eq!(coord.tables, tables_b, "failed reload must not touch tables");
+        assert_eq!(pool.version(id), 2, "failed reload must not bump the pool");
+        serve(&coord, &second_b);
+
+        let load = |c: &std::sync::atomic::AtomicU64| c.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(load(&coord.metrics.model_reloads), 1, "only the successful reload counts");
     }
 
     #[test]

@@ -95,6 +95,24 @@ pub struct ForestScratch {
     margins: Vec<f64>,
 }
 
+/// Borrowed SoA forest: the same five arrays as [`FlatForest`], as slices.
+///
+/// Every walk kernel lives here; [`FlatForest`] delegates through
+/// [`FlatForest::view`]. The point of the split is the snapshot loader —
+/// the arrays of a parsed snapshot are served straight out of its one
+/// contiguous buffer (zero-copy) through this view, with byte-for-byte the
+/// same kernels the owned arena runs.
+#[derive(Clone, Copy, Debug)]
+pub struct ForestView<'a> {
+    pub feat: &'a [u32],
+    pub thresh: &'a [f32],
+    pub lo: &'a [u32],
+    pub value: &'a [f32],
+    pub roots: &'a [u32],
+    pub base_score: f64,
+    pub n_features: usize,
+}
+
 impl FlatForest {
     /// Flatten a trained model. The model stays the source of truth for
     /// training-side concerns (importance, JSON, dense export); this is the
@@ -112,6 +130,11 @@ impl FlatForest {
 
     /// Shred a build-time AoS node list (BFS-ordered, adjacent children)
     /// into the SoA arena.
+    ///
+    /// Deliberately permissive: no structural validation, so tests can
+    /// build pathological forests (poison nodes, shared roots). Untrusted
+    /// inputs — snapshot bytes above all — must go through
+    /// [`FlatForest::try_from_nodes`] or [`FlatForest::validate`] instead.
     pub fn from_nodes(
         nodes: &[FlatNode],
         roots: Vec<u32>,
@@ -129,6 +152,41 @@ impl FlatForest {
         }
     }
 
+    /// [`FlatForest::from_nodes`] for untrusted input: builds the arena and
+    /// then [`FlatForest::validate`]s it, so a corrupt forest is rejected at
+    /// load instead of walking out of bounds in the lane-tiled kernel.
+    pub fn try_from_nodes(
+        nodes: &[FlatNode],
+        roots: Vec<u32>,
+        base_score: f64,
+        n_features: usize,
+    ) -> Result<FlatForest, String> {
+        let forest = FlatForest::from_nodes(nodes, roots, base_score, n_features);
+        forest.validate()?;
+        Ok(forest)
+    }
+
+    /// Check every structural invariant the walk kernels index by — see
+    /// [`ForestView::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        self.view().validate()
+    }
+
+    /// Borrow the arena as a [`ForestView`] — the type every walk kernel
+    /// is written against.
+    #[inline]
+    pub fn view(&self) -> ForestView<'_> {
+        ForestView {
+            feat: &self.feat,
+            thresh: &self.thresh,
+            lo: &self.lo,
+            value: &self.value,
+            roots: &self.roots,
+            base_score: self.base_score,
+            n_features: self.n_features,
+        }
+    }
+
     /// Nodes in the arena.
     pub fn n_nodes(&self) -> usize {
         self.feat.len()
@@ -138,8 +196,134 @@ impl FlatForest {
     /// [`GbdtModel::predict_margin_one`].
     #[inline]
     pub fn predict_margin_one(&self, row: &[f32]) -> f64 {
+        self.view().predict_margin_one(row)
+    }
+
+    /// Probability for one row — bit-identical to
+    /// [`GbdtModel::predict_one`].
+    #[inline]
+    pub fn predict_one(&self, row: &[f32]) -> f32 {
+        self.view().predict_one(row)
+    }
+
+    /// Probabilities for a columnar block; `out` is cleared and refilled
+    /// with one probability per row. Bit-identical to per-row
+    /// [`GbdtModel::predict_one`].
+    pub fn predict_block(&self, block: &RowBlock, scratch: &mut ForestScratch, out: &mut Vec<f32>) {
+        self.view().predict_block(block, scratch, out);
+    }
+
+    /// Per-row reference walk over a block — the A/B baseline for the
+    /// lane-tiled kernel (the `forest_soa` bench section) and the anchor
+    /// the property tests compare it against. Bit-identical to
+    /// [`FlatForest::predict_block`].
+    pub fn predict_block_scalar(
+        &self,
+        block: &RowBlock,
+        scratch: &mut ForestScratch,
+        out: &mut Vec<f32>,
+    ) {
+        self.view().predict_block_scalar(block, scratch, out);
+    }
+
+    /// Probabilities for row-major flat rows (the RPC wire layout), written
+    /// into `out` (`rows.len() >= out.len() * row_len`; `row_len` must cover
+    /// `n_features`). Taking a sub-slice of `out` shards the batch.
+    pub fn predict_flat_rows(
+        &self,
+        rows: &[f32],
+        row_len: usize,
+        scratch: &mut ForestScratch,
+        out: &mut [f32],
+    ) {
+        self.view().predict_flat_rows(rows, row_len, scratch, out);
+    }
+}
+
+impl ForestView<'_> {
+    /// Nodes in the arena.
+    pub fn n_nodes(&self) -> usize {
+        self.feat.len()
+    }
+
+    /// Materialize an owned [`FlatForest`] from the view — five straight
+    /// `memcpy`s of the SoA arrays, no per-node rebuild.
+    pub fn materialize(&self) -> FlatForest {
+        FlatForest {
+            feat: self.feat.to_vec(),
+            thresh: self.thresh.to_vec(),
+            lo: self.lo.to_vec(),
+            value: self.value.to_vec(),
+            roots: self.roots.to_vec(),
+            base_score: self.base_score,
+            n_features: self.n_features,
+        }
+    }
+
+    /// Check every structural invariant the walk kernels index by:
+    ///
+    /// * the four SoA arrays are parallel (equal lengths);
+    /// * every root is in-arena;
+    /// * every interior node's children `lo`/`lo + 1` are in-arena, FOLLOW
+    ///   their parent (`lo > i` — the BFS emission order), and its split
+    ///   feature is `< n_features`.
+    ///
+    /// A forest that passes cannot read out of bounds in the walk kernels
+    /// for any input row of width `>= n_features`, and every walk
+    /// terminates (indices strictly increase) — the snapshot loader's
+    /// panic-free guarantee.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.feat.len();
+        if self.thresh.len() != n || self.lo.len() != n || self.value.len() != n {
+            return Err(format!(
+                "SoA arrays not parallel: feat={n} thresh={} lo={} value={}",
+                self.thresh.len(),
+                self.lo.len(),
+                self.value.len()
+            ));
+        }
+        for (t, &root) in self.roots.iter().enumerate() {
+            if root as usize >= n {
+                return Err(format!("tree {t}: root {root} out of arena (n_nodes={n})"));
+            }
+        }
+        for i in 0..n {
+            let f = self.feat[i];
+            if f == LEAF {
+                continue;
+            }
+            if f as usize >= self.n_features {
+                return Err(format!(
+                    "node {i}: split feature {f} >= n_features {}",
+                    self.n_features
+                ));
+            }
+            // Both children live at lo and lo + 1; BFS order places them
+            // strictly after their parent, which is also what guarantees
+            // every walk terminates on arbitrary (even adversarial) bytes.
+            if self.lo[i] as usize <= i {
+                return Err(format!(
+                    "node {i}: child index {} does not follow its parent (BFS order)",
+                    self.lo[i]
+                ));
+            }
+            if self.lo[i] as usize + 1 >= n {
+                return Err(format!(
+                    "node {i}: children at {}..={} out of arena (n_nodes={n})",
+                    self.lo[i],
+                    self.lo[i] as u64 + 1
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Margin for one row — bit-identical to
+    /// [`GbdtModel::predict_margin_one`].
+    #[inline]
+    pub fn predict_margin_one(&self, row: &[f32]) -> f64 {
         let mut m = self.base_score;
-        for &root in &self.roots {
+        for &root in self.roots {
             let mut i = root as usize;
             loop {
                 let f = self.feat[i];
@@ -161,9 +345,7 @@ impl FlatForest {
         sigmoid(self.predict_margin_one(row)) as f32
     }
 
-    /// Probabilities for a columnar block; `out` is cleared and refilled
-    /// with one probability per row. Bit-identical to per-row
-    /// [`GbdtModel::predict_one`].
+    /// See [`FlatForest::predict_block`].
     pub fn predict_block(&self, block: &RowBlock, scratch: &mut ForestScratch, out: &mut Vec<f32>) {
         let n = block.n_rows();
         out.clear();
@@ -171,10 +353,7 @@ impl FlatForest {
         self.predict_with(n, |r, f| block.get(r, f as usize), scratch, out, true);
     }
 
-    /// Per-row reference walk over a block — the A/B baseline for the
-    /// lane-tiled kernel (the `forest_soa` bench section) and the anchor
-    /// the property tests compare it against. Bit-identical to
-    /// [`FlatForest::predict_block`].
+    /// See [`FlatForest::predict_block_scalar`].
     pub fn predict_block_scalar(
         &self,
         block: &RowBlock,
@@ -187,9 +366,7 @@ impl FlatForest {
         self.predict_with(n, |r, f| block.get(r, f as usize), scratch, out, false);
     }
 
-    /// Probabilities for row-major flat rows (the RPC wire layout), written
-    /// into `out` (`rows.len() >= out.len() * row_len`; `row_len` must cover
-    /// `n_features`). Taking a sub-slice of `out` shards the batch.
+    /// See [`FlatForest::predict_flat_rows`].
     pub fn predict_flat_rows(
         &self,
         rows: &[f32],
@@ -217,8 +394,8 @@ impl FlatForest {
         let margins = &mut scratch.margins;
         margins.clear();
         margins.resize(n, self.base_score);
-        let (feat, thresh, lo, value) = (&self.feat, &self.thresh, &self.lo, &self.value);
-        for &root in &self.roots {
+        let (feat, thresh, lo, value) = (self.feat, self.thresh, self.lo, self.value);
+        for &root in self.roots {
             let mut r = 0usize;
             if lanes {
                 // Lane-tiled walk: LANES independent row walks advance in
@@ -382,6 +559,89 @@ mod tests {
                 // Both children (lo, lo + 1) must be in-arena.
                 assert!(flat.lo[i] as usize + 1 < flat.n_nodes());
             }
+        }
+    }
+
+    #[test]
+    fn validate_accepts_every_trained_forest() {
+        let (m, _) = trained();
+        let flat = FlatForest::from_model(&m);
+        flat.validate().expect("trained forests are well-formed");
+        // And the fallible constructor round-trips the same nodes.
+        let mut nodes = Vec::new();
+        let mut roots = Vec::new();
+        for t in &m.trees {
+            roots.push(nodes.len() as u32);
+            t.flatten_into(&mut nodes);
+        }
+        let rebuilt =
+            FlatForest::try_from_nodes(&nodes, roots, m.base_score, m.n_features).unwrap();
+        assert_eq!(rebuilt.n_nodes(), flat.n_nodes());
+    }
+
+    #[test]
+    fn validate_rejects_corrupt_arenas() {
+        let (m, _) = trained();
+        let good = FlatForest::from_model(&m);
+        let interior = (0..good.n_nodes())
+            .find(|&i| good.feat[i] != LEAF)
+            .expect("trained forest has splits");
+
+        // Out-of-arena root.
+        let mut f = good.clone();
+        f.roots[0] = f.n_nodes() as u32;
+        assert!(f.validate().unwrap_err().contains("root"));
+
+        // Split feature past the row width.
+        let mut f = good.clone();
+        f.feat[interior] = f.n_features as u32;
+        assert!(f.validate().unwrap_err().contains("n_features"));
+
+        // Children walking off the end of the arena.
+        let mut f = good.clone();
+        f.lo[interior] = f.n_nodes() as u32;
+        assert!(f.validate().is_err());
+
+        // A backward child edge (cycle) — must be rejected so walks on
+        // untrusted bytes always terminate.
+        let mut f = good.clone();
+        f.lo[interior] = interior as u32;
+        assert!(f.validate().unwrap_err().contains("BFS"));
+
+        // Non-parallel SoA arrays.
+        let mut f = good.clone();
+        f.thresh.pop();
+        assert!(f.validate().unwrap_err().contains("parallel"));
+
+        // try_from_nodes surfaces the same failure.
+        let nodes = [FlatNode { feat: 0, thresh: 0.0, lo: 7, value: 0.0 }];
+        assert!(FlatForest::try_from_nodes(&nodes, vec![0], 0.0, 4).is_err());
+    }
+
+    #[test]
+    fn view_serves_identically_and_materializes_round_trip() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let view = flat.view();
+        view.validate().expect("view validates like the owner");
+        let rows: Vec<Vec<f32>> = (0..80).map(|r| d.row(r)).collect();
+        let block = RowBlock::from_rows(&rows);
+        let mut scratch = ForestScratch::default();
+        let (mut owned, mut viewed) = (Vec::new(), Vec::new());
+        flat.predict_block(&block, &mut scratch, &mut owned);
+        view.predict_block(&block, &mut scratch, &mut viewed);
+        for r in 0..rows.len() {
+            assert_eq!(owned[r].to_bits(), viewed[r].to_bits(), "row {r}");
+        }
+        // Materialization is a bit-exact copy of the arena.
+        let copy = view.materialize();
+        assert_eq!(copy.feat, flat.feat);
+        assert_eq!(copy.roots, flat.roots);
+        assert_eq!(copy.base_score.to_bits(), flat.base_score.to_bits());
+        let mut from_copy = Vec::new();
+        copy.predict_block(&block, &mut scratch, &mut from_copy);
+        for r in 0..rows.len() {
+            assert_eq!(owned[r].to_bits(), from_copy[r].to_bits(), "row {r}");
         }
     }
 

@@ -14,7 +14,7 @@ pub mod train;
 pub mod tree;
 
 pub use binner::FeatureBinner;
-pub use flat::{FlatForest, FlatNode, ForestScratch};
+pub use flat::{FlatForest, FlatNode, ForestScratch, ForestView};
 pub use train::train;
 pub use tree::{DenseTree, Node, Tree, LEAF};
 

@@ -208,6 +208,28 @@ pub fn build(cfg: &StackConfig) -> Result<Stack> {
     })
 }
 
+/// Dump a built stack's trained models (stage-1 tables + flattened
+/// second-stage forest) as one binary snapshot — the artifact that
+/// `lrwbins predict --snapshot`, `ServeConfig::snapshot_path` and
+/// [`Coordinator::reload`] consume.
+pub fn dump_snapshot(stack: &Stack, path: &std::path::Path) -> std::io::Result<()> {
+    crate::snapshot::Snapshot::write_file(
+        path,
+        &stack.coordinator.tables,
+        &stack.pipeline.second.flatten(),
+    )
+}
+
+/// Load the serving pair back from a snapshot file — the load half of
+/// [`dump_snapshot`]. Corrupt or truncated bytes are an `Err`, never a
+/// panic (see [`crate::snapshot`]).
+pub fn load_snapshot(
+    path: &std::path::Path,
+) -> std::result::Result<(ServingTables, crate::gbdt::FlatForest), String> {
+    let s = crate::snapshot::Snapshot::read_file(path)?;
+    Ok((s.tables()?, s.forest()))
+}
+
 #[cfg(feature = "pjrt")]
 fn manifest_shapes(dir: &std::path::Path) -> Result<crate::runtime::Shapes> {
     // Engine::load parses these; we need them before the worker spawns to

@@ -38,8 +38,10 @@
 //!   register their forests in ONE shared pool
 //!   ([`runtime::ShardPool::register`] +
 //!   [`coordinator::Coordinator::new_embedded`]) and fall back to it
-//!   in-process instead of over RPC: per-shard replicas are materialized
-//!   lazily per model, so co-tenants share cores without sharing hot state.
+//!   in-process instead of over RPC: per-shard replicas are pre-materialized
+//!   off the hot path at `register`/`swap` time and carry a version stamp,
+//!   so co-tenants share cores without sharing hot state and a model swap
+//!   never stalls a serving shard.
 //!
 //! Block serving overlaps stages end to end: stage-1 hits are readable
 //! while the coalesced miss RPC is in flight, fallback spans are consumable
@@ -93,6 +95,46 @@
 //!   jobs (`dead_conn_jobs`) exactly like a dead reader thread did.
 //!   [`telemetry::ReactorStats`] exposes per-loop connection counts, epoll
 //!   wakeups, write-queue high-water marks, and backpressure stalls.
+//!
+//! ## Model lifecycle
+//!
+//! Deployment is a product-code concern here (the paper embeds stage 1 *in*
+//! the product), so the crate owns the full model lifecycle:
+//!
+//! * **Snapshot format** ([`snapshot`]) — a trained stack (stage-1
+//!   [`lrwbins::ServingTables`] + SoA [`gbdt::FlatForest`]) serializes to
+//!   one length-prefixed, checksummed, 8-byte-aligned binary buffer,
+//!   section-per-array:
+//!
+//!   | region        | contents                                            |
+//!   |---------------|-----------------------------------------------------|
+//!   | header (24 B) | magic `LRWBSNAP`, version, section count, total len |
+//!   | section table | per section: tag, offset, length, FNV-1a-64 checksum|
+//!   | payloads      | raw LE array bytes, every offset 8-aligned          |
+//!
+//!   A parsed [`snapshot::Snapshot`] serves the forest **zero-copy** out of
+//!   the buffer ([`snapshot::Snapshot::forest_view`] →
+//!   [`gbdt::ForestView`]) — no node rebuild; materializing an owned forest
+//!   is five `memcpy`s. `lrwbins train` writes `<name>.snap`;
+//!   `lrwbins predict --snapshot` serves from it.
+//! * **Panic-free load** — [`snapshot::Snapshot::parse`] is fallible end to
+//!   end: structural checks (magic/version/section table/bounds/checksums,
+//!   overflow-safe, no allocation sized by untrusted bytes) then semantic
+//!   checks over borrowed slices ([`lrwbins::TablePartsRef::validate`],
+//!   [`gbdt::ForestView::validate`] — every feature id in range, every
+//!   child edge in-arena and forward so walks terminate). Corrupt bytes are
+//!   an `Err` at load, never a panic mid-batch.
+//! * **Live hot-swap** — [`runtime::ShardPool::swap`] flips a model's
+//!   registry `Arc` between batches and bumps its version; every span is
+//!   stamped with the version current at submit, so a batch is served
+//!   entirely by one model version, bit-stable, even with a swap racing it.
+//!   Worker replica caches re-materialize from pre-built clones on stamp
+//!   mismatch and **evict** the drained old version (counted in
+//!   [`telemetry::ShardStats`]). A **two-version window** keeps the
+//!   previous forest resolvable while its in-flight spans drain — and
+//!   doubles as the shadow-scoring hook ([`runtime::ShardPool::shadow`]).
+//!   [`coordinator::Coordinator::reload`] ties it together: parse snapshot
+//!   → validate → swap tables + embedded forest, under traffic.
 //!
 //! ## Failure model
 //!
@@ -154,6 +196,7 @@ pub mod rpc;
 /// `--features pjrt` (the `xla` bindings are not on crates.io; see
 /// `Cargo.toml` for how to enable it).
 pub mod runtime;
+pub mod snapshot;
 pub mod telemetry;
 pub mod tabular;
 pub mod util;

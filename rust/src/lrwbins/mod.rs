@@ -13,7 +13,7 @@ pub mod cascade;
 pub mod tables;
 
 pub use binning::CombinedBinner;
-pub use tables::{BlockScratch, ServingTables, Stage1Dispatch, TableParts, LANE};
+pub use tables::{BlockScratch, ServingTables, Stage1Dispatch, TableParts, TablePartsRef, LANE};
 
 use crate::lr::{self, LrModel, LrParams};
 use crate::tabular::stats::Normalizer;

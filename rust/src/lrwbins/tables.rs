@@ -201,6 +201,132 @@ pub struct TableParts {
     pub route: Vec<u8>,
 }
 
+/// Borrowed view of [`TableParts`] — the validation surface shared by the
+/// owned construction path ([`ServingTables::try_from_parts`]) and the
+/// zero-copy snapshot loader (`crate::snapshot`), which validates table
+/// invariants directly over slices of the snapshot buffer before
+/// materializing anything.
+#[derive(Clone, Copy, Debug)]
+pub struct TablePartsRef<'a> {
+    pub n_features: usize,
+    pub bin_features: &'a [u32],
+    pub quantiles: &'a [f32],
+    pub q_max: usize,
+    pub strides: &'a [u32],
+    pub total_bins: u32,
+    pub means: &'a [f64],
+    pub inv_stds: &'a [f64],
+    pub infer_features: &'a [u32],
+    pub weights: &'a [f32],
+    pub global_weights: &'a [f32],
+    pub route: &'a [u8],
+}
+
+impl TablePartsRef<'_> {
+    /// Every shape AND index invariant the serve-time kernels rely on,
+    /// checked without allocating. See [`ServingTables::try_from_parts`]
+    /// for the invariant-by-invariant rationale.
+    pub fn validate(&self) -> Result<(), String> {
+        let p = self;
+        if p.quantiles.len() != p.bin_features.len() * p.q_max {
+            return Err(format!(
+                "quantiles must be [n_bin_features × q_max]: {} != {} × {}",
+                p.quantiles.len(),
+                p.bin_features.len(),
+                p.q_max
+            ));
+        }
+        if p.strides.len() != p.bin_features.len() {
+            return Err(format!(
+                "one stride per bin feature: {} strides, {} bin features",
+                p.strides.len(),
+                p.bin_features.len()
+            ));
+        }
+        if p.route.len() != p.total_bins as usize {
+            return Err(format!(
+                "one route flag per bin: {} flags, {} bins",
+                p.route.len(),
+                p.total_bins
+            ));
+        }
+        if p.weights.len() != p.total_bins as usize * (p.infer_features.len() + 1) {
+            return Err(format!(
+                "weights must be [total_bins × (n_infer + 1)]: {} != {} × {}",
+                p.weights.len(),
+                p.total_bins,
+                p.infer_features.len() + 1
+            ));
+        }
+        if p.global_weights.len() != p.infer_features.len() + 1 {
+            return Err(format!(
+                "global weights must be [n_infer + 1]: {} != {}",
+                p.global_weights.len(),
+                p.infer_features.len() + 1
+            ));
+        }
+        if p.means.len() != p.n_features || p.inv_stds.len() != p.n_features {
+            return Err(format!(
+                "one mean and inv_std per raw feature: {} means, {} inv_stds, {} features",
+                p.means.len(),
+                p.inv_stds.len(),
+                p.n_features
+            ));
+        }
+        for (what, ids) in [("bin", p.bin_features), ("infer", p.infer_features)] {
+            if let Some(&f) = ids.iter().find(|&&f| f as usize >= p.n_features) {
+                return Err(format!(
+                    "{what} feature {f} out of range (n_features={})",
+                    p.n_features
+                ));
+            }
+        }
+        // The kernels index weights/route by the combined id Σ bᵢ·strideᵢ.
+        // Digit bᵢ counts `x > e` over feature i's q_max edge slots; a +inf
+        // (or NaN) padding edge can never fire, so the largest reachable
+        // digit is the count of satisfiable edges, and the largest reachable
+        // id is Σ dᵢ·strideᵢ. Checked in u64 so a hostile stride table
+        // cannot wrap the check itself.
+        let max_id: u64 = p
+            .strides
+            .iter()
+            .zip(p.quantiles.chunks(p.q_max.max(1)))
+            .map(|(&s, edges)| {
+                let d = edges.iter().filter(|&&e| e < f32::INFINITY).count();
+                d as u64 * s as u64
+            })
+            .sum();
+        if max_id >= p.total_bins as u64 {
+            return Err(format!(
+                "strides × edge counts reach bin id {max_id} but total_bins is {} — \
+                 the weight/route tables would be indexed out of bounds",
+                p.total_bins
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl TableParts {
+    /// Borrowed view for validation without consuming the parts.
+    pub fn as_ref(&self) -> TablePartsRef<'_> {
+        TablePartsRef {
+            n_features: self.n_features,
+            bin_features: &self.bin_features,
+            quantiles: &self.quantiles,
+            q_max: self.q_max,
+            strides: &self.strides,
+            total_bins: self.total_bins,
+            means: &self.means,
+            inv_stds: &self.inv_stds,
+            infer_features: &self.infer_features,
+            weights: &self.weights,
+            global_weights: &self.global_weights,
+            route: &self.route,
+        }
+    }
+}
+
 /// Dense, allocation-free-on-read serving tables.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServingTables {
@@ -295,35 +421,38 @@ impl ServingTables {
     ///
     /// # Panics
     ///
-    /// On inconsistent array sizes — the kernels index by these invariants,
-    /// so a malformed table must fail HERE, at the construction site, not
-    /// with an out-of-bounds slice mid-serve. (`from_json` pre-validates
-    /// the same invariants and returns `Err` instead.)
+    /// On any invariant [`ServingTables::try_from_parts`] rejects — the
+    /// kernels index by these invariants, so a malformed table must fail
+    /// HERE, at the construction site, not with an out-of-bounds slice
+    /// mid-serve. Untrusted inputs (`from_json`, the snapshot loader) go
+    /// through `try_from_parts` and get an `Err` instead.
     pub fn from_parts(p: TableParts) -> ServingTables {
-        assert_eq!(
-            p.quantiles.len(),
-            p.bin_features.len() * p.q_max,
-            "quantiles must be [n_bin_features × q_max]"
-        );
-        assert_eq!(p.strides.len(), p.bin_features.len(), "one stride per bin feature");
-        assert_eq!(p.route.len(), p.total_bins as usize, "one route flag per bin");
-        assert_eq!(
-            p.weights.len(),
-            p.total_bins as usize * (p.infer_features.len() + 1),
-            "weights must be [total_bins × (n_infer + 1)]"
-        );
-        assert_eq!(
-            p.global_weights.len(),
-            p.infer_features.len() + 1,
-            "global weights must be [n_infer + 1]"
-        );
-        assert_eq!(p.means.len(), p.n_features, "one mean per raw feature");
-        assert_eq!(p.inv_stds.len(), p.n_features, "one inv_std per raw feature");
+        ServingTables::try_from_parts(p).unwrap_or_else(|e| panic!("ServingTables::from_parts: {e}"))
+    }
+
+    /// Fallible [`ServingTables::from_parts`]: every shape AND index
+    /// invariant the serve-time kernels rely on, checked up front.
+    ///
+    /// Beyond the array-size equalities, this bounds-checks the parts the
+    /// shape checks cannot see:
+    ///
+    /// * `bin_features`/`infer_features` index `means`/`inv_stds`/the raw
+    ///   row by feature id, so every id must be `< n_features`;
+    /// * the kernels index `weights`/`route` by the combined id
+    ///   `Σ bᵢ · strideᵢ` with digits `bᵢ ∈ 0..=q_max`, so the maximum
+    ///   reachable id `Σ q_max · strideᵢ` must stay `< total_bins`.
+    ///
+    /// A table that passes cannot index out of bounds for any input row of
+    /// width `n_features` — finite, infinite or NaN. The checks themselves
+    /// live in [`TablePartsRef::validate`] so the snapshot loader can run
+    /// them over borrowed buffer slices before materializing anything.
+    pub fn try_from_parts(p: TableParts) -> Result<ServingTables, String> {
+        p.as_ref().validate()?;
         let mut tiled_quantiles = Vec::with_capacity(p.quantiles.len() * LANE);
         for &e in &p.quantiles {
             tiled_quantiles.extend_from_slice(&[e; LANE]);
         }
-        ServingTables {
+        Ok(ServingTables {
             n_features: p.n_features,
             bin_features: p.bin_features,
             quantiles: p.quantiles,
@@ -338,7 +467,7 @@ impl ServingTables {
             route: p.route,
             tiled_quantiles,
             dispatch: Stage1Dispatch::detect(),
-        }
+        })
     }
 
     /// The kernel tier this instance runs.
@@ -734,19 +863,9 @@ impl ServingTables {
             global_weights: vecf("global_weights")?.iter().map(|&v| v as f32).collect(),
             route: vecf("route")?.iter().map(|&v| v as u8).collect(),
         };
-        // Structural validation (the same invariants `from_parts` asserts —
-        // checked here first so malformed JSON is an Err, not a panic).
-        if p.quantiles.len() != p.bin_features.len() * p.q_max
-            || p.strides.len() != p.bin_features.len()
-            || p.route.len() != p.total_bins as usize
-            || p.weights.len() != p.total_bins as usize * (p.infer_features.len() + 1)
-            || p.global_weights.len() != p.infer_features.len() + 1
-            || p.means.len() != p.n_features
-            || p.inv_stds.len() != p.n_features
-        {
-            return Err("serving tables: inconsistent array sizes".into());
-        }
-        Ok(ServingTables::from_parts(p))
+        // Full structural + index validation: malformed JSON is an Err,
+        // never a panic and never an out-of-bounds read mid-serve.
+        ServingTables::try_from_parts(p).map_err(|e| format!("serving tables: {e}"))
     }
 
     /// Kernel-side padding: returns copies padded to fixed shapes
@@ -910,6 +1029,86 @@ mod tests {
         let mut j = t.to_json();
         j.set("total_bins", Json::Num(9999.0));
         assert!(ServingTables::from_json(&j).is_err());
+    }
+
+    /// The parts a trained model emits, for corruption below.
+    fn parts(d: &Dataset) -> TableParts {
+        let t = ServingTables::from_model(&model(d));
+        TableParts {
+            n_features: t.n_features,
+            bin_features: t.bin_features.clone(),
+            quantiles: t.quantiles.clone(),
+            q_max: t.q_max,
+            strides: t.strides.clone(),
+            total_bins: t.total_bins,
+            means: t.means.clone(),
+            inv_stds: t.inv_stds.clone(),
+            infer_features: t.infer_features.clone(),
+            weights: t.weights.clone(),
+            global_weights: t.global_weights.clone(),
+            route: t.route.clone(),
+        }
+    }
+
+    #[test]
+    fn try_from_parts_accepts_trained_and_rejects_out_of_range_indices() {
+        let d = world(800, 11);
+        let good = parts(&d);
+        assert!(ServingTables::try_from_parts(good.clone()).is_ok());
+
+        // A bin feature indexing past the row walks means/inv_stds/row OOB
+        // at serve time — the shape checks alone cannot see it.
+        let mut p = good.clone();
+        p.bin_features[0] = p.n_features as u32;
+        let e = ServingTables::try_from_parts(p).unwrap_err();
+        assert!(e.contains("bin feature"), "{e}");
+
+        // Same for an inference feature.
+        let mut p = good.clone();
+        *p.infer_features.last_mut().unwrap() = u32::MAX;
+        let e = ServingTables::try_from_parts(p).unwrap_err();
+        assert!(e.contains("infer feature"), "{e}");
+
+        // A stride table whose reachable ids overrun the weight/route
+        // arrays: the combined id would index out of bounds mid-batch.
+        let mut p = good.clone();
+        p.strides[0] = p.total_bins;
+        let e = ServingTables::try_from_parts(p).unwrap_err();
+        assert!(e.contains("total_bins"), "{e}");
+
+        // Shape mismatch still rejected (the original assert set).
+        let mut p = good.clone();
+        p.route.pop();
+        assert!(ServingTables::try_from_parts(p).is_err());
+        let mut p = good;
+        p.means.pop();
+        assert!(ServingTables::try_from_parts(p).is_err());
+    }
+
+    #[test]
+    fn radix_check_ignores_unsatisfiable_padding_edges() {
+        // Two bin features with different edge counts: feature 1's row in
+        // the padded [nb × q_max] table ends in +inf edges that can never
+        // fire, so the reachable-id bound must use per-feature satisfiable
+        // edge counts — a flat Σ q_max·strideᵢ would reject this table.
+        let p = TableParts {
+            n_features: 2,
+            bin_features: vec![0, 1],
+            quantiles: vec![-0.5, 0.0, 0.5, 0.0, f32::INFINITY, f32::INFINITY],
+            q_max: 3,
+            strides: vec![1, 4],
+            total_bins: 8, // (3+1) × (1+1)
+            means: vec![0.0; 2],
+            inv_stds: vec![1.0; 2],
+            infer_features: vec![0],
+            weights: vec![0.0; 8 * 2],
+            global_weights: vec![0.0; 2],
+            route: vec![1; 8],
+        };
+        let t = ServingTables::try_from_parts(p).expect("mixed-cardinality table is legal");
+        // And the max-id row really stays in bounds.
+        let (prob, _) = t.evaluate(&[1e9, 1e9]);
+        assert!((0.0..=1.0).contains(&prob));
     }
 
     #[test]

@@ -3,9 +3,11 @@
 //! Subcommands:
 //!   datagen   generate a synthetic dataset clone to CSV
 //!   train     run the AutoML pipeline, write serving tables + GBDT model
+//!             (JSON pair + one binary `.snap` zero-copy snapshot)
 //!   serve     start the full serving stack and run a live workload
 //!   eval      Table-1-style evaluation of LR / LRwBins / GBDT on a preset
-//!   predict   score a CSV with saved model files (tables + GBDT)
+//!   predict   score a CSV with saved model files (JSON pair, or a binary
+//!             snapshot via --snapshot)
 //!   fig5      Picasso feature map (SVG + terminal rendering)
 //!   info      print artifact manifest + compiled batch variants
 
@@ -164,6 +166,16 @@ fn cmd_train() -> i32 {
         "  wrote {0}/{name}.tables.json ({qb} B quantiles + {wb} B weights sparse) and {0}/{name}.gbdt.json",
         out_dir.display()
     );
+    // Binary snapshot: the production load path — both stages in one
+    // checksummed buffer, served zero-copy by `lrwbins predict --snapshot`
+    // and `snapshot_path` in a serve config.
+    let snap = lrwbins::snapshot::Snapshot::write(&tables, &p.second.flatten());
+    let snap_path = out_dir.join(format!("{name}.snap"));
+    if let Err(e) = std::fs::write(&snap_path, &snap) {
+        eprintln!("snapshot write failed: {e}");
+        return 1;
+    }
+    println!("  wrote {} ({} B zero-copy snapshot)", snap_path.display(), snap.len());
     0
 }
 
@@ -283,27 +295,36 @@ fn cmd_predict() -> i32 {
         "score a CSV with saved model files (multistage: embedded tables + GBDT fallback)",
     )
     .opt("data", "input CSV (label column optional for scoring metrics)", Some("data/dataset.csv"))
+    .opt("snapshot", "binary snapshot (`<name>.snap` from `lrwbins train`): loads BOTH stages from one checksummed buffer, overriding --tables/--gbdt", None)
     .opt("tables", "serving tables JSON (from `lrwbins train`)", Some("data/aci.tables.json"))
     .opt("gbdt", "GBDT model JSON (from `lrwbins train`)", Some("data/aci.gbdt.json"))
     .opt("out", "output CSV of probabilities + stage", Some("data/predictions.csv"))
     .parse_subcommand();
 
     let read = |p: &str| std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"));
-    let tables = read(&args.get_or("tables", ""))
-        .and_then(|t| lrwbins::util::json::Json::parse(&t).map_err(|e| e.to_string()))
-        .and_then(|j| ServingTables::from_json(&j));
-    let gbdt = read(&args.get_or("gbdt", ""))
-        .and_then(|t| lrwbins::util::json::Json::parse(&t).map_err(|e| e.to_string()))
-        .and_then(|j| lrwbins::gbdt::GbdtModel::from_json(&j));
-    let (tables, gbdt) = match (tables, gbdt) {
-        (Ok(t), Ok(g)) => (t, g),
-        (t, g) => {
-            if let Err(e) = t {
-                eprintln!("tables: {e}");
-            }
-            if let Err(e) = g {
-                eprintln!("gbdt: {e}");
-            }
+    let loaded: Result<(ServingTables, lrwbins::gbdt::FlatForest), String> =
+        if let Some(path) = args.get("snapshot") {
+            // Corrupt bytes come back as a clean Err here — never a panic
+            // mid-scoring (see `snapshot`).
+            lrwbins::snapshot::Snapshot::read_file(std::path::Path::new(path))
+                .and_then(|s| Ok((s.tables()?, s.forest())))
+        } else {
+            read(&args.get_or("tables", ""))
+                .and_then(|t| lrwbins::util::json::Json::parse(&t).map_err(|e| e.to_string()))
+                .and_then(|j| ServingTables::from_json(&j))
+                .map_err(|e| format!("tables: {e}"))
+                .and_then(|t| {
+                    read(&args.get_or("gbdt", ""))
+                        .and_then(|g| lrwbins::util::json::Json::parse(&g).map_err(|e| e.to_string()))
+                        .and_then(|j| lrwbins::gbdt::GbdtModel::from_json(&j))
+                        .map_err(|e| format!("gbdt: {e}"))
+                        .map(|g| (t, g.flatten()))
+                })
+        };
+    let (tables, gbdt) = match loaded {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
             return 1;
         }
     };

@@ -16,12 +16,16 @@
 //! # Architecture
 //!
 //! * **Shards** — `n_shards` worker threads, spawned once. Each worker owns
-//!   a private deep **replica** of every forest it has served (materialized
-//!   lazily on first use, allocated by the worker thread itself — the right
-//!   memory locality story; replicas are the SoA [`FlatForest`] arenas, so
-//!   each shard's lane-tiled walk streams only the node fields it touches)
-//!   plus a private [`ForestScratch`], so the hot loop touches no shared
-//!   mutable state. With [`ShardPoolConfig::pin_threads`] each worker
+//!   a private deep **replica** of every forest it has served, carrying the
+//!   model **version stamp** it was built from. Replicas are pre-built off
+//!   the hot path at [`ShardPool::register`]/[`ShardPool::swap`] time (one
+//!   clone per shard, waiting in the registry) and installed by the worker
+//!   on first touch of a version — the serve loop never pays a deep clone
+//!   unless racing swaps exhausted the prepared set (counted as
+//!   `replica_builds`). Replicas are the SoA [`FlatForest`] arenas, so each
+//!   shard's lane-tiled walk streams only the node fields it touches; a
+//!   private [`ForestScratch`] completes the no-shared-mutable-state hot
+//!   loop. With [`ShardPoolConfig::pin_threads`] each worker
 //!   additionally pins itself to core `shard % online` at startup
 //!   (`sched_setaffinity` on Linux, no-op elsewhere), keeping replica cache
 //!   residency and the OS scheduler out of each other's way;
@@ -76,6 +80,18 @@
 //!   is live; several `Coordinator`s (tenants) can share one pool, each
 //!   falling back to its own registered forest (the embedded multi-tenant
 //!   mode — see the crate docs).
+//! * **Live hot-swap** — [`ShardPool::swap`] replaces a registered model's
+//!   forest under traffic: the registry `Arc` flips between batches and the
+//!   model's version bumps. Every span is **stamped** with the version
+//!   current at submit, so one batch is served entirely by one version —
+//!   bit-stable even with a swap racing the batch. Workers re-materialize
+//!   their replica on stamp mismatch (from the pre-built clones, off the
+//!   hot path) and **evict** the drained old version. A **two-version
+//!   window** keeps the previous forest resolvable while its in-flight
+//!   spans drain — and exposes it for shadow scoring
+//!   ([`ShardPool::shadow`]). A span whose version left the window (two
+//!   swaps raced it) completes as a failed span (`stale_spans`), never
+//!   wrong-version bits.
 //!
 //! Outputs are bit-identical to the scalar and block paths: replicas are
 //! value-clones of the registered [`FlatForest`], and
@@ -157,6 +173,10 @@ impl Default for ShardPoolConfig {
 #[derive(Clone, Copy)]
 struct Task {
     model: u32,
+    /// Model version current when the batch was submitted: every task of a
+    /// batch carries the same stamp, so the whole batch is served by ONE
+    /// version regardless of swaps racing it.
+    version: u32,
     rows: *const f32,
     rows_len: usize,
     row_len: usize,
@@ -384,15 +404,32 @@ impl Parker {
     }
 }
 
+/// One registered model: the current forest (version-stamped), the
+/// drained-but-still-resolvable previous version (the **two-version
+/// window** — in-flight spans stamped with it keep serving, and it doubles
+/// as the shadow-scoring hook, [`ShardPool::shadow`]), and the per-shard
+/// pre-built replica clones workers install on first touch of a version.
+struct ModelEntry {
+    /// Bumped by every [`ShardPool::swap`]; starts at 1 on register.
+    version: u32,
+    cur: Arc<FlatForest>,
+    prev: Option<(u32, Arc<FlatForest>)>,
+    /// One slot per shard, `Some((version, replica))` until that shard
+    /// takes it. Per-slot mutexes (not the registry write lock): workers
+    /// take their slot under the registry READ lock, so an install never
+    /// contends with submitters.
+    prepared: Box<[Mutex<Option<(u32, FlatForest)>>]>,
+}
+
 /// State shared between the pool handle and its workers.
 struct PoolShared {
     /// One task ring per shard.
     rings: Box<[TaskQueue]>,
     parker: Parker,
-    /// Registered forests, indexed by [`ModelId`]. Workers read-lock once
-    /// per (shard, model) to materialize their replica, never in the steady
-    /// state.
-    registry: RwLock<Vec<Arc<FlatForest>>>,
+    /// Registered models, indexed by [`ModelId`]. Workers read-lock once
+    /// per (shard, model, version) to install their replica, never in the
+    /// steady state.
+    registry: RwLock<Vec<ModelEntry>>,
     shutdown: AtomicBool,
     stats: ShardStats,
     min_task_rows: usize,
@@ -403,11 +440,43 @@ struct PoolShared {
 }
 
 impl PoolShared {
-    fn forest(&self, model: u32) -> Arc<FlatForest> {
-        self.registry
-            .read()
-            .unwrap_or_else(PoisonError::into_inner)[model as usize]
-            .clone()
+    /// Version currently serving `model` (the stamp new batches get).
+    fn cur_version(&self, model: u32) -> u32 {
+        self.registry.read().unwrap_or_else(PoisonError::into_inner)[model as usize].version
+    }
+
+    /// Resolve `model` at exactly `version` — the current forest or, inside
+    /// the two-version window, the previous one. `None` means the version
+    /// was swapped out twice while the span waited: the span fails rather
+    /// than serve wrong-version bits.
+    fn forest_version(&self, model: u32, version: u32) -> Option<Arc<FlatForest>> {
+        let reg = self.registry.read().unwrap_or_else(PoisonError::into_inner);
+        let e = reg.get(model as usize)?;
+        if e.version == version {
+            Some(e.cur.clone())
+        } else {
+            match &e.prev {
+                Some((v, f)) if *v == version => Some(f.clone()),
+                _ => None,
+            }
+        }
+    }
+
+    /// Take the pre-built replica waiting for (`model`, `shard`) if its
+    /// stamp matches `version`. Registry read lock + the slot's own mutex —
+    /// never the write lock, so installs don't contend with submitters.
+    fn take_prepared(&self, model: u32, shard: usize, version: u32) -> Option<FlatForest> {
+        let reg = self.registry.read().unwrap_or_else(PoisonError::into_inner);
+        let mut slot = reg
+            .get(model as usize)?
+            .prepared
+            .get(shard)?
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        match &*slot {
+            Some((v, _)) if *v == version => slot.take().map(|(_, f)| f),
+            _ => None,
+        }
     }
 
     fn queue_depth_total(&self) -> usize {
@@ -511,23 +580,130 @@ impl ShardPool {
         self.shared.queue_depth_total()
     }
 
+    /// Deep-clone one replica per shard, stamped `version` — counted and
+    /// timed in [`ShardStats`]. Called OUTSIDE any registry lock: building
+    /// n_shards clones must never stall submitters or serving workers.
+    fn prepare_replicas(
+        &self,
+        forest: &FlatForest,
+        version: u32,
+    ) -> Box<[Mutex<Option<(u32, FlatForest)>>]> {
+        let stats = &self.shared.stats;
+        (0..self.n_shards)
+            .map(|_| {
+                let t0 = Instant::now();
+                let replica = forest.clone();
+                stats.replica_builds.fetch_add(1, Ordering::Relaxed);
+                stats.replica_build.record_duration(t0.elapsed());
+                Mutex::new(Some((version, replica)))
+            })
+            .collect()
+    }
+
     /// Register a forest; tenants keep the returned id. Safe while the pool
-    /// is serving — workers materialize their replica of the new model
-    /// lazily on first use.
+    /// is serving. Per-shard replicas are pre-built HERE, off the hot path,
+    /// so the first task for the new model never pays a deep clone on a
+    /// serving shard.
     pub fn register(&self, forest: FlatForest) -> ModelId {
+        let version = 1u32;
+        let prepared = self.prepare_replicas(&forest, version);
         let mut reg = self
             .shared
             .registry
             .write()
             .unwrap_or_else(PoisonError::into_inner);
         let id = reg.len() as u32;
-        reg.push(Arc::new(forest));
+        reg.push(ModelEntry {
+            version,
+            cur: Arc::new(forest),
+            prev: None,
+            prepared,
+        });
         ModelId(id)
+    }
+
+    /// Replace a registered model's forest under traffic. The registry
+    /// `Arc` flips between batches: batches submitted before the flip keep
+    /// serving the old version (their spans are stamped; the two-version
+    /// window keeps it resolvable while they drain), batches after it serve
+    /// the new one — no failed requests, no mixed-version batch. Returns
+    /// the new version.
+    ///
+    /// Per-shard replicas for the new version are deep-cloned BEFORE taking
+    /// the write lock, so a swap never stalls submitters behind `n_shards`
+    /// clones, and workers install the new version from the prepared set
+    /// instead of cloning on the serve path.
+    pub fn swap(&self, model: ModelId, forest: FlatForest) -> Result<u32, String> {
+        {
+            let reg = self
+                .shared
+                .registry
+                .read()
+                .unwrap_or_else(PoisonError::into_inner);
+            let e = reg
+                .get(model.0 as usize)
+                .ok_or_else(|| format!("swap: unknown model id {}", model.0))?;
+            if forest.n_features != e.cur.n_features {
+                return Err(format!(
+                    "swap: model {} serves {} features, replacement has {}",
+                    model.0, e.cur.n_features, forest.n_features
+                ));
+            }
+        }
+        let prepared = self.prepare_replicas(&forest, 0); // stamped under the lock below
+        let mut reg = self
+            .shared
+            .registry
+            .write()
+            .unwrap_or_else(PoisonError::into_inner);
+        let e = &mut reg[model.0 as usize];
+        // Version is assigned under the write lock (racing swaps serialize
+        // here); the prepared clones built outside it are re-stamped to
+        // whatever version this swap actually got.
+        let new_version = e.version.wrapping_add(1);
+        for slot in prepared.iter() {
+            if let Some((v, _)) = slot
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .as_mut()
+            {
+                *v = new_version;
+            }
+        }
+        e.prev = Some((e.version, std::mem::replace(&mut e.cur, Arc::new(forest))));
+        e.version = new_version;
+        e.prepared = prepared;
+        self.shared.stats.model_swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(new_version)
+    }
+
+    /// The version currently serving `model` (bumped by every
+    /// [`ShardPool::swap`]; 1 after register).
+    pub fn version(&self, model: ModelId) -> u32 {
+        self.shared.cur_version(model.0)
+    }
+
+    /// The previous version still inside the two-version window, if any —
+    /// the shadow-scoring hook: score a sample of traffic against it and
+    /// compare before retiring it for good (the next swap evicts it).
+    pub fn shadow(&self, model: ModelId) -> Option<(u32, Arc<FlatForest>)> {
+        self.shared
+            .registry
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(model.0 as usize)?
+            .prev
+            .clone()
     }
 
     /// Feature width of a registered model.
     pub fn n_features(&self, model: ModelId) -> usize {
-        self.shared.forest(model.0).n_features
+        self.shared
+            .registry
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)[model.0 as usize]
+            .cur
+            .n_features
     }
 
     /// Score `out.len()` rows of flat row-major `rows` (width `row_len`)
@@ -629,6 +805,10 @@ impl ShardPool {
             .spans_submitted
             .fetch_add(n_tasks as u64, Ordering::Relaxed);
 
+        // One version stamp per batch, read once: every span of this batch
+        // is served by exactly this version (or fails), however a racing
+        // swap lands relative to the submission loop below.
+        let version = shared.cur_version(model.0);
         let rows_ptr = rows.as_ptr();
         let out_ptr = out.as_mut_ptr();
         let base = shared.rr.fetch_add(1, Ordering::Relaxed);
@@ -644,6 +824,7 @@ impl ShardPool {
             // a task's range without ever duplicating rows.
             let task = Task {
                 model: model.0,
+                version,
                 rows: unsafe { rows_ptr.add(start * row_len) },
                 rows_len: len * row_len,
                 row_len,
@@ -677,7 +858,8 @@ impl ShardPool {
             }
         }
         shared.stats.inline_runs.fetch_add(1, Ordering::Relaxed);
-        run_task(task, &shared.forest(task.model), &mut ForestScratch::default(), shared);
+        let forest = shared.forest_version(task.model, task.version);
+        run_task(task, forest.as_deref(), &mut ForestScratch::default(), shared);
     }
 
     /// Like [`ShardPool::predict_spans`], but collapses shard failures into
@@ -729,7 +911,10 @@ impl Drop for ShardPool {
 
 /// Execute one task against `forest`, containing panics to the task's span
 /// and delivering the completed span to the batch's sink (if streaming).
-fn run_task(task: Task, forest: &FlatForest, scratch: &mut ForestScratch, shared: &PoolShared) {
+/// `forest: None` means the task's version stamp could no longer be
+/// resolved (two swaps raced a queued span out of the two-version window):
+/// the span completes as failed — wrong-version bits are never served.
+fn run_task(task: Task, forest: Option<&FlatForest>, scratch: &mut ForestScratch, shared: &PoolShared) {
     // SAFETY: see the lifetime argument in `predict_inner` — the submitter
     // blocks on the latch, so these borrows are live, and no other task
     // writes this output range.
@@ -742,7 +927,7 @@ fn run_task(task: Task, forest: &FlatForest, scratch: &mut ForestScratch, shared
     let failed = if task.deadline.is_some_and(|d| Instant::now() >= d) {
         shared.stats.deadline_shed.fetch_add(1, Ordering::Relaxed);
         true
-    } else {
+    } else if let Some(forest) = forest {
         let t0 = Instant::now();
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             forest.predict_flat_rows(rows, task.row_len, scratch, out);
@@ -754,6 +939,9 @@ fn run_task(task: Task, forest: &FlatForest, scratch: &mut ForestScratch, shared
             shared.stats.shard_panics.fetch_add(1, Ordering::Relaxed);
         }
         r.is_err()
+    } else {
+        shared.stats.stale_spans.fetch_add(1, Ordering::Relaxed);
+        true
     };
     let span = task.span_start..task.span_start + task.n;
     // SAFETY: the latch (and sink) outlive the submitter's wait; the sink
@@ -938,11 +1126,14 @@ fn worker_loop(shard: usize, shared: Arc<PoolShared>) {
             }
         }
     }
-    // Per-shard model replicas, materialized on first use: a deep clone of
-    // the registered forest, allocated by THIS thread (locality), indexed
-    // by model id. The scratch is shared across models — it is cleared per
-    // call.
-    let mut replicas: Vec<Option<FlatForest>> = Vec::new();
+    // Per-shard model replicas, one per model id, stamped with the version
+    // they were built from. Installed from the registry's pre-built clones
+    // on first touch of a version (the deep clone happened at
+    // register/swap time, off this serve path); the stamp-mismatch branch
+    // also EVICTS the drained old version, so the cache holds at most one
+    // replica per model. The scratch is shared across models — it is
+    // cleared per call.
+    let mut replicas: Vec<Option<(u32, FlatForest)>> = Vec::new();
     let mut scratch = ForestScratch::default();
     while let Some(task) = acquire(shard, &shared) {
         shared.stats.set_busy(shard, true);
@@ -950,10 +1141,34 @@ fn worker_loop(shard: usize, shared: Arc<PoolShared>) {
         if replicas.len() <= model {
             replicas.resize_with(model + 1, || None);
         }
-        if replicas[model].is_none() {
-            replicas[model] = Some((*shared.forest(task.model)).clone());
+        if !replicas[model]
+            .as_ref()
+            .is_some_and(|&(v, _)| v == task.version)
+        {
+            if replicas[model].take().is_some() {
+                shared.stats.replicas_evicted.fetch_add(1, Ordering::Relaxed);
+            }
+            let installed = shared
+                .take_prepared(task.model, shard, task.version)
+                .or_else(|| {
+                    // No prepared clone with this stamp (a racing swap
+                    // re-targeted the set, or a stale-but-windowed span
+                    // needs the previous version): build one here, counted
+                    // — this is the latency cliff the prepared path
+                    // normally avoids.
+                    shared.forest_version(task.model, task.version).map(|f| {
+                        let t0 = Instant::now();
+                        let replica = (*f).clone();
+                        shared.stats.replica_builds.fetch_add(1, Ordering::Relaxed);
+                        shared.stats.replica_build.record_duration(t0.elapsed());
+                        replica
+                    })
+                });
+            replicas[model] = installed.map(|f| (task.version, f));
         }
-        let forest = replicas[model].as_ref().expect("replica just materialized");
+        // None ⇒ the stamp left the two-version window: run_task fails the
+        // span (counted), keeping the rows-conservation invariant intact.
+        let forest = replicas[model].as_ref().map(|(_, f)| f);
         // Count the task BEFORE running it: `run_task` hits the completion
         // latch, and a submitter returning from `wait()` must observe
         // stats that already include every task of its batch.
@@ -1529,6 +1744,99 @@ mod tests {
         assert_eq!(seen.iter().map(|(s, _)| s.len()).sum::<usize>(), 200);
     }
 
+    /// Hot-swap semantics: a swap flips which bits the pool serves, bumps
+    /// the version, keeps the old version visible through the shadow hook,
+    /// pre-builds (and counts) per-shard replicas off the hot path, and
+    /// evicts drained worker replicas. Bad swaps (unknown id, mismatched
+    /// feature width) are clean `Err`s.
+    #[test]
+    fn swap_serves_new_bits_and_shadow_keeps_old() {
+        let (m1, d) = trained();
+        let m2 = train(
+            &d,
+            &GbdtParams { n_trees: 9, max_depth: 3, seed: 77, ..Default::default() },
+        );
+        let f1 = FlatForest::from_model(&m1);
+        let f2 = FlatForest::from_model(&m2);
+        // ONE shard so the replica-lifecycle counters below are exact (the
+        // storm test in tests/concurrency_stress.rs covers multi-shard).
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 1,
+            min_task_rows: 16,
+            ..Default::default()
+        });
+        let id = pool.register(f1.clone());
+        assert_eq!(pool.version(id), 1);
+        assert!(pool.shadow(id).is_none(), "no previous version yet");
+        // Register pre-built one replica per shard, counted.
+        assert_eq!(pool.stats().replica_builds.load(Ordering::Relaxed), 1);
+
+        let (rows, row_len) = flat_rows(&d, 200);
+        let mut scratch = ForestScratch::default();
+        let mut ref1 = vec![0f32; 200];
+        f1.predict_flat_rows(&rows, row_len, &mut scratch, &mut ref1);
+        let mut ref2 = vec![0f32; 200];
+        f2.predict_flat_rows(&rows, row_len, &mut scratch, &mut ref2);
+
+        // Serve v1, swap, serve again: bits must flip to the new model.
+        let mut out = vec![0f32; 200];
+        assert!(pool.predict_spans(id, &rows, row_len, &mut out).is_empty());
+        for r in 0..200 {
+            assert_eq!(out[r].to_bits(), ref1[r].to_bits(), "pre-swap row {r}");
+        }
+        let v2 = pool.swap(id, f2.clone()).expect("same-width swap succeeds");
+        assert_eq!(v2, 2);
+        assert_eq!(pool.version(id), 2);
+        let (shadow_v, shadow_f) = pool.shadow(id).expect("old version in the window");
+        assert_eq!(shadow_v, 1);
+        // Shadow scoring: the windowed old forest still computes v1's bits.
+        let mut shadow_out = vec![0f32; 200];
+        shadow_f.predict_flat_rows(&rows, row_len, &mut scratch, &mut shadow_out);
+        for r in 0..200 {
+            assert_eq!(shadow_out[r].to_bits(), ref1[r].to_bits(), "shadow row {r}");
+        }
+        let mut out = vec![0f32; 200];
+        assert!(pool.predict_spans(id, &rows, row_len, &mut out).is_empty());
+        for r in 0..200 {
+            assert_eq!(out[r].to_bits(), ref2[r].to_bits(), "post-swap row {r}");
+        }
+        // EXACT replica lifecycle (one shard): one build at register, one
+        // pre-build at swap — and zero hot-path clones, because the worker
+        // installed the prepared replica on the stamp mismatch, evicting
+        // its drained v1 copy.
+        let st = pool.stats();
+        assert_eq!(
+            st.replica_builds.load(Ordering::Relaxed),
+            2,
+            "register + swap pre-builds only, no serve-loop clone: {}",
+            st.report()
+        );
+        assert_eq!(
+            st.replicas_evicted.load(Ordering::Relaxed),
+            1,
+            "the drained v1 replica was evicted: {}",
+            st.report()
+        );
+        assert_eq!(st.model_swaps.load(Ordering::Relaxed), 1);
+        assert_eq!(st.stale_spans.load(Ordering::Relaxed), 0);
+
+        // A second swap retires v1 from the window entirely.
+        let v3 = pool.swap(id, f1.clone()).expect("swap back");
+        assert_eq!(v3, 3);
+        assert_eq!(pool.shadow(id).map(|(v, _)| v), Some(2));
+
+        // Bad swaps are Errs, not panics — and leave serving intact.
+        assert!(pool.swap(ModelId(99), f1.clone()).is_err(), "unknown model id");
+        let narrow = slow_forest(3, 1);
+        let e = pool.swap(id, narrow).unwrap_err();
+        assert!(e.contains("features"), "{e}");
+        let mut out = vec![0f32; 200];
+        assert!(pool.predict_spans(id, &rows, row_len, &mut out).is_empty());
+        for r in 0..200 {
+            assert_eq!(out[r].to_bits(), ref1[r].to_bits(), "post-failed-swap row {r}");
+        }
+    }
+
     #[test]
     fn queue_ring_push_pop_fifo_and_bounds() {
         // Direct ring test (no workers): FIFO within a single producer and
@@ -1537,6 +1845,7 @@ mod tests {
         let latch = BatchLatch::new(usize::MAX, None); // never opens; tasks are dummies
         let mk = |i: usize| Task {
             model: 0,
+            version: 0,
             rows: std::ptr::null(),
             rows_len: 0,
             row_len: 0,

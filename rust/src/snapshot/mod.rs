@@ -1,0 +1,621 @@
+//! Versioned zero-copy model snapshot: the deployment format of a trained
+//! stack (stage-1 [`ServingTables`] + second-stage SoA [`FlatForest`]).
+//!
+//! # Why a binary format
+//!
+//! Serving a fleet means shipping retrained models under traffic. The JSON
+//! config path re-parses and re-allocates every array; this format instead
+//! lays the **already-flat** arena arrays out section-per-array in one
+//! contiguous, 8-byte-aligned buffer, so a loaded snapshot serves the
+//! forest **directly from the buffer** ([`Snapshot::forest_view`] →
+//! [`ForestView`]) with no per-node rebuild — materializing an owned copy
+//! ([`Snapshot::forest`]) is five `memcpy`s, and the whole file is
+//! `mmap`-able by construction (every section offset is 8-aligned in a
+//! buffer whose base is 8-aligned).
+//!
+//! # Layout (version 1, little-endian)
+//!
+//! | region        | bytes                 | contents                                   |
+//! |---------------|-----------------------|--------------------------------------------|
+//! | header        | 24                    | magic `LRWBSNAP`, version u32, n_sections u32, total_len u64 |
+//! | section table | 32 × n_sections       | per section: tag u32, pad u32, offset u64, len u64, FNV-1a-64 checksum u64 |
+//! | payloads      | —                     | raw array bytes, each offset 8-aligned     |
+//!
+//! One section per array (`META`, the nine table arrays, the five forest
+//! arrays). `META` holds the scalars (`n_features`, `q_max`, `total_bins`,
+//! `base_score`, the forest's `n_features`) as five u64 slots. Derived
+//! state (`tiled_quantiles`, the dispatch tier) is never serialized — every
+//! load rebuilds it through [`ServingTables::try_from_parts`].
+//!
+//! # The panic-free load contract
+//!
+//! [`Snapshot::parse`] is **fallible end to end** and validates in two
+//! stages, both before any model-sized allocation:
+//!
+//! 1. **structural** — magic, version, section count, `total_len` against
+//!    the real buffer length (truncation), every section's tag, 8-aligned
+//!    offset, in-bounds `offset + len` (checked in u64 — an oversized
+//!    length errors instead of allocating), element-size divisibility, and
+//!    per-section checksum;
+//! 2. **semantic** — the cross-array shape/index invariants, via
+//!    [`TablePartsRef::validate`] and [`ForestView::validate`] over
+//!    borrowed slices (zero-copy): feature ids in range, mixed-radix
+//!    reachable-id bound, every child edge in-arena and forward (so walks
+//!    terminate even on adversarial bytes).
+//!
+//! A `Snapshot` value therefore only exists for bytes that are safe to
+//! serve. Corrupt input — truncated, bit-flipped, resized, hostile — gets
+//! an `Err`, never a panic, never an out-of-bounds read, never an
+//! attacker-sized allocation (`tests/snapshot_roundtrip.rs` fuzzes this).
+//!
+//! # Lifecycle wiring
+//!
+//! `lrwbins train` writes `<name>.snap` next to the JSON artifacts;
+//! `lrwbins predict --snapshot` serves from it;
+//! [`Coordinator::reload`](crate::coordinator::Coordinator::reload) swaps a
+//! live coordinator (and its embedded [`ShardPool`] model, version-stamped,
+//! two-version drain window) to a parsed snapshot between batches.
+
+use crate::gbdt::flat::{FlatForest, ForestView};
+use crate::lrwbins::tables::{ServingTables, TableParts, TablePartsRef};
+
+/// File magic — first 8 bytes of every snapshot.
+pub const MAGIC: [u8; 8] = *b"LRWBSNAP";
+/// Format version this build writes and the only one it parses.
+pub const VERSION: u32 = 1;
+
+/// Header bytes: magic (8) + version (4) + n_sections (4) + total_len (8).
+const HEADER_LEN: usize = 24;
+/// Section-table entry bytes: tag (4) + pad (4) + offset (8) + len (8) +
+/// checksum (8).
+const ENTRY_LEN: usize = 32;
+
+/// Section tags, in file order. The parser requires exactly this set, each
+/// tag once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+enum Tag {
+    Meta = 1,
+    BinFeatures = 2,
+    Quantiles = 3,
+    Strides = 4,
+    Means = 5,
+    InvStds = 6,
+    InferFeatures = 7,
+    Weights = 8,
+    GlobalWeights = 9,
+    Route = 10,
+    ForestFeat = 11,
+    ForestThresh = 12,
+    ForestLo = 13,
+    ForestValue = 14,
+    ForestRoots = 15,
+}
+
+/// Every section of a v1 snapshot, in file order.
+const TAGS: [Tag; 15] = [
+    Tag::Meta,
+    Tag::BinFeatures,
+    Tag::Quantiles,
+    Tag::Strides,
+    Tag::Means,
+    Tag::InvStds,
+    Tag::InferFeatures,
+    Tag::Weights,
+    Tag::GlobalWeights,
+    Tag::Route,
+    Tag::ForestFeat,
+    Tag::ForestThresh,
+    Tag::ForestLo,
+    Tag::ForestValue,
+    Tag::ForestRoots,
+];
+
+impl Tag {
+    /// Element width of the section's payload (checked by the parser).
+    fn elem_size(self) -> usize {
+        match self {
+            Tag::Meta | Tag::Means | Tag::InvStds => 8,
+            Tag::Route => 1,
+            _ => 4,
+        }
+    }
+
+    fn from_u32(v: u32) -> Option<Tag> {
+        TAGS.into_iter().find(|&t| t as u32 == v)
+    }
+}
+
+/// u64 slots of the `META` section, in order.
+const META_SLOTS: usize = 5;
+
+/// FNV-1a 64 over a byte slice — the per-section checksum. Hand-rolled (no
+/// external hashing deps); not cryptographic, exactly strong enough to
+/// catch the corruption classes a deployment pipeline produces (truncated
+/// copies, bit rot, concatenation mistakes).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Backing storage with a guaranteed 8-byte-aligned base: a `Vec<u64>`
+/// viewed as bytes. Every section offset is 8-aligned, so reinterpreting a
+/// section's bytes as `&[u32]`/`&[f32]`/`&[f64]` is always
+/// alignment-correct.
+struct AlignedBuf {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    fn from_bytes(bytes: &[u8]) -> AlignedBuf {
+        let words = vec![0u64; bytes.len().div_ceil(8)];
+        let mut buf = AlignedBuf { words, len: bytes.len() };
+        // SAFETY: u64 → u8 reinterpretation is always valid (alignment 1,
+        // no padding); the region is exactly the Vec's initialized storage.
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(buf.words.as_mut_ptr() as *mut u8, buf.words.len() * 8)
+        };
+        dst[..bytes.len()].copy_from_slice(bytes);
+        buf
+    }
+
+    fn bytes(&self) -> &[u8] {
+        // SAFETY: as in `from_bytes`; `len <= words.len() * 8`.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
+    }
+
+    /// Reinterpret `len` bytes at `off` as a `T` slice. Caller guarantees
+    /// (the parser checked) that the range is in bounds, `off` is 8-aligned
+    /// and `len` divides by `size_of::<T>()`.
+    fn typed<T: Copy>(&self, off: usize, len: usize) -> &[T] {
+        let size = std::mem::size_of::<T>();
+        debug_assert!(off % 8 == 0 && len % size == 0 && off + len <= self.len);
+        // SAFETY: the base is 8-aligned (Vec<u64>) and off % 8 == 0, so the
+        // pointer is aligned for any T with align <= 8; the range is in
+        // bounds per the parser's checks; u32/f32/f64/u8 accept any bit
+        // pattern.
+        unsafe { std::slice::from_raw_parts(self.bytes().as_ptr().add(off) as *const T, len / size) }
+    }
+}
+
+/// A parsed, fully validated snapshot: one contiguous aligned buffer plus
+/// the resolved section ranges. Exists only for bytes that passed every
+/// structural and semantic check — see the module docs.
+pub struct Snapshot {
+    buf: AlignedBuf,
+    /// `(offset, len)` per tag, indexed by position in [`TAGS`].
+    sect: [(usize, usize); TAGS.len()],
+    /// Stage-1 row width.
+    n_features: usize,
+    q_max: usize,
+    total_bins: u32,
+    base_score: f64,
+    forest_n_features: usize,
+}
+
+impl Snapshot {
+    /// Serialize a trained stack. The inverse of [`Snapshot::parse`]:
+    /// `parse(&write(t, f))` yields bit-identical arrays.
+    pub fn write(tables: &ServingTables, forest: &FlatForest) -> Vec<u8> {
+        let meta: [u64; META_SLOTS] = [
+            tables.n_features as u64,
+            tables.q_max as u64,
+            tables.total_bins as u64,
+            forest.base_score.to_bits(),
+            forest.n_features as u64,
+        ];
+        let payloads: [Vec<u8>; TAGS.len()] = [
+            meta.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            le_u32(&tables.bin_features),
+            le_f32(&tables.quantiles),
+            le_u32(&tables.strides),
+            le_f64(&tables.means),
+            le_f64(&tables.inv_stds),
+            le_u32(&tables.infer_features),
+            le_f32(&tables.weights),
+            le_f32(&tables.global_weights),
+            tables.route.clone(),
+            le_u32(&forest.feat),
+            le_f32(&forest.thresh),
+            le_u32(&forest.lo),
+            le_f32(&forest.value),
+            le_u32(&forest.roots),
+        ];
+        // Layout pass: 8-aligned payload offsets after header + table.
+        let table_end = HEADER_LEN + ENTRY_LEN * TAGS.len();
+        let mut offsets = [0usize; TAGS.len()];
+        let mut at = table_end;
+        for (i, p) in payloads.iter().enumerate() {
+            at = at.next_multiple_of(8);
+            offsets[i] = at;
+            at += p.len();
+        }
+        let total_len = at;
+
+        let mut out = Vec::with_capacity(total_len);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(TAGS.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(total_len as u64).to_le_bytes());
+        for (i, p) in payloads.iter().enumerate() {
+            out.extend_from_slice(&(TAGS[i] as u32).to_le_bytes());
+            out.extend_from_slice(&0u32.to_le_bytes());
+            out.extend_from_slice(&(offsets[i] as u64).to_le_bytes());
+            out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+            out.extend_from_slice(&fnv1a64(p).to_le_bytes());
+        }
+        for (i, p) in payloads.iter().enumerate() {
+            out.resize(offsets[i], 0); // alignment padding
+            out.extend_from_slice(p);
+        }
+        debug_assert_eq!(out.len(), total_len);
+        out
+    }
+
+    /// Write a snapshot to a file.
+    pub fn write_file(
+        path: &std::path::Path,
+        tables: &ServingTables,
+        forest: &FlatForest,
+    ) -> std::io::Result<()> {
+        std::fs::write(path, Snapshot::write(tables, forest))
+    }
+
+    /// Read and [`Snapshot::parse`] a snapshot file.
+    pub fn read_file(path: &std::path::Path) -> Result<Snapshot, String> {
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("snapshot {}: {e}", path.display()))?;
+        Snapshot::parse(&bytes).map_err(|e| format!("snapshot {}: {e}", path.display()))
+    }
+
+    /// Parse and fully validate snapshot bytes (one copy into an 8-aligned
+    /// buffer; everything after is borrowed). See the module docs for the
+    /// two validation stages and the panic-free contract.
+    pub fn parse(bytes: &[u8]) -> Result<Snapshot, String> {
+        // --- structural: header ---
+        if bytes.len() < HEADER_LEN {
+            return Err(format!("too short: {} bytes, header is {HEADER_LEN}", bytes.len()));
+        }
+        if bytes[..8] != MAGIC {
+            return Err("bad magic (not a snapshot)".to_string());
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(format!("unsupported version {version} (this build reads {VERSION})"));
+        }
+        let n_sections = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        if n_sections != TAGS.len() {
+            return Err(format!("expected {} sections, header says {n_sections}", TAGS.len()));
+        }
+        let total_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        // Exact-length check catches truncation AND trailing garbage.
+        if total_len != bytes.len() as u64 {
+            return Err(format!(
+                "length mismatch: header says {total_len} bytes, buffer is {}",
+                bytes.len()
+            ));
+        }
+        let table_end = HEADER_LEN + ENTRY_LEN * TAGS.len();
+        if bytes.len() < table_end {
+            return Err(format!("truncated inside the section table ({} bytes)", bytes.len()));
+        }
+
+        // --- structural: section table + checksums ---
+        let buf = AlignedBuf::from_bytes(bytes);
+        let b = buf.bytes();
+        let mut sect = [(0usize, 0usize); TAGS.len()];
+        let mut seen = [false; TAGS.len()];
+        for e in 0..TAGS.len() {
+            let at = HEADER_LEN + e * ENTRY_LEN;
+            let raw_tag = u32::from_le_bytes(b[at..at + 4].try_into().unwrap());
+            let tag = Tag::from_u32(raw_tag)
+                .ok_or_else(|| format!("entry {e}: unknown section tag {raw_tag}"))?;
+            let idx = TAGS.iter().position(|&t| t == tag).unwrap();
+            if seen[idx] {
+                return Err(format!("duplicate section {tag:?}"));
+            }
+            seen[idx] = true;
+            let offset = u64::from_le_bytes(b[at + 8..at + 16].try_into().unwrap());
+            let len = u64::from_le_bytes(b[at + 16..at + 24].try_into().unwrap());
+            let checksum = u64::from_le_bytes(b[at + 24..at + 32].try_into().unwrap());
+            if offset % 8 != 0 {
+                return Err(format!("section {tag:?}: offset {offset} not 8-aligned"));
+            }
+            // u64 overflow-safe bound: an oversized len errors here, before
+            // anything could allocate or index by it.
+            let end = offset
+                .checked_add(len)
+                .ok_or_else(|| format!("section {tag:?}: offset + len overflows"))?;
+            if offset < table_end as u64 || end > total_len {
+                return Err(format!(
+                    "section {tag:?}: bytes {offset}..{end} outside payload region \
+                     {table_end}..{total_len}"
+                ));
+            }
+            if len as usize % tag.elem_size() != 0 {
+                return Err(format!(
+                    "section {tag:?}: {len} bytes not a multiple of element size {}",
+                    tag.elem_size()
+                ));
+            }
+            let payload = &b[offset as usize..end as usize];
+            let actual = fnv1a64(payload);
+            if actual != checksum {
+                return Err(format!(
+                    "section {tag:?}: checksum mismatch (stored {checksum:#018x}, \
+                     computed {actual:#018x})"
+                ));
+            }
+            sect[idx] = (offset as usize, len as usize);
+        }
+
+        // --- semantic: META scalars ---
+        let (moff, mlen) = sect[0];
+        if mlen != META_SLOTS * 8 {
+            return Err(format!("META must be {} bytes, got {mlen}", META_SLOTS * 8));
+        }
+        let meta: &[u64] = buf.typed(moff, mlen);
+        let as_usize = |v: u64, what: &str| -> Result<usize, String> {
+            usize::try_from(v).map_err(|_| format!("{what} {v} does not fit usize"))
+        };
+        let n_features = as_usize(meta[0], "n_features")?;
+        let q_max = as_usize(meta[1], "q_max")?;
+        let total_bins = u32::try_from(meta[2])
+            .map_err(|_| format!("total_bins {} does not fit u32", meta[2]))?;
+        let base_score = f64::from_bits(meta[3]);
+        let forest_n_features = as_usize(meta[4], "forest n_features")?;
+
+        let snap = Snapshot {
+            buf,
+            sect,
+            n_features,
+            q_max,
+            total_bins,
+            base_score,
+            forest_n_features,
+        };
+
+        // --- semantic: table + forest invariants, over borrowed slices ---
+        snap.table_parts_ref()
+            .validate()
+            .map_err(|e| format!("tables: {e}"))?;
+        snap.forest_view().validate().map_err(|e| format!("forest: {e}"))?;
+        Ok(snap)
+    }
+
+    /// Total buffer size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.buf.len
+    }
+
+    fn section<T: Copy>(&self, tag: Tag) -> &[T] {
+        let idx = TAGS.iter().position(|&t| t == tag).unwrap();
+        let (off, len) = self.sect[idx];
+        self.buf.typed(off, len)
+    }
+
+    /// Borrowed view of the stage-1 table arrays (zero-copy).
+    fn table_parts_ref(&self) -> TablePartsRef<'_> {
+        TablePartsRef {
+            n_features: self.n_features,
+            bin_features: self.section(Tag::BinFeatures),
+            quantiles: self.section(Tag::Quantiles),
+            q_max: self.q_max,
+            strides: self.section(Tag::Strides),
+            total_bins: self.total_bins,
+            means: self.section(Tag::Means),
+            inv_stds: self.section(Tag::InvStds),
+            infer_features: self.section(Tag::InferFeatures),
+            weights: self.section(Tag::Weights),
+            global_weights: self.section(Tag::GlobalWeights),
+            route: self.section(Tag::Route),
+        }
+    }
+
+    /// The forest served **directly from the snapshot buffer** — no owned
+    /// arrays, no node rebuild. Valid by construction: [`Snapshot::parse`]
+    /// ran [`ForestView::validate`] before this value could exist.
+    pub fn forest_view(&self) -> ForestView<'_> {
+        ForestView {
+            feat: self.section(Tag::ForestFeat),
+            thresh: self.section(Tag::ForestThresh),
+            lo: self.section(Tag::ForestLo),
+            value: self.section(Tag::ForestValue),
+            roots: self.section(Tag::ForestRoots),
+            base_score: self.base_score,
+            n_features: self.forest_n_features,
+        }
+    }
+
+    /// Materialize an owned forest (five `memcpy`s) — for consumers that
+    /// outlive the snapshot, like [`ShardPool::swap`]
+    /// (`crate::runtime::ShardPool::swap`).
+    pub fn forest(&self) -> FlatForest {
+        self.forest_view().materialize()
+    }
+
+    /// Materialize the stage-1 tables, finishing through
+    /// [`ServingTables::try_from_parts`] (rebuilds the derived tiled
+    /// quantiles and re-detects the kernel tier for THIS machine).
+    pub fn tables(&self) -> Result<ServingTables, String> {
+        let r = self.table_parts_ref();
+        ServingTables::try_from_parts(TableParts {
+            n_features: r.n_features,
+            bin_features: r.bin_features.to_vec(),
+            quantiles: r.quantiles.to_vec(),
+            q_max: r.q_max,
+            strides: r.strides.to_vec(),
+            total_bins: r.total_bins,
+            means: r.means.to_vec(),
+            inv_stds: r.inv_stds.to_vec(),
+            infer_features: r.infer_features.to_vec(),
+            weights: r.weights.to_vec(),
+            global_weights: r.global_weights.to_vec(),
+            route: r.route.to_vec(),
+        })
+    }
+}
+
+fn le_u32(v: &[u32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn le_f32(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn le_f64(v: &[f64]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdt::{train, GbdtParams};
+    use crate::lrwbins::{LrwBinsModel, LrwBinsParams};
+    use crate::tabular::{Dataset, Schema};
+    use crate::util::rng::Rng;
+
+    fn stack(seed: u64) -> (ServingTables, FlatForest) {
+        let mut rng = Rng::new(seed);
+        let mut d = Dataset::new(Schema::numeric(5));
+        for _ in 0..1500 {
+            let x: Vec<f32> = (0..5).map(|_| rng.normal() as f32).collect();
+            let y = (x[0] * x[1] + x[2] > 0.2) as u8 as f32;
+            d.push_row(&x, y);
+        }
+        let m = LrwBinsModel::train(
+            &d,
+            &[0, 1, 2, 3, 4],
+            &LrwBinsParams {
+                b: 3,
+                n_bin_features: 3,
+                n_infer_features: 5,
+                min_bin_rows: 20,
+                ..Default::default()
+            },
+        );
+        let g = train(&d, &GbdtParams { n_trees: 12, max_depth: 4, ..Default::default() });
+        (ServingTables::from_model(&m), FlatForest::from_model(&g))
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_array_bitwise() {
+        let (t, f) = stack(3);
+        let bytes = Snapshot::write(&t, &f);
+        let s = Snapshot::parse(&bytes).expect("own writer output parses");
+        assert_eq!(s.size_bytes(), bytes.len());
+
+        let t2 = s.tables().expect("tables materialize");
+        assert_eq!(t, t2, "tables round-trip exactly");
+
+        let f2 = s.forest();
+        assert_eq!(f.feat, f2.feat);
+        assert_eq!(f.lo, f2.lo);
+        assert_eq!(f.roots, f2.roots);
+        assert_eq!(f.base_score.to_bits(), f2.base_score.to_bits());
+        assert_eq!(f.n_features, f2.n_features);
+        for (a, b) in f.thresh.iter().zip(&f2.thresh) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in f.value.iter().zip(&f2.value) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // And the borrowed view is the same bits without materializing.
+        let v = s.forest_view();
+        assert_eq!(v.feat, &f.feat[..]);
+        assert_eq!(v.n_nodes(), f.n_nodes());
+    }
+
+    #[test]
+    fn parse_rejects_header_corruption() {
+        let (t, f) = stack(4);
+        let good = Snapshot::write(&t, &f);
+
+        assert!(Snapshot::parse(&[]).unwrap_err().contains("too short"));
+        assert!(Snapshot::parse(&good[..HEADER_LEN - 1]).unwrap_err().contains("too short"));
+
+        let mut b = good.clone();
+        b[0] ^= 0xff;
+        assert!(Snapshot::parse(&b).unwrap_err().contains("magic"));
+
+        let mut b = good.clone();
+        b[8..12].copy_from_slice(&2u32.to_le_bytes());
+        assert!(Snapshot::parse(&b).unwrap_err().contains("version"));
+
+        let mut b = good.clone();
+        b[12..16].copy_from_slice(&3u32.to_le_bytes());
+        assert!(Snapshot::parse(&b).unwrap_err().contains("sections"));
+
+        // Truncation and extension both fail the exact-length check.
+        assert!(Snapshot::parse(&good[..good.len() - 1]).is_err());
+        let mut b = good.clone();
+        b.push(0);
+        assert!(Snapshot::parse(&b).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_payload_corruption() {
+        let (t, f) = stack(5);
+        let good = Snapshot::write(&t, &f);
+        let table_end = HEADER_LEN + ENTRY_LEN * TAGS.len();
+
+        // A flipped payload byte must fail its section's checksum.
+        let mut b = good.clone();
+        let last = b.len() - 1;
+        b[last] ^= 0x01;
+        assert!(Snapshot::parse(&b).unwrap_err().contains("checksum"));
+
+        // An oversized section length: clean Err, no huge allocation.
+        let mut b = good.clone();
+        b[HEADER_LEN + 16..HEADER_LEN + 24].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Snapshot::parse(&b).is_err());
+
+        // An offset pointing before the payload region.
+        let mut b = good.clone();
+        b[HEADER_LEN + 8..HEADER_LEN + 16].copy_from_slice(&0u64.to_le_bytes());
+        assert!(Snapshot::parse(&b).is_err());
+
+        // A misaligned offset.
+        let mut b = good;
+        b[HEADER_LEN + 8..HEADER_LEN + 16]
+            .copy_from_slice(&(table_end as u64 + 4).to_le_bytes());
+        assert!(Snapshot::parse(&b).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_semantic_corruption_with_fixed_checksums() {
+        // Corrupt an array VALUE (not its bytes-level framing), re-sign the
+        // checksum so the structural pass accepts it, and require the
+        // semantic validators to catch it.
+        let (t, f) = stack(6);
+        let good = Snapshot::write(&t, &f);
+
+        // Find the ForestLo section entry and poison its first element with
+        // a backward edge (index 0 → never a valid child of node 0).
+        let mut b = good;
+        let mut fixed = false;
+        for e in 0..TAGS.len() {
+            let at = HEADER_LEN + e * ENTRY_LEN;
+            let tag = u32::from_le_bytes(b[at..at + 4].try_into().unwrap());
+            if tag != Tag::ForestLo as u32 {
+                continue;
+            }
+            let off = u64::from_le_bytes(b[at + 8..at + 16].try_into().unwrap()) as usize;
+            let len = u64::from_le_bytes(b[at + 16..at + 24].try_into().unwrap()) as usize;
+            b[off..off + 4].copy_from_slice(&0u32.to_le_bytes());
+            let sum = fnv1a64(&b[off..off + len]);
+            b[at + 24..at + 32].copy_from_slice(&sum.to_le_bytes());
+            fixed = true;
+        }
+        assert!(fixed, "ForestLo section present");
+        let err = Snapshot::parse(&b).unwrap_err();
+        assert!(err.contains("forest"), "semantic validation must reject: {err}");
+    }
+}

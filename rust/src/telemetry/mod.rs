@@ -115,6 +115,10 @@ pub struct ServeMetrics {
     /// connection already dead — the work is abandoned but accounted, one
     /// count per job.
     pub dead_conn_jobs: AtomicU64,
+    /// Successful live model reloads through
+    /// `Coordinator::reload` (snapshot parsed, tables replaced, embedded
+    /// forest swapped).
+    pub model_reloads: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -163,6 +167,7 @@ impl ServeMetrics {
             &self.breaker_trips,
             &self.stream_drop_frames,
             &self.dead_conn_jobs,
+            &self.model_reloads,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -246,6 +251,10 @@ impl ServeMetrics {
                 "\ndead-conn jobs: {dead_jobs}  undeliverable stream frames: {dropped}"
             ));
         }
+        let reloads = self.model_reloads.load(Ordering::Relaxed);
+        if reloads > 0 {
+            s.push_str(&format!("\nmodel reloads: {reloads}"));
+        }
         s
     }
 }
@@ -294,6 +303,23 @@ pub struct ShardStats {
     /// Per-chunk (sub-range task) execution latency on the shards — the
     /// granularity at which streamed responses complete.
     pub chunk_exec: Histogram,
+    /// Model lifecycle (hot-swap). Per-shard forest replicas deep-cloned —
+    /// at `register`/`swap` time (the pre-built path) or, rarely, on a
+    /// worker when racing swaps exhausted the prepared set.
+    pub replica_builds: AtomicU64,
+    /// Drained old-version replicas dropped by workers on a version-stamp
+    /// mismatch (the cache holds at most one replica per model).
+    pub replicas_evicted: AtomicU64,
+    /// Successful [`ShardPool::swap`](crate::runtime::ShardPool::swap)
+    /// calls.
+    pub model_swaps: AtomicU64,
+    /// Spans whose version stamp left the two-version window before they
+    /// ran (two swaps raced a queued span): completed as failed spans,
+    /// never served with wrong-version bits.
+    pub stale_spans: AtomicU64,
+    /// Replica deep-clone build time (both the pre-built and the fallback
+    /// path — the cost the hot path no longer pays).
+    pub replica_build: Histogram,
 }
 
 impl ShardStats {
@@ -400,6 +426,18 @@ impl ShardStats {
         let shed = self.deadline_shed.load(Ordering::Relaxed);
         if shed > 0 {
             s.push_str(&format!(" deadline_shed={shed}"));
+        }
+        let swaps = self.model_swaps.load(Ordering::Relaxed);
+        let builds = self.replica_builds.load(Ordering::Relaxed);
+        if swaps + builds > 0 {
+            s.push_str(&format!(
+                " swaps={swaps} replica_builds={builds} evicted={}",
+                self.replicas_evicted.load(Ordering::Relaxed)
+            ));
+        }
+        let stale = self.stale_spans.load(Ordering::Relaxed);
+        if stale > 0 {
+            s.push_str(&format!(" stale_spans={stale}"));
         }
         let pin_failures = self.pin_failures.load(Ordering::Relaxed);
         if pin_failures > 0 || (0..self.n_shards()).any(|i| self.pinned_cpu(i).is_some()) {
@@ -620,6 +658,18 @@ mod tests {
         assert!(rep.contains("pin_failures=1"), "{rep}");
         s.set_busy(1, false);
         assert_eq!(s.busy_shards(), 0);
+        // Model-lifecycle counters: quiet until a swap/build happens.
+        assert!(!rep.contains("swaps="), "{rep}");
+        assert!(!rep.contains("stale_spans"), "{rep}");
+        s.model_swaps.fetch_add(1, Ordering::Relaxed);
+        s.replica_builds.fetch_add(4, Ordering::Relaxed);
+        s.replicas_evicted.fetch_add(2, Ordering::Relaxed);
+        s.stale_spans.fetch_add(1, Ordering::Relaxed);
+        s.replica_build.record(10_000);
+        let rep = s.report();
+        assert!(rep.contains("swaps=1 replica_builds=4 evicted=2"), "{rep}");
+        assert!(rep.contains("stale_spans=1"), "{rep}");
+        assert_eq!(s.replica_build.count(), 1);
     }
 
     #[test]
@@ -731,6 +781,17 @@ mod tests {
         assert!(!s.report().contains("deadline_shed"));
         s.deadline_shed.fetch_add(5, Ordering::Relaxed);
         assert!(s.report().contains("deadline_shed=5"), "{}", s.report());
+    }
+
+    #[test]
+    fn model_reloads_reported_and_reset() {
+        let m = ServeMetrics::new();
+        assert!(!m.report().contains("model reloads"), "quiet when clean");
+        m.model_reloads.fetch_add(3, Ordering::Relaxed);
+        assert!(m.report().contains("model reloads: 3"), "{}", m.report());
+        m.reset_all();
+        assert_eq!(m.model_reloads.load(Ordering::Relaxed), 0);
+        assert!(!m.report().contains("model reloads"));
     }
 
     #[test]

@@ -674,3 +674,117 @@ fn async_and_sync_calls_share_a_client_safely() {
         }
     });
 }
+
+/// Live hot-swap under storm (`ShardPool::swap`): tenant A's model is never
+/// swapped and must serve failure-free, bit-identical, for the whole run —
+/// a neighbor's deploy must not be observable. Tenant B's model is swapped
+/// repeatedly between two variants while being hammered; version stamping
+/// at submit means every successful B batch is served ENTIRELY by one
+/// variant, never a mix. A B batch outrun by TWO swaps (its stamped version
+/// evicted from the two-version window before a worker reached it) may fail
+/// as stale — explicitly, and a bounded retry must land.
+#[test]
+fn live_swap_storm_versioned_batches_and_unswapped_tenant_unharmed() {
+    use lrwbins::runtime::{ShardPool, ShardPoolConfig};
+
+    let spec = datagen::preset("aci").unwrap().with_rows(2000);
+    let data = datagen::generate(&spec, 9);
+    let nf = data.n_features();
+    let gb = |seed| {
+        lrwbins::gbdt::train(
+            &data,
+            &lrwbins::gbdt::GbdtParams {
+                n_trees: 8,
+                max_depth: 3,
+                seed,
+                ..Default::default()
+            },
+        )
+    };
+    let (ma, mb1, mb2) = (gb(1), gb(2), gb(3));
+
+    let pool = Arc::new(ShardPool::with_config(ShardPoolConfig {
+        n_shards: 4,
+        min_task_rows: 8,
+        ..Default::default()
+    }));
+    let id_a = pool.register(ma.flatten());
+    let id_b = pool.register(mb1.flatten());
+
+    // Bitwise per-row references for each model (the flat forest is
+    // bit-identical to the scalar model — `simd_parity` proves it).
+    let bits = |m: &lrwbins::gbdt::GbdtModel| -> Vec<u32> {
+        (0..N_ROWS).map(|r| m.predict_one(&data.row(r)).to_bits()).collect()
+    };
+    let (ref_a, ref_b1, ref_b2) = (bits(&ma), bits(&mb1), bits(&mb2));
+
+    let flat_window = |start: usize| -> Vec<f32> {
+        let mut flat = Vec::with_capacity(WINDOW * nf);
+        let mut row = Vec::new();
+        for r in start..start + WINDOW {
+            data.row_into(r, &mut row);
+            flat.extend_from_slice(&row);
+        }
+        flat
+    };
+
+    const SWAPS: usize = 40;
+    std::thread::scope(|s| {
+        // Swapper: B flips between its two variants, paced so the
+        // two-version window covers a normally-scheduled in-flight batch.
+        {
+            let pool = pool.clone();
+            let (f1, f2) = (mb1.flatten(), mb2.flatten());
+            s.spawn(move || {
+                for i in 0..SWAPS {
+                    let f = if i % 2 == 0 { f2.clone() } else { f1.clone() };
+                    pool.swap(id_b, f).expect("swap of a live model");
+                    std::thread::sleep(std::time::Duration::from_micros(300));
+                }
+            });
+        }
+        for t in 0..THREADS {
+            let pool = pool.clone();
+            let (ref_a, ref_b1, ref_b2) = (&ref_a, &ref_b1, &ref_b2);
+            let flat_window = &flat_window;
+            s.spawn(move || {
+                let mut out = vec![0f32; WINDOW];
+                for i in 0..ITERS * 2 {
+                    let start = window_start(t, i);
+                    let flat = flat_window(start);
+                    if t % 2 == 0 {
+                        // The unswapped tenant: zero failures, exact bits,
+                        // throughout the neighbor's deploy storm.
+                        pool.predict(id_a, &flat, nf, &mut out)
+                            .expect("unswapped model must never fail during a neighbor's swap");
+                        for (j, p) in out.iter().enumerate() {
+                            assert_eq!(p.to_bits(), ref_a[start + j], "t{t} i{i} row {}", start + j);
+                        }
+                    } else {
+                        let mut attempts = 0;
+                        loop {
+                            attempts += 1;
+                            if pool.predict(id_b, &flat, nf, &mut out).is_ok() {
+                                break;
+                            }
+                            assert!(attempts < 10, "stale-version retries must converge");
+                        }
+                        let all_b1 = (0..WINDOW).all(|j| out[j].to_bits() == ref_b1[start + j]);
+                        let all_b2 = (0..WINDOW).all(|j| out[j].to_bits() == ref_b2[start + j]);
+                        assert!(
+                            all_b1 || all_b2,
+                            "t{t} i{i}: a batch must carry ONE version's bits, never a mix"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    assert_eq!(pool.version(id_b), 1 + SWAPS as u32);
+    assert_eq!(pool.version(id_a), 1, "unswapped tenant's version untouched");
+    let load = |c: &std::sync::atomic::AtomicU64| c.load(std::sync::atomic::Ordering::Relaxed);
+    let stats = pool.stats();
+    assert_eq!(load(&stats.model_swaps), SWAPS as u64);
+    assert!(load(&stats.replica_builds) > 0, "swaps pre-build replicas off the hot path");
+}

@@ -1,0 +1,221 @@
+//! Snapshot format battery: round-trip fidelity + corruption fuzz.
+//!
+//! Two legs, mirroring the two halves of the loader's contract
+//! (`lrwbins::snapshot`):
+//!
+//! 1. **Round-trip property** — over several independently trained stacks,
+//!    `write → parse` preserves every serving array bitwise: the zero-copy
+//!    [`ForestView`](lrwbins::gbdt::ForestView), the materialized forest and
+//!    the rebuilt tables all score bit-identically to the originals.
+//! 2. **Corruption fuzz** — malformed bytes are a clean `Err` from
+//!    [`Snapshot::parse`](lrwbins::snapshot::Snapshot::parse), never a panic
+//!    and never an allocation sized by untrusted lengths: truncation at and
+//!    around EVERY section boundary, a flipped byte in every payload and
+//!    every load-bearing section-table field, oversized lengths, bad
+//!    magic/version. The fuzz legs walk the section table straight from the
+//!    documented byte layout (header 24 B, 32 B entries), so they double as
+//!    a format-spec check against writer drift.
+
+use lrwbins::gbdt::{train, FlatForest, GbdtParams};
+use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams, ServingTables};
+use lrwbins::snapshot::{fnv1a64, Snapshot};
+use lrwbins::tabular::{Dataset, Schema};
+use lrwbins::util::rng::Rng;
+
+// The documented layout (kept in sync with `snapshot`'s module docs — these
+// tests intentionally do NOT reuse the crate's private constants).
+const HEADER_LEN: usize = 24;
+const ENTRY_LEN: usize = 32;
+const N_SECTIONS: usize = 15;
+
+/// An independently trained serving stack; feature width varies with the
+/// seed so the format is exercised at several shapes.
+fn stack(seed: u64) -> (Dataset, ServingTables, FlatForest) {
+    let n = 4 + (seed as usize % 3);
+    let mut rng = Rng::new(seed);
+    let mut d = Dataset::new(Schema::numeric(n));
+    for _ in 0..1200 {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let y = (x[0] * x[1] + x[n - 1] > 0.2) as u8 as f32;
+        d.push_row(&x, y);
+    }
+    let order: Vec<usize> = (0..n).collect();
+    let m = LrwBinsModel::train(
+        &d,
+        &order,
+        &LrwBinsParams {
+            b: 3,
+            n_bin_features: 3,
+            n_infer_features: n,
+            min_bin_rows: 20,
+            ..Default::default()
+        },
+    );
+    let g = train(
+        &d,
+        &GbdtParams {
+            n_trees: 10,
+            max_depth: 4,
+            seed,
+            ..Default::default()
+        },
+    );
+    (d, ServingTables::from_model(&m), FlatForest::from_model(&g))
+}
+
+/// Section table entries as (offset, len) in byte order, plus the payload
+/// start (end of the table).
+fn section_table(bytes: &[u8]) -> (Vec<(usize, usize)>, usize) {
+    let mut sects = Vec::with_capacity(N_SECTIONS);
+    for i in 0..N_SECTIONS {
+        let e = HEADER_LEN + i * ENTRY_LEN;
+        let off = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(bytes[e + 16..e + 24].try_into().unwrap()) as usize;
+        sects.push((off, len));
+    }
+    (sects, HEADER_LEN + N_SECTIONS * ENTRY_LEN)
+}
+
+#[test]
+fn roundtrip_scores_bitwise_across_random_stacks() {
+    for seed in [3u64, 17, 202] {
+        let (d, tables, forest) = stack(seed);
+        let bytes = Snapshot::write(&tables, &forest);
+        let snap = Snapshot::parse(&bytes).expect("own writer output must parse");
+        assert_eq!(snap.size_bytes(), bytes.len());
+
+        let tables2 = snap.tables().expect("tables rebuild");
+        assert_eq!(tables, tables2, "seed {seed}: tables round-trip exactly");
+        let view = snap.forest_view();
+        let forest2 = snap.forest();
+
+        let mut row = Vec::new();
+        for r in 0..64.min(d.n_rows()) {
+            d.row_into(r, &mut row);
+            let want = forest.predict_one(&row).to_bits();
+            assert_eq!(want, view.predict_one(&row).to_bits(), "seed {seed} row {r}: zero-copy view");
+            assert_eq!(want, forest2.predict_one(&row).to_bits(), "seed {seed} row {r}: materialized");
+            let (p, routed) = tables.evaluate(&row);
+            let (p2, routed2) = tables2.evaluate(&row);
+            assert_eq!((p.to_bits(), routed), (p2.to_bits(), routed2), "seed {seed} row {r}: stage 1");
+        }
+    }
+}
+
+#[test]
+fn truncation_at_and_around_every_boundary_is_a_clean_err() {
+    let (_, tables, forest) = stack(5);
+    let bytes = Snapshot::write(&tables, &forest);
+    let (sects, table_end) = section_table(&bytes);
+
+    let mut cuts: Vec<usize> = vec![0, 1, 7, 8, HEADER_LEN - 1, HEADER_LEN, table_end - 1, table_end];
+    for &(off, len) in &sects {
+        cuts.extend([off.saturating_sub(1), off, off + len / 2, (off + len).saturating_sub(1), off + len]);
+    }
+    cuts.push(bytes.len() - 1);
+    for cut in cuts {
+        if cut >= bytes.len() {
+            continue;
+        }
+        assert!(
+            Snapshot::parse(&bytes[..cut]).is_err(),
+            "truncation to {cut}/{} bytes must be rejected",
+            bytes.len()
+        );
+    }
+    // Trailing garbage is a length mismatch too, not silently ignored.
+    let mut longer = bytes.clone();
+    longer.push(0);
+    assert!(Snapshot::parse(&longer).is_err(), "trailing bytes must be rejected");
+    // And the pristine buffer still parses after all that slicing.
+    assert!(Snapshot::parse(&bytes).is_ok());
+}
+
+#[test]
+fn flipped_bytes_in_every_payload_and_table_field_are_rejected() {
+    let (_, tables, forest) = stack(6);
+    let bytes = Snapshot::write(&tables, &forest);
+    let (sects, _) = section_table(&bytes);
+
+    // Header: magic and version bytes.
+    for at in [0usize, 5, 8] {
+        let mut b = bytes.clone();
+        b[at] ^= 0xFF;
+        assert!(Snapshot::parse(&b).is_err(), "header byte {at}");
+    }
+    // Every load-bearing field of every section-table entry (tag, offset,
+    // len, checksum — the pad word is unchecked by design).
+    for i in 0..N_SECTIONS {
+        let e = HEADER_LEN + i * ENTRY_LEN;
+        for field in [0usize, 8, 16, 24] {
+            let mut b = bytes.clone();
+            b[e + field] ^= 0xFF;
+            assert!(Snapshot::parse(&b).is_err(), "entry {i} field at +{field}");
+        }
+    }
+    // A flipped byte anywhere inside every non-empty payload fails that
+    // section's checksum.
+    for (i, &(off, len)) in sects.iter().enumerate() {
+        if len == 0 {
+            continue;
+        }
+        for at in [off, off + len / 2, off + len - 1] {
+            let mut b = bytes.clone();
+            b[at] ^= 0x01;
+            assert!(Snapshot::parse(&b).is_err(), "section {i} payload byte {at}");
+        }
+    }
+}
+
+#[test]
+fn oversized_lengths_are_rejected_without_allocation() {
+    let (_, tables, forest) = stack(7);
+    let bytes = Snapshot::write(&tables, &forest);
+
+    for i in 0..N_SECTIONS {
+        let e = HEADER_LEN + i * ENTRY_LEN;
+        // len = u64::MAX — must die on overflow-safe bounds math, not OOM.
+        let mut b = bytes.clone();
+        b[e + 16..e + 24].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Snapshot::parse(&b).is_err(), "entry {i}: huge len");
+        // offset past the buffer.
+        let mut b = bytes.clone();
+        b[e + 8..e + 16].copy_from_slice(&(bytes.len() as u64 * 2).to_le_bytes());
+        assert!(Snapshot::parse(&b).is_err(), "entry {i}: out-of-range offset");
+    }
+    // Header total_len inflated: exact-length check fires before any
+    // section is touched.
+    let mut b = bytes.clone();
+    b[16..24].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+    assert!(Snapshot::parse(&b).is_err(), "inflated total_len");
+}
+
+#[test]
+fn semantically_poisoned_sections_fail_validation_even_with_good_checksums() {
+    let (_, tables, forest) = stack(8);
+    let bytes = Snapshot::write(&tables, &forest);
+    let (sects, _) = section_table(&bytes);
+
+    // Poison each u32-typed section's first element to u32::MAX and re-sign
+    // its checksum: the structural pass now accepts it, so the semantic
+    // validators must be the ones to refuse (out-of-range feature id, child
+    // edge, root, or a shape equation breaking).
+    let mut rejected = 0;
+    for (i, &(off, len)) in sects.iter().enumerate() {
+        if len < 4 {
+            continue;
+        }
+        let mut b = bytes.clone();
+        b[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = HEADER_LEN + i * ENTRY_LEN;
+        let sum = fnv1a64(&b[off..off + len]);
+        b[e + 24..e + 32].copy_from_slice(&sum.to_le_bytes());
+        if Snapshot::parse(&b).is_err() {
+            rejected += 1;
+        }
+    }
+    assert!(
+        rejected >= 5,
+        "poisoning index-typed sections must trip semantic validation (got {rejected})"
+    );
+}
