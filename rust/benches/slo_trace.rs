@@ -1,0 +1,189 @@
+//! SLO trajectory bench: drives the full serving stack — per-tenant
+//! coordinators → tenant-stamped clients → server with admission control +
+//! CoDel sojourn shedding → shard-pool backend — through the seeded burst
+//! trace while the `SloController` works the knobs, on BOTH I/O paths.
+//!
+//! Emits `BENCH_slo.json` (offered load vs served/degraded/rejected/shed
+//! per tick, p50/p99, cores used, knob positions) at the repo root so every
+//! future perf PR is judged under realistic traces, not just uniform
+//! microbenches (ROADMAP "SLO-driven control plane").
+//!
+//! Run: `cargo bench --bench slo_trace [-- --quick]`
+
+use lrwbins::coordinator::{Coordinator, DegradeMode};
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams, ServingTables};
+use lrwbins::rpc::admission::AdmissionConfig;
+use lrwbins::rpc::netsim::{NetSim, NetSimConfig};
+use lrwbins::rpc::server::{BatcherConfig, NativeBackend, RpcServer};
+use lrwbins::rpc::{ClientConfig, RetryPolicy, RpcClient};
+use lrwbins::runtime::{ShardPool, ShardPoolConfig};
+use lrwbins::slo::{
+    generate_trace, run_trace, ControllerConfig, HarnessConfig, Knobs, SloController, SloReport,
+    TraceConfig,
+};
+use lrwbins::telemetry::ServeMetrics;
+use lrwbins::util::bench::quick_requested;
+use lrwbins::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+const N_TENANTS: u32 = 3;
+const SEED: u64 = 0x510;
+
+fn trace_config(quick: bool) -> TraceConfig {
+    TraceConfig {
+        duration: Duration::from_secs(if quick { 2 } else { 6 }),
+        base_rps: 150.0,
+        peak_rps: 400.0,
+        diurnal_periods: 1.0,
+        burst_every: Duration::from_secs(1),
+        burst_len: Duration::from_millis(300),
+        burst_mult: 4.0,
+        n_tenants: N_TENANTS,
+        hot_tenant: Some(0),
+        hot_share: 0.8,
+        rows_min: 1,
+        rows_max: 4,
+        low_priority_share: 0.3,
+        seed: SEED,
+    }
+}
+
+fn run(reactor: bool, quick: bool) -> SloReport {
+    let cfg = trace_config(quick);
+    let spec = datagen::preset("aci").unwrap().with_rows(4000);
+    let data = datagen::generate(&spec, 5);
+    let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+    let mut first = LrwBinsModel::train(
+        &data,
+        &ranking.order,
+        &LrwBinsParams {
+            b: 2,
+            n_bin_features: 3,
+            n_infer_features: 6,
+            ..Default::default()
+        },
+    );
+    let route: std::collections::HashSet<u32> =
+        first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+    first.set_route(route);
+    let model = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::quick());
+
+    let pool = Arc::new(ShardPool::with_config(ShardPoolConfig {
+        n_shards: 4,
+        min_task_rows: 8,
+        ..Default::default()
+    }));
+    let metrics = Arc::new(ServeMetrics::new());
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(NativeBackend::with_pool(model, pool.clone())),
+        Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+        BatcherConfig {
+            reactor,
+            admission: Some(AdmissionConfig {
+                tenant_rate_rows_per_s: 300.0,
+                tenant_burst_rows: 150.0,
+                global_inflight_rows: 0,
+            }),
+            sojourn_slo: Duration::from_millis(20),
+            ..Default::default()
+        },
+        metrics.clone(),
+    )
+    .expect("server");
+
+    let coords: Vec<Arc<Coordinator>> = (0..N_TENANTS)
+        .map(|t| {
+            let client = RpcClient::connect_with(
+                server.addr,
+                ClientConfig {
+                    timeout: Duration::from_secs(5),
+                    retry: RetryPolicy::none(),
+                    tenant: t,
+                    ..Default::default()
+                },
+            )
+            .expect("tenant client");
+            let mut c = Coordinator::new(
+                ServingTables::from_model(&first),
+                Some(client),
+                0,
+                metrics.clone(),
+            );
+            c.degrade = DegradeMode::Stage1Prior;
+            Arc::new(c)
+        })
+        .collect();
+
+    let trace = generate_trace(&cfg);
+    let rows: Vec<Vec<f32>> = (0..256).map(|r| data.row(r)).collect();
+    let mut controller = SloController::new(ControllerConfig {
+        p99_target: Duration::from_millis(20),
+        relax_below: 0.5,
+        max_shards: 4,
+        fine_task_rows: 8,
+        coarse_task_rows: 64,
+        min_rate_factor: 0.5,
+    });
+    let knobs = Knobs {
+        admission: server.admission(),
+        pool: Some(&pool),
+    };
+    run_trace(
+        &coords,
+        &knobs,
+        &metrics,
+        &trace,
+        &rows,
+        &mut controller,
+        &HarnessConfig {
+            tick: Duration::from_millis(150),
+            senders: 8,
+            deadline: Some(Duration::from_millis(500)),
+        },
+    )
+}
+
+fn main() {
+    let quick = quick_requested();
+    println!("# slo_trace (trace seed {SEED:#x}{})", if quick { ", --quick" } else { "" });
+    println!();
+    println!("| path | offered | served | degraded | rejected | dl-shed | errors | p99 us |");
+    println!("|---|---|---|---|---|---|---|---|");
+    let mut runs = Vec::new();
+    for (name, reactor) in [("threaded", false), ("reactor", true)] {
+        let report = run(reactor, quick);
+        println!(
+            "| {name} | {} | {} | {} | {} | {} | {} | {} |",
+            report.offered,
+            report.served,
+            report.degraded,
+            report.rejected,
+            report.deadline_shed,
+            report.errors,
+            report.overall_p99_us
+        );
+        assert_eq!(report.accounted(), report.offered, "conservation must hold");
+        runs.push(report.to_json(name));
+    }
+    println!();
+
+    // Same --quick etiquette as hotpath_microbench: short runs are too
+    // noisy to compare across commits, so only full runs overwrite the
+    // committed trajectory.
+    if quick {
+        eprintln!("(--quick run: not overwriting BENCH_slo.json)");
+        return;
+    }
+    let mut j = Json::obj();
+    j.set("title", Json::Str("slo_trace".into()));
+    j.set("results", Json::Arr(runs));
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_slo.json");
+    match std::fs::write(&json_path, j.pretty() + "\n") {
+        Ok(()) => eprintln!("wrote {}", json_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+    }
+}

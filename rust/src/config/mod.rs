@@ -65,6 +65,24 @@ pub struct ServeConfig {
     /// budget rides the wire so the server batcher and shard pool shed
     /// expired work instead of computing answers nobody can use.
     pub deadline_ms: u64,
+    /// Overload model — global cap on admitted-but-unfinished rows
+    /// (0 = uncapped). Any admission knob > 0 turns admission control on
+    /// at the server door (see `rpc::admission`).
+    pub admit_global_rows: usize,
+    /// Sustained per-tenant admission rate, rows per second (0 = the
+    /// admission default when another knob enables admission).
+    pub admit_tenant_rate: f64,
+    /// Per-tenant burst allowance, rows (token-bucket capacity; 0 = the
+    /// admission default).
+    pub admit_tenant_burst: f64,
+    /// CoDel sojourn target for the batcher queue, microseconds; jobs whose
+    /// measured queue delay stands above this for a full interval are shed
+    /// with `REJECTED` frames. 0 disables sojourn shedding.
+    pub sojourn_slo_us: u64,
+    /// Admitted-request p99 target for the SLO controller, milliseconds
+    /// (0 = the controller default). Only read by the SLO harness/bench;
+    /// the serving path itself never looks at it.
+    pub slo_p99_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -92,6 +110,11 @@ impl Default for ServeConfig {
             breaker_cooldown_ms: 250,
             degrade: "fail".into(),
             deadline_ms: 0,
+            admit_global_rows: 0,
+            admit_tenant_rate: 0.0,
+            admit_tenant_burst: 0.0,
+            sojourn_slo_us: 0,
+            slo_p99_ms: 0,
         }
     }
 }
@@ -130,6 +153,11 @@ impl ServeConfig {
         );
         j.set("degrade", Json::Str(self.degrade.clone()));
         j.set("deadline_ms", Json::Num(self.deadline_ms as f64));
+        j.set("admit_global_rows", Json::Num(self.admit_global_rows as f64));
+        j.set("admit_tenant_rate", Json::Num(self.admit_tenant_rate));
+        j.set("admit_tenant_burst", Json::Num(self.admit_tenant_burst));
+        j.set("sojourn_slo_us", Json::Num(self.sojourn_slo_us as f64));
+        j.set("slo_p99_ms", Json::Num(self.slo_p99_ms as f64));
         j
     }
 
@@ -163,6 +191,11 @@ impl ServeConfig {
             breaker_cooldown_ms: n("breaker_cooldown_ms", d.breaker_cooldown_ms as f64) as u64,
             degrade: s("degrade", &d.degrade),
             deadline_ms: n("deadline_ms", d.deadline_ms as f64) as u64,
+            admit_global_rows: n("admit_global_rows", d.admit_global_rows as f64) as usize,
+            admit_tenant_rate: n("admit_tenant_rate", d.admit_tenant_rate),
+            admit_tenant_burst: n("admit_tenant_burst", d.admit_tenant_burst),
+            sojourn_slo_us: n("sojourn_slo_us", d.sojourn_slo_us as f64) as u64,
+            slo_p99_ms: n("slo_p99_ms", d.slo_p99_ms as f64) as u64,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -205,6 +238,32 @@ impl ServeConfig {
         }
     }
 
+    /// Admission control from the overload knobs: `None` (admit
+    /// everything) unless at least one knob is set; knobs left at 0 take
+    /// the `rpc::AdmissionConfig` defaults.
+    pub fn admission_config(&self) -> Option<crate::rpc::AdmissionConfig> {
+        if self.admit_global_rows == 0
+            && self.admit_tenant_rate == 0.0
+            && self.admit_tenant_burst == 0.0
+        {
+            return None;
+        }
+        let d = crate::rpc::AdmissionConfig::default();
+        Some(crate::rpc::AdmissionConfig {
+            tenant_rate_rows_per_s: if self.admit_tenant_rate > 0.0 {
+                self.admit_tenant_rate
+            } else {
+                d.tenant_rate_rows_per_s
+            },
+            tenant_burst_rows: if self.admit_tenant_burst > 0.0 {
+                self.admit_tenant_burst
+            } else {
+                d.tenant_burst_rows
+            },
+            global_inflight_rows: self.admit_global_rows,
+        })
+    }
+
     /// Per-request options from the configured default deadline budget.
     pub fn predict_options(&self) -> crate::rpc::PredictOptions {
         if self.deadline_ms == 0 {
@@ -233,6 +292,12 @@ impl ServeConfig {
         }
         if self.breaker_failures == 0 {
             return Err("breaker_failures must be > 0 (use a huge value to disable)".into());
+        }
+        if !self.admit_tenant_rate.is_finite() || self.admit_tenant_rate < 0.0 {
+            return Err("admit_tenant_rate must be finite and >= 0".into());
+        }
+        if !self.admit_tenant_burst.is_finite() || self.admit_tenant_burst < 0.0 {
+            return Err("admit_tenant_burst must be finite and >= 0".into());
         }
         Ok(())
     }
@@ -353,6 +418,50 @@ mod tests {
         let opts = c2.predict_options();
         assert!(opts.deadline.is_some());
         assert!(ServeConfig::default().predict_options().deadline.is_none());
+    }
+
+    #[test]
+    fn overload_knobs_roundtrip_and_gate_admission() {
+        // Defaults: no admission, no sojourn shedding, controller default.
+        let d = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(d.admission_config().is_none());
+        assert_eq!(d.sojourn_slo_us, 0);
+        assert_eq!(d.slo_p99_ms, 0);
+
+        let c = ServeConfig {
+            admit_global_rows: 4096,
+            admit_tenant_rate: 1500.0,
+            admit_tenant_burst: 300.0,
+            sojourn_slo_us: 2500,
+            slo_p99_ms: 40,
+            ..Default::default()
+        };
+        let c2 = ServeConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(c2.admit_global_rows, 4096);
+        assert_eq!(c2.admit_tenant_rate, 1500.0);
+        assert_eq!(c2.admit_tenant_burst, 300.0);
+        assert_eq!(c2.sojourn_slo_us, 2500);
+        assert_eq!(c2.slo_p99_ms, 40);
+        let a = c2.admission_config().expect("knobs set → admission on");
+        assert_eq!(a.global_inflight_rows, 4096);
+        assert_eq!(a.tenant_rate_rows_per_s, 1500.0);
+        assert_eq!(a.tenant_burst_rows, 300.0);
+
+        // One knob is enough to arm admission; zeros take the defaults.
+        let c3 = ServeConfig {
+            admit_global_rows: 64,
+            ..Default::default()
+        };
+        let a3 = c3.admission_config().unwrap();
+        assert_eq!(a3.global_inflight_rows, 64);
+        assert_eq!(
+            a3.tenant_rate_rows_per_s,
+            crate::rpc::AdmissionConfig::default().tenant_rate_rows_per_s
+        );
+
+        // Negative / non-finite rates are rejected at validation.
+        let j = Json::parse(r#"{"admit_tenant_rate": -2.0}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -55,6 +55,7 @@ use crate::runtime::{ModelId, ShardPool};
 use crate::snapshot::Snapshot;
 use crate::tabular::RowBlock;
 use crate::telemetry::{CpuTimer, ServeMetrics};
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
@@ -189,8 +190,20 @@ pub struct Coordinator {
     pub degrade: DegradeMode,
     /// Optional feature-fetch cost model (None = features already in hand).
     pub fetch: Option<FetchSim>,
+    /// Brownout rung (see [`Coordinator::set_brownout`]): 0 = off,
+    /// 1 = low-priority misses answer their stage-1 prior preemptively,
+    /// 2 = every miss does. Only effective under
+    /// [`DegradeMode::Stage1Prior`] — brownout IS that degradation,
+    /// applied before the second stage is even asked.
+    brownout: AtomicU8,
     scratch: Mutex<CoordScratch>,
 }
+
+/// Brownout rung: low-priority requests are browned out, full-priority
+/// traffic still gets the second stage.
+pub const BROWNOUT_LOW_PRIORITY: u8 = 1;
+/// Brownout rung: every route-missed request answers its stage-1 prior.
+pub const BROWNOUT_ALL: u8 = 2;
 
 impl Coordinator {
     pub fn new(
@@ -242,8 +255,37 @@ impl Coordinator {
             mode: Mode::Multistage,
             degrade: DegradeMode::default(),
             fetch: None,
+            brownout: AtomicU8::new(0),
             scratch: Mutex::new(CoordScratch::default()),
         }
+    }
+
+    /// Set the brownout rung — the intermediate step of the overload
+    /// ladder, between full service and admission rejection: under
+    /// measured pressure the SLO controller degrades *before* dropping.
+    /// `0` = off; [`BROWNOUT_LOW_PRIORITY`] answers low-priority misses
+    /// (see [`PredictOptions::low_priority`]) with their stage-1 prior as
+    /// [`Served::Degraded`] without spending second-stage capacity;
+    /// [`BROWNOUT_ALL`] does that for every miss. Levels past 2 clamp.
+    /// No-op unless `degrade == DegradeMode::Stage1Prior` — brownout
+    /// must never silently degrade a coordinator that promised errors.
+    pub fn set_brownout(&self, level: u8) {
+        self.brownout.store(level.min(BROWNOUT_ALL), Ordering::Relaxed);
+    }
+
+    /// The current brownout rung (0 = off).
+    pub fn brownout(&self) -> u8 {
+        self.brownout.load(Ordering::Relaxed)
+    }
+
+    /// Does the ladder shed this request's second-stage work right now?
+    fn browned_out(&self, opts: &PredictOptions) -> bool {
+        self.degrade == DegradeMode::Stage1Prior
+            && match self.brownout.load(Ordering::Relaxed) {
+                0 => false,
+                BROWNOUT_LOW_PRIORITY => opts.low_priority,
+                _ => true,
+            }
     }
 
     /// The second-stage RPC client, when that is the configured fallback
@@ -454,6 +496,16 @@ impl Coordinator {
             return Ok((p1, Served::Stage1));
         }
 
+        // Brownout rung: shed this miss's second-stage work PREEMPTIVELY
+        // (no remaining-feature fetch, no RPC) and answer the stage-1
+        // prior, explicitly marked and counted as degraded.
+        if self.browned_out(opts) {
+            self.metrics.degraded_rows.fetch_add(1, Ordering::Relaxed);
+            self.metrics.degraded_requests.fetch_add(1, Ordering::Relaxed);
+            self.metrics.e2e.record(t0.elapsed().as_nanos() as u64);
+            return Ok((p1, Served::Degraded));
+        }
+
         // Fallback: fetch the remaining features, pad + RPC.
         if let Some(f) = &self.fetch {
             if self.mode != Mode::AlwaysRpc {
@@ -497,6 +549,16 @@ impl Coordinator {
     /// the block path ([`Coordinator::predict_block`]); results are
     /// bit-identical to the scalar per-row path.
     pub fn predict_batch(&self, rows: &[Vec<f32>]) -> std::io::Result<Vec<(f32, Served)>> {
+        self.predict_batch_opts(rows, &PredictOptions::default())
+    }
+
+    /// [`Coordinator::predict_batch`] with per-request options (deadline
+    /// budget, low-priority marking for the brownout ladder).
+    pub fn predict_batch_opts(
+        &self,
+        rows: &[Vec<f32>],
+        opts: &PredictOptions,
+    ) -> std::io::Result<Vec<(f32, Served)>> {
         if rows.is_empty() {
             return Ok(Vec::new());
         }
@@ -506,14 +568,7 @@ impl Coordinator {
         let mut guard = self.lock_scratch();
         let mut block = std::mem::take(&mut guard.block);
         block.fill_from_rows(rows);
-        let pending = self.serve_block_async(
-            &block,
-            Some(rows),
-            guard,
-            t0,
-            cpu,
-            &PredictOptions::default(),
-        );
+        let pending = self.serve_block_async(&block, Some(rows), guard, t0, cpu, opts);
         self.lock_scratch().block = block;
         pending?.wait()
     }
@@ -667,6 +722,32 @@ impl Coordinator {
         // scored in-process for the embedded (multi-tenant pool) fallback.
         let rpc = if miss_idx.is_empty() {
             None
+        } else if self.browned_out(opts) {
+            // Brownout rung: shed the whole coalesced second-stage call
+            // preemptively — every missed row keeps its stage-1 prior
+            // (already in the placeholder), marked and counted degraded.
+            // No remaining-feature fetch, no RPC launch: browning out must
+            // COST less than serving, or the ladder doesn't shed load.
+            let wall = t0.elapsed().as_nanos() as u64;
+            for &i in &miss_idx {
+                out[i].1 = Served::Degraded;
+                self.metrics.e2e.record(wall);
+            }
+            self.metrics
+                .degraded_rows
+                .fetch_add(miss_idx.len() as u64, Ordering::Relaxed);
+            self.metrics.degraded_requests.fetch_add(1, Ordering::Relaxed);
+            return Ok(BlockPending {
+                coord: self,
+                out,
+                miss_idx,
+                miss_rows,
+                rpc: None,
+                t0,
+                miss_cpu_base: 0,
+                span_walls: Vec::new(),
+                delivered: Vec::new(),
+            });
         } else {
             if self.mode != Mode::AlwaysRpc {
                 if let Some(f) = &self.fetch {
@@ -1807,5 +1888,92 @@ mod tests {
             served_rpc |= served == Served::Rpc;
         }
         assert!(served_rpc, "rpc service must resume after force_close");
+    }
+
+    /// The brownout ladder: rung 1 browns out low-priority misses only,
+    /// rung 2 browns out every miss (block path included), rung 0 restores
+    /// full service — with exact degraded accounting, stage-1-prior bits,
+    /// and no second-stage spend for browned-out work.
+    #[test]
+    fn brownout_ladder_degrades_low_priority_then_everyone() {
+        let (data, mut coord, _server) = setup();
+        coord.degrade = DegradeMode::Stage1Prior;
+
+        // Find a route-missed row to drill with.
+        let mut row = Vec::new();
+        let mut miss_row = None;
+        for r in 0..200 {
+            data.row_into(r, &mut row);
+            if !coord.tables.evaluate(&row).1 {
+                miss_row = Some(row.clone());
+                break;
+            }
+        }
+        let miss_row = miss_row.expect("drill needs a route-missed row");
+        let p1_bits = coord.tables.evaluate(&miss_row).0.to_bits();
+        let low = PredictOptions::default().low_priority();
+        let full = PredictOptions::default();
+
+        // Rung 0: everyone gets the second stage.
+        assert_eq!(coord.predict_with(&miss_row, &low).unwrap().1, Served::Rpc);
+        assert_eq!(coord.predict_with(&miss_row, &full).unwrap().1, Served::Rpc);
+
+        // Rung 1: low-priority browns out (stage-1 prior bits), full
+        // priority is still served for real.
+        coord.set_brownout(BROWNOUT_LOW_PRIORITY);
+        let (p, served) = coord.predict_with(&miss_row, &low).unwrap();
+        assert_eq!(served, Served::Degraded);
+        assert_eq!(p.to_bits(), p1_bits, "brownout must answer the stage-1 prior");
+        assert_eq!(coord.predict_with(&miss_row, &full).unwrap().1, Served::Rpc);
+
+        // Rung 2 (levels past it clamp): every miss browns out, the block
+        // path's coalesced RPC included.
+        coord.set_brownout(99);
+        assert_eq!(coord.brownout(), BROWNOUT_ALL);
+        assert_eq!(
+            coord.predict_with(&miss_row, &full).unwrap().1,
+            Served::Degraded
+        );
+        let rpc_before = coord.metrics.rpc_calls.load(Ordering::Relaxed);
+        let rows = vec![miss_row.clone(); 8];
+        let out = coord.predict_batch(&rows).unwrap();
+        assert_eq!(out.len(), 8);
+        for (p, served) in &out {
+            assert_eq!(*served, Served::Degraded);
+            assert_eq!(p.to_bits(), p1_bits);
+        }
+        assert_eq!(
+            coord.metrics.rpc_calls.load(Ordering::Relaxed),
+            rpc_before,
+            "browned-out blocks must not spend second-stage calls"
+        );
+
+        // Ladder down: full service resumes.
+        coord.set_brownout(0);
+        assert_eq!(coord.predict_with(&miss_row, &low).unwrap().1, Served::Rpc);
+
+        // Degraded accounting reconciles exactly: 1 (rung-1 low) +
+        // 1 (rung-2 scalar) + 8 (rung-2 block) rows over 3 requests.
+        assert_eq!(coord.metrics.degraded_rows.load(Ordering::Relaxed), 10);
+        assert_eq!(coord.metrics.degraded_requests.load(Ordering::Relaxed), 3);
+    }
+
+    /// Brownout is scoped to `DegradeMode::Stage1Prior`: a coordinator
+    /// that promised errors (`Fail`) must not silently degrade, whatever
+    /// rung a confused controller sets.
+    #[test]
+    fn brownout_without_stage1prior_never_degrades() {
+        let (data, coord, _server) = setup();
+        assert_eq!(coord.degrade, DegradeMode::Fail);
+        coord.set_brownout(BROWNOUT_ALL);
+        let mut row = Vec::new();
+        let mut served_rpc = false;
+        for r in 0..50 {
+            data.row_into(r, &mut row);
+            let (_, served) = coord.predict(&row).unwrap();
+            assert_ne!(served, Served::Degraded, "Fail mode must not brown out");
+            served_rpc |= served == Served::Rpc;
+        }
+        assert!(served_rpc, "misses must still reach the second stage");
     }
 }

@@ -81,6 +81,8 @@ impl StackConfig {
                 reactor: sc.reactor,
                 reactor_loops: sc.reactor_loops,
                 write_queue_frames: sc.write_queue_frames,
+                admission: sc.admission_config(),
+                sojourn_slo: Duration::from_micros(sc.sojourn_slo_us),
                 ..Default::default()
             },
             artifacts_dir: sc.artifacts_dir.clone(),

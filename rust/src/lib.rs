@@ -174,6 +174,49 @@
 //!   server; the battery proves no hang, no wrong bits, and exact
 //!   hit/miss/error/degraded accounting under each.
 //!
+//! ## Overload model
+//!
+//! Failure handling assumes the stack *wants* to serve; overload handling
+//! decides what it *refuses* to serve, explicitly and early, so the work it
+//! does accept still meets its SLO. The ladder, cheapest refusal first:
+//!
+//! * **Admission control** — [`rpc::AdmissionControl`] sits at the
+//!   admission edge of BOTH I/O paths (epoll reactor and
+//!   thread-per-connection). Per-tenant token buckets metered in **rows**
+//!   (requests carry a tenant id on the wire; a misbehaving tenant exhausts
+//!   its own bucket, not its neighbors') plus a global in-flight row cap.
+//!   A refused request gets an explicit `REJECTED` frame with a
+//!   **retry-after hint** — distinct from a deadline shed, classified by
+//!   [`rpc::fault::is_overloaded`], and the client honors it: rejections
+//!   never burn circuit-breaker counts and back off by at least the hint,
+//!   so retry storms cannot amplify offered load (bounded by the retry
+//!   budget; proven in `rpc::client` tests).
+//! * **Sojourn shedding** — the server batcher runs a CoDel-style control
+//!   law ([`rpc::Codel`]) on **measured queue delay**: when the minimum
+//!   sojourn over an interval exceeds the SLO target, it sheds at the
+//!   `interval/√n` cadence instead of letting a standing queue grow.
+//!   Counted in [`telemetry::ServeMetrics::sojourn_shed_rows`].
+//! * **Brownout** — before dropping anything, the coordinator degrades:
+//!   under `DegradeMode::Stage1Prior` a brownout rung
+//!   ([`coordinator::Coordinator::set_brownout`]) answers low-priority
+//!   tenants (rung 1) or everyone (rung 2) with their stage-1 prior,
+//!   marked [`coordinator::Served::Degraded`] — cheaper than serving,
+//!   honest in the accounting.
+//! * **SLO controller** — [`slo::SloController`] closes the loop: a pure
+//!   AIMD state machine watching admitted p99 + shed/queue signals,
+//!   escalating capacity (live [`runtime::ShardPool::set_active_shards`] /
+//!   `set_min_task_rows`) → brownout → admission throttle, and relaxing in
+//!   reverse — including *shrinking* the pool when idle, so the p99 target
+//!   is held at minimum CPU. [`slo::run_trace`] drives it from a seeded
+//!   open-loop trace ([`slo::generate_trace`]: diurnal ramp, Poisson
+//!   arrivals, correlated bursts, hot-tenant skew) and emits the
+//!   `BENCH_slo.json` trajectory.
+//!
+//! Conservation under all of it: every submitted row is accounted exactly
+//! once — `stage1 + rpc + degraded + rejected + deadline_shed + errors`
+//! equals rows submitted (chaos and overload batteries assert this
+//! exactly).
+//!
 //! See DESIGN.md for the full system inventory and experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
@@ -196,6 +239,7 @@ pub mod rpc;
 /// `--features pjrt` (the `xla` bindings are not on crates.io; see
 /// `Cargo.toml` for how to enable it).
 pub mod runtime;
+pub mod slo;
 pub mod snapshot;
 pub mod telemetry;
 pub mod tabular;

@@ -1,0 +1,598 @@
+//! Admission control for the serving edge: per-tenant token-bucket quotas,
+//! a global in-flight row cap, and a CoDel-style sojourn-time shedder.
+//!
+//! This is the first rung of the overload ladder (crate docs §Overload
+//! model). Work is refused *at the door* — before it costs a queue slot or
+//! a batch seat — whenever a tenant is over its quota or the server as a
+//! whole has more rows in flight than it can finish inside the SLO. A
+//! refusal is an explicit [`Rejected`](super::proto::ClientFrame::Rejected)
+//! frame carrying a retry-after hint, so well-behaved clients back off
+//! instead of retrying into the collapse.
+//!
+//! Design notes:
+//!
+//! * **Token buckets are rows, not requests.** A tenant sending one 10k-row
+//!   batch spends the same quota as one sending 10k single-row requests;
+//!   quotas meter work, not frames. Buckets refill continuously at
+//!   `tenant_rate_rows_per_s` up to `tenant_burst_rows`.
+//! * **The in-flight cap is a `Drop` guard.** [`AdmissionControl::try_admit`]
+//!   returns an [`InflightPermit`] that decrements the shared row count when
+//!   dropped — whichever way a request leaves the server (answered, shed,
+//!   errored, drained on shutdown) the slot is returned, so the cap cannot
+//!   leak under chaos.
+//! * **CoDel sheds on *measured* queue delay.** The batcher feeds every
+//!   job's sojourn time (admission → batch formation) to [`Codel`]; when the
+//!   delay stays above the SLO target for a full interval the queue is
+//!   standing, and jobs are shed at an increasing rate (`interval/√n`) until
+//!   the delay drops — the classic CoDel control law. This catches overload
+//!   the door cannot see: slow shards, a stalled backend, burst alignment.
+//! * **Determinism.** Every method takes `now: Instant` explicitly; tests
+//!   drive a synthetic clock and the behavior is exactly reproducible.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Config
+
+/// Admission-control knobs. `Default` is permissive enough for tests and
+/// single-tenant embedding; production configs size the quota to the
+/// tenant's contract and the cap to measured capacity.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Sustained per-tenant rate, in rows per second.
+    pub tenant_rate_rows_per_s: f64,
+    /// Per-tenant burst allowance, in rows (bucket capacity).
+    pub tenant_burst_rows: f64,
+    /// Global cap on admitted-but-unfinished rows (0 = uncapped).
+    pub global_inflight_rows: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            tenant_rate_rows_per_s: 100_000.0,
+            tenant_burst_rows: 10_000.0,
+            global_inflight_rows: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rejection
+
+/// Why a request was refused at the door.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The tenant's token bucket could not cover the request.
+    TenantQuota,
+    /// The server-wide in-flight row cap is full.
+    GlobalCap,
+}
+
+/// An explicit admission refusal: the reason plus how long the client
+/// should wait before trying again.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rejection {
+    pub reason: RejectReason,
+    pub retry_after: Duration,
+}
+
+impl Rejection {
+    /// The hint in whole milliseconds, clamped to at least 1 so a client
+    /// honoring it always pauses.
+    pub fn retry_after_ms(&self) -> u32 {
+        self.retry_after.as_millis().clamp(1, u32::MAX as u128) as u32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-flight permit
+
+/// RAII lease on the global in-flight row budget. Dropping the permit
+/// returns the rows; holding it in the server's `Job` makes every exit
+/// path (respond, shed, error, drain) release exactly once.
+#[derive(Debug)]
+pub struct InflightPermit {
+    inflight: Arc<AtomicUsize>,
+    rows: usize,
+}
+
+impl InflightPermit {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
+impl Drop for InflightPermit {
+    fn drop(&mut self) {
+        self.inflight.fetch_sub(self.rows, Ordering::AcqRel);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-tenant state
+
+#[derive(Debug)]
+struct TenantState {
+    /// Rows currently available to spend.
+    tokens: f64,
+    /// Last refill instant.
+    last: Instant,
+    admitted_rows: u64,
+    admitted_requests: u64,
+    rejected_rows: u64,
+    rejected_requests: u64,
+}
+
+impl TenantState {
+    fn new(burst: f64, now: Instant) -> TenantState {
+        TenantState {
+            tokens: burst,
+            last: now,
+            admitted_rows: 0,
+            admitted_requests: 0,
+            rejected_rows: 0,
+            rejected_requests: 0,
+        }
+    }
+
+    fn refill(&mut self, rate_rows_per_s: f64, burst_rows: f64, now: Instant) {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + dt * rate_rows_per_s).min(burst_rows);
+        self.last = now;
+    }
+}
+
+/// Read-only per-tenant accounting snapshot, for reconciliation checks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    pub admitted_rows: u64,
+    pub admitted_requests: u64,
+    pub rejected_rows: u64,
+    pub rejected_requests: u64,
+}
+
+// ---------------------------------------------------------------------------
+// AdmissionControl
+
+/// The door: per-tenant token buckets plus the global in-flight row cap.
+/// Shared (`Arc`) between the acceptor paths (threaded and reactor) and
+/// whoever wants to read the accounting.
+#[derive(Debug)]
+pub struct AdmissionControl {
+    cfg: AdmissionConfig,
+    tenants: Mutex<HashMap<u32, TenantState>>,
+    inflight: Arc<AtomicUsize>,
+    inflight_hwm: AtomicUsize,
+    admitted_requests: AtomicU64,
+    rejected_requests: AtomicU64,
+    /// Live admission-rate scale in thousandths of the configured baseline
+    /// (1000 = 100%). The SLO controller's knob: cheap to read on every
+    /// refill, adjustable without a lock.
+    rate_factor_millis: AtomicU64,
+}
+
+impl AdmissionControl {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionControl {
+        AdmissionControl {
+            cfg,
+            tenants: Mutex::new(HashMap::new()),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            inflight_hwm: AtomicUsize::new(0),
+            admitted_requests: AtomicU64::new(0),
+            rejected_requests: AtomicU64::new(0),
+            rate_factor_millis: AtomicU64::new(1000),
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Effective sustained rate after the controller's scaling.
+    fn effective_rate(&self) -> f64 {
+        self.cfg.tenant_rate_rows_per_s
+            * (self.rate_factor_millis.load(Ordering::Relaxed) as f64 / 1000.0)
+    }
+
+    /// Admit `n_rows` for `tenant` at `now`, or explain the refusal.
+    ///
+    /// Zero-row frames (pings) always pass and spend nothing — they are
+    /// liveness traffic, not work. The global cap is checked before the
+    /// tenant bucket so a full server refuses cheaply without touching
+    /// (or charging) any bucket.
+    pub fn try_admit(
+        &self,
+        tenant: u32,
+        n_rows: usize,
+        now: Instant,
+    ) -> Result<InflightPermit, Rejection> {
+        if n_rows == 0 {
+            return Ok(InflightPermit {
+                inflight: Arc::clone(&self.inflight),
+                rows: 0,
+            });
+        }
+
+        // Global cap: optimistic add, roll back on breach.
+        if self.cfg.global_inflight_rows > 0 {
+            let prev = self.inflight.fetch_add(n_rows, Ordering::AcqRel);
+            if prev + n_rows > self.cfg.global_inflight_rows {
+                self.inflight.fetch_sub(n_rows, Ordering::AcqRel);
+                self.rejected_requests.fetch_add(1, Ordering::Relaxed);
+                let mut tenants = self.tenants.lock().unwrap_or_else(PoisonError::into_inner);
+                let st = tenants
+                    .entry(tenant)
+                    .or_insert_with(|| TenantState::new(self.cfg.tenant_burst_rows, now));
+                st.rejected_rows += n_rows as u64;
+                st.rejected_requests += 1;
+                return Err(Rejection {
+                    reason: RejectReason::GlobalCap,
+                    // No refill schedule to predict here — suggest a short,
+                    // load-proportional pause.
+                    retry_after: Duration::from_millis(5),
+                });
+            }
+            self.inflight_hwm.fetch_max(prev + n_rows, Ordering::Relaxed);
+        }
+
+        let rate = self.effective_rate();
+        let mut tenants = self.tenants.lock().unwrap_or_else(PoisonError::into_inner);
+        let st = tenants
+            .entry(tenant)
+            .or_insert_with(|| TenantState::new(self.cfg.tenant_burst_rows, now));
+        st.refill(rate, self.cfg.tenant_burst_rows, now);
+        if st.tokens + 1e-9 >= n_rows as f64 {
+            st.tokens -= n_rows as f64;
+            st.admitted_rows += n_rows as u64;
+            st.admitted_requests += 1;
+            self.admitted_requests.fetch_add(1, Ordering::Relaxed);
+            Ok(InflightPermit {
+                inflight: Arc::clone(&self.inflight),
+                rows: n_rows,
+            })
+        } else {
+            st.rejected_rows += n_rows as u64;
+            st.rejected_requests += 1;
+            self.rejected_requests.fetch_add(1, Ordering::Relaxed);
+            if self.cfg.global_inflight_rows > 0 {
+                self.inflight.fetch_sub(n_rows, Ordering::AcqRel);
+            }
+            // Time until the bucket holds n_rows (capped by burst): an
+            // honest hint for requests the quota can ever cover, a long
+            // back-off for ones it cannot.
+            let deficit = (n_rows as f64 - st.tokens).max(0.0);
+            let secs = if n_rows as f64 > self.cfg.tenant_burst_rows {
+                10.0
+            } else if rate > 0.0 {
+                deficit / rate
+            } else {
+                10.0
+            };
+            Err(Rejection {
+                reason: RejectReason::TenantQuota,
+                retry_after: Duration::from_secs_f64(secs.clamp(0.001, 10.0)),
+            })
+        }
+    }
+
+    /// Rows currently admitted and unfinished.
+    pub fn inflight_rows(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// High-water mark of the in-flight row count (0 if uncapped).
+    pub fn inflight_hwm(&self) -> usize {
+        self.inflight_hwm.load(Ordering::Relaxed)
+    }
+
+    pub fn admitted_requests(&self) -> u64 {
+        self.admitted_requests.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected_requests(&self) -> u64 {
+        self.rejected_requests.load(Ordering::Relaxed)
+    }
+
+    /// Accounting snapshot for one tenant (zeros if never seen).
+    pub fn tenant_stats(&self, tenant: u32) -> TenantStats {
+        let tenants = self.tenants.lock().unwrap_or_else(PoisonError::into_inner);
+        tenants
+            .get(&tenant)
+            .map(|st| TenantStats {
+                admitted_rows: st.admitted_rows,
+                admitted_requests: st.admitted_requests,
+                rejected_rows: st.rejected_rows,
+                rejected_requests: st.rejected_requests,
+            })
+            .unwrap_or_default()
+    }
+
+    /// Tenants with any recorded activity.
+    pub fn tenants_seen(&self) -> Vec<u32> {
+        let tenants = self.tenants.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut ids: Vec<u32> = tenants.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Scale the sustained per-tenant rate to `factor` of the configured
+    /// baseline, clamped to [0.01, 1.0] (the SLO controller's admission
+    /// knob). Burst capacity is left alone so short spikes still absorb;
+    /// only the refill rate — the sustained throughput — is throttled.
+    pub fn set_rate_factor(&self, factor: f64) {
+        let f = factor.clamp(0.01, 1.0);
+        self.rate_factor_millis
+            .store((f * 1000.0).round() as u64, Ordering::Relaxed);
+    }
+
+    /// Current admission-rate scale (1.0 = configured baseline).
+    pub fn rate_factor(&self) -> f64 {
+        self.rate_factor_millis.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CoDel
+
+/// CoDel-style standing-queue detector over measured sojourn times.
+///
+/// Feed every batched job's queue delay to [`Codel::on_job`]; it answers
+/// "shed this one?" following the CoDel control law: nothing is shed while
+/// delays dip below `target` at least once per `interval`; once the delay
+/// has stayed above target for a full interval the queue is *standing* and
+/// jobs are shed at an accelerating cadence (`interval / √n`) until a
+/// below-target delay is seen again.
+#[derive(Debug)]
+pub struct Codel {
+    target: Duration,
+    interval: Duration,
+    first_above: Option<Instant>,
+    dropping: bool,
+    drop_next: Option<Instant>,
+    drop_count: u32,
+    shed: u64,
+}
+
+impl Codel {
+    /// `target` is the acceptable sojourn (the SLO share granted to the
+    /// queue); `interval` the window a delay excursion must persist before
+    /// shedding starts (classically ~RTT; here a batch cadence multiple).
+    pub fn new(target: Duration, interval: Duration) -> Codel {
+        Codel {
+            target,
+            interval,
+            first_above: None,
+            dropping: false,
+            drop_next: None,
+            drop_count: 0,
+            shed: 0,
+        }
+    }
+
+    /// Record one job's measured `sojourn` at `now`; true means shed it.
+    pub fn on_job(&mut self, sojourn: Duration, now: Instant) -> bool {
+        if sojourn < self.target {
+            // Queue drained below target: leave dropping state entirely.
+            self.first_above = None;
+            self.dropping = false;
+            self.drop_count = 0;
+            self.drop_next = None;
+            return false;
+        }
+        match self.first_above {
+            None => {
+                // First above-target observation: arm the interval timer.
+                self.first_above = Some(now);
+                false
+            }
+            Some(t0) => {
+                if self.dropping {
+                    match self.drop_next {
+                        Some(next) if now >= next => {
+                            self.drop_count += 1;
+                            self.shed += 1;
+                            self.drop_next =
+                                Some(now + div_sqrt(self.interval, self.drop_count + 1));
+                            true
+                        }
+                        _ => false,
+                    }
+                } else if now.saturating_duration_since(t0) >= self.interval {
+                    // Standing queue confirmed: enter dropping state and
+                    // shed immediately.
+                    self.dropping = true;
+                    self.drop_count = 1;
+                    self.shed += 1;
+                    self.drop_next = Some(now + div_sqrt(self.interval, 2));
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Total jobs this detector has asked to shed.
+    pub fn shed_count(&self) -> u64 {
+        self.shed
+    }
+
+    /// Currently in the dropping state (standing queue detected).
+    pub fn dropping(&self) -> bool {
+        self.dropping
+    }
+
+    /// Suggested client pause while the queue is standing: one interval —
+    /// long enough for the control law to drain the standing queue.
+    pub fn retry_after(&self) -> Duration {
+        self.interval
+    }
+}
+
+fn div_sqrt(d: Duration, n: u32) -> Duration {
+    Duration::from_secs_f64(d.as_secs_f64() / (n.max(1) as f64).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(rate: f64, burst: f64, cap: usize) -> AdmissionConfig {
+        AdmissionConfig {
+            tenant_rate_rows_per_s: rate,
+            tenant_burst_rows: burst,
+            global_inflight_rows: cap,
+        }
+    }
+
+    #[test]
+    fn bucket_admits_burst_then_refuses_then_refills() {
+        let ac = AdmissionControl::new(cfg(100.0, 50.0, 0));
+        let t0 = Instant::now();
+        // Burst capacity admits immediately.
+        let p = ac.try_admit(7, 50, t0).expect("burst fits");
+        assert_eq!(p.rows(), 50);
+        // Bucket empty: refused, with an honest refill hint (~10 rows at
+        // 100 rows/s = 100ms).
+        let rej = ac.try_admit(7, 10, t0).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::TenantQuota);
+        assert!(rej.retry_after >= Duration::from_millis(90));
+        assert!(rej.retry_after <= Duration::from_millis(110));
+        // After the hint elapses, the same request passes.
+        let t1 = t0 + Duration::from_millis(150);
+        assert!(ac.try_admit(7, 10, t1).is_ok());
+        // Accounting reconciles.
+        let s = ac.tenant_stats(7);
+        assert_eq!(s.admitted_rows, 60);
+        assert_eq!(s.admitted_requests, 2);
+        assert_eq!(s.rejected_rows, 10);
+        assert_eq!(s.rejected_requests, 1);
+    }
+
+    #[test]
+    fn oversized_request_gets_a_long_hint_not_a_lie() {
+        let ac = AdmissionControl::new(cfg(100.0, 50.0, 0));
+        let rej = ac.try_admit(1, 500, Instant::now()).unwrap_err();
+        // 500 rows can never fit a 50-row bucket; the hint is the max
+        // back-off, not a promise the wait will help.
+        assert_eq!(rej.retry_after, Duration::from_secs(10));
+    }
+
+    #[test]
+    fn tenants_are_isolated() {
+        let ac = AdmissionControl::new(cfg(1000.0, 100.0, 0));
+        let t0 = Instant::now();
+        // Tenant 1 drains its bucket; tenant 2 is untouched.
+        assert!(ac.try_admit(1, 100, t0).is_ok());
+        assert!(ac.try_admit(1, 1, t0).is_err());
+        assert!(ac.try_admit(2, 100, t0).is_ok());
+        assert_eq!(ac.tenant_stats(2).rejected_requests, 0);
+        assert_eq!(ac.tenants_seen(), vec![1, 2]);
+    }
+
+    #[test]
+    fn global_cap_is_a_leakproof_drop_guard() {
+        let ac = AdmissionControl::new(cfg(1e9, 1e9, 100));
+        let t0 = Instant::now();
+        let p1 = ac.try_admit(1, 60, t0).unwrap();
+        let p2 = ac.try_admit(2, 40, t0).unwrap();
+        assert_eq!(ac.inflight_rows(), 100);
+        // Full: next admit bounces with the cap reason.
+        let rej = ac.try_admit(3, 1, t0).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::GlobalCap);
+        assert!(rej.retry_after >= Duration::from_millis(1));
+        // Releasing permits frees the rows exactly.
+        drop(p1);
+        assert_eq!(ac.inflight_rows(), 40);
+        assert!(ac.try_admit(3, 60, t0).is_ok());
+        drop(p2);
+        assert_eq!(ac.inflight_rows(), 60);
+        assert_eq!(ac.inflight_hwm(), 100);
+    }
+
+    #[test]
+    fn pings_always_pass_and_spend_nothing() {
+        let ac = AdmissionControl::new(cfg(100.0, 10.0, 5));
+        let t0 = Instant::now();
+        let _hold = ac.try_admit(1, 5, t0).unwrap(); // cap now full
+        for _ in 0..100 {
+            let p = ac.try_admit(1, 0, t0).expect("pings bypass");
+            assert_eq!(p.rows(), 0);
+        }
+        assert_eq!(ac.inflight_rows(), 5);
+        assert_eq!(ac.tenant_stats(1).admitted_requests, 1, "pings unbilled");
+    }
+
+    #[test]
+    fn rejected_rows_do_not_leak_inflight() {
+        let ac = AdmissionControl::new(cfg(100.0, 10.0, 1000));
+        let t0 = Instant::now();
+        // Quota refusal must roll the optimistic in-flight add back.
+        assert!(ac.try_admit(1, 20, t0).is_err());
+        assert_eq!(ac.inflight_rows(), 0);
+    }
+
+    #[test]
+    fn rate_factor_throttles_refill_not_burst() {
+        let ac = AdmissionControl::new(cfg(1000.0, 100.0, 0));
+        let t0 = Instant::now();
+        assert!(ac.try_admit(1, 100, t0).is_ok()); // drain the bucket
+        ac.set_rate_factor(0.1); // 100 rows/s effective
+        assert!((ac.rate_factor() - 0.1).abs() < 1e-9);
+        // 100ms later only ~10 rows have refilled: 50 bounces, 10 fits.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(ac.try_admit(1, 50, t1).is_err());
+        assert!(ac.try_admit(1, 10, t1).is_ok());
+        // A fresh tenant still gets the full burst instantly.
+        assert!(ac.try_admit(2, 100, t1).is_ok());
+    }
+
+    #[test]
+    fn codel_ignores_transient_spikes() {
+        let mut c = Codel::new(Duration::from_millis(5), Duration::from_millis(100));
+        let t0 = Instant::now();
+        // Above target, but recovers inside the interval: nothing shed.
+        assert!(!c.on_job(Duration::from_millis(8), t0));
+        assert!(!c.on_job(Duration::from_millis(9), t0 + Duration::from_millis(50)));
+        assert!(!c.on_job(Duration::from_millis(1), t0 + Duration::from_millis(80)));
+        // The excursion timer re-arms from scratch afterwards.
+        assert!(!c.on_job(Duration::from_millis(8), t0 + Duration::from_millis(90)));
+        assert_eq!(c.shed_count(), 0);
+        assert!(!c.dropping());
+    }
+
+    #[test]
+    fn codel_sheds_standing_queue_at_accelerating_cadence() {
+        let mut c = Codel::new(Duration::from_millis(5), Duration::from_millis(100));
+        let t0 = Instant::now();
+        let ms = Duration::from_millis;
+        assert!(!c.on_job(ms(10), t0)); // arms the timer
+        // Still above target a full interval later: dropping starts.
+        assert!(c.on_job(ms(10), t0 + ms(100)));
+        assert!(c.dropping());
+        // Next shed is interval/√2 ≈ 70ms later, not immediately.
+        assert!(!c.on_job(ms(10), t0 + ms(120)));
+        assert!(c.on_job(ms(10), t0 + ms(175)));
+        // A below-target sojourn exits dropping entirely.
+        assert!(!c.on_job(ms(1), t0 + ms(200)));
+        assert!(!c.dropping());
+        assert_eq!(c.shed_count(), 2);
+        // And the whole above-target dance must restart from the interval.
+        assert!(!c.on_job(ms(10), t0 + ms(210)));
+        assert!(!c.on_job(ms(10), t0 + ms(250)));
+        assert!(c.on_job(ms(10), t0 + ms(310)));
+    }
+
+    #[test]
+    fn rejection_hint_ms_clamps_to_at_least_one() {
+        let r = Rejection {
+            reason: RejectReason::TenantQuota,
+            retry_after: Duration::from_micros(10),
+        };
+        assert_eq!(r.retry_after_ms(), 1);
+    }
+}

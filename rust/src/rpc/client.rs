@@ -209,6 +209,9 @@ pub struct ClientConfig {
     pub retry: RetryPolicy,
     /// Circuit-breaker thresholds (consecutive failures, cooldown, p99).
     pub breaker: BreakerConfig,
+    /// Tenant id stamped on every request frame — what the server's
+    /// admission control bills quota against. 0 = the default tenant.
+    pub tenant: u32,
 }
 
 impl Default for ClientConfig {
@@ -218,6 +221,7 @@ impl Default for ClientConfig {
             max_in_flight: DEFAULT_MAX_IN_FLIGHT,
             retry: RetryPolicy::default(),
             breaker: BreakerConfig::default(),
+            tenant: 0,
         }
     }
 }
@@ -241,6 +245,8 @@ pub struct RpcClient {
     backoff_rng: Mutex<Rng>,
     /// Retries actually performed (telemetry).
     retries: AtomicU64,
+    /// Tenant id stamped on every request (see [`ClientConfig::tenant`]).
+    tenant: u32,
 }
 
 /// One streamed fallback sub-span drained by [`PendingPredict::poll_spans`]:
@@ -403,9 +409,19 @@ impl PendingPredict<'_> {
                 // Client-imposed budget expiry, not a backend failure.
                 return Err(err);
             }
-            self.client.breaker.record_failure();
-            if !retryable_error(&err)
-                || !self.client.pay_for_retry(retry + 1, self.deadline)
+            // An explicit overload rejection is a HEALTHY server saying
+            // "back off": it must never count toward the breaker's
+            // consecutive failures, and any retry must wait out at least
+            // the server's retry-after hint (on top of the normal jittered
+            // backoff) — otherwise rejection becomes a retry storm.
+            let overloaded = fault::is_overloaded(&err);
+            if !overloaded {
+                self.client.breaker.record_failure();
+            }
+            if !(overloaded || retryable_error(&err))
+                || !self
+                    .client
+                    .pay_for_retry(retry + 1, self.deadline, fault::retry_after(&err))
             {
                 return Err(err);
             }
@@ -487,6 +503,15 @@ impl PendingPredict<'_> {
             };
             self.resp_bytes += frame.wire_size();
             match frame {
+                ClientFrame::Rejected { req_id, retry_after_ms } => {
+                    debug_assert_eq!(req_id, self.req.req_id, "demux invariant");
+                    // Explicit admission/shed refusal from a healthy server:
+                    // terminal for this attempt, classified overloaded so
+                    // the caller backs off instead of burning the breaker.
+                    return Err(fault::overloaded_error(Duration::from_millis(
+                        retry_after_ms as u64,
+                    )));
+                }
                 ClientFrame::Chunk(c) => {
                     let asm = self
                         .asm
@@ -624,6 +649,7 @@ impl RpcClient {
             breaker: CircuitBreaker::new(cfg.breaker),
             backoff_rng: Mutex::new(Rng::new(0x5eed_b0ff)),
             retries: AtomicU64::new(0),
+            tenant: cfg.tenant,
         };
         // Eagerly dial one connection to fail fast on a bad address.
         client.dial_into_pool()?;
@@ -648,16 +674,26 @@ impl RpcClient {
 
     /// Pay for retry number `retry` (1-based): bounded by the policy,
     /// charged to the shared budget, and its backoff sleep must fit inside
-    /// the caller's deadline. Returns `false` — don't retry — otherwise
-    /// sleeps out the jittered backoff and counts the retry.
-    fn pay_for_retry(&self, retry: u32, deadline: Option<Deadline>) -> bool {
+    /// the caller's deadline. `min_pause` (a server retry-after hint)
+    /// floors the sleep — the jittered backoff may exceed it, never
+    /// undercut it. Returns `false` — don't retry — otherwise sleeps out
+    /// the pause and counts the retry.
+    fn pay_for_retry(
+        &self,
+        retry: u32,
+        deadline: Option<Deadline>,
+        min_pause: Option<Duration>,
+    ) -> bool {
         if retry > self.retry.max_retries || !self.budget.try_withdraw() {
             return false;
         }
-        let pause = {
+        let mut pause = {
             let mut rng = self.backoff_rng.lock().unwrap_or_else(PoisonError::into_inner);
             self.retry.backoff(retry, &mut rng)
         };
+        if let Some(hint) = min_pause {
+            pause = pause.max(hint);
+        }
         if deadline.is_some_and(|d| d.remaining() <= pause) {
             return false; // the remaining budget can't absorb the backoff
         }
@@ -825,6 +861,7 @@ impl RpcClient {
             row_len: row_len as u32,
             rows: rows.to_vec(),
             deadline_us: opts.deadline.map_or(0, |d| d.remaining_us()),
+            tenant: self.tenant,
         };
         let n_rows = req.n_rows() as usize;
         let mut buf = Vec::with_capacity(req.wire_size());
@@ -847,7 +884,7 @@ impl RpcClient {
                 Err(e) if e.kind() == io::ErrorKind::TimedOut => return Err(e),
                 Err(e) => {
                     self.breaker.record_failure();
-                    if retryable_error(&e) && self.pay_for_retry(attempt + 1, opts.deadline) {
+                    if retryable_error(&e) && self.pay_for_retry(attempt + 1, opts.deadline, None) {
                         attempt += 1;
                     } else {
                         return Err(e);
@@ -927,8 +964,9 @@ impl RpcClient {
 
     /// Bytes that `predict` would move over the wire for bookkeeping.
     pub fn wire_bytes(n_rows: usize, row_len: usize) -> u64 {
-        // Request header: len|req_id|n_rows|row_len|deadline_us = 24 bytes.
-        let req = 4 + 8 + 4 + 4 + 4 + (n_rows * row_len * 4) as u64;
+        // Request header: len|req_id|n_rows|row_len|deadline_us|tenant
+        // = 28 bytes.
+        let req = 4 + 8 + 4 + 4 + 4 + 4 + (n_rows * row_len * 4) as u64;
         let resp = 4 + 8 + 4 + (n_rows * 4) as u64;
         req + resp
     }
@@ -1141,11 +1179,159 @@ mod tests {
     }
 
     #[test]
+    fn admission_rejection_classifies_overloaded_and_spares_the_breaker() {
+        // A 1-row burst with a trickle refill: the first call drains the
+        // bucket, the second is refused at the door. The breaker is set
+        // to trip on ONE consecutive failure, so it staying closed proves
+        // explicit rejections never burn failure counts.
+        let metrics = Arc::new(ServeMetrics::new());
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(MeanBackend),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig {
+                admission: Some(crate::rpc::admission::AdmissionConfig {
+                    tenant_rate_rows_per_s: 0.001,
+                    tenant_burst_rows: 1.0,
+                    global_inflight_rows: 0,
+                }),
+                ..Default::default()
+            },
+            metrics.clone(),
+        )
+        .unwrap();
+        let client = RpcClient::connect_with(
+            server.addr,
+            ClientConfig {
+                retry: RetryPolicy::none(),
+                breaker: BreakerConfig {
+                    failure_threshold: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+        assert_eq!(client.predict(&[2.0, 4.0], 2).unwrap(), vec![3.0]);
+        let e = client.predict(&[2.0, 4.0], 2).unwrap_err();
+        assert!(fault::is_overloaded(&e), "unexpected error: {e}");
+        let hint = fault::retry_after(&e).expect("rejection carries a hint");
+        assert!(hint >= Duration::from_millis(1), "hint too small: {hint:?}");
+        assert_eq!(
+            client.breaker().state(),
+            fault::BreakerState::Closed,
+            "a rejection must not count toward breaker failures"
+        );
+        assert_eq!(metrics.rejected_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.rejected_rows.load(Ordering::Relaxed), 1);
+    }
+
+    /// Backend that parks each batch until the test releases it — pins
+    /// its admission permit so the global in-flight cap stays saturated.
+    struct GatedBackend {
+        release: Mutex<mpsc::Receiver<()>>,
+    }
+
+    impl Backend for GatedBackend {
+        fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+            let _ = self
+                .release
+                .lock()
+                .unwrap()
+                .recv_timeout(Duration::from_secs(10));
+            (0..n).map(|r| rows[r * row_len]).collect()
+        }
+        fn row_len(&self) -> usize {
+            0
+        }
+    }
+
+    #[test]
+    fn rejection_does_not_amplify_offered_load() {
+        // Retry-storm regression: saturate the global in-flight cap with
+        // one parked request, then offer K calls whose every attempt is
+        // refused. The retry budget (10 tokens, starts full) caps total
+        // server-seen attempts at K + 10 no matter how eager the retry
+        // policy is — offered load must not amplify under rejection.
+        const K: u64 = 6;
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(ServeMetrics::new());
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(GatedBackend {
+                release: Mutex::new(rx),
+            }),
+            Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+            BatcherConfig {
+                admission: Some(crate::rpc::admission::AdmissionConfig {
+                    global_inflight_rows: 1,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+            metrics.clone(),
+        )
+        .unwrap();
+        let admission = server.admission().expect("admission is on").clone();
+        let client = RpcClient::connect_with(
+            server.addr,
+            ClientConfig {
+                retry: RetryPolicy {
+                    max_retries: 3,
+                    base_backoff: Duration::from_millis(1),
+                    max_backoff: Duration::from_millis(4),
+                    jitter: 0.0,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+        // Park one admitted request in the backend; wait until it holds
+        // the whole cap before offering the storm.
+        let blocker = client.predict_async(&[7.0], 1).unwrap();
+        let t0 = Instant::now();
+        while admission.inflight_rows() < 1 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "blocker never admitted");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        let mut overloaded_errors = 0u64;
+        for _ in 0..K {
+            let e = client.predict(&[1.0], 1).unwrap_err();
+            assert!(fault::is_overloaded(&e), "unexpected error: {e}");
+            assert_eq!(fault::retry_after(&e), Some(Duration::from_millis(5)));
+            overloaded_errors += 1;
+        }
+        assert_eq!(overloaded_errors, K);
+
+        tx.send(()).unwrap();
+        assert_eq!(blocker.wait().unwrap(), vec![7.0]);
+
+        let attempts = admission.admitted_requests() + admission.rejected_requests();
+        assert!(
+            admission.rejected_requests() >= K,
+            "rejections must actually have occurred"
+        );
+        assert!(
+            attempts <= 1 + K + 10,
+            "offered load amplified: {attempts} server-seen attempts from {} calls",
+            1 + K
+        );
+        assert_eq!(
+            metrics.rejected_requests.load(Ordering::Relaxed),
+            admission.rejected_requests()
+        );
+    }
+
+    #[test]
     fn expired_deadline_refused_before_send() {
         let (server, _m) = start_server();
         let client = RpcClient::connect(server.addr).unwrap();
         let opts = PredictOptions {
             deadline: Some(Deadline::at(Instant::now() - Duration::from_millis(1))),
+            ..PredictOptions::default()
         };
         let e = client.predict_opts(&[1.0, 1.0], 2, &opts).unwrap_err();
         assert!(fault::is_deadline_exceeded(&e), "unexpected error: {e}");

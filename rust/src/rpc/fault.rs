@@ -22,9 +22,15 @@
 //!   request's latency budget on a backend that is known to be down.
 //!
 //! Failure classification helpers ([`is_deadline_exceeded`],
-//! [`is_breaker_open`]) let callers tell "the budget ran out" and "we never
-//! tried" apart from ordinary transport errors — the coordinator's
-//! degradation accounting depends on the distinction.
+//! [`is_breaker_open`], [`is_overloaded`]) let callers tell "the budget ran
+//! out", "we never tried", and "the server told us to back off" apart from
+//! ordinary transport errors — the coordinator's degradation accounting and
+//! the client's retry discipline depend on the distinction. In particular
+//! an [`Overloaded`] rejection (explicit admission-control refusal carrying
+//! a retry-after hint) must never count toward the breaker's consecutive
+//! failures and must never be retried faster than the hint — otherwise
+//! rejection turns into a retry storm aimed at a server that just said it
+//! is drowning.
 
 use crate::util::histogram::Histogram;
 use crate::util::rng::Rng;
@@ -88,12 +94,16 @@ impl Deadline {
 }
 
 /// Per-call options threaded through the serving entry points. `Default`
-/// keeps the pre-deadline behavior (no budget, never shed).
+/// keeps the pre-deadline behavior (no budget, never shed, full priority).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PredictOptions {
     /// Absolute deadline for the whole request; work still pending at the
     /// deadline is shed at whichever hop notices first.
     pub deadline: Option<Deadline>,
+    /// Low-priority traffic is the first to be browned out: under measured
+    /// pressure the coordinator answers it from the stage-1 prior
+    /// (`Served::Degraded`) instead of spending second-stage capacity.
+    pub low_priority: bool,
 }
 
 impl PredictOptions {
@@ -101,7 +111,14 @@ impl PredictOptions {
     pub fn with_budget(budget: Duration) -> PredictOptions {
         PredictOptions {
             deadline: Some(Deadline::after(budget)),
+            ..PredictOptions::default()
         }
+    }
+
+    /// Mark this call sheddable-first under brownout.
+    pub fn low_priority(mut self) -> PredictOptions {
+        self.low_priority = true;
+        self
     }
 }
 
@@ -132,6 +149,30 @@ impl std::fmt::Display for BreakerOpen {
 
 impl std::error::Error for BreakerOpen {}
 
+/// Marker payload for "the server explicitly rejected the request under
+/// overload" — admission-control quota breach, global in-flight cap, or a
+/// CoDel sojourn shed. Distinct from transport failures (the server is
+/// healthy and answered) and from deadline expiry (the budget is intact):
+/// the right reaction is to back off for `retry_after`, not to retry-storm
+/// and not to burn breaker failure counts.
+#[derive(Debug)]
+pub struct Overloaded {
+    /// Server-suggested pause before the next attempt.
+    pub retry_after: Duration,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "server overloaded: retry after {}ms",
+            self.retry_after.as_millis()
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
 /// An error carrying [`DeadlineExceeded`].
 pub fn deadline_error() -> io::Error {
     io::Error::new(io::ErrorKind::TimedOut, DeadlineExceeded)
@@ -150,6 +191,24 @@ pub fn is_deadline_exceeded(e: &io::Error) -> bool {
 /// True if `e` is a breaker fast-fail (the call was never attempted).
 pub fn is_breaker_open(e: &io::Error) -> bool {
     e.get_ref().is_some_and(|inner| inner.is::<BreakerOpen>())
+}
+
+/// An error carrying [`Overloaded`]. `WouldBlock` is the closest stdlib
+/// kind: the server is alive but refuses to take the work right now.
+pub fn overloaded_error(retry_after: Duration) -> io::Error {
+    io::Error::new(io::ErrorKind::WouldBlock, Overloaded { retry_after })
+}
+
+/// True if `e` is an explicit server-side rejection (admission or shed).
+pub fn is_overloaded(e: &io::Error) -> bool {
+    e.get_ref().is_some_and(|inner| inner.is::<Overloaded>())
+}
+
+/// The server's retry-after hint, if `e` is an [`Overloaded`] rejection.
+pub fn retry_after(e: &io::Error) -> Option<Duration> {
+    e.get_ref()
+        .and_then(|inner| inner.downcast_ref::<Overloaded>())
+        .map(|o| o.retry_after)
 }
 
 // ---------------------------------------------------------------------------
@@ -480,6 +539,30 @@ mod tests {
         let plain = io::Error::new(io::ErrorKind::TimedOut, "ordinary timeout");
         assert!(!is_deadline_exceeded(&plain));
         assert!(!is_breaker_open(&plain));
+    }
+
+    #[test]
+    fn overloaded_errors_classify_and_carry_the_hint() {
+        let o = overloaded_error(Duration::from_millis(40));
+        assert!(is_overloaded(&o));
+        assert_eq!(retry_after(&o), Some(Duration::from_millis(40)));
+        assert!(!is_deadline_exceeded(&o));
+        assert!(!is_breaker_open(&o));
+
+        // Other marker errors and plain I/O errors carry no hint.
+        assert!(!is_overloaded(&deadline_error()));
+        assert_eq!(retry_after(&breaker_error()), None);
+        let plain = io::Error::new(io::ErrorKind::WouldBlock, "plain wouldblock");
+        assert!(!is_overloaded(&plain));
+        assert_eq!(retry_after(&plain), None);
+    }
+
+    #[test]
+    fn low_priority_options_compose() {
+        let o = PredictOptions::with_budget(Duration::from_millis(5)).low_priority();
+        assert!(o.low_priority);
+        assert!(o.deadline.is_some());
+        assert!(!PredictOptions::default().low_priority);
     }
 
     #[test]

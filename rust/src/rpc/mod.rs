@@ -25,7 +25,14 @@
 //! and `netsim`'s chaos layer ([`ChaosPlan`]: scripted connection resets,
 //! stalls, partial/corrupt frames, server pause/resume) — see the crate
 //! docs §Failure model and `tests/chaos_battery.rs`.
+//!
+//! The overload model lives in `admission` (per-tenant token-bucket quotas,
+//! the global in-flight row cap, and the CoDel sojourn-shedding control
+//! law) — the server consults it at the admission edge of BOTH I/O paths
+//! and inside the batcher, and answers refusals with an explicit `REJECTED`
+//! frame carrying a retry-after hint (see the crate docs §Overload model).
 
+pub mod admission;
 pub mod client;
 pub mod fault;
 pub mod netsim;
@@ -34,6 +41,7 @@ pub mod proto;
 pub(crate) mod reactor;
 pub mod server;
 
+pub use admission::{AdmissionConfig, AdmissionControl, Codel, TenantStats};
 pub use client::{ClientConfig, FallbackSpan, PendingPredict, RpcClient, StreamOutcome};
 pub use fault::{
     BreakerConfig, BreakerState, CircuitBreaker, Deadline, PredictOptions, RetryPolicy,

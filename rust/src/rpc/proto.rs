@@ -2,12 +2,29 @@
 //!
 //! ```text
 //! request  := u32 payload_len | u64 req_id | u32 n_rows | u32 row_len
-//!             | u32 deadline_us | f32[n_rows*row_len]
+//!             | u32 deadline_us | u32 tenant | f32[n_rows*row_len]
 //! response := u32 payload_len | u64 req_id | u32 n_rows | f32[n_rows]
 //! chunk    := u32 payload_len | u64 req_id | u32 CHUNK | u32 row_start | u32 n_rows
 //!             | u32 status | f32[status == 0 ? n_rows : 0]
 //! end      := u32 payload_len | u64 req_id | u32 STREAM_END | u32 n_chunks
+//! rejected := u32 payload_len | u64 req_id | u32 REJECTED | u32 retry_after_ms
 //! ```
+//!
+//! `tenant` identifies the quota bucket the request is charged against at
+//! admission (0 = the default tenant). The field is the last header word, so
+//! a legacy 20-byte header (no tenant) still parses — the two layouts are
+//! disambiguated by the exact-length check (`n_rows`/`row_len` pin the
+//! payload size, so exactly one header width can match an honest frame) and
+//! a legacy frame is charged to tenant 0.
+//!
+//! A `rejected` frame is the server refusing to *queue* the request at all
+//! (admission control: a tenant over its token-bucket quota, the global
+//! in-flight cap, or CoDel sojourn shedding in the batcher — see
+//! `rpc::admission`). It is deliberately distinct from an `ERROR_SENTINEL`
+//! response: an error means "the server tried and failed" (never retried),
+//! a rejection means "back off and come back in `retry_after_ms`" — clients
+//! classify it via `fault::is_overloaded` and must not burn circuit-breaker
+//! failure counts on it.
 //!
 //! `row_len` is the padded feature width; probabilities come back one per
 //! row. A zero-row request is a ping (used for health checks / RTT probes).
@@ -39,9 +56,10 @@
 //! server-side (a poisoned shard) and carries no payload — the other chunks
 //! of the stream still deliver their rows, so a failure is contained to its
 //! sub-batch even mid-stream. The sentinels [`CHUNK_SENTINEL`] /
-//! [`STREAM_END_SENTINEL`] occupy `n_rows` values no real response can take
-//! (`MAX_FRAME` caps genuine row counts far below `u32::MAX - 2`), so a
-//! reader can dispatch on that one field; [`read_client_frame`] does.
+//! [`STREAM_END_SENTINEL`] / [`REJECTED_SENTINEL`] occupy `n_rows` values no
+//! real response can take (`MAX_FRAME` caps genuine row counts far below
+//! `u32::MAX - 3`), so a reader can dispatch on that one field;
+//! [`read_client_frame`] does.
 //! [`StreamAssembler`] reassembles a stream order-independently and
 //! bit-identically to the equivalent monolithic response.
 
@@ -60,23 +78,30 @@ pub const CHUNK_SENTINEL: u32 = u32::MAX - 1;
 /// `n_rows` value marking a frame as a stream terminator.
 pub const STREAM_END_SENTINEL: u32 = u32::MAX - 2;
 
+/// `n_rows` value marking a frame as an admission rejection (overload);
+/// the frame carries a retry-after hint instead of probabilities.
+pub const REJECTED_SENTINEL: u32 = u32::MAX - 3;
+
 /// Inference request. `deadline_us` is the remaining latency budget in
-/// microseconds at encode time (0 = no deadline — the default).
+/// microseconds at encode time (0 = no deadline — the default); `tenant`
+/// is the admission quota bucket (0 = default tenant).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
     pub req_id: u64,
     pub row_len: u32,
     pub deadline_us: u32,
+    pub tenant: u32,
     pub rows: Vec<f32>,
 }
 
 impl Request {
-    /// A request without a deadline.
+    /// A request without a deadline, charged to the default tenant.
     pub fn new(req_id: u64, row_len: u32, rows: Vec<f32>) -> Request {
         Request {
             req_id,
             row_len,
             deadline_us: 0,
+            tenant: 0,
             rows,
         }
     }
@@ -96,7 +121,7 @@ impl Request {
     }
 
     pub fn wire_size(&self) -> usize {
-        4 + 8 + 4 + 4 + 4 + self.rows.len() * 4
+        4 + 8 + 4 + 4 + 4 + 4 + self.rows.len() * 4
     }
 }
 
@@ -176,6 +201,9 @@ pub enum ClientFrame {
     Response(Response),
     Chunk(Chunk),
     StreamEnd { req_id: u64, n_chunks: u32 },
+    /// Admission rejection (overload): the request was never queued; come
+    /// back in `retry_after_ms`.
+    Rejected { req_id: u64, retry_after_ms: u32 },
 }
 
 impl ClientFrame {
@@ -184,11 +212,12 @@ impl ClientFrame {
             ClientFrame::Response(r) => r.req_id,
             ClientFrame::Chunk(c) => c.req_id,
             ClientFrame::StreamEnd { req_id, .. } => *req_id,
+            ClientFrame::Rejected { req_id, .. } => *req_id,
         }
     }
 
     /// True for the frame kinds that close a request (a monolithic/error
-    /// response or the stream terminator).
+    /// response, the stream terminator, or an admission rejection).
     pub fn is_terminal(&self) -> bool {
         !matches!(self, ClientFrame::Chunk(_))
     }
@@ -199,6 +228,7 @@ impl ClientFrame {
             ClientFrame::Response(r) => r.wire_size(),
             ClientFrame::Chunk(c) => c.wire_size(),
             ClientFrame::StreamEnd { .. } => 4 + 8 + 4 + 4,
+            ClientFrame::Rejected { .. } => 4 + 8 + 4 + 4,
         }) as u64
     }
 }
@@ -211,15 +241,16 @@ fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-/// Encode a request frame.
+/// Encode a request frame (always the tenant-bearing 24-byte header).
 pub fn encode_request(r: &Request, buf: &mut Vec<u8>) {
     buf.clear();
-    let payload = 8 + 4 + 4 + 4 + r.rows.len() * 4;
+    let payload = 8 + 4 + 4 + 4 + 4 + r.rows.len() * 4;
     put_u32(buf, payload as u32);
     put_u64(buf, r.req_id);
     put_u32(buf, r.n_rows());
     put_u32(buf, r.row_len);
     put_u32(buf, r.deadline_us);
+    put_u32(buf, r.tenant);
     for v in &r.rows {
         buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -267,6 +298,16 @@ pub fn encode_stream_end(req_id: u64, n_chunks: u32, buf: &mut Vec<u8>) {
     put_u64(buf, req_id);
     put_u32(buf, STREAM_END_SENTINEL);
     put_u32(buf, n_chunks);
+}
+
+/// Encode an admission-rejection frame (overload; never queued). A zero
+/// `retry_after_ms` is encoded as 1 so the hint is always a live backoff.
+pub fn encode_rejected(req_id: u64, retry_after_ms: u32, buf: &mut Vec<u8>) {
+    buf.clear();
+    put_u32(buf, 8 + 4 + 4);
+    put_u64(buf, req_id);
+    put_u32(buf, REJECTED_SENTINEL);
+    put_u32(buf, retry_after_ms.max(1));
 }
 
 fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<bool> {
@@ -336,19 +377,26 @@ fn parse_inbound_payload(payload: &[u8]) -> Inbound {
     let row_len = get_u32(payload, 12);
     let deadline_us = get_u32(payload, 16);
     // u64 math: a hostile n_rows × row_len (e.g. the u32::MAX sentinel)
-    // must not overflow the expected-size check.
-    let expected = 20u64 + n_rows as u64 * row_len as u64 * 4;
-    if expected != len as u64 {
+    // must not overflow the expected-size check. The row payload size is
+    // pinned by the header fields, so exactly one header width can match an
+    // honest frame: 24 bytes (tenant-bearing) or the legacy 20 (tenant 0).
+    let data = n_rows as u64 * row_len as u64 * 4;
+    let (tenant, body) = if 24u64 + data == len as u64 {
+        (get_u32(payload, 20), &payload[24..])
+    } else if 20u64 + data == len as u64 {
+        (0, &payload[20..])
+    } else {
         return Inbound::Malformed { req_id };
-    }
+    };
     let mut rows = Vec::with_capacity(n_rows as usize * row_len as usize);
-    for c in payload[20..].chunks_exact(4) {
+    for c in body.chunks_exact(4) {
         rows.push(f32::from_le_bytes(c.try_into().unwrap()));
     }
     Inbound::Req(Request {
         req_id,
         row_len,
         deadline_us,
+        tenant,
         rows,
     })
 }
@@ -506,6 +554,13 @@ pub fn read_client_frame(stream: &mut impl Read) -> std::io::Result<Option<Clien
             }
             let n_chunks = get_u32(&payload, 12);
             Ok(Some(ClientFrame::StreamEnd { req_id, n_chunks }))
+        }
+        REJECTED_SENTINEL => {
+            if len != 16 {
+                return Err(bad_data(format!("rejected frame length {len}")));
+            }
+            let retry_after_ms = get_u32(&payload, 12);
+            Ok(Some(ClientFrame::Rejected { req_id, retry_after_ms }))
         }
         CHUNK_SENTINEL => {
             if len < 24 {
@@ -687,6 +742,7 @@ mod tests {
             req_id: 42,
             row_len: 3,
             deadline_us: 0,
+            tenant: 0,
             rows: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
         };
         let mut buf = Vec::new();
@@ -704,6 +760,7 @@ mod tests {
             req_id: 4,
             row_len: 1,
             deadline_us: 7_500,
+            tenant: 0,
             rows: vec![1.0],
         };
         let mut buf = Vec::new();
@@ -756,6 +813,7 @@ mod tests {
             req_id: 1,
             row_len: 0,
             deadline_us: 0,
+            tenant: 0,
             rows: vec![],
         };
         let mut buf = Vec::new();
@@ -776,6 +834,7 @@ mod tests {
             req_id: 9,
             row_len: 2,
             deadline_us: 0,
+            tenant: 0,
             rows: vec![1.0, 2.0],
         };
         let mut buf = Vec::new();
@@ -879,6 +938,7 @@ mod tests {
                 row_len: row_len as u32,
                 rows,
                 deadline_us: g.rng.below(u32::MAX as u64 + 1) as u32,
+                tenant: g.rng.below(u32::MAX as u64 + 1) as u32,
             };
             let mut buf = Vec::new();
             encode_request(&req, &mut buf);
@@ -893,6 +953,79 @@ mod tests {
             crate::prop_assert!(lenient == Some(Inbound::Req(req.clone())));
             Ok(())
         });
+    }
+
+    #[test]
+    fn tenant_rides_the_wide_header() {
+        let r = Request {
+            req_id: 11,
+            row_len: 2,
+            deadline_us: 300,
+            tenant: 0xBEEF,
+            rows: vec![1.0, 2.0],
+        };
+        let mut buf = Vec::new();
+        encode_request(&r, &mut buf);
+        // 24-byte header + one row of two f32s, behind the length prefix.
+        assert_eq!(buf.len(), 4 + 24 + 8);
+        assert_eq!(buf.len(), r.wire_size());
+        let r2 = read_request(&mut Cursor::new(buf)).unwrap().unwrap();
+        assert_eq!(r2.tenant, 0xBEEF);
+        assert_eq!(r2, r);
+    }
+
+    #[test]
+    fn legacy_narrow_header_parses_as_default_tenant() {
+        // A pre-tenant frame: 20-byte header (no tenant word), one 2-wide
+        // row. Must still parse, charged to tenant 0.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&21u64.to_le_bytes()); // req_id
+        payload.extend_from_slice(&1u32.to_le_bytes()); // n_rows
+        payload.extend_from_slice(&2u32.to_le_bytes()); // row_len
+        payload.extend_from_slice(&500u32.to_le_bytes()); // deadline_us
+        payload.extend_from_slice(&3.0f32.to_le_bytes());
+        payload.extend_from_slice(&4.0f32.to_le_bytes());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        let r = read_request(&mut Cursor::new(buf)).unwrap().unwrap();
+        assert_eq!(r.req_id, 21);
+        assert_eq!(r.tenant, 0, "legacy frames bill to the default tenant");
+        assert_eq!(r.deadline_us, 500);
+        assert_eq!(r.rows, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn rejected_frame_roundtrip() {
+        let mut buf = Vec::new();
+        encode_rejected(33, 250, &mut buf);
+        let got = read_client_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(got, ClientFrame::Rejected { req_id: 33, retry_after_ms: 250 });
+        assert!(got.is_terminal(), "a rejection completes the request");
+        assert_eq!(got.wire_size() as usize, buf.len());
+        assert_eq!(got.req_id(), 33);
+
+        // A zero hint is clamped to 1ms so clients always pause.
+        encode_rejected(34, 0, &mut buf);
+        match read_client_frame(&mut Cursor::new(&buf)).unwrap().unwrap() {
+            ClientFrame::Rejected { retry_after_ms, .. } => assert_eq!(retry_after_ms, 1),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+
+        // Wrong payload length must error, not misparse.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&35u64.to_le_bytes());
+        payload.extend_from_slice(&REJECTED_SENTINEL.to_le_bytes());
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&1u32.to_le_bytes()); // one word too many
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bad.extend_from_slice(&payload);
+        assert!(read_client_frame(&mut Cursor::new(&bad)).is_err());
+
+        // The strict response reader refuses rejection frames.
+        encode_rejected(36, 5, &mut buf);
+        assert!(read_response(&mut Cursor::new(&buf)).is_err());
     }
 
     #[test]
@@ -1127,7 +1260,10 @@ mod tests {
         let mut tmp = Vec::new();
         encode_request(&Request::new(1, 2, vec![1.0, 2.0, 3.0, 4.0]), &mut tmp);
         wire.extend_from_slice(&tmp);
-        encode_request(&Request { req_id: 2, row_len: 0, deadline_us: 0, rows: vec![] }, &mut tmp);
+        encode_request(
+            &Request { req_id: 2, row_len: 0, deadline_us: 0, tenant: 0, rows: vec![] },
+            &mut tmp,
+        );
         wire.extend_from_slice(&tmp); // a ping mid-stream
         encode_request(&Request::new(3, 1, vec![9.0]), &mut tmp);
         wire.extend_from_slice(&tmp);
@@ -1214,6 +1350,7 @@ mod tests {
                         req_id: g.rng.below(u64::MAX),
                         row_len: row_len as u32,
                         deadline_us: g.rng.below(1_000_000) as u32,
+                        tenant: g.rng.below(u32::MAX as u64 + 1) as u32,
                         rows: g.vec_f32((n_rows * row_len)..(n_rows * row_len + 1), -1e3..1e3),
                     };
                     let mut tmp = Vec::new();

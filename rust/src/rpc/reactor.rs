@@ -677,6 +677,17 @@ fn admit(ctx: &Ctx, outbox: &Arc<Outbox>, req: Request) -> bool {
         proto::encode_response(&Response::ok(req.req_id, Vec::new()), &mut out);
         return ConnHandle(outbox.clone()).send_local(out).is_ok();
     }
+    // The door: over-quota or over-cap requests bounce right here with a
+    // `Rejected` frame — no queue slot, no batch seat (counters are bumped
+    // inside `admit_rows`).
+    let permit = match ctx.queue.admit_rows(req.tenant, n) {
+        Ok(p) => p,
+        Err(rej) => {
+            let mut out = Vec::new();
+            proto::encode_rejected(req.req_id, rej.retry_after_ms(), &mut out);
+            return ConnHandle(outbox.clone()).send_local(out).is_ok();
+        }
+    };
     {
         let mut jobs = ctx.queue.lock_jobs();
         if ctx.queue.shutdown.load(Ordering::Relaxed) {
@@ -691,6 +702,8 @@ fn admit(ctx: &Ctx, outbox: &Arc<Outbox>, req: Request) -> bool {
             out: RespOut::Reactor(ConnHandle(outbox.clone())),
             netsim: ctx.netsim.clone(),
             deadline,
+            enqueued_at: Instant::now(),
+            permit,
         });
     }
     ctx.queue.avail.notify_one();

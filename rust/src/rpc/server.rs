@@ -53,6 +53,7 @@
 //! killing the (pipelined, shared) connection — only an unrecoverable
 //! desync hangs it up.
 
+use super::admission::{AdmissionControl, Codel, InflightPermit, Rejection};
 use super::fault::Deadline;
 use super::netsim::{Fault, NetSim};
 use super::proto::{self, Inbound, Request, Response};
@@ -384,6 +385,18 @@ pub struct BatcherConfig {
     /// producer that finds it full blocks until the loop drains it
     /// (backpressure), bounded by the write timeout.
     pub write_queue_frames: usize,
+    /// Admission control at the door: per-tenant token-bucket quotas plus a
+    /// global in-flight row cap (see [`super::admission`]). `None` (the
+    /// default) admits everything — the pre-overload-model behavior.
+    pub admission: Option<super::admission::AdmissionConfig>,
+    /// CoDel sojourn target for the batcher queue: jobs whose measured
+    /// queue delay stays above this for a full `codel_interval` are shed
+    /// with `Rejected` frames even though their deadlines are intact.
+    /// `Duration::ZERO` (the default) disables sojourn shedding.
+    pub sojourn_slo: Duration,
+    /// CoDel interval: how long a sojourn excursion must persist before the
+    /// queue counts as standing (and the shed cadence's base period).
+    pub codel_interval: Duration,
 }
 
 impl Default for BatcherConfig {
@@ -400,6 +413,9 @@ impl Default for BatcherConfig {
             reactor: true,
             reactor_loops: 0,
             write_queue_frames: 1024,
+            admission: None,
+            sojourn_slo: Duration::ZERO,
+            codel_interval: Duration::from_millis(100),
         }
     }
 }
@@ -432,6 +448,13 @@ pub(crate) struct Job {
     /// Decoded from the request frame's `deadline_us` against this host's
     /// clock; the batcher sheds the job once it expires.
     pub(crate) deadline: Option<Deadline>,
+    /// When the job passed admission: the batcher measures queue sojourn
+    /// (CoDel shedding) against this.
+    pub(crate) enqueued_at: Instant,
+    /// Lease on the global in-flight row cap; released on drop, so every
+    /// exit path (respond, shed, reject, drain) returns the rows exactly
+    /// once. `None` when admission control is off.
+    pub(crate) permit: Option<InflightPermit>,
 }
 
 impl Job {
@@ -455,6 +478,28 @@ impl Job {
                 let mut buf = Vec::new();
                 proto::encode_response(&resp, &mut buf);
                 if handle.send(buf, paced).is_err() {
+                    metrics.dead_conn_jobs.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Refuse this job with an explicit `Rejected` frame (sojourn shed):
+    /// the client sees "back off for `retry_after_ms`", never an error.
+    /// Like error frames, rejections skip the simulated outbound hop —
+    /// refusals must be cheap to deliver.
+    #[cfg_attr(not(target_os = "linux"), allow(unused_variables))]
+    fn reject(&self, retry_after_ms: u32, metrics: &ServeMetrics) {
+        let mut buf = Vec::new();
+        proto::encode_rejected(self.req_id, retry_after_ms, &mut buf);
+        match &self.out {
+            RespOut::Threaded(out) => {
+                let mut stream = out.lock().unwrap_or_else(PoisonError::into_inner);
+                let _ = chaos_write(&mut stream, &buf, &self.netsim);
+            }
+            #[cfg(target_os = "linux")]
+            RespOut::Reactor(handle) => {
+                if handle.send(buf, false).is_err() {
                     metrics.dead_conn_jobs.fetch_add(1, Ordering::Relaxed);
                 }
             }
@@ -760,9 +805,35 @@ pub(crate) struct Queue {
     pub(crate) jobs: Mutex<VecDeque<Job>>,
     pub(crate) avail: Condvar,
     pub(crate) shutdown: AtomicBool,
+    /// The door (quotas + in-flight cap), shared by both acceptor paths;
+    /// `None` admits everything.
+    pub(crate) admission: Option<Arc<AdmissionControl>>,
+    /// Serving metrics, reachable from the admission sites (the threaded
+    /// `admit` and the reactor loops have no other metrics handle).
+    pub(crate) metrics: Arc<ServeMetrics>,
 }
 
 impl Queue {
+    /// Run one request through the door. `Ok(None)` = admission off.
+    /// On refusal the rejection counters are already bumped.
+    pub(crate) fn admit_rows(
+        &self,
+        tenant: u32,
+        n: usize,
+    ) -> Result<Option<InflightPermit>, Rejection> {
+        let Some(ac) = &self.admission else {
+            return Ok(None);
+        };
+        match ac.try_admit(tenant, n, Instant::now()) {
+            Ok(p) => Ok(Some(p)),
+            Err(rej) => {
+                self.metrics.rejected_rows.fetch_add(n as u64, Ordering::Relaxed);
+                self.metrics.rejected_requests.fetch_add(1, Ordering::Relaxed);
+                Err(rej)
+            }
+        }
+    }
+
     /// Jobs are self-contained (a poisoning panic cannot leave one half
     /// mutated), so a poisoned lock must not take the service down.
     pub(crate) fn lock_jobs(&self) -> MutexGuard<'_, VecDeque<Job>> {
@@ -778,6 +849,9 @@ pub struct RpcServer {
     worker_handles: Vec<std::thread::JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
     metrics: Arc<ServeMetrics>,
+    /// The admission door, when configured — exposed for accounting
+    /// reconciliation and the SLO controller's rate knob.
+    admission: Option<Arc<AdmissionControl>>,
     #[cfg(target_os = "linux")]
     reactor: Option<ReactorCore>,
     /// Reactor telemetry (loop gauges, wakeups, write-queue pressure);
@@ -797,10 +871,16 @@ impl RpcServer {
     ) -> std::io::Result<RpcServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
+        let admission = cfg
+            .admission
+            .clone()
+            .map(|c| Arc::new(AdmissionControl::new(c)));
         let queue = Arc::new(Queue {
             jobs: Mutex::new(VecDeque::new()),
             avail: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            admission: admission.clone(),
+            metrics: metrics.clone(),
         });
         let shutdown = Arc::new(AtomicBool::new(false));
 
@@ -847,6 +927,7 @@ impl RpcServer {
                 worker_handles,
                 shutdown,
                 metrics,
+                admission,
                 reactor: Some(core),
                 reactor_stats: Some(stats),
             });
@@ -882,11 +963,19 @@ impl RpcServer {
             worker_handles,
             shutdown,
             metrics,
+            admission,
             #[cfg(target_os = "linux")]
             reactor: None,
             #[cfg(target_os = "linux")]
             reactor_stats: None,
         })
+    }
+
+    /// The admission door, when configured (`BatcherConfig::admission`):
+    /// per-tenant accounting for reconciliation checks, plus the SLO
+    /// controller's live admission-rate knob.
+    pub fn admission(&self) -> Option<&Arc<AdmissionControl>> {
+        self.admission.as_ref()
     }
 }
 
@@ -974,13 +1063,26 @@ fn connection_loop(mut stream: TcpStream, queue: Arc<Queue>, netsim: Arc<NetSim>
 
 /// Admit one parsed request: pings answer immediately, a shutting-down
 /// server hangs the connection up (so pooled clients fail over to a fresh
-/// dial), everything else parks on the batcher queue.
+/// dial), over-quota requests bounce with a `Rejected` frame at the door,
+/// everything else parks on the batcher queue.
 fn admit(req: Request, queue: Arc<Queue>, out: SharedWriter, netsim: Arc<NetSim>) {
     let n = req.n_rows() as usize;
     if n == 0 {
         respond(&out, &netsim, req.req_id, Some(Vec::new()));
         return;
     }
+    let permit = match queue.admit_rows(req.tenant, n) {
+        Ok(p) => p,
+        Err(rej) => {
+            // Refusals skip the netsim hop, like error frames: telling a
+            // client to back off must be cheap.
+            let mut buf = Vec::new();
+            proto::encode_rejected(req.req_id, rej.retry_after_ms(), &mut buf);
+            let mut stream = out.lock().unwrap_or_else(PoisonError::into_inner);
+            let _ = chaos_write(&mut stream, &buf, &netsim);
+            return;
+        }
+    };
     {
         let mut jobs = queue.lock_jobs();
         if queue.shutdown.load(Ordering::Relaxed) {
@@ -1000,6 +1102,8 @@ fn admit(req: Request, queue: Arc<Queue>, out: SharedWriter, netsim: Arc<NetSim>
             out: RespOut::Threaded(out),
             netsim,
             deadline,
+            enqueued_at: Instant::now(),
+            permit,
         });
     }
     queue.avail.notify_one();
@@ -1011,6 +1115,11 @@ fn batcher_loop(
     cfg: BatcherConfig,
     metrics: Arc<ServeMetrics>,
 ) {
+    // Per-worker CoDel state: each worker observes the sojourns of the
+    // batches IT forms; under a standing queue every worker sees the same
+    // above-target delays, so shedding engages on all of them.
+    let mut codel = (cfg.sojourn_slo > Duration::ZERO)
+        .then(|| Codel::new(cfg.sojourn_slo, cfg.codel_interval));
     loop {
         // Collect a batch: block for the first job, then wait up to
         // max_wait for more (or until max_batch rows).
@@ -1079,6 +1188,32 @@ fn batcher_loop(
                 true
             }
         });
+
+        // CoDel sojourn shed: jobs whose measured queue delay says the SLO
+        // is already lost get an explicit `Rejected` frame (back off, don't
+        // retry) — shedding on *measured* delay catches overload the
+        // deadline check cannot see (intact budgets, standing queue).
+        if let Some(codel) = codel.as_mut() {
+            let now = Instant::now();
+            batch.retain(|job| {
+                let sojourn = now.saturating_duration_since(job.enqueued_at);
+                if codel.on_job(sojourn, now) {
+                    metrics
+                        .sojourn_shed_rows
+                        .fetch_add(job.n as u64, Ordering::Relaxed);
+                    metrics
+                        .sojourn_shed_requests
+                        .fetch_add(1, Ordering::Relaxed);
+                    job.reject(
+                        codel.retry_after().as_millis().clamp(1, u32::MAX as u128) as u32,
+                        &metrics,
+                    );
+                    false
+                } else {
+                    true
+                }
+            });
+        }
         if batch.is_empty() {
             continue;
         }

@@ -432,7 +432,14 @@ struct PoolShared {
     registry: RwLock<Vec<ModelEntry>>,
     shutdown: AtomicBool,
     stats: ShardStats,
-    min_task_rows: usize,
+    /// Task-granularity floor. Atomic so the SLO controller can retune
+    /// steal granularity on a live pool (larger = fewer, coarser tasks).
+    min_task_rows: AtomicUsize,
+    /// Shards eligible for NEW task placement and for stealing. Workers
+    /// past this index still drain their own rings (nothing strands on a
+    /// shrink) but receive no new work and steal none — they park, and the
+    /// pool's CPU footprint follows. Clamped to `1..=n_shards`.
+    active_shards: AtomicUsize,
     steal: bool,
     pin_threads: bool,
     /// Round-robin base for home-shard assignment across batches.
@@ -440,6 +447,18 @@ struct PoolShared {
 }
 
 impl PoolShared {
+    /// Shards currently eligible for new-task placement and stealing.
+    fn active(&self) -> usize {
+        self.active_shards
+            .load(Ordering::Relaxed)
+            .clamp(1, self.rings.len())
+    }
+
+    /// Live task-granularity floor.
+    fn min_rows(&self) -> usize {
+        self.min_task_rows.load(Ordering::Relaxed).max(1)
+    }
+
     /// Version currently serving `model` (the stamp new batches get).
     fn cur_version(&self, model: u32) -> u32 {
         self.registry.read().unwrap_or_else(PoisonError::into_inner)[model as usize].version
@@ -504,7 +523,10 @@ impl PoolShared {
                 .lock
                 .lock()
                 .unwrap_or_else(PoisonError::into_inner);
-            if self.steal {
+            // One wakeup only suffices if ANY woken worker can serve the
+            // task. A shrunk pool breaks that (a deactivated worker wakes,
+            // finds nothing it may take, re-parks), so wake everyone then.
+            if self.steal && self.active() == self.rings.len() {
                 self.parker.cv.notify_one();
             } else {
                 self.parker.cv.notify_all();
@@ -539,7 +561,8 @@ impl ShardPool {
             registry: RwLock::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             stats: ShardStats::new(n_shards),
-            min_task_rows: cfg.min_task_rows.max(1),
+            min_task_rows: AtomicUsize::new(cfg.min_task_rows.max(1)),
+            active_shards: AtomicUsize::new(n_shards),
             steal: cfg.steal,
             pin_threads: cfg.pin_threads,
             rr: AtomicUsize::new(0),
@@ -564,10 +587,36 @@ impl ShardPool {
         self.n_shards
     }
 
-    /// The task-granularity floor this pool was built with (sub-batch
-    /// splits and steal-splits never go below it).
+    /// The live task-granularity floor (sub-batch splits and steal-splits
+    /// never go below it).
     pub fn min_task_rows(&self) -> usize {
-        self.shared.min_task_rows
+        self.shared.min_rows()
+    }
+
+    /// Retune the task-granularity floor on a live pool (SLO-controller
+    /// knob): coarser tasks cut scheduling overhead when the pool is
+    /// keeping up, finer tasks spread a backlog faster. Clamped to ≥ 1;
+    /// takes effect for the next batch and the next steal-split.
+    pub fn set_min_task_rows(&self, rows: usize) {
+        self.shared
+            .min_task_rows
+            .store(rows.max(1), Ordering::Relaxed);
+    }
+
+    /// Shards currently eligible for new work (≤ [`ShardPool::n_shards`]).
+    pub fn active_shards(&self) -> usize {
+        self.shared.active()
+    }
+
+    /// Shrink or re-grow the pool's working set without tearing down
+    /// threads (SLO-controller knob): new batches place tasks on shards
+    /// `0..n` only, and workers past `n` stop stealing and park. Queued
+    /// work on deactivated rings still drains (the owner always serves its
+    /// own ring), so a shrink never strands or reorders submitted spans.
+    /// Clamped to `1..=n_shards`.
+    pub fn set_active_shards(&self, n: usize) {
+        let n = n.clamp(1, self.n_shards);
+        self.shared.active_shards.store(n, Ordering::Relaxed);
     }
 
     /// Per-shard occupancy / steal / queue-depth telemetry.
@@ -787,16 +836,18 @@ impl ShardPool {
         }
         let shared = &*self.shared;
         // Adaptive granularity from live occupancy (see module docs): a
-        // balanced (idle) pool gets at most one task per shard; an occupied
-        // pool gets up to STEAL_GRAIN× finer tasks so steals are cheap.
-        // Never fewer than min_task_rows rows per task.
+        // balanced (idle) pool gets at most one task per ACTIVE shard; an
+        // occupied pool gets up to STEAL_GRAIN× finer tasks so steals are
+        // cheap. Never fewer than min_task_rows rows per task. Both knobs
+        // are read once per batch so a live retune can't tear a batch.
+        let active = shared.active();
         let busy = shared.stats.busy_shards();
         let max_tasks = if busy == 0 {
-            self.n_shards
+            active
         } else {
-            self.n_shards * STEAL_GRAIN
+            active * STEAL_GRAIN
         };
-        let tasks = (n / shared.min_task_rows).clamp(1, max_tasks);
+        let tasks = (n / shared.min_rows()).clamp(1, max_tasks);
         let chunk = n.div_ceil(tasks);
         let n_tasks = n.div_ceil(chunk);
         let latch = BatchLatch::new(n, sink);
@@ -834,7 +885,7 @@ impl ShardPool {
                 deadline,
                 batch: &latch,
             };
-            self.submit_task(task, (base + ti) % self.n_shards);
+            self.submit_task(task, (base + ti) % active);
             start += len;
             ti += 1;
         }
@@ -842,14 +893,15 @@ impl ShardPool {
         latch.wait()
     }
 
-    /// Push one task: home ring first, then every other ring once, inline
-    /// as the last resort (backpressure — the request path must not
+    /// Push one task: home ring first, then every other ACTIVE ring once,
+    /// inline as the last resort (backpressure — the request path must not
     /// deadlock behind wedged rings).
     fn submit_task(&self, task: Task, home: usize) {
         let shared = &*self.shared;
+        let active = shared.active();
         let mut task = task;
-        for d in 0..self.n_shards {
-            match shared.rings[(home + d) % self.n_shards].push(task) {
+        for d in 0..active {
+            match shared.rings[(home + d) % active].push(task) {
                 Ok(()) => {
                     shared.wake_for_push();
                     return;
@@ -969,7 +1021,16 @@ fn run_task(task: Task, forest: Option<&FlatForest>, scratch: &mut ForestScratch
 }
 
 /// Scan the other shards' rings for a queued task, nearest neighbor first.
+/// Deactivated workers (id past the live `active_shards` mark) never
+/// steal — they drain their own ring and park, shedding CPU; active
+/// thieves still scan EVERY ring so a shrink's residual work migrates to
+/// the active set instead of waiting on a parked owner's 50ms backstop.
 fn steal(thief: usize, shared: &PoolShared) -> Option<Task> {
+    // Shutdown overrides the gate: the drain guarantee wants every worker
+    // scanning every ring regardless of how shrunk the pool was.
+    if thief >= shared.active() && !shared.shutdown.load(Ordering::Relaxed) {
+        return None;
+    }
     let n = shared.rings.len();
     for d in 1..n {
         let victim = (thief + d) % n;
@@ -987,7 +1048,7 @@ fn steal(thief: usize, shared: &PoolShared) -> Option<Task> {
 /// halving drains a hot shard's backlog in O(log) steals. Small tasks move
 /// whole; a refilled victim ring also moves the task whole.
 fn split_stolen(t: Task, victim: usize, shared: &PoolShared) -> Task {
-    if t.n < 2 * shared.min_task_rows {
+    if t.n < 2 * shared.min_rows() {
         return t;
     }
     let keep = t.n / 2;
@@ -1335,6 +1396,104 @@ mod tests {
             pool.stats().spans_completed() + pool.stats().inline_runs.load(Ordering::Relaxed),
             16
         );
+    }
+
+    #[test]
+    fn live_min_task_rows_retunes_granularity_without_wrong_bits() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let (rows, row_len) = flat_rows(&d, 256);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 4,
+            min_task_rows: 16,
+            ..Default::default()
+        });
+        let id = pool.register(flat.clone());
+
+        let mut scratch = ForestScratch::default();
+        let mut reference = vec![0f32; 256];
+        flat.predict_flat_rows(&rows, row_len, &mut scratch, &mut reference);
+
+        // Coarsen far past the batch size: the next batch is exactly ONE
+        // task, and no steal-split can refine it (256 < 2×floor).
+        pool.set_min_task_rows(100_000);
+        assert_eq!(pool.min_task_rows(), 100_000);
+        let before = pool.stats().spans_submitted.load(Ordering::Relaxed);
+        let mut coarse = vec![0f32; 256];
+        assert!(pool.predict_spans(id, &rows, row_len, &mut coarse).is_empty());
+        assert_eq!(
+            pool.stats().spans_submitted.load(Ordering::Relaxed) - before,
+            1,
+            "a coarsened pool must submit one span per batch"
+        );
+        for r in 0..256 {
+            assert_eq!(coarse[r].to_bits(), reference[r].to_bits(), "row {r}");
+        }
+
+        // Back to fine granularity: an idle 4-shard pool splits 256 rows
+        // into one task per shard again.
+        pool.set_min_task_rows(16);
+        let before = pool.stats().spans_submitted.load(Ordering::Relaxed);
+        let mut fine = vec![0f32; 256];
+        assert!(pool.predict_spans(id, &rows, row_len, &mut fine).is_empty());
+        assert!(
+            pool.stats().spans_submitted.load(Ordering::Relaxed) - before >= 4,
+            "a re-finened pool must fan a batch back out"
+        );
+        for r in 0..256 {
+            assert_eq!(fine[r].to_bits(), reference[r].to_bits(), "row {r}");
+        }
+
+        // The floor clamps at 1 — a zero from a confused controller must
+        // not produce zero-row tasks.
+        pool.set_min_task_rows(0);
+        assert_eq!(pool.min_task_rows(), 1);
+    }
+
+    #[test]
+    fn shrunk_pool_places_all_work_on_the_active_set() {
+        let (m, d) = trained();
+        let flat = FlatForest::from_model(&m);
+        let (rows, row_len) = flat_rows(&d, 256);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 4,
+            min_task_rows: 16,
+            ..Default::default()
+        });
+        let id = pool.register(flat.clone());
+
+        let mut scratch = ForestScratch::default();
+        let mut reference = vec![0f32; 256];
+        flat.predict_flat_rows(&rows, row_len, &mut scratch, &mut reference);
+
+        // Clamping: 0 means 1, anything past n_shards means n_shards.
+        pool.set_active_shards(0);
+        assert_eq!(pool.active_shards(), 1);
+        pool.set_active_shards(99);
+        assert_eq!(pool.active_shards(), 4);
+
+        pool.set_active_shards(1);
+        for round in 0..4 {
+            let mut out = vec![0f32; 256];
+            let failed = pool.predict_spans(id, &rows, row_len, &mut out);
+            assert!(failed.is_empty(), "round {round}");
+            for r in 0..256 {
+                assert_eq!(out[r].to_bits(), reference[r].to_bits(), "round {round} row {r}");
+            }
+        }
+        // Every executed task landed on shard 0 (or ran inline under
+        // backpressure) — the deactivated workers got nothing.
+        for s in 1..4 {
+            assert_eq!(pool.stats().tasks_on(s), 0, "deactivated shard {s} ran work");
+        }
+
+        // Re-grown, the pool serves correctly at full width again.
+        pool.set_active_shards(4);
+        let mut out = vec![0f32; 256];
+        assert!(pool.predict_spans(id, &rows, row_len, &mut out).is_empty());
+        for r in 0..256 {
+            assert_eq!(out[r].to_bits(), reference[r].to_bits(), "row {r}");
+        }
     }
 
     #[test]

@@ -1,0 +1,778 @@
+//! SLO control plane: a seeded trace-driven load harness plus an
+//! InferLine-style controller over the serving stack's live knobs.
+//!
+//! Three pieces, each independently testable:
+//!
+//! * **Trace generator** ([`generate_trace`]) — a deterministic open-loop
+//!   arrival schedule: non-homogeneous Poisson arrivals (thinning against
+//!   the peak rate) under a diurnal ramp, with correlated burst windows
+//!   and a hot-tenant skew. Same [`TraceConfig`] + seed, same trace,
+//!   bit-for-bit — load experiments replay exactly.
+//! * **Controller** ([`SloController`]) — a pure decision function
+//!   (`Obs → Decision`, no I/O, no clocks) that walks the overload ladder
+//!   to hold an admitted-p99 target at minimum CPU. Escalation order
+//!   under pressure: grow the shard pool's active set (and split tasks
+//!   finer so steals spread the surge), then brown out low-priority →
+//!   all traffic, then throttle admission multiplicatively. De-escalation
+//!   relaxes the same rungs in reverse — admission first, capacity last —
+//!   and *shrinks* the pool when it is comfortably idle, so a quiet
+//!   stack pays for the cores it needs, not the cores it has.
+//! * **Runner** ([`run_trace`]) — drives per-tenant [`Coordinator`]s
+//!   against a live server per the trace, applies each controller tick's
+//!   [`Decision`] to the real knobs ([`AdmissionControl::set_rate_factor`],
+//!   [`Coordinator::set_brownout`](Coordinator::set_brownout),
+//!   [`ShardPool::set_active_shards`], [`ShardPool::set_min_task_rows`]),
+//!   and records a [`SloReport`] trajectory — per tick: offered/served/
+//!   degraded/rejected counts, measured p50/p99, CPU cores burned, and
+//!   every knob setting. `BENCH_slo.json` is this report serialized.
+
+use crate::coordinator::{Coordinator, Served, BROWNOUT_ALL};
+use crate::rpc::admission::AdmissionControl;
+use crate::rpc::fault::{self, Deadline, PredictOptions};
+use crate::runtime::ShardPool;
+use crate::telemetry::{process_cpu_ns, ServeMetrics};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Trace generation
+
+/// Shape of a synthetic load trace. Rates are requests/second.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub duration: Duration,
+    /// Arrival rate at the diurnal trough.
+    pub base_rps: f64,
+    /// Arrival rate at the diurnal peak (≥ `base_rps`).
+    pub peak_rps: f64,
+    /// Full diurnal cycles over the trace (1.0 = one trough→peak→trough).
+    pub diurnal_periods: f64,
+    /// Correlated-burst cadence (`ZERO` disables bursts).
+    pub burst_every: Duration,
+    /// Burst window length (clipped to the cadence).
+    pub burst_len: Duration,
+    /// Rate multiplier inside a burst window (≥ 1).
+    pub burst_mult: f64,
+    /// Tenant id space: arrivals carry `0..n_tenants`.
+    pub n_tenants: u32,
+    /// Tenant receiving `hot_share` of the traffic (`None` = uniform).
+    pub hot_tenant: Option<u32>,
+    /// Fraction of arrivals billed to the hot tenant (0..1).
+    pub hot_share: f64,
+    /// Per-request row counts, uniform in `rows_min..=rows_max`.
+    pub rows_min: usize,
+    pub rows_max: usize,
+    /// Fraction of requests marked low-priority (brownout's first rung).
+    pub low_priority_share: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            duration: Duration::from_secs(10),
+            base_rps: 50.0,
+            peak_rps: 200.0,
+            diurnal_periods: 1.0,
+            burst_every: Duration::from_secs(3),
+            burst_len: Duration::from_millis(400),
+            burst_mult: 3.0,
+            n_tenants: 4,
+            hot_tenant: Some(0),
+            hot_share: 0.5,
+            rows_min: 1,
+            rows_max: 8,
+            low_priority_share: 0.3,
+            seed: 1,
+        }
+    }
+}
+
+/// One scheduled request of an open-loop trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    /// Offset from trace start.
+    pub at: Duration,
+    pub tenant: u32,
+    pub n_rows: usize,
+    pub low_priority: bool,
+}
+
+impl TraceConfig {
+    /// Instantaneous arrival rate at offset `t` seconds: diurnal ramp
+    /// (raised-cosine between base and peak) times the burst multiplier
+    /// when `t` falls inside a burst window.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let dur = self.duration.as_secs_f64().max(f64::MIN_POSITIVE);
+        let phase = (2.0 * std::f64::consts::PI * self.diurnal_periods * t / dur).cos();
+        let ramp = 0.5 * (1.0 - phase); // 0 at the trough, 1 at the peak
+        let mut lam = self.base_rps + (self.peak_rps - self.base_rps).max(0.0) * ramp;
+        if self.in_burst(t) {
+            lam *= self.burst_mult.max(1.0);
+        }
+        lam
+    }
+
+    /// Is offset `t` seconds inside a correlated-burst window?
+    pub fn in_burst(&self, t: f64) -> bool {
+        let every = self.burst_every.as_secs_f64();
+        every > 0.0 && t.rem_euclid(every) < self.burst_len.as_secs_f64()
+    }
+
+    /// The thinning envelope: the largest rate `rate_at` can return.
+    fn rate_max(&self) -> f64 {
+        let peak = self.peak_rps.max(self.base_rps);
+        if self.burst_every > Duration::ZERO {
+            peak * self.burst_mult.max(1.0)
+        } else {
+            peak
+        }
+    }
+}
+
+/// Generate the deterministic arrival schedule for `cfg` — Poisson
+/// thinning against the peak rate, so inter-arrival statistics are exact
+/// for the non-homogeneous rate without any discretization grid. Arrivals
+/// are strictly ordered by `at`.
+pub fn generate_trace(cfg: &TraceConfig) -> Vec<Arrival> {
+    assert!(cfg.rows_min >= 1 && cfg.rows_max >= cfg.rows_min, "bad rows range");
+    let lambda_max = cfg.rate_max();
+    assert!(lambda_max > 0.0, "trace needs a positive rate");
+    let mut rng = Rng::new(cfg.seed ^ 0x510c_ace5_0f_7ace);
+    let dur = cfg.duration.as_secs_f64();
+    let mut t = 0.0f64;
+    let mut out = Vec::new();
+    loop {
+        t += rng.exponential(lambda_max);
+        if t >= dur {
+            break;
+        }
+        // Thinning: keep this candidate with probability λ(t)/λ_max.
+        if rng.f64() * lambda_max > cfg.rate_at(t) {
+            continue;
+        }
+        let tenant = match cfg.hot_tenant {
+            Some(hot) if cfg.n_tenants > 0 && rng.bool(cfg.hot_share.clamp(0.0, 1.0)) => {
+                hot % cfg.n_tenants.max(1)
+            }
+            _ if cfg.n_tenants > 0 => rng.below(cfg.n_tenants as u64) as u32,
+            _ => 0,
+        };
+        out.push(Arrival {
+            at: Duration::from_secs_f64(t),
+            tenant,
+            n_rows: cfg.rows_min + rng.index(cfg.rows_max - cfg.rows_min + 1),
+            low_priority: rng.bool(cfg.low_priority_share.clamp(0.0, 1.0)),
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Controller
+
+/// Controller tuning.
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// The admitted-request p99 the controller holds.
+    pub p99_target: Duration,
+    /// De-escalate only when measured p99 < `relax_below` × target — the
+    /// hysteresis band that keeps the knobs from oscillating on noise.
+    pub relax_below: f64,
+    /// The pool's physical shard count (the active-set ceiling).
+    pub max_shards: usize,
+    /// Task-granularity floor under pressure (fine → steals spread load).
+    pub fine_task_rows: usize,
+    /// Task-granularity floor when calm (coarse → less scheduling spend).
+    pub coarse_task_rows: usize,
+    /// Admission-throttle floor (never starve a tenant to zero).
+    pub min_rate_factor: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            p99_target: Duration::from_millis(50),
+            relax_below: 0.5,
+            max_shards: crate::util::threadpool::default_threads(),
+            fine_task_rows: 16,
+            coarse_task_rows: 64,
+            min_rate_factor: 0.05,
+        }
+    }
+}
+
+/// One controller tick's view of the stack (assembled by the runner; any
+/// monitoring pipeline could produce it).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Obs {
+    /// Measured p99 of ADMITTED requests in the window (served or
+    /// degraded — rejected requests are excluded: they completed fast by
+    /// refusing, and must not flatter the latency signal).
+    pub p99: Duration,
+    /// Rows shed by the batcher's CoDel in the window.
+    pub sojourn_shed: u64,
+    /// Requests explicitly rejected at admission in the window.
+    pub rejected: u64,
+    /// Tasks queued across the pool's rings at tick time.
+    pub queue_depth: usize,
+    /// Shards executing a task at tick time.
+    pub busy_shards: usize,
+}
+
+/// Knob settings the controller wants applied.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    /// Admission refill-rate multiplier, `min_rate_factor..=1.0`.
+    pub rate_factor: f64,
+    /// Brownout rung: 0 (off), `BROWNOUT_LOW_PRIORITY`, [`BROWNOUT_ALL`].
+    pub brownout: u8,
+    /// Shard-pool active set, `1..=max_shards`.
+    pub active_shards: usize,
+    /// Shard-pool task-granularity floor.
+    pub min_task_rows: usize,
+}
+
+/// The overload-ladder controller: AIMD on the admitted p99. Pure state
+/// machine — [`SloController::plan`] never reads a clock or touches I/O,
+/// so every trajectory is unit-testable.
+pub struct SloController {
+    cfg: ControllerConfig,
+    cur: Decision,
+}
+
+impl SloController {
+    pub fn new(cfg: ControllerConfig) -> SloController {
+        assert!(cfg.p99_target > Duration::ZERO, "p99 target must be positive");
+        assert!(cfg.max_shards >= 1);
+        let cur = Decision {
+            rate_factor: 1.0,
+            brownout: 0,
+            active_shards: cfg.max_shards,
+            min_task_rows: cfg.coarse_task_rows.max(1),
+        };
+        SloController { cfg, cur }
+    }
+
+    /// The current (last-planned) knob settings.
+    pub fn current(&self) -> Decision {
+        self.cur
+    }
+
+    /// One control tick: escalate one rung when the SLO is breached (or
+    /// the batcher is shedding standing queues), de-escalate one rung when
+    /// comfortably under target. One rung per tick in both directions —
+    /// multiplicative throttle down, additive recovery up.
+    pub fn plan(&mut self, obs: &Obs) -> Decision {
+        let pressure = obs.p99.as_secs_f64() / self.cfg.p99_target.as_secs_f64();
+        let breached = pressure > 1.0 || obs.sojourn_shed > 0;
+        if breached {
+            if self.cur.active_shards < self.cfg.max_shards {
+                // Rung 1: more capacity, finer tasks so steals spread it.
+                self.cur.active_shards =
+                    (self.cur.active_shards * 2).min(self.cfg.max_shards);
+                self.cur.min_task_rows = self.cfg.fine_task_rows.max(1);
+            } else if self.cur.min_task_rows > self.cfg.fine_task_rows {
+                self.cur.min_task_rows = self.cfg.fine_task_rows.max(1);
+            } else if self.cur.brownout < BROWNOUT_ALL {
+                // Rung 2: degrade before dropping.
+                self.cur.brownout += 1;
+            } else {
+                // Rung 3: throttle admission (multiplicative decrease).
+                self.cur.rate_factor =
+                    (self.cur.rate_factor * 0.7).max(self.cfg.min_rate_factor);
+            }
+        } else if pressure < self.cfg.relax_below {
+            if self.cur.rate_factor < 1.0 {
+                // Recover admission first (additive increase).
+                self.cur.rate_factor = (self.cur.rate_factor + 0.1).min(1.0);
+            } else if self.cur.brownout > 0 {
+                self.cur.brownout -= 1;
+            } else if self.cur.active_shards > 1
+                && obs.queue_depth == 0
+                && obs.rejected == 0
+                && obs.busy_shards * 2 < self.cur.active_shards
+            {
+                // Fully recovered AND mostly idle: shed cores — the
+                // minimum-CPU half of the objective.
+                self.cur.active_shards -= 1;
+                self.cur.min_task_rows = self.cfg.coarse_task_rows.max(1);
+            }
+        }
+        self.cur
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runner
+
+/// Open-loop runner tuning.
+#[derive(Clone, Debug)]
+pub struct HarnessConfig {
+    /// Controller cadence (also the trajectory sampling period).
+    pub tick: Duration,
+    /// Sender threads dispatching arrivals (open-loop up to this
+    /// parallelism; a saturated sender pool shows up as offered-load lag,
+    /// which is itself an overload signal).
+    pub senders: usize,
+    /// Per-request deadline budget (`None` = unbounded).
+    pub deadline: Option<Duration>,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        HarnessConfig {
+            tick: Duration::from_millis(200),
+            senders: 8,
+            deadline: Some(Duration::from_millis(500)),
+        }
+    }
+}
+
+/// One trajectory sample: counts are for the tick's window, knobs are the
+/// settings applied at the END of the tick.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Tick {
+    pub at_ms: u64,
+    pub offered: u64,
+    pub served: u64,
+    pub degraded: u64,
+    pub rejected: u64,
+    pub deadline_shed: u64,
+    pub errors: u64,
+    /// Admitted-request latency quantiles in the window (µs; 0 if none).
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// Process CPU burned this window, in cores (cpu-seconds per second).
+    pub cpu_cores: f64,
+    pub rate_factor: f64,
+    pub brownout: u8,
+    pub active_shards: usize,
+    pub min_task_rows: usize,
+}
+
+/// A finished run's trajectory plus totals.
+#[derive(Clone, Debug, Default)]
+pub struct SloReport {
+    pub ticks: Vec<Tick>,
+    pub offered: u64,
+    pub served: u64,
+    pub degraded: u64,
+    pub rejected: u64,
+    pub deadline_shed: u64,
+    pub errors: u64,
+    /// p99 over every admitted request of the whole run (µs).
+    pub overall_p99_us: u64,
+}
+
+impl SloReport {
+    /// Conservation: every offered request is accounted exactly once.
+    pub fn accounted(&self) -> u64 {
+        self.served + self.degraded + self.rejected + self.deadline_shed + self.errors
+    }
+
+    /// Serialize the trajectory (the `BENCH_slo.json` payload).
+    pub fn to_json(&self, title: &str) -> Json {
+        let mut j = Json::obj();
+        j.set("title", Json::Str(title.into()));
+        j.set("offered", Json::Num(self.offered as f64));
+        j.set("served", Json::Num(self.served as f64));
+        j.set("degraded", Json::Num(self.degraded as f64));
+        j.set("rejected", Json::Num(self.rejected as f64));
+        j.set("deadline_shed", Json::Num(self.deadline_shed as f64));
+        j.set("errors", Json::Num(self.errors as f64));
+        j.set("overall_p99_us", Json::Num(self.overall_p99_us as f64));
+        let ticks = self
+            .ticks
+            .iter()
+            .map(|t| {
+                let mut o = Json::obj();
+                o.set("at_ms", Json::Num(t.at_ms as f64));
+                o.set("offered", Json::Num(t.offered as f64));
+                o.set("served", Json::Num(t.served as f64));
+                o.set("degraded", Json::Num(t.degraded as f64));
+                o.set("rejected", Json::Num(t.rejected as f64));
+                o.set("deadline_shed", Json::Num(t.deadline_shed as f64));
+                o.set("errors", Json::Num(t.errors as f64));
+                o.set("p50_us", Json::Num(t.p50_us as f64));
+                o.set("p99_us", Json::Num(t.p99_us as f64));
+                o.set("cpu_cores", Json::Num(t.cpu_cores));
+                o.set("rate_factor", Json::Num(t.rate_factor));
+                o.set("brownout", Json::Num(t.brownout as f64));
+                o.set("active_shards", Json::Num(t.active_shards as f64));
+                o.set("min_task_rows", Json::Num(t.min_task_rows as f64));
+                o
+            })
+            .collect();
+        j.set("trajectory", Json::Arr(ticks));
+        j
+    }
+}
+
+/// Window accumulator shared by the sender pool and the controller loop.
+#[derive(Default)]
+struct Window {
+    lat_us: Vec<u64>,
+    offered: u64,
+    served: u64,
+    degraded: u64,
+    rejected: u64,
+    deadline_shed: u64,
+    errors: u64,
+}
+
+/// The live knobs [`run_trace`] steers. Any handle may be absent (e.g. a
+/// PJRT backend has no shard pool; a server without admission control has
+/// no throttle) — the controller's decisions for missing knobs are still
+/// recorded in the trajectory, just not applied.
+pub struct Knobs<'a> {
+    pub admission: Option<&'a Arc<AdmissionControl>>,
+    pub pool: Option<&'a Arc<ShardPool>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn quantile_us(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Drive `trace` against per-tenant coordinators (arrival tenant `t` maps
+/// to `coords[t % coords.len()]`), ticking `controller` every
+/// `cfg.tick` and applying its decisions to `knobs` + every coordinator's
+/// brownout rung. `rows` supplies request payloads (cycled by arrival
+/// index). Returns the full trajectory.
+pub fn run_trace(
+    coords: &[Arc<Coordinator>],
+    knobs: &Knobs<'_>,
+    metrics: &ServeMetrics,
+    trace: &[Arrival],
+    rows: &[Vec<f32>],
+    controller: &mut SloController,
+    cfg: &HarnessConfig,
+) -> SloReport {
+    assert!(!coords.is_empty(), "need at least one coordinator");
+    assert!(!rows.is_empty(), "need request payload rows");
+    let window = Mutex::new(Window::default());
+    let all_lat = Mutex::new(Vec::<u64>::new());
+    let cursor = AtomicUsize::new(0);
+    let live_senders = AtomicUsize::new(cfg.senders.max(1));
+    let start = Instant::now();
+
+    let mut report = SloReport::default();
+    std::thread::scope(|s| {
+        for _ in 0..cfg.senders.max(1) {
+            s.spawn(|| {
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    let Some(a) = trace.get(i) else { break };
+                    let target = start + a.at;
+                    let now = Instant::now();
+                    if now < target {
+                        std::thread::sleep(target - now);
+                    }
+                    let coord = &coords[a.tenant as usize % coords.len()];
+                    let k = a.n_rows.clamp(1, rows.len());
+                    let base = i % (rows.len() - k + 1);
+                    let mut opts = PredictOptions {
+                        deadline: cfg.deadline.map(Deadline::after),
+                        ..PredictOptions::default()
+                    };
+                    if a.low_priority {
+                        opts = opts.low_priority();
+                    }
+                    let t0 = Instant::now();
+                    let res = coord.predict_batch_opts(&rows[base..base + k], &opts);
+                    let lat = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+                    let mut w = lock(&window);
+                    w.offered += 1;
+                    match res {
+                        Ok(out) => {
+                            if out.iter().any(|(_, s)| *s == Served::Degraded) {
+                                w.degraded += 1;
+                            } else {
+                                w.served += 1;
+                            }
+                            w.lat_us.push(lat);
+                        }
+                        Err(e) if fault::is_overloaded(&e) => w.rejected += 1,
+                        Err(e) if fault::is_deadline_exceeded(&e) => w.deadline_shed += 1,
+                        Err(_) => w.errors += 1,
+                    }
+                }
+                live_senders.fetch_sub(1, Ordering::Release);
+            });
+        }
+
+        // Controller loop on this thread: tick until every sender drained.
+        let mut cpu_prev = process_cpu_ns();
+        let mut shed_prev = metrics.sojourn_shed_rows.load(Ordering::Relaxed);
+        let mut rej_prev = metrics.rejected_requests.load(Ordering::Relaxed);
+        loop {
+            let done = live_senders.load(Ordering::Acquire) == 0;
+            std::thread::sleep(cfg.tick);
+            let mut w = {
+                let mut g = lock(&window);
+                std::mem::take(&mut *g)
+            };
+            w.lat_us.sort_unstable();
+            let shed_now = metrics.sojourn_shed_rows.load(Ordering::Relaxed);
+            // Server-side rejections count too: a coordinator under
+            // `Stage1Prior` absorbs refusals into degraded answers, so the
+            // caller-observed bucket alone under-reports door pressure.
+            let rej_now = metrics.rejected_requests.load(Ordering::Relaxed);
+            let obs = Obs {
+                p99: Duration::from_micros(quantile_us(&w.lat_us, 0.99)),
+                sojourn_shed: shed_now - shed_prev,
+                rejected: w.rejected + (rej_now - rej_prev),
+                queue_depth: knobs.pool.map_or(0, |p| p.queue_depth()),
+                busy_shards: knobs.pool.map_or(0, |p| p.stats().busy_shards()),
+            };
+            shed_prev = shed_now;
+            rej_prev = rej_now;
+            let d = controller.plan(&obs);
+            if let Some(ac) = knobs.admission {
+                ac.set_rate_factor(d.rate_factor);
+            }
+            for c in coords {
+                c.set_brownout(d.brownout);
+            }
+            if let Some(pool) = knobs.pool {
+                pool.set_active_shards(d.active_shards);
+                pool.set_min_task_rows(d.min_task_rows);
+            }
+            let cpu_now = process_cpu_ns();
+            let tick = Tick {
+                at_ms: start.elapsed().as_millis().min(u64::MAX as u128) as u64,
+                offered: w.offered,
+                served: w.served,
+                degraded: w.degraded,
+                rejected: w.rejected,
+                deadline_shed: w.deadline_shed,
+                errors: w.errors,
+                p50_us: quantile_us(&w.lat_us, 0.50),
+                p99_us: quantile_us(&w.lat_us, 0.99),
+                cpu_cores: (cpu_now.saturating_sub(cpu_prev)) as f64
+                    / cfg.tick.as_nanos().max(1) as f64,
+                rate_factor: d.rate_factor,
+                brownout: d.brownout,
+                active_shards: d.active_shards,
+                min_task_rows: d.min_task_rows,
+            };
+            cpu_prev = cpu_now;
+            report.offered += tick.offered;
+            report.served += tick.served;
+            report.degraded += tick.degraded;
+            report.rejected += tick.rejected;
+            report.deadline_shed += tick.deadline_shed;
+            report.errors += tick.errors;
+            lock(&all_lat).extend_from_slice(&w.lat_us);
+            report.ticks.push(tick);
+            if done {
+                break;
+            }
+        }
+    });
+
+    let mut lat = std::mem::take(&mut *lock(&all_lat));
+    lat.sort_unstable();
+    report.overall_p99_us = quantile_us(&lat, 0.99);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> TraceConfig {
+        TraceConfig {
+            duration: Duration::from_secs(4),
+            base_rps: 40.0,
+            peak_rps: 160.0,
+            burst_every: Duration::from_secs(1),
+            burst_len: Duration::from_millis(200),
+            burst_mult: 3.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let cfg = quick_cfg();
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a, b, "same seed must replay bit-for-bit");
+        assert!(!a.is_empty());
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at, "arrivals must be time-ordered");
+        }
+        assert!(a.iter().all(|x| x.at < cfg.duration));
+        assert!(a
+            .iter()
+            .all(|x| (cfg.rows_min..=cfg.rows_max).contains(&x.n_rows)));
+        let c = generate_trace(&TraceConfig { seed: 2, ..cfg });
+        assert_ne!(a, c, "a different seed must give a different trace");
+    }
+
+    #[test]
+    fn trace_bursts_and_hot_tenant_shape_the_load() {
+        let cfg = TraceConfig {
+            duration: Duration::from_secs(20),
+            base_rps: 100.0,
+            peak_rps: 100.0, // flat ramp isolates the burst signal
+            burst_every: Duration::from_secs(2),
+            burst_len: Duration::from_millis(500),
+            burst_mult: 4.0,
+            n_tenants: 4,
+            hot_tenant: Some(2),
+            hot_share: 0.6,
+            ..Default::default()
+        };
+        let trace = generate_trace(&cfg);
+        // Burst windows cover 25% of the time but at 4× rate: they should
+        // hold a clear majority of arrivals (4/(4·0.25+0.75) ≈ 57%).
+        let in_burst = trace.iter().filter(|a| cfg.in_burst(a.at.as_secs_f64())).count();
+        assert!(
+            in_burst * 2 > trace.len(),
+            "bursts must dominate: {in_burst}/{}",
+            trace.len()
+        );
+        // Hot tenant takes ~60% + its uniform share; everyone else gets
+        // traffic too.
+        let hot = trace.iter().filter(|a| a.tenant == 2).count();
+        assert!(
+            hot as f64 > 0.5 * trace.len() as f64,
+            "hot-tenant skew missing: {hot}/{}",
+            trace.len()
+        );
+        for t in [0u32, 1, 3] {
+            assert!(
+                trace.iter().any(|a| a.tenant == t),
+                "tenant {t} got no traffic"
+            );
+        }
+        // Diurnal ramp: with a real ramp, the middle half out-rates the
+        // edges.
+        let ramped = generate_trace(&TraceConfig {
+            duration: Duration::from_secs(20),
+            base_rps: 20.0,
+            peak_rps: 200.0,
+            burst_every: Duration::ZERO,
+            ..Default::default()
+        });
+        let mid = ramped
+            .iter()
+            .filter(|a| (5.0..15.0).contains(&a.at.as_secs_f64()))
+            .count();
+        assert!(
+            mid * 2 > ramped.len(),
+            "diurnal peak must concentrate arrivals: {mid}/{}",
+            ramped.len()
+        );
+    }
+
+    #[test]
+    fn controller_walks_the_ladder_up_and_down() {
+        let cfg = ControllerConfig {
+            p99_target: Duration::from_millis(10),
+            relax_below: 0.5,
+            max_shards: 4,
+            fine_task_rows: 8,
+            coarse_task_rows: 64,
+            min_rate_factor: 0.05,
+        };
+        let mut c = SloController::new(cfg);
+        // Start shrunk (as a long-idle controller would be).
+        c.cur.active_shards = 1;
+        let hot = Obs { p99: Duration::from_millis(40), ..Default::default() };
+
+        // Escalation order: capacity → brownout rungs → admission.
+        let d = c.plan(&hot);
+        assert_eq!(d.active_shards, 2, "capacity first");
+        assert_eq!(d.min_task_rows, 8, "pressure splits tasks finer");
+        assert_eq!((d.brownout, d.rate_factor), (0, 1.0));
+        let d = c.plan(&hot);
+        assert_eq!(d.active_shards, 4);
+        let d = c.plan(&hot);
+        assert_eq!(d.brownout, 1, "degrade low-priority before dropping");
+        let d = c.plan(&hot);
+        assert_eq!(d.brownout, 2);
+        let d = c.plan(&hot);
+        assert!(d.rate_factor < 1.0, "last rung: throttle admission");
+        let floor = (0..100).fold(d, |_, _| c.plan(&hot));
+        assert!(floor.rate_factor >= 0.05, "throttle must floor, not starve");
+
+        // A shedding batcher counts as pressure even with a quiet p99.
+        let mut c2 = SloController::new(ControllerConfig {
+            max_shards: 2,
+            ..ControllerConfig::default()
+        });
+        c2.cur.active_shards = 1;
+        let shedding = Obs { sojourn_shed: 5, ..Default::default() };
+        assert_eq!(c2.plan(&shedding).active_shards, 2);
+
+        // De-escalation in reverse: admission recovers first, then the
+        // brownout lifts, then idle capacity sheds.
+        let calm = Obs { p99: Duration::from_millis(1), ..Default::default() };
+        let mut d = c.plan(&calm);
+        while d.rate_factor < 1.0 {
+            let next = c.plan(&calm);
+            assert!(next.rate_factor >= d.rate_factor);
+            assert_eq!(next.brownout, 2, "brownout holds until admission recovers");
+            d = next;
+        }
+        let d = c.plan(&calm);
+        assert_eq!(d.brownout, 1);
+        let d = c.plan(&calm);
+        assert_eq!(d.brownout, 0);
+        let d = c.plan(&calm);
+        assert_eq!(d.active_shards, 3, "idle pool sheds cores last");
+        assert_eq!(d.min_task_rows, 64, "calm pool coarsens tasks");
+
+        // Mid-band (hysteresis): nothing moves.
+        let mid = Obs { p99: Duration::from_millis(8), ..Default::default() };
+        let before = c.current();
+        assert_eq!(c.plan(&mid), before, "inside the band the knobs hold");
+
+        // A busy-but-meeting-SLO pool must NOT shrink.
+        let busy_calm = Obs {
+            p99: Duration::from_millis(1),
+            busy_shards: 3,
+            ..Default::default()
+        };
+        let held = c.plan(&busy_calm);
+        assert_eq!(held.active_shards, 3, "occupied cores are not shed");
+    }
+
+    #[test]
+    fn report_json_has_the_trajectory_sections() {
+        let report = SloReport {
+            ticks: vec![Tick { at_ms: 200, offered: 10, served: 9, rejected: 1, ..Default::default() }],
+            offered: 10,
+            served: 9,
+            rejected: 1,
+            ..Default::default()
+        };
+        assert_eq!(report.accounted(), 10);
+        let j = report.to_json("slo_trace");
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("report JSON must round-trip");
+        assert_eq!(back.get("offered").and_then(Json::as_usize), Some(10));
+        let traj = back.get("trajectory").expect("trajectory section");
+        match traj {
+            Json::Arr(items) => {
+                assert_eq!(items.len(), 1);
+                assert_eq!(items[0].get("rejected").and_then(Json::as_usize), Some(1));
+            }
+            _ => panic!("trajectory must be an array"),
+        }
+    }
+}

@@ -119,6 +119,16 @@ pub struct ServeMetrics {
     /// `Coordinator::reload` (snapshot parsed, tables replaced, embedded
     /// forest swapped).
     pub model_reloads: AtomicU64,
+    /// Overload model (PR 9). Rows/requests refused at admission — tenant
+    /// quota breach or global in-flight cap — answered with an explicit
+    /// `Rejected` frame (never executed, never counted as errors).
+    pub rejected_rows: AtomicU64,
+    pub rejected_requests: AtomicU64,
+    /// Rows/requests shed by the batcher's CoDel sojourn controller: their
+    /// measured queue delay said the SLO was already lost, even though the
+    /// deadline had not yet expired. Also answered with `Rejected`.
+    pub sojourn_shed_rows: AtomicU64,
+    pub sojourn_shed_requests: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -168,6 +178,10 @@ impl ServeMetrics {
             &self.stream_drop_frames,
             &self.dead_conn_jobs,
             &self.model_reloads,
+            &self.rejected_rows,
+            &self.rejected_requests,
+            &self.sojourn_shed_rows,
+            &self.sojourn_shed_requests,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -254,6 +268,15 @@ impl ServeMetrics {
         let reloads = self.model_reloads.load(Ordering::Relaxed);
         if reloads > 0 {
             s.push_str(&format!("\nmodel reloads: {reloads}"));
+        }
+        let rejected = self.rejected_rows.load(Ordering::Relaxed);
+        let sojourn = self.sojourn_shed_rows.load(Ordering::Relaxed);
+        if rejected + sojourn > 0 {
+            s.push_str(&format!(
+                "\nrejected rows: {rejected} (reqs: {})  sojourn-shed rows: {sojourn} (reqs: {})",
+                self.rejected_requests.load(Ordering::Relaxed),
+                self.sojourn_shed_requests.load(Ordering::Relaxed),
+            ));
         }
         s
     }
@@ -773,6 +796,25 @@ mod tests {
         assert_eq!(m.degraded_rows.load(Ordering::Relaxed), 0);
         assert_eq!(m.breaker_trips.load(Ordering::Relaxed), 0);
         assert!(!m.report().contains("degraded rows"));
+    }
+
+    #[test]
+    fn overload_counters_reported_and_reset() {
+        let m = ServeMetrics::new();
+        assert!(!m.report().contains("rejected rows"), "quiet when clean");
+        m.rejected_rows.fetch_add(40, Ordering::Relaxed);
+        m.rejected_requests.fetch_add(4, Ordering::Relaxed);
+        m.sojourn_shed_rows.fetch_add(16, Ordering::Relaxed);
+        m.sojourn_shed_requests.fetch_add(2, Ordering::Relaxed);
+        let rep = m.report();
+        assert!(rep.contains("rejected rows: 40 (reqs: 4)"), "{rep}");
+        assert!(rep.contains("sojourn-shed rows: 16 (reqs: 2)"), "{rep}");
+        m.reset_all();
+        assert_eq!(m.rejected_rows.load(Ordering::Relaxed), 0);
+        assert_eq!(m.rejected_requests.load(Ordering::Relaxed), 0);
+        assert_eq!(m.sojourn_shed_rows.load(Ordering::Relaxed), 0);
+        assert_eq!(m.sojourn_shed_requests.load(Ordering::Relaxed), 0);
+        assert!(!m.report().contains("rejected rows"));
     }
 
     #[test]

@@ -539,3 +539,307 @@ fn every_row_accounted_exactly_once_under_chaos_threaded() {
 fn every_row_accounted_exactly_once_under_chaos_reactor() {
     conservation_scenario(true);
 }
+
+/// Wraps any backend with a per-batch service delay, so requests hold their
+/// admission permits long enough for offered load to pile up at the door.
+struct SlowBackend {
+    inner: Arc<dyn Backend>,
+    ms: u64,
+}
+
+impl Backend for SlowBackend {
+    fn predict(&self, rows: &[f32], n: usize, row_len: usize) -> Vec<f32> {
+        std::thread::sleep(Duration::from_millis(self.ms));
+        self.inner.predict(rows, n, row_len)
+    }
+    fn row_len(&self) -> usize {
+        self.inner.row_len()
+    }
+}
+
+/// Chaos × overload: scripted transport faults strike while offered load
+/// runs at ~2× what the admission door lets in-flight, on a deliberately
+/// slow backend. Three request populations share one server:
+///
+///  - a raw-client storm (no retries — every admission verdict and every
+///    fault surfaces to the caller exactly once),
+///  - a concurrent coordinator stream under `Stage1Prior` whose RETRYING
+///    client absorbs rejections into degraded answers (the retry budget
+///    bounds its amplification), plus a breaker drill,
+///  - a handful of already-expired-deadline requests the client must
+///    refuse to even send.
+///
+/// The EXTENDED conservation invariant must hold exactly across all of it:
+/// `stage1 + rpc + degraded + rejected + deadline_shed + errors` equals
+/// rows submitted — and the admission door's books must balance: server and
+/// door agree on rejection counts, and every admitted row's in-flight
+/// permit is returned once the dust settles.
+fn overload_conservation_scenario(reactor: bool) {
+    use lrwbins::rpc::admission::AdmissionConfig;
+    use lrwbins::rpc::fault;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    const SEED: u64 = 0x0E4_10AD;
+    const WINDOW: usize = 24;
+    const STORM_THREADS: usize = 6;
+    const STORM_ITERS: usize = 15;
+    const EXPIRED_REQS: usize = 5;
+    println!(
+        "chaos scenario: seed={SEED:#x} faults=Reset@5, StallMs(20)@9 \
+         + 2x-capacity storm reactor={reactor}"
+    );
+
+    let spec = datagen::preset("aci").unwrap().with_rows(4000);
+    let data = datagen::generate(&spec, 5);
+    let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+    let mut first = LrwBinsModel::train(
+        &data,
+        &ranking.order,
+        &LrwBinsParams {
+            b: 2,
+            n_bin_features: 3,
+            n_infer_features: 6,
+            ..Default::default()
+        },
+    );
+    let route: std::collections::HashSet<u32> =
+        first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+    first.set_route(route);
+    let model = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::quick());
+    let nf = data.n_features();
+
+    let plan = ChaosPlan::new(SEED);
+    plan.script(5, Fault::Reset);
+    plan.script(9, Fault::StallMs(20));
+    let ns = Arc::new(NetSim::with_chaos(NetSimConfig::off(), SEED, plan));
+    let metrics = Arc::new(ServeMetrics::new());
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(SlowBackend {
+            inner: Arc::new(lrwbins::rpc::server::NativeBackend::new(model.clone())),
+            ms: 4,
+        }),
+        ns.clone(),
+        BatcherConfig {
+            workers: 2,
+            reactor,
+            // One storm window's worth of in-flight rows: any overlap in
+            // the 6-thread storm MUST be refused at the door.
+            admission: Some(AdmissionConfig {
+                global_inflight_rows: WINDOW,
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+        metrics.clone(),
+    )
+    .expect("server");
+
+    let raw = RpcClient::connect_with(
+        server.addr,
+        ClientConfig {
+            timeout: Duration::from_secs(5),
+            retry: RetryPolicy::none(),
+            ..Default::default()
+        },
+    )
+    .expect("raw client");
+    let mut coord = Coordinator::new(
+        ServingTables::from_model(&first),
+        Some(fast_retry_client(server.addr)),
+        0,
+        metrics.clone(),
+    );
+    coord.degrade = DegradeMode::Stage1Prior;
+    let coord = &coord;
+
+    // Caller-observed row buckets (the six-way extended invariant).
+    let s1 = AtomicU64::new(0);
+    let rpc = AtomicU64::new(0);
+    let deg = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let deadline_shed = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+    let mut submitted = 0u64;
+
+    let classify_coord_row = |r: usize| {
+        let row = data.row(r);
+        let (prior, _) = coord.tables.evaluate(&row);
+        let (p, served) = coord
+            .predict(&row)
+            .expect("Stage1Prior must absorb overload, not error");
+        match served {
+            Served::Stage1 => {
+                assert_eq!(p.to_bits(), prior.to_bits(), "row {r}: stage-1 bits");
+                s1.fetch_add(1, Ordering::Relaxed);
+            }
+            Served::Rpc => {
+                assert_eq!(
+                    p.to_bits(),
+                    model.predict_one(&row).to_bits(),
+                    "row {r}: second-stage bits under overload chaos"
+                );
+                rpc.fetch_add(1, Ordering::Relaxed);
+            }
+            Served::Degraded => {
+                assert_eq!(p.to_bits(), prior.to_bits(), "row {r}: degraded bits");
+                deg.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    };
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        // The raw storm: 6 threads of 24-row windows against a 24-row
+        // in-flight cap on a 4ms-per-batch backend — ~2× what the door
+        // admits. No retries: every verdict is final and counted.
+        for t in 0..STORM_THREADS {
+            let raw = &raw;
+            let data = &data;
+            let model = &model;
+            let (rpc, rejected, deadline_shed, errors) =
+                (&rpc, &rejected, &deadline_shed, &errors);
+            s.spawn(move || {
+                let mut flat = Vec::new();
+                for i in 0..STORM_ITERS {
+                    let start = (t * 37 + i * 13) % 200;
+                    flat.clear();
+                    for r in start..start + WINDOW {
+                        flat.extend_from_slice(&data.row(r));
+                    }
+                    match raw.predict(&flat, nf) {
+                        Ok(probs) => {
+                            assert_eq!(probs.len(), WINDOW);
+                            for (k, p) in probs.iter().enumerate() {
+                                assert_eq!(
+                                    p.to_bits(),
+                                    model.predict_one(&data.row(start + k)).to_bits(),
+                                    "t{t} i{i} row {k}: admitted bits must stay exact"
+                                );
+                            }
+                            rpc.fetch_add(WINDOW as u64, Ordering::Relaxed);
+                        }
+                        Err(e) if fault::is_overloaded(&e) => {
+                            assert!(
+                                fault::retry_after(&e).is_some(),
+                                "t{t} i{i}: rejection lost its hint"
+                            );
+                            rejected.fetch_add(WINDOW as u64, Ordering::Relaxed);
+                        }
+                        Err(e) if fault::is_deadline_exceeded(&e) => {
+                            deadline_shed.fetch_add(WINDOW as u64, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            // A scripted fault (or a reset taking down a
+                            // pooled connection's in-flight neighbors).
+                            errors.fetch_add(WINDOW as u64, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+        // Concurrent coordinator stream: its retrying client meets the same
+        // door; what retries cannot save degrades to the prior.
+        s.spawn(|| {
+            for r in 200..320 {
+                classify_coord_row(r);
+            }
+        });
+    });
+    submitted += (STORM_THREADS * STORM_ITERS * WINDOW) as u64 + 120;
+
+    // Breaker drill after the storm: forced open, misses MUST degrade.
+    coord.rpc_client().unwrap().breaker().force_open();
+    for r in 320..340 {
+        classify_coord_row(r);
+    }
+    coord.rpc_client().unwrap().breaker().force_close();
+    submitted += 20;
+
+    // Already-expired deadlines: the client refuses to send at all, and the
+    // refusal lands in the deadline bucket — not errors, not rejections.
+    for i in 0..EXPIRED_REQS {
+        let mut flat = Vec::new();
+        for r in 0..WINDOW {
+            flat.extend_from_slice(&data.row(r));
+        }
+        let e = raw
+            .predict_opts(&flat, nf, &PredictOptions::with_budget(Duration::ZERO))
+            .expect_err("a spent budget must refuse before sending");
+        assert!(
+            fault::is_deadline_exceeded(&e),
+            "expired request {i} misclassified: {e}"
+        );
+        deadline_shed.fetch_add(WINDOW as u64, Ordering::Relaxed);
+    }
+    submitted += (EXPIRED_REQS * WINDOW) as u64;
+
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "battery stalled: {:?}",
+        t0.elapsed()
+    );
+    assert!(
+        ns.chaos().unwrap().injected.load(Ordering::Relaxed) >= 1,
+        "the scripted faults never fired under the storm"
+    );
+
+    // The extended conservation invariant, exact.
+    let (s1, rpc, deg, rej, dl, err) = (
+        s1.load(Ordering::Relaxed),
+        rpc.load(Ordering::Relaxed),
+        deg.load(Ordering::Relaxed),
+        rejected.load(Ordering::Relaxed),
+        deadline_shed.load(Ordering::Relaxed),
+        errors.load(Ordering::Relaxed),
+    );
+    assert_eq!(
+        s1 + rpc + deg + rej + dl + err,
+        submitted,
+        "every submitted row in exactly one bucket \
+         (s1={s1} rpc={rpc} deg={deg} rej={rej} dl={dl} err={err})"
+    );
+    assert!(rej > 0, "a 2×-capacity storm must draw rejections");
+    assert!(deg > 0, "the breaker drill must degrade some rows");
+    assert!(rpc > 0, "overload must not starve the admitted path");
+    assert_eq!(dl, (EXPIRED_REQS * WINDOW) as u64);
+
+    // The door's books balance with the server's, and every admitted row
+    // hands its in-flight permit back.
+    let admission = server.admission().expect("admission configured");
+    assert_eq!(
+        metrics.rejected_requests.load(Ordering::Relaxed),
+        admission.rejected_requests(),
+        "server metrics and the admission door disagree on rejections"
+    );
+    assert!(
+        admission.rejected_requests() >= rej / WINDOW as u64,
+        "the door must have refused at least the raw storm's rejections"
+    );
+    let drain = Instant::now() + Duration::from_secs(5);
+    while admission.inflight_rows() != 0 {
+        assert!(
+            Instant::now() < drain,
+            "in-flight permits leaked: {} rows still held",
+            admission.inflight_rows()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    println!(
+        "accounted: s1={s1} rpc={rpc} degraded={deg} rejected={rej} \
+         deadline={dl} errors={err} | door: admitted={} rejected={} hwm={}",
+        admission.admitted_requests(),
+        admission.rejected_requests(),
+        admission.inflight_hwm(),
+    );
+}
+
+#[test]
+fn chaos_under_overload_extended_conservation_threaded() {
+    overload_conservation_scenario(false);
+}
+
+#[test]
+fn chaos_under_overload_extended_conservation_reactor() {
+    overload_conservation_scenario(true);
+}

@@ -788,3 +788,190 @@ fn live_swap_storm_versioned_batches_and_unswapped_tenant_unharmed() {
     assert_eq!(load(&stats.model_swaps), SWAPS as u64);
     assert!(load(&stats.replica_builds) > 0, "swaps pre-build replicas off the hot path");
 }
+
+/// Hot-tenant isolation storm (the overload-model stress leg): one tenant
+/// floods the server at many times its row quota while a well-behaved
+/// neighbor tenant keeps a paced trickle under ITS quota. Per-tenant token
+/// buckets must contain the blast radius entirely:
+///
+///  - the neighbor is NEVER rejected (its client retries nothing — a single
+///    refusal fails the test), its answers stay bit-identical to the model,
+///    and its p99 stays bounded while the flood rages;
+///  - the flooder's offered load is mostly refused (rejections, each
+///    carrying a retry-after hint), and what IS admitted still serves the
+///    exact model bits — admission degrades quantity, never quality;
+///  - every counter reconciles exactly: per-tenant admitted/rejected
+///    rows+requests vs what callers observed, and the server-wide
+///    `ServeMetrics` rejection counters vs the admission door's.
+#[test]
+fn hot_tenant_flood_cannot_starve_or_slow_a_paced_neighbor() {
+    use lrwbins::rpc::admission::AdmissionConfig;
+    use lrwbins::rpc::{fault, ClientConfig, RetryPolicy};
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+
+    const FLOOD_TENANT: u32 = 7;
+    const CALM_TENANT: u32 = 3;
+    const FLOOD_THREADS: usize = 4;
+    const FLOOD_ITERS: usize = 80;
+    const CALM_MIN_REQS: usize = 40;
+
+    let spec = datagen::preset("aci").unwrap().with_rows(2000);
+    let data = datagen::generate(&spec, 5);
+    let model = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::quick());
+    let nf = data.n_features();
+    let metrics = Arc::new(ServeMetrics::new());
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(NativeBackend::new(model.clone())),
+        Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+        BatcherConfig {
+            // Quota sized so the flood (tight-loop 24-row windows from 4
+            // threads) overruns it by an order of magnitude, while the
+            // neighbor's paced 1-row trickle sits far under it.
+            admission: Some(AdmissionConfig {
+                tenant_rate_rows_per_s: 500.0,
+                tenant_burst_rows: 100.0,
+                global_inflight_rows: 0,
+            }),
+            ..Default::default()
+        },
+        metrics.clone(),
+    )
+    .expect("server");
+    let client_for = |tenant: u32| {
+        RpcClient::connect_with(
+            server.addr,
+            ClientConfig {
+                // No retries: every admission verdict surfaces to the
+                // caller exactly once, so caller-side counts are exact.
+                retry: RetryPolicy::none(),
+                tenant,
+                ..Default::default()
+            },
+        )
+        .expect("client")
+    };
+    let expected: Vec<u32> = (0..N_ROWS)
+        .map(|r| model.predict_one(&data.row(r)).to_bits())
+        .collect();
+
+    let flood_admitted = AtomicU64::new(0);
+    let flood_rejected = AtomicU64::new(0);
+    let live_flooders = AtomicUsize::new(FLOOD_THREADS);
+    let calm_lat = Mutex::new(Vec::<Duration>::new());
+    let calm_count = AtomicU64::new(0);
+
+    std::thread::scope(|s| {
+        for t in 0..FLOOD_THREADS {
+            let client = client_for(FLOOD_TENANT);
+            let data = &data;
+            let expected = &expected;
+            let (admitted, rejected) = (&flood_admitted, &flood_rejected);
+            let live = &live_flooders;
+            s.spawn(move || {
+                let mut flat = Vec::new();
+                for i in 0..FLOOD_ITERS {
+                    let start = window_start(t, i);
+                    flat.clear();
+                    for r in start..start + WINDOW {
+                        flat.extend_from_slice(&data.row(r));
+                    }
+                    match client.predict(&flat, nf) {
+                        Ok(probs) => {
+                            admitted.fetch_add(1, Ordering::Relaxed);
+                            assert_eq!(probs.len(), WINDOW, "t{t} i{i}");
+                            for (k, p) in probs.iter().enumerate() {
+                                assert_eq!(
+                                    p.to_bits(),
+                                    expected[start + k],
+                                    "t{t} i{i} row {k}: admitted answers must stay exact"
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            assert!(
+                                fault::is_overloaded(&e),
+                                "t{t} i{i}: flood must fail ONLY by admission: {e}"
+                            );
+                            assert!(
+                                fault::retry_after(&e).is_some(),
+                                "t{t} i{i}: rejection lost its retry-after hint"
+                            );
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                live.fetch_sub(1, Ordering::Release);
+            });
+        }
+        // The paced neighbor, concurrent with the whole flood.
+        let client = client_for(CALM_TENANT);
+        let data = &data;
+        let expected = &expected;
+        let (calm_lat, calm_count) = (&calm_lat, &calm_count);
+        let live = &live_flooders;
+        s.spawn(move || {
+            let mut i = 0usize;
+            while live.load(Ordering::Acquire) > 0 || i < CALM_MIN_REQS {
+                let r = (i * 29) % N_ROWS;
+                let row = data.row(r);
+                let t0 = Instant::now();
+                let probs = client
+                    .predict(&row, nf)
+                    .expect("a paced neighbor must NEVER be refused during a flood");
+                calm_lat.lock().unwrap().push(t0.elapsed());
+                assert_eq!(probs[0].to_bits(), expected[r], "neighbor row {r}");
+                calm_count.fetch_add(1, Ordering::Relaxed);
+                i += 1;
+                // ~200 rows/s offered, well under the 500 rows/s quota.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+    });
+
+    let admission = server.admission().expect("admission is configured on");
+    let flood_attempts = (FLOOD_THREADS * FLOOD_ITERS) as u64;
+    let (adm, rej) = (
+        flood_admitted.load(Ordering::Relaxed),
+        flood_rejected.load(Ordering::Relaxed),
+    );
+    assert_eq!(adm + rej, flood_attempts, "every attempt got a verdict");
+    assert!(rej > 0, "the flood never hit its quota — storm too weak");
+    assert!(
+        rej > adm,
+        "a 10×-quota flood must be mostly refused: admitted {adm}, rejected {rej}"
+    );
+
+    // Per-tenant books balance against caller-observed outcomes, exactly.
+    let fs = admission.tenant_stats(FLOOD_TENANT);
+    assert_eq!(fs.admitted_requests, adm);
+    assert_eq!(fs.rejected_requests, rej);
+    assert_eq!(fs.admitted_rows, adm * WINDOW as u64);
+    assert_eq!(fs.rejected_rows, rej * WINDOW as u64);
+    let cs = admission.tenant_stats(CALM_TENANT);
+    let calm = calm_count.load(Ordering::Relaxed);
+    assert!(calm >= CALM_MIN_REQS as u64);
+    assert_eq!(cs.rejected_requests, 0, "isolation: neighbor never rejected");
+    assert_eq!(cs.admitted_requests, calm);
+    assert_eq!(cs.admitted_rows, calm);
+
+    // Server-wide books agree with the door's.
+    assert_eq!(admission.rejected_requests(), rej);
+    assert_eq!(metrics.rejected_requests.load(Ordering::Relaxed), rej);
+    assert_eq!(
+        metrics.rejected_rows.load(Ordering::Relaxed),
+        rej * WINDOW as u64
+    );
+
+    // Bounded neighbor tail: generous for noisy shared CI, but a neighbor
+    // actually queued behind the flood would blow through it.
+    let mut lats = std::mem::take(&mut *calm_lat.lock().unwrap());
+    lats.sort_unstable();
+    let p99 = lats[(lats.len() * 99) / 100];
+    assert!(
+        p99 < Duration::from_millis(250),
+        "neighbor p99 {p99:?} under flood — isolation failed"
+    );
+}
