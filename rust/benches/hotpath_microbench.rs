@@ -22,6 +22,10 @@
 //!   stream_vs_monolithic: client-observed full-block RPC latency and
 //!                time-to-first-span, streamed CHUNK responses vs one
 //!                monolithic frame, block {64, 256, 1024};
+//!   shadow_overhead: embedded serve path with a rollout pinned in Shadow
+//!                (identical candidate, guards wide open) at sampling
+//!                {0, 1, 10, 100}% vs the no-rollout baseline — the live
+//!                cost of shadow scoring;
 //!   L1/L2 PJRT:  second-stage artifact execution per batch variant.
 //!
 //! Emits `BENCH_hotpath.json` (rows/sec per layer) at the repo root so the
@@ -415,6 +419,70 @@ fn main() {
                     None,
                 );
             }
+        }
+    }
+
+    // --- shadow_overhead: rollout shadow sampling on the serve path --------
+    // The same embedded coordinator serving identical 64-row batches with
+    // (a) no rollout in flight — the true baseline — and (b) a rollout
+    // pinned in Shadow (identical candidate, divergence guards wide open,
+    // min_shadow_ticks at the ceiling so the ramp can never advance) at
+    // shadow_sample_permille {0, 10, 100, 1000}. Shadow re-scores run
+    // strictly below live priority on the pool, so the serve-path delta is
+    // the sampling gate + job hand-off, not the candidate's compute. The
+    // permille=0 row is the armed-but-not-sampling cost: one relaxed
+    // atomic load per batch, expected unmeasurable against (a).
+    {
+        use lrwbins::coordinator::{Coordinator, RolloutConfig};
+        use lrwbins::runtime::ShardPool;
+        use lrwbins::snapshot::Snapshot;
+        let batch = 64usize;
+        let batch_rows: Vec<Vec<f32>> = rows[..batch].to_vec();
+        let mk_coord = || {
+            let pool = Arc::new(ShardPool::new(2));
+            let id = pool.register(flat.clone());
+            Coordinator::new_embedded(tables.clone(), pool, id, Arc::new(ServeMetrics::new()))
+        };
+        let coord = mk_coord();
+        bench.run_items(
+            &format!("shadow_overhead predict_batch (batch={batch}, no rollout)"),
+            batch as u64,
+            || {
+                std::hint::black_box(coord.predict_batch(&batch_rows).unwrap().len());
+            },
+        );
+        for &permille in &[0u32, 10, 100, 1000] {
+            let coord = mk_coord();
+            let snap =
+                Snapshot::parse(&Snapshot::write(&coord.tables, &flat)).unwrap();
+            let ro = coord
+                .begin_rollout(
+                    &snap,
+                    RolloutConfig {
+                        shadow_sample_permille: permille,
+                        min_shadow_ticks: u32::MAX,
+                        max_disagreement: 1.0,
+                        max_score_delta: 1e9,
+                        error_budget_rows: u64::MAX,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            bench.run_items(
+                &format!(
+                    "shadow_overhead predict_batch (batch={batch}, shadow={}%)",
+                    permille as f64 / 10.0
+                ),
+                batch as u64,
+                || {
+                    std::hint::black_box(coord.predict_batch(&batch_rows).unwrap().len());
+                },
+            );
+            eprintln!(
+                "  [shadow_overhead permille={permille}] {}",
+                ro.stats.report()
+            );
+            coord.end_rollout();
         }
     }
 

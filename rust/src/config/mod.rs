@@ -83,6 +83,32 @@ pub struct ServeConfig {
     /// (0 = the controller default). Only read by the SLO harness/bench;
     /// the serving path itself never looks at it.
     pub slo_p99_ms: u64,
+    /// Guarded model rollout (`lrwbins rollout`, `Coordinator::
+    /// begin_rollout`) — fraction of served batches sampled into the
+    /// shadow comparison, permille.
+    pub rollout_shadow_sample_permille: u64,
+    /// Compared rows required before the disagreement guard arms and
+    /// Shadow may hand over to Canary.
+    pub rollout_min_rows_compared: u64,
+    /// Stage-1 routing disagreement-rate bound (fraction, 0..1).
+    pub rollout_max_disagreement: f64,
+    /// Bound on any single |candidate − live| score delta.
+    pub rollout_max_score_delta: f64,
+    /// Controller ticks the rollout must dwell in Shadow.
+    pub rollout_min_shadow_ticks: u64,
+    /// Canary ramp schedule, comma-separated permille steps
+    /// (e.g. "50,200,500"); after the last step the rollout promotes.
+    pub rollout_canary_steps: String,
+    /// Unescalated controller ticks per ramp step.
+    pub rollout_step_ticks: u64,
+    /// Hard pre-promotion cap on rows the candidate may answer.
+    pub rollout_error_budget_rows: u64,
+    /// Absolute canary-batch p99 bound, µs (0 disables the guard).
+    pub rollout_canary_p99_bound_us: u64,
+    /// Shadow-vs-live p99 ratio bound (0 disables the guard).
+    pub rollout_max_shadow_latency_ratio: f64,
+    /// Shed horizon for queued shadow-scoring jobs, milliseconds.
+    pub rollout_shadow_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -115,6 +141,17 @@ impl Default for ServeConfig {
             admit_tenant_burst: 0.0,
             sojourn_slo_us: 0,
             slo_p99_ms: 0,
+            rollout_shadow_sample_permille: 250,
+            rollout_min_rows_compared: 200,
+            rollout_max_disagreement: 0.02,
+            rollout_max_score_delta: 0.25,
+            rollout_min_shadow_ticks: 2,
+            rollout_canary_steps: "50,200,500".into(),
+            rollout_step_ticks: 2,
+            rollout_error_budget_rows: 10_000,
+            rollout_canary_p99_bound_us: 0,
+            rollout_max_shadow_latency_ratio: 0.0,
+            rollout_shadow_timeout_ms: 250,
         }
     }
 }
@@ -158,6 +195,47 @@ impl ServeConfig {
         j.set("admit_tenant_burst", Json::Num(self.admit_tenant_burst));
         j.set("sojourn_slo_us", Json::Num(self.sojourn_slo_us as f64));
         j.set("slo_p99_ms", Json::Num(self.slo_p99_ms as f64));
+        j.set(
+            "rollout_shadow_sample_permille",
+            Json::Num(self.rollout_shadow_sample_permille as f64),
+        );
+        j.set(
+            "rollout_min_rows_compared",
+            Json::Num(self.rollout_min_rows_compared as f64),
+        );
+        j.set(
+            "rollout_max_disagreement",
+            Json::Num(self.rollout_max_disagreement),
+        );
+        j.set(
+            "rollout_max_score_delta",
+            Json::Num(self.rollout_max_score_delta),
+        );
+        j.set(
+            "rollout_min_shadow_ticks",
+            Json::Num(self.rollout_min_shadow_ticks as f64),
+        );
+        j.set(
+            "rollout_canary_steps",
+            Json::Str(self.rollout_canary_steps.clone()),
+        );
+        j.set("rollout_step_ticks", Json::Num(self.rollout_step_ticks as f64));
+        j.set(
+            "rollout_error_budget_rows",
+            Json::Num(self.rollout_error_budget_rows as f64),
+        );
+        j.set(
+            "rollout_canary_p99_bound_us",
+            Json::Num(self.rollout_canary_p99_bound_us as f64),
+        );
+        j.set(
+            "rollout_max_shadow_latency_ratio",
+            Json::Num(self.rollout_max_shadow_latency_ratio),
+        );
+        j.set(
+            "rollout_shadow_timeout_ms",
+            Json::Num(self.rollout_shadow_timeout_ms as f64),
+        );
         j
     }
 
@@ -196,6 +274,38 @@ impl ServeConfig {
             admit_tenant_burst: n("admit_tenant_burst", d.admit_tenant_burst),
             sojourn_slo_us: n("sojourn_slo_us", d.sojourn_slo_us as f64) as u64,
             slo_p99_ms: n("slo_p99_ms", d.slo_p99_ms as f64) as u64,
+            rollout_shadow_sample_permille: n(
+                "rollout_shadow_sample_permille",
+                d.rollout_shadow_sample_permille as f64,
+            ) as u64,
+            rollout_min_rows_compared: n(
+                "rollout_min_rows_compared",
+                d.rollout_min_rows_compared as f64,
+            ) as u64,
+            rollout_max_disagreement: n("rollout_max_disagreement", d.rollout_max_disagreement),
+            rollout_max_score_delta: n("rollout_max_score_delta", d.rollout_max_score_delta),
+            rollout_min_shadow_ticks: n(
+                "rollout_min_shadow_ticks",
+                d.rollout_min_shadow_ticks as f64,
+            ) as u64,
+            rollout_canary_steps: s("rollout_canary_steps", &d.rollout_canary_steps),
+            rollout_step_ticks: n("rollout_step_ticks", d.rollout_step_ticks as f64) as u64,
+            rollout_error_budget_rows: n(
+                "rollout_error_budget_rows",
+                d.rollout_error_budget_rows as f64,
+            ) as u64,
+            rollout_canary_p99_bound_us: n(
+                "rollout_canary_p99_bound_us",
+                d.rollout_canary_p99_bound_us as f64,
+            ) as u64,
+            rollout_max_shadow_latency_ratio: n(
+                "rollout_max_shadow_latency_ratio",
+                d.rollout_max_shadow_latency_ratio,
+            ),
+            rollout_shadow_timeout_ms: n(
+                "rollout_shadow_timeout_ms",
+                d.rollout_shadow_timeout_ms as f64,
+            ) as u64,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -264,6 +374,48 @@ impl ServeConfig {
         })
     }
 
+    /// The parsed canary ramp schedule (permille steps, each 1..=1000).
+    pub fn rollout_canary_steps(&self) -> Result<Vec<u32>, String> {
+        let mut steps = Vec::new();
+        for part in self.rollout_canary_steps.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let p: u32 = part
+                .parse()
+                .map_err(|_| format!("rollout_canary_steps: '{part}' is not an integer"))?;
+            if p == 0 || p > 1000 {
+                return Err(format!(
+                    "rollout_canary_steps: step {p}‰ out of range (1..=1000)"
+                ));
+            }
+            steps.push(p);
+        }
+        if steps.is_empty() {
+            return Err("rollout_canary_steps must name at least one step".into());
+        }
+        Ok(steps)
+    }
+
+    /// Guarded-rollout policy from the `rollout_*` knobs (see
+    /// `coordinator::RolloutConfig`).
+    pub fn rollout_config(&self) -> Result<crate::coordinator::RolloutConfig, String> {
+        Ok(crate::coordinator::RolloutConfig {
+            shadow_sample_permille: self.rollout_shadow_sample_permille.min(1000) as u32,
+            min_rows_compared: self.rollout_min_rows_compared,
+            max_disagreement: self.rollout_max_disagreement,
+            max_score_delta: self.rollout_max_score_delta,
+            min_shadow_ticks: self.rollout_min_shadow_ticks as u32,
+            canary_steps_permille: self.rollout_canary_steps()?,
+            step_ticks: self.rollout_step_ticks.max(1) as u32,
+            error_budget_rows: self.rollout_error_budget_rows,
+            canary_p99_bound_us: self.rollout_canary_p99_bound_us,
+            max_shadow_latency_ratio: self.rollout_max_shadow_latency_ratio,
+            shadow_timeout: std::time::Duration::from_millis(self.rollout_shadow_timeout_ms),
+        })
+    }
+
     /// Per-request options from the configured default deadline budget.
     pub fn predict_options(&self) -> crate::rpc::PredictOptions {
         if self.deadline_ms == 0 {
@@ -298,6 +450,23 @@ impl ServeConfig {
         }
         if !self.admit_tenant_burst.is_finite() || self.admit_tenant_burst < 0.0 {
             return Err("admit_tenant_burst must be finite and >= 0".into());
+        }
+        self.rollout_canary_steps()?;
+        if self.rollout_shadow_sample_permille > 1000 {
+            return Err("rollout_shadow_sample_permille must be <= 1000".into());
+        }
+        if !self.rollout_max_disagreement.is_finite()
+            || !(0.0..=1.0).contains(&self.rollout_max_disagreement)
+        {
+            return Err("rollout_max_disagreement must be in 0..=1".into());
+        }
+        if !self.rollout_max_score_delta.is_finite() || self.rollout_max_score_delta <= 0.0 {
+            return Err("rollout_max_score_delta must be finite and > 0".into());
+        }
+        if !self.rollout_max_shadow_latency_ratio.is_finite()
+            || self.rollout_max_shadow_latency_ratio < 0.0
+        {
+            return Err("rollout_max_shadow_latency_ratio must be finite and >= 0".into());
         }
         Ok(())
     }
@@ -499,6 +668,59 @@ mod tests {
 
         let j = Json::parse(r#"{"write_queue_frames": 0}"#).unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rollout_knobs_roundtrip_and_validate() {
+        // Defaults mirror coordinator::RolloutConfig::default().
+        let d = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        let rc = d.rollout_config().unwrap();
+        assert_eq!(rc.shadow_sample_permille, 250);
+        assert_eq!(rc.canary_steps_permille, vec![50, 200, 500]);
+        assert_eq!(rc.error_budget_rows, 10_000);
+        assert_eq!(rc.shadow_timeout, std::time::Duration::from_millis(250));
+
+        let c = ServeConfig {
+            rollout_shadow_sample_permille: 1000,
+            rollout_min_rows_compared: 32,
+            rollout_max_disagreement: 0.05,
+            rollout_max_score_delta: 0.1,
+            rollout_min_shadow_ticks: 1,
+            rollout_canary_steps: "100, 900".into(),
+            rollout_step_ticks: 3,
+            rollout_error_budget_rows: 512,
+            rollout_canary_p99_bound_us: 40_000,
+            rollout_max_shadow_latency_ratio: 8.0,
+            rollout_shadow_timeout_ms: 50,
+            ..Default::default()
+        };
+        let c2 = ServeConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        let rc = c2.rollout_config().unwrap();
+        assert_eq!(rc.shadow_sample_permille, 1000);
+        assert_eq!(rc.min_rows_compared, 32);
+        assert_eq!(rc.max_disagreement, 0.05);
+        assert_eq!(rc.canary_steps_permille, vec![100, 900]);
+        assert_eq!(rc.step_ticks, 3);
+        assert_eq!(rc.error_budget_rows, 512);
+        assert_eq!(rc.canary_p99_bound_us, 40_000);
+        assert_eq!(rc.max_shadow_latency_ratio, 8.0);
+        assert_eq!(rc.shadow_timeout, std::time::Duration::from_millis(50));
+
+        // Bad ramp schedules and out-of-range bounds are rejected.
+        for bad in [
+            r#"{"rollout_canary_steps": "50,frog"}"#,
+            r#"{"rollout_canary_steps": "0"}"#,
+            r#"{"rollout_canary_steps": "1500"}"#,
+            r#"{"rollout_canary_steps": ""}"#,
+            r#"{"rollout_max_disagreement": 1.5}"#,
+            r#"{"rollout_max_score_delta": 0.0}"#,
+            r#"{"rollout_max_shadow_latency_ratio": -1.0}"#,
+        ] {
+            assert!(
+                ServeConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad} must be rejected"
+            );
+        }
     }
 
     #[test]

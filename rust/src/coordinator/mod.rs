@@ -47,6 +47,7 @@
 //! the ACTUAL frames moved (one k-row request plus the response frames,
 //! chunked or not), split across the k missed rows.
 
+use crate::gbdt::ForestScratch;
 use crate::lrwbins::{BlockScratch, ServingTables, Stage1Dispatch};
 use crate::rpc::client::PendingPredict;
 use crate::rpc::fault::is_breaker_open;
@@ -55,9 +56,13 @@ use crate::runtime::{ModelId, ShardPool};
 use crate::snapshot::Snapshot;
 use crate::tabular::RowBlock;
 use crate::telemetry::{CpuTimer, ServeMetrics};
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+mod rollout;
+
+pub use rollout::{RollbackReason, Rollout, RolloutConfig, RolloutPhase};
 
 /// Where route-missed rows go for second-stage scoring.
 ///
@@ -196,6 +201,12 @@ pub struct Coordinator {
     /// [`DegradeMode::Stage1Prior`] — brownout IS that degradation,
     /// applied before the second stage is even asked.
     brownout: AtomicU8,
+    /// The guarded rollout in flight, if any (see [`Rollout`] and
+    /// [`Coordinator::begin_rollout`]). `rollout_on` is the hot paths' fast
+    /// gate: with no rollout active they pay one relaxed load, never the
+    /// mutex.
+    rollout: Mutex<Option<Arc<Rollout>>>,
+    rollout_on: AtomicBool,
     scratch: Mutex<CoordScratch>,
 }
 
@@ -256,6 +267,8 @@ impl Coordinator {
             degrade: DegradeMode::default(),
             fetch: None,
             brownout: AtomicU8::new(0),
+            rollout: Mutex::new(None),
+            rollout_on: AtomicBool::new(false),
             scratch: Mutex::new(CoordScratch::default()),
         }
     }
@@ -371,6 +384,271 @@ impl Coordinator {
         Ok(version)
     }
 
+    /// Start a **guarded rollout** of `snapshot` (see [`Rollout`] and the
+    /// crate docs' "Model rollout" section): the candidate enters **Shadow**
+    /// — served bits stay bit-identical to pre-rollout while the divergence
+    /// monitor compares sampled traffic against it — and is walked to
+    /// promotion (or automatic rollback) by [`Coordinator::rollout_tick`].
+    ///
+    /// Embedded mode STAGES the candidate forest in the shard pool
+    /// (versioned next to the incumbent, pinned by a lease for the
+    /// rollout's lifetime); RPC / stage-1-only coordinators score the
+    /// candidate in-process from the snapshot. Same feature-width rule as
+    /// [`Coordinator::reload`]; at most one rollout may be in flight.
+    pub fn begin_rollout(
+        &self,
+        snapshot: &Snapshot,
+        cfg: RolloutConfig,
+    ) -> Result<Arc<Rollout>, String> {
+        let mut tables = snapshot.tables()?;
+        if tables.n_features != self.tables.n_features {
+            return Err(format!(
+                "rollout: snapshot serves {} features, coordinator was built for {} \
+                 (feature-width changes require a new coordinator)",
+                tables.n_features, self.tables.n_features
+            ));
+        }
+        tables.set_dispatch(self.tables.dispatch());
+        let mut slot = self.rollout.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(active) = &*slot {
+            if matches!(active.phase(), RolloutPhase::Shadow | RolloutPhase::Canary) {
+                return Err(
+                    "rollout: another candidate is already in flight (end_rollout first)".into(),
+                );
+            }
+        }
+        let stage2 = match &self.fallback {
+            Some(SecondStage::Embedded { pool, model }) => {
+                let version = pool.stage(*model, snapshot.forest())?;
+                let lease = pool.pin_version(*model, version).ok_or_else(|| {
+                    "rollout: staged version vanished before it could be pinned".to_string()
+                })?;
+                rollout::CandidateStage2::Pool {
+                    pool: pool.clone(),
+                    model: *model,
+                    version,
+                    _lease: lease,
+                }
+            }
+            _ => rollout::CandidateStage2::Local {
+                forest: Arc::new(snapshot.forest()),
+                scratch: Mutex::new(ForestScratch::default()),
+            },
+        };
+        let ro = Arc::new(Rollout::new(cfg, tables, stage2));
+        *slot = Some(ro.clone());
+        drop(slot);
+        self.rollout_on.store(true, Ordering::Release);
+        Ok(ro)
+    }
+
+    /// The rollout currently installed (any phase), if one exists.
+    pub fn rollout(&self) -> Option<Arc<Rollout>> {
+        if !self.rollout_on.load(Ordering::Acquire) {
+            return None;
+        }
+        self.rollout
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_ref()
+            .cloned()
+    }
+
+    /// Deliver one SLO-controller tick to the in-flight rollout.
+    /// `escalated` = the controller is in brownout or throttling admission:
+    /// the ramp freezes instead of advancing — an overloaded system must
+    /// not widen a model experiment. No-op without an active rollout.
+    pub fn rollout_tick(&self, escalated: bool) {
+        if let Some(ro) = self.rollout() {
+            ro.tick(escalated);
+        }
+    }
+
+    /// Retire the rollout (any phase): canary routing and shadow sampling
+    /// stop immediately, and a candidate that did not promote is unstaged
+    /// from the pool (its lease keeps in-flight work resolvable until the
+    /// returned handle drops). Returns the rollout for post-mortem reads.
+    pub fn end_rollout(&self) -> Option<Arc<Rollout>> {
+        self.rollout_on.store(false, Ordering::Release);
+        let ro = self
+            .rollout
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .take()?;
+        if ro.phase() != RolloutPhase::Promoted {
+            if let rollout::CandidateStage2::Pool { pool, model, .. } = &ro.stage2 {
+                pool.unstage(*model);
+            }
+        }
+        Some(ro)
+    }
+
+    /// Complete a PROMOTED rollout: install the candidate stage-1 tables as
+    /// the incumbent, promote the staged forest in the pool, and retire the
+    /// rollout — serving returns to the plain (non-canary) path on the new
+    /// model. While promoted-but-unfinalized the candidate already serves
+    /// 100% of traffic through the canary route, so there is no serving
+    /// gap; this retires the bookkeeping. Returns the pool-side version now
+    /// serving (0 for RPC / stage-1-only coordinators, as in
+    /// [`Coordinator::reload`]).
+    pub fn finalize_rollout(&mut self) -> Result<u32, String> {
+        let ro = self.rollout().ok_or("rollout: nothing to finalize")?;
+        if ro.phase() != RolloutPhase::Promoted {
+            return Err(format!(
+                "rollout: candidate is {:?}, not Promoted",
+                ro.phase()
+            ));
+        }
+        let version = match &ro.stage2 {
+            rollout::CandidateStage2::Pool { pool, model, .. } => pool.promote(*model)?,
+            rollout::CandidateStage2::Local { .. } => 0,
+        };
+        self.tables = ro.tables.clone();
+        self.rollout_on.store(false, Ordering::Release);
+        *self.rollout.lock().unwrap_or_else(PoisonError::into_inner) = None;
+        self.metrics
+            .model_reloads
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(version)
+    }
+
+    /// The active rollout while it is canary-routing (Canary or Promoted
+    /// with a nonzero slice) — the hot paths' entry check.
+    fn canary_rollout(&self) -> Option<Arc<Rollout>> {
+        if !self.rollout_on.load(Ordering::Acquire) {
+            return None;
+        }
+        let slot = self.rollout.lock().unwrap_or_else(PoisonError::into_inner);
+        let ro = slot.as_ref()?;
+        if matches!(ro.phase(), RolloutPhase::Canary | RolloutPhase::Promoted)
+            && ro.canary_permille() > 0
+        {
+            Some(ro.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Route this request to the candidate? Deterministic on the rollout
+    /// key, and only if the error budget admits `n` more candidate-answered
+    /// rows.
+    fn canary_claim(&self, ro: &Rollout, n: usize, opts: &PredictOptions) -> bool {
+        let key = opts.rollout_key.unwrap_or_else(|| ro.next_key());
+        ro.routes(key) && ro.try_reserve_budget(n as u64)
+    }
+
+    /// The active rollout iff it is shadow-monitoring AND sampled THIS
+    /// batch into the comparison.
+    fn rollout_shadow_sample(&self) -> Option<Arc<Rollout>> {
+        if !self.rollout_on.load(Ordering::Acquire) {
+            return None;
+        }
+        let slot = self.rollout.lock().unwrap_or_else(PoisonError::into_inner);
+        let ro = slot.as_ref()?;
+        if ro.samples_shadow() {
+            ro.stats.shadow_batches.fetch_add(1, Ordering::Relaxed);
+            Some(ro.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Serve one whole claimed batch on the CANDIDATE: its stage-1 tables
+    /// route, its second stage scores the misses — never mixing versions
+    /// within the batch. `None` means the candidate failed mid-serve: the
+    /// failure guard has tripped, the budget reservation was returned, and
+    /// the caller must serve the batch on the incumbent (the candidate
+    /// never answered it).
+    fn canary_serve_flat(
+        &self,
+        ro: &Arc<Rollout>,
+        flat: &[f32],
+        n: usize,
+        opts: &PredictOptions,
+        t0: Instant,
+        cpu: CpuTimer,
+    ) -> Option<std::io::Result<Vec<(f32, Served)>>> {
+        let nf = self.tables.n_features;
+        debug_assert_eq!(flat.len(), n * nf);
+        // Stage-1 feature fetch for the candidate tables' subset — the
+        // same mode shape as the incumbent path.
+        if let Some(f) = &self.fetch {
+            match self.mode {
+                Mode::AlwaysRpc => f.fetch(n * nf),
+                _ => f.fetch(n * ro.tables.n_infer()),
+            }
+        }
+        let mut out: Vec<(f32, Served)> = Vec::with_capacity(n);
+        let mut miss_idx: Vec<usize> = Vec::new();
+        for r in 0..n {
+            let (p1, routed) = ro.tables.evaluate(&flat[r * nf..(r + 1) * nf]);
+            let use_stage1 = match self.mode {
+                Mode::Multistage => routed,
+                Mode::AlwaysRpc => false,
+                Mode::AlwaysStage1 => true,
+            };
+            if use_stage1 {
+                out.push((p1, Served::Stage1));
+            } else {
+                miss_idx.push(r);
+                out.push((p1, Served::Rpc));
+            }
+        }
+        let stage1_wall = t0.elapsed().as_nanos() as u64;
+        let stage1_cpu_total = cpu.elapsed_ns();
+        let per_row_cpu = stage1_cpu_total / n.max(1) as u64;
+        if !miss_idx.is_empty() {
+            if self.mode != Mode::AlwaysRpc {
+                if let Some(f) = &self.fetch {
+                    let rest = nf.saturating_sub(ro.tables.n_infer());
+                    f.fetch(miss_idx.len() * rest);
+                }
+            }
+            let mut padded = Vec::with_capacity(miss_idx.len() * self.rpc_row_len);
+            for &i in &miss_idx {
+                self.pad_for_rpc(&flat[i * nf..(i + 1) * nf], &mut padded);
+            }
+            let mut probs = vec![0f32; miss_idx.len()];
+            let deadline = opts.deadline.map(|d| d.instant());
+            if ro
+                .score_candidate(&padded, self.rpc_row_len, &mut probs, deadline)
+                .is_err()
+            {
+                // Candidate failure on real traffic: maximal divergence.
+                // Return the budget (the candidate did NOT answer these
+                // rows), trip the guard, and let the caller serve the whole
+                // batch on the incumbent — no mixed batch ever existed.
+                ro.release_budget(n as u64);
+                ro.stats.candidate_failures.fetch_add(1, Ordering::Relaxed);
+                ro.trip(RollbackReason::CandidateFailure, &self.metrics);
+                return None;
+            }
+            for (j, &i) in miss_idx.iter().enumerate() {
+                out[i].0 = probs[j];
+            }
+        }
+        // Accounting mirrors the incumbent path: hits book at the stage-1
+        // wall, misses at the batch wall — with ZERO wire bytes, the
+        // candidate always scores in-process.
+        let wall = t0.elapsed().as_nanos() as u64;
+        let k = miss_idx.len();
+        for _ in 0..n - k {
+            self.metrics
+                .hit_stage1(stage1_wall, per_row_cpu, ro.tables.n_infer() as u64);
+            self.metrics.e2e.record(stage1_wall);
+        }
+        if n > 0 {
+            self.metrics.block_stage1_complete.record(stage1_wall);
+        }
+        if k > 0 {
+            let cpu_share =
+                per_row_cpu + cpu.elapsed_ns().saturating_sub(stage1_cpu_total) / k as u64;
+            self.record_miss_completion(k, wall, cpu_share, 0);
+        }
+        ro.note_canary_batch(n as u64, wall, &self.metrics);
+        Some(Ok(out))
+    }
+
     fn pad_for_rpc(&self, row: &[f32], buf: &mut Vec<f32>) {
         buf.reserve(self.rpc_row_len);
         buf.extend_from_slice(row);
@@ -468,6 +746,17 @@ impl Coordinator {
         opts: &PredictOptions,
     ) -> std::io::Result<(f32, Served)> {
         debug_assert_eq!(row.len(), self.tables.n_features);
+        // Guarded rollout, canary phase: the row either routes to the
+        // candidate wholesale or serves the incumbent exactly as before.
+        if let Some(ro) = self.canary_rollout() {
+            if self.canary_claim(&ro, 1, opts) {
+                let t0 = Instant::now();
+                let cpu = CpuTimer::start();
+                if let Some(res) = self.canary_serve_flat(&ro, row, 1, opts, t0, cpu) {
+                    return res.map(|mut v| v.pop().expect("one row"));
+                }
+            }
+        }
         let t0 = Instant::now();
         let cpu = CpuTimer::start();
 
@@ -484,6 +773,13 @@ impl Coordinator {
         // Embedded stage-1 evaluation (also the router decision).
         let (p1, routed) = self.tables.evaluate(row);
         let stage1_wall = t0.elapsed().as_nanos() as u64;
+        // Guarded rollout, shadow monitor: a sampled row compares stage-1
+        // decisions inline; a sampled MISS also shadow-scores on the
+        // candidate's second stage once its live score is known (below).
+        let shadow = self.rollout_shadow_sample();
+        if let Some(ro) = &shadow {
+            ro.compare_stage1_row(&self.tables, row, &self.metrics);
+        }
         let use_stage1 = match self.mode {
             Mode::Multistage => routed,
             Mode::AlwaysRpc => false,
@@ -539,6 +835,16 @@ impl Coordinator {
         );
         self.metrics.e2e.record(wall);
         self.sync_rpc_failure_counters();
+        if let Some(ro) = &shadow {
+            Rollout::shadow_score_misses(
+                ro,
+                &padded,
+                self.rpc_row_len,
+                vec![probs[0]],
+                wall,
+                &self.metrics,
+            );
+        }
         Ok((probs[0], Served::Rpc))
     }
 
@@ -561,6 +867,23 @@ impl Coordinator {
     ) -> std::io::Result<Vec<(f32, Served)>> {
         if rows.is_empty() {
             return Ok(Vec::new());
+        }
+        // Guarded rollout, canary phase: a routed batch serves WHOLE on the
+        // candidate — versions are never mixed within a batch.
+        if let Some(ro) = self.canary_rollout() {
+            if self.canary_claim(&ro, rows.len(), opts) {
+                let t0 = Instant::now();
+                let cpu = CpuTimer::start();
+                let nf = self.tables.n_features;
+                let mut flat = Vec::with_capacity(rows.len() * nf);
+                for r in rows {
+                    debug_assert_eq!(r.len(), nf);
+                    flat.extend_from_slice(r);
+                }
+                if let Some(res) = self.canary_serve_flat(&ro, &flat, rows.len(), opts, t0, cpu) {
+                    return res;
+                }
+            }
         }
         let t0 = Instant::now();
         let cpu = CpuTimer::start();
@@ -601,6 +924,42 @@ impl Coordinator {
         block: &RowBlock,
         opts: &PredictOptions,
     ) -> std::io::Result<BlockPending<'_>> {
+        // Guarded rollout, canary phase: a routed block serves WHOLE on the
+        // candidate (completed inline — its second stage is in-process, so
+        // there is no RPC to overlap) and returns an already-joined
+        // pending, bit-identical to waiting on the normal path.
+        if block.n_rows() > 0 {
+            if let Some(ro) = self.canary_rollout() {
+                if self.canary_claim(&ro, block.n_rows(), opts) {
+                    let t0 = Instant::now();
+                    let cpu = CpuTimer::start();
+                    let nf = self.tables.n_features;
+                    let mut flat = Vec::with_capacity(block.n_rows() * nf);
+                    let mut row = Vec::new();
+                    for i in 0..block.n_rows() {
+                        block.row_into(i, &mut row);
+                        flat.extend_from_slice(&row);
+                    }
+                    if let Some(res) =
+                        self.canary_serve_flat(&ro, &flat, block.n_rows(), opts, t0, cpu)
+                    {
+                        let out = res?;
+                        return Ok(BlockPending {
+                            coord: self,
+                            out,
+                            miss_idx: Vec::new(),
+                            miss_rows: Vec::new(),
+                            rpc: None,
+                            t0,
+                            miss_cpu_base: 0,
+                            span_walls: Vec::new(),
+                            delivered: Vec::new(),
+                            shadow: None,
+                        });
+                    }
+                }
+            }
+        }
         let t0 = Instant::now();
         let cpu = CpuTimer::start();
         self.fetch_stage1(block.n_rows());
@@ -716,6 +1075,20 @@ impl Coordinator {
             self.metrics.block_stage1_complete.record(stage1_wall);
         }
 
+        // Guarded rollout, shadow monitor: a sampled batch compares every
+        // row's stage-1 decision against the candidate tables inline (cost
+        // bounded by the sampling rate); its route-missed rows shadow-score
+        // on the candidate's second stage once their live scores land —
+        // right below for the embedded fallback, at the join for RPC.
+        let shadow = self.rollout_shadow_sample();
+        if let Some(ro) = &shadow {
+            let mut row = Vec::new();
+            for i in 0..n {
+                block.row_into(i, &mut row);
+                ro.compare_stage1_row(&self.tables, &row, &self.metrics);
+            }
+        }
+
         // Misses: fetch the features the stage-1 attempt did not cover
         // (AlwaysRpc already fetched everything), then hand them to the
         // second stage — launched without waiting for the RPC fallback,
@@ -747,6 +1120,7 @@ impl Coordinator {
                 miss_cpu_base: 0,
                 span_walls: Vec::new(),
                 delivered: Vec::new(),
+                shadow: None,
             });
         } else {
             if self.mode != Mode::AlwaysRpc {
@@ -787,6 +1161,18 @@ impl Coordinator {
                                 + cpu.elapsed_ns().saturating_sub(stage1_cpu_total) / k as u64;
                             // miss_wire_bytes is 0 for the embedded stage.
                             self.record_miss_completion(k, wall, cpu_share, self.miss_wire_bytes(k));
+                            if let Some(ro) = &shadow {
+                                let live: Vec<f32> =
+                                    miss_idx.iter().map(|&i| out[i].0).collect();
+                                Rollout::shadow_score_misses(
+                                    ro,
+                                    &miss_rows,
+                                    self.rpc_row_len,
+                                    live,
+                                    wall,
+                                    &self.metrics,
+                                );
+                            }
                             Ok(None)
                         }
                     }
@@ -820,6 +1206,7 @@ impl Coordinator {
                             miss_cpu_base: 0,
                             span_walls: Vec::new(),
                             delivered: Vec::new(),
+                            shadow: None,
                         });
                     }
                     // Hand the gather buffers back before surfacing.
@@ -850,6 +1237,7 @@ impl Coordinator {
             miss_cpu_base,
             span_walls: Vec::new(),
             delivered,
+            shadow,
         })
     }
 }
@@ -885,6 +1273,9 @@ pub struct BlockPending<'a> {
     /// actually wrote the row's second-stage probability — the rows a
     /// degraded join keeps as `Served::Rpc` instead of falling back.
     delivered: Vec<bool>,
+    /// Guarded-rollout shadow monitor for this (sampled) batch, consumed
+    /// at the join once the misses' live scores are known.
+    shadow: Option<Arc<Rollout>>,
 }
 
 impl BlockPending<'_> {
@@ -1003,6 +1394,19 @@ impl BlockPending<'_> {
             let cpu_share = self.miss_cpu_base + cpu.elapsed_ns() / k as u64;
             self.coord
                 .record_miss_rows(&walls, cpu_share, outcome.req_bytes + outcome.resp_bytes);
+            // Guarded rollout: a sampled batch's misses shadow-score on the
+            // candidate now that their live scores are known.
+            if let Some(ro) = self.shadow.take() {
+                let live: Vec<f32> = self.miss_idx.iter().map(|&i| self.out[i].0).collect();
+                Rollout::shadow_score_misses(
+                    &ro,
+                    &self.miss_rows,
+                    self.coord.rpc_row_len,
+                    live,
+                    final_wall,
+                    &self.coord.metrics,
+                );
+            }
         }
         Ok(std::mem::take(&mut self.out))
     }
@@ -1975,5 +2379,261 @@ mod tests {
             served_rpc |= served == Served::Rpc;
         }
         assert!(served_rpc, "misses must still reach the second stage");
+    }
+
+    // ---- guarded rollout ------------------------------------------------
+
+    /// Embedded stack whose pool handle and flattened incumbent are kept
+    /// out for rollout assertions.
+    fn setup_embedded() -> (
+        crate::tabular::Dataset,
+        Coordinator,
+        Arc<ShardPool>,
+        crate::gbdt::FlatForest,
+    ) {
+        let spec = datagen::preset("aci").unwrap().with_rows(4000);
+        let data = datagen::generate(&spec, 5);
+        let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+        let mut first = LrwBinsModel::train(
+            &data,
+            &ranking.order,
+            &LrwBinsParams {
+                b: 2,
+                n_bin_features: 3,
+                n_infer_features: 6,
+                ..Default::default()
+            },
+        );
+        let route: std::collections::HashSet<u32> =
+            first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+        first.set_route(route);
+        let incumbent = crate::gbdt::train(&data, &crate::gbdt::GbdtParams::quick()).flatten();
+        let pool = Arc::new(ShardPool::new(2));
+        let model = pool.register(incumbent.clone());
+        let metrics = Arc::new(ServeMetrics::new());
+        let coord = Coordinator::new_embedded(
+            ServingTables::from_model(&first),
+            pool.clone(),
+            model,
+            metrics,
+        );
+        (data, coord, pool, incumbent)
+    }
+
+    /// Candidate snapshot: the coordinator's own tables + the incumbent
+    /// forest with every leaf margin shifted by `leaf_shift` (0.0 ⇒ a
+    /// bit-identical candidate).
+    fn candidate_snapshot(
+        coord: &Coordinator,
+        incumbent: &crate::gbdt::FlatForest,
+        leaf_shift: f32,
+    ) -> Snapshot {
+        let mut forest = incumbent.clone();
+        if leaf_shift != 0.0 {
+            for i in 0..forest.value.len() {
+                if forest.feat[i] == crate::gbdt::LEAF {
+                    forest.value[i] += leaf_shift;
+                }
+            }
+        }
+        Snapshot::parse(&Snapshot::write(&coord.tables, &forest)).unwrap()
+    }
+
+    /// A rollout config tuned so tests promote in a handful of ticks.
+    fn fast_rollout_cfg() -> RolloutConfig {
+        RolloutConfig {
+            shadow_sample_permille: 1000,
+            min_rows_compared: 50,
+            min_shadow_ticks: 1,
+            canary_steps_permille: vec![500],
+            step_ticks: 1,
+            error_budget_rows: 1_000_000,
+            ..Default::default()
+        }
+    }
+
+    /// A bit-identical candidate walks Shadow → Canary → Promoted; the
+    /// served bits during Shadow are exactly the incumbent's, and finalize
+    /// installs the candidate as the pool's live version.
+    #[test]
+    fn rollout_good_candidate_promotes_with_identical_shadow_bits() {
+        let (data, mut coord, _pool, incumbent) = setup_embedded();
+        let baseline: Vec<(f32, Served)> = (0..300)
+            .map(|r| coord.predict(&data.row(r)).unwrap())
+            .collect();
+        let snap = candidate_snapshot(&coord, &incumbent, 0.0);
+        let ro = coord.begin_rollout(&snap, fast_rollout_cfg()).unwrap();
+        assert_eq!(ro.phase(), RolloutPhase::Shadow);
+
+        // Shadow: every request sampled; served bits must not move.
+        for (r, base) in baseline.iter().enumerate() {
+            let (p, served) = coord.predict(&data.row(r)).unwrap();
+            assert_eq!(p.to_bits(), base.0.to_bits(), "row {r} bits moved in shadow");
+            assert_eq!(served, base.1, "row {r} served path moved in shadow");
+        }
+        assert!(ro.stats.rows_compared.load(Ordering::Relaxed) >= 300);
+        assert_eq!(ro.stats.disagreements.load(Ordering::Relaxed), 0);
+
+        coord.rollout_tick(false);
+        assert_eq!(ro.phase(), RolloutPhase::Canary);
+        assert_eq!(ro.canary_permille(), 500);
+        for r in 0..200 {
+            let (p, _) = coord.predict(&data.row(r)).unwrap();
+            // Candidate == incumbent, so even canary-served rows are
+            // bit-identical.
+            assert_eq!(p.to_bits(), baseline[r].0.to_bits(), "row {r} in canary");
+        }
+        assert!(
+            ro.stats.canary_rows.load(Ordering::Relaxed) > 0,
+            "a 50% canary over 200 requests must have routed some"
+        );
+        coord.rollout_tick(false);
+        assert_eq!(ro.phase(), RolloutPhase::Promoted);
+        assert_eq!(ro.canary_permille(), 1000);
+        assert_eq!(coord.metrics.rollout_rolled_back.load(Ordering::Relaxed), 0);
+
+        let version = coord.finalize_rollout().unwrap();
+        assert!(version > 0, "embedded promotion must bump the pool version");
+        assert!(coord.rollout().is_none(), "finalize retires the slot");
+        for (r, base) in baseline.iter().enumerate().take(100) {
+            let (p, _) = coord.predict(&data.row(r)).unwrap();
+            assert_eq!(p.to_bits(), base.0.to_bits(), "row {r} after promotion");
+        }
+    }
+
+    /// A candidate whose leaves are shifted past the score-delta guard
+    /// rolls back automatically during Shadow — no traffic ever reaches it
+    /// and the incumbent keeps serving.
+    #[test]
+    fn rollout_divergent_candidate_rolls_back_in_shadow() {
+        let (data, coord, _pool, incumbent) = setup_embedded();
+        let snap = candidate_snapshot(&coord, &incumbent, 4.0);
+        let cfg = RolloutConfig {
+            max_score_delta: 0.2,
+            ..fast_rollout_cfg()
+        };
+        let ro = coord.begin_rollout(&snap, cfg).unwrap();
+
+        // Shadow scoring drains through the pool's idle slots, so the trip
+        // is asynchronous — keep serving until it lands (bounded).
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut r = 0usize;
+        while ro.phase() == RolloutPhase::Shadow && Instant::now() < deadline {
+            coord.predict(&data.row(r % data.n_rows())).unwrap();
+            r += 1;
+            std::thread::yield_now();
+        }
+        assert_eq!(
+            ro.phase(),
+            RolloutPhase::RolledBack,
+            "divergent candidate must auto-roll back (served {r} rows)"
+        );
+        assert_eq!(ro.rollback_reason(), Some(RollbackReason::ScoreDelta));
+        assert_eq!(coord.metrics.rollout_rolled_back.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            ro.stats.canary_rows.load(Ordering::Relaxed),
+            0,
+            "a shadow-phase rollback must never have served canary traffic"
+        );
+        // Incumbent serving is unaffected.
+        for r in 0..50 {
+            let (p, served) = coord.predict(&data.row(r)).unwrap();
+            assert!((0.0..=1.0).contains(&p));
+            assert_ne!(served, Served::Degraded);
+        }
+    }
+
+    /// With a zero error budget the canary never claims a batch: rows are
+    /// counted `budget_held_rows` and served by the incumbent — held, not
+    /// shed.
+    #[test]
+    fn rollout_exhausted_budget_keeps_traffic_on_incumbent() {
+        let (data, coord, _pool, incumbent) = setup_embedded();
+        let snap = candidate_snapshot(&coord, &incumbent, 0.0);
+        let cfg = RolloutConfig {
+            error_budget_rows: 0,
+            ..fast_rollout_cfg()
+        };
+        let ro = coord.begin_rollout(&snap, cfg).unwrap();
+        for r in 0..100 {
+            coord.predict(&data.row(r)).unwrap();
+        }
+        coord.rollout_tick(false);
+        assert_eq!(ro.phase(), RolloutPhase::Canary);
+        for r in 0..100 {
+            let (p, _) = coord.predict(&data.row(r)).unwrap();
+            assert!((0.0..=1.0).contains(&p));
+        }
+        assert_eq!(
+            ro.stats.canary_rows.load(Ordering::Relaxed),
+            0,
+            "zero budget must keep every row on the incumbent"
+        );
+        assert!(
+            ro.stats.budget_held_rows.load(Ordering::Relaxed) > 0,
+            "held rows must be counted"
+        );
+    }
+
+    /// One candidate at a time: begin while Shadow/Canary is active is
+    /// refused; after end_rollout the slot is free again.
+    #[test]
+    fn rollout_slot_exclusive_until_ended() {
+        let (_data, coord, _pool, incumbent) = setup_embedded();
+        let snap = candidate_snapshot(&coord, &incumbent, 0.0);
+        let ro = coord.begin_rollout(&snap, fast_rollout_cfg()).unwrap();
+        assert!(coord.begin_rollout(&snap, fast_rollout_cfg()).is_err());
+        let ended = coord.end_rollout().expect("active rollout");
+        assert!(Arc::ptr_eq(&ro, &ended));
+        assert!(coord.rollout().is_none());
+        coord.begin_rollout(&snap, fast_rollout_cfg()).unwrap();
+    }
+
+    /// RPC-mode coordinators run the candidate's second stage locally
+    /// (no pool): the same lifecycle promotes, and finalize reports
+    /// version 0 as `reload` does.
+    #[test]
+    fn rollout_rpc_mode_local_candidate_promotes() {
+        let (data, mut coord, _server) = setup();
+        let second = crate::gbdt::train(&data, &crate::gbdt::GbdtParams::quick());
+        let snap =
+            Snapshot::parse(&Snapshot::write(&coord.tables, &second.flatten())).unwrap();
+        let ro = coord.begin_rollout(&snap, fast_rollout_cfg()).unwrap();
+        for r in 0..200 {
+            coord.predict(&data.row(r)).unwrap();
+        }
+        assert!(ro.stats.rows_compared.load(Ordering::Relaxed) >= 200);
+        coord.rollout_tick(false);
+        assert_eq!(ro.phase(), RolloutPhase::Canary);
+        for r in 0..200 {
+            let (p, _) = coord.predict(&data.row(r)).unwrap();
+            assert!((0.0..=1.0).contains(&p));
+        }
+        assert!(ro.stats.canary_rows.load(Ordering::Relaxed) > 0);
+        coord.rollout_tick(false);
+        assert_eq!(ro.phase(), RolloutPhase::Promoted);
+        assert_eq!(coord.finalize_rollout().unwrap(), 0);
+        assert_eq!(coord.metrics.rollout_rolled_back.load(Ordering::Relaxed), 0);
+    }
+
+    /// Escalated ticks freeze the ramp: the phase and permille hold, and
+    /// every freeze is counted.
+    #[test]
+    fn rollout_ramp_freezes_while_escalated() {
+        let (data, coord, _pool, incumbent) = setup_embedded();
+        let snap = candidate_snapshot(&coord, &incumbent, 0.0);
+        let ro = coord.begin_rollout(&snap, fast_rollout_cfg()).unwrap();
+        for r in 0..100 {
+            coord.predict(&data.row(r)).unwrap();
+        }
+        // Dwell + compared thresholds are met, but escalated ticks must
+        // not advance Shadow → Canary.
+        for _ in 0..5 {
+            coord.rollout_tick(true);
+        }
+        assert_eq!(ro.phase(), RolloutPhase::Shadow);
+        assert_eq!(ro.stats.ramp_freezes.load(Ordering::Relaxed), 5);
+        coord.rollout_tick(false);
+        assert_eq!(ro.phase(), RolloutPhase::Canary);
     }
 }

@@ -1,0 +1,639 @@
+//! Guarded model rollout: shadow scoring, canary ramp, and
+//! divergence-triggered automatic rollback.
+//!
+//! The state machine a candidate snapshot walks before it may replace the
+//! incumbent (see the crate docs' "Model rollout" section for the full
+//! contract):
+//!
+//! ```text
+//! Idle ──begin_rollout──▶ Shadow ──▶ Canary(p%) ──▶ Promoted
+//!                            │            │
+//!                            └── guard ───┴──▶ RolledBack{reason}
+//! ```
+//!
+//! *Idle* is the coordinator's normal state — no [`Rollout`] object exists.
+//! In **Shadow**, a sampled fraction of served batches is re-evaluated on
+//! the candidate (stage-1 tables inline, second-stage forest on the shard
+//! pool's strictly-lower-priority shadow queue) while served bits stay
+//! bit-identical to pre-rollout; the divergence monitor accumulates routing
+//! disagreement, score-delta histograms, and shadow-vs-live latency in
+//! [`RolloutStats`]. In **Canary**, a deterministic hash of the request's
+//! rollout key routes p‰ of real traffic to the candidate — whole batches
+//! only, never mixing versions within a batch — with the ramp advanced by
+//! SLO-controller ticks and frozen whenever the controller is escalated.
+//! Any guard trip ([`RollbackReason`]) flips the phase to **RolledBack**:
+//! routing reverts on the very next request, and the error budget bounds
+//! how many rows the candidate may ever have answered.
+
+use crate::gbdt::{FlatForest, ForestScratch};
+use crate::lrwbins::ServingTables;
+use crate::runtime::{ModelId, ShadowJob, ShadowOutcome, ShardPool, VersionLease};
+use crate::telemetry::{RolloutStats, ServeMetrics};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Rollout phase. `Idle` is represented by the ABSENCE of a rollout; a
+/// constructed [`Rollout`] starts in `Shadow`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RolloutPhase {
+    Shadow = 1,
+    Canary = 2,
+    Promoted = 3,
+    RolledBack = 4,
+}
+
+/// Why a rollout was automatically rolled back — stored on the rollout and
+/// counted in [`ServeMetrics::rollout_rolled_back`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RollbackReason {
+    /// Stage-1 routing disagreement rate exceeded the bound (after the
+    /// minimum compared-row count armed the guard).
+    Disagreement = 1,
+    /// A single |candidate − live| score delta exceeded the bound.
+    ScoreDelta = 2,
+    /// Shadow-scoring p99 exceeded the configured multiple of the live p99.
+    ShadowLatency = 3,
+    /// Canary batch p99 exceeded the absolute bound.
+    CanaryLatency = 4,
+    /// The candidate panicked or failed while scoring (shadow or canary) —
+    /// maximal divergence, tripped immediately.
+    CandidateFailure = 5,
+}
+
+impl RollbackReason {
+    fn from_u8(v: u8) -> Option<RollbackReason> {
+        match v {
+            1 => Some(RollbackReason::Disagreement),
+            2 => Some(RollbackReason::ScoreDelta),
+            3 => Some(RollbackReason::ShadowLatency),
+            4 => Some(RollbackReason::CanaryLatency),
+            5 => Some(RollbackReason::CandidateFailure),
+            _ => None,
+        }
+    }
+}
+
+/// Rollout policy knobs (`ServeConfig::rollout_config`).
+#[derive(Clone, Debug)]
+pub struct RolloutConfig {
+    /// Fraction of served (non-canary) batches sampled into the shadow
+    /// comparison, in permille. 0 disables shadow sampling (the rollout
+    /// then never arms its divergence guards — only useful for drills).
+    pub shadow_sample_permille: u32,
+    /// Compared rows required before the disagreement-rate guard arms AND
+    /// before Shadow may hand over to Canary.
+    pub min_rows_compared: u64,
+    /// Stage-1 routing disagreement-rate bound (fraction of compared rows).
+    pub max_disagreement: f64,
+    /// Bound on any single |candidate − live| score delta (probability
+    /// scale, stage-1 prior and second-stage scores alike).
+    pub max_score_delta: f64,
+    /// Controller ticks that must elapse in Shadow before Canary.
+    pub min_shadow_ticks: u32,
+    /// Canary ramp schedule in permille of traffic, e.g. `[50, 200, 500]`;
+    /// after the last step the rollout promotes (1000‰).
+    pub canary_steps_permille: Vec<u32>,
+    /// Unescalated controller ticks per ramp step.
+    pub step_ticks: u32,
+    /// Hard pre-promotion cap on rows the candidate may answer: a canary
+    /// batch that would exceed it is NOT routed (served by the incumbent,
+    /// counted in [`RolloutStats::budget_held_rows`]).
+    pub error_budget_rows: u64,
+    /// Absolute canary-batch p99 bound, µs (0 disables the guard).
+    pub canary_p99_bound_us: u64,
+    /// Shadow-vs-live p99 ratio bound (0.0 disables the guard).
+    pub max_shadow_latency_ratio: f64,
+    /// Shed horizon for queued shadow jobs.
+    pub shadow_timeout: Duration,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> RolloutConfig {
+        RolloutConfig {
+            shadow_sample_permille: 250,
+            min_rows_compared: 200,
+            max_disagreement: 0.02,
+            max_score_delta: 0.25,
+            min_shadow_ticks: 2,
+            canary_steps_permille: vec![50, 200, 500],
+            step_ticks: 2,
+            error_budget_rows: 10_000,
+            canary_p99_bound_us: 0,
+            max_shadow_latency_ratio: 0.0,
+            shadow_timeout: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Minimum latency samples before a p99-based guard may trip — a p99 over
+/// a handful of samples is noise, not evidence.
+const LATENCY_GUARD_MIN_SAMPLES: u64 = 32;
+
+/// splitmix64 — the deterministic canary router. The same rollout key maps
+/// to the same side of the p‰ threshold on every replay.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Where the candidate's second-stage scores come from.
+pub(crate) enum CandidateStage2 {
+    /// Embedded mode: the candidate forest is STAGED in the shared shard
+    /// pool (versioned next to the incumbent) and pinned by a lease —
+    /// canary batches serve it via `predict_spans_version`, shadow rows
+    /// ride the pool's lowest-priority shadow queue.
+    Pool {
+        pool: Arc<ShardPool>,
+        model: ModelId,
+        version: u32,
+        /// Keeps the staged version resolvable across racing swaps and
+        /// past an `unstage` for in-flight work; released when the
+        /// rollout drops.
+        _lease: VersionLease,
+    },
+    /// RPC (or stage-1-only) mode: the remote service knows nothing of the
+    /// candidate, so its forest is scored IN-PROCESS from the snapshot —
+    /// zero wire bytes, serialized on a private scratch.
+    Local {
+        forest: Arc<FlatForest>,
+        scratch: Mutex<ForestScratch>,
+    },
+}
+
+/// One guarded rollout of one candidate snapshot. Created by
+/// `Coordinator::begin_rollout`; all state is interior-mutable so the
+/// coordinator drives it through `&self` under live traffic.
+pub struct Rollout {
+    pub(crate) cfg: RolloutConfig,
+    /// Candidate stage-1 tables (same feature width as the incumbent,
+    /// enforced at `begin_rollout`).
+    pub(crate) tables: ServingTables,
+    pub(crate) stage2: CandidateStage2,
+    phase: AtomicU8,
+    reason: AtomicU8,
+    /// Live canary routing threshold, permille.
+    permille: AtomicU32,
+    /// Index into `cfg.canary_steps_permille`.
+    step: AtomicU32,
+    ticks_in_step: AtomicU32,
+    shadow_ticks: AtomicU32,
+    /// Rows the candidate has answered pre-promotion (the error budget).
+    budget_used: AtomicU64,
+    /// Batch arrival counter feeding the shadow sampling hash.
+    sample_seq: AtomicU64,
+    /// Fallback canary key for requests that carry none.
+    key_seq: AtomicU64,
+    /// The divergence monitor's accumulators.
+    pub stats: RolloutStats,
+}
+
+impl Rollout {
+    pub(crate) fn new(cfg: RolloutConfig, tables: ServingTables, stage2: CandidateStage2) -> Rollout {
+        Rollout {
+            cfg,
+            tables,
+            stage2,
+            phase: AtomicU8::new(RolloutPhase::Shadow as u8),
+            reason: AtomicU8::new(0),
+            permille: AtomicU32::new(0),
+            step: AtomicU32::new(0),
+            ticks_in_step: AtomicU32::new(0),
+            shadow_ticks: AtomicU32::new(0),
+            budget_used: AtomicU64::new(0),
+            sample_seq: AtomicU64::new(0),
+            key_seq: AtomicU64::new(0),
+            stats: RolloutStats::new(),
+        }
+    }
+
+    pub fn phase(&self) -> RolloutPhase {
+        match self.phase.load(Ordering::Acquire) {
+            1 => RolloutPhase::Shadow,
+            2 => RolloutPhase::Canary,
+            3 => RolloutPhase::Promoted,
+            _ => RolloutPhase::RolledBack,
+        }
+    }
+
+    /// The typed rollback reason, once rolled back.
+    pub fn rollback_reason(&self) -> Option<RollbackReason> {
+        RollbackReason::from_u8(self.reason.load(Ordering::Acquire))
+    }
+
+    /// Current canary routing fraction, permille of traffic.
+    pub fn canary_permille(&self) -> u32 {
+        self.permille.load(Ordering::Relaxed)
+    }
+
+    /// The staged candidate's pool-side version (0 for the local path).
+    pub fn candidate_version(&self) -> u32 {
+        match &self.stage2 {
+            CandidateStage2::Pool { version, .. } => *version,
+            CandidateStage2::Local { .. } => 0,
+        }
+    }
+
+    /// Rows the candidate has answered so far against the error budget.
+    pub fn budget_used(&self) -> u64 {
+        self.budget_used.load(Ordering::Relaxed)
+    }
+
+    /// One SLO-controller tick. `escalated` (brownout active or admission
+    /// throttled) freezes the ramp: an overloaded system must not widen a
+    /// model experiment. Unescalated ticks advance Shadow → Canary (once
+    /// the minimum dwell AND compared-row count are met) and the canary
+    /// ramp step-by-step to promotion.
+    pub fn tick(&self, escalated: bool) {
+        self.stats.ticks.fetch_add(1, Ordering::Relaxed);
+        let phase = self.phase();
+        if !matches!(phase, RolloutPhase::Shadow | RolloutPhase::Canary) {
+            return;
+        }
+        if escalated {
+            self.stats.ramp_freezes.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        match phase {
+            RolloutPhase::Shadow => {
+                let dwelled = self.shadow_ticks.fetch_add(1, Ordering::Relaxed) + 1;
+                let compared = self.stats.rows_compared.load(Ordering::Relaxed);
+                if dwelled >= self.cfg.min_shadow_ticks && compared >= self.cfg.min_rows_compared {
+                    let p = self.cfg.canary_steps_permille.first().copied().unwrap_or(1000);
+                    // CAS so a racing guard trip wins over the transition.
+                    if self
+                        .phase
+                        .compare_exchange(
+                            RolloutPhase::Shadow as u8,
+                            RolloutPhase::Canary as u8,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+                    {
+                        self.permille.store(p, Ordering::Relaxed);
+                    }
+                }
+            }
+            RolloutPhase::Canary => {
+                let t = self.ticks_in_step.fetch_add(1, Ordering::Relaxed) + 1;
+                if t < self.cfg.step_ticks {
+                    return;
+                }
+                self.ticks_in_step.store(0, Ordering::Relaxed);
+                let next = self.step.load(Ordering::Relaxed) + 1;
+                if (next as usize) < self.cfg.canary_steps_permille.len() {
+                    self.step.store(next, Ordering::Relaxed);
+                    self.permille.store(
+                        self.cfg.canary_steps_permille[next as usize],
+                        Ordering::Relaxed,
+                    );
+                } else if self
+                    .phase
+                    .compare_exchange(
+                        RolloutPhase::Canary as u8,
+                        RolloutPhase::Promoted as u8,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    self.permille.store(1000, Ordering::Relaxed);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Deterministic canary routing: does `key` fall in the candidate's
+    /// current p‰ slice? Replayable — the same key always lands on the
+    /// same side for a given ramp step.
+    pub fn routes(&self, key: u64) -> bool {
+        if !matches!(self.phase(), RolloutPhase::Canary | RolloutPhase::Promoted) {
+            return false;
+        }
+        let p = self.permille.load(Ordering::Relaxed) as u64;
+        p > 0 && splitmix64(key) % 1000 < p
+    }
+
+    /// The canary key for a request that carries none: an internal
+    /// sequence, still deterministic per arrival order.
+    pub(crate) fn next_key(&self) -> u64 {
+        // Offset so internal keys don't collide with common explicit ids.
+        0x5EED_0000_0000_0000 ^ self.key_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Reserve `n` rows of error budget before routing a canary batch.
+    /// Post-promotion there is no budget (the candidate IS the model).
+    /// Refusal counts `budget_held_rows` — the batch then serves the
+    /// incumbent, it is not shed.
+    pub(crate) fn try_reserve_budget(&self, n: u64) -> bool {
+        if self.phase() == RolloutPhase::Promoted {
+            return true;
+        }
+        let mut cur = self.budget_used.load(Ordering::Relaxed);
+        loop {
+            if cur + n > self.cfg.error_budget_rows {
+                self.stats.budget_held_rows.fetch_add(n, Ordering::Relaxed);
+                return false;
+            }
+            match self.budget_used.compare_exchange_weak(
+                cur,
+                cur + n,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Return a reservation the candidate did not end up serving.
+    pub(crate) fn release_budget(&self, n: u64) {
+        self.budget_used.fetch_sub(n, Ordering::AcqRel);
+    }
+
+    /// Should this (non-canary) batch be sampled into the shadow
+    /// comparison? Deterministic in arrival order; only Shadow and Canary
+    /// phases monitor.
+    pub(crate) fn samples_shadow(&self) -> bool {
+        if !matches!(self.phase(), RolloutPhase::Shadow | RolloutPhase::Canary) {
+            return false;
+        }
+        let p = self.cfg.shadow_sample_permille as u64;
+        if p == 0 {
+            return false;
+        }
+        let seq = self.sample_seq.fetch_add(1, Ordering::Relaxed);
+        splitmix64(seq ^ 0x5A5A_5A5A_5A5A_5A5A) % 1000 < p
+    }
+
+    /// Trip a guard: instant rollback. Only Shadow and Canary can trip —
+    /// the CAS loop makes the first tripping guard the recorded reason and
+    /// promotion/rollback races resolve to whoever got there first.
+    /// Routing reverts on the next request (every canary check reads the
+    /// phase); the staged candidate is unstaged from the pool (the lease
+    /// keeps it resolvable for batches already in flight).
+    pub(crate) fn trip(&self, reason: RollbackReason, metrics: &ServeMetrics) {
+        let mut cur = self.phase.load(Ordering::Acquire);
+        loop {
+            if cur != RolloutPhase::Shadow as u8 && cur != RolloutPhase::Canary as u8 {
+                return; // already promoted or rolled back
+            }
+            match self.phase.compare_exchange_weak(
+                cur,
+                RolloutPhase::RolledBack as u8,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        self.reason.store(reason as u8, Ordering::Release);
+        self.permille.store(0, Ordering::Relaxed);
+        metrics.rollout_rolled_back.fetch_add(1, Ordering::Relaxed);
+        if let CandidateStage2::Pool { pool, model, .. } = &self.stage2 {
+            pool.unstage(*model);
+        }
+    }
+
+    /// Compare one row's stage-1 decision between incumbent and candidate
+    /// tables; accumulate and check the routing guards.
+    pub(crate) fn compare_stage1_row(
+        &self,
+        live: &ServingTables,
+        row: &[f32],
+        metrics: &ServeMetrics,
+    ) {
+        let (p_live, routed_live) = live.evaluate(row);
+        let (p_cand, routed_cand) = self.tables.evaluate(row);
+        let compared = self.stats.rows_compared.fetch_add(1, Ordering::Relaxed) + 1;
+        if routed_live != routed_cand {
+            self.stats.disagreements.fetch_add(1, Ordering::Relaxed);
+        }
+        self.note_delta(p_cand - p_live, metrics);
+        if compared >= self.cfg.min_rows_compared
+            && self.stats.disagreement_rate() > self.cfg.max_disagreement
+        {
+            self.trip(RollbackReason::Disagreement, metrics);
+        }
+    }
+
+    /// Record one |candidate − live| score delta and check the delta guard.
+    /// A non-finite delta (a candidate emitting NaN/∞) is an automatic
+    /// violation — `NaN > bound` is false, so it must not ride the
+    /// comparison.
+    pub(crate) fn note_delta(&self, delta: f32, metrics: &ServeMetrics) {
+        self.stats.note_score_delta(delta);
+        let d = f64::from(delta.abs());
+        if !d.is_finite() || d > self.cfg.max_score_delta {
+            self.trip(RollbackReason::ScoreDelta, metrics);
+        }
+    }
+
+    /// Check the shadow-vs-live latency-ratio guard (needs enough samples
+    /// of BOTH distributions to mean anything).
+    pub(crate) fn check_shadow_latency(&self, metrics: &ServeMetrics) {
+        let ratio = self.cfg.max_shadow_latency_ratio;
+        if ratio <= 0.0 {
+            return;
+        }
+        if self.stats.shadow_exec.count() < LATENCY_GUARD_MIN_SAMPLES
+            || self.stats.live_exec.count() < LATENCY_GUARD_MIN_SAMPLES
+        {
+            return;
+        }
+        let shadow_p99 = self.stats.shadow_exec.quantile_ns(0.99) as f64;
+        let live_p99 = (self.stats.live_exec.quantile_ns(0.99) as f64).max(1.0);
+        if shadow_p99 / live_p99 > ratio {
+            self.trip(RollbackReason::ShadowLatency, metrics);
+        }
+    }
+
+    /// Check the absolute canary p99 guard.
+    pub(crate) fn check_canary_latency(&self, metrics: &ServeMetrics) {
+        let bound_us = self.cfg.canary_p99_bound_us;
+        if bound_us == 0 || self.stats.canary_exec.count() < LATENCY_GUARD_MIN_SAMPLES {
+            return;
+        }
+        if self.stats.canary_exec.quantile_ns(0.99) > bound_us.saturating_mul(1000) {
+            self.trip(RollbackReason::CanaryLatency, metrics);
+        }
+    }
+
+    /// Score `n` rows on the candidate's second stage, blocking — the
+    /// canary serve path. `rows` is padded to `row_len`. Errors mean the
+    /// candidate failed (panic or unresolvable version), never the
+    /// incumbent.
+    pub(crate) fn score_candidate(
+        &self,
+        rows: &[f32],
+        row_len: usize,
+        out: &mut [f32],
+        deadline: Option<Instant>,
+    ) -> Result<(), String> {
+        match &self.stage2 {
+            CandidateStage2::Pool { pool, model, version, .. } => {
+                let failed = pool.predict_spans_version(*model, *version, rows, row_len, out, deadline);
+                if failed.is_empty() {
+                    Ok(())
+                } else {
+                    Err(format!("candidate failed row spans {failed:?}"))
+                }
+            }
+            CandidateStage2::Local { forest, scratch } => {
+                let mut guard = scratch.lock().unwrap_or_else(PoisonError::into_inner);
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    forest.predict_flat_rows(rows, row_len, &mut guard, out);
+                }));
+                if r.is_err() {
+                    // The panic may have left the scratch mid-traversal.
+                    *guard = ForestScratch::default();
+                    return Err("candidate panicked while scoring".into());
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Shadow-score a sampled batch's route-missed rows on the candidate's
+    /// second stage and compare against the live scores. Embedded mode
+    /// enqueues a [`ShadowJob`] on the pool's lowest-priority queue (shed
+    /// first under pressure); the local path scores inline. Either way the
+    /// rows are billed to the shadow buckets, never to real traffic, and
+    /// `shadow_rows + shadow_shed_rows` accounts every row passed in.
+    pub(crate) fn shadow_score_misses(
+        this: &Arc<Rollout>,
+        rows: &[f32],
+        row_len: usize,
+        live_probs: Vec<f32>,
+        live_wall_ns: u64,
+        metrics: &Arc<ServeMetrics>,
+    ) {
+        let n = live_probs.len() as u64;
+        if n == 0 {
+            return;
+        }
+        match &this.stage2 {
+            CandidateStage2::Pool { pool, model, version, .. } => {
+                let ro = this.clone();
+                let m = metrics.clone();
+                let submitted = Instant::now();
+                let deadline = Some(submitted + this.cfg.shadow_timeout);
+                let job = ShadowJob::new(
+                    *model,
+                    *version,
+                    rows.to_vec(),
+                    row_len,
+                    deadline,
+                    move |outcome| {
+                        ro.absorb_shadow_outcome(outcome, &live_probs, live_wall_ns, submitted, &m);
+                    },
+                );
+                // A refused submit already delivered `Shed` through the
+                // job's Drop — the callback accounted it.
+                let _ = pool.submit_shadow(job);
+            }
+            CandidateStage2::Local { .. } => {
+                let t0 = Instant::now();
+                let mut out = vec![0f32; live_probs.len()];
+                let outcome = match this.score_candidate(rows, row_len, &mut out, None) {
+                    Ok(()) => ShadowOutcome::Scored(out),
+                    Err(_) => ShadowOutcome::Failed,
+                };
+                this.absorb_shadow_outcome(outcome, &live_probs, live_wall_ns, t0, metrics);
+            }
+        }
+    }
+
+    /// Fold one shadow outcome into the monitor: scored rows compare and
+    /// feed the guards; shed AND failed rows bill as shed (they produced
+    /// no comparison), with failure additionally tripping the
+    /// candidate-failure guard.
+    fn absorb_shadow_outcome(
+        &self,
+        outcome: ShadowOutcome,
+        live_probs: &[f32],
+        live_wall_ns: u64,
+        submitted: Instant,
+        metrics: &ServeMetrics,
+    ) {
+        let n = live_probs.len() as u64;
+        match outcome {
+            ShadowOutcome::Scored(scores) => {
+                self.stats.shadow_rows.fetch_add(n, Ordering::Relaxed);
+                metrics.shadow_rows.fetch_add(n, Ordering::Relaxed);
+                self.stats.shadow_exec.record_duration(submitted.elapsed());
+                self.stats.live_exec.record(live_wall_ns);
+                for (cand, live) in scores.iter().zip(live_probs) {
+                    self.note_delta(cand - live, metrics);
+                }
+                self.check_shadow_latency(metrics);
+            }
+            ShadowOutcome::Shed => {
+                self.stats.shadow_shed_rows.fetch_add(n, Ordering::Relaxed);
+                metrics.shadow_shed_rows.fetch_add(n, Ordering::Relaxed);
+            }
+            ShadowOutcome::Failed => {
+                self.stats.shadow_shed_rows.fetch_add(n, Ordering::Relaxed);
+                metrics.shadow_shed_rows.fetch_add(n, Ordering::Relaxed);
+                self.stats.candidate_failures.fetch_add(1, Ordering::Relaxed);
+                self.trip(RollbackReason::CandidateFailure, metrics);
+            }
+        }
+    }
+
+    /// Book a successfully served canary batch.
+    pub(crate) fn note_canary_batch(&self, rows: u64, wall_ns: u64, metrics: &ServeMetrics) {
+        self.stats.canary_batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.canary_rows.fetch_add(rows, Ordering::Relaxed);
+        metrics.canary_rows.fetch_add(rows, Ordering::Relaxed);
+        self.stats.canary_exec.record(wall_ns);
+        self.check_canary_latency(metrics);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_routing_is_deterministic_and_roughly_uniform() {
+        // Same key ⇒ same slice membership, every time.
+        for key in [0u64, 1, 42, u64::MAX, 0xDEAD_BEEF] {
+            assert_eq!(splitmix64(key), splitmix64(key));
+        }
+        // ~p‰ of sequential keys land under the threshold.
+        for permille in [10u64, 100, 500] {
+            let hits = (0..100_000u64)
+                .filter(|&k| splitmix64(k) % 1000 < permille)
+                .count() as f64;
+            let expect = 100.0 * permille as f64;
+            assert!(
+                (hits - expect).abs() < expect * 0.15 + 100.0,
+                "permille={permille}: {hits} hits, expected ≈{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn rollback_reason_roundtrips() {
+        for r in [
+            RollbackReason::Disagreement,
+            RollbackReason::ScoreDelta,
+            RollbackReason::ShadowLatency,
+            RollbackReason::CanaryLatency,
+            RollbackReason::CandidateFailure,
+        ] {
+            assert_eq!(RollbackReason::from_u8(r as u8), Some(r));
+        }
+        assert_eq!(RollbackReason::from_u8(0), None);
+        assert_eq!(RollbackReason::from_u8(9), None);
+    }
+}

@@ -210,6 +210,115 @@ pub fn build(cfg: &StackConfig) -> Result<Stack> {
     })
 }
 
+/// Outcome of one scripted guarded rollout (`lrwbins rollout`).
+pub struct RolloutRun {
+    /// True if the candidate walked Shadow → Canary → Promoted (and was
+    /// finalized as the incumbent); false means a guard rolled it back.
+    pub promoted: bool,
+    /// The typed rollback reason, when a guard tripped.
+    pub reason: Option<crate::coordinator::RollbackReason>,
+    /// Pool-side version now serving (promoted runs only; 0 otherwise).
+    pub version: u32,
+    /// The retired rollout, for stats inspection
+    /// ([`RolloutStats`](crate::telemetry::RolloutStats)).
+    pub rollout: Arc<crate::coordinator::Rollout>,
+}
+
+/// Build an EMBEDDED stack (shared shard pool, no RPC hop) and walk one
+/// candidate through the guarded rollout state machine under live test
+/// traffic — Shadow → Canary → Promoted, or automatic rollback. The
+/// candidate is the incumbent forest with every leaf shifted by
+/// `leaf_shift` (`0.0` = a bit-identical candidate, the good-rollout
+/// drill; a large shift trips the score-delta guard). `requests` bounds
+/// the traffic driven; the rollout is ticked (unescalated) every 64
+/// requests, standing in for the SLO controller's cadence.
+pub fn run_rollout(
+    cfg: &StackConfig,
+    rcfg: crate::coordinator::RolloutConfig,
+    leaf_shift: f32,
+    requests: usize,
+) -> Result<RolloutRun> {
+    use crate::coordinator::RolloutPhase;
+    let Some(mut spec) = datagen::preset(&cfg.dataset) else {
+        bail!(
+            "unknown dataset '{}'; presets: {}",
+            cfg.dataset,
+            datagen::PRESET_NAMES.join(", ")
+        );
+    };
+    if cfg.rows > 0 {
+        spec = spec.with_rows(cfg.rows);
+    }
+    let data = datagen::generate(&spec, cfg.seed);
+    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xABCD);
+    let s = split::three_way_split(&data, (0.6, 0.2, 0.2), &mut rng);
+    let pipeline = automl::run_pipeline(&s.train, &s.val, &cfg.pipeline);
+    let tables = ServingTables::from_model(&pipeline.first);
+    let incumbent = pipeline.second.flatten();
+
+    let pool = Arc::new(crate::runtime::ShardPool::new(2));
+    let model = pool.register(incumbent.clone());
+    let mut coord =
+        Coordinator::new_embedded(tables, pool, model, Arc::new(ServeMetrics::new()));
+
+    let mut cand = incumbent;
+    if leaf_shift != 0.0 {
+        for (i, v) in cand.value.iter_mut().enumerate() {
+            if cand.feat[i] == crate::gbdt::LEAF {
+                *v += leaf_shift;
+            }
+        }
+    }
+    let snap =
+        crate::snapshot::Snapshot::parse(&crate::snapshot::Snapshot::write(&coord.tables, &cand))
+            .map_err(|e| anyhow::anyhow!("candidate snapshot: {e}"))?;
+    let ro = coord
+        .begin_rollout(&snap, rcfg)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // Serve held-out traffic in small batches until the rollout reaches a
+    // terminal phase or the request budget is spent.
+    let batch = 16usize;
+    let mut served = 0usize;
+    let mut r = 0usize;
+    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(batch);
+    while served < requests {
+        rows.clear();
+        for _ in 0..batch {
+            rows.push(s.test.row(r % s.test.n_rows()));
+            r += 1;
+        }
+        coord
+            .predict_batch(&rows)
+            .map_err(|e| anyhow::anyhow!("serving during rollout: {e}"))?;
+        served += batch;
+        if served % 64 == 0 {
+            coord.rollout_tick(false);
+        }
+        if matches!(ro.phase(), RolloutPhase::Promoted | RolloutPhase::RolledBack) {
+            break;
+        }
+    }
+
+    let (promoted, version) = if ro.phase() == RolloutPhase::Promoted {
+        (
+            true,
+            coord
+                .finalize_rollout()
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        )
+    } else {
+        coord.end_rollout();
+        (false, 0)
+    };
+    Ok(RolloutRun {
+        promoted,
+        reason: ro.rollback_reason(),
+        version,
+        rollout: ro,
+    })
+}
+
 /// Dump a built stack's trained models (stage-1 tables + flattened
 /// second-stage forest) as one binary snapshot — the artifact that
 /// `lrwbins predict --snapshot`, `ServeConfig::snapshot_path` and

@@ -217,6 +217,49 @@
 //! equals rows submitted (chaos and overload batteries assert this
 //! exactly).
 //!
+//! ## Model rollout
+//!
+//! Hot-swap answers *how* to install a model; the rollout subsystem
+//! ([`coordinator::Rollout`]) answers *whether it is safe to*. A candidate
+//! snapshot walks a guarded state machine, driven by
+//! [`coordinator::Coordinator::begin_rollout`] and ticked by the SLO
+//! controller's cadence ([`coordinator::Coordinator::rollout_tick`]):
+//!
+//! ```text
+//! Idle ──begin_rollout──▶ Shadow ──▶ Canary(p‰ ramp) ──▶ Promoted
+//!                            │             │
+//!                            └── guard ────┴──▶ RolledBack{reason}
+//! ```
+//!
+//! * **Shadow** — a deterministic sample of admitted batches is re-scored
+//!   on the candidate at **strictly lower priority** than live work: the
+//!   shard pool runs shadow jobs only when its rings are empty, sheds them
+//!   first under pressure, and bills them to a separate `shadow_rows`
+//!   bucket — the six-bucket conservation law above is untouched, and the
+//!   served bits stay bit-identical to a rollout-free run. The divergence
+//!   monitor accumulates stage-1 routing disagreement, a |Δscore|
+//!   histogram, and shadow-vs-live execution latency
+//!   ([`telemetry::RolloutStats`]).
+//! * **Canary** — a `splitmix64` hash of the request id routes p‰ of
+//!   traffic to the candidate (replayable given the seed, and **never mixed
+//!   within a batch**: a canary batch is served end to end on the candidate
+//!   or, if the candidate fails mid-serve, re-served end to end on the
+//!   incumbent). The ramp advances on controller ticks and **freezes while
+//!   the controller is escalated** (brownout or throttled) — a canary never
+//!   widens during an incident. Candidate-answered rows draw from a bounded
+//!   **error budget**; when it is exhausted, traffic stays on the incumbent.
+//! * **Guards → rollback** — disagreement rate, max score delta, and
+//!   shadow/canary p99 bounds each trip an instant revert: permille drops
+//!   to zero, the staged pool version unstages, and the typed reason lands
+//!   in [`coordinator::RollbackReason`] + the `rollout_rolled_back` metric.
+//!   Promotion ([`coordinator::Coordinator::finalize_rollout`]) installs
+//!   the candidate tables and flips the pool version — the same two-version
+//!   window as a plain hot-swap.
+//!
+//! `lrwbins rollout` is the scripted drill; `tests/rollout_battery.rs`
+//! proves divergent candidates (perturbed leaves, poisoned subtrees) roll
+//! back within the error budget on both I/O paths.
+//!
 //! See DESIGN.md for the full system inventory and experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 

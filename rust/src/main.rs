@@ -8,6 +8,8 @@
 //!   eval      Table-1-style evaluation of LR / LRwBins / GBDT on a preset
 //!   predict   score a CSV with saved model files (JSON pair, or a binary
 //!             snapshot via --snapshot)
+//!   rollout   guarded model-rollout drill: shadow → canary ramp → promote,
+//!             or divergence-triggered automatic rollback
 //!   fig5      Picasso feature map (SVG + terminal rendering)
 //!   info      print artifact manifest + compiled batch variants
 
@@ -30,11 +32,12 @@ fn main() {
         "serve" => cmd_serve(),
         "eval" => cmd_eval(),
         "predict" => cmd_predict(),
+        "rollout" => cmd_rollout(),
         "fig5" => cmd_fig5(),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: lrwbins <datagen|train|serve|eval|fig5|info> [options]\n\
+                "usage: lrwbins <datagen|train|serve|eval|rollout|fig5|info> [options]\n\
                  Run `lrwbins <subcommand> --help` for options."
             );
             2
@@ -379,6 +382,60 @@ fn cmd_predict() -> i32 {
         );
     }
     0
+}
+
+fn cmd_rollout() -> i32 {
+    let args = Cli::new(
+        "lrwbins rollout",
+        "guarded model-rollout drill: shadow-score a candidate, ramp a canary, promote — or auto-rollback on divergence",
+    )
+    .opt("name", "dataset preset", Some("aci"))
+    .opt("rows", "row count override (0 = preset size)", Some("4000"))
+    .opt("seed", "data + routing seed", Some("1"))
+    .opt("requests", "request budget to drive through the stack", Some("8000"))
+    .opt(
+        "leaf-shift",
+        "shift every candidate leaf margin by this much (0 = bit-identical candidate; large values trip the score-delta guard)",
+        Some("0"),
+    )
+    .opt("sample-permille", "shadow sampling rate, permille of admitted batches", Some("500"))
+    .opt("min-compared", "rows compared before the canary ramp may start", Some("200"))
+    .opt("max-delta", "score-delta guard: max |candidate - live| probability", Some("0.25"))
+    .opt("error-budget", "max rows the candidate may answer before promotion", Some("10000"))
+    .parse_subcommand();
+    let name = args.get_or("name", "aci");
+    let mut cfg = StackConfig::quick(&name, args.get_usize("rows", 4000));
+    cfg.seed = args.get_u64("seed", 1);
+    let rcfg = lrwbins::coordinator::RolloutConfig {
+        shadow_sample_permille: args.get_usize("sample-permille", 500).min(1000) as u32,
+        min_rows_compared: args.get_u64("min-compared", 200),
+        max_score_delta: args.get_f64("max-delta", 0.25),
+        error_budget_rows: args.get_u64("error-budget", 10_000),
+        ..Default::default()
+    };
+    let shift = args.get_f64("leaf-shift", 0.0) as f32;
+    println!("building embedded stack on '{name}', candidate leaf shift {shift:+}...");
+    match harness::run_rollout(&cfg, rcfg, shift, args.get_usize("requests", 8000)) {
+        Ok(run) => {
+            println!("{}", run.rollout.stats.report());
+            if run.promoted {
+                println!("PROMOTED: candidate installed as pool version {}", run.version);
+            } else {
+                println!(
+                    "ROLLED BACK: {}",
+                    run.reason.map_or_else(
+                        || "no guard tripped (request budget exhausted mid-rollout)".into(),
+                        |r| format!("{r:?} guard tripped")
+                    )
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("rollout failed: {e:#}");
+            1
+        }
+    }
 }
 
 fn cmd_fig5() -> i32 {

@@ -104,6 +104,13 @@ pub struct PredictOptions {
     /// pressure the coordinator answers it from the stage-1 prior
     /// (`Served::Degraded`) instead of spending second-stage capacity.
     pub low_priority: bool,
+    /// Stable request identity for canary routing during a guarded rollout:
+    /// the coordinator hashes it deterministically to decide whether this
+    /// request serves the candidate version — the same key always routes
+    /// the same way at a given ramp step, so a canary run is replayable.
+    /// `None` lets the coordinator assign an internal sequence key.
+    /// Client-side only; never rides the wire.
+    pub rollout_key: Option<u64>,
 }
 
 impl PredictOptions {
@@ -118,6 +125,13 @@ impl PredictOptions {
     /// Mark this call sheddable-first under brownout.
     pub fn low_priority(mut self) -> PredictOptions {
         self.low_priority = true;
+        self
+    }
+
+    /// Attach a stable canary-routing key (see
+    /// [`PredictOptions::rollout_key`]).
+    pub fn rollout_key(mut self, key: u64) -> PredictOptions {
+        self.rollout_key = Some(key);
         self
     }
 }

@@ -29,4 +29,7 @@ pub use engine::{kernel_inputs_for, Engine, ForestParams, Graph, Shapes};
 #[cfg(feature = "pjrt")]
 pub use worker::EngineWorker;
 
-pub use shard_pool::{ModelId, ShardPool, ShardPoolConfig, SpanSink, STEAL_GRAIN};
+pub use shard_pool::{
+    ModelId, ShadowJob, ShadowOutcome, ShardPool, ShardPoolConfig, SpanSink, VersionLease,
+    STEAL_GRAIN,
+};

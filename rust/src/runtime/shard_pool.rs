@@ -92,6 +92,25 @@
 //!   ([`ShardPool::shadow`]). A span whose version left the window (two
 //!   swaps raced it) completes as a failed span (`stale_spans`), never
 //!   wrong-version bits.
+//! * **Guarded rollout hooks** — a candidate forest can be **staged**
+//!   ([`ShardPool::stage`]) next to the incumbent: it gets its own version
+//!   stamp (allocated from the same per-model clock as swaps, so a racing
+//!   swap can never collide with it), pre-built per-shard replicas, and is
+//!   resolvable/servable — canary batches stamp it explicitly via
+//!   [`ShardPool::predict_spans_version`] — without ever being the default
+//!   for new batches. [`ShardPool::promote`] atomically makes the staged
+//!   version current (the incumbent slides into the two-version window);
+//!   [`ShardPool::unstage`] discards it. [`ShardPool::pin_version`] takes a
+//!   refcounted **lease** on any resolvable version so rollout comparisons
+//!   survive racing swaps (without it, a second swap mid-comparison evicts
+//!   the window and the comparison dies as `stale_spans`). **Shadow
+//!   scoring** ([`ShardPool::submit_shadow`]) runs candidate re-scores on a
+//!   bounded lowest-priority queue: workers take shadow jobs only when
+//!   every task ring is empty, a full queue or an expired shadow deadline
+//!   sheds the job immediately, and every outcome — scored, shed, or a
+//!   contained candidate panic — is delivered to the job's callback, so
+//!   rollout accounting reconciles exactly while live traffic never queues
+//!   behind comparison work.
 //!
 //! Outputs are bit-identical to the scalar and block paths: replicas are
 //! value-clones of the registered [`FlatForest`], and
@@ -102,6 +121,7 @@
 use crate::gbdt::{FlatForest, ForestScratch};
 use crate::telemetry::ShardStats;
 use std::cell::UnsafeCell;
+use std::collections::VecDeque;
 use std::mem::MaybeUninit;
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -123,6 +143,95 @@ pub const STEAL_GRAIN: usize = 4;
 /// (absolute row indices within the batch), its probabilities (empty when
 /// failed), and the failed flag. Spans are disjoint and tile the batch.
 pub type SpanSink<'a> = &'a (dyn Fn(Range<usize>, &[f32], bool) + Sync);
+
+/// What happened to a [`ShadowJob`] — delivered to its callback exactly
+/// once, whichever way the job ends.
+#[derive(Debug)]
+pub enum ShadowOutcome {
+    /// Candidate scores for every row of the job, in row order.
+    Scored(Vec<f32>),
+    /// Shed before execution: queue full at submit, deadline expired,
+    /// version no longer resolvable, or pool shutdown. Counted in
+    /// [`ShardStats::shadow_shed`](crate::telemetry::ShardStats).
+    Shed,
+    /// The candidate panicked while scoring (contained to the job). For a
+    /// rollout this is maximal divergence — an immediate guard trip.
+    Failed,
+}
+
+/// One shadow-scoring unit for a guarded rollout: an OWNED copy of the
+/// sampled rows, the candidate version to score them on, and a callback
+/// that receives the outcome. Owned payload (unlike [`Task`]'s borrowed
+/// pointers) because nobody blocks on shadow work — the submitter returns
+/// to serving immediately and the comparison completes whenever an idle
+/// worker gets to it.
+///
+/// Delivery is guaranteed: if the job is dropped without executing (queue
+/// teardown, shed on submit), `Drop` delivers [`ShadowOutcome::Shed`] to
+/// the callback — rollout accounting never loses a sampled row.
+pub struct ShadowJob {
+    pub model: ModelId,
+    /// Version to score on (the rollout's staged candidate, held
+    /// resolvable by a [`VersionLease`]).
+    pub version: u32,
+    /// Flat row-major payload, `rows.len() / row_len` rows.
+    pub rows: Vec<f32>,
+    pub row_len: usize,
+    /// Shed horizon: a job still queued past this instant is shed, not
+    /// scored — a comparison nobody will read must not occupy a worker.
+    pub deadline: Option<Instant>,
+    done: Option<Box<dyn FnOnce(ShadowOutcome) + Send>>,
+}
+
+impl ShadowJob {
+    pub fn new(
+        model: ModelId,
+        version: u32,
+        rows: Vec<f32>,
+        row_len: usize,
+        deadline: Option<Instant>,
+        done: impl FnOnce(ShadowOutcome) + Send + 'static,
+    ) -> ShadowJob {
+        ShadowJob {
+            model,
+            version,
+            rows,
+            row_len,
+            deadline,
+            done: Some(Box::new(done)),
+        }
+    }
+
+    /// Rows carried by this job.
+    pub fn n_rows(&self) -> usize {
+        if self.row_len == 0 {
+            0
+        } else {
+            self.rows.len() / self.row_len
+        }
+    }
+
+    /// Deliver the outcome to the callback, containing a panicking callback
+    /// like a panicking model (a rollout monitor bug must not kill a
+    /// worker). Consumes the job; `Drop` then sees the callback gone.
+    fn deliver(mut self, outcome: ShadowOutcome) -> bool {
+        match self.done.take() {
+            Some(f) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(outcome))).is_ok(),
+            None => true,
+        }
+    }
+}
+
+impl Drop for ShadowJob {
+    fn drop(&mut self) {
+        if let Some(f) = self.done.take() {
+            // Last-resort delivery for jobs that never executed. Panic
+            // containment as in `deliver`; the outcome is lost but the
+            // thread survives.
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(ShadowOutcome::Shed)));
+        }
+    }
+}
 
 /// Pool construction knobs.
 #[derive(Clone, Debug)]
@@ -148,6 +257,10 @@ pub struct ShardPoolConfig {
     /// [`ShardStats::pinned_cpu`](crate::telemetry::ShardStats::pinned_cpu)
     /// reports the CPU each worker landed on.
     pub pin_threads: bool,
+    /// Bound on the lowest-priority shadow-scoring queue (guarded rollout,
+    /// [`ShardPool::submit_shadow`]). A full queue sheds the submitted job
+    /// immediately — shadow work must never build a standing backlog.
+    pub shadow_queue_capacity: usize,
 }
 
 impl Default for ShardPoolConfig {
@@ -158,6 +271,7 @@ impl Default for ShardPoolConfig {
             min_task_rows: 64,
             steal: true,
             pin_threads: false,
+            shadow_queue_capacity: 256,
         }
     }
 }
@@ -410,15 +524,57 @@ impl Parker {
 /// as the shadow-scoring hook, [`ShardPool::shadow`]), and the per-shard
 /// pre-built replica clones workers install on first touch of a version.
 struct ModelEntry {
-    /// Bumped by every [`ShardPool::swap`]; starts at 1 on register.
+    /// Version currently serving (the stamp new batches get). Starts at 1
+    /// on register.
     version: u32,
+    /// Highest version number ever allocated for this model. Swaps AND
+    /// staged candidates both allocate from this clock, so a swap racing a
+    /// stage can never hand two forests the same stamp.
+    vclock: u32,
     cur: Arc<FlatForest>,
     prev: Option<(u32, Arc<FlatForest>)>,
+    /// Rollout candidate staged next to the incumbent: resolvable and
+    /// servable (canary batches stamp its version explicitly) but never
+    /// the default for new batches until [`ShardPool::promote`].
+    staged: Option<(u32, Arc<FlatForest>)>,
+    /// Refcounted version leases (`(version, forest, count)`): a pinned
+    /// version stays resolvable regardless of how many swaps race it —
+    /// the fix for a second swap evicting the two-version window out from
+    /// under an in-flight shadow comparison (`stale_spans`).
+    pins: Vec<(u32, Arc<FlatForest>, usize)>,
     /// One slot per shard, `Some((version, replica))` until that shard
     /// takes it. Per-slot mutexes (not the registry write lock): workers
     /// take their slot under the registry READ lock, so an install never
     /// contends with submitters.
     prepared: Box<[Mutex<Option<(u32, FlatForest)>>]>,
+    /// Pre-built replicas for the STAGED candidate (same protocol), so a
+    /// canary batch's first touch of the candidate version doesn't deep-
+    /// clone on a serving shard. Moves into `prepared` on promote.
+    staged_prepared: Box<[Mutex<Option<(u32, FlatForest)>>]>,
+}
+
+impl ModelEntry {
+    /// Resolve this model at exactly `version`: current, the two-version
+    /// window, the staged candidate, or a pinned lease — in that order.
+    fn resolve(&self, version: u32) -> Option<Arc<FlatForest>> {
+        if self.version == version {
+            return Some(self.cur.clone());
+        }
+        if let Some((v, f)) = &self.prev {
+            if *v == version {
+                return Some(f.clone());
+            }
+        }
+        if let Some((v, f)) = &self.staged {
+            if *v == version {
+                return Some(f.clone());
+            }
+        }
+        self.pins
+            .iter()
+            .find(|(v, _, _)| *v == version)
+            .map(|(_, f, _)| f.clone())
+    }
 }
 
 /// State shared between the pool handle and its workers.
@@ -444,6 +600,11 @@ struct PoolShared {
     pin_threads: bool,
     /// Round-robin base for home-shard assignment across batches.
     rr: AtomicUsize,
+    /// Lowest-priority shadow-scoring queue (guarded rollout): bounded,
+    /// popped by workers ONLY when every task ring is empty. A plain mutex
+    /// is fine — this queue is off the hot path by construction.
+    shadow: Mutex<VecDeque<ShadowJob>>,
+    shadow_cap: usize,
 }
 
 impl PoolShared {
@@ -464,38 +625,58 @@ impl PoolShared {
         self.registry.read().unwrap_or_else(PoisonError::into_inner)[model as usize].version
     }
 
-    /// Resolve `model` at exactly `version` — the current forest or, inside
-    /// the two-version window, the previous one. `None` means the version
-    /// was swapped out twice while the span waited: the span fails rather
-    /// than serve wrong-version bits.
+    /// Resolve `model` at exactly `version` — the current forest, the
+    /// two-version window, the staged rollout candidate, or a pinned
+    /// lease. `None` means the version is gone (swapped out of the window,
+    /// unpinned): the span fails rather than serve wrong-version bits.
     fn forest_version(&self, model: u32, version: u32) -> Option<Arc<FlatForest>> {
         let reg = self.registry.read().unwrap_or_else(PoisonError::into_inner);
-        let e = reg.get(model as usize)?;
-        if e.version == version {
-            Some(e.cur.clone())
-        } else {
-            match &e.prev {
-                Some((v, f)) if *v == version => Some(f.clone()),
-                _ => None,
-            }
-        }
+        reg.get(model as usize)?.resolve(version)
     }
 
     /// Take the pre-built replica waiting for (`model`, `shard`) if its
-    /// stamp matches `version`. Registry read lock + the slot's own mutex —
-    /// never the write lock, so installs don't contend with submitters.
+    /// stamp matches `version` — the current set or the staged candidate's.
+    /// Registry read lock + the slot's own mutex — never the write lock, so
+    /// installs don't contend with submitters.
     fn take_prepared(&self, model: u32, shard: usize, version: u32) -> Option<FlatForest> {
         let reg = self.registry.read().unwrap_or_else(PoisonError::into_inner);
-        let mut slot = reg
-            .get(model as usize)?
-            .prepared
-            .get(shard)?
-            .lock()
-            .unwrap_or_else(PoisonError::into_inner);
-        match &*slot {
-            Some((v, _)) if *v == version => slot.take().map(|(_, f)| f),
-            _ => None,
+        let e = reg.get(model as usize)?;
+        for set in [&e.prepared, &e.staged_prepared] {
+            let Some(slot) = set.get(shard) else { continue };
+            let mut slot = slot.lock().unwrap_or_else(PoisonError::into_inner);
+            if matches!(&*slot, Some((v, _)) if *v == version) {
+                return slot.take().map(|(_, f)| f);
+            }
         }
+        None
+    }
+
+    /// Pop the oldest queued shadow job (called by a worker whose rings
+    /// are all empty — shadow work is strictly lower priority).
+    fn pop_shadow(&self) -> Option<ShadowJob> {
+        self.shadow
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .pop_front()
+    }
+
+    /// Shed every queued shadow job (shutdown drain). Jobs are collected
+    /// under the lock but dropped OUTSIDE it — `Drop` delivers `Shed` to
+    /// arbitrary rollout callbacks, which must not run under the queue
+    /// mutex.
+    fn drain_shadow(&self) {
+        let jobs: Vec<ShadowJob> = self
+            .shadow
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .drain(..)
+            .collect();
+        if !jobs.is_empty() {
+            self.stats
+                .shadow_shed
+                .fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        }
+        drop(jobs);
     }
 
     fn queue_depth_total(&self) -> usize {
@@ -566,6 +747,8 @@ impl ShardPool {
             steal: cfg.steal,
             pin_threads: cfg.pin_threads,
             rr: AtomicUsize::new(0),
+            shadow: Mutex::new(VecDeque::new()),
+            shadow_cap: cfg.shadow_queue_capacity.max(1),
         });
         let workers = (0..n_shards)
             .map(|shard| {
@@ -664,9 +847,13 @@ impl ShardPool {
         let id = reg.len() as u32;
         reg.push(ModelEntry {
             version,
+            vclock: version,
             cur: Arc::new(forest),
             prev: None,
+            staged: None,
+            pins: Vec::new(),
             prepared,
+            staged_prepared: Box::default(),
         });
         ModelId(id)
     }
@@ -707,9 +894,12 @@ impl ShardPool {
             .unwrap_or_else(PoisonError::into_inner);
         let e = &mut reg[model.0 as usize];
         // Version is assigned under the write lock (racing swaps serialize
-        // here); the prepared clones built outside it are re-stamped to
-        // whatever version this swap actually got.
-        let new_version = e.version.wrapping_add(1);
+        // here) from the per-model clock — shared with `stage`, so a swap
+        // can never collide with a staged candidate's stamp. The prepared
+        // clones built outside the lock are re-stamped to whatever version
+        // this swap actually got.
+        let new_version = e.vclock.wrapping_add(1);
+        e.vclock = new_version;
         for slot in prepared.iter() {
             if let Some((v, _)) = slot
                 .lock()
@@ -735,6 +925,8 @@ impl ShardPool {
     /// The previous version still inside the two-version window, if any —
     /// the shadow-scoring hook: score a sample of traffic against it and
     /// compare before retiring it for good (the next swap evicts it).
+    /// Unprotected — take a [`ShardPool::pin_version`] lease to keep the
+    /// comparison target alive across further swaps.
     pub fn shadow(&self, model: ModelId) -> Option<(u32, Arc<FlatForest>)> {
         self.shared
             .registry
@@ -743,6 +935,172 @@ impl ShardPool {
             .get(model.0 as usize)?
             .prev
             .clone()
+    }
+
+    /// Stage a rollout candidate next to `model`'s incumbent: the forest
+    /// gets a fresh version stamp (from the same per-model clock as swaps)
+    /// and pre-built per-shard replicas, becomes resolvable — canary
+    /// batches serve it via [`ShardPool::predict_spans_version`] — but is
+    /// NOT the default for new batches until [`ShardPool::promote`].
+    /// Re-staging replaces a previously staged candidate. Returns the
+    /// candidate's version.
+    pub fn stage(&self, model: ModelId, forest: FlatForest) -> Result<u32, String> {
+        {
+            let reg = self
+                .shared
+                .registry
+                .read()
+                .unwrap_or_else(PoisonError::into_inner);
+            let e = reg
+                .get(model.0 as usize)
+                .ok_or_else(|| format!("stage: unknown model id {}", model.0))?;
+            if forest.n_features != e.cur.n_features {
+                return Err(format!(
+                    "stage: model {} serves {} features, candidate has {}",
+                    model.0, e.cur.n_features, forest.n_features
+                ));
+            }
+        }
+        // Replicas deep-cloned OUTSIDE the locks (like `swap`), re-stamped
+        // once the version is allocated under the write lock.
+        let prepared = self.prepare_replicas(&forest, 0);
+        let mut reg = self
+            .shared
+            .registry
+            .write()
+            .unwrap_or_else(PoisonError::into_inner);
+        let e = &mut reg[model.0 as usize];
+        let version = e.vclock.wrapping_add(1);
+        e.vclock = version;
+        for slot in prepared.iter() {
+            if let Some((v, _)) = slot
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .as_mut()
+            {
+                *v = version;
+            }
+        }
+        e.staged = Some((version, Arc::new(forest)));
+        e.staged_prepared = prepared;
+        Ok(version)
+    }
+
+    /// Promote the staged candidate: it becomes the current version (new
+    /// batches stamp it), the incumbent slides into the two-version window
+    /// so its in-flight spans drain, and the candidate's pre-built
+    /// replicas become the live prepared set. Counted as a `model_swaps`
+    /// lifecycle event. Returns the promoted version.
+    pub fn promote(&self, model: ModelId) -> Result<u32, String> {
+        let mut reg = self
+            .shared
+            .registry
+            .write()
+            .unwrap_or_else(PoisonError::into_inner);
+        let e = reg
+            .get_mut(model.0 as usize)
+            .ok_or_else(|| format!("promote: unknown model id {}", model.0))?;
+        let (version, forest) = e
+            .staged
+            .take()
+            .ok_or_else(|| format!("promote: model {} has no staged candidate", model.0))?;
+        e.prev = Some((e.version, std::mem::replace(&mut e.cur, forest)));
+        e.version = version;
+        e.prepared = std::mem::take(&mut e.staged_prepared);
+        self.shared.stats.model_swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(version)
+    }
+
+    /// Discard the staged candidate (rollback). In-flight canary batches
+    /// stamped with it keep resolving only while a [`VersionLease`] pins
+    /// it — which is exactly what a rollout holds. Returns the discarded
+    /// version, `None` when nothing was staged.
+    pub fn unstage(&self, model: ModelId) -> Option<u32> {
+        let mut reg = self
+            .shared
+            .registry
+            .write()
+            .unwrap_or_else(PoisonError::into_inner);
+        let e = reg.get_mut(model.0 as usize)?;
+        e.staged_prepared = Box::default();
+        e.staged.take().map(|(v, _)| v)
+    }
+
+    /// The staged rollout candidate, if any.
+    pub fn staged(&self, model: ModelId) -> Option<(u32, Arc<FlatForest>)> {
+        self.shared
+            .registry
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(model.0 as usize)?
+            .staged
+            .clone()
+    }
+
+    /// Take a refcounted lease on `version` of `model`: the version stays
+    /// resolvable — spans stamped with it keep serving, shadow jobs keep
+    /// scoring — no matter how many swaps race it, until the lease drops.
+    /// `None` when the version is not currently resolvable (already out of
+    /// the window and not staged or pinned).
+    pub fn pin_version(&self, model: ModelId, version: u32) -> Option<VersionLease> {
+        let mut reg = self
+            .shared
+            .registry
+            .write()
+            .unwrap_or_else(PoisonError::into_inner);
+        let e = reg.get_mut(model.0 as usize)?;
+        if let Some(pin) = e.pins.iter_mut().find(|(v, _, _)| *v == version) {
+            pin.2 += 1;
+        } else {
+            let forest = e.resolve(version)?;
+            e.pins.push((version, forest, 1));
+        }
+        Some(VersionLease {
+            shared: self.shared.clone(),
+            model: model.0,
+            version,
+        })
+    }
+
+    /// Enqueue a shadow-scoring job on the lowest-priority queue. Returns
+    /// `false` — and the job's callback receives [`ShadowOutcome::Shed`]
+    /// immediately — when the queue is full or the pool is shutting down:
+    /// shadow work sheds first, it never queues behind itself or delays
+    /// live traffic. On `true` the callback will be invoked exactly once,
+    /// from a worker thread, with the job's eventual outcome.
+    pub fn submit_shadow(&self, job: ShadowJob) -> bool {
+        let shared = &*self.shared;
+        if shared.shutdown.load(Ordering::Relaxed) {
+            shared.stats.shadow_shed.fetch_add(1, Ordering::Relaxed);
+            return false; // Drop delivers Shed.
+        }
+        {
+            let mut q = shared
+                .shadow
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            if q.len() >= shared.shadow_cap {
+                drop(q);
+                shared.stats.shadow_shed.fetch_add(1, Ordering::Relaxed);
+                return false; // Drop delivers Shed.
+            }
+            q.push_back(job);
+        }
+        shared.stats.shadow_jobs.fetch_add(1, Ordering::Relaxed);
+        // An idle (fully parked) pool must notice the job without waiting
+        // out the 50ms park backstop; a busy pool ignores the wakeup and
+        // gets to the queue when its rings drain.
+        shared.wake_for_push();
+        true
+    }
+
+    /// Queued shadow jobs (telemetry gauge).
+    pub fn shadow_queue_depth(&self) -> usize {
+        self.shared
+            .shadow
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
     }
 
     /// Feature width of a registered model.
@@ -768,7 +1126,26 @@ impl ShardPool {
         row_len: usize,
         out: &mut [f32],
     ) -> Vec<Range<usize>> {
-        self.predict_inner(model, rows, row_len, out, None, None)
+        self.predict_inner(model, rows, row_len, out, None, None, None)
+    }
+
+    /// [`ShardPool::predict_spans_deadline`] against an explicit version —
+    /// the canary serve path: a rollout routes a batch to its staged
+    /// candidate by stamping every span with the candidate's version, so
+    /// the batch is single-version by construction exactly like a live
+    /// batch. Spans whose version can no longer be resolved (candidate
+    /// unstaged mid-flight with no [`VersionLease`] held) come back failed,
+    /// never served with other bits.
+    pub fn predict_spans_version(
+        &self,
+        model: ModelId,
+        version: u32,
+        rows: &[f32],
+        row_len: usize,
+        out: &mut [f32],
+        deadline: Option<Instant>,
+    ) -> Vec<Range<usize>> {
+        self.predict_inner(model, rows, row_len, out, deadline, None, Some(version))
     }
 
     /// Deadline-aware [`ShardPool::predict_spans`]: sub-range tasks still
@@ -786,7 +1163,7 @@ impl ShardPool {
         out: &mut [f32],
         deadline: Option<Instant>,
     ) -> Vec<Range<usize>> {
-        self.predict_inner(model, rows, row_len, out, deadline, None)
+        self.predict_inner(model, rows, row_len, out, deadline, None, None)
     }
 
     /// Like [`ShardPool::predict_spans`], additionally delivering every
@@ -803,7 +1180,7 @@ impl ShardPool {
         out: &mut [f32],
         sink: SpanSink<'_>,
     ) -> Vec<Range<usize>> {
-        self.predict_inner(model, rows, row_len, out, None, Some(sink))
+        self.predict_inner(model, rows, row_len, out, None, Some(sink), None)
     }
 
     /// Deadline-aware [`ShardPool::predict_spans_streamed`] — shed spans
@@ -817,7 +1194,7 @@ impl ShardPool {
         deadline: Option<Instant>,
         sink: SpanSink<'_>,
     ) -> Vec<Range<usize>> {
-        self.predict_inner(model, rows, row_len, out, deadline, Some(sink))
+        self.predict_inner(model, rows, row_len, out, deadline, Some(sink), None)
     }
 
     fn predict_inner(
@@ -828,6 +1205,7 @@ impl ShardPool {
         out: &mut [f32],
         deadline: Option<Instant>,
         sink: Option<SpanSink<'_>>,
+        version_override: Option<u32>,
     ) -> Vec<Range<usize>> {
         let n = out.len();
         assert!(rows.len() >= n * row_len, "rows buffer shorter than n*row_len");
@@ -858,8 +1236,10 @@ impl ShardPool {
 
         // One version stamp per batch, read once: every span of this batch
         // is served by exactly this version (or fails), however a racing
-        // swap lands relative to the submission loop below.
-        let version = shared.cur_version(model.0);
+        // swap lands relative to the submission loop below. A canary batch
+        // overrides the stamp with its candidate's version — same
+        // single-version-per-batch contract, different version.
+        let version = version_override.unwrap_or_else(|| shared.cur_version(model.0));
         let rows_ptr = rows.as_ptr();
         let out_ptr = out.as_mut_ptr();
         let base = shared.rr.fetch_add(1, Ordering::Relaxed);
@@ -948,6 +1328,51 @@ impl std::fmt::Display for ShardPanic {
 
 impl std::error::Error for ShardPanic {}
 
+/// RAII lease from [`ShardPool::pin_version`]: while any lease on a
+/// `(model, version)` pair is alive, that version stays resolvable for
+/// span execution and shadow scoring regardless of how many `swap`s race
+/// past it. Dropping the last lease releases the pinned forest.
+pub struct VersionLease {
+    shared: Arc<PoolShared>,
+    model: u32,
+    version: u32,
+}
+
+impl VersionLease {
+    /// The pinned version.
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+}
+
+impl Drop for VersionLease {
+    fn drop(&mut self) {
+        let mut reg = self
+            .shared
+            .registry
+            .write()
+            .unwrap_or_else(PoisonError::into_inner);
+        let Some(e) = reg.get_mut(self.model as usize) else {
+            return;
+        };
+        if let Some(i) = e.pins.iter().position(|(v, _, _)| *v == self.version) {
+            e.pins[i].2 -= 1;
+            if e.pins[i].2 == 0 {
+                e.pins.swap_remove(i);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for VersionLease {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("VersionLease")
+            .field("model", &self.model)
+            .field("version", &self.version)
+            .finish()
+    }
+}
+
 impl Drop for ShardPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
@@ -958,6 +1383,10 @@ impl Drop for ShardPool {
             self.shared.parker.wake_all();
             let _ = w.join();
         }
+        // Workers drained the shadow queue on their way out; anything that
+        // slipped in after the last worker exited is shed here, so every
+        // accepted shadow job still gets exactly one outcome.
+        self.shared.drain_shadow();
     }
 }
 
@@ -1093,19 +1522,30 @@ fn pop_or_steal(shard: usize, shared: &PoolShared, allow_steal: bool) -> Option<
     }
 }
 
-/// Worker-side task acquisition: spin on the own ring (stealing
-/// periodically), then park. Returns `None` only when `shutdown` is set AND
-/// every ring has drained — queued work is always finished before a worker
-/// exits, so no submitter is left waiting on a latch that nobody will hit.
-fn acquire(shard: usize, shared: &PoolShared) -> Option<Task> {
+/// One unit of worker work: a live span task, or — only when every ring is
+/// empty — a queued shadow-scoring job.
+enum Work {
+    Task(Task),
+    Shadow(ShadowJob),
+}
+
+/// Worker-side work acquisition: spin on the own ring (stealing
+/// periodically), then — only once the rings are confirmed empty — take a
+/// shadow job, then park. The ordering IS the shadow-priority contract:
+/// live spans are found in the spin loop and the park-path ring re-check,
+/// shadow jobs only after both came up empty, so shadow work never delays
+/// a queued live span. Returns `None` only when `shutdown` is set AND every
+/// ring has drained — queued work is always finished before a worker exits,
+/// so no submitter is left waiting on a latch that nobody will hit.
+fn acquire(shard: usize, shared: &PoolShared) -> Option<Work> {
     loop {
         for spin in 0..96u32 {
             if let Some(t) = shared.rings[shard].try_pop() {
-                return Some(t);
+                return Some(Work::Task(t));
             }
             if shared.steal && spin % 32 == 31 {
                 if let Some(t) = steal(shard, shared) {
-                    return Some(t);
+                    return Some(Work::Task(t));
                 }
             }
             if spin % 16 == 15 {
@@ -1129,11 +1569,23 @@ fn acquire(shard: usize, shared: &PoolShared) -> Option<Task> {
         // the drain guarantee holds.
         if let Some(t) = pop_or_steal(shard, shared, shared.steal || shutting_down) {
             shared.parker.sleepers.fetch_sub(1, Ordering::Relaxed);
-            return Some(t);
+            return Some(Work::Task(t));
         }
         if shutting_down {
             shared.parker.sleepers.fetch_sub(1, Ordering::Relaxed);
+            // Pending shadow jobs are shed, not scored: shutdown must not
+            // wait on best-effort work, but every job still gets its
+            // exactly-once outcome. The parker lock is released first —
+            // shed callbacks run outside all pool locks.
+            drop(guard);
+            shared.drain_shadow();
             return None;
+        }
+        // Rings are empty and we are not shutting down: this idle slot is
+        // what shadow scoring is allowed to consume.
+        if let Some(job) = shared.pop_shadow() {
+            shared.parker.sleepers.fetch_sub(1, Ordering::Relaxed);
+            return Some(Work::Shadow(job));
         }
         // The fence handshake makes wakeups reliable; the long timeout
         // only bounds the damage of an OS-level anomaly. Idle workers
@@ -1187,26 +1639,46 @@ fn worker_loop(shard: usize, shared: Arc<PoolShared>) {
             }
         }
     }
-    // Per-shard model replicas, one per model id, stamped with the version
-    // they were built from. Installed from the registry's pre-built clones
-    // on first touch of a version (the deep clone happened at
-    // register/swap time, off this serve path); the stamp-mismatch branch
-    // also EVICTS the drained old version, so the cache holds at most one
-    // replica per model. The scratch is shared across models — it is
-    // cleared per call.
-    let mut replicas: Vec<Option<(u32, FlatForest)>> = Vec::new();
+    // Per-shard model replicas, TWO slots per model id (MRU first), each
+    // stamped with the version it was built from. Installed from the
+    // registry's pre-built clones on first touch of a version (the deep
+    // clone happened at register/swap/stage time, off this serve path).
+    // Two slots because a canary ramp interleaves incumbent- and
+    // candidate-stamped batches on the same model for its whole duration —
+    // a one-slot cache would evict and rebuild a full replica on every
+    // alternation. A version absent from both slots evicts the LRU slot,
+    // so the cache holds at most two replicas per model. The scratch is
+    // shared across models — it is cleared per call.
+    let mut replicas: Vec<[Option<(u32, FlatForest)>; 2]> = Vec::new();
     let mut scratch = ForestScratch::default();
-    while let Some(task) = acquire(shard, &shared) {
+    while let Some(work) = acquire(shard, &shared) {
+        let task = match work {
+            Work::Task(t) => t,
+            Work::Shadow(job) => {
+                // Shadow jobs score the registry's shared forest directly —
+                // no replica install, no cache disturbance: best-effort work
+                // must not evict what the live path relies on.
+                shared.stats.set_busy(shard, true);
+                run_shadow(job, &shared, &mut scratch);
+                shared.stats.set_busy(shard, false);
+                continue;
+            }
+        };
         shared.stats.set_busy(shard, true);
         let model = task.model as usize;
         if replicas.len() <= model {
-            replicas.resize_with(model + 1, || None);
+            replicas.resize_with(model + 1, || [None, None]);
         }
-        if !replicas[model]
-            .as_ref()
-            .is_some_and(|&(v, _)| v == task.version)
-        {
-            if replicas[model].take().is_some() {
+        let pair = &mut replicas[model];
+        if pair[0].as_ref().is_some_and(|&(v, _)| v == task.version) {
+            // MRU hit: nothing to do.
+        } else if pair[1].as_ref().is_some_and(|&(v, _)| v == task.version) {
+            pair.swap(0, 1);
+        } else {
+            // Miss: demote the MRU slot, evict the LRU slot, install the
+            // needed version in front.
+            pair.swap(0, 1);
+            if pair[0].take().is_some() {
                 shared.stats.replicas_evicted.fetch_add(1, Ordering::Relaxed);
             }
             let installed = shared
@@ -1225,17 +1697,57 @@ fn worker_loop(shard: usize, shared: Arc<PoolShared>) {
                         replica
                     })
                 });
-            replicas[model] = installed.map(|f| (task.version, f));
+            pair[0] = installed.map(|f| (task.version, f));
         }
         // None ⇒ the stamp left the two-version window: run_task fails the
         // span (counted), keeping the rows-conservation invariant intact.
-        let forest = replicas[model].as_ref().map(|(_, f)| f);
+        let forest = replicas[model][0].as_ref().map(|(_, f)| f);
         // Count the task BEFORE running it: `run_task` hits the completion
         // latch, and a submitter returning from `wait()` must observe
         // stats that already include every task of its batch.
         shared.stats.record_task(shard);
         run_task(task, forest, &mut scratch, &shared);
         shared.stats.set_busy(shard, false);
+    }
+}
+
+/// Execute one shadow-scoring job on this worker: resolve the pinned
+/// version from the registry (the shared `Arc`, NOT a per-shard replica —
+/// shadow work must not disturb the replica cache), score the owned rows,
+/// and deliver the outcome exactly once. A job whose deadline already
+/// passed, or whose version left the window, is shed — shadow results are
+/// advisory, so late or unresolvable answers are worthless. Candidate
+/// panics are contained here and reported as [`ShadowOutcome::Failed`]:
+/// a poisoned candidate must never take a serving worker down.
+fn run_shadow(job: ShadowJob, shared: &PoolShared, scratch: &mut ForestScratch) {
+    if job.deadline.is_some_and(|d| Instant::now() >= d) {
+        shared.stats.shadow_shed.fetch_add(1, Ordering::Relaxed);
+        job.deliver(ShadowOutcome::Shed);
+        return;
+    }
+    let Some(forest) = shared.forest_version(job.model.0, job.version) else {
+        shared.stats.shadow_shed.fetch_add(1, Ordering::Relaxed);
+        job.deliver(ShadowOutcome::Shed);
+        return;
+    };
+    let n = job.n_rows();
+    let mut out = vec![0f32; n];
+    let t0 = Instant::now();
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        forest.predict_flat_rows(&job.rows, job.row_len, scratch, &mut out);
+    }));
+    shared.stats.chunk_exec.record_duration(t0.elapsed());
+    match r {
+        Ok(()) => {
+            job.deliver(ShadowOutcome::Scored(out));
+        }
+        Err(_) => {
+            shared.stats.shadow_panics.fetch_add(1, Ordering::Relaxed);
+            // A panic mid-predict can leave the scratch mid-traversal;
+            // start the next call clean.
+            *scratch = ForestScratch::default();
+            job.deliver(ShadowOutcome::Failed);
+        }
     }
 }
 
@@ -1993,6 +2505,372 @@ mod tests {
         assert!(pool.predict_spans(id, &rows, row_len, &mut out).is_empty());
         for r in 0..200 {
             assert_eq!(out[r].to_bits(), ref1[r].to_bits(), "post-failed-swap row {r}");
+        }
+    }
+
+    #[test]
+    fn stage_serves_candidate_on_request_only_until_promote() {
+        let (m1, d) = trained();
+        let m2 = train(
+            &d,
+            &GbdtParams { n_trees: 9, max_depth: 3, seed: 77, ..Default::default() },
+        );
+        let f1 = FlatForest::from_model(&m1);
+        let f2 = FlatForest::from_model(&m2);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 2,
+            min_task_rows: 16,
+            ..Default::default()
+        });
+        let id = pool.register(f1.clone());
+
+        let (rows, row_len) = flat_rows(&d, 200);
+        let mut scratch = ForestScratch::default();
+        let mut ref1 = vec![0f32; 200];
+        f1.predict_flat_rows(&rows, row_len, &mut scratch, &mut ref1);
+        let mut ref2 = vec![0f32; 200];
+        f2.predict_flat_rows(&rows, row_len, &mut scratch, &mut ref2);
+
+        let cand_v = pool.stage(id, f2.clone()).expect("same-width stage");
+        assert_eq!(cand_v, 2, "staged version comes off the same clock as swaps");
+        assert_eq!(pool.version(id), 1, "staging does NOT change the serving version");
+        assert_eq!(pool.staged(id).map(|(v, _)| v), Some(2));
+
+        // Default batches still serve the incumbent, bit-identical.
+        let mut out = vec![0f32; 200];
+        assert!(pool.predict_spans(id, &rows, row_len, &mut out).is_empty());
+        for r in 0..200 {
+            assert_eq!(out[r].to_bits(), ref1[r].to_bits(), "live row {r} during stage");
+        }
+        // Canary batches route to the candidate by explicit version stamp.
+        let mut out = vec![0f32; 200];
+        assert!(pool
+            .predict_spans_version(id, cand_v, &rows, row_len, &mut out, None)
+            .is_empty());
+        for r in 0..200 {
+            assert_eq!(out[r].to_bits(), ref2[r].to_bits(), "canary row {r}");
+        }
+
+        // Bad stages are Errs and leave both versions serving.
+        assert!(pool.stage(ModelId(9), f2.clone()).is_err(), "unknown model");
+        assert!(pool.stage(id, slow_forest(3, 1)).is_err(), "width mismatch");
+
+        // Promote: candidate becomes the default, incumbent slides into the
+        // shadow window, and the staged slot empties.
+        let v = pool.promote(id).expect("staged candidate promotes");
+        assert_eq!(v, cand_v);
+        assert_eq!(pool.version(id), cand_v);
+        assert!(pool.staged(id).is_none());
+        assert_eq!(pool.shadow(id).map(|(v, _)| v), Some(1));
+        assert!(pool.promote(id).is_err(), "nothing staged anymore");
+        let mut out = vec![0f32; 200];
+        assert!(pool.predict_spans(id, &rows, row_len, &mut out).is_empty());
+        for r in 0..200 {
+            assert_eq!(out[r].to_bits(), ref2[r].to_bits(), "live row {r} after promote");
+        }
+        assert_eq!(pool.stats().stale_spans.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn unstage_discards_candidate_unless_a_lease_pins_it() {
+        let (m1, d) = trained();
+        let m2 = train(
+            &d,
+            &GbdtParams { n_trees: 9, max_depth: 3, seed: 77, ..Default::default() },
+        );
+        let f1 = FlatForest::from_model(&m1);
+        let f2 = FlatForest::from_model(&m2);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 1,
+            min_task_rows: 16,
+            ..Default::default()
+        });
+        let id = pool.register(f1);
+        let cand_v = pool.stage(id, f2.clone()).unwrap();
+        let lease = pool.pin_version(id, cand_v).expect("staged version pinnable");
+        assert_eq!(lease.version(), cand_v);
+        assert_eq!(pool.unstage(id), Some(cand_v));
+        assert!(pool.staged(id).is_none());
+
+        let (rows, row_len) = flat_rows(&d, 64);
+        let mut scratch = ForestScratch::default();
+        let mut ref2 = vec![0f32; 64];
+        f2.predict_flat_rows(&rows, row_len, &mut scratch, &mut ref2);
+
+        // The lease keeps an unstaged (rolled-back) candidate resolvable so
+        // its in-flight batches complete with the RIGHT bits.
+        let mut out = vec![0f32; 64];
+        assert!(pool
+            .predict_spans_version(id, cand_v, &rows, row_len, &mut out, None)
+            .is_empty());
+        for r in 0..64 {
+            assert_eq!(out[r].to_bits(), ref2[r].to_bits(), "pinned row {r}");
+        }
+
+        // Dropping the last lease releases it: the stamp now fails as
+        // stale instead of serving — wrong-version bits are never served.
+        drop(lease);
+        let mut out = vec![0f32; 64];
+        let failed = pool.predict_spans_version(id, cand_v, &rows, row_len, &mut out, None);
+        let failed_rows: usize = failed.iter().map(|s| s.len()).sum();
+        assert_eq!(failed_rows, 64, "unpinned candidate version is unresolvable");
+        assert!(pool.stats().stale_spans.load(Ordering::Relaxed) > 0);
+        assert_eq!(pool.unstage(id), None, "idempotent");
+    }
+
+    /// Satellite-1 regression: a rollout's comparison target must survive
+    /// racing swaps. Pre-lease, the shadowed version lived only in the
+    /// two-version window, so the SECOND racing swap evicted it
+    /// mid-comparison and the comparison batches died as `stale_spans`.
+    #[test]
+    fn pinned_shadow_version_survives_three_racing_swaps() {
+        let (m1, d) = trained();
+        let m2 = train(
+            &d,
+            &GbdtParams { n_trees: 9, max_depth: 3, seed: 77, ..Default::default() },
+        );
+        let f1 = FlatForest::from_model(&m1);
+        let f2 = FlatForest::from_model(&m2);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 2,
+            min_task_rows: 16,
+            ..Default::default()
+        });
+        let id = pool.register(f1.clone());
+        pool.swap(id, f2.clone()).unwrap(); // v2 serves, v1 in the window
+
+        let (rows, row_len) = flat_rows(&d, 128);
+        let mut scratch = ForestScratch::default();
+        let mut ref1 = vec![0f32; 128];
+        f1.predict_flat_rows(&rows, row_len, &mut scratch, &mut ref1);
+
+        // Pin the comparison target (v1) for the "rollout's" lifetime.
+        let lease = pool.pin_version(id, 1).expect("windowed version pinnable");
+
+        std::thread::scope(|s| {
+            let swapper = s.spawn(|| {
+                // 3 racing swaps: without the lease, the second one evicts
+                // v1 from the window while comparisons are in flight.
+                for f in [f1.clone(), f2.clone(), f1.clone()] {
+                    pool.swap(id, f).unwrap();
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            });
+            // In-flight shadow comparison: keep scoring on the pinned
+            // version throughout the swap storm. Every batch must complete
+            // with v1's exact bits — zero stale spans.
+            for i in 0..30 {
+                let mut out = vec![0f32; 128];
+                let failed =
+                    pool.predict_spans_version(id, 1, &rows, row_len, &mut out, None);
+                assert!(failed.is_empty(), "iteration {i}: stale spans {failed:?}");
+                for r in 0..128 {
+                    assert_eq!(out[r].to_bits(), ref1[r].to_bits(), "iter {i} row {r}");
+                }
+            }
+            swapper.join().unwrap();
+        });
+        assert_eq!(
+            pool.stats().stale_spans.load(Ordering::Relaxed),
+            0,
+            "pinned version never evicted mid-comparison: {}",
+            pool.stats().report()
+        );
+        assert_eq!(pool.version(id), 5, "register + 4 swaps");
+
+        // Re-pinning the same version refcounts; release order is free.
+        let lease2 = pool.pin_version(id, 1).expect("refcounted re-pin");
+        drop(lease);
+        let mut out = vec![0f32; 128];
+        assert!(pool
+            .predict_spans_version(id, 1, &rows, row_len, &mut out, None)
+            .is_empty());
+        drop(lease2);
+        let mut out = vec![0f32; 128];
+        let failed = pool.predict_spans_version(id, 1, &rows, row_len, &mut out, None);
+        assert!(!failed.is_empty(), "last lease dropped ⇒ v1 unresolvable");
+    }
+
+    #[test]
+    fn shadow_jobs_score_when_idle_and_shed_on_pressure() {
+        let (m1, d) = trained();
+        let f1 = FlatForest::from_model(&m1);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 2,
+            min_task_rows: 16,
+            shadow_queue_capacity: 4,
+            ..Default::default()
+        });
+        let id = pool.register(f1.clone());
+        let cand_v = pool.stage(id, f1.clone()).unwrap();
+        let _lease = pool.pin_version(id, cand_v).unwrap();
+
+        let (rows, row_len) = flat_rows(&d, 32);
+        let mut scratch = ForestScratch::default();
+        let mut reference = vec![0f32; 32];
+        f1.predict_flat_rows(&rows, row_len, &mut scratch, &mut reference);
+
+        // A submitted job is scored by an idle worker and delivers the
+        // candidate's exact bits to the callback.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let job = ShadowJob::new(id, cand_v, rows.clone(), row_len, None, move |o| {
+            tx.send(o).unwrap();
+        });
+        assert_eq!(job.n_rows(), 32);
+        assert!(pool.submit_shadow(job));
+        match rx.recv_timeout(Duration::from_secs(10)).expect("outcome delivered") {
+            ShadowOutcome::Scored(got) => {
+                for r in 0..32 {
+                    assert_eq!(got[r].to_bits(), reference[r].to_bits(), "shadow row {r}");
+                }
+            }
+            other => panic!("expected Scored, got {other:?}"),
+        }
+
+        // An expired deadline sheds without scoring.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let expired = Some(Instant::now() - Duration::from_millis(1));
+        assert!(pool.submit_shadow(ShadowJob::new(
+            id,
+            cand_v,
+            rows.clone(),
+            row_len,
+            expired,
+            move |o| {
+                tx.send(o).unwrap();
+            },
+        )));
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(10)).unwrap(),
+            ShadowOutcome::Shed
+        ));
+
+        // An unresolvable version sheds too (no lease, version never existed).
+        let (tx, rx) = std::sync::mpsc::channel();
+        assert!(pool.submit_shadow(ShadowJob::new(
+            id,
+            999,
+            rows.clone(),
+            row_len,
+            None,
+            move |o| {
+                tx.send(o).unwrap();
+            },
+        )));
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(10)).unwrap(),
+            ShadowOutcome::Shed
+        ));
+
+        let st = pool.stats();
+        assert_eq!(st.shadow_jobs.load(Ordering::Relaxed), 3);
+        assert_eq!(st.shadow_shed.load(Ordering::Relaxed), 2);
+        assert_eq!(st.shadow_panics.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn shadow_queue_full_sheds_at_submit_with_outcome_delivered() {
+        // No-worker trick is impossible (workers always spawn), so wedge
+        // the queue instead: capacity 2, submit while workers are pinned
+        // down by live work — live work always wins, so the queue fills.
+        let (m1, d) = trained();
+        let f1 = FlatForest::from_model(&m1);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 1,
+            min_task_rows: 8,
+            shadow_queue_capacity: 2,
+            ..Default::default()
+        });
+        let id = pool.register(f1.clone());
+        let slow = pool.register(slow_forest(d.n_features(), 2_000_000));
+        let cand_v = pool.stage(id, f1.clone()).unwrap();
+        let _lease = pool.pin_version(id, cand_v).unwrap();
+        let (rows, row_len) = flat_rows(&d, 8);
+
+        std::thread::scope(|s| {
+            // Grind the single worker with a slow live batch so queued
+            // shadow jobs cannot drain while we overfill the queue.
+            let grinder = s.spawn(|| {
+                let mut out = vec![0f32; 8];
+                let _ = pool.predict_spans(slow, &rows, row_len, &mut out);
+            });
+            // Wait until the worker is actually busy.
+            while pool.stats().busy_shards() == 0 {
+                std::hint::spin_loop();
+            }
+            let (tx, rx) = std::sync::mpsc::channel();
+            let submit = |accepted_tx: std::sync::mpsc::Sender<ShadowOutcome>| {
+                ShadowJob::new(id, cand_v, rows.clone(), row_len, None, move |o| {
+                    let _ = accepted_tx.send(o);
+                })
+            };
+            let a = pool.submit_shadow(submit(tx.clone()));
+            let b = pool.submit_shadow(submit(tx.clone()));
+            let c = pool.submit_shadow(submit(tx.clone()));
+            drop(tx);
+            assert!(a && b, "capacity-2 queue accepts two jobs");
+            assert!(!c, "third job sheds at submit");
+            // The shed job's callback got its Shed outcome synchronously
+            // (Drop delivery) — exactly-once accounting holds.
+            let first = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+            assert!(matches!(first, ShadowOutcome::Shed), "shed outcome delivered");
+            grinder.join().unwrap();
+            // The two accepted jobs eventually resolve (scored once the
+            // grinder finishes, or shed at pool drop) — drain them so the
+            // channel proves exactly-once for all three.
+            let mut outcomes = 2;
+            while outcomes > 0 {
+                match rx.recv_timeout(Duration::from_secs(10)) {
+                    Ok(_) => outcomes -= 1,
+                    Err(e) => panic!("missing shadow outcome: {e}"),
+                }
+            }
+        });
+        assert!(pool.stats().shadow_shed.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn shadow_candidate_panic_contained_as_failed() {
+        let (m1, d) = trained();
+        let f1 = FlatForest::from_model(&m1);
+        let pool = ShardPool::with_config(ShardPoolConfig {
+            n_shards: 1,
+            min_task_rows: 16,
+            ..Default::default()
+        });
+        let id = pool.register(f1.clone());
+        // Poisoned candidate: panics on rows with x[0] == +inf.
+        let cand_v = pool.stage(id, poison_forest(d.n_features())).unwrap();
+        let _lease = pool.pin_version(id, cand_v).unwrap();
+
+        let (mut rows, row_len) = flat_rows(&d, 16);
+        rows[0] = f32::INFINITY; // first row trips the poison node
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        assert!(pool.submit_shadow(ShadowJob::new(
+            id,
+            cand_v,
+            rows.clone(),
+            row_len,
+            None,
+            move |o| {
+                tx.send(o).unwrap();
+            },
+        )));
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(10)).unwrap(),
+            ShadowOutcome::Failed
+        ));
+        assert_eq!(pool.stats().shadow_panics.load(Ordering::Relaxed), 1);
+
+        // The worker survived: live traffic still serves exact bits.
+        let mut scratch = ForestScratch::default();
+        let mut reference = vec![0f32; 16];
+        f1.predict_flat_rows(&rows, row_len, &mut scratch, &mut reference);
+        let mut out = vec![0f32; 16];
+        assert!(pool.predict_spans(id, &rows, row_len, &mut out).is_empty());
+        for r in 0..16 {
+            assert_eq!(out[r].to_bits(), reference[r].to_bits(), "post-panic row {r}");
         }
     }
 

@@ -545,6 +545,14 @@ pub fn run_trace(
             for c in coords {
                 c.set_brownout(d.brownout);
             }
+            // Guarded rollouts ride the same tick: an escalated controller
+            // (brownout active or admission throttled) freezes any
+            // in-flight canary ramp — an overloaded stack must not widen a
+            // model experiment while it is shedding load.
+            let escalated = d.brownout > 0 || d.rate_factor < 1.0;
+            for c in coords {
+                c.rollout_tick(escalated);
+            }
             if let Some(pool) = knobs.pool {
                 pool.set_active_shards(d.active_shards);
                 pool.set_min_task_rows(d.min_task_rows);

@@ -129,6 +129,23 @@ pub struct ServeMetrics {
     /// deadline had not yet expired. Also answered with `Rejected`.
     pub sojourn_shed_rows: AtomicU64,
     pub sojourn_shed_requests: AtomicU64,
+    /// Guarded rollout (PR 10). Rows re-scored on a candidate version via
+    /// the shadow path. Billed HERE, never in the six real-traffic buckets:
+    /// shadow work is extra comparison traffic, and the conservation
+    /// invariant for what callers actually sent must not see it.
+    pub shadow_rows: AtomicU64,
+    /// Shadow rows shed before candidate scoring (queue full, deadline
+    /// expired, pool drained) — shadow work sheds first under pressure.
+    /// `shadow_rows + shadow_shed_rows` equals exactly the rows sampled
+    /// into the shadow path (reconciles against `RolloutStats`).
+    pub shadow_shed_rows: AtomicU64,
+    /// Rows whose REAL answer came from the candidate version through the
+    /// canary route (a strict subset of the normal served buckets — canary
+    /// rows are real traffic, this only marks which version answered).
+    pub canary_rows: AtomicU64,
+    /// Rollouts aborted by a guard rule; the typed reason lives in the
+    /// coordinator's rollout state (`RollbackReason`).
+    pub rollout_rolled_back: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -182,6 +199,10 @@ impl ServeMetrics {
             &self.rejected_requests,
             &self.sojourn_shed_rows,
             &self.sojourn_shed_requests,
+            &self.shadow_rows,
+            &self.shadow_shed_rows,
+            &self.canary_rows,
+            &self.rollout_rolled_back,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -278,6 +299,15 @@ impl ServeMetrics {
                 self.sojourn_shed_requests.load(Ordering::Relaxed),
             ));
         }
+        let shadow = self.shadow_rows.load(Ordering::Relaxed);
+        let shadow_shed = self.shadow_shed_rows.load(Ordering::Relaxed);
+        let canary = self.canary_rows.load(Ordering::Relaxed);
+        let rolled_back = self.rollout_rolled_back.load(Ordering::Relaxed);
+        if shadow + shadow_shed + canary + rolled_back > 0 {
+            s.push_str(&format!(
+                "\nshadow rows: {shadow} (shed: {shadow_shed})  canary rows: {canary}  rollbacks: {rolled_back}"
+            ));
+        }
         s
     }
 }
@@ -343,6 +373,19 @@ pub struct ShardStats {
     /// Replica deep-clone build time (both the pre-built and the fallback
     /// path — the cost the hot path no longer pays).
     pub replica_build: Histogram,
+    /// Shadow-scoring jobs accepted onto the pool's lowest-priority queue
+    /// (guarded rollout; see
+    /// [`ShardPool::submit_shadow`](crate::runtime::ShardPool::submit_shadow)).
+    pub shadow_jobs: AtomicU64,
+    /// Shadow jobs shed instead of executed: queue full at submit, deadline
+    /// expired, version no longer resolvable, or pool shutdown. Shadow work
+    /// is strictly lower priority than live spans — it sheds first, and
+    /// every shed is delivered to the job's callback so rollout accounting
+    /// stays exact.
+    pub shadow_shed: AtomicU64,
+    /// Candidate panics contained on the shadow path (a poisoned candidate
+    /// must never take a worker down — the outcome is delivered as failed).
+    pub shadow_panics: AtomicU64,
 }
 
 impl ShardStats {
@@ -462,6 +505,14 @@ impl ShardStats {
         if stale > 0 {
             s.push_str(&format!(" stale_spans={stale}"));
         }
+        let shadow = self.shadow_jobs.load(Ordering::Relaxed);
+        let shadow_shed = self.shadow_shed.load(Ordering::Relaxed);
+        if shadow + shadow_shed > 0 {
+            s.push_str(&format!(
+                " shadow_jobs={shadow} shadow_shed={shadow_shed} shadow_panics={}",
+                self.shadow_panics.load(Ordering::Relaxed)
+            ));
+        }
         let pin_failures = self.pin_failures.load(Ordering::Relaxed);
         if pin_failures > 0 || (0..self.n_shards()).any(|i| self.pinned_cpu(i).is_some()) {
             let pinned: Vec<String> = (0..self.n_shards())
@@ -474,6 +525,127 @@ impl ShardStats {
                 " pinned_cpu=[{}] pin_failures={pin_failures}",
                 pinned.join(",")
             ));
+        }
+        s
+    }
+}
+
+/// Guarded-rollout telemetry: the divergence monitor's accumulators (see
+/// the crate docs' "Model rollout" section and
+/// [`crate::coordinator::Rollout`]).
+///
+/// Accounting contract (what the batteries reconcile exactly):
+/// `shadow_rows + shadow_shed_rows` equals the rows sampled into the shadow
+/// path; `shadow_rows`/`shadow_shed_rows`/`canary_rows` mirror the same-
+/// named [`ServeMetrics`] buckets one-for-one; `rows_compared ≤ shadow
+/// sampled rows` (only rows with BOTH a live and a candidate score
+/// compare); `disagreements ≤ rows_compared`.
+#[derive(Default)]
+pub struct RolloutStats {
+    /// Batches sampled into the shadow comparison.
+    pub shadow_batches: AtomicU64,
+    /// Rows re-scored on the candidate (stage-1 comparison always runs
+    /// inline; rows needing the candidate second stage go through the
+    /// pool's shadow queue).
+    pub shadow_rows: AtomicU64,
+    /// Sampled rows whose candidate score was shed before it was computed
+    /// (shadow queue full, deadline, pool pressure).
+    pub shadow_shed_rows: AtomicU64,
+    /// Rows with both a live and a candidate score (the divergence
+    /// denominator).
+    pub rows_compared: AtomicU64,
+    /// Rows whose stage-1 ROUTING decision differed between incumbent and
+    /// candidate tables.
+    pub disagreements: AtomicU64,
+    /// Largest |candidate − live| score delta seen, in micro-units
+    /// (`fetch_max`; divide by 1e6 for the probability-scale value).
+    pub max_score_delta_micro: AtomicU64,
+    /// |candidate − live| score-delta distribution, micro-units (the
+    /// histogram's log buckets are unit-agnostic).
+    pub score_delta_micro: Histogram,
+    /// Candidate re-score latency (shadow path), wall ns.
+    pub shadow_exec: Histogram,
+    /// Live serving latency of the SAME sampled batches, wall ns — the
+    /// shadow-vs-live comparison baseline.
+    pub live_exec: Histogram,
+    /// Batches/rows actually routed to the candidate by the canary hash.
+    pub canary_batches: AtomicU64,
+    pub canary_rows: AtomicU64,
+    /// Canary batch serving latency, wall ns.
+    pub canary_exec: Histogram,
+    /// Candidate scoring failures (panic or stale on the candidate
+    /// version) — maximal divergence, an immediate guard trip.
+    pub candidate_failures: AtomicU64,
+    /// Rows the error budget refused to route to the candidate (the batch
+    /// served the incumbent instead — budget enforcement, not a shed).
+    pub budget_held_rows: AtomicU64,
+    /// Controller ticks observed while escalated: the canary ramp held its
+    /// step instead of advancing.
+    pub ramp_freezes: AtomicU64,
+    /// Controller ticks delivered to the rollout.
+    pub ticks: AtomicU64,
+}
+
+impl RolloutStats {
+    pub fn new() -> RolloutStats {
+        RolloutStats::default()
+    }
+
+    /// Record one live-vs-candidate score delta (absolute, probability
+    /// scale) into the histogram and the running max.
+    pub fn note_score_delta(&self, delta: f32) {
+        let micro = (delta.abs() as f64 * 1e6).round() as u64;
+        self.score_delta_micro.record(micro);
+        self.max_score_delta_micro.fetch_max(micro, Ordering::Relaxed);
+    }
+
+    /// Largest |candidate − live| score delta seen, probability scale.
+    pub fn max_score_delta(&self) -> f64 {
+        self.max_score_delta_micro.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Disagreement rate over compared rows (0 when nothing compared).
+    pub fn disagreement_rate(&self) -> f64 {
+        let n = self.rows_compared.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.disagreements.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// One-line report for logs.
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "rollout: shadow_batches={} shadow_rows={} shadow_shed={} compared={} \
+             disagree={} ({:.3}%) max_delta={:.6} canary_batches={} canary_rows={} \
+             budget_held={} freezes={} ticks={}",
+            self.shadow_batches.load(Ordering::Relaxed),
+            self.shadow_rows.load(Ordering::Relaxed),
+            self.shadow_shed_rows.load(Ordering::Relaxed),
+            self.rows_compared.load(Ordering::Relaxed),
+            self.disagreements.load(Ordering::Relaxed),
+            self.disagreement_rate() * 100.0,
+            self.max_score_delta(),
+            self.canary_batches.load(Ordering::Relaxed),
+            self.canary_rows.load(Ordering::Relaxed),
+            self.budget_held_rows.load(Ordering::Relaxed),
+            self.ramp_freezes.load(Ordering::Relaxed),
+            self.ticks.load(Ordering::Relaxed),
+        );
+        let failures = self.candidate_failures.load(Ordering::Relaxed);
+        if failures > 0 {
+            s.push_str(&format!(" candidate_failures={failures}"));
+        }
+        if self.shadow_exec.count() > 0 {
+            s.push_str(&format!(
+                "\n  shadow-exec: {}  live-exec: {}",
+                self.shadow_exec.summary_ms(),
+                self.live_exec.summary_ms()
+            ));
+        }
+        if self.canary_exec.count() > 0 {
+            s.push_str(&format!("\n  canary-exec: {}", self.canary_exec.summary_ms()));
         }
         s
     }
@@ -834,6 +1006,56 @@ mod tests {
         m.reset_all();
         assert_eq!(m.model_reloads.load(Ordering::Relaxed), 0);
         assert!(!m.report().contains("model reloads"));
+    }
+
+    #[test]
+    fn rollout_counters_reported_and_reset() {
+        let m = ServeMetrics::new();
+        assert!(!m.report().contains("shadow rows"), "quiet when clean");
+        m.shadow_rows.fetch_add(12, Ordering::Relaxed);
+        m.shadow_shed_rows.fetch_add(3, Ordering::Relaxed);
+        m.canary_rows.fetch_add(5, Ordering::Relaxed);
+        m.rollout_rolled_back.fetch_add(1, Ordering::Relaxed);
+        let rep = m.report();
+        assert!(rep.contains("shadow rows: 12 (shed: 3)"), "{rep}");
+        assert!(rep.contains("canary rows: 5"), "{rep}");
+        assert!(rep.contains("rollbacks: 1"), "{rep}");
+        m.reset_all();
+        assert_eq!(m.shadow_rows.load(Ordering::Relaxed), 0);
+        assert_eq!(m.shadow_shed_rows.load(Ordering::Relaxed), 0);
+        assert_eq!(m.canary_rows.load(Ordering::Relaxed), 0);
+        assert_eq!(m.rollout_rolled_back.load(Ordering::Relaxed), 0);
+        assert!(!m.report().contains("shadow rows"));
+    }
+
+    #[test]
+    fn rollout_stats_accumulators() {
+        let r = RolloutStats::new();
+        assert_eq!(r.disagreement_rate(), 0.0, "no comparisons yet");
+        r.rows_compared.fetch_add(100, Ordering::Relaxed);
+        r.disagreements.fetch_add(4, Ordering::Relaxed);
+        assert!((r.disagreement_rate() - 0.04).abs() < 1e-12);
+        r.note_score_delta(0.25);
+        r.note_score_delta(-0.5); // absolute value recorded
+        r.note_score_delta(0.125);
+        assert!((r.max_score_delta() - 0.5).abs() < 1e-9);
+        assert_eq!(r.score_delta_micro.count(), 3);
+        let rep = r.report();
+        assert!(rep.contains("compared=100"), "{rep}");
+        assert!(rep.contains("disagree=4"), "{rep}");
+        assert!(!rep.contains("candidate_failures"), "quiet until nonzero: {rep}");
+        r.candidate_failures.fetch_add(2, Ordering::Relaxed);
+        assert!(r.report().contains("candidate_failures=2"));
+    }
+
+    #[test]
+    fn shard_shadow_counters_in_report_when_nonzero() {
+        let s = ShardStats::new(2);
+        assert!(!s.report().contains("shadow_jobs"));
+        s.shadow_jobs.fetch_add(7, Ordering::Relaxed);
+        s.shadow_shed.fetch_add(2, Ordering::Relaxed);
+        let rep = s.report();
+        assert!(rep.contains("shadow_jobs=7 shadow_shed=2 shadow_panics=0"), "{rep}");
     }
 
     #[test]

@@ -843,3 +843,300 @@ fn chaos_under_overload_extended_conservation_threaded() {
 fn chaos_under_overload_extended_conservation_reactor() {
     overload_conservation_scenario(true);
 }
+
+/// Chaos × rollout: a FULL guarded rollout (shadow → canary ramp →
+/// promote) completes while scripted transport faults strike and a
+/// two-thread batch storm doubles the offered load. The candidate's tree-0
+/// leaves are shifted so its bits are distinguishable from the incumbent's,
+/// and the guards are opened wide — the point is lifecycle integrity under
+/// fire, not divergence:
+///
+///  - **No hang**: the rollout promotes within a bounded wall clock and no
+///    serve call stalls out.
+///  - **No mixed-version batch**: every second-stage-served row's bits
+///    match the incumbent model or the candidate model, and within one
+///    batch every unambiguous row matches the SAME one.
+///  - **Exact accounting**: `stage1 + rpc + degraded` covers every
+///    submitted row, and the rollout's own books (`RolloutStats`) reconcile
+///    exactly with the serve-metrics `shadow_rows`/`canary_rows` buckets.
+fn rollout_under_chaos_scenario(reactor: bool) {
+    use lrwbins::coordinator::{RolloutConfig, RolloutPhase};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    const SEED: u64 = 0x2011_CAFE;
+    const BATCH: usize = 16;
+    println!(
+        "chaos scenario: seed={SEED:#x} rollout under faults Reset@4, StallMs(15)@9 \
+         + 2-thread storm reactor={reactor}"
+    );
+    let spec = datagen::preset("aci").unwrap().with_rows(4000);
+    let data = datagen::generate(&spec, 5);
+    let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+    let mut first = LrwBinsModel::train(
+        &data,
+        &ranking.order,
+        &LrwBinsParams {
+            b: 2,
+            n_bin_features: 3,
+            n_infer_features: 6,
+            ..Default::default()
+        },
+    );
+    let route: std::collections::HashSet<u32> =
+        first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+    first.set_route(route);
+    let model = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::quick());
+    // Candidate: tree 0's leaves shifted by +0.25 — a real, visible model
+    // change (bits distinguishable) that stays inside the opened guards.
+    let mut cand = model.flatten();
+    {
+        let start = cand.roots[0] as usize;
+        let end = cand.roots.get(1).map_or(cand.value.len(), |&r| r as usize);
+        for i in start..end {
+            if cand.feat[i] == lrwbins::gbdt::LEAF {
+                cand.value[i] += 0.25;
+            }
+        }
+    }
+
+    let plan = ChaosPlan::new(SEED);
+    plan.script(4, Fault::Reset);
+    plan.script(9, Fault::StallMs(15));
+    let ns = Arc::new(NetSim::with_chaos(NetSimConfig::off(), SEED, plan));
+    let metrics = Arc::new(ServeMetrics::new());
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(lrwbins::rpc::server::NativeBackend::new(model.clone())),
+        ns.clone(),
+        BatcherConfig {
+            workers: 2,
+            reactor,
+            ..Default::default()
+        },
+        metrics.clone(),
+    )
+    .expect("server");
+    let mut coord = Coordinator::new(
+        ServingTables::from_model(&first),
+        Some(fast_retry_client(server.addr)),
+        0,
+        metrics.clone(),
+    );
+    coord.degrade = DegradeMode::Stage1Prior;
+
+    let snap = lrwbins::snapshot::Snapshot::parse(&lrwbins::snapshot::Snapshot::write(
+        &coord.tables,
+        &cand,
+    ))
+    .expect("candidate snapshot");
+    let ro = coord
+        .begin_rollout(
+            &snap,
+            RolloutConfig {
+                shadow_sample_permille: 500,
+                min_rows_compared: 64,
+                min_shadow_ticks: 1,
+                canary_steps_permille: vec![200, 600],
+                step_ticks: 2,
+                max_disagreement: 1.0,
+                max_score_delta: 1e9,
+                error_budget_rows: 1_000_000,
+                ..Default::default()
+            },
+        )
+        .expect("begin rollout");
+
+    let s1 = AtomicU64::new(0);
+    let rpc = AtomicU64::new(0);
+    let deg = AtomicU64::new(0);
+    let mixed_batches = AtomicU64::new(0);
+    let submitted = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    let coord_ref = &coord;
+    let t0 = Instant::now();
+
+    // Classify one served batch: count its rows into the three buckets,
+    // verify bits against BOTH model versions, and flag any batch whose
+    // second-stage rows mix versions.
+    let classify_batch = |rows: &[Vec<f32>], out: &[(f32, Served)], tag: &str| {
+        let mut side: Option<bool> = None; // Some(true) = candidate
+        for (k, (p, served)) in out.iter().enumerate() {
+            let row = &rows[k];
+            match served {
+                Served::Stage1 | Served::Degraded => {
+                    let (prior, _) = coord_ref.tables.evaluate(row);
+                    assert_eq!(
+                        p.to_bits(),
+                        prior.to_bits(),
+                        "{tag} row {k}: stage-1/degraded bits under rollout chaos"
+                    );
+                    if *served == Served::Degraded {
+                        deg.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        s1.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Served::Rpc => {
+                    let is_live = p.to_bits() == model.predict_one(row).to_bits();
+                    let is_cand = p.to_bits() == cand.predict_one(row).to_bits();
+                    assert!(
+                        is_live || is_cand,
+                        "{tag} row {k}: bits match NEITHER model version"
+                    );
+                    if is_live != is_cand {
+                        match side {
+                            None => side = Some(is_cand),
+                            Some(s) if s != is_cand => {
+                                mixed_batches.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Some(_) => {}
+                        }
+                    }
+                    rpc.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        submitted.fetch_add(out.len() as u64, Ordering::Relaxed);
+    };
+
+    std::thread::scope(|s| {
+        // Two storm threads: ~2× the single-stream load the stack would
+        // otherwise see, hammering the batch path through the whole ramp.
+        for t in 0..2usize {
+            let (data, stop, classify_batch) = (&data, &stop, &classify_batch);
+            s.spawn(move || {
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let start = (t * 53 + i * 17) % 3000;
+                    let rows: Vec<Vec<f32>> =
+                        (start..start + BATCH).map(|r| data.row(r)).collect();
+                    let out = coord_ref
+                        .predict_batch(&rows)
+                        .expect("Stage1Prior must absorb chaos, not error");
+                    classify_batch(&rows, &out, &format!("storm t{t} i{i}"));
+                    i += 1;
+                }
+            });
+        }
+        // Controller thread: tick the ramp until the candidate promotes.
+        let promote_deadline = Instant::now() + Duration::from_secs(90);
+        while ro.phase() != RolloutPhase::Promoted {
+            assert_ne!(
+                ro.phase(),
+                RolloutPhase::RolledBack,
+                "guards were opened wide; nothing may trip (reason {:?}, stats {})",
+                ro.rollback_reason(),
+                ro.stats.report()
+            );
+            assert!(
+                Instant::now() < promote_deadline,
+                "rollout never promoted under chaos (phase {:?}, stats {})",
+                ro.phase(),
+                ro.stats.report()
+            );
+            coord_ref.rollout_tick(false);
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // Promoted-but-unfinalized: 100% of traffic rides the canary route on
+    // the candidate. Serve a few more batches to pin that down.
+    for i in 0..4 {
+        let rows: Vec<Vec<f32>> = (i * BATCH..(i + 1) * BATCH).map(|r| data.row(r)).collect();
+        let out = coord.predict_batch(&rows).expect("post-promote serve");
+        classify_batch(&rows, &out, &format!("post-promote {i}"));
+        for (k, (p, served)) in out.iter().enumerate() {
+            if *served == Served::Rpc {
+                assert_eq!(
+                    p.to_bits(),
+                    cand.predict_one(&rows[k]).to_bits(),
+                    "post-promote row {k}: must serve the candidate"
+                );
+            }
+        }
+    }
+
+    assert!(
+        t0.elapsed() < Duration::from_secs(120),
+        "rollout chaos battery stalled: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(
+        mixed_batches.load(Ordering::Relaxed),
+        0,
+        "a batch mixed model versions"
+    );
+    let (s1, rpc, deg, sub) = (
+        s1.load(Ordering::Relaxed),
+        rpc.load(Ordering::Relaxed),
+        deg.load(Ordering::Relaxed),
+        submitted.load(Ordering::Relaxed),
+    );
+    assert_eq!(
+        s1 + rpc + deg,
+        sub,
+        "every submitted row in exactly one bucket (s1={s1} rpc={rpc} deg={deg})"
+    );
+    assert!(
+        ns.chaos().unwrap().injected.load(Ordering::Relaxed) >= 1,
+        "the scripted faults never fired"
+    );
+    // The rollout's books reconcile EXACTLY with the serve metrics — the
+    // shadow lane bills to its own bucket, it never leaks into the six-way
+    // serving conservation proven above.
+    assert_eq!(
+        metrics.shadow_rows.load(Ordering::Relaxed),
+        ro.stats.shadow_rows.load(Ordering::Relaxed),
+        "shadow_rows: ServeMetrics vs RolloutStats"
+    );
+    assert_eq!(
+        metrics.canary_rows.load(Ordering::Relaxed),
+        ro.stats.canary_rows.load(Ordering::Relaxed),
+        "canary_rows: ServeMetrics vs RolloutStats"
+    );
+    assert!(
+        ro.stats.canary_rows.load(Ordering::Relaxed) > 0,
+        "the ramp must have served candidate traffic"
+    );
+    assert!(
+        ro.stats.rows_compared.load(Ordering::Relaxed) >= 64,
+        "shadow must have compared rows"
+    );
+    assert_eq!(metrics.rollout_rolled_back.load(Ordering::Relaxed), 0);
+
+    // Finalize: the candidate becomes the incumbent; misses now serve its
+    // bits on the PLAIN path (no canary route left).
+    coord.finalize_rollout().expect("finalize");
+    assert!(coord.rollout().is_none());
+    for r in 0..64 {
+        let row = data.row(r);
+        let (p, served) = coord.predict(&row).expect("post-finalize serve");
+        if served == Served::Rpc {
+            // The RPC server still runs the OLD model — but this
+            // coordinator's candidate was Local, so after finalize misses
+            // go back over the wire to the incumbent service. The bits
+            // must match SOME real version, never garbage.
+            assert!(
+                p.to_bits() == model.predict_one(&row).to_bits()
+                    || p.to_bits() == cand.predict_one(&row).to_bits(),
+                "post-finalize row {r}: unrecognized bits"
+            );
+        }
+    }
+    println!(
+        "rollout under chaos: promoted in {:?}; {}",
+        t0.elapsed(),
+        ro.stats.report()
+    );
+}
+
+#[test]
+fn rollout_promotes_under_chaos_and_2x_load_threaded() {
+    rollout_under_chaos_scenario(false);
+}
+
+#[test]
+fn rollout_promotes_under_chaos_and_2x_load_reactor() {
+    rollout_under_chaos_scenario(true);
+}

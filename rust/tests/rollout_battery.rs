@@ -1,0 +1,414 @@
+//! Guarded-rollout divergence-injection battery.
+//!
+//! Every scenario builds a REAL serving stack, starts a rollout with a
+//! deliberately crafted candidate, drives live traffic, and proves the
+//! rollout guard rules end to end:
+//!
+//! 1. **Good candidates promote** — a bit-identical candidate walks
+//!    Shadow → Canary → Promoted, and the bits served while it is being
+//!    shadow-scored are exactly the incumbent's (shadow is observational).
+//! 2. **Divergent candidates roll back automatically** — a perturbed-leaf
+//!    candidate (every leaf margin shifted) and a poisoned-subtree
+//!    candidate (one tree's leaves corrupted to non-finite values) each
+//!    trip a typed guard with NO operator in the loop, and the number of
+//!    rows the candidate ever answered stays within the configured error
+//!    budget.
+//! 3. **Rollback is clean** — after an automatic rollback the incumbent
+//!    serves bit-identically to its pre-rollout baseline.
+//!
+//! RPC-backed scenarios run on BOTH I/O paths (`_threaded` forces the
+//! legacy thread-per-connection server, `_reactor` the epoll reactor);
+//! embedded scenarios exercise the shard pool's staged-version candidate
+//! path. Every scenario prints its seed so a failing run is replayable.
+
+use lrwbins::coordinator::{
+    Coordinator, RollbackReason, RolloutConfig, RolloutPhase, Served,
+};
+use lrwbins::datagen;
+use lrwbins::features::{rank_features, RankMethod};
+use lrwbins::gbdt::{FlatForest, GbdtModel, LEAF};
+use lrwbins::lrwbins::{LrwBinsModel, LrwBinsParams, ServingTables};
+use lrwbins::rpc::netsim::{NetSim, NetSimConfig};
+use lrwbins::rpc::server::{BatcherConfig, NativeBackend, RpcServer};
+use lrwbins::rpc::RpcClient;
+use lrwbins::runtime::ShardPool;
+use lrwbins::snapshot::Snapshot;
+use lrwbins::tabular::Dataset;
+use lrwbins::telemetry::ServeMetrics;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const SEED: u64 = 0xD14E6;
+
+fn trained_rig() -> (Dataset, LrwBinsModel, GbdtModel) {
+    let spec = datagen::preset("aci").unwrap().with_rows(4000);
+    let data = datagen::generate(&spec, SEED);
+    let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+    let mut first = LrwBinsModel::train(
+        &data,
+        &ranking.order,
+        &LrwBinsParams {
+            b: 2,
+            n_bin_features: 3,
+            n_infer_features: 6,
+            ..Default::default()
+        },
+    );
+    let route: std::collections::HashSet<u32> =
+        first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+    first.set_route(route);
+    let second = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::quick());
+    (data, first, second)
+}
+
+/// RPC-mode stack: the coordinator's second stage is a real server over a
+/// loopback socket, so the rollout candidate scores LOCALLY (no pool).
+fn rpc_stack(
+    first: &LrwBinsModel,
+    second: &GbdtModel,
+    reactor: bool,
+) -> (Coordinator, RpcServer) {
+    let metrics = Arc::new(ServeMetrics::new());
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(NativeBackend::new(second.clone())),
+        Arc::new(NetSim::new(NetSimConfig::off(), SEED)),
+        BatcherConfig {
+            reactor,
+            ..Default::default()
+        },
+        metrics.clone(),
+    )
+    .expect("server");
+    let client = RpcClient::connect(server.addr).expect("client");
+    let coord = Coordinator::new(ServingTables::from_model(first), Some(client), 0, metrics);
+    (coord, server)
+}
+
+/// Embedded stack: misses score in-process on a shared shard pool, so the
+/// rollout candidate rides the pool's staged-version path.
+fn embedded_stack(first: &LrwBinsModel, second: &GbdtModel) -> Coordinator {
+    let pool = Arc::new(ShardPool::new(2));
+    let model = pool.register(second.flatten());
+    Coordinator::new_embedded(
+        ServingTables::from_model(first),
+        pool,
+        model,
+        Arc::new(ServeMetrics::new()),
+    )
+}
+
+/// Candidate snapshot = the coordinator's own tables + `forest`.
+fn snapshot_for(coord: &Coordinator, forest: &FlatForest) -> Snapshot {
+    Snapshot::parse(&Snapshot::write(&coord.tables, forest)).expect("candidate snapshot")
+}
+
+/// Every leaf margin shifted by `shift` — a plausibly-retrained but
+/// systematically biased candidate.
+fn perturbed_leaf_forest(second: &GbdtModel, shift: f32) -> FlatForest {
+    let mut forest = second.flatten();
+    for i in 0..forest.value.len() {
+        if forest.feat[i] == LEAF {
+            forest.value[i] += shift;
+        }
+    }
+    forest
+}
+
+/// One whole subtree corrupted: every leaf under the first tree's root is
+/// set to a non-finite margin — structurally valid (it parses), toxic to
+/// serve.
+fn poisoned_subtree_forest(second: &GbdtModel) -> FlatForest {
+    let mut forest = second.flatten();
+    let start = forest.roots[0] as usize;
+    let end = forest
+        .roots
+        .get(1)
+        .map_or(forest.value.len(), |&r| r as usize);
+    for i in start..end {
+        if forest.feat[i] == LEAF {
+            forest.value[i] = f32::NAN;
+        }
+    }
+    forest
+}
+
+fn fast_cfg() -> RolloutConfig {
+    RolloutConfig {
+        shadow_sample_permille: 1000,
+        min_rows_compared: 50,
+        min_shadow_ticks: 1,
+        canary_steps_permille: vec![300, 700],
+        step_ticks: 1,
+        error_budget_rows: 100_000,
+        ..Default::default()
+    }
+}
+
+/// Serve rows until the rollout leaves `phase` (or the wall clock says it
+/// never will). Ticks the controller every 32 requests, unescalated.
+fn serve_until_leaves(
+    coord: &Coordinator,
+    data: &Dataset,
+    ro: &lrwbins::coordinator::Rollout,
+    phase: RolloutPhase,
+    tick: bool,
+) -> usize {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut r = 0usize;
+    while ro.phase() == phase {
+        assert!(
+            Instant::now() < deadline,
+            "rollout never left {phase:?} (served {r} rows; stats: {})",
+            ro.stats.report()
+        );
+        coord.predict(&data.row(r % data.n_rows())).expect("serve");
+        r += 1;
+        if tick && r % 32 == 0 {
+            coord.rollout_tick(false);
+        }
+        std::thread::yield_now();
+    }
+    r
+}
+
+/// Scenario 1: a bit-identical candidate promotes, and shadow scoring
+/// never perturbs the served bits.
+fn good_candidate_scenario(reactor: bool) {
+    println!("rollout scenario: seed={SEED:#x} candidate=identical reactor={reactor}");
+    let (data, first, second) = trained_rig();
+    let (mut coord, _server) = rpc_stack(&first, &second, reactor);
+    let baseline: Vec<(f32, Served)> = (0..200)
+        .map(|r| coord.predict(&data.row(r)).unwrap())
+        .collect();
+
+    let snap = snapshot_for(&coord, &second.flatten());
+    let ro = coord.begin_rollout(&snap, fast_cfg()).expect("begin");
+    assert_eq!(ro.phase(), RolloutPhase::Shadow);
+    for (r, base) in baseline.iter().enumerate() {
+        let (p, served) = coord.predict(&data.row(r)).unwrap();
+        assert_eq!(
+            p.to_bits(),
+            base.0.to_bits(),
+            "row {r}: shadow must be observational"
+        );
+        assert_eq!(served, base.1, "row {r}: served path moved under shadow");
+    }
+    coord.rollout_tick(false);
+    assert_eq!(ro.phase(), RolloutPhase::Canary);
+    let served = serve_until_leaves(&coord, &data, &ro, RolloutPhase::Canary, true);
+    assert_eq!(ro.phase(), RolloutPhase::Promoted, "good candidate must promote");
+    assert!(
+        ro.stats.canary_rows.load(Ordering::Relaxed) > 0,
+        "the ramp must have routed canary traffic ({served} rows served)"
+    );
+    assert_eq!(coord.metrics.rollout_rolled_back.load(Ordering::Relaxed), 0);
+    coord.finalize_rollout().expect("finalize");
+    for (r, base) in baseline.iter().enumerate().take(100) {
+        let (p, _) = coord.predict(&data.row(r)).unwrap();
+        assert_eq!(p.to_bits(), base.0.to_bits(), "row {r}: bits after promotion");
+    }
+    println!("promoted after {served} canary-phase rows: {}", ro.stats.report());
+}
+
+#[test]
+fn good_candidate_promotes_bit_identical_threaded() {
+    good_candidate_scenario(false);
+}
+
+#[test]
+fn good_candidate_promotes_bit_identical_reactor() {
+    good_candidate_scenario(true);
+}
+
+/// Shared rollback half: start `forest` as the candidate on `coord`, serve
+/// until the rollout auto-resolves, and assert it rolled back with
+/// `reason`, within the error budget, leaving the incumbent bit-clean.
+fn assert_rolls_back(
+    coord: &Coordinator,
+    data: &Dataset,
+    forest: &FlatForest,
+    cfg: RolloutConfig,
+    reason: RollbackReason,
+    label: &str,
+) {
+    let budget = cfg.error_budget_rows;
+    let baseline: Vec<f32> = (0..100)
+        .map(|r| coord.predict(&data.row(r)).unwrap().0)
+        .collect();
+    let snap = snapshot_for(coord, forest);
+    let ro = coord.begin_rollout(&snap, cfg).expect("begin");
+    let served = serve_until_leaves(coord, data, &ro, RolloutPhase::Shadow, false);
+    assert_eq!(
+        ro.phase(),
+        RolloutPhase::RolledBack,
+        "{label}: divergence must auto-roll back"
+    );
+    assert_eq!(ro.rollback_reason(), Some(reason), "{label}: typed reason");
+    assert_eq!(
+        coord.metrics.rollout_rolled_back.load(Ordering::Relaxed),
+        1,
+        "{label}: rollback metric"
+    );
+    let candidate_rows = ro.stats.canary_rows.load(Ordering::Relaxed);
+    assert!(
+        candidate_rows <= budget,
+        "{label}: candidate answered {candidate_rows} rows, budget was {budget}"
+    );
+    // The incumbent's bits are untouched by the aborted experiment.
+    for (r, base) in baseline.iter().enumerate() {
+        let (p, _) = coord.predict(&data.row(r)).unwrap();
+        assert_eq!(p.to_bits(), base.to_bits(), "{label}: row {r} after rollback");
+    }
+    println!("{label}: rolled back ({reason:?}) after {served} rows: {}", ro.stats.report());
+}
+
+/// Scenario 2: perturbed-leaf candidate trips the score-delta guard while
+/// still in Shadow — no operator, no canary traffic.
+fn perturbed_leaf_scenario(reactor: bool) {
+    println!("rollout scenario: seed={SEED:#x} candidate=perturbed-leaf(+3.0) reactor={reactor}");
+    let (data, first, second) = trained_rig();
+    let (coord, _server) = rpc_stack(&first, &second, reactor);
+    let cfg = RolloutConfig {
+        max_score_delta: 0.2,
+        ..fast_cfg()
+    };
+    assert_rolls_back(
+        &coord,
+        &data,
+        &perturbed_leaf_forest(&second, 3.0),
+        cfg,
+        RollbackReason::ScoreDelta,
+        "perturbed-leaf",
+    );
+}
+
+#[test]
+fn perturbed_leaf_candidate_rolls_back_threaded() {
+    perturbed_leaf_scenario(false);
+}
+
+#[test]
+fn perturbed_leaf_candidate_rolls_back_reactor() {
+    perturbed_leaf_scenario(true);
+}
+
+/// Scenario 3: poisoned-subtree candidate (non-finite leaves) — a
+/// non-finite score delta is an automatic guard violation, it must never
+/// ride a `NaN > bound` comparison into the canary.
+fn poisoned_subtree_scenario(reactor: bool) {
+    println!("rollout scenario: seed={SEED:#x} candidate=poisoned-subtree(NaN) reactor={reactor}");
+    let (data, first, second) = trained_rig();
+    let (coord, _server) = rpc_stack(&first, &second, reactor);
+    assert_rolls_back(
+        &coord,
+        &data,
+        &poisoned_subtree_forest(&second),
+        fast_cfg(),
+        RollbackReason::ScoreDelta,
+        "poisoned-subtree",
+    );
+}
+
+#[test]
+fn poisoned_subtree_candidate_rolls_back_threaded() {
+    poisoned_subtree_scenario(false);
+}
+
+#[test]
+fn poisoned_subtree_candidate_rolls_back_reactor() {
+    poisoned_subtree_scenario(true);
+}
+
+/// Scenario 4: the same divergent candidates on the EMBEDDED path, where
+/// the candidate is a staged shard-pool version and shadow scoring rides
+/// the pool's lower-than-live priority lane.
+#[test]
+fn perturbed_leaf_candidate_rolls_back_embedded() {
+    println!("rollout scenario: seed={SEED:#x} candidate=perturbed-leaf(+3.0) embedded");
+    let (data, first, second) = trained_rig();
+    let coord = embedded_stack(&first, &second);
+    let cfg = RolloutConfig {
+        max_score_delta: 0.2,
+        ..fast_cfg()
+    };
+    assert_rolls_back(
+        &coord,
+        &data,
+        &perturbed_leaf_forest(&second, 3.0),
+        cfg,
+        RollbackReason::ScoreDelta,
+        "perturbed-leaf embedded",
+    );
+}
+
+#[test]
+fn poisoned_subtree_candidate_rolls_back_embedded() {
+    println!("rollout scenario: seed={SEED:#x} candidate=poisoned-subtree(NaN) embedded");
+    let (data, first, second) = trained_rig();
+    let coord = embedded_stack(&first, &second);
+    assert_rolls_back(
+        &coord,
+        &data,
+        &poisoned_subtree_forest(&second),
+        fast_cfg(),
+        RollbackReason::ScoreDelta,
+        "poisoned-subtree embedded",
+    );
+}
+
+/// Scenario 5: a divergent candidate that slips into the CANARY phase
+/// (sparse shadow sampling delays the verdict) still rolls back, and the
+/// rows it answered on live traffic are bounded by the error budget.
+#[test]
+fn canary_phase_rollback_bounded_by_error_budget() {
+    const BUDGET: u64 = 500;
+    println!(
+        "rollout scenario: seed={SEED:#x} candidate=perturbed-leaf(+3.0) \
+         sparse-shadow canary budget={BUDGET}"
+    );
+    let (data, first, second) = trained_rig();
+    let coord = embedded_stack(&first, &second);
+    let cfg = RolloutConfig {
+        // Sparse sampling: the ramp starts before divergence is seen.
+        shadow_sample_permille: 120,
+        min_rows_compared: 0,
+        min_shadow_ticks: 1,
+        canary_steps_permille: vec![500],
+        step_ticks: 1000, // hold at 50% — the trip must come from a guard
+        max_score_delta: 0.2,
+        error_budget_rows: BUDGET,
+        ..Default::default()
+    };
+    let snap = snapshot_for(&coord, &perturbed_leaf_forest(&second, 3.0));
+    let ro = coord.begin_rollout(&snap, cfg).expect("begin");
+    coord.rollout_tick(false);
+    assert_eq!(ro.phase(), RolloutPhase::Canary, "ramp must start immediately");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut r = 0usize;
+    while ro.phase() == RolloutPhase::Canary {
+        assert!(
+            Instant::now() < deadline,
+            "canary-phase divergence never tripped (stats: {})",
+            ro.stats.report()
+        );
+        coord.predict(&data.row(r % data.n_rows())).expect("serve");
+        r += 1;
+        std::thread::yield_now();
+    }
+    assert_eq!(ro.phase(), RolloutPhase::RolledBack);
+    assert_eq!(ro.rollback_reason(), Some(RollbackReason::ScoreDelta));
+    let candidate_rows = ro.stats.canary_rows.load(Ordering::Relaxed);
+    assert!(
+        candidate_rows <= BUDGET,
+        "candidate answered {candidate_rows} rows, budget was {BUDGET}"
+    );
+    // Whether or not the budget was the binding constraint, held rows +
+    // answered rows must cover every routed request.
+    println!(
+        "canary rollback after {r} requests, candidate answered {candidate_rows} \
+         (budget {BUDGET}): {}",
+        ro.stats.report()
+    );
+}

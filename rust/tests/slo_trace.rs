@@ -240,3 +240,214 @@ fn burst_trace_holds_slo_isolates_tenants_and_conserves_threaded() {
 fn burst_trace_holds_slo_isolates_tenants_and_conserves_reactor() {
     slo_scenario(true);
 }
+
+/// Rollout × overload: a guarded rollout started right before the burst
+/// trace must FREEZE its ramp on every escalated controller tick (an
+/// overloaded system must not widen a model experiment), resume once the
+/// controller relaxes, and reach promotion — while the stack still holds
+/// the admitted-p99 bound. `run_trace` itself delivers the rollout ticks:
+/// the same loop that sets brownout/admission knobs forwards its
+/// escalation verdict to every coordinator's in-flight rollout.
+fn rollout_mid_trace_scenario(reactor: bool) {
+    use lrwbins::coordinator::{RolloutConfig, RolloutPhase};
+    use lrwbins::snapshot::Snapshot;
+    use std::sync::atomic::Ordering;
+
+    let cfg = burst_trace();
+    println!(
+        "slo scenario: trace seed={SEED:#x} reactor={reactor} + rollout mid-trace \
+         (burst x{})",
+        cfg.burst_mult
+    );
+
+    let spec = datagen::preset("aci").unwrap().with_rows(4000);
+    let data = datagen::generate(&spec, 5);
+    let ranking = rank_features(&data, RankMethod::GbdtGain, 1);
+    let mut first = LrwBinsModel::train(
+        &data,
+        &ranking.order,
+        &LrwBinsParams {
+            b: 2,
+            n_bin_features: 3,
+            n_infer_features: 6,
+            ..Default::default()
+        },
+    );
+    let route: std::collections::HashSet<u32> =
+        first.weights.keys().copied().filter(|b| b % 2 == 0).collect();
+    first.set_route(route);
+    let model = lrwbins::gbdt::train(&data, &lrwbins::gbdt::GbdtParams::quick());
+
+    let pool = Arc::new(ShardPool::with_config(ShardPoolConfig {
+        n_shards: 4,
+        min_task_rows: 8,
+        ..Default::default()
+    }));
+    let metrics = Arc::new(ServeMetrics::new());
+    let server = RpcServer::start(
+        "127.0.0.1:0",
+        Arc::new(NativeBackend::with_pool(model.clone(), pool.clone())),
+        Arc::new(NetSim::new(NetSimConfig::off(), 1)),
+        BatcherConfig {
+            reactor,
+            admission: Some(AdmissionConfig {
+                tenant_rate_rows_per_s: 300.0,
+                tenant_burst_rows: 150.0,
+                global_inflight_rows: 0,
+            }),
+            sojourn_slo: Duration::from_millis(20),
+            ..Default::default()
+        },
+        metrics.clone(),
+    )
+    .expect("server");
+
+    let coords: Vec<Arc<Coordinator>> = (0..N_TENANTS)
+        .map(|t| {
+            let client = RpcClient::connect_with(
+                server.addr,
+                ClientConfig {
+                    timeout: Duration::from_secs(5),
+                    retry: RetryPolicy::none(),
+                    tenant: t,
+                    ..Default::default()
+                },
+            )
+            .expect("tenant client");
+            let mut c = Coordinator::new(
+                ServingTables::from_model(&first),
+                Some(client),
+                0,
+                metrics.clone(),
+            );
+            c.degrade = DegradeMode::Stage1Prior;
+            Arc::new(c)
+        })
+        .collect();
+
+    // Start a rollout on a CALM tenant's coordinator just before the
+    // bursts. `min_shadow_ticks` exceeds the trace's tick budget, so the
+    // ramp CANNOT legitimately start during the run — any advance would be
+    // a freeze-discipline bug, and every escalated tick must be counted.
+    let calm = &coords[1];
+    let snap = Snapshot::parse(&Snapshot::write(&calm.tables, &model.flatten()))
+        .expect("candidate snapshot");
+    let ro = calm
+        .begin_rollout(
+            &snap,
+            RolloutConfig {
+                shadow_sample_permille: 1000,
+                min_rows_compared: 20,
+                min_shadow_ticks: 100,
+                canary_steps_permille: vec![500],
+                step_ticks: 1,
+                error_budget_rows: 1_000_000,
+                ..Default::default()
+            },
+        )
+        .expect("begin rollout");
+
+    let trace = generate_trace(&cfg);
+    let rows: Vec<Vec<f32>> = (0..256).map(|r| data.row(r)).collect();
+    let mut controller = SloController::new(ControllerConfig {
+        p99_target: Duration::from_millis(20),
+        relax_below: 0.5,
+        max_shards: 4,
+        fine_task_rows: 8,
+        coarse_task_rows: 64,
+        min_rate_factor: 0.5,
+    });
+    let knobs = Knobs {
+        admission: server.admission(),
+        pool: Some(&pool),
+    };
+    let report = run_trace(
+        &coords,
+        &knobs,
+        &metrics,
+        &trace,
+        &rows,
+        &mut controller,
+        &HarnessConfig {
+            tick: Duration::from_millis(150),
+            senders: 8,
+            deadline: Some(Duration::from_millis(500)),
+        },
+    );
+    println!(
+        "slo report: offered={} served={} degraded={} rejected={} p99={}us | {}",
+        report.offered,
+        report.served,
+        report.degraded,
+        report.rejected,
+        report.overall_p99_us,
+        ro.stats.report()
+    );
+
+    // The trace's escalations froze the ramp — and the rollout is still
+    // alive, in Shadow, untripped.
+    assert_eq!(
+        ro.phase(),
+        RolloutPhase::Shadow,
+        "the ramp must not have advanced during the overloaded trace"
+    );
+    assert!(
+        ro.stats.ramp_freezes.load(Ordering::Relaxed) >= 1,
+        "a 4x burst trace must escalate the controller at least once, \
+         freezing the ramp ({} ticks delivered)",
+        ro.stats.ticks.load(Ordering::Relaxed)
+    );
+    assert!(
+        ro.stats.ticks.load(Ordering::Relaxed) >= 2,
+        "run_trace must deliver rollout ticks"
+    );
+    assert!(
+        ro.stats.rows_compared.load(Ordering::Relaxed) >= 20,
+        "the calm tenant's traffic must have fed the shadow monitor"
+    );
+
+    // The incident is over: unescalated ticks resume the ramp, traffic
+    // trickles through the canary, and the candidate promotes.
+    let mut iters = 0usize;
+    let mut r = 0usize;
+    while ro.phase() != RolloutPhase::Promoted {
+        iters += 1;
+        assert!(
+            iters < 10_000,
+            "rollout failed to resume after the trace (phase {:?}, stats {})",
+            ro.phase(),
+            ro.stats.report()
+        );
+        calm.rollout_tick(false);
+        if ro.phase() == RolloutPhase::Canary {
+            for _ in 0..4 {
+                calm.predict(&data.row(r % 256)).expect("post-trace serve");
+                r += 1;
+            }
+        }
+    }
+    assert_eq!(ro.canary_permille(), 1000);
+    assert_eq!(metrics.rollout_rolled_back.load(Ordering::Relaxed), 0);
+
+    // Same acceptance as the base scenario: conservation exact and the
+    // admitted p99 bound held — shadow scoring and the frozen ramp must
+    // not have cost the SLO.
+    assert_eq!(report.offered, trace.len() as u64);
+    assert_eq!(report.accounted(), report.offered, "conservation must be exact");
+    assert_eq!(report.errors, 0, "Stage1Prior must absorb every failure");
+    assert!(
+        report.overall_p99_us < 400_000,
+        "admitted p99 {}us breached the bound with a rollout in flight",
+        report.overall_p99_us
+    );
+}
+
+#[test]
+fn rollout_mid_trace_freezes_ramp_then_promotes_threaded() {
+    rollout_mid_trace_scenario(false);
+}
+
+#[test]
+fn rollout_mid_trace_freezes_ramp_then_promotes_reactor() {
+    rollout_mid_trace_scenario(true);
+}
